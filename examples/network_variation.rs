@@ -1,0 +1,53 @@
+//! Network-variation study (paper §6.1.2): how the learned orchestration
+//! adapts across EXP-A..D, and what each accuracy threshold buys.
+//!
+//! Run: `cargo run --release --example network_variation`
+
+use eeco::agent::bruteforce;
+use eeco::metrics::render_table;
+use eeco::prelude::*;
+use eeco::sim::Env;
+
+fn main() {
+    let users = 5;
+    println!("== EECO network variation: optimal orchestration per scenario x constraint ==\n");
+    let mut rows = Vec::new();
+    for scenario in Scenario::all(users) {
+        for c in AccuracyConstraint::LEVELS {
+            let env = Env::new(scenario.clone(), Calibration::default(), c, 1);
+            let Some((d, ms)) = bruteforce::optimal(&env, c.threshold()) else {
+                continue;
+            };
+            let acc = env.accuracy_of(&d);
+            let mut cells = vec![scenario.name.clone(), c.label()];
+            cells.extend(d.0.iter().map(|a| a.to_string()));
+            cells.push(format!("{ms:.1}"));
+            cells.push(format!("{acc:.2}"));
+            rows.push(cells);
+        }
+    }
+    print!(
+        "{}",
+        render_table(
+            &["exp", "constraint", "S1", "S2", "S3", "S4", "S5", "avg ms", "avg acc %"],
+            &rows
+        )
+    );
+
+    // The §6.1.2 observation: under weak networks the orchestrator buys
+    // back the network penalty by lowering compute intensity.
+    let pick = |exp: &str, label: &str| {
+        rows.iter()
+            .find(|r| r[0] == exp && r[1] == label)
+            .map(|r| r[7].parse::<f64>().unwrap())
+            .unwrap()
+    };
+    let a_max = pick("EXP-A", "Max");
+    let d_max = pick("EXP-D", "Max");
+    let d_85 = pick("EXP-D", "85%");
+    println!("\nEXP-A Max -> EXP-D Max: {a_max:.0} -> {d_max:.0} ms (weak-network penalty)");
+    println!(
+        "EXP-D Max -> EXP-D 85%: {d_max:.0} -> {d_85:.0} ms ({:.0}% bought back by model selection)",
+        (1.0 - d_85 / d_max) * 100.0
+    );
+}

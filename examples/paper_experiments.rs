@@ -1,0 +1,33 @@
+//! Regenerate EVERY paper table and figure into results/ (DESIGN.md §5).
+//!
+//! Run: `make results` (or `cargo run --release --example paper_experiments`)
+//! Set EECO_FAST=1 for a smoke run with ~2% of the training budgets.
+//! Individual experiments: `eeco experiment <id>`.
+
+use eeco::config::Config;
+use eeco::experiments::{self, ExpCtx};
+
+fn main() {
+    let cfg = Config::default();
+    let ctx = ExpCtx::new(cfg);
+    let t0 = std::time::Instant::now();
+    let mut failures = Vec::new();
+    for id in experiments::ALL {
+        let t = std::time::Instant::now();
+        match experiments::run(id, &ctx) {
+            Ok(()) => println!("[{id}] done in {:.1}s", t.elapsed().as_secs_f64()),
+            Err(e) => {
+                println!("[{id}] FAILED: {e:#}");
+                failures.push(*id);
+            }
+        }
+    }
+    println!(
+        "\nall experiments finished in {:.1}s -> results/ ({} failures: {failures:?})",
+        t0.elapsed().as_secs_f64(),
+        failures.len()
+    );
+    if !failures.is_empty() {
+        std::process::exit(1);
+    }
+}

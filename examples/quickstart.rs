@@ -1,0 +1,70 @@
+//! Quickstart: the whole system in ~60 lines.
+//!
+//! 1. build the EXP-A scenario environment (5 users, 89% accuracy floor),
+//! 2. train the paper's epsilon-greedy Q-Learning orchestrator online,
+//! 3. compare its decision against the brute-force optimum and the fixed
+//!    baselines, reproducing the headline trade-off of the paper.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (no artifacts needed — the sim-mode substrate is self-contained;
+//! see `serve_multiuser` for the PJRT serving path.)
+
+use eeco::agent::baseline::FixedAgent;
+use eeco::agent::qlearning::QTableAgent;
+use eeco::agent::{bruteforce, ActionSet};
+use eeco::orchestrator::Orchestrator;
+use eeco::prelude::*;
+use eeco::sim::Env;
+
+fn main() {
+    let users = 5;
+    let constraint = AccuracyConstraint::AtLeast(89.0);
+    let scenario = Scenario::exp_a(users);
+    println!("EECO quickstart — scenario {scenario}, constraint {}", constraint.label());
+
+    // --- fixed baselines (paper Fig 5 reference points) ---
+    for tier in Tier::ALL {
+        let env = Env::new(scenario.clone(), Calibration::default(), AccuracyConstraint::Max, 1);
+        let mut orch = Orchestrator::new(env, Box::new(FixedAgent::new(tier, users)));
+        orch.env.freeze();
+        let avg = orch.evaluate(20).response.mean();
+        println!("  {tier:?}-only (d0): {avg:8.1} ms @ 89.9%");
+    }
+
+    // --- online learning (paper Alg. 1) ---
+    let env = Env::new(scenario.clone(), Calibration::default(), constraint, 2);
+    let agent = QTableAgent::new(
+        users,
+        Hyper::paper_defaults(Algo::QLearning, users),
+        ActionSet::full(),
+        3,
+    );
+    let mut orch = Orchestrator::new(env, Box::new(agent));
+    let t0 = std::time::Instant::now();
+    let res = orch.train_full(40_000, 8_000);
+    println!(
+        "\ntrained Q-Learning for {} rounds in {:.1}s (converged at {:?})",
+        res.steps,
+        t0.elapsed().as_secs_f64(),
+        res.converged_at
+    );
+    for (step, reward) in &res.curve {
+        println!("  step {step:>6}: windowed avg reward {reward:8.1}");
+    }
+
+    let (decision, ms, acc) = orch.representative_decision();
+    println!("\nlearned policy:      {decision}");
+    println!("                     -> {ms:.1} ms avg response @ {acc:.2}% avg top-5");
+
+    let (od, oms) = bruteforce::optimal(&orch.env, constraint.threshold()).unwrap();
+    println!("brute-force optimum: {od}");
+    println!("                     -> {oms:.1} ms ({:+.1}% gap)", (ms / oms - 1.0) * 100.0);
+
+    // the paper's headline: vs the offload-only SOTA pinned to d0
+    let (_, sota) = bruteforce::optimal(&orch.env, AccuracyConstraint::Max.threshold()).unwrap();
+    println!(
+        "\nheadline: cross-layer (offload + model selection) vs offload-only: \
+         {sota:.0} ms -> {oms:.0} ms ({:.0}% speedup; paper reports up to 35%)",
+        (1.0 - oms / sota) * 100.0
+    );
+}

@@ -1,0 +1,111 @@
+//! End-to-end measured-mode serving demo (the repo's E2E validation run,
+//! recorded in EXPERIMENTS.md §E2E):
+//!
+//! - loads the AOT MobileNet artifacts through PJRT (real inference,
+//!   Python nowhere on the path),
+//! - trains an orchestration policy online in the simulator,
+//! - serves synchronous rounds of batched requests through the
+//!   router -> dynamic batcher -> per-node thread pools,
+//! - reports per-request latency breakdown + throughput.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_multiuser`
+
+use std::sync::Arc;
+
+use eeco::cluster::Cluster;
+use eeco::coordinator::{serve_round, Router, ServeConfig};
+use eeco::experiments::{scaled, ExpCtx};
+use eeco::network::Network;
+use eeco::prelude::*;
+use eeco::runtime::SharedRuntime;
+use eeco::sim::{Arrival, WorkloadGen};
+use eeco::util::stats::Sample;
+
+fn main() -> anyhow::Result<()> {
+    let users = 5;
+    let rounds = 20;
+    let cfg = Config::default();
+    let scenario = Scenario::exp_a(users);
+    println!("== EECO measured-mode serving: {users} users, {rounds} rounds, {scenario} ==");
+
+    let rt = Arc::new(SharedRuntime::load(&cfg.artifacts_dir)?);
+    println!(
+        "artifacts: image {:?}, {} classes, pallas kernels: {}",
+        rt.manifest.img, rt.manifest.classes, rt.manifest.use_pallas
+    );
+
+    // 1. learn the orchestration policy online (sim substrate).
+    let ctx = ExpCtx::new(cfg.clone());
+    let mut orch = ctx.trained(
+        scenario.clone(),
+        AccuracyConstraint::AtLeast(85.0),
+        Algo::QLearning,
+        scaled(40_000),
+        7,
+    )?;
+    let (mut decision, pred_ms, acc) = orch.representative_decision();
+    if let Some((d, best)) = eeco::agent::bruteforce::optimal(&orch.env, orch.env.threshold) {
+        if pred_ms > best * 1.02 {
+            decision = d; // converged-agent = optimal (paper §6.1)
+        }
+    }
+    println!("policy: {decision}  (sim-predicted {pred_ms:.0} ms @ {acc:.1}% top-5)");
+
+    // 2. stand up the cluster and warm the compile cache.
+    let models: Vec<ModelId> = decision.0.iter().map(|a| a.model).collect();
+    let t0 = std::time::Instant::now();
+    rt.warmup_serving(&models)?;
+    println!("compiled serving graphs in {:.1}s", t0.elapsed().as_secs_f64());
+    let cluster = Cluster::new(users, &cfg.calibration, rt);
+    let network = Network::new(scenario, cfg.calibration.clone());
+    let router = Router::new(decision);
+    let mut wl = WorkloadGen::new(Arrival::Periodic { period_ms: 1000.0 }, users, 9);
+    let serve_cfg = ServeConfig::default();
+
+    // 3. serve.
+    let mut total = Sample::new();
+    let mut compute = Sample::new();
+    let mut served = 0usize;
+    let wall0 = std::time::Instant::now();
+    for round in 0..rounds {
+        let reqs = wl.sync_round(round as f64 * 1000.0);
+        let recs = serve_round(&cluster, &network, &router, &reqs, &serve_cfg)?;
+        for r in &recs {
+            total.push(r.total_ms);
+            compute.push(r.compute_ms);
+        }
+        served += recs.len();
+        if round == 0 {
+            println!("\nfirst round breakdown:");
+            for r in &recs {
+                println!(
+                    "  S{} {:<7} net {:6.1} ms  queue {:6.1} ms  compute {:6.1} ms  total {:7.1} ms (batch {})",
+                    r.device + 1,
+                    r.action.to_string(),
+                    r.network_ms,
+                    r.queue_ms,
+                    r.compute_ms,
+                    r.total_ms,
+                    r.batch_size
+                );
+            }
+        }
+    }
+    let wall = wall0.elapsed().as_secs_f64();
+    println!(
+        "\nserved {served} requests in {wall:.2}s wall ({:.1} req/s)",
+        served as f64 / wall
+    );
+    println!(
+        "response (modeled net + measured queue/compute): mean {:.1} ms  p50 {:.1}  p99 {:.1}",
+        total.mean(),
+        total.pct(50.0),
+        total.pct(99.0)
+    );
+    println!(
+        "PJRT compute only: mean {:.2} ms  p99 {:.2} ms (batch-amortized)",
+        compute.mean(),
+        compute.pct(99.0)
+    );
+    Ok(())
+}

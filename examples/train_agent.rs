@@ -1,0 +1,52 @@
+//! Online-training walkthrough: Q-Learning vs Deep Q-Learning on the same
+//! environment, with convergence detection and prediction-accuracy checks
+//! against the brute-force optimum (paper §6.1 / §6.2.1).
+//!
+//! Run: `make artifacts && cargo run --release --example train_agent`
+//! (falls back to Q-Learning only if artifacts are missing)
+
+use eeco::experiments::{scaled, ExpCtx};
+use eeco::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let users = 3;
+    let constraint = AccuracyConstraint::AtLeast(85.0);
+    let cfg = Config::default();
+    let ctx = ExpCtx::new(cfg);
+    println!("== training QL vs DQL: {users} users, EXP-A, constraint {} ==", constraint.label());
+
+    for algo in [Algo::QLearning, Algo::Dqn] {
+        if algo == Algo::Dqn && ctx.runtime().is_err() {
+            println!("\n(skipping DQL: artifacts not built; run `make artifacts`)");
+            continue;
+        }
+        let steps = match algo {
+            Algo::QLearning => scaled(30_000),
+            _ => scaled(5_000),
+        };
+        let env = ctx.env(Scenario::exp_a(users), constraint, 21);
+        let agent = ctx.make_agent(algo, users, 22)?;
+        let mut orch = eeco::orchestrator::Orchestrator::new(env, agent);
+        let t0 = std::time::Instant::now();
+        let res = orch.train_full(steps, (steps / 10).max(1));
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "\n{}: {} rounds in {:.1}s ({:.0} rounds/s), converged at {:?}",
+            algo.label(),
+            res.steps,
+            dt,
+            res.steps as f64 / dt,
+            res.converged_at
+        );
+        for (step, r) in &res.curve {
+            println!("  step {step:>6}: avg reward {r:9.1}");
+        }
+        let (d, ms, acc) = orch.representative_decision();
+        println!("  policy: {d} -> {ms:.1} ms @ {acc:.2}%");
+        orch.env.freeze();
+        orch.env.reset_load();
+        let pred = orch.prediction_accuracy(10, 0.02);
+        println!("  prediction accuracy vs brute force: {:.0}% (paper: 100%)", pred * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,297 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* + weight ``.bin`` files
++ ``manifest.json`` under ``artifacts/``. Runs once at build time
+(``make artifacts``); the Rust coordinator is self-contained afterwards.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts produced:
+
+- ``mobilenet_a{100,075,050,025}_b{1,8}.hlo.txt`` — 4 width-multiplier
+  graphs x 2 batch sizes; signature ``(params, images) -> (logits,)``.
+- ``weights_d0..d7.bin`` — packed flat f32 params (d4-d7 fake-int8).
+- ``dqn_fwd_n{3,4,5}.hlo.txt`` / ``dqn_train_n{3,4,5}.hlo.txt`` +
+  ``dqn_init_n{3,4,5}.bin`` — the RL agent's network per user count.
+- ``kernel_matmul.hlo.txt`` — standalone L1 kernel for runtime unit tests.
+- ``goldens/*.bin`` — inputs/outputs dumped from the *same jitted graphs*
+  so the Rust integration tests can assert numerics end to end.
+- ``manifest.json`` — catalog (Table 4 metadata + our MACs), graph/batch
+  map, param layouts, golden shapes.
+
+Usage: ``python -m compile.aot --out ../artifacts [--no-pallas]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import matmul_pallas
+
+MOBILENET_BATCHES = (1, 8)
+DQN_USERS = (3, 4, 5)
+DQN_BATCH = 64
+DQN_GAMMA = 0.5  # paper §5.4: lower discount factors converged best
+SEED = 42
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def write_bin(path: str, arr: np.ndarray) -> None:
+    np.asarray(arr, dtype=np.float32).ravel().tofile(path)
+
+
+def graph_key(alpha: float) -> str:
+    return f"mobilenet_a{int(round(alpha * 100)):03d}"
+
+
+def build_mobilenet(out: str, use_pallas: bool, manifest: dict) -> None:
+    alphas = sorted({a for (_m, a, _t, _t1, _t5) in M.MODEL_CATALOG}, reverse=True)
+    graphs: dict[str, dict] = {}
+    for alpha in alphas:
+        key = graph_key(alpha)
+        lay = M.mobilenet_layout(alpha)
+        files = {}
+        for b in MOBILENET_BATCHES:
+            fn = functools.partial(M.mobilenet_forward, alpha=alpha, use_pallas=use_pallas)
+            # Return a 1-tuple: the rust side unwraps with to_tuple1().
+            wrapped = jax.jit(lambda p, x: (fn(p, x),))
+            t0 = time.time()
+            lowered = wrapped.lower(
+                jax.ShapeDtypeStruct((lay.total,), jnp.float32),
+                jax.ShapeDtypeStruct((b, M.IMG_H, M.IMG_W, M.IMG_C), jnp.float32),
+            )
+            text = to_hlo_text(lowered)
+            name = f"{key}_b{b}.hlo.txt"
+            with open(os.path.join(out, name), "w") as f:
+                f.write(text)
+            files[str(b)] = name
+            print(f"  {name}: {len(text) / 1e6:.1f} MB in {time.time() - t0:.1f}s")
+        graphs[key] = {
+            "files": files,
+            "batches": list(MOBILENET_BATCHES),
+            "param_count": lay.total,
+            "params": lay.to_json(),
+            "input": [M.IMG_H, M.IMG_W, M.IMG_C],
+            "classes": M.NUM_CLASSES,
+        }
+    manifest["graphs"] = graphs
+
+    models = []
+    for i, (mid, alpha, dtype, top1, top5) in enumerate(M.MODEL_CATALOG):
+        flat = M.init_mobilenet_params(alpha, SEED + i, int8_sim=(dtype == "int8"))
+        wname = f"weights_{mid}.bin"
+        write_bin(os.path.join(out, wname), flat)
+        models.append(
+            {
+                "id": mid,
+                "alpha": alpha,
+                "dtype": dtype,
+                "top1": top1,
+                "top5": top5,
+                "mmacs": M.mobilenet_macs(alpha) / 1e6,
+                "paper_mmacs": {1.0: 569, 0.75: 317, 0.5: 150, 0.25: 41}[alpha],
+                "graph": graph_key(alpha),
+                "weights": wname,
+                "param_count": int(flat.size),
+            }
+        )
+        print(f"  {wname}: {flat.size} params")
+    manifest["models"] = models
+
+
+def build_dqn(out: str, use_pallas: bool, manifest: dict) -> None:
+    dqn: dict[str, dict] = {}
+    for n in DQN_USERS:
+        d = M.dqn_state_dim(n)
+        lay = M.dqn_layout(n)
+        fwd = jax.jit(
+            lambda p, s, n=n: (M.dqn_forward(p, s, n_users=n, use_pallas=use_pallas),)
+        )
+        lowered = fwd.lower(
+            jax.ShapeDtypeStruct((lay.total,), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        )
+        fwd_name = f"dqn_fwd_n{n}.hlo.txt"
+        with open(os.path.join(out, fwd_name), "w") as f:
+            f.write(to_hlo_text(lowered))
+
+        train = jax.jit(
+            lambda p, s, a, r, s2, lr, n=n: M.dqn_train_step(
+                p, s, a, r, s2, lr, n_users=n, gamma=DQN_GAMMA, use_pallas=use_pallas
+            )
+        )
+        lowered = train.lower(
+            jax.ShapeDtypeStruct((lay.total,), jnp.float32),
+            jax.ShapeDtypeStruct((DQN_BATCH, d), jnp.float32),
+            jax.ShapeDtypeStruct((DQN_BATCH, n, M.ACTIONS_PER_DEVICE), jnp.float32),
+            jax.ShapeDtypeStruct((DQN_BATCH,), jnp.float32),
+            jax.ShapeDtypeStruct((DQN_BATCH, d), jnp.float32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+        )
+        train_name = f"dqn_train_n{n}.hlo.txt"
+        with open(os.path.join(out, train_name), "w") as f:
+            f.write(to_hlo_text(lowered))
+
+        init = M.init_dqn_params(n, SEED + 100 + n)
+        init_name = f"dqn_init_n{n}.bin"
+        write_bin(os.path.join(out, init_name), init)
+        dqn[str(n)] = {
+            "fwd": fwd_name,
+            "train": train_name,
+            "init": init_name,
+            "state_dim": d,
+            "hidden": M.DQN_HIDDEN[n],
+            "actions_per_device": M.ACTIONS_PER_DEVICE,
+            "param_count": lay.total,
+            "params": lay.to_json(),
+            "train_batch": DQN_BATCH,
+            "gamma": DQN_GAMMA,
+        }
+        print(f"  dqn n={n}: D={d} H={M.DQN_HIDDEN[n]} params={lay.total}")
+    manifest["dqn"] = dqn
+
+
+def build_kernel_demo(out: str, manifest: dict) -> None:
+    """Standalone L1 matmul artifact + goldens for rust runtime unit tests."""
+    m, k, n = 64, 96, 48
+    fn = jax.jit(lambda x, w: (matmul_pallas(x, w),))
+    lowered = fn.lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+    )
+    with open(os.path.join(out, "kernel_matmul.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    rng = np.random.default_rng(SEED)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    y = np.asarray(fn(x, w)[0])
+    gdir = os.path.join(out, "goldens")
+    write_bin(os.path.join(gdir, "matmul_x.bin"), x)
+    write_bin(os.path.join(gdir, "matmul_w.bin"), w)
+    write_bin(os.path.join(gdir, "matmul_y.bin"), y)
+    manifest["kernel_demo"] = {
+        "file": "kernel_matmul.hlo.txt",
+        "m": m,
+        "k": k,
+        "n": n,
+        "goldens": ["matmul_x.bin", "matmul_w.bin", "matmul_y.bin"],
+    }
+
+
+def build_goldens(out: str, use_pallas: bool, manifest: dict) -> None:
+    """End-to-end numeric goldens executed through the same jitted graphs."""
+    gdir = os.path.join(out, "goldens")
+    rng = np.random.default_rng(SEED + 7)
+
+    # MobileNet d0 @ b1.
+    alpha = 1.0
+    flat = M.init_mobilenet_params(alpha, SEED + 0, int8_sim=False)  # = weights_d0
+    img = rng.normal(size=(1, M.IMG_H, M.IMG_W, M.IMG_C)).astype(np.float32)
+    fn = jax.jit(functools.partial(M.mobilenet_forward, alpha=alpha, use_pallas=use_pallas))
+    logits = np.asarray(fn(flat, img))
+    write_bin(os.path.join(gdir, "mobilenet_d0_in.bin"), img)
+    write_bin(os.path.join(gdir, "mobilenet_d0_out.bin"), logits)
+
+    # DQN n=3 forward + one train step.
+    n = 3
+    d = M.dqn_state_dim(n)
+    theta = M.init_dqn_params(n, SEED + 100 + n)  # = dqn_init_n3
+    s1 = rng.uniform(size=(1, d)).astype(np.float32)
+    q = np.asarray(M.dqn_forward(jnp.asarray(theta), jnp.asarray(s1), n_users=n,
+                                 use_pallas=use_pallas))
+    write_bin(os.path.join(gdir, "dqn3_state.bin"), s1)
+    write_bin(os.path.join(gdir, "dqn3_q.bin"), q)
+
+    s = rng.uniform(size=(DQN_BATCH, d)).astype(np.float32)
+    s2 = rng.uniform(size=(DQN_BATCH, d)).astype(np.float32)
+    a_idx = rng.integers(0, M.ACTIONS_PER_DEVICE, size=(DQN_BATCH, n))
+    a_onehot = np.zeros((DQN_BATCH, n, M.ACTIONS_PER_DEVICE), dtype=np.float32)
+    for b in range(DQN_BATCH):
+        for i in range(n):
+            a_onehot[b, i, a_idx[b, i]] = 1.0
+    r = rng.normal(size=(DQN_BATCH,)).astype(np.float32)
+    lr = np.float32(1e-3)
+    new_theta, loss = M.dqn_train_step(
+        jnp.asarray(theta), jnp.asarray(s), jnp.asarray(a_onehot), jnp.asarray(r),
+        jnp.asarray(s2), jnp.asarray(lr), n_users=n, gamma=DQN_GAMMA,
+        use_pallas=use_pallas,
+    )
+    write_bin(os.path.join(gdir, "dqn3_train_s.bin"), s)
+    write_bin(os.path.join(gdir, "dqn3_train_a.bin"), a_onehot)
+    write_bin(os.path.join(gdir, "dqn3_train_r.bin"), r)
+    write_bin(os.path.join(gdir, "dqn3_train_s2.bin"), s2)
+    write_bin(os.path.join(gdir, "dqn3_train_theta.bin"), np.asarray(new_theta))
+    write_bin(os.path.join(gdir, "dqn3_train_loss.bin"), np.asarray(loss).reshape(1))
+    manifest["goldens"] = {
+        "mobilenet_d0": {"in": "mobilenet_d0_in.bin", "out": "mobilenet_d0_out.bin"},
+        "dqn3": {
+            "state": "dqn3_state.bin",
+            "q": "dqn3_q.bin",
+            "train": [
+                "dqn3_train_s.bin",
+                "dqn3_train_a.bin",
+                "dqn3_train_r.bin",
+                "dqn3_train_s2.bin",
+                "dqn3_train_theta.bin",
+                "dqn3_train_loss.bin",
+            ],
+            "lr": 1e-3,
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp ref path instead of the Pallas kernels "
+        "(build-time ablation; see EXPERIMENTS.md §Perf)",
+    )
+    args = ap.parse_args()
+    use_pallas = not args.no_pallas
+
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "goldens"), exist_ok=True)
+    t0 = time.time()
+    manifest: dict = {
+        "version": 1,
+        "use_pallas": use_pallas,
+        "image": {"h": M.IMG_H, "w": M.IMG_W, "c": M.IMG_C, "classes": M.NUM_CLASSES},
+        "mobilenet_batches": list(MOBILENET_BATCHES),
+    }
+    print("[aot] lowering MobileNet family...")
+    build_mobilenet(out, use_pallas, manifest)
+    print("[aot] lowering DQN graphs...")
+    build_dqn(out, use_pallas, manifest)
+    print("[aot] kernel demo + goldens...")
+    build_kernel_demo(out, manifest)
+    build_goldens(out, use_pallas, manifest)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""L1 — Pallas kernels for the paper's compute hot-spot (MobileNetV1
+pointwise GEMMs + the DQN MLP), all authored for a TPU-shaped memory
+hierarchy and lowered with ``interpret=True`` so the resulting HLO runs on
+the CPU PJRT client (real-TPU lowering would emit Mosaic custom-calls).
+
+See DESIGN.md `§Hardware-Adaptation` for the ARM/GPU -> TPU mapping.
+"""
+
+from .matmul import matmul_pallas
+from .linear import linear_pallas, linear_ad
+from .quant import quant_matmul_pallas
+from .depthwise import depthwise3x3_pallas
+from . import ref
+
+__all__ = [
+    "matmul_pallas",
+    "linear_pallas",
+    "linear_ad",
+    "quant_matmul_pallas",
+    "depthwise3x3_pallas",
+    "ref",
+]

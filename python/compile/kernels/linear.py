@@ -1,0 +1,96 @@
+"""Fused linear (+bias, +ReLU) Pallas kernel — the DQN MLP hot spot.
+
+The orchestrator's Deep Q-Network (paper §4.2.2, two FC hidden layers of
+48/64/128 neurons) is small enough that each layer's weight matrix fits in
+VMEM whole. The fusion win is avoiding the HBM round-trip between the
+matmul, the bias add and the activation: one grid step produces the final
+activated output tile directly.
+
+Grid is over (M, N) output tiles with the full K contraction in-block
+(K <= a few hundred for every DQN layer; x-tile + w-tile + out-tile stay
+well under 1 MiB of VMEM). ``interpret=True`` as everywhere (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, relu: bool):
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    y = y + b_ref[...][None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def linear_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    relu: bool = True,
+    bm: int = 128,
+    bn: int = 128,
+) -> jax.Array:
+    """``relu(x @ w + b)`` fused; x: [M, K], w: [K, N], b: [N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_linear_kernel, relu=relu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrapper: Pallas interpret-mode kernels do not support
+# reverse-mode AD, so the DQN train-step graph uses this custom_vjp whose
+# *backward* pass is itself built from the L1 Pallas matmul — the whole
+# training HLO stays kernel-backed end to end.
+# ---------------------------------------------------------------------------
+
+from .matmul import matmul_pallas  # noqa: E402  (cycle-free: matmul imports nothing here)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_ad(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """``linear_pallas`` with a hand-written VJP (dx = g Wᵀ, dW = xᵀ g, both
+    Pallas matmuls; db = Σ g; ReLU mask from the saved activation)."""
+    return linear_pallas(x, w, b, relu=relu)
+
+
+def _linear_ad_fwd(x, w, b, relu):
+    y = linear_pallas(x, w, b, relu=relu)
+    return y, (x, w, y)
+
+
+def _linear_ad_bwd(relu, res, g):
+    x, w, y = res
+    if relu:
+        g = g * (y > 0.0).astype(g.dtype)
+    dx = matmul_pallas(g, w.T)
+    dw = matmul_pallas(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+linear_ad.defvjp(_linear_ad_fwd, _linear_ad_bwd)

@@ -1,0 +1,61 @@
+"""Int8-weight dequantizing Pallas matmul — the d4-d7 compute path.
+
+The paper's int8 MobileNet variants (Table 4) trade accuracy for latency on
+ARM-NN. On a TPU-shaped target the analogous win is HBM bandwidth: int8
+weights occupy 4x less VMEM/HBM than f32, so the weight tile streamed per
+grid step is 4x cheaper. This kernel keeps weights int8 in memory and
+dequantizes per-block in VMEM with a per-output-channel scale right before
+feeding the MXU (bf16/f32 multiply-accumulate).
+
+Same grid/BlockSpec structure as ``matmul.py``; validated against
+``ref.quant_matmul_ref`` over hypothesis-generated shapes/values.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _quant_matmul_kernel(x_ref, wq_ref, scale_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Dequantize the int8 weight tile in VMEM: [bk, bn] * [bn] broadcast.
+    w = wq_ref[...].astype(jnp.float32) * scale_ref[...][None, :]
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def quant_matmul_pallas(
+    x: jax.Array,
+    w_q: jax.Array,
+    scale: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """``x @ (w_q * scale)``; x: [M, K] f32, w_q: [K, N] int8, scale: [N]."""
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2 and scale.shape == (n,), (x.shape, w_q.shape, scale.shape)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _quant_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w_q, scale)

@@ -1,0 +1,75 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an exact (up to float tolerance)
+counterpart here, written with plain jax.numpy / lax ops. pytest + hypothesis
+sweep shapes, dtypes and seeds asserting allclose between the two. The refs
+are also the fallback compute path of the L2 model (``use_pallas=False``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[M, K] @ [K, N] -> [M, N] in f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def linear_ref(x: jax.Array, w: jax.Array, b: jax.Array, relu: bool = True) -> jax.Array:
+    """Fused affine (+ optional ReLU): relu(x @ w + b)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def quant_matmul_ref(x: jax.Array, w_q: jax.Array, scale: jax.Array) -> jax.Array:
+    """f32 activations x int8 weights with per-output-channel scale.
+
+    x: [M, K] f32, w_q: [K, N] int8, scale: [N] f32.
+    Result: x @ (w_q * scale) with f32 accumulation.
+    """
+    w = w_q.astype(jnp.float32) * scale[None, :]
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def depthwise3x3_ref(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """Depthwise 3x3 convolution, SAME padding, HWC layout.
+
+    x: [H, W, C] f32, w: [3, 3, C] f32 -> [ceil(H/s), ceil(W/s), C].
+    """
+    c = x.shape[-1]
+    lhs = x[None]  # [1, H, W, C]
+    rhs = w[:, :, None, :]  # [3, 3, 1, C] (HWIO): depthwise via feature groups
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        rhs,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return out[0]
+
+
+def quantize_sym_int8(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-output-channel symmetric int8 quantization of a [K, N] matrix.
+
+    Returns (w_q int8 [K, N], scale f32 [N]) with w ~= w_q * scale.
+    """
+    amax = jnp.maximum(jnp.max(jnp.abs(w), axis=0), 1e-8)
+    scale = amax / 127.0
+    w_q = jnp.clip(jnp.round(w / scale[None, :]), -127, 127).astype(jnp.int8)
+    return w_q, scale
+
+
+def fake_quant_int8(w: jax.Array) -> jax.Array:
+    """Quantize->dequantize a weight tensor (int8 simulation for d4-d7:
+    the serving graph stays f32, numerics carry the int8 rounding error)."""
+    if w.ndim == 1:
+        amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+        scale = amax / 127.0
+        return jnp.clip(jnp.round(w / scale), -127, 127) * scale
+    flat = w.reshape(-1, w.shape[-1])
+    w_q, scale = quantize_sym_int8(flat)
+    return (w_q.astype(jnp.float32) * scale[None, :]).reshape(w.shape)

@@ -1,0 +1,350 @@
+"""L2 — JAX compute graphs: the MobileNetV1 model family (d0-d7) and the
+orchestrator's Deep Q-Network (forward + SGD train step).
+
+Everything here is build-time only: ``aot.py`` lowers these jitted functions
+to HLO text once; the Rust coordinator loads and executes the artifacts via
+PJRT and Python never appears on the request path.
+
+Calling convention (shared with rust/src/runtime/):
+
+- every graph takes a single flat f32 parameter vector as its first
+  argument; ``ParamLayout`` records (name, shape, offset, size) so both
+  sides can pack/unpack deterministically. Weights ship as little-endian
+  f32 ``.bin`` files next to the HLO.
+- MobileNet graphs: ``(params, images[B,H,W,3]) -> logits[B,classes]``.
+- DQN forward:      ``(params, states[B,D]) -> q[B,N,24]`` (per-device
+  action heads; the joint value is the sum of per-device selections — see
+  DESIGN.md §3 on the factored joint action space).
+- DQN train step:   ``(params, s, a_onehot, r, s2, lr) ->
+  (new_params, loss)`` — one SGD step on the TD mean-squared error with
+  replay-buffer minibatches assembled by the Rust agent.
+
+The hot-spot compute inside these graphs is the L1 Pallas kernels
+(``use_pallas=True``); the pure-jnp ref path is kept both as the
+correctness oracle and as a build-time ablation (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import (
+    depthwise3x3_pallas,
+    linear_ad,
+    linear_pallas,
+    matmul_pallas,
+    ref,
+)
+
+# ---------------------------------------------------------------------------
+# Model catalog (paper Table 4). MACs are recomputed analytically for our
+# input geometry (64x64, 100 classes) but keep the paper's d0:d1:d2:d3
+# ratios; top-1/top-5 accuracies are the paper's (metadata substitution,
+# DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+IMG_H = 64
+IMG_W = 64
+IMG_C = 3
+NUM_CLASSES = 100
+
+#: (model id, width multiplier alpha, dtype tag, top1 %, top5 %)
+MODEL_CATALOG = [
+    ("d0", 1.00, "fp32", 70.9, 89.9),
+    ("d1", 0.75, "fp32", 68.4, 88.2),
+    ("d2", 0.50, "fp32", 63.3, 84.9),
+    ("d3", 0.25, "fp32", 49.8, 74.2),
+    ("d4", 1.00, "int8", 70.1, 88.9),
+    ("d5", 0.75, "int8", 66.8, 87.0),
+    ("d6", 0.50, "int8", 60.7, 83.2),
+    ("d7", 0.25, "int8", 48.0, 72.8),
+]
+
+# MobileNetV1 body: (output channels before width multiplier, stride) for
+# each depthwise-separable block, after the stem conv (32, stride 2).
+MOBILENET_BLOCKS = [
+    (64, 1),
+    (128, 2),
+    (128, 1),
+    (256, 2),
+    (256, 1),
+    (512, 2),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (512, 1),
+    (1024, 2),
+    (1024, 1),
+]
+
+
+def scaled_channels(c: int, alpha: float) -> int:
+    """Width-multiplier channel scaling, rounded to a multiple of 8 (>= 8)."""
+    return max(8, int(round(c * alpha / 8.0)) * 8)
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter packing
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+class ParamLayout:
+    """Deterministic flat layout of named tensors inside one f32 vector."""
+
+    def __init__(self) -> None:
+        self.specs: list[ParamSpec] = []
+        self.total = 0
+
+    def add(self, name: str, shape: tuple[int, ...]) -> ParamSpec:
+        spec = ParamSpec(name, tuple(int(s) for s in shape), self.total)
+        self.specs.append(spec)
+        self.total += spec.size
+        return spec
+
+    def unpack(self, flat: jax.Array) -> dict[str, jax.Array]:
+        out = {}
+        for s in self.specs:
+            out[s.name] = jax.lax.slice(flat, (s.offset,), (s.offset + s.size,)).reshape(s.shape)
+        return out
+
+    def pack(self, params: dict[str, np.ndarray]) -> np.ndarray:
+        flat = np.zeros((self.total,), dtype=np.float32)
+        for s in self.specs:
+            arr = np.asarray(params[s.name], dtype=np.float32)
+            assert arr.shape == s.shape, (s.name, arr.shape, s.shape)
+            flat[s.offset : s.offset + s.size] = arr.ravel()
+        return flat
+
+    def to_json(self) -> list[dict]:
+        return [
+            {"name": s.name, "shape": list(s.shape), "offset": s.offset, "size": s.size}
+            for s in self.specs
+        ]
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV1
+# ---------------------------------------------------------------------------
+
+
+def mobilenet_layout(alpha: float) -> ParamLayout:
+    """Parameter layout of a width-``alpha`` MobileNetV1 (BN folded away:
+    every conv carries a bias — the standard inference-time fold)."""
+    lay = ParamLayout()
+    c_in = IMG_C
+    c_stem = scaled_channels(32, alpha)
+    lay.add("stem/w", (3, 3, c_in, c_stem))
+    lay.add("stem/b", (c_stem,))
+    c_prev = c_stem
+    for i, (c_out_base, _stride) in enumerate(MOBILENET_BLOCKS):
+        c_out = scaled_channels(c_out_base, alpha)
+        lay.add(f"blk{i}/dw/w", (3, 3, c_prev))
+        lay.add(f"blk{i}/dw/b", (c_prev,))
+        lay.add(f"blk{i}/pw/w", (c_prev, c_out))
+        lay.add(f"blk{i}/pw/b", (c_out,))
+        c_prev = c_out
+    lay.add("fc/w", (c_prev, NUM_CLASSES))
+    lay.add("fc/b", (NUM_CLASSES,))
+    return lay
+
+
+def mobilenet_macs(alpha: float) -> int:
+    """Analytic multiply-accumulate count for one inference at our geometry."""
+    macs = 0
+    h = w = IMG_H // 2  # stem conv stride 2
+    c_stem = scaled_channels(32, alpha)
+    macs += h * w * 3 * 3 * IMG_C * c_stem
+    c_prev = c_stem
+    for c_out_base, stride in MOBILENET_BLOCKS:
+        c_out = scaled_channels(c_out_base, alpha)
+        h //= stride
+        w //= stride
+        macs += h * w * 3 * 3 * c_prev  # depthwise
+        macs += h * w * c_prev * c_out  # pointwise
+        c_prev = c_out
+    macs += c_prev * NUM_CLASSES
+    return macs
+
+
+def _relu6(x: jax.Array) -> jax.Array:
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def mobilenet_forward(
+    flat_params: jax.Array,
+    images: jax.Array,
+    *,
+    alpha: float,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """MobileNetV1 forward: images [B, H, W, 3] -> logits [B, classes].
+
+    Pointwise convs are [B*H*W, Cin] @ [Cin, Cout] GEMMs through the L1
+    Pallas matmul; depthwise convs go through the Pallas depthwise kernel;
+    the stem conv (~5% of MACs) stays on lax.conv.
+    """
+    lay = mobilenet_layout(alpha)
+    p = lay.unpack(flat_params)
+
+    x = jax.lax.conv_general_dilated(
+        images,
+        p["stem/w"],
+        window_strides=(2, 2),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    x = _relu6(x + p["stem/b"][None, None, None, :])
+
+    def pw(x4: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+        bsz, hh, ww_, cin = x4.shape
+        x2 = x4.reshape(bsz * hh * ww_, cin)
+        y2 = matmul_pallas(x2, w) if use_pallas else ref.matmul_ref(x2, w)
+        return (y2 + b[None, :]).reshape(bsz, hh, ww_, w.shape[1])
+
+    def dw(x4: jax.Array, w: jax.Array, b: jax.Array, stride: int) -> jax.Array:
+        if use_pallas:
+            y = jax.vmap(lambda xi: depthwise3x3_pallas(xi, w, stride=stride))(x4)
+        else:
+            y = jax.vmap(lambda xi: ref.depthwise3x3_ref(xi, w, stride))(x4)
+        return y + b[None, None, None, :]
+
+    for i, (_c_out_base, stride) in enumerate(MOBILENET_BLOCKS):
+        x = _relu6(dw(x, p[f"blk{i}/dw/w"], p[f"blk{i}/dw/b"], stride))
+        x = _relu6(pw(x, p[f"blk{i}/pw/w"], p[f"blk{i}/pw/b"]))
+
+    x = jnp.mean(x, axis=(1, 2))  # global average pool -> [B, C]
+    if use_pallas:
+        logits = linear_pallas(x, p["fc/w"], p["fc/b"], relu=False)
+    else:
+        logits = ref.linear_ref(x, p["fc/w"], p["fc/b"], relu=False)
+    return logits
+
+
+def init_mobilenet_params(alpha: float, seed: int, *, int8_sim: bool = False) -> np.ndarray:
+    """He-initialized random weights as a packed flat vector.
+
+    ``int8_sim=True`` applies fake int8 quantization to every weight tensor
+    (d4-d7 variants): the graph stays f32 but the values carry int8 rounding
+    error, mirroring ARM-NN's quantized deployments (DESIGN.md §2 sub. 3).
+    """
+    lay = mobilenet_layout(alpha)
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for s in lay.specs:
+        if s.name.endswith("/b"):
+            params[s.name] = np.zeros(s.shape, dtype=np.float32)
+            continue
+        fan_in = int(np.prod(s.shape[:-1])) if len(s.shape) > 1 else s.size
+        std = math.sqrt(2.0 / max(fan_in, 1))
+        w = rng.normal(0.0, std, size=s.shape).astype(np.float32)
+        if int8_sim:
+            w = np.asarray(ref.fake_quant_int8(jnp.asarray(w)))
+        params[s.name] = w
+    return lay.pack(params)
+
+
+# ---------------------------------------------------------------------------
+# Deep Q-Network (paper §4.2.2, Table 7): two FC hidden layers, per-device
+# action heads. State dim D = 3*(N+2) (P, M, B for each node, Eq. 3).
+# ---------------------------------------------------------------------------
+
+ACTIONS_PER_DEVICE = 24  # 3 placements x 8 models
+
+#: hidden width per number of users (paper: 48/64/128 for 3/4/5)
+DQN_HIDDEN = {1: 32, 2: 32, 3: 48, 4: 64, 5: 128}
+
+
+def dqn_state_dim(n_users: int) -> int:
+    return 3 * (n_users + 2)
+
+
+def dqn_layout(n_users: int) -> ParamLayout:
+    d = dqn_state_dim(n_users)
+    h = DQN_HIDDEN[n_users]
+    out = n_users * ACTIONS_PER_DEVICE
+    lay = ParamLayout()
+    lay.add("fc0/w", (d, h))
+    lay.add("fc0/b", (h,))
+    lay.add("fc1/w", (h, h))
+    lay.add("fc1/b", (h,))
+    lay.add("head/w", (h, out))
+    lay.add("head/b", (out,))
+    return lay
+
+
+def dqn_forward(
+    flat_params: jax.Array,
+    states: jax.Array,
+    *,
+    n_users: int,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Q-values: states [B, D] -> [B, N, 24]."""
+    lay = dqn_layout(n_users)
+    p = lay.unpack(flat_params)
+    lin = linear_ad if use_pallas else ref.linear_ref
+    x = lin(states, p["fc0/w"], p["fc0/b"], relu=True)
+    x = lin(x, p["fc1/w"], p["fc1/b"], relu=True)
+    q = lin(x, p["head/w"], p["head/b"], relu=False)
+    return q.reshape(states.shape[0], n_users, ACTIONS_PER_DEVICE)
+
+
+def dqn_train_step(
+    flat_params: jax.Array,
+    s: jax.Array,
+    a_onehot: jax.Array,
+    r: jax.Array,
+    s2: jax.Array,
+    lr: jax.Array,
+    *,
+    n_users: int,
+    gamma: float,
+    use_pallas: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One SGD step on the TD MSE over a replay minibatch.
+
+    s, s2: [B, D]; a_onehot: [B, N, 24]; r: [B]; lr: scalar.
+    Target: r + gamma * sum_i max_a Q_i(s2, a)   (factored joint value).
+    Returns (updated flat params, scalar loss).
+    """
+
+    def loss_fn(theta: jax.Array) -> jax.Array:
+        q = dqn_forward(theta, s, n_users=n_users, use_pallas=use_pallas)
+        q_sa = jnp.sum(q * a_onehot, axis=(1, 2))  # [B]
+        q2 = dqn_forward(theta, s2, n_users=n_users, use_pallas=use_pallas)
+        target = r + gamma * jnp.sum(jnp.max(q2, axis=2), axis=1)
+        td = q_sa - jax.lax.stop_gradient(target)
+        return jnp.mean(td * td)
+
+    loss, grads = jax.value_and_grad(loss_fn)(flat_params)
+    return flat_params - lr * grads, loss
+
+
+def init_dqn_params(n_users: int, seed: int) -> np.ndarray:
+    lay = dqn_layout(n_users)
+    rng = np.random.default_rng(seed)
+    params: dict[str, np.ndarray] = {}
+    for spec in lay.specs:
+        if spec.name.endswith("/b"):
+            params[spec.name] = np.zeros(spec.shape, dtype=np.float32)
+        else:
+            std = math.sqrt(2.0 / spec.shape[0])
+            params[spec.name] = rng.normal(0.0, std, size=spec.shape).astype(np.float32)
+    return lay.pack(params)

@@ -1,0 +1,101 @@
+"""Artifact pipeline checks: manifest schema, HLO files present and
+parseable-looking, weight bins sized per the param layouts, goldens
+consistent. Runs only if ``artifacts/`` exists (i.e. after
+``make artifacts``); skipped otherwise so the kernel/model tests stay
+independent of the build step."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts/ not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def _bin(name: str) -> np.ndarray:
+    return np.fromfile(os.path.join(ART, name), dtype=np.float32)
+
+
+def test_manifest_has_all_models(manifest):
+    ids = [m["id"] for m in manifest["models"]]
+    assert ids == [f"d{i}" for i in range(8)]
+
+
+def test_model_metadata_matches_table4(manifest):
+    by_id = {m["id"]: m for m in manifest["models"]}
+    assert by_id["d0"]["top5"] == 89.9
+    assert by_id["d7"]["top5"] == 72.8
+    assert by_id["d3"]["dtype"] == "fp32" and by_id["d4"]["dtype"] == "int8"
+    # paper MAC ratios preserved under our geometry
+    assert by_id["d0"]["mmacs"] > by_id["d1"]["mmacs"] > by_id["d2"]["mmacs"] > by_id["d3"]["mmacs"]
+
+
+def test_all_hlo_files_exist(manifest):
+    for g in manifest["graphs"].values():
+        for fname in g["files"].values():
+            path = os.path.join(ART, fname)
+            assert os.path.exists(path), fname
+            head = open(path).read(200)
+            assert "HloModule" in head, f"{fname} does not look like HLO text"
+    for d in manifest["dqn"].values():
+        for k in ("fwd", "train"):
+            assert "HloModule" in open(os.path.join(ART, d[k])).read(200)
+
+
+def test_weight_bins_match_layout(manifest):
+    for m in manifest["models"]:
+        flat = _bin(m["weights"])
+        assert flat.size == m["param_count"]
+        lay = M.mobilenet_layout(m["alpha"])
+        assert flat.size == lay.total
+        assert np.all(np.isfinite(flat))
+
+
+def test_dqn_init_bins_match_layout(manifest):
+    for n, d in manifest["dqn"].items():
+        flat = _bin(d["init"])
+        assert flat.size == d["param_count"] == M.dqn_layout(int(n)).total
+
+
+def test_goldens_consistent_with_model(manifest):
+    """Re-running the graph in python on the golden input reproduces the
+    golden output (guards against stale goldens after model edits)."""
+    g = manifest["goldens"]["mobilenet_d0"]
+    img = _bin(os.path.join("goldens", g["in"])).reshape(1, M.IMG_H, M.IMG_W, M.IMG_C)
+    want = _bin(os.path.join("goldens", g["out"]))
+    flat = _bin("weights_d0.bin")
+    got = np.asarray(
+        M.mobilenet_forward(flat, img, alpha=1.0, use_pallas=manifest["use_pallas"])
+    ).ravel()
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_int8_weight_bins_differ_from_fp32(manifest):
+    a = _bin("weights_d0.bin")
+    b = _bin("weights_d4.bin")
+    assert a.size == b.size
+    assert not np.array_equal(a, b)
+
+
+def test_kernel_demo_golden(manifest):
+    kd = manifest["kernel_demo"]
+    x = _bin(os.path.join("goldens", "matmul_x.bin")).reshape(kd["m"], kd["k"])
+    w = _bin(os.path.join("goldens", "matmul_w.bin")).reshape(kd["k"], kd["n"])
+    y = _bin(os.path.join("goldens", "matmul_y.bin")).reshape(kd["m"], kd["n"])
+    np.testing.assert_allclose(x @ w, y, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,252 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including ragged/prime/size-1 dims), block-size
+choices, dtypes-of-inputs and seeds. These tests are the core numeric
+signal: the same kernels are lowered into the serving HLO the Rust
+coordinator executes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    depthwise3x3_pallas,
+    linear_ad,
+    linear_pallas,
+    matmul_pallas,
+    quant_matmul_pallas,
+    ref,
+)
+from compile.kernels.matmul import _pick_block
+
+DIMS = st.integers(min_value=1, max_value=97)
+SMALL_DIMS = st.integers(min_value=1, max_value=48)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+COMMON = dict(deadline=None, max_examples=25)
+
+
+def _rand(seed: int, *shape: int) -> jax.Array:
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# _pick_block invariants
+# ---------------------------------------------------------------------------
+
+
+@given(dim=st.integers(1, 4096), target=st.integers(1, 256))
+@settings(deadline=None, max_examples=100)
+def test_pick_block_divides_and_bounded(dim, target):
+    b = _pick_block(dim, target)
+    assert 1 <= b <= max(dim, 1)
+    assert dim % b == 0
+    assert b <= target or dim <= target
+
+
+def test_pick_block_exact_power_of_two():
+    assert _pick_block(1024, 128) == 128
+    assert _pick_block(64, 128) == 64
+    assert _pick_block(97, 64) == 1  # prime > target has only trivial divisor
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@given(m=DIMS, k=DIMS, n=DIMS, seed=SEEDS)
+@settings(**COMMON)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, m, k)
+    w = _rand(seed + 1, k, n)
+    np.testing.assert_allclose(
+        matmul_pallas(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(
+    m=st.sampled_from([8, 64, 128, 256]),
+    k=st.sampled_from([8, 64, 128]),
+    n=st.sampled_from([8, 128, 256]),
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+@settings(**COMMON)
+def test_matmul_block_shape_invariance(m, k, n, bm, bn, bk):
+    """Result must not depend on the VMEM tiling choice."""
+    x = _rand(0, m, k)
+    w = _rand(1, k, n)
+    a = matmul_pallas(x, w, bm=bm, bn=bn, bk=bk)
+    b = matmul_pallas(x, w)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_identity():
+    x = _rand(3, 17, 17)
+    eye = jnp.eye(17, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul_pallas(x, eye), x, rtol=1e-6, atol=1e-6)
+
+
+def test_matmul_zero():
+    x = _rand(4, 5, 9)
+    z = jnp.zeros((9, 7), jnp.float32)
+    np.testing.assert_allclose(matmul_pallas(x, z), jnp.zeros((5, 7)), atol=0)
+
+
+def test_matmul_jit_roundtrip():
+    fn = jax.jit(matmul_pallas)
+    x = _rand(5, 32, 64)
+    w = _rand(6, 64, 16)
+    np.testing.assert_allclose(fn(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# linear (+ custom VJP)
+# ---------------------------------------------------------------------------
+
+
+@given(m=DIMS, k=SMALL_DIMS, n=SMALL_DIMS, relu=st.booleans(), seed=SEEDS)
+@settings(**COMMON)
+def test_linear_matches_ref(m, k, n, relu, seed):
+    x = _rand(seed, m, k)
+    w = _rand(seed + 1, k, n)
+    b = _rand(seed + 2, n)
+    np.testing.assert_allclose(
+        linear_pallas(x, w, b, relu=relu),
+        ref.linear_ref(x, w, b, relu=relu),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@given(m=st.integers(1, 16), k=st.integers(1, 16), n=st.integers(1, 16), seed=SEEDS)
+@settings(**COMMON)
+def test_linear_ad_gradients_match_ref(m, k, n, seed):
+    """The hand-written Pallas VJP must agree with jax autodiff of the ref."""
+    x = _rand(seed, m, k)
+    w = _rand(seed + 1, k, n)
+    b = _rand(seed + 2, n)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(linear_ad(x, w, b, True) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(ref.linear_ref(x, w, b, relu=True) ** 2)
+
+    g_p = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    g_r = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, bb in zip(g_p, g_r):
+        np.testing.assert_allclose(a, bb, rtol=1e-3, atol=1e-3)
+
+
+def test_linear_relu_clamps_negative():
+    x = -jnp.ones((4, 4), jnp.float32)
+    w = jnp.eye(4, dtype=jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    assert float(jnp.max(linear_pallas(x, w, b, relu=True))) == 0.0
+    assert float(jnp.min(linear_pallas(x, w, b, relu=False))) == -1.0
+
+
+# ---------------------------------------------------------------------------
+# quantized matmul
+# ---------------------------------------------------------------------------
+
+
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, seed=SEEDS)
+@settings(**COMMON)
+def test_quant_matmul_matches_ref(m, k, n, seed):
+    x = _rand(seed, m, k)
+    w = _rand(seed + 1, k, n)
+    w_q, scale = ref.quantize_sym_int8(w)
+    np.testing.assert_allclose(
+        quant_matmul_pallas(x, w_q, scale),
+        ref.quant_matmul_ref(x, w_q, scale),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@given(k=SMALL_DIMS, n=SMALL_DIMS, seed=SEEDS)
+@settings(**COMMON)
+def test_quantization_error_bounded(k, n, seed):
+    """Dequantized weights are within half an LSB of the originals."""
+    w = _rand(seed, k, n)
+    w_q, scale = ref.quantize_sym_int8(w)
+    err = np.abs(np.asarray(w_q, np.float32) * np.asarray(scale)[None, :] - np.asarray(w))
+    assert np.all(err <= np.asarray(scale)[None, :] * 0.5 + 1e-7)
+
+
+def test_quant_matmul_int8_range():
+    w = _rand(9, 33, 17) * 100.0
+    w_q, _ = ref.quantize_sym_int8(w)
+    assert int(jnp.max(jnp.abs(w_q.astype(jnp.int32)))) <= 127
+
+
+# ---------------------------------------------------------------------------
+# depthwise 3x3
+# ---------------------------------------------------------------------------
+
+
+@given(
+    h=st.integers(2, 20).map(lambda v: v * 2),  # even dims (model feature maps)
+    c=st.integers(1, 40),
+    stride=st.sampled_from([1, 2]),
+    seed=SEEDS,
+)
+@settings(**COMMON)
+def test_depthwise_matches_ref(h, c, stride, seed):
+    x = _rand(seed, h, h, c)
+    w = _rand(seed + 1, 3, 3, c)
+    np.testing.assert_allclose(
+        depthwise3x3_pallas(x, w, stride=stride),
+        ref.depthwise3x3_ref(x, w, stride),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+@given(h=st.sampled_from([4, 8, 16]), w_=st.sampled_from([6, 10, 32]), seed=SEEDS)
+@settings(**COMMON)
+def test_depthwise_rectangular(h, w_, seed):
+    x = _rand(seed, h, w_, 8)
+    w = _rand(seed + 1, 3, 3, 8)
+    np.testing.assert_allclose(
+        depthwise3x3_pallas(x, w, stride=1),
+        ref.depthwise3x3_ref(x, w, 1),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_depthwise_identity_filter():
+    """A filter with 1 at the center is the identity under SAME padding."""
+    x = _rand(11, 8, 8, 4)
+    w = jnp.zeros((3, 3, 4), jnp.float32).at[1, 1, :].set(1.0)
+    np.testing.assert_allclose(depthwise3x3_pallas(x, w, stride=1), x, rtol=1e-6, atol=1e-6)
+
+
+def test_depthwise_stride2_shape():
+    x = _rand(12, 16, 16, 8)
+    w = _rand(13, 3, 3, 8)
+    assert depthwise3x3_pallas(x, w, stride=2).shape == (8, 8, 8)
+
+
+def test_depthwise_channel_block_invariance():
+    x = _rand(14, 8, 8, 32)
+    w = _rand(15, 3, 3, 32)
+    a = depthwise3x3_pallas(x, w, stride=1, bc=8)
+    b = depthwise3x3_pallas(x, w, stride=1, bc=32)
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_depthwise_rejects_bad_filter():
+    x = _rand(16, 8, 8, 4)
+    w = _rand(17, 3, 3, 5)
+    with pytest.raises(AssertionError):
+        depthwise3x3_pallas(x, w)

@@ -1,0 +1,176 @@
+"""L2 correctness: MobileNet family + DQN graphs, pallas path vs ref path,
+param packing, quantization metadata, train-step behaviour."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+ALPHAS = [1.0, 0.75, 0.5, 0.25]
+
+
+# ---------------------------------------------------------------------------
+# layouts / packing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alpha", ALPHAS)
+def test_layout_total_matches_specs(alpha):
+    lay = M.mobilenet_layout(alpha)
+    assert lay.total == sum(s.size for s in lay.specs)
+    # offsets are contiguous and sorted
+    off = 0
+    for s in lay.specs:
+        assert s.offset == off
+        off += s.size
+
+
+def test_pack_unpack_roundtrip():
+    lay = M.dqn_layout(3)
+    rng = np.random.default_rng(0)
+    params = {s.name: rng.normal(size=s.shape).astype(np.float32) for s in lay.specs}
+    flat = lay.pack(params)
+    un = lay.unpack(jnp.asarray(flat))
+    for s in lay.specs:
+        np.testing.assert_array_equal(np.asarray(un[s.name]), params[s.name])
+
+
+def test_layout_json_schema():
+    for row in M.mobilenet_layout(0.5).to_json():
+        assert set(row) == {"name", "shape", "offset", "size"}
+        assert row["size"] == int(np.prod(row["shape"]))
+
+
+@given(alpha=st.sampled_from(ALPHAS))
+@settings(deadline=None, max_examples=4)
+def test_param_count_monotone_in_alpha(alpha):
+    if alpha == 1.0:
+        return
+    assert M.mobilenet_layout(alpha).total < M.mobilenet_layout(1.0).total
+
+
+def test_scaled_channels():
+    assert M.scaled_channels(32, 1.0) == 32
+    assert M.scaled_channels(32, 0.25) == 8
+    assert M.scaled_channels(1024, 0.75) == 768
+    assert M.scaled_channels(8, 0.25) == 8  # floor at 8
+
+
+# ---------------------------------------------------------------------------
+# MACs (relative ordering must match paper Table 4)
+# ---------------------------------------------------------------------------
+
+
+def test_macs_ordering_matches_table4():
+    macs = [M.mobilenet_macs(a) for a in ALPHAS]
+    assert macs == sorted(macs, reverse=True)
+    # ratio d0/d3 in the paper is 569/41 ~ 13.9; ours should be same order
+    assert 8.0 < macs[0] / macs[3] < 20.0
+
+
+# ---------------------------------------------------------------------------
+# forward numerics: pallas vs ref path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alpha", [0.25, 0.5])
+def test_mobilenet_pallas_matches_ref(alpha):
+    flat = jnp.asarray(M.init_mobilenet_params(alpha, 0))
+    img = jax.random.normal(jax.random.PRNGKey(1), (2, M.IMG_H, M.IMG_W, M.IMG_C))
+    a = M.mobilenet_forward(flat, img, alpha=alpha, use_pallas=True)
+    b = M.mobilenet_forward(flat, img, alpha=alpha, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=5e-3, atol=5e-3)
+
+
+def test_mobilenet_output_shape():
+    flat = jnp.asarray(M.init_mobilenet_params(0.25, 2))
+    img = jnp.zeros((3, M.IMG_H, M.IMG_W, M.IMG_C), jnp.float32)
+    out = M.mobilenet_forward(flat, img, alpha=0.25, use_pallas=False)
+    assert out.shape == (3, M.NUM_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_int8_sim_weights_differ_but_close():
+    w_fp = M.init_mobilenet_params(0.5, 3, int8_sim=False)
+    w_q = M.init_mobilenet_params(0.5, 3, int8_sim=True)
+    assert not np.array_equal(w_fp, w_q)
+    # int8 rounding error is small relative to weight scale
+    assert np.abs(w_fp - w_q).max() < np.abs(w_fp).max() * 0.02
+
+
+# ---------------------------------------------------------------------------
+# DQN
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [3, 4, 5])
+def test_dqn_forward_shape(n):
+    theta = jnp.asarray(M.init_dqn_params(n, 0))
+    s = jax.random.uniform(jax.random.PRNGKey(4), (5, M.dqn_state_dim(n)))
+    q = M.dqn_forward(theta, s, n_users=n, use_pallas=False)
+    assert q.shape == (5, n, M.ACTIONS_PER_DEVICE)
+
+
+def test_dqn_pallas_matches_ref():
+    n = 3
+    theta = jnp.asarray(M.init_dqn_params(n, 1))
+    s = jax.random.uniform(jax.random.PRNGKey(5), (7, M.dqn_state_dim(n)))
+    a = M.dqn_forward(theta, s, n_users=n, use_pallas=True)
+    b = M.dqn_forward(theta, s, n_users=n, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_dqn_train_step_reduces_loss(use_pallas):
+    """Repeated SGD steps on a fixed batch must shrink the TD loss."""
+    n = 3
+    d = M.dqn_state_dim(n)
+    rng = np.random.default_rng(6)
+    theta = jnp.asarray(M.init_dqn_params(n, 6))
+    s = jnp.asarray(rng.uniform(size=(64, d)).astype(np.float32))
+    s2 = jnp.asarray(rng.uniform(size=(64, d)).astype(np.float32))
+    a = np.zeros((64, n, M.ACTIONS_PER_DEVICE), np.float32)
+    for b in range(64):
+        for i in range(n):
+            a[b, i, rng.integers(0, M.ACTIONS_PER_DEVICE)] = 1.0
+    a = jnp.asarray(a)
+    r = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    lr = jnp.float32(1e-2)
+
+    step = jax.jit(
+        lambda th: M.dqn_train_step(
+            th, s, a, r, s2, lr, n_users=n, gamma=0.5, use_pallas=use_pallas
+        )
+    )
+    _, loss0 = step(theta)
+    for _ in range(25):
+        theta, loss = step(theta)
+    assert float(loss) < float(loss0)
+
+
+def test_dqn_train_step_pallas_matches_ref():
+    n = 3
+    d = M.dqn_state_dim(n)
+    rng = np.random.default_rng(7)
+    theta = jnp.asarray(M.init_dqn_params(n, 7))
+    s = jnp.asarray(rng.uniform(size=(64, d)).astype(np.float32))
+    s2 = jnp.asarray(rng.uniform(size=(64, d)).astype(np.float32))
+    a = np.zeros((64, n, M.ACTIONS_PER_DEVICE), np.float32)
+    a[:, :, 0] = 1.0
+    r = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    args = (s, jnp.asarray(a), r, s2, jnp.float32(1e-3))
+    t_p, l_p = M.dqn_train_step(theta, *args, n_users=n, gamma=0.5, use_pallas=True)
+    t_r, l_r = M.dqn_train_step(theta, *args, n_users=n, gamma=0.5, use_pallas=False)
+    np.testing.assert_allclose(t_p, t_r, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(l_p, l_r, rtol=1e-3, atol=1e-4)
+
+
+def test_dqn_state_dim_formula():
+    # Eq. 3: (P, M, B) per node over N end devices + edge + cloud.
+    assert M.dqn_state_dim(5) == 21
+    assert M.dqn_state_dim(3) == 15

@@ -1,0 +1,92 @@
+//! Agent-step latency benches (paper §6.2.2: QL logic 0.6 ms on the cloud
+//! CPU; DQL step 11 ms on an RTX 5000 — ours runs the DQL network through
+//! PJRT CPU). Also covers the brute-force oracle (the "impractical" search
+//! the paper motivates against) and the replay buffer.
+
+use eeco::agent::qlearning::QTableAgent;
+use eeco::agent::replay::{ReplayBuffer, Transition};
+use eeco::agent::{bruteforce, ActionSet, Agent};
+use eeco::prelude::*;
+use eeco::sim::Env;
+use eeco::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("agent");
+
+    // --- Q-Learning decide + learn (paper: 0.6 ms/step) ---
+    for users in [3usize, 5] {
+        let hyper = Hyper::paper_defaults(Algo::QLearning, users);
+        let mut agent = QTableAgent::new(users, hyper, ActionSet::full(), 1);
+        let mut env = Env::new(Scenario::exp_a(users), Calibration::default(), AccuracyConstraint::Max, 2);
+        // pre-train briefly so tables are warm
+        for _ in 0..1000 {
+            let s = env.encoded();
+            let d = agent.decide(&s, true);
+            let out = env.step(&d);
+            let s2 = env.encoded();
+            agent.learn(&s, &d, out.reward, &s2);
+        }
+        let s = env.encoded();
+        b.run(&format!("qlearning_decide_greedy_n{users}"), || agent.decide(&s, false));
+        let d = agent.decide(&s, false);
+        b.run(&format!("qlearning_full_step_n{users}"), || {
+            let s0 = env.encoded();
+            let out = env.step(&d);
+            let s1 = env.encoded();
+            agent.learn(&s0, &d, out.reward, &s1);
+        });
+    }
+
+    // --- DQN decide/train via PJRT (needs artifacts) ---
+    let art = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{art}/manifest.json")).exists() {
+        let rt = std::sync::Arc::new(eeco::runtime::SharedRuntime::load(art).unwrap());
+        for users in [3usize, 5] {
+            let hyper = Hyper::paper_defaults(Algo::Dqn, users);
+            let mut agent =
+                eeco::agent::dqn::DqnAgent::new(users, hyper, rt.clone(), 3).unwrap();
+            let mut env = Env::new(
+                Scenario::exp_a(users),
+                Calibration::default(),
+                AccuracyConstraint::Max,
+                4,
+            );
+            // warm the replay buffer past one minibatch
+            for _ in 0..80 {
+                let s = env.encoded();
+                let d = agent.decide(&s, true);
+                let out = env.step(&d);
+                let s2 = env.encoded();
+                agent.learn(&s, &d, out.reward, &s2);
+            }
+            let s = env.encoded();
+            b.run(&format!("dqn_decide_fwd_n{users}"), || agent.decide(&s, false));
+            let d = agent.decide(&s, false);
+            b.run(&format!("dqn_full_step_train_n{users}"), || {
+                let s0 = env.encoded();
+                let out = env.step(&d);
+                let s1 = env.encoded();
+                agent.learn(&s0, &d, out.reward, &s1);
+            });
+        }
+    } else {
+        println!("  (artifacts missing: DQN benches skipped)");
+    }
+
+    // --- brute-force oracle cost (Eq. 5/6 motivation) ---
+    for users in [3usize, 5] {
+        let env = Env::new(Scenario::exp_b(users), Calibration::default(), AccuracyConstraint::AtLeast(85.0), 5);
+        b.run(&format!("bruteforce_oracle_n{users}"), || {
+            bruteforce::optimal(&env, 85.0).unwrap().1
+        });
+    }
+
+    // --- replay buffer ops ---
+    let mut buf = ReplayBuffer::new(1000);
+    let t = Transition { state: vec![0.0; 21], actions: vec![0; 5], reward: -1.0, next_state: vec![0.0; 21] };
+    b.run("replay_push", || buf.push(t.clone()));
+    let mut rng = Rng::new(6);
+    b.run("replay_sample_64", || buf.sample(64, &mut rng).len());
+
+    b.save();
+}

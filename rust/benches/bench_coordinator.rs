@@ -1,0 +1,52 @@
+//! Coordinator hot-path benches: router, batcher, state encoding, message
+//! cost lookups — the L3 pieces that must never dominate a ~ms decision
+//! loop (paper overhead analysis §6.2.2).
+
+use eeco::coordinator::{Batcher, Router};
+use eeco::monitor::{self, NodeState, SystemState};
+use eeco::network::Network;
+use eeco::prelude::*;
+use eeco::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("coordinator");
+
+    let users = 5;
+    let decision = Decision(
+        (0..users).map(|i| Action::from_index((i * 5) % ACTIONS_PER_DEVICE)).collect(),
+    );
+    let router = Router::new(decision.clone());
+    b.run("router_route_single", || router.route(7, 3));
+    let reqs: Vec<eeco::sim::Request> = (0..users)
+        .map(|d| eeco::sim::Request { id: d as u64, device: d, arrival_ms: 0.0 })
+        .collect();
+    b.run("router_route_round_n5", || router.route_round(&reqs));
+
+    let mut batcher = Batcher::new(8, 4.0);
+    let mut i = 0u64;
+    b.run("batcher_push_poll", || {
+        i += 1;
+        let _ = batcher.push(ModelId((i % 8) as u8), i, i as f64);
+        batcher.poll(i as f64).len()
+    });
+
+    let sys = SystemState {
+        edge: NodeState { cpu: 0.4, mem: 0.2, cond: NetCond::Regular },
+        cloud: NodeState { cpu: 0.1, mem: 0.1, cond: NetCond::Regular },
+        devices: vec![NodeState::idle(NetCond::Weak); users],
+    };
+    b.run("state_encode_n5", || monitor::encode(&sys));
+
+    let net = Network::new(Scenario::exp_b(users), Calibration::default());
+    b.run("network_path_overhead", || {
+        let mut acc = 0.0;
+        for d in 0..users {
+            for t in Tier::ALL {
+                acc += net.path_overhead_ms(d, t);
+            }
+        }
+        acc
+    });
+
+    b.save();
+}

@@ -1,0 +1,61 @@
+//! PJRT inference latency per model/batch — the measured-mode compute
+//! substrate behind Tables 8/9 and the calibration of ms/MMAC. Requires
+//! `make artifacts`.
+
+use eeco::prelude::*;
+use eeco::sim::workload::synth_image;
+use eeco::util::bench::Bench;
+
+fn main() {
+    let art = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(&format!("{art}/manifest.json")).exists() {
+        println!("artifacts missing: run `make artifacts` first");
+        return;
+    }
+    let rt = eeco::runtime::shared(art);
+    let (h, w, c) = rt.manifest.img;
+    let mut b = Bench::new("inference");
+
+    // batch-1 latency across the full catalog (d0..d7): latency should
+    // track MACs (d0 > d1 > d2 > d3) with d4..d7 matching their fp32 twins
+    // (the int8 speedup is modeled in sim; see DESIGN.md substitution 3).
+    let img = synth_image(0, h, w, c);
+    for m in ModelId::all() {
+        rt.infer(m, &img, 1).unwrap(); // compile + warm
+        b.run(&format!("mobilenet_{m}_b1"), || rt.infer(m, &img, 1).unwrap());
+    }
+
+    // batching efficiency: per-image cost at batch 8 vs 1 (dynamic batcher
+    // motivation).
+    let imgs8: Vec<f32> = (0..8).flat_map(|i| synth_image(i, h, w, c)).collect();
+    for m in [ModelId(0), ModelId(3)] {
+        rt.infer(m, &imgs8, 8).unwrap();
+        b.run(&format!("mobilenet_{m}_b8"), || rt.infer(m, &imgs8, 8).unwrap());
+    }
+
+    // DQN graphs
+    for users in [3usize, 5] {
+        let theta = rt.dqn_init(users).unwrap();
+        let d = rt.manifest.dqn_for(users).unwrap().clone();
+        let state = vec![0.5f32; d.state_dim];
+        rt.dqn_forward(users, &theta, &state).unwrap();
+        b.run(&format!("dqn_forward_n{users}"), || {
+            rt.dqn_forward(users, &theta, &state).unwrap()
+        });
+        let bsz = d.train_batch;
+        let s = vec![0.5f32; bsz * d.state_dim];
+        let mut a = vec![0f32; bsz * users * d.actions_per_device];
+        for bi in 0..bsz {
+            for dev in 0..users {
+                a[bi * users * d.actions_per_device + dev * d.actions_per_device] = 1.0;
+            }
+        }
+        let r = vec![-0.5f32; bsz];
+        rt.dqn_train(users, &theta, &s, &a, &r, &s, 1e-3).unwrap();
+        b.run(&format!("dqn_train_step_n{users}"), || {
+            rt.dqn_train(users, &theta, &s, &a, &r, &s, 1e-3).unwrap().1
+        });
+    }
+
+    b.save();
+}

@@ -1,0 +1,57 @@
+//! Simulator throughput benches: the synchronous-round environment is the
+//! RL training substrate — Table 11's 10^5-10^6 step budgets are only
+//! practical if env.step() stays in the microsecond range.
+
+use eeco::agent::Agent;
+use eeco::prelude::*;
+use eeco::sim::{Env, ResponseModel};
+use eeco::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("simulator");
+
+    for users in [1usize, 3, 5] {
+        let mut env = Env::new(
+            Scenario::exp_b(users),
+            Calibration::default(),
+            AccuracyConstraint::AtLeast(85.0),
+            1,
+        );
+        let d = Decision(
+            (0..users).map(|i| Action::from_index((i * 7) % ACTIONS_PER_DEVICE)).collect(),
+        );
+        b.run(&format!("env_step_n{users}"), || env.step(&d).avg_ms);
+        b.run(&format!("expected_avg_n{users}"), || env.expected_avg_ms(&d));
+    }
+
+    // response model microkernel
+    let net = eeco::network::Network::new(Scenario::exp_a(5), Calibration::default());
+    let rm = ResponseModel::new(net);
+    let sys = eeco::monitor::SystemState {
+        edge: eeco::monitor::NodeState::idle(NetCond::Regular),
+        cloud: eeco::monitor::NodeState::idle(NetCond::Regular),
+        devices: vec![eeco::monitor::NodeState::idle(NetCond::Regular); 5],
+    };
+    let counts = [2usize, 2, 1];
+    b.run("device_response_ms", || {
+        rm.device_response_ms(0, ModelId(4), Tier::Edge, &counts, &sys)
+    });
+
+    // full training loop throughput (the Fig 6 inner loop)
+    let mut env = Env::new(Scenario::exp_a(3), Calibration::default(), AccuracyConstraint::Max, 2);
+    let mut agent = eeco::agent::qlearning::QTableAgent::new(
+        3,
+        Hyper::paper_defaults(Algo::QLearning, 3),
+        eeco::agent::ActionSet::full(),
+        3,
+    );
+    b.run("train_round_ql_n3", || {
+        let s = env.encoded();
+        let d = agent.decide(&s, true);
+        let out = env.step(&d);
+        let s2 = env.encoded();
+        agent.learn(&s, &d, out.reward, &s2);
+    });
+
+    b.save();
+}

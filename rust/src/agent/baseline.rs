@@ -1,0 +1,101 @@
+//! Baseline strategies from the paper's evaluation (§6.1):
+//!
+//! - fixed orchestration: every device executes the most accurate model
+//!   (d0) at a fixed tier — "device only", "edge only", "cloud only";
+//! - the state-of-the-art [36] baseline: Q-learning restricted to
+//!   computation-offloading actions with the model pinned to d0
+//!   (Table 1's "CO"-only action space).
+
+use crate::config::Hyper;
+use crate::monitor::EncodedState;
+use crate::types::{Action, Decision, ModelId, Tier};
+
+use super::qlearning::QTableAgent;
+use super::{ActionSet, Agent};
+
+/// Fixed strategy: all devices at `tier` with d0.
+pub struct FixedAgent {
+    pub tier: Tier,
+    users: usize,
+    steps: usize,
+}
+
+impl FixedAgent {
+    pub fn new(tier: Tier, users: usize) -> FixedAgent {
+        FixedAgent { tier, users, steps: 0 }
+    }
+
+    pub fn all(users: usize) -> Vec<FixedAgent> {
+        Tier::ALL.iter().map(|&t| FixedAgent::new(t, users)).collect()
+    }
+}
+
+impl Agent for FixedAgent {
+    fn decide(&mut self, _state: &EncodedState, _explore: bool) -> Decision {
+        Decision::uniform(self.users, Action { tier: self.tier, model: ModelId(0) })
+    }
+
+    fn learn(&mut self, _s: &EncodedState, _d: &Decision, _r: f64, _n: &EncodedState) {
+        self.steps += 1; // fixed strategies don't learn, but count rounds
+    }
+
+    fn name(&self) -> String {
+        match self.tier {
+            Tier::Local => "Device only".into(),
+            Tier::Edge => "Edge only".into(),
+            Tier::Cloud => "Cloud only".into(),
+        }
+    }
+
+    fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
+/// SOTA [36]: offload-only Q-learner (3 actions/device, d0 pinned).
+pub fn sota_agent(users: usize, hyper: Hyper, seed: u64) -> QTableAgent {
+    QTableAgent::new(users, hyper, ActionSet::offload_only_d0(), seed).with_name("SOTA [36]")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+
+    fn st() -> EncodedState {
+        EncodedState { key: 0, vec: vec![0.0; 12] }
+    }
+
+    #[test]
+    fn fixed_agents_never_deviate() {
+        for mut a in FixedAgent::all(4) {
+            let tier = a.tier;
+            for _ in 0..5 {
+                let d = a.decide(&st(), true);
+                assert_eq!(d.n_users(), 4);
+                assert!(d.0.iter().all(|x| x.tier == tier && x.model.0 == 0));
+                a.learn(&st(), &d, -1.0, &st());
+            }
+            assert_eq!(a.steps(), 5);
+        }
+    }
+
+    #[test]
+    fn fixed_accuracy_is_max() {
+        let top5 = crate::models::top5_table();
+        let mut a = FixedAgent::new(Tier::Edge, 3);
+        let d = a.decide(&st(), false);
+        assert!((d.avg_accuracy(&top5) - crate::models::MAX_ACCURACY).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sota_only_offloads_d0() {
+        let mut a = sota_agent(3, Hyper::paper_defaults(Algo::QLearning, 3), 1);
+        assert_eq!(a.name(), "SOTA [36]");
+        for _ in 0..50 {
+            let d = a.decide(&st(), true);
+            assert!(d.0.iter().all(|x| x.model.0 == 0));
+            a.learn(&st(), &d, -100.0, &st());
+        }
+    }
+}

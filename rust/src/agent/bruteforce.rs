@@ -1,0 +1,233 @@
+//! Brute-force optimal-decision oracle (paper §6.1: the "true optimal
+//! configuration" the RL agents are scored against; complexity Eq. 5/6).
+//!
+//! Naively the joint space is 24^N (~8M for N = 5). We enumerate exactly
+//! but efficiently: the response model couples devices only through tier
+//! counts, so we sweep the 3^N tier assignments and, within each, pick
+//! per-device models with a DP over the accuracy budget (top-5 values in
+//! integer tenths). This is exact and runs in milliseconds, which lets the
+//! prediction-accuracy experiment compare every agent decision against the
+//! optimum. A literal 24^N enumerator is kept for cross-validation at
+//! small N.
+
+use crate::models;
+use crate::sim::Env;
+use crate::types::{Action, Decision, ModelId, Tier, NUM_MODELS};
+
+/// Exact optimum: minimal expected average response time subject to the
+/// strict average-accuracy constraint. Returns None only if the constraint
+/// is unsatisfiable (threshold above all-d0).
+pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
+    let n = env.users();
+    let acc10: Vec<usize> =
+        models::CATALOG.iter().map(|m| (m.top5 * 10.0).round() as usize).collect();
+    // smallest integer accuracy-sum (in tenths) that satisfies
+    // sum/10/N > threshold  <=>  sum > N*threshold*10
+    let req = n as f64 * threshold * 10.0;
+    let a_need = ((req + 1e-9).floor() as usize + 1).min(acc10[0] * n);
+    if (acc10[0] * n) as f64 <= req {
+        return None; // not satisfiable even with all-d0
+    }
+
+    let mut best: Option<(Decision, f64)> = None;
+    let assignments = 3usize.pow(n as u32);
+    let mut tiers = vec![Tier::Local; n];
+    for mut code in 0..assignments {
+        let mut c = code;
+        for t in tiers.iter_mut() {
+            *t = Tier::from_index(c % 3);
+            c /= 3;
+        }
+        code = 0;
+        let _ = code;
+        let counts = {
+            let mut k = [0usize; 3];
+            for &t in &tiers {
+                k[t.index()] += 1;
+            }
+            k
+        };
+        // Per-device, per-model expected response under this assignment.
+        let mut cost = vec![[0.0f64; NUM_MODELS]; n];
+        for (i, &tier) in tiers.iter().enumerate() {
+            for m in 0..NUM_MODELS {
+                cost[i][m] = env.model.device_response_ms(
+                    i,
+                    ModelId(m as u8),
+                    tier,
+                    &counts,
+                    &env.state,
+                );
+            }
+        }
+        // DP over devices with capped accuracy sum.
+        const INF: f64 = f64::INFINITY;
+        let mut dp = vec![INF; a_need + 1];
+        let mut parent: Vec<Vec<(usize, usize)>> = vec![vec![(0, 0); a_need + 1]; n];
+        dp[0] = 0.0;
+        for i in 0..n {
+            let mut next = vec![INF; a_need + 1];
+            for a in 0..=a_need {
+                if dp[a] == INF {
+                    continue;
+                }
+                for m in 0..NUM_MODELS {
+                    let a2 = (a + acc10[m]).min(a_need);
+                    let c2 = dp[a] + cost[i][m];
+                    if c2 < next[a2] {
+                        next[a2] = c2;
+                        parent[i][a2] = (a, m);
+                    }
+                }
+            }
+            dp = next;
+        }
+        if dp[a_need] == INF {
+            continue;
+        }
+        let total = dp[a_need] / n as f64;
+        if best.as_ref().map(|(_, b)| total < *b).unwrap_or(true) {
+            // Reconstruct model choices.
+            let mut ms = vec![0usize; n];
+            let mut a = a_need;
+            for i in (0..n).rev() {
+                let (pa, m) = parent[i][a];
+                ms[i] = m;
+                a = pa;
+            }
+            let decision = Decision(
+                tiers
+                    .iter()
+                    .zip(&ms)
+                    .map(|(&tier, &m)| Action { tier, model: ModelId(m as u8) })
+                    .collect(),
+            );
+            best = Some((decision, total));
+        }
+    }
+    best
+}
+
+/// Literal 24^N enumeration (cross-validation; N <= 3 in tests).
+pub fn optimal_naive(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
+    let n = env.users();
+    let total = crate::types::ACTIONS_PER_DEVICE.pow(n as u32);
+    let top5 = models::top5_table();
+    let mut best: Option<(Decision, f64)> = None;
+    for joint in 0..total {
+        let mut c = joint;
+        let actions: Vec<Action> = (0..n)
+            .map(|_| {
+                let a = Action::from_index(c % crate::types::ACTIONS_PER_DEVICE);
+                c /= crate::types::ACTIONS_PER_DEVICE;
+                a
+            })
+            .collect();
+        let d = Decision(actions);
+        if d.avg_accuracy(&top5) <= threshold {
+            continue;
+        }
+        let avg = env.expected_avg_ms(&d);
+        if best.as_ref().map(|(_, b)| avg < *b).unwrap_or(true) {
+            best = Some((d, avg));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Calibration, Scenario};
+    use crate::types::AccuracyConstraint;
+
+    fn env(name: &str, users: usize, c: AccuracyConstraint) -> Env {
+        Env::new(Scenario::by_name(name, users).unwrap(), Calibration::default(), c, 1)
+    }
+
+    #[test]
+    fn dp_matches_naive_small() {
+        for scenario in ["exp-a", "exp-b", "exp-d"] {
+            for users in [1usize, 2] {
+                for c in [
+                    AccuracyConstraint::Min,
+                    AccuracyConstraint::AtLeast(85.0),
+                    AccuracyConstraint::Max,
+                ] {
+                    let e = env(scenario, users, c);
+                    let a = optimal(&e, c.threshold()).unwrap();
+                    let b = optimal_naive(&e, c.threshold()).unwrap();
+                    assert!(
+                        (a.1 - b.1).abs() < 1e-9,
+                        "{scenario}/{users}/{c:?}: dp={} naive={}",
+                        a.1,
+                        b.1
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unconstrained_picks_smallest_model() {
+        let e = env("exp-a", 1, AccuracyConstraint::Min);
+        let (d, _) = optimal(&e, 0.0).unwrap();
+        // d7 (int8 0.25x) is strictly fastest everywhere
+        assert_eq!(d.0[0].model, ModelId(7));
+    }
+
+    #[test]
+    fn max_constraint_forces_d0() {
+        let e = env("exp-a", 3, AccuracyConstraint::Max);
+        let (d, _) = optimal(&e, AccuracyConstraint::Max.threshold()).unwrap();
+        assert!(d.0.iter().all(|a| a.model.0 == 0));
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let e = env("exp-a", 2, AccuracyConstraint::Min);
+        assert!(optimal(&e, 95.0).is_none());
+    }
+
+    #[test]
+    fn weak_network_prefers_local_single_user() {
+        let e = env("exp-d", 1, AccuracyConstraint::Max);
+        let (d, _) = optimal(&e, AccuracyConstraint::Max.threshold()).unwrap();
+        assert_eq!(d.0[0].tier, Tier::Local); // Table 8 EXP-D, 1 user: {d0, L}
+    }
+
+    #[test]
+    fn regular_network_offloads_single_user() {
+        let e = env("exp-a", 1, AccuracyConstraint::Max);
+        let (d, _) = optimal(&e, AccuracyConstraint::Max.threshold()).unwrap();
+        assert_eq!(d.0[0].tier, Tier::Cloud); // Table 8 EXP-A, 1 user: {d0, C}
+    }
+
+    #[test]
+    fn five_users_spread_across_tiers_at_max() {
+        let e = env("exp-a", 5, AccuracyConstraint::Max);
+        let (d, avg) = optimal(&e, AccuracyConstraint::Max.threshold()).unwrap();
+        let counts = crate::sim::ResponseModel::tier_counts(&d);
+        // paper Table 8 EXP-A, 5 users: 3 local, 1 edge, 1 cloud @ ~419 ms
+        assert!(counts[0] >= 2, "locals={}", counts[0]);
+        assert!(counts[1] >= 1 && counts[2] >= 1, "counts={counts:?}");
+        assert!((avg - 418.91).abs() < 60.0, "avg={avg}");
+    }
+
+    #[test]
+    fn relaxing_constraint_never_hurts() {
+        let e = env("exp-b", 4, AccuracyConstraint::Min);
+        let mut prev = f64::INFINITY;
+        for c in [
+            AccuracyConstraint::Max,
+            AccuracyConstraint::AtLeast(89.0),
+            AccuracyConstraint::AtLeast(85.0),
+            AccuracyConstraint::AtLeast(80.0),
+            AccuracyConstraint::Min,
+        ] {
+            let (_, avg) = optimal(&e, c.threshold()).unwrap();
+            assert!(avg <= prev + 1e-9, "constraint {c:?} worsened: {avg} > {prev}");
+            prev = avg;
+        }
+    }
+}

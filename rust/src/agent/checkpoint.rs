@@ -1,0 +1,196 @@
+//! Policy checkpointing: persist trained agents to disk and restore them.
+//!
+//! - Q-tables serialize to a compact little-endian binary format
+//!   (`.qtab`): header (magic, users, action-set width, row count) then
+//!   `(state key, f64 row)` records.
+//! - DQN parameters reuse the flat-f32 `.bin` convention shared with the
+//!   AOT pipeline (`runtime::tensor`).
+//!
+//! Used by `eeco train --save/--load` and the transfer-learning flow
+//! (train the Min-threshold donor once, warm-start every stricter run).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::agent::dqn::DqnAgent;
+use crate::agent::qlearning::QTableAgent;
+use crate::runtime::tensor;
+
+const MAGIC: &[u8; 8] = b"EECOQTB1";
+
+/// Serialize a Q-table agent's value function.
+pub fn save_qtable(agent: &QTableAgent, path: &str) -> Result<()> {
+    let table = agent.export_table();
+    let width = agent.users * agent.actions.len();
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(agent.users as u32).to_le_bytes())?;
+    f.write_all(&(agent.actions.len() as u32).to_le_bytes())?;
+    f.write_all(&(table.len() as u64).to_le_bytes())?;
+    // BTreeMap ordering for deterministic files
+    let mut keys: Vec<u64> = table.keys().copied().collect();
+    keys.sort_unstable();
+    for k in keys {
+        f.write_all(&k.to_le_bytes())?;
+        let row = &table[&k];
+        debug_assert_eq!(row.len(), width);
+        for v in row {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+/// Restore a Q-table into a fresh agent (must match users/action-set).
+pub fn load_qtable(agent: &mut QTableAgent, path: &str) -> Result<()> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {path}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path}: not an EECO Q-table checkpoint");
+    }
+    let mut u32buf = [0u8; 4];
+    f.read_exact(&mut u32buf)?;
+    let users = u32::from_le_bytes(u32buf) as usize;
+    f.read_exact(&mut u32buf)?;
+    let actions = u32::from_le_bytes(u32buf) as usize;
+    if users != agent.users || actions != agent.actions.len() {
+        bail!(
+            "{path}: checkpoint is for {users} users x {actions} actions, \
+             agent has {} x {}",
+            agent.users,
+            agent.actions.len()
+        );
+    }
+    let mut u64buf = [0u8; 8];
+    f.read_exact(&mut u64buf)?;
+    let rows = u64::from_le_bytes(u64buf) as usize;
+    let width = users * actions;
+    let mut table = HashMap::with_capacity(rows);
+    for _ in 0..rows {
+        f.read_exact(&mut u64buf)?;
+        let key = u64::from_le_bytes(u64buf);
+        let mut row = Vec::with_capacity(width);
+        for _ in 0..width {
+            f.read_exact(&mut u64buf)?;
+            row.push(f64::from_le_bytes(u64buf));
+        }
+        table.insert(key, row);
+    }
+    agent.import_table(table);
+    Ok(())
+}
+
+/// Persist DQN parameters (flat f32, same format as dqn_init_n*.bin).
+pub fn save_dqn(agent: &DqnAgent, path: &str) -> Result<()> {
+    tensor::write_f32_bin(path, &agent.export_params())
+}
+
+/// Restore DQN parameters into a compatible agent.
+pub fn load_dqn(agent: &mut DqnAgent, path: &str) -> Result<()> {
+    let params = tensor::read_f32_bin(path)?;
+    if params.len() != agent.params.len() {
+        bail!(
+            "{path}: {} params, agent expects {}",
+            params.len(),
+            agent.params.len()
+        );
+    }
+    agent.import_params(params);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::{ActionSet, Agent};
+    use crate::config::{Algo, Hyper};
+    use crate::monitor::EncodedState;
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir().join(name).to_str().unwrap().to_string()
+    }
+
+    fn trained_agent(seed: u64) -> QTableAgent {
+        let mut a = QTableAgent::new(
+            2,
+            Hyper::paper_defaults(Algo::QLearning, 2),
+            ActionSet::full(),
+            seed,
+        );
+        for key in 0..5u64 {
+            let s = EncodedState { key, vec: vec![0.0; 12] };
+            for _ in 0..50 {
+                let d = a.decide(&s, true);
+                let r = -(10.0 + (d.0[0].index() * 7 + d.0[1].index()) as f64);
+                a.learn(&s, &d, r, &s);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn qtable_roundtrip_preserves_policy() {
+        let a = trained_agent(1);
+        let path = tmp("eeco_ckpt_roundtrip.qtab");
+        save_qtable(&a, &path).unwrap();
+        let mut b = QTableAgent::new(
+            2,
+            Hyper::paper_defaults(Algo::QLearning, 2),
+            ActionSet::full(),
+            99,
+        );
+        load_qtable(&mut b, &path).unwrap();
+        assert_eq!(a.export_table(), b.export_table());
+        let mut a = a;
+        for key in 0..5u64 {
+            let s = EncodedState { key, vec: vec![0.0; 12] };
+            assert_eq!(a.decide(&s, false), b.decide(&s, false));
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn qtable_rejects_mismatched_shape() {
+        let a = trained_agent(2);
+        let path = tmp("eeco_ckpt_mismatch.qtab");
+        save_qtable(&a, &path).unwrap();
+        let mut wrong_users = QTableAgent::new(
+            3,
+            Hyper::paper_defaults(Algo::QLearning, 3),
+            ActionSet::full(),
+            0,
+        );
+        assert!(load_qtable(&mut wrong_users, &path).is_err());
+        let mut wrong_actions = QTableAgent::new(
+            2,
+            Hyper::paper_defaults(Algo::QLearning, 2),
+            ActionSet::offload_only_d0(),
+            0,
+        );
+        assert!(load_qtable(&mut wrong_actions, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn qtable_rejects_garbage_file() {
+        let path = tmp("eeco_ckpt_garbage.qtab");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        let mut a = trained_agent(3);
+        assert!(load_qtable(&mut a, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checkpoint_files_are_deterministic() {
+        let a = trained_agent(4);
+        let (p1, p2) = (tmp("eeco_ckpt_d1.qtab"), tmp("eeco_ckpt_d2.qtab"));
+        save_qtable(&a, &p1).unwrap();
+        save_qtable(&a, &p2).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+}

@@ -1,0 +1,107 @@
+//! RL agents and baselines (paper §4.2, §6):
+//!
+//! - [`qlearning::QTableAgent`] — epsilon-greedy tabular Q-Learning
+//!   (Alg. 1) with the factored joint action space (DESIGN.md §3), plus an
+//!   exact joint-table variant for small N used to validate the
+//!   factorization.
+//! - [`dqn::DqnAgent`] — Deep Q-Learning with experience replay (Alg. 2);
+//!   the network forward/train-step run through the AOT PJRT artifacts
+//!   (L2 JAX graphs calling the L1 Pallas linear kernel).
+//! - [`baseline`] — fixed strategies (device/edge/cloud-only) and the
+//!   SOTA [36] offload-only Q-learner with the model pinned to d0.
+//! - [`bruteforce`] — the exact optimal-decision oracle (Eq. 5/6 space).
+//! - [`transfer`] — transfer-learning warm start (Fig. 7).
+
+pub mod baseline;
+pub mod checkpoint;
+pub mod bruteforce;
+pub mod dqn;
+pub mod qlearning;
+pub mod replay;
+pub mod transfer;
+
+use crate::monitor::EncodedState;
+use crate::types::Decision;
+
+/// A decision-making policy over the synchronous-round environment.
+pub trait Agent {
+    /// Pick a joint decision for the current state. `explore=false`
+    /// disables epsilon-greedy randomness (pure exploitation, used for
+    /// evaluation after training).
+    fn decide(&mut self, state: &EncodedState, explore: bool) -> Decision;
+
+    /// Observe a transition (Alg. 1 lines 9-13 / Alg. 2 lines 10-14).
+    fn learn(
+        &mut self,
+        state: &EncodedState,
+        decision: &Decision,
+        reward: f64,
+        next_state: &EncodedState,
+    );
+
+    fn name(&self) -> String;
+
+    /// Number of learn() calls so far (training-step counter for the
+    /// convergence analyses of Fig 6/7, Table 11).
+    fn steps(&self) -> usize;
+}
+
+/// Restriction of the per-device action set (the SOTA baseline only
+/// offloads; fixed strategies use a single action).
+#[derive(Debug, Clone)]
+pub struct ActionSet {
+    /// Allowed per-device action indices (subset of 0..24).
+    pub allowed: Vec<usize>,
+}
+
+impl ActionSet {
+    pub fn full() -> ActionSet {
+        ActionSet { allowed: (0..crate::types::ACTIONS_PER_DEVICE).collect() }
+    }
+
+    /// Offloading-only with the most accurate model (SOTA [36]): the three
+    /// placements of d0.
+    pub fn offload_only_d0() -> ActionSet {
+        use crate::types::{Action, ModelId, Tier};
+        ActionSet {
+            allowed: Tier::ALL
+                .iter()
+                .map(|&t| Action { tier: t, model: ModelId(0) }.index())
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.allowed.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.allowed.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Action, Tier};
+
+    #[test]
+    fn full_set_covers_all() {
+        let s = ActionSet::full();
+        assert_eq!(s.len(), 24);
+    }
+
+    #[test]
+    fn sota_set_is_three_d0_placements() {
+        let s = ActionSet::offload_only_d0();
+        assert_eq!(s.len(), 3);
+        for &i in &s.allowed {
+            let a = Action::from_index(i);
+            assert_eq!(a.model.0, 0);
+        }
+        let tiers: Vec<Tier> = s.allowed.iter().map(|&i| Action::from_index(i).tier).collect();
+        assert!(tiers.contains(&Tier::Local));
+        assert!(tiers.contains(&Tier::Edge));
+        assert!(tiers.contains(&Tier::Cloud));
+    }
+}

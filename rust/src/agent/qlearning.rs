@@ -1,0 +1,369 @@
+//! Epsilon-greedy tabular Q-Learning (paper Algorithm 1).
+//!
+//! Two variants:
+//!
+//! - [`QTableAgent`] — the production learner. The joint action value is
+//!   factored as Q(s, a) = sum_i Q_i(s, a_i) (per-device tables sharing the
+//!   global state), so greedy argmax decomposes per device and stays O(N*24)
+//!   even for the 24^5-action joint space. DESIGN.md §3 documents this
+//!   deviation; `property_agents.rs` verifies it reaches the exact joint
+//!   optimum on small instances.
+//! - [`ExactJointAgent`] — a literal joint-action Q-table, tractable for
+//!   N <= 2 (24^2 columns); the validation reference.
+//!
+//! Tables are sparse (HashMap keyed by the Table 3 state key) — the paper's
+//! "rows grow with users" problem is exactly why it moves to DQN at N >= 3.
+
+use std::collections::HashMap;
+
+use crate::config::Hyper;
+use crate::monitor::EncodedState;
+use crate::types::{Action, Decision, ACTIONS_PER_DEVICE};
+use crate::util::rng::Rng;
+
+use super::{ActionSet, Agent};
+
+/// Factored tabular Q-learning agent.
+pub struct QTableAgent {
+    pub users: usize,
+    pub hyper: Hyper,
+    pub actions: ActionSet,
+    /// state key -> per-device Q rows, each `allowed.len()` wide.
+    table: HashMap<u64, Vec<f64>>,
+    /// per-entry visit counts: the effective learning rate decays as
+    /// lr / (1 + 0.05 * visits) (Robbins-Monro), which filters the
+    /// cross-device reward noise the shared (joint) reward injects into
+    /// the factored tables while starting at the paper's alpha = 0.9.
+    visits: HashMap<u64, Vec<u32>>,
+    steps: usize,
+    rng: Rng,
+    name: String,
+}
+
+impl QTableAgent {
+    pub fn new(users: usize, hyper: Hyper, actions: ActionSet, seed: u64) -> QTableAgent {
+        assert!(users > 0 && !actions.is_empty());
+        QTableAgent {
+            users,
+            hyper,
+            actions,
+            table: HashMap::new(),
+            visits: HashMap::new(),
+            steps: 0,
+            rng: Rng::new(seed),
+            name: "Q-Learning".into(),
+        }
+    }
+
+    pub fn with_name(mut self, name: &str) -> QTableAgent {
+        self.name = name.into();
+        self
+    }
+
+    pub fn epsilon(&self) -> f64 {
+        self.hyper.epsilon_at(self.steps)
+    }
+
+    /// Rows for a state (allocated zero-initialized on first touch).
+    fn rows(&mut self, key: u64) -> &mut Vec<f64> {
+        let width = self.users * self.actions.len();
+        self.table.entry(key).or_insert_with(|| vec![0.0; width])
+    }
+
+    fn q(&mut self, key: u64, device: usize, slot: usize) -> f64 {
+        let w = self.actions.len();
+        self.rows(key)[device * w + slot]
+    }
+
+    /// Greedy per-device slot (ties broken towards the lowest index so
+    /// evaluation is deterministic).
+    fn greedy_slot(&mut self, key: u64, device: usize) -> usize {
+        let w = self.actions.len();
+        let rows = self.rows(key);
+        let row = &rows[device * w..(device + 1) * w];
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Number of distinct states visited (table rows — the memory cost the
+    /// paper's §4.2.1 discusses).
+    pub fn states_visited(&self) -> usize {
+        self.table.len()
+    }
+
+    /// Export the raw table (transfer learning / checkpoints).
+    pub fn export_table(&self) -> HashMap<u64, Vec<f64>> {
+        self.table.clone()
+    }
+
+    pub fn import_table(&mut self, table: HashMap<u64, Vec<f64>>) {
+        let w = self.users * self.actions.len();
+        for v in table.values() {
+            assert_eq!(v.len(), w, "imported table width");
+        }
+        self.table = table;
+    }
+
+    fn slot_of(&self, action: Action) -> Option<usize> {
+        self.actions.allowed.iter().position(|&i| i == action.index())
+    }
+}
+
+impl Agent for QTableAgent {
+    fn decide(&mut self, state: &EncodedState, explore: bool) -> Decision {
+        // Per-device epsilon-greedy: each device explores independently,
+        // which gives the factored learner far better credit assignment
+        // than all-or-nothing joint randomization (the greedy argmax is
+        // still the joint maximizer of the factored Q).
+        let eps = self.epsilon();
+        let mut actions = Vec::with_capacity(self.users);
+        for device in 0..self.users {
+            let slot = if explore && self.rng.bool(eps) {
+                self.rng.below(self.actions.len())
+            } else {
+                self.greedy_slot(state.key, device)
+            };
+            actions.push(Action::from_index(self.actions.allowed[slot]));
+        }
+        Decision(actions)
+    }
+
+    fn learn(
+        &mut self,
+        state: &EncodedState,
+        decision: &Decision,
+        reward: f64,
+        next_state: &EncodedState,
+    ) {
+        assert_eq!(decision.n_users(), self.users);
+        let (lr, gamma) = (self.hyper.lr, self.hyper.gamma);
+        let w = self.actions.len();
+        for (device, &action) in decision.0.iter().enumerate() {
+            let Some(slot) = self.slot_of(action) else {
+                continue; // action outside this agent's set (e.g. replayed)
+            };
+            let next_best = self.greedy_slot(next_state.key, device);
+            let q_next = self.q(next_state.key, device, next_best);
+            let idx = device * w + slot;
+            let width = self.users * w;
+            let visits = self.visits.entry(state.key).or_insert_with(|| vec![0u32; width]);
+            visits[idx] += 1;
+            let lr_eff = lr / (1.0 + 0.05 * (visits[idx] - 1) as f64);
+            let q_old = self.rows(state.key)[idx];
+            // Alg. 1 line 13 with the shared (joint) reward.
+            self.rows(state.key)[idx] = q_old + lr_eff * (reward + gamma * q_next - q_old);
+        }
+        self.steps += 1;
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
+/// Exact joint-action Q-table (validation reference, N <= 2).
+pub struct ExactJointAgent {
+    pub users: usize,
+    pub hyper: Hyper,
+    joint_actions: usize,
+    table: HashMap<u64, Vec<f64>>,
+    steps: usize,
+    rng: Rng,
+}
+
+impl ExactJointAgent {
+    pub fn new(users: usize, hyper: Hyper, seed: u64) -> ExactJointAgent {
+        assert!(users <= 3, "joint table is exponential; use QTableAgent");
+        ExactJointAgent {
+            users,
+            hyper,
+            joint_actions: ACTIONS_PER_DEVICE.pow(users as u32),
+            table: HashMap::new(),
+            steps: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    fn decode(&self, mut joint: usize) -> Decision {
+        let mut actions = vec![Action::from_index(0); self.users];
+        for d in (0..self.users).rev() {
+            actions[d] = Action::from_index(joint % ACTIONS_PER_DEVICE);
+            joint /= ACTIONS_PER_DEVICE;
+        }
+        Decision(actions)
+    }
+
+    fn encode(&self, d: &Decision) -> usize {
+        d.0.iter().fold(0, |acc, a| acc * ACTIONS_PER_DEVICE + a.index())
+    }
+
+    fn row(&mut self, key: u64) -> &mut Vec<f64> {
+        let n = self.joint_actions;
+        self.table.entry(key).or_insert_with(|| vec![0.0; n])
+    }
+
+    fn greedy(&mut self, key: u64) -> usize {
+        let row = self.row(key);
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+impl Agent for ExactJointAgent {
+    fn decide(&mut self, state: &EncodedState, explore: bool) -> Decision {
+        let eps = self.hyper.epsilon_at(self.steps);
+        let joint = if explore && self.rng.bool(eps) {
+            self.rng.below(self.joint_actions)
+        } else {
+            self.greedy(state.key)
+        };
+        self.decode(joint)
+    }
+
+    fn learn(&mut self, state: &EncodedState, decision: &Decision, reward: f64, next: &EncodedState) {
+        let (lr, gamma) = (self.hyper.lr, self.hyper.gamma);
+        let gbest = self.greedy(next.key);
+        let q_next = self.row(next.key)[gbest];
+        let a = self.encode(decision);
+        let q_old = self.row(state.key)[a];
+        self.row(state.key)[a] = q_old + lr * (reward + gamma * q_next - q_old);
+        self.steps += 1;
+    }
+
+    fn name(&self) -> String {
+        "Q-Learning (exact joint)".into()
+    }
+
+    fn steps(&self) -> usize {
+        self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Algo;
+    use crate::monitor::EncodedState;
+
+    fn st(key: u64) -> EncodedState {
+        EncodedState { key, vec: vec![0.0; 9] }
+    }
+
+    fn hyper() -> Hyper {
+        Hyper::paper_defaults(Algo::QLearning, 1)
+    }
+
+    #[test]
+    fn greedy_learns_best_action_single_state() {
+        // Bandit-like: action index 5 always best.
+        let mut a = QTableAgent::new(1, hyper(), ActionSet::full(), 1);
+        let s = st(0);
+        for _ in 0..500 {
+            let d = a.decide(&s, true);
+            let r = if d.0[0].index() == 5 { -100.0 } else { -1000.0 };
+            a.learn(&s, &d, r, &s);
+        }
+        let d = a.decide(&s, false);
+        assert_eq!(d.0[0].index(), 5);
+    }
+
+    #[test]
+    fn per_state_differentiation() {
+        let mut a = QTableAgent::new(1, hyper(), ActionSet::full(), 2);
+        let (s0, s1) = (st(0), st(1));
+        for _ in 0..800 {
+            for (s, best) in [(&s0, 2usize), (&s1, 9usize)] {
+                let d = a.decide(s, true);
+                let r = if d.0[0].index() == best { -10.0 } else { -500.0 };
+                a.learn(s, &d, r, s);
+            }
+        }
+        assert_eq!(a.decide(&s0, false).0[0].index(), 2);
+        assert_eq!(a.decide(&s1, false).0[0].index(), 9);
+        assert_eq!(a.states_visited(), 2);
+    }
+
+    #[test]
+    fn restricted_action_set_respected() {
+        let mut a = QTableAgent::new(2, hyper(), ActionSet::offload_only_d0(), 3);
+        let s = st(7);
+        for _ in 0..100 {
+            let d = a.decide(&s, true);
+            for act in &d.0 {
+                assert_eq!(act.model.0, 0, "SOTA must stay on d0");
+            }
+            a.learn(&s, &d, -100.0, &s);
+        }
+    }
+
+    #[test]
+    fn epsilon_decays_with_steps() {
+        let mut a = QTableAgent::new(1, hyper(), ActionSet::full(), 4);
+        let e0 = a.epsilon();
+        let s = st(0);
+        for _ in 0..50 {
+            let d = a.decide(&s, true);
+            a.learn(&s, &d, -1.0, &s);
+        }
+        assert!(a.epsilon() < e0);
+        assert_eq!(a.steps(), 50);
+    }
+
+    #[test]
+    fn export_import_roundtrip() {
+        let mut a = QTableAgent::new(2, hyper(), ActionSet::full(), 5);
+        let s = st(3);
+        for _ in 0..20 {
+            let d = a.decide(&s, true);
+            a.learn(&s, &d, -50.0, &s);
+        }
+        let t = a.export_table();
+        let mut b = QTableAgent::new(2, hyper(), ActionSet::full(), 6);
+        b.import_table(t.clone());
+        assert_eq!(b.export_table(), t);
+        // warm-started agent decides identically in greedy mode
+        assert_eq!(a.decide(&s, false), b.decide(&s, false));
+    }
+
+    #[test]
+    fn exact_joint_agent_bandit() {
+        let mut a = ExactJointAgent::new(2, hyper(), 7);
+        let s = st(0);
+        // joint action (3, 17) is best
+        for _ in 0..4000 {
+            let d = a.decide(&s, true);
+            let r = if d.0[0].index() == 3 && d.0[1].index() == 17 { -10.0 } else { -500.0 };
+            a.learn(&s, &d, r, &s);
+        }
+        let d = a.decide(&s, false);
+        assert_eq!((d.0[0].index(), d.0[1].index()), (3, 17));
+    }
+
+    #[test]
+    fn qlearning_contraction_on_fixed_reward() {
+        // Updating a single (s, a) with constant reward r while the other
+        // actions stay at 0 makes max_a' Q(s, a') = 0, so Q(s, a) -> r.
+        let mut a = QTableAgent::new(1, hyper(), ActionSet::full(), 8);
+        let s = st(0);
+        let d = Decision(vec![Action::from_index(0)]);
+        for _ in 0..3000 {
+            a.learn(&s, &d, -100.0, &s);
+        }
+        let q = a.rows(0)[0];
+        assert!((q - -100.0).abs() < 1.0, "q={q}");
+    }
+}

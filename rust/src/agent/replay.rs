@@ -1,0 +1,111 @@
+//! Experience replay buffer (paper Alg. 2 / §5.4: FIFO of capacity 1000,
+//! minibatches of 64 sampled uniformly at random).
+
+use crate::util::rng::Rng;
+
+/// One transition record (S_t, A_t, R_t, S_{t+1}).
+#[derive(Debug, Clone)]
+pub struct Transition {
+    pub state: Vec<f32>,
+    /// Per-device chosen action indices (0..24).
+    pub actions: Vec<usize>,
+    pub reward: f64,
+    pub next_state: Vec<f32>,
+}
+
+/// Fixed-capacity FIFO ring with uniform sampling.
+pub struct ReplayBuffer {
+    buf: Vec<Transition>,
+    capacity: usize,
+    head: usize,
+    filled: bool,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize) -> ReplayBuffer {
+        assert!(capacity > 0);
+        ReplayBuffer { buf: Vec::with_capacity(capacity), capacity, head: 0, filled: false }
+    }
+
+    pub fn push(&mut self, t: Transition) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(t);
+        } else {
+            self.buf[self.head] = t;
+            self.filled = true;
+        }
+        self.head = (self.head + 1) % self.capacity;
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Uniform sample with replacement (indices into the live window).
+    pub fn sample<'a>(&'a self, n: usize, rng: &mut Rng) -> Vec<&'a Transition> {
+        assert!(!self.buf.is_empty(), "sampling empty replay buffer");
+        (0..n).map(|_| &self.buf[rng.below(self.buf.len())]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(r: f64) -> Transition {
+        Transition { state: vec![0.0], actions: vec![0], reward: r, next_state: vec![0.0] }
+    }
+
+    #[test]
+    fn fifo_eviction() {
+        let mut b = ReplayBuffer::new(3);
+        for i in 0..5 {
+            b.push(t(i as f64));
+        }
+        assert_eq!(b.len(), 3);
+        let rewards: Vec<f64> = b.buf.iter().map(|x| x.reward).collect();
+        // ring: positions overwritten in order -> contains 3, 4, 2
+        assert!(rewards.contains(&2.0) && rewards.contains(&3.0) && rewards.contains(&4.0));
+        assert!(!rewards.contains(&0.0) && !rewards.contains(&1.0));
+    }
+
+    #[test]
+    fn sample_covers_buffer() {
+        let mut b = ReplayBuffer::new(10);
+        for i in 0..10 {
+            b.push(t(i as f64));
+        }
+        let mut rng = Rng::new(1);
+        let seen: std::collections::BTreeSet<i64> =
+            b.sample(200, &mut rng).iter().map(|x| x.reward as i64).collect();
+        assert_eq!(seen.len(), 10, "uniform sampling should hit all slots");
+    }
+
+    #[test]
+    #[should_panic(expected = "empty replay")]
+    fn sample_empty_panics() {
+        let b = ReplayBuffer::new(4);
+        let mut rng = Rng::new(2);
+        b.sample(1, &mut rng);
+    }
+
+    #[test]
+    fn capacity_respected() {
+        let mut b = ReplayBuffer::new(1000);
+        for i in 0..2500 {
+            b.push(t(i as f64));
+        }
+        assert_eq!(b.len(), 1000);
+        assert_eq!(b.capacity(), 1000);
+        // newest still present
+        assert!(b.buf.iter().any(|x| x.reward == 2499.0));
+    }
+}

@@ -1,0 +1,99 @@
+//! Measured-mode cluster substrate: simulated end/edge/cloud nodes that
+//! execute *real* PJRT MobileNet inference on per-node thread pools sized
+//! to the paper's vCPU counts (Table 6: end 1, edge 2, cloud 4), so
+//! concurrency contention is physically real wall-clock time.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::Calibration;
+use crate::runtime::SharedRuntime;
+use crate::sim::workload::synth_image;
+use crate::types::{ModelId, Tier};
+use crate::util::pool::ThreadPool;
+
+/// One compute node.
+pub struct Node {
+    pub name: String,
+    pub tier: Tier,
+    pub pool: Arc<ThreadPool>,
+    rt: Arc<SharedRuntime>,
+}
+
+impl Node {
+    pub fn new(name: &str, tier: Tier, vcpus: usize, rt: Arc<SharedRuntime>) -> Node {
+        Node {
+            name: name.to_string(),
+            tier,
+            pool: Arc::new(ThreadPool::new(vcpus, name)),
+            rt: Arc::clone(&rt),
+        }
+    }
+
+    /// Execute one inference batch synchronously on this node's pool,
+    /// returning (logits, compute wall-time ms).
+    pub fn infer_batch(&self, model: ModelId, ids: &[u64]) -> Result<(Vec<f32>, f64)> {
+        let rt = Arc::clone(&self.rt);
+        let (h, w, c) = rt.manifest.img;
+        let mut images = Vec::with_capacity(ids.len() * h * w * c);
+        for &id in ids {
+            images.extend(synth_image(id, h, w, c));
+        }
+        let n = ids.len();
+        let out = self.pool.run(move || {
+            let t0 = Instant::now();
+            let logits = rt.infer(model, &images, n);
+            (logits, t0.elapsed().as_secs_f64() * 1e3)
+        });
+        let (logits, ms) = out;
+        Ok((logits?, ms))
+    }
+}
+
+/// The end-edge-cloud topology (paper Table 6 shape).
+pub struct Cluster {
+    pub devices: Vec<Node>,
+    pub edge: Node,
+    pub cloud: Node,
+}
+
+impl Cluster {
+    pub fn new(users: usize, cal: &Calibration, rt: Arc<SharedRuntime>) -> Cluster {
+        let devices = (0..users)
+            .map(|i| Node::new(&format!("S{}", i + 1), Tier::Local, cal.vcpus[0], Arc::clone(&rt)))
+            .collect();
+        Cluster {
+            devices,
+            edge: Node::new("E", Tier::Edge, cal.vcpus[1], Arc::clone(&rt)),
+            cloud: Node::new("C", Tier::Cloud, cal.vcpus[2], rt),
+        }
+    }
+
+    /// Node executing `tier` for requests from `device`.
+    pub fn node_for(&self, device: usize, tier: Tier) -> &Node {
+        match tier {
+            Tier::Local => &self.devices[device],
+            Tier::Edge => &self.edge,
+            Tier::Cloud => &self.cloud,
+        }
+    }
+
+    pub fn users(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+// Runtime-dependent tests live in rust/tests/integration_serving.rs; here
+// we only verify topology wiring with a stub-free constructor guard.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vcpu_defaults_match_table6() {
+        let cal = Calibration::default();
+        assert_eq!(cal.vcpus, [1, 2, 4]);
+    }
+}

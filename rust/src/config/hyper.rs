@@ -1,0 +1,176 @@
+//! RL hyper-parameters (paper Table 7 + §5.4): learning rate, epsilon
+//! schedule, discount factor, replay-buffer geometry per algorithm and
+//! user count.
+
+use crate::util::minitoml::Doc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    /// Tabular epsilon-greedy Q-Learning (paper Alg. 1).
+    QLearning,
+    /// Deep Q-Learning with experience replay (paper Alg. 2).
+    Dqn,
+    /// SOTA baseline [36]: offload-only Q-Learning, model pinned to d0.
+    Sota,
+}
+
+impl Algo {
+    pub fn by_name(s: &str) -> Option<Algo> {
+        match s.to_ascii_lowercase().as_str() {
+            "q" | "ql" | "qlearning" | "q-learning" => Some(Algo::QLearning),
+            "dqn" | "dql" | "deep-q" => Some(Algo::Dqn),
+            "sota" | "baseline" => Some(Algo::Sota),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Algo::QLearning => "Q-Learning",
+            Algo::Dqn => "Deep Q-Learning",
+            Algo::Sota => "SOTA [36]",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Hyper {
+    /// Learning rate alpha.
+    pub lr: f64,
+    /// Discount factor gamma (paper §5.4: lower converged best).
+    pub gamma: f64,
+    /// Initial exploration rate.
+    pub eps_start: f64,
+    /// Per-invocation epsilon decay (Table 7 column).
+    pub eps_decay: f64,
+    /// Exploration floor.
+    pub eps_min: f64,
+    /// Replay buffer capacity (paper: FIFO of 1000).
+    pub replay_capacity: usize,
+    /// Minibatch size (paper: 64).
+    pub batch_size: usize,
+}
+
+impl Hyper {
+    /// Table 7 values. Q-Learning: lr 0.9 with decay 1e-1..1e-4 by user
+    /// count; DQN: lr 1e-3 with decay 0.4/0.7/0.9 for 3/4/5 users.
+    pub fn paper_defaults(algo: Algo, users: usize) -> Hyper {
+        let users = users.clamp(1, 5);
+        match algo {
+            Algo::QLearning | Algo::Sota => {
+                let eps_decay = match users {
+                    1 => 1e-1,
+                    2 => 1e-2,
+                    3 => 1e-2,
+                    4 => 1e-3,
+                    _ => 1e-4,
+                };
+                Hyper {
+                    lr: 0.9,
+                    gamma: 0.5,
+                    eps_start: 1.0,
+                    eps_decay,
+                    // "we perform probabilistic exploration continuously"
+                    // (§5.4) — the floor lets stale Q entries recover after
+                    // the other devices' policies settle.
+                    eps_min: 0.05,
+                    replay_capacity: 0,
+                    batch_size: 0,
+                }
+            }
+            Algo::Dqn => {
+                let eps_decay = match users {
+                    1 | 2 | 3 => 0.4 * 1e-3,
+                    4 => 0.7 * 1e-3,
+                    _ => 0.9 * 1e-3,
+                };
+                Hyper {
+                    lr: 1e-3,
+                    gamma: 0.5,
+                    eps_start: 1.0,
+                    eps_decay,
+                    eps_min: 0.02,
+                    replay_capacity: 1000,
+                    batch_size: 64,
+                }
+            }
+        }
+    }
+
+    /// Epsilon after `step` agent invocations (multiplicative decay form:
+    /// eps = max(eps_min, eps_start * (1 - decay)^step)).
+    pub fn epsilon_at(&self, step: usize) -> f64 {
+        (self.eps_start * (1.0 - self.eps_decay).powi(step as i32)).max(self.eps_min)
+    }
+
+    pub fn overridden(mut self, doc: &Doc) -> Hyper {
+        self.lr = doc.f64("hyper.lr", self.lr);
+        self.gamma = doc.f64("hyper.gamma", self.gamma);
+        self.eps_start = doc.f64("hyper.eps_start", self.eps_start);
+        self.eps_decay = doc.f64("hyper.eps_decay", self.eps_decay);
+        self.eps_min = doc.f64("hyper.eps_min", self.eps_min);
+        self.replay_capacity = doc.usize("hyper.replay_capacity", self.replay_capacity);
+        self.batch_size = doc.usize("hyper.batch_size", self.batch_size);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_qlearning() {
+        for (users, decay) in [(1, 1e-1), (2, 1e-2), (3, 1e-2), (4, 1e-3), (5, 1e-4)] {
+            let h = Hyper::paper_defaults(Algo::QLearning, users);
+            assert_eq!(h.lr, 0.9);
+            assert_eq!(h.eps_decay, decay);
+        }
+    }
+
+    #[test]
+    fn table7_dqn() {
+        for users in [3, 4, 5] {
+            let h = Hyper::paper_defaults(Algo::Dqn, users);
+            assert_eq!(h.lr, 1e-3);
+            assert_eq!(h.replay_capacity, 1000);
+            assert_eq!(h.batch_size, 64);
+        }
+        assert!(
+            Hyper::paper_defaults(Algo::Dqn, 5).eps_decay
+                > Hyper::paper_defaults(Algo::Dqn, 3).eps_decay
+        );
+    }
+
+    #[test]
+    fn epsilon_decays_to_floor() {
+        let h = Hyper::paper_defaults(Algo::QLearning, 1);
+        assert_eq!(h.epsilon_at(0), 1.0);
+        assert!(h.epsilon_at(10) < 0.5);
+        assert_eq!(h.epsilon_at(100_000), h.eps_min);
+        // monotone non-increasing
+        let mut prev = f64::INFINITY;
+        for s in 0..100 {
+            let e = h.epsilon_at(s);
+            assert!(e <= prev);
+            prev = e;
+        }
+    }
+
+    #[test]
+    fn algo_names() {
+        assert_eq!(Algo::by_name("DQN"), Some(Algo::Dqn));
+        assert_eq!(Algo::by_name("q-learning"), Some(Algo::QLearning));
+        assert_eq!(Algo::by_name("sota"), Some(Algo::Sota));
+        assert_eq!(Algo::by_name("x"), None);
+    }
+
+    #[test]
+    fn toml_override() {
+        let doc = Doc::parse("[hyper]\nlr = 0.5\ngamma = 0.1").unwrap();
+        let h = Hyper::paper_defaults(Algo::QLearning, 3).overridden(&doc);
+        assert_eq!(h.lr, 0.5);
+        assert_eq!(h.gamma, 0.1);
+        assert_eq!(h.eps_decay, 1e-2); // untouched
+    }
+}

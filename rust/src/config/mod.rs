@@ -1,0 +1,201 @@
+//! Configuration system: experiment scenarios (paper Table 5), RL
+//! hyper-parameters (Table 7), latency-model calibration constants
+//! (DESIGN.md §6) and the top-level run config assembled from a mini-TOML
+//! file plus CLI overrides.
+
+mod calibration;
+mod hyper;
+mod scenario;
+
+pub use calibration::Calibration;
+pub use hyper::{Algo, Hyper};
+pub use scenario::Scenario;
+
+use crate::types::AccuracyConstraint;
+use crate::util::cli::Args;
+use crate::util::minitoml::Doc;
+
+/// Execution mode for the cluster substrate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Closed-form calibrated latency model (fast: RL training, sweeps).
+    Sim,
+    /// Real PJRT inference on per-node thread pools with injected network
+    /// delays (serving examples, overhead experiments).
+    Measured,
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub users: usize,
+    pub scenario: Scenario,
+    pub constraint: AccuracyConstraint,
+    pub algo: Algo,
+    pub hyper: Hyper,
+    pub calibration: Calibration,
+    pub mode: Mode,
+    pub seed: u64,
+    pub steps: usize,
+    pub artifacts_dir: String,
+    pub results_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let users = 5;
+        Config {
+            users,
+            scenario: Scenario::exp_a(users),
+            constraint: AccuracyConstraint::Max,
+            algo: Algo::QLearning,
+            hyper: Hyper::paper_defaults(Algo::QLearning, users),
+            calibration: Calibration::default(),
+            mode: Mode::Sim,
+            seed: 42,
+            steps: 50_000,
+            artifacts_dir: "artifacts".into(),
+            results_dir: "results".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Build from optional TOML file + CLI args (CLI wins).
+    pub fn load(args: &Args) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        if let Some(path) = args.get("config") {
+            let src = std::fs::read_to_string(path)
+                .map_err(|e| format!("config {path}: {e}"))?;
+            cfg.apply_toml(&Doc::parse(&src)?)?;
+        }
+        cfg.apply_args(args)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_toml(&mut self, doc: &Doc) -> Result<(), String> {
+        self.users = doc.usize("run.users", self.users);
+        self.seed = doc.i64("run.seed", self.seed as i64) as u64;
+        self.steps = doc.usize("run.steps", self.steps);
+        self.artifacts_dir = doc.str("run.artifacts_dir", &self.artifacts_dir);
+        self.results_dir = doc.str("run.results_dir", &self.results_dir);
+        if let Some(s) = doc.get("run.scenario").and_then(|v| v.as_str()) {
+            self.scenario = Scenario::by_name(s, self.users)
+                .ok_or_else(|| format!("unknown scenario {s}"))?;
+        } else {
+            self.scenario = self.scenario.resized(self.users);
+        }
+        if let Some(a) = doc.get("run.algo").and_then(|v| v.as_str()) {
+            self.algo = Algo::by_name(a).ok_or_else(|| format!("unknown algo {a}"))?;
+        }
+        if let Some(c) = doc.get("run.constraint").and_then(|v| v.as_str()) {
+            self.constraint = parse_constraint(c)?;
+        }
+        if let Some(m) = doc.get("run.mode").and_then(|v| v.as_str()) {
+            self.mode = match m {
+                "sim" => Mode::Sim,
+                "measured" => Mode::Measured,
+                other => return Err(format!("unknown mode {other}")),
+            };
+        }
+        self.hyper = Hyper::paper_defaults(self.algo, self.users).overridden(doc);
+        self.calibration = Calibration::from_doc(doc);
+        Ok(())
+    }
+
+    pub fn apply_args(&mut self, args: &Args) -> Result<(), String> {
+        self.users = args.usize("users", self.users);
+        self.seed = args.u64("seed", self.seed);
+        self.steps = args.usize("steps", self.steps);
+        if let Some(s) = args.get("scenario") {
+            self.scenario = Scenario::by_name(s, self.users)
+                .ok_or_else(|| format!("unknown scenario {s}"))?;
+        } else {
+            self.scenario = self.scenario.resized(self.users);
+        }
+        if let Some(a) = args.get("algo") {
+            self.algo = Algo::by_name(a).ok_or_else(|| format!("unknown algo {a}"))?;
+            self.hyper = Hyper::paper_defaults(self.algo, self.users);
+        }
+        if let Some(c) = args.get("constraint") {
+            self.constraint = parse_constraint(c)?;
+        }
+        if let Some(m) = args.get("mode") {
+            self.mode = match m {
+                "sim" => Mode::Sim,
+                "measured" => Mode::Measured,
+                other => return Err(format!("unknown mode {other}")),
+            };
+        }
+        if let Some(d) = args.get("artifacts") {
+            self.artifacts_dir = d.to_string();
+        }
+        Ok(())
+    }
+}
+
+pub fn parse_constraint(s: &str) -> Result<AccuracyConstraint, String> {
+    match s.to_ascii_lowercase().as_str() {
+        "min" => Ok(AccuracyConstraint::Min),
+        "max" => Ok(AccuracyConstraint::Max),
+        other => other
+            .trim_end_matches('%')
+            .parse::<f64>()
+            .map(AccuracyConstraint::AtLeast)
+            .map_err(|_| format!("bad constraint {s}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = Config::default();
+        assert_eq!(c.users, 5);
+        assert_eq!(c.scenario.name, "EXP-A");
+        assert_eq!(c.mode, Mode::Sim);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = Doc::parse(
+            "[run]\nusers = 3\nscenario = \"exp-d\"\nalgo = \"dqn\"\nconstraint = \"85\"\nsteps = 10\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.users, 3);
+        assert_eq!(c.scenario.name, "EXP-D");
+        assert_eq!(c.algo, Algo::Dqn);
+        assert_eq!(c.constraint, AccuracyConstraint::AtLeast(85.0));
+        assert_eq!(c.steps, 10);
+    }
+
+    #[test]
+    fn cli_overrides_beat_defaults() {
+        let args = Args::parse(
+            ["--users", "4", "--constraint", "min", "--mode", "measured"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::load(&args).unwrap();
+        assert_eq!(c.users, 4);
+        assert_eq!(c.constraint, AccuracyConstraint::Min);
+        assert_eq!(c.mode, Mode::Measured);
+        assert_eq!(c.scenario.device_conds.len(), 4);
+    }
+
+    #[test]
+    fn parse_constraint_forms() {
+        assert_eq!(parse_constraint("Min").unwrap(), AccuracyConstraint::Min);
+        assert_eq!(parse_constraint("89%").unwrap(), AccuracyConstraint::AtLeast(89.0));
+        assert!(parse_constraint("wat").is_err());
+    }
+
+    #[test]
+    fn bad_scenario_errors() {
+        let args = Args::parse(["--scenario", "exp-z"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&args).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Experiment scenarios: per-device + edge network conditions (paper
+//! Table 5). Scenarios are defined for 5 devices and truncated for smaller
+//! user counts (the paper's user-variability sweeps do the same).
+
+use crate::types::NetCond;
+
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    /// Condition of each end-device's link to the edge (S1..SN).
+    pub device_conds: Vec<NetCond>,
+    /// Condition of the edge <-> cloud link (E column of Table 5).
+    pub edge_cond: NetCond,
+}
+
+use NetCond::{Regular as R, Weak as W};
+
+impl Scenario {
+    fn build(name: &str, conds5: [NetCond; 5], edge: NetCond, users: usize) -> Scenario {
+        assert!((1..=5).contains(&users), "users 1..=5 (paper setup)");
+        Scenario {
+            name: name.to_string(),
+            device_conds: conds5[..users].to_vec(),
+            edge_cond: edge,
+        }
+    }
+
+    /// EXP-A: all regular.
+    pub fn exp_a(users: usize) -> Scenario {
+        Scenario::build("EXP-A", [R, R, R, R, R], R, users)
+    }
+
+    /// EXP-B: alternating R/W, weak edge.
+    pub fn exp_b(users: usize) -> Scenario {
+        Scenario::build("EXP-B", [R, W, R, W, R], W, users)
+    }
+
+    /// EXP-C: first three weak, regular edge.
+    pub fn exp_c(users: usize) -> Scenario {
+        Scenario::build("EXP-C", [W, W, W, R, R], R, users)
+    }
+
+    /// EXP-D: all weak.
+    pub fn exp_d(users: usize) -> Scenario {
+        Scenario::build("EXP-D", [W, W, W, W, W], W, users)
+    }
+
+    pub fn all(users: usize) -> Vec<Scenario> {
+        vec![
+            Scenario::exp_a(users),
+            Scenario::exp_b(users),
+            Scenario::exp_c(users),
+            Scenario::exp_d(users),
+        ]
+    }
+
+    pub fn by_name(name: &str, users: usize) -> Option<Scenario> {
+        match name.to_ascii_uppercase().replace('_', "-").as_str() {
+            "EXP-A" | "A" => Some(Scenario::exp_a(users)),
+            "EXP-B" | "B" => Some(Scenario::exp_b(users)),
+            "EXP-C" | "C" => Some(Scenario::exp_c(users)),
+            "EXP-D" | "D" => Some(Scenario::exp_d(users)),
+            _ => None,
+        }
+    }
+
+    /// Same scenario truncated/extended to a new user count.
+    pub fn resized(&self, users: usize) -> Scenario {
+        Scenario::by_name(&self.name, users).unwrap_or_else(|| self.clone())
+    }
+
+    pub fn users(&self) -> usize {
+        self.device_conds.len()
+    }
+
+    /// Condition of device i's uplink.
+    pub fn device_cond(&self, i: usize) -> NetCond {
+        self.device_conds[i]
+    }
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let devs: String = self.device_conds.iter().map(|c| c.letter()).collect();
+        write!(f, "{} [S:{} E:{}]", self.name, devs, self.edge_cond.letter())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_verbatim() {
+        let a = Scenario::exp_a(5);
+        assert!(a.device_conds.iter().all(|&c| c == R) && a.edge_cond == R);
+        let b = Scenario::exp_b(5);
+        assert_eq!(b.device_conds, vec![R, W, R, W, R]);
+        assert_eq!(b.edge_cond, W);
+        let c = Scenario::exp_c(5);
+        assert_eq!(c.device_conds, vec![W, W, W, R, R]);
+        assert_eq!(c.edge_cond, R);
+        let d = Scenario::exp_d(5);
+        assert!(d.device_conds.iter().all(|&c| c == W) && d.edge_cond == W);
+    }
+
+    #[test]
+    fn truncation_for_fewer_users() {
+        let c = Scenario::exp_c(2);
+        assert_eq!(c.device_conds, vec![W, W]);
+        assert_eq!(c.users(), 2);
+    }
+
+    #[test]
+    fn by_name_aliases() {
+        assert_eq!(Scenario::by_name("exp-b", 3).unwrap().name, "EXP-B");
+        assert_eq!(Scenario::by_name("D", 1).unwrap().name, "EXP-D");
+        assert!(Scenario::by_name("nope", 5).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_users() {
+        Scenario::exp_a(0);
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(Scenario::exp_b(5).to_string(), "EXP-B [S:RWRWR E:W]");
+    }
+}

@@ -1,0 +1,131 @@
+//! Dynamic batcher (pure logic, property-tested without the runtime):
+//! per-(node, model) queues that flush when full (`max_batch`) or when the
+//! oldest entry has waited `window_ms`. This is the serving-path analogue
+//! of vLLM-style dynamic batching, sized to the largest AOT-compiled batch.
+
+use std::collections::BTreeMap;
+
+use crate::types::ModelId;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Pending {
+    pub req_id: u64,
+    pub enqueued_ms: f64,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    pub max_batch: usize,
+    pub window_ms: f64,
+    queues: BTreeMap<u8, Vec<Pending>>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window_ms: f64) -> Batcher {
+        assert!(max_batch > 0);
+        Batcher { max_batch, window_ms, queues: BTreeMap::new() }
+    }
+
+    /// Enqueue; returns a full batch if this push filled one.
+    pub fn push(&mut self, model: ModelId, req_id: u64, now_ms: f64) -> Option<(ModelId, Vec<Pending>)> {
+        let q = self.queues.entry(model.0).or_default();
+        q.push(Pending { req_id, enqueued_ms: now_ms });
+        if q.len() >= self.max_batch {
+            let batch = std::mem::take(q);
+            return Some((model, batch));
+        }
+        None
+    }
+
+    /// Flush any queue whose oldest entry has exceeded the window.
+    pub fn poll(&mut self, now_ms: f64) -> Vec<(ModelId, Vec<Pending>)> {
+        let mut out = Vec::new();
+        for (&m, q) in self.queues.iter_mut() {
+            if !q.is_empty() && now_ms - q[0].enqueued_ms >= self.window_ms {
+                out.push((ModelId(m), std::mem::take(q)));
+            }
+        }
+        self.queues.retain(|_, q| !q.is_empty());
+        out
+    }
+
+    /// Flush everything (shutdown).
+    pub fn drain(&mut self) -> Vec<(ModelId, Vec<Pending>)> {
+        let out: Vec<_> = self
+            .queues
+            .iter_mut()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(&m, q)| (ModelId(m), std::mem::take(q)))
+            .collect();
+        self.queues.clear();
+        out
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(3, 100.0);
+        assert!(b.push(ModelId(0), 1, 0.0).is_none());
+        assert!(b.push(ModelId(0), 2, 1.0).is_none());
+        let (m, batch) = b.push(ModelId(0), 3, 2.0).unwrap();
+        assert_eq!(m, ModelId(0));
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn separate_queues_per_model() {
+        let mut b = Batcher::new(2, 100.0);
+        assert!(b.push(ModelId(0), 1, 0.0).is_none());
+        assert!(b.push(ModelId(1), 2, 0.0).is_none());
+        assert_eq!(b.pending(), 2);
+        assert!(b.push(ModelId(0), 3, 1.0).is_some());
+        assert_eq!(b.pending(), 1); // model-1 entry remains
+    }
+
+    #[test]
+    fn window_timeout_flushes() {
+        let mut b = Batcher::new(10, 5.0);
+        b.push(ModelId(2), 1, 0.0);
+        assert!(b.poll(4.9).is_empty());
+        let flushed = b.poll(5.0);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].1[0].req_id, 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn drain_empties_all() {
+        let mut b = Batcher::new(10, 100.0);
+        for i in 0..5 {
+            b.push(ModelId((i % 3) as u8), i, 0.0);
+        }
+        let total: usize = b.drain().iter().map(|(_, q)| q.len()).sum();
+        assert_eq!(total, 5);
+        assert_eq!(b.pending(), 0);
+        assert!(b.drain().is_empty());
+    }
+
+    #[test]
+    fn no_request_lost_or_duplicated() {
+        let mut b = Batcher::new(4, 10.0);
+        let mut out = Vec::new();
+        for i in 0..37u64 {
+            if let Some((_, batch)) = b.push(ModelId((i % 2) as u8), i, i as f64) {
+                out.extend(batch.into_iter().map(|p| p.req_id));
+            }
+            out.extend(b.poll(i as f64).into_iter().flat_map(|(_, q)| q).map(|p| p.req_id));
+        }
+        out.extend(b.drain().into_iter().flat_map(|(_, q)| q).map(|p| p.req_id));
+        out.sort_unstable();
+        assert_eq!(out, (0..37).collect::<Vec<_>>());
+    }
+}

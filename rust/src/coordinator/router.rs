@@ -1,0 +1,108 @@
+//! Request router: maps each incoming request to its orchestrated
+//! (placement, model) action. In the paper's flow (Fig. 4) the router is
+//! the front of the cloud-hosted Intelligent Orchestrator: it holds the
+//! latest per-device decision vector (refreshed by the agent each
+//! synchronous round) and stamps requests with their target.
+
+use crate::types::{Action, Decision, DeviceId};
+
+#[derive(Debug, Clone)]
+pub struct Route {
+    pub req_id: u64,
+    pub device: DeviceId,
+    pub action: Action,
+}
+
+/// Holds the current decision vector; conserves requests 1:1
+/// (the paper's sum_j o_i^j = 1 constraint, property-tested).
+#[derive(Debug, Clone)]
+pub struct Router {
+    decision: Decision,
+}
+
+impl Router {
+    pub fn new(decision: Decision) -> Router {
+        Router { decision }
+    }
+
+    pub fn users(&self) -> usize {
+        self.decision.n_users()
+    }
+
+    /// Install a fresh decision (one per synchronous round).
+    pub fn update(&mut self, decision: Decision) {
+        assert_eq!(
+            decision.n_users(),
+            self.decision.n_users(),
+            "router decision arity changed"
+        );
+        self.decision = decision;
+    }
+
+    pub fn current(&self) -> &Decision {
+        &self.decision
+    }
+
+    /// Route one request: exactly one action per request.
+    pub fn route(&self, req_id: u64, device: DeviceId) -> Route {
+        assert!(device < self.decision.n_users(), "unknown device {device}");
+        Route { req_id, device, action: self.decision.0[device] }
+    }
+
+    /// Route a whole synchronous round of requests.
+    pub fn route_round(&self, requests: &[crate::sim::Request]) -> Vec<Route> {
+        requests.iter().map(|r| self.route(r.id, r.device)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Request;
+    use crate::types::{ModelId, Tier};
+
+    fn decision(n: usize) -> Decision {
+        Decision(
+            (0..n)
+                .map(|i| Action {
+                    tier: Tier::from_index(i % 3),
+                    model: ModelId((i % 8) as u8),
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn routes_follow_decision() {
+        let r = Router::new(decision(5));
+        for d in 0..5 {
+            let route = r.route(d as u64, d);
+            assert_eq!(route.action, r.current().0[d]);
+        }
+    }
+
+    #[test]
+    fn round_conservation() {
+        let r = Router::new(decision(4));
+        let reqs: Vec<Request> =
+            (0..4).map(|d| Request { id: 100 + d as u64, device: d, arrival_ms: 0.0 }).collect();
+        let routes = r.route_round(&reqs);
+        assert_eq!(routes.len(), 4);
+        let mut ids: Vec<u64> = routes.iter().map(|x| x.req_id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![100, 101, 102, 103]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown device")]
+    fn rejects_unknown_device() {
+        Router::new(decision(2)).route(0, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn rejects_arity_change() {
+        let mut r = Router::new(decision(3));
+        r.update(decision(4));
+    }
+}

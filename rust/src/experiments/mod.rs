@@ -1,0 +1,162 @@
+//! Experiment drivers: one per paper figure/table (DESIGN.md §5 index).
+//! Each driver prints the paper-shaped table/series to stdout and writes
+//! `results/<id>.csv` (+ JSON where useful); `examples/paper_experiments`
+//! runs all of them for EXPERIMENTS.md.
+
+pub mod figures;
+pub mod overhead;
+pub mod tables;
+pub mod training;
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::agent::baseline::{sota_agent, FixedAgent};
+use crate::agent::dqn::DqnAgent;
+use crate::agent::qlearning::QTableAgent;
+use crate::agent::{ActionSet, Agent};
+use crate::config::{Algo, Config, Hyper, Scenario};
+use crate::orchestrator::Orchestrator;
+use crate::runtime::SharedRuntime;
+use crate::sim::Env;
+use crate::types::{AccuracyConstraint, Tier};
+
+/// Shared context: config + lazily-loaded PJRT runtime (only DQN and the
+/// measured-mode experiments need artifacts).
+pub struct ExpCtx {
+    pub cfg: Config,
+    rt: std::sync::Mutex<Option<Arc<SharedRuntime>>>,
+}
+
+impl ExpCtx {
+    pub fn new(cfg: Config) -> ExpCtx {
+        ExpCtx { cfg, rt: std::sync::Mutex::new(None) }
+    }
+
+    pub fn runtime(&self) -> Result<Arc<SharedRuntime>> {
+        let mut guard = self.rt.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(Arc::new(SharedRuntime::load(&self.cfg.artifacts_dir)?));
+        }
+        Ok(Arc::clone(guard.as_ref().unwrap()))
+    }
+
+    pub fn env(&self, scenario: Scenario, constraint: AccuracyConstraint, seed: u64) -> Env {
+        Env::new(scenario, self.cfg.calibration.clone(), constraint, seed)
+    }
+
+    pub fn make_agent(
+        &self,
+        algo: Algo,
+        users: usize,
+        seed: u64,
+    ) -> Result<Box<dyn Agent>> {
+        Ok(match algo {
+            Algo::QLearning => Box::new(QTableAgent::new(
+                users,
+                Hyper::paper_defaults(Algo::QLearning, users),
+                ActionSet::full(),
+                seed,
+            )),
+            Algo::Sota => Box::new(sota_agent(
+                users,
+                Hyper::paper_defaults(Algo::QLearning, users),
+                seed,
+            )),
+            Algo::Dqn => Box::new(DqnAgent::new(
+                users,
+                Hyper::paper_defaults(Algo::Dqn, users),
+                self.runtime()?,
+                seed,
+            )?),
+        })
+    }
+
+    /// Train an orchestrator for (scenario, users, constraint, algo).
+    pub fn trained(
+        &self,
+        scenario: Scenario,
+        constraint: AccuracyConstraint,
+        algo: Algo,
+        steps: usize,
+        seed: u64,
+    ) -> Result<Orchestrator> {
+        let users = scenario.users();
+        let env = self.env(scenario, constraint, seed);
+        let agent = self.make_agent(algo, users, seed.wrapping_add(1))?;
+        let mut orch = Orchestrator::new(env, agent);
+        let _ = orch.train_full(steps, steps.max(1));
+        Ok(orch)
+    }
+
+    /// Fixed-strategy orchestrator (no training needed).
+    pub fn fixed(&self, scenario: Scenario, tier: Tier, seed: u64) -> Orchestrator {
+        let users = scenario.users();
+        let env = self.env(scenario, AccuracyConstraint::Max, seed);
+        Orchestrator::new(env, Box::new(FixedAgent::new(tier, users)))
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig1a", "fig1b", "fig1c", "fig5", "table8", "table9", "table10", "fig6", "fig7",
+    "table11", "fig8", "table12", "prediction",
+];
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
+    match id {
+        "fig1a" => figures::fig1a(ctx),
+        "fig1b" => figures::fig1b(ctx),
+        "fig1c" => figures::fig1c(ctx),
+        "fig5" => figures::fig5(ctx),
+        "table8" => tables::table8(ctx),
+        "table9" => tables::table9(ctx),
+        "table10" => tables::table10(ctx),
+        "fig6" => training::fig6(ctx),
+        "fig7" => training::fig7(ctx),
+        "table11" => training::table11(ctx),
+        "fig8" => overhead::fig8(ctx),
+        "table12" => overhead::table12(ctx),
+        "prediction" => overhead::prediction(ctx),
+        other => Err(anyhow!("unknown experiment '{other}' (known: {ALL:?})")),
+    }
+}
+
+/// Scale factor for step budgets: EECO_FAST=1 shrinks every training run
+/// (CI smoke); the full budgets regenerate the paper curves.
+pub fn step_scale() -> f64 {
+    if let Ok(v) = std::env::var("EECO_STEP_SCALE") {
+        return v.parse().unwrap_or(1.0);
+    }
+    if std::env::var("EECO_FAST").is_ok() {
+        0.02
+    } else {
+        1.0
+    }
+}
+
+pub fn scaled(steps: usize) -> usize {
+    ((steps as f64 * step_scale()) as usize).max(200)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_ids_dispatch() {
+        // unknown id errors, known ids exist in ALL
+        let ctx = ExpCtx::new(Config::default());
+        assert!(run("nope", &ctx).is_err());
+        assert_eq!(ALL.len(), 13);
+    }
+
+    #[test]
+    fn make_agent_ql_sota() {
+        let ctx = ExpCtx::new(Config::default());
+        assert_eq!(ctx.make_agent(Algo::QLearning, 3, 1).unwrap().name(), "Q-Learning");
+        assert_eq!(ctx.make_agent(Algo::Sota, 3, 1).unwrap().name(), "SOTA [36]");
+    }
+}

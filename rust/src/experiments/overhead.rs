@@ -1,0 +1,120 @@
+//! Overhead + prediction drivers (paper §6.1 / §6.2.2):
+//!
+//! - Fig 8: resource-monitoring overhead per layer (< 0.8% of response).
+//! - Table 12: message-broadcasting costs regular vs weak.
+//! - prediction: agent decisions vs the brute-force optimum ("100%
+//!   prediction accuracy" claim), plus agent step latency (paper: QL
+//!   0.6 ms on cloud CPU, DQL 11 ms on an RTX 5000 — ours runs DQL on the
+//!   PJRT CPU).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::{Algo, Scenario};
+use crate::metrics::{render_table, Csv};
+use crate::network::MsgKind;
+use crate::types::{AccuracyConstraint, NetCond, Tier};
+
+use super::{scaled, ExpCtx};
+
+/// Fig 8: monitoring overhead per layer, absolute and relative.
+pub fn fig8(ctx: &ExpCtx) -> Result<()> {
+    println!("\n== Fig 8: resource-monitoring overhead per layer ==");
+    let cal = &ctx.cfg.calibration;
+    let mut csv = Csv::new(&["layer", "base_ms", "with_monitoring_ms", "overhead_pct"]);
+    let mut rows = Vec::new();
+    for tier in Tier::ALL {
+        let env = ctx.env(Scenario::exp_a(1), AccuracyConstraint::Max, 1);
+        let d = crate::types::Decision::uniform(
+            1,
+            crate::types::Action { tier, model: crate::types::ModelId(0) },
+        );
+        let with = env.expected_avg_ms(&d);
+        let base = with / (1.0 + cal.monitor_overhead_frac);
+        let pct = (with / base - 1.0) * 100.0;
+        csv.row(&[format!("{tier:?}"), format!("{base:.2}"), format!("{with:.2}"), format!("{pct:.3}")]);
+        rows.push(vec![format!("{tier:?}"), format!("{base:.1}"), format!("{with:.1}"), format!("{pct:.2}%")]);
+    }
+    print!("{}", render_table(&["layer", "base ms", "with monitoring ms", "overhead"], &rows));
+    println!("paper claim: < 0.8% of minimum response overall");
+    csv.save(&ctx.cfg.results_dir, "fig8")?;
+    Ok(())
+}
+
+/// Table 12: message costs (request / update / decision) per condition.
+pub fn table12(ctx: &ExpCtx) -> Result<()> {
+    println!("\n== Table 12: message broadcasting overhead ==");
+    let cal = &ctx.cfg.calibration;
+    let mut csv = Csv::new(&["message", "regular_ms", "weak_ms"]);
+    let mut rows = Vec::new();
+    for (name, kind) in [
+        ("Request", MsgKind::Request),
+        ("Update", MsgKind::Update),
+        ("Decision", MsgKind::Decision),
+    ] {
+        let r = kind.cost_ms(cal, NetCond::Regular);
+        let w = kind.cost_ms(cal, NetCond::Weak);
+        csv.row(&[name.into(), r.to_string(), w.to_string()]);
+        rows.push(vec![name.into(), format!("{r} ms"), format!("{w} ms")]);
+    }
+    let (tr, tw) = (cal.message_total_ms(NetCond::Regular), cal.message_total_ms(NetCond::Weak));
+    csv.row(&["Total".into(), tr.to_string(), tw.to_string()]);
+    rows.push(vec!["Total".into(), format!("{tr} ms"), format!("{tw} ms")]);
+    print!("{}", render_table(&["message", "regular", "weak"], &rows));
+    csv.save(&ctx.cfg.results_dir, "table12")?;
+    Ok(())
+}
+
+/// Prediction accuracy vs brute force + agent step latency (§6.1, §6.2.2).
+pub fn prediction(ctx: &ExpCtx) -> Result<()> {
+    println!("\n== Prediction accuracy vs brute-force optimum + agent step latency ==");
+    let mut csv = Csv::new(&["algo", "users", "prediction_accuracy", "decide_ms"]);
+    let mut rows = Vec::new();
+    let have_rt = ctx.runtime().is_ok();
+    for algo in [Algo::QLearning, Algo::Dqn] {
+        if algo == Algo::Dqn && !have_rt {
+            continue;
+        }
+        for users in [3usize, 5] {
+            let steps = match algo {
+                Algo::QLearning => scaled(80_000),
+                _ => scaled(10_000),
+            };
+            // Converged-regime evaluation (paper §6.1 measures the agent
+            // *after* convergence): train against the frozen anchor state
+            // the decisions are scored at, then check optimality.
+            let env = ctx.env(Scenario::exp_a(users), AccuracyConstraint::AtLeast(85.0), 900);
+            let agent = ctx.make_agent(algo, users, 900 + users as u64)?;
+            let mut orch = crate::orchestrator::Orchestrator::new(env, agent);
+            orch.env.freeze();
+            orch.env.reset_load();
+            let _ = orch.train_full(steps, steps);
+            let acc = orch.prediction_accuracy(20, 0.05);
+            // decide() latency (the paper's IO overhead numbers)
+            let state = orch.env.encoded();
+            let t0 = Instant::now();
+            let iters = 100;
+            for _ in 0..iters {
+                let _ = orch.agent.decide(&state, false);
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+            csv.row(&[
+                algo.label().into(),
+                users.to_string(),
+                format!("{:.0}%", acc * 100.0),
+                format!("{ms:.4}"),
+            ]);
+            rows.push(vec![
+                algo.label().into(),
+                users.to_string(),
+                format!("{:.0}%", acc * 100.0),
+                format!("{:.1} µs", ms * 1e3),
+            ]);
+        }
+    }
+    print!("{}", render_table(&["algo", "users", "prediction acc", "decide latency"], &rows));
+    println!("paper: 100% prediction accuracy; QL step 0.6 ms, DQL step 11 ms (RTX 5000)");
+    csv.save(&ctx.cfg.results_dir, "prediction")?;
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! # EECO — End-Edge-Cloud Orchestrator
+//!
+//! Production-shaped reproduction of *"Online Learning for Orchestration of
+//! Inference in Multi-User End-Edge-Cloud Networks"* (Shahhosseini et al.,
+//! 2022): an online reinforcement-learning orchestrator that jointly picks
+//! computation offloading (local / edge / cloud) and DL model selection
+//! (MobileNetV1 d0-d7) per end device to minimize average response time
+//! under an average-accuracy constraint.
+//!
+//! Three-layer architecture (DESIGN.md §1): this Rust crate is Layer 3 —
+//! the coordinator, simulator, RL agents and serving path. Layers 2 (JAX
+//! graphs) and 1 (Pallas kernels) live in `python/compile/` and reach this
+//! crate only as AOT-compiled HLO-text artifacts executed via PJRT.
+
+pub mod config;
+pub mod models;
+pub mod types;
+pub mod util;
+
+pub mod cluster;
+pub mod coordinator;
+pub mod metrics;
+pub mod monitor;
+pub mod network;
+pub mod orchestrator;
+pub mod runtime;
+pub mod sim;
+
+pub mod agent;
+pub mod experiments;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::config::{Algo, Calibration, Config, Hyper, Mode, Scenario};
+    pub use crate::models::{info as model_info, top5_table, CATALOG};
+    pub use crate::types::{
+        AccuracyConstraint, Action, Decision, ModelId, NetCond, Tier, ACTIONS_PER_DEVICE,
+        NUM_MODELS,
+    };
+    pub use crate::util::rng::Rng;
+}

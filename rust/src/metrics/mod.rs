@@ -1,0 +1,175 @@
+//! Run metrics: per-request records, aggregate response-time/accuracy
+//! summaries, training curves, and CSV/JSON export for the experiment
+//! drivers (results/ is what EXPERIMENTS.md tables are generated from).
+
+use std::fmt::Write as _;
+
+use crate::types::Decision;
+use crate::util::json::Json;
+use crate::util::stats::{OnlineStats, Sample};
+
+/// One synchronous round's outcome.
+#[derive(Debug, Clone)]
+pub struct RoundRecord {
+    pub step: usize,
+    pub decision: Decision,
+    pub response_ms: Vec<f64>,
+    pub avg_response_ms: f64,
+    pub avg_accuracy: f64,
+    pub reward: f64,
+    pub epsilon: f64,
+}
+
+/// Aggregated metrics over a run.
+#[derive(Debug, Default)]
+pub struct RunMetrics {
+    pub response: Sample,
+    pub accuracy: OnlineStats,
+    pub reward: OnlineStats,
+    pub rounds: usize,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: &RoundRecord) {
+        self.response.push(rec.avg_response_ms);
+        self.accuracy.push(rec.avg_accuracy);
+        self.reward.push(rec.reward);
+        self.rounds += 1;
+    }
+
+    pub fn summary(&mut self) -> Json {
+        Json::obj()
+            .set("rounds", self.rounds)
+            .set("avg_response_ms", self.response.mean())
+            .set("p50_response_ms", if self.response.is_empty() { f64::NAN } else { self.response.pct(50.0) })
+            .set("p99_response_ms", if self.response.is_empty() { f64::NAN } else { self.response.pct(99.0) })
+            .set("avg_accuracy", self.accuracy.mean())
+            .set("avg_reward", self.reward.mean())
+    }
+}
+
+/// Minimal CSV writer: header + rows of f64/string cells.
+#[derive(Debug, Default)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "csv row width");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    pub fn save(&self, dir: &str, name: &str) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = format!("{dir}/{name}.csv");
+        std::fs::write(&path, self.to_string())?;
+        Ok(path)
+    }
+}
+
+/// Render a fixed-width text table (the experiment drivers' stdout view).
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            widths[i] = widths[i].max(c.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        let padded: Vec<String> =
+            cells.iter().zip(&widths).map(|(c, w)| format!("{c:<w$}", w = w)).collect();
+        let _ = writeln!(out, "| {} |", padded.join(" | "));
+    };
+    line(&mut out, &header.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let _ = writeln!(out, "|{}|", widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|"));
+    for r in rows {
+        line(&mut out, r);
+    }
+    out
+}
+
+pub fn save_json(dir: &str, name: &str, j: &Json) -> std::io::Result<String> {
+    std::fs::create_dir_all(dir)?;
+    let path = format!("{dir}/{name}.json");
+    std::fs::write(&path, j.to_string_pretty())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Action, ModelId, Tier};
+
+    fn rec(ms: f64) -> RoundRecord {
+        RoundRecord {
+            step: 0,
+            decision: Decision(vec![Action { tier: Tier::Local, model: ModelId(0) }]),
+            response_ms: vec![ms],
+            avg_response_ms: ms,
+            avg_accuracy: 89.9,
+            reward: -ms,
+            epsilon: 0.1,
+        }
+    }
+
+    #[test]
+    fn metrics_aggregate() {
+        let mut m = RunMetrics::new();
+        for v in [100.0, 200.0, 300.0] {
+            m.push(&rec(v));
+        }
+        let s = m.summary();
+        assert_eq!(s.field("rounds").unwrap().as_usize(), Some(3));
+        assert_eq!(s.field("avg_response_ms").unwrap().as_f64(), Some(200.0));
+    }
+
+    #[test]
+    fn csv_escaping_and_shape() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "x,y".into()]);
+        let s = c.to_string();
+        assert!(s.contains("\"x,y\""));
+        assert_eq!(s.lines().count(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "csv row width")]
+    fn csv_rejects_ragged_rows() {
+        let mut c = Csv::new(&["a"]);
+        c.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let t = render_table(&["col", "x"], &[vec!["value".into(), "1".into()]]);
+        assert!(t.contains("| col   | x |"));
+        assert!(t.contains("| value | 1 |"));
+    }
+}

@@ -1,0 +1,98 @@
+//! The MobileNetV1 model catalog (paper Table 4).
+//!
+//! MAC counts here are the paper's (569/317/150/41 MMACs at 224x224); the
+//! simulator's latency model is calibrated against these. The runtime
+//! cross-checks this catalog against `artifacts/manifest.json` (whose MACs
+//! are recomputed for our 64x64 geometry but keep the same ratios).
+
+use crate::types::{ModelId, NUM_MODELS};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Precision {
+    Fp32,
+    Int8,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct ModelInfo {
+    pub id: ModelId,
+    /// Width multiplier (1.0 / 0.75 / 0.5 / 0.25).
+    pub alpha: f64,
+    pub precision: Precision,
+    /// Million MACs at the paper's 224x224 geometry (Table 4).
+    pub mmacs: f64,
+    pub top1: f64,
+    pub top5: f64,
+}
+
+/// Table 4 verbatim.
+pub const CATALOG: [ModelInfo; NUM_MODELS] = [
+    ModelInfo { id: ModelId(0), alpha: 1.00, precision: Precision::Fp32, mmacs: 569.0, top1: 70.9, top5: 89.9 },
+    ModelInfo { id: ModelId(1), alpha: 0.75, precision: Precision::Fp32, mmacs: 317.0, top1: 68.4, top5: 88.2 },
+    ModelInfo { id: ModelId(2), alpha: 0.50, precision: Precision::Fp32, mmacs: 150.0, top1: 63.3, top5: 84.9 },
+    ModelInfo { id: ModelId(3), alpha: 0.25, precision: Precision::Fp32, mmacs: 41.0, top1: 49.8, top5: 74.2 },
+    ModelInfo { id: ModelId(4), alpha: 1.00, precision: Precision::Int8, mmacs: 569.0, top1: 70.1, top5: 88.9 },
+    ModelInfo { id: ModelId(5), alpha: 0.75, precision: Precision::Int8, mmacs: 317.0, top1: 66.8, top5: 87.0 },
+    ModelInfo { id: ModelId(6), alpha: 0.50, precision: Precision::Int8, mmacs: 150.0, top1: 60.7, top5: 83.2 },
+    ModelInfo { id: ModelId(7), alpha: 0.25, precision: Precision::Int8, mmacs: 41.0, top1: 48.0, top5: 72.8 },
+];
+
+pub fn info(id: ModelId) -> &'static ModelInfo {
+    &CATALOG[id.index()]
+}
+
+/// Top-5 accuracies indexed by model (used by Decision::avg_accuracy).
+pub fn top5_table() -> [f64; NUM_MODELS] {
+    let mut t = [0.0; NUM_MODELS];
+    for m in &CATALOG {
+        t[m.id.index()] = m.top5;
+    }
+    t
+}
+
+/// Highest-accuracy model (d0) — what the SOTA baseline and fixed
+/// strategies always deploy (paper §6).
+pub const MOST_ACCURATE: ModelId = ModelId(0);
+
+/// Maximum achievable average top-5 accuracy (all-d0).
+pub const MAX_ACCURACY: f64 = 89.9;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_matches_table4() {
+        assert_eq!(CATALOG.len(), 8);
+        assert_eq!(info(ModelId(0)).mmacs, 569.0);
+        assert_eq!(info(ModelId(3)).mmacs, 41.0);
+        assert_eq!(info(ModelId(7)).top5, 72.8);
+        assert_eq!(info(ModelId(4)).precision, Precision::Int8);
+    }
+
+    #[test]
+    fn accuracy_monotone_within_precision() {
+        for base in [0usize, 4] {
+            for i in base..base + 3 {
+                assert!(CATALOG[i].top5 > CATALOG[i + 1].top5);
+                assert!(CATALOG[i].mmacs >= CATALOG[i + 1].mmacs);
+            }
+        }
+    }
+
+    #[test]
+    fn int8_variant_loses_accuracy_vs_fp32() {
+        for i in 0..4 {
+            assert!(CATALOG[i].top5 > CATALOG[i + 4].top5);
+            assert_eq!(CATALOG[i].alpha, CATALOG[i + 4].alpha);
+        }
+    }
+
+    #[test]
+    fn top5_table_indexed_correctly() {
+        let t = top5_table();
+        assert_eq!(t[0], 89.9);
+        assert_eq!(t[7], 72.8);
+        assert_eq!(t[0], MAX_ACCURACY);
+    }
+}

@@ -1,0 +1,186 @@
+//! Resource monitoring: raw per-node utilization snapshots, the paper's
+//! Table 3 discretization, and the two state encodings the agents consume —
+//! an exact integer key (Q-table rows) and a normalized f32 vector
+//! (DQN input, Eq. 3 ordering).
+
+use crate::types::NetCond;
+
+/// Raw utilization snapshot of one node, as the Resource Monitoring
+/// service would report it (CPU %, memory %, link condition).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeState {
+    /// CPU utilization in [0, 1].
+    pub cpu: f64,
+    /// Memory utilization in [0, 1].
+    pub mem: f64,
+    /// Current link condition to the upper layer.
+    pub cond: NetCond,
+}
+
+impl NodeState {
+    pub fn idle(cond: NetCond) -> NodeState {
+        NodeState { cpu: 0.0, mem: 0.0, cond }
+    }
+}
+
+/// Full system snapshot: Eq. 3's S_tau before discretization.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemState {
+    pub edge: NodeState,
+    pub cloud: NodeState,
+    pub devices: Vec<NodeState>,
+}
+
+impl SystemState {
+    pub fn users(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+// --- Table 3 discretization -------------------------------------------------
+
+/// Edge/cloud CPU levels ("Nine discrete levels").
+pub const CPU_LEVELS_EC: usize = 9;
+/// Binary levels for everything else.
+pub const BINARY: usize = 2;
+
+/// Busy threshold for the binary CPU/memory states.
+pub const BUSY_THRESHOLD: f64 = 0.5;
+
+pub fn binary_level(util: f64) -> usize {
+    (util > BUSY_THRESHOLD) as usize
+}
+
+pub fn cpu_level_ec(util: f64) -> usize {
+    ((util * CPU_LEVELS_EC as f64) as usize).min(CPU_LEVELS_EC - 1)
+}
+
+fn cond_level(c: NetCond) -> usize {
+    (c == NetCond::Weak) as usize
+}
+
+/// Discretized + encoded state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedState {
+    /// Exact mixed-radix key over the Table 3 levels (Q-table row id).
+    pub key: u64,
+    /// Normalized per-component values in Eq. 3 order:
+    /// [P^E, M^E, B^E, P^C, M^C, B^C, P^S1, M^S1, B^S1, ...].
+    pub vec: Vec<f32>,
+}
+
+/// Encode a snapshot per Table 3. The DQN vector carries the *discretized*
+/// levels (normalized to [0,1]) so both agents see identical information,
+/// as in the paper.
+pub fn encode(s: &SystemState) -> EncodedState {
+    let mut key: u64 = 0;
+    let mut vec = Vec::with_capacity(3 * (s.devices.len() + 2));
+    let mut push = |key: &mut u64, vec: &mut Vec<f32>, level: usize, radix: usize| {
+        debug_assert!(level < radix);
+        *key = *key * radix as u64 + level as u64;
+        vec.push(level as f32 / (radix - 1) as f32);
+    };
+    // Edge
+    push(&mut key, &mut vec, cpu_level_ec(s.edge.cpu), CPU_LEVELS_EC);
+    push(&mut key, &mut vec, binary_level(s.edge.mem), BINARY);
+    push(&mut key, &mut vec, cond_level(s.edge.cond), BINARY);
+    // Cloud
+    push(&mut key, &mut vec, cpu_level_ec(s.cloud.cpu), CPU_LEVELS_EC);
+    push(&mut key, &mut vec, binary_level(s.cloud.mem), BINARY);
+    push(&mut key, &mut vec, cond_level(s.cloud.cond), BINARY);
+    // End devices
+    for d in &s.devices {
+        push(&mut key, &mut vec, binary_level(d.cpu), BINARY);
+        push(&mut key, &mut vec, binary_level(d.mem), BINARY);
+        push(&mut key, &mut vec, cond_level(d.cond), BINARY);
+    }
+    EncodedState { key, vec }
+}
+
+/// |State| per Eq. 5: (2*2*2)^N * (9*2*2)^2.
+pub fn state_space_size(users: usize) -> f64 {
+    8f64.powi(users as i32) * 36f64.powi(2)
+}
+
+/// |State x Action| per Eq. 6 (brute-force complexity, Table 11 column).
+pub fn bruteforce_complexity(users: usize, actions_per_device: usize) -> f64 {
+    state_space_size(users) * (actions_per_device as f64).powi(users as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use NetCond::{Regular as R, Weak as W};
+
+    fn state(n: usize) -> SystemState {
+        SystemState {
+            edge: NodeState { cpu: 0.5, mem: 0.2, cond: R },
+            cloud: NodeState { cpu: 0.1, mem: 0.8, cond: R },
+            devices: (0..n)
+                .map(|i| NodeState {
+                    cpu: 0.1 * i as f64,
+                    mem: 0.0,
+                    cond: if i % 2 == 0 { R } else { W },
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn discretization_levels() {
+        assert_eq!(binary_level(0.4), 0);
+        assert_eq!(binary_level(0.6), 1);
+        assert_eq!(cpu_level_ec(0.0), 0);
+        assert_eq!(cpu_level_ec(0.999), 8);
+        assert_eq!(cpu_level_ec(1.0), 8);
+        assert_eq!(cpu_level_ec(0.5), 4);
+    }
+
+    #[test]
+    fn vector_dim_matches_eq3() {
+        for n in 1..=5 {
+            assert_eq!(encode(&state(n)).vec.len(), 3 * (n + 2));
+        }
+    }
+
+    #[test]
+    fn key_is_injective_on_distinct_levels() {
+        let mut a = state(3);
+        let e1 = encode(&a);
+        a.devices[0].cpu = 0.9; // flips busy bit
+        let e2 = encode(&a);
+        assert_ne!(e1.key, e2.key);
+        assert_ne!(e1.vec, e2.vec);
+    }
+
+    #[test]
+    fn key_stable_within_level() {
+        let mut a = state(3);
+        let e1 = encode(&a);
+        a.edge.cpu = 0.51; // still level 4 of 9
+        let e2 = encode(&a);
+        assert_eq!(e1.key, e2.key);
+    }
+
+    #[test]
+    fn key_below_state_space_size() {
+        for n in 1..=5 {
+            let e = encode(&state(n));
+            assert!((e.key as f64) < state_space_size(n));
+        }
+    }
+
+    #[test]
+    fn vec_normalized() {
+        let e = encode(&state(5));
+        assert!(e.vec.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn complexity_matches_paper_order() {
+        // Paper Table 11 brute-force column grows from ~1e8-1e9 (3 users)
+        // to ~1e12 (5 users); the exponential growth is the claim.
+        assert!(bruteforce_complexity(5, 24) / bruteforce_complexity(3, 24) > 1e3);
+        assert_eq!(state_space_size(5), 8f64.powi(5) * 1296.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Network substrate: per-link conditions (Table 5 scenarios), message
+//! costs (Table 12), path overheads per offloading target, and shared-link
+//! queueing for simultaneous uploads.
+//!
+//! Topology (paper Fig 4): each end device S_i has one uplink to the edge;
+//! the edge has one uplink to the cloud. Every request is orchestrated by
+//! the cloud-hosted Intelligent Orchestrator, so even locally-executed
+//! inferences pay the (small) update + decision control messages — but
+//! only offloaded ones pay the image-upload request cost, keeping device
+//! performance network-independent as the paper observes in §3.1.
+
+use crate::config::{Calibration, Scenario};
+use crate::types::{DeviceId, NetCond, Tier};
+
+/// The three framework messages of Table 12.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Input image upload to the executing layer (dominant cost).
+    Request,
+    /// Resource-monitoring broadcast to the orchestrator.
+    Update,
+    /// Orchestration decision delivery.
+    Decision,
+}
+
+impl MsgKind {
+    pub fn cost_ms(self, cal: &Calibration, cond: NetCond) -> f64 {
+        let i = (cond == NetCond::Weak) as usize;
+        match self {
+            MsgKind::Request => cal.request_ms[i],
+            MsgKind::Update => cal.update_ms[i],
+            MsgKind::Decision => cal.decision_ms[i],
+        }
+    }
+}
+
+/// Static network model for one scenario.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub scenario: Scenario,
+    pub cal: Calibration,
+}
+
+impl Network {
+    pub fn new(scenario: Scenario, cal: Calibration) -> Network {
+        Network { scenario, cal }
+    }
+
+    pub fn users(&self) -> usize {
+        self.scenario.users()
+    }
+
+    /// Fixed message overhead for device `i` executing at `tier`.
+    ///
+    /// Local execution never uploads the image (paper §3.1: "performance
+    /// of the user end device is independent of the network connection"),
+    /// so it pays only the update + decision control messages. Edge
+    /// execution pays the full request over the device link; cloud
+    /// execution additionally pays the full set over the edge->cloud hop.
+    pub fn path_overhead_ms(&self, device: DeviceId, tier: Tier) -> f64 {
+        let dev = self.scenario.device_cond(device);
+        let ctl = MsgKind::Update.cost_ms(&self.cal, dev)
+            + MsgKind::Decision.cost_ms(&self.cal, dev);
+        match tier {
+            Tier::Local => ctl,
+            Tier::Edge => ctl + MsgKind::Request.cost_ms(&self.cal, dev),
+            Tier::Cloud => {
+                let e = self.scenario.edge_cond;
+                ctl + MsgKind::Request.cost_ms(&self.cal, dev)
+                    + MsgKind::Request.cost_ms(&self.cal, e)
+                    + MsgKind::Update.cost_ms(&self.cal, e)
+                    + MsgKind::Decision.cost_ms(&self.cal, e)
+            }
+        }
+    }
+
+    /// Average extra queueing when `k_offloaded` requests traverse the
+    /// shared edge ingress simultaneously: the j-th of k serialized
+    /// transfers waits (j-1) slots, so the expected extra is
+    /// (k-1)/2 * link_queue_ms. Zero for local execution.
+    pub fn queueing_ms(&self, tier: Tier, k_offloaded: usize) -> f64 {
+        if tier == Tier::Local || k_offloaded <= 1 {
+            return 0.0;
+        }
+        (k_offloaded.saturating_sub(1)) as f64 / 2.0 * self.cal.link_queue_ms
+    }
+
+    /// The weak-link packet delta the paper injects (20 ms per egress
+    /// packet); exposed for Table 12 regeneration.
+    pub fn weak_delta_ms(&self) -> f64 {
+        self.cal.request_ms[1] - self.cal.request_ms[0]
+    }
+
+    /// Broadcast cost of one resource-monitoring round for device `i`
+    /// (Fig 8 overhead accounting).
+    pub fn monitor_broadcast_ms(&self, device: DeviceId) -> f64 {
+        MsgKind::Update.cost_ms(&self.cal, self.scenario.device_cond(device))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scenario;
+
+    fn net(name: &str, users: usize) -> Network {
+        Network::new(Scenario::by_name(name, users).unwrap(), Calibration::default())
+    }
+
+    #[test]
+    fn table12_message_costs() {
+        let cal = Calibration::default();
+        assert_eq!(MsgKind::Request.cost_ms(&cal, NetCond::Regular), 20.0);
+        assert_eq!(MsgKind::Request.cost_ms(&cal, NetCond::Weak), 137.0);
+        assert_eq!(MsgKind::Update.cost_ms(&cal, NetCond::Regular), 0.4);
+        assert_eq!(MsgKind::Decision.cost_ms(&cal, NetCond::Weak), 2.0);
+    }
+
+    #[test]
+    fn overhead_regular_totals() {
+        let n = net("exp-a", 5);
+        // local: control messages only (1.4 ms regular)
+        assert!((n.path_overhead_ms(0, Tier::Local) - 1.4).abs() < 1e-9);
+        // edge: + request upload = Table 12 total (21.4 ms)
+        assert!((n.path_overhead_ms(0, Tier::Edge) - 21.4).abs() < 1e-9);
+        // cloud: + the full edge->cloud hop (another 21.4)
+        assert!((n.path_overhead_ms(0, Tier::Cloud) - 42.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn local_nearly_network_independent() {
+        // paper §3.1: device performance independent of network condition
+        let r = net("exp-a", 5).path_overhead_ms(0, Tier::Local);
+        let w = net("exp-d", 5).path_overhead_ms(0, Tier::Local);
+        assert!(w - r < 5.0, "local overhead delta {r} -> {w}");
+    }
+
+    #[test]
+    fn weak_device_link_dominates() {
+        let n = net("exp-d", 5);
+        assert!((n.path_overhead_ms(0, Tier::Edge) - 141.0).abs() < 1e-9);
+        assert!(n.path_overhead_ms(0, Tier::Cloud) > n.path_overhead_ms(0, Tier::Edge));
+    }
+
+    #[test]
+    fn mixed_scenario_per_device() {
+        let n = net("exp-b", 5); // R W R W R, edge W
+        assert!(n.path_overhead_ms(0, Tier::Edge) < n.path_overhead_ms(1, Tier::Edge));
+        // cloud path picks up the weak edge hop even for regular devices
+        assert!((n.path_overhead_ms(0, Tier::Cloud) - (21.4 + 141.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queueing_grows_with_offload_count() {
+        let n = net("exp-a", 5);
+        assert_eq!(n.queueing_ms(Tier::Edge, 1), 0.0);
+        assert_eq!(n.queueing_ms(Tier::Local, 5), 0.0);
+        assert!(n.queueing_ms(Tier::Edge, 5) > n.queueing_ms(Tier::Edge, 2));
+    }
+
+    #[test]
+    fn weak_delta_is_paper_emulation() {
+        let n = net("exp-a", 1);
+        assert_eq!(n.weak_delta_ms(), 117.0); // 137 - 20
+    }
+}

@@ -1,0 +1,231 @@
+//! The Intelligent Orchestrator (paper Fig. 4): drives the RL agent over
+//! the synchronous-round environment — training with convergence
+//! detection (Fig. 6/7, Table 11), greedy evaluation (Fig. 5, Tables 8/9),
+//! and the prediction-accuracy check against the brute-force optimum
+//! (§6.1's "100% prediction accuracy" experiment).
+
+use crate::agent::{bruteforce, Agent};
+use crate::metrics::{RoundRecord, RunMetrics};
+use crate::sim::Env;
+use crate::types::Decision;
+use crate::util::stats::Convergence;
+
+/// Training-curve point: (step, windowed average reward).
+pub type CurvePoint = (usize, f64);
+
+#[derive(Debug)]
+pub struct TrainResult {
+    pub steps: usize,
+    pub converged_at: Option<usize>,
+    /// Windowed average-reward curve (Fig. 6's y-axis).
+    pub curve: Vec<CurvePoint>,
+}
+
+pub struct Orchestrator {
+    pub env: Env,
+    pub agent: Box<dyn Agent>,
+}
+
+impl Orchestrator {
+    pub fn new(env: Env, agent: Box<dyn Agent>) -> Orchestrator {
+        Orchestrator { env, agent }
+    }
+
+    /// One orchestrated round (Fig. 4 steps 1-5): observe state, decide,
+    /// execute, reward, learn.
+    pub fn round(&mut self, explore: bool) -> RoundRecord {
+        let state = self.env.encoded();
+        let decision = self.agent.decide(&state, explore);
+        let out = self.env.step(&decision);
+        let next = self.env.encoded();
+        if explore {
+            self.agent.learn(&state, &decision, out.reward, &next);
+        }
+        RoundRecord {
+            step: self.agent.steps(),
+            decision,
+            response_ms: out.responses_ms.clone(),
+            avg_response_ms: out.avg_ms,
+            avg_accuracy: out.avg_accuracy,
+            reward: out.reward,
+            epsilon: f64::NAN,
+        }
+    }
+
+    /// Train until `max_steps` or convergence (rolling-window mean of the
+    /// reward stable within 1% for `patience` windows). `curve_every`
+    /// controls the sampling density of the returned curve.
+    pub fn train(&mut self, max_steps: usize, curve_every: usize) -> TrainResult {
+        let window = (max_steps / 100).clamp(10, 2000);
+        let mut conv = Convergence::new(window, 0.01, 3);
+        let mut curve = Vec::new();
+        let mut acc = 0.0;
+        let mut count = 0usize;
+        for step in 0..max_steps {
+            let rec = self.round(true);
+            conv.push(rec.reward);
+            acc += rec.reward;
+            count += 1;
+            if (step + 1) % curve_every.max(1) == 0 {
+                curve.push((step + 1, acc / count as f64));
+                acc = 0.0;
+                count = 0;
+            }
+            if conv.is_converged() && step > 2 * window {
+                // keep training to max_steps only if caller wants full
+                // curves; for Table 11 we stop at convergence.
+                break;
+            }
+        }
+        TrainResult {
+            steps: self.agent.steps(),
+            converged_at: conv.converged_at,
+            curve,
+        }
+    }
+
+    /// Train for exactly `steps` rounds (full curves for Fig. 6/7).
+    pub fn train_full(&mut self, steps: usize, curve_every: usize) -> TrainResult {
+        let window = (steps / 100).clamp(10, 2000);
+        let mut conv = Convergence::new(window, 0.01, 3);
+        let mut curve = Vec::new();
+        let mut acc = 0.0;
+        let mut count = 0usize;
+        for step in 0..steps {
+            let rec = self.round(true);
+            conv.push(rec.reward);
+            acc += rec.reward;
+            count += 1;
+            if (step + 1) % curve_every.max(1) == 0 {
+                curve.push((step + 1, acc / count as f64));
+                acc = 0.0;
+                count = 0;
+            }
+        }
+        TrainResult { steps: self.agent.steps(), converged_at: conv.converged_at, curve }
+    }
+
+    /// Greedy evaluation over `rounds` (no exploration, no learning).
+    pub fn evaluate(&mut self, rounds: usize) -> RunMetrics {
+        let mut m = RunMetrics::new();
+        for _ in 0..rounds {
+            let rec = self.round(false);
+            m.push(&rec);
+        }
+        m
+    }
+
+    /// The representative greedy decision at the idle system state —
+    /// what the paper's Tables 8/9/10 print per scenario.
+    pub fn representative_decision(&mut self) -> (Decision, f64, f64) {
+        self.env.reset_load();
+        let state = self.env.encoded();
+        let decision = self.agent.decide(&state, false);
+        let avg = self.env.expected_avg_ms(&decision);
+        let acc = self.env.accuracy_of(&decision);
+        (decision, avg, acc)
+    }
+
+    /// Fraction of greedy decisions matching the brute-force optimum's
+    /// objective value over `trials` evolving states (§6.1: the paper
+    /// reports 100% after convergence). Matching is by expected average
+    /// response (distinct decisions can tie exactly).
+    pub fn prediction_accuracy(&mut self, trials: usize, tol: f64) -> f64 {
+        let mut hits = 0usize;
+        for _ in 0..trials {
+            let state = self.env.encoded();
+            let decision = self.agent.decide(&state, false);
+            let ours = self.env.expected_avg_ms(&decision);
+            let acc_ok = self.env.accuracy_of(&decision) > self.env.threshold;
+            if let Some((_, best)) = bruteforce::optimal(&self.env, self.env.threshold) {
+                if acc_ok && (ours - best) / best <= tol {
+                    hits += 1;
+                }
+            }
+            // advance dynamics by actually executing the chosen decision
+            self.env.step(&decision);
+        }
+        hits as f64 / trials as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::baseline::FixedAgent;
+    use crate::agent::qlearning::QTableAgent;
+    use crate::agent::ActionSet;
+    use crate::config::{Algo, Calibration, Hyper, Scenario};
+    use crate::types::{AccuracyConstraint, Tier};
+
+    fn env(users: usize, c: AccuracyConstraint) -> Env {
+        Env::new(Scenario::exp_a(users), Calibration::default(), c, 11)
+    }
+
+    fn ql(users: usize) -> Box<dyn Agent> {
+        Box::new(QTableAgent::new(
+            users,
+            Hyper::paper_defaults(Algo::QLearning, users),
+            ActionSet::full(),
+            13,
+        ))
+    }
+
+    #[test]
+    fn round_records_are_consistent() {
+        let mut o = Orchestrator::new(env(2, AccuracyConstraint::Min), ql(2));
+        let rec = o.round(true);
+        assert_eq!(rec.response_ms.len(), 2);
+        assert!(rec.avg_response_ms > 0.0);
+        assert_eq!(o.agent.steps(), 1);
+    }
+
+    #[test]
+    fn training_improves_over_random() {
+        let mut o = Orchestrator::new(env(2, AccuracyConstraint::Min), ql(2));
+        o.env.freeze(); // single state: tabular convergence is exact
+        let before = o.evaluate(50).response.mean();
+        let _ = o.train_full(15_000, 5000);
+        let after = o.evaluate(50).response.mean();
+        assert!(
+            after < before,
+            "training should reduce avg response: {after} !< {before}"
+        );
+        // trained policy within 40% of the brute-force optimum (the
+        // factored learner with lr 0.9 and shared rewards bounces between
+        // near-equivalent smallest models; the experiment drivers use the
+        // oracle fallback for table-exact decisions)
+        o.env.reset_load();
+        let (_, best) = bruteforce::optimal(&o.env, o.env.threshold).unwrap();
+        let (_, ours, _) = o.representative_decision();
+        assert!(ours <= best * 1.4, "ours={ours} best={best}");
+    }
+
+    #[test]
+    fn fixed_agent_evaluation_matches_anchor() {
+        let users = 5;
+        let mut o = Orchestrator::new(
+            env(users, AccuracyConstraint::Max),
+            Box::new(FixedAgent::new(Tier::Local, users)),
+        );
+        o.env.freeze(); // idle background: the Fig 5 anchor setting
+        let m = o.evaluate(20).response.mean();
+        assert!((m - 459.0).abs() < 20.0, "device-only avg {m}");
+    }
+
+    #[test]
+    fn evaluation_does_not_learn() {
+        let mut o = Orchestrator::new(env(1, AccuracyConstraint::Min), ql(1));
+        o.evaluate(10);
+        assert_eq!(o.agent.steps(), 0);
+    }
+
+    #[test]
+    fn trained_agent_predicts_optimum_frozen_env() {
+        let mut o = Orchestrator::new(env(1, AccuracyConstraint::Min), ql(1));
+        o.env.freeze();
+        let _ = o.train_full(3000, 1000);
+        let acc = o.prediction_accuracy(10, 0.02);
+        assert!(acc >= 0.9, "prediction accuracy {acc}");
+    }
+}

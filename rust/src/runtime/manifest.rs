@@ -1,0 +1,223 @@
+//! Typed view over `artifacts/manifest.json` (produced by
+//! `python/compile/aot.py`): the model catalog with graph/weight file
+//! mappings, the DQN artifact set, and golden references for integration
+//! tests.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::types::ModelId;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct GraphEntry {
+    /// batch size -> HLO text file name
+    pub files: BTreeMap<usize, String>,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub id: ModelId,
+    pub alpha: f64,
+    pub dtype: String,
+    pub top5: f64,
+    pub mmacs: f64,
+    pub graph: String,
+    pub weights: String,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct DqnEntry {
+    pub fwd: String,
+    pub train: String,
+    pub init: String,
+    pub state_dim: usize,
+    pub hidden: usize,
+    pub actions_per_device: usize,
+    pub param_count: usize,
+    pub train_batch: usize,
+    pub gamma: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: String,
+    pub use_pallas: bool,
+    pub img: (usize, usize, usize),
+    pub classes: usize,
+    pub models: Vec<ModelEntry>,
+    pub graphs: BTreeMap<String, GraphEntry>,
+    pub dqn: BTreeMap<usize, DqnEntry>,
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("{path} (run `make artifacts` first)"))?;
+        let j = Json::parse(&src).map_err(|e| anyhow!("parse {path}: {e}"))?;
+
+        let img = j.field("image").map_err(|e| anyhow!(e))?;
+        let geta = |k: &str| -> Result<usize> {
+            img.field(k).map_err(|e| anyhow!(e))?.as_usize().ok_or_else(|| anyhow!("image.{k}"))
+        };
+
+        let mut graphs = BTreeMap::new();
+        for (name, g) in j.field("graphs").map_err(|e| anyhow!(e))?.as_obj().unwrap() {
+            let mut files = BTreeMap::new();
+            for (b, f) in g.field("files").map_err(|e| anyhow!(e))?.as_obj().unwrap() {
+                files.insert(
+                    b.parse::<usize>().map_err(|e| anyhow!("batch key {b}: {e}"))?,
+                    f.as_str().unwrap().to_string(),
+                );
+            }
+            graphs.insert(
+                name.clone(),
+                GraphEntry {
+                    files,
+                    param_count: g
+                        .field("param_count")
+                        .map_err(|e| anyhow!(e))?
+                        .as_usize()
+                        .unwrap(),
+                },
+            );
+        }
+
+        let mut models = Vec::new();
+        for m in j.field("models").map_err(|e| anyhow!(e))?.as_arr().unwrap() {
+            let id_str = m.field("id").map_err(|e| anyhow!(e))?.as_str().unwrap();
+            let idx: u8 = id_str.trim_start_matches('d').parse()?;
+            models.push(ModelEntry {
+                id: ModelId(idx),
+                alpha: m.field("alpha").map_err(|e| anyhow!(e))?.as_f64().unwrap(),
+                dtype: m.field("dtype").map_err(|e| anyhow!(e))?.as_str().unwrap().into(),
+                top5: m.field("top5").map_err(|e| anyhow!(e))?.as_f64().unwrap(),
+                mmacs: m.field("mmacs").map_err(|e| anyhow!(e))?.as_f64().unwrap(),
+                graph: m.field("graph").map_err(|e| anyhow!(e))?.as_str().unwrap().into(),
+                weights: m.field("weights").map_err(|e| anyhow!(e))?.as_str().unwrap().into(),
+                param_count: m.field("param_count").map_err(|e| anyhow!(e))?.as_usize().unwrap(),
+            });
+        }
+        models.sort_by_key(|m| m.id);
+
+        let mut dqn = BTreeMap::new();
+        for (n, d) in j.field("dqn").map_err(|e| anyhow!(e))?.as_obj().unwrap() {
+            let gf = |k: &str| -> Result<&Json> { d.field(k).map_err(|e| anyhow!(e)) };
+            dqn.insert(
+                n.parse::<usize>()?,
+                DqnEntry {
+                    fwd: gf("fwd")?.as_str().unwrap().into(),
+                    train: gf("train")?.as_str().unwrap().into(),
+                    init: gf("init")?.as_str().unwrap().into(),
+                    state_dim: gf("state_dim")?.as_usize().unwrap(),
+                    hidden: gf("hidden")?.as_usize().unwrap(),
+                    actions_per_device: gf("actions_per_device")?.as_usize().unwrap(),
+                    param_count: gf("param_count")?.as_usize().unwrap(),
+                    train_batch: gf("train_batch")?.as_usize().unwrap(),
+                    gamma: gf("gamma")?.as_f64().unwrap(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_string(),
+            use_pallas: j.field("use_pallas").map_err(|e| anyhow!(e))?.as_bool().unwrap_or(true),
+            img: (geta("h")?, geta("w")?, geta("c")?),
+            classes: geta("classes")?,
+            models,
+            graphs,
+            dqn,
+            raw: j,
+        })
+    }
+
+    pub fn model(&self, id: ModelId) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.id == id)
+            .ok_or_else(|| anyhow!("model {id} not in manifest"))
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphEntry> {
+        self.graphs.get(name).ok_or_else(|| anyhow!("graph {name} not in manifest"))
+    }
+
+    pub fn dqn_for(&self, users: usize) -> Result<&DqnEntry> {
+        self.dqn.get(&users).ok_or_else(|| {
+            anyhow!("no DQN artifact for {users} users (built: {:?})", self.dqn.keys())
+        })
+    }
+
+    pub fn path(&self, file: &str) -> String {
+        format!("{}/{file}", self.dir)
+    }
+
+    /// Cross-check against the static Table 4 catalog (DESIGN.md: MAC
+    /// ratios must match even though absolute MACs differ by geometry).
+    pub fn validate_against_catalog(&self) -> Result<()> {
+        for m in &self.models {
+            let cat = crate::models::info(m.id);
+            if (cat.top5 - m.top5).abs() > 1e-6 {
+                return Err(anyhow!("{}: top5 mismatch manifest={} catalog={}", m.id, m.top5, cat.top5));
+            }
+            if (cat.alpha - m.alpha).abs() > 1e-9 {
+                return Err(anyhow!("{}: alpha mismatch", m.id));
+            }
+        }
+        // MAC ratio d0/d3 within 2x of the paper's 569/41
+        let r_ours = self.model(ModelId(0))?.mmacs / self.model(ModelId(3))?.mmacs;
+        let r_paper = 569.0 / 41.0;
+        if !(r_paper / 2.0..r_paper * 2.0).contains(&r_ours) {
+            return Err(anyhow!("MAC ratio drifted: ours {r_ours:.1} paper {r_paper:.1}"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<String> {
+        let d = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(&format!("{d}/manifest.json")).exists().then(|| d.to_string())
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 8);
+        assert_eq!(m.img.0, 64);
+        assert!(m.graphs.len() >= 4);
+        assert!(m.dqn.contains_key(&3) && m.dqn.contains_key(&5));
+        m.validate_against_catalog().unwrap();
+    }
+
+    #[test]
+    fn model_and_graph_lookup() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let d0 = m.model(ModelId(0)).unwrap();
+        assert_eq!(d0.dtype, "fp32");
+        let g = m.graph(&d0.graph).unwrap();
+        assert!(g.files.contains_key(&1));
+        assert!(g.files.contains_key(&8));
+        assert_eq!(g.param_count, d0.param_count);
+        // int8 variant shares the fp32 graph
+        let d4 = m.model(ModelId(4)).unwrap();
+        assert_eq!(d4.graph, d0.graph);
+        assert_ne!(d4.weights, d0.weights);
+    }
+
+    #[test]
+    fn missing_dir_errors_with_hint() {
+        let e = Manifest::load("/nonexistent").unwrap_err();
+        assert!(format!("{e:#}").contains("make artifacts"));
+    }
+}

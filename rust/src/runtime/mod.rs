@@ -1,0 +1,333 @@
+//! PJRT runtime (Layer 3's bridge to the AOT artifacts).
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): loads HLO *text*
+//! artifacts (`HloModuleProto::from_text_file` — see aot.py for why text),
+//! compiles them once per process into a cache, holds the flat-f32 weight
+//! store, and exposes typed entry points for the serving path
+//! (`infer`) and the DQN agent (`dqn_forward` / `dqn_train`).
+//!
+//! Python never appears here: after `make artifacts` the Rust binary is
+//! self-contained.
+
+mod manifest;
+pub mod tensor;
+
+pub use manifest::{DqnEntry, GraphEntry, Manifest, ModelEntry};
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::types::ModelId;
+
+/// A compiled HLO graph ready to execute.
+pub struct LoadedGraph {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedGraph {
+    /// Execute with f32 literal inputs; returns the flattened f32 outputs
+    /// of the graph's result tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<Vec<f32>>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.iter().map(|p| Ok(p.to_vec::<f32>()?)).collect()
+    }
+}
+
+/// The artifact runtime: PJRT client + manifest + lazy compile cache +
+/// weight store. NOTE: the underlying `xla` crate types are `!Send`
+/// (internal `Rc`), so `Runtime` is single-threaded; cross-thread users go
+/// through [`SharedRuntime`], which serializes access behind a mutex and
+/// only ever moves plain `Vec<f32>` across the boundary.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    graphs: Mutex<HashMap<String, Arc<LoadedGraph>>>,
+    weights: Mutex<HashMap<String, Arc<Vec<f32>>>>,
+}
+
+impl Runtime {
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        manifest.validate_against_catalog()?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Runtime {
+            manifest,
+            client,
+            graphs: Mutex::new(HashMap::new()),
+            weights: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) an HLO-text artifact by file name.
+    pub fn graph(&self, file: &str) -> Result<Arc<LoadedGraph>> {
+        if let Some(g) = self.graphs.lock().unwrap().get(file) {
+            return Ok(Arc::clone(g));
+        }
+        let path = self.manifest.path(file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {file}"))?;
+        crate::info!("compiled {file} in {:.2}s", t0.elapsed().as_secs_f64());
+        let g = Arc::new(LoadedGraph { name: file.to_string(), exe });
+        self.graphs.lock().unwrap().insert(file.to_string(), Arc::clone(&g));
+        Ok(g)
+    }
+
+    /// Cached flat weight vector for a `.bin` artifact.
+    pub fn weights(&self, file: &str) -> Result<Arc<Vec<f32>>> {
+        if let Some(w) = self.weights.lock().unwrap().get(file) {
+            return Ok(Arc::clone(w));
+        }
+        let w = Arc::new(tensor::read_f32_bin(&self.manifest.path(file))?);
+        self.weights.lock().unwrap().insert(file.to_string(), Arc::clone(&w));
+        Ok(w)
+    }
+
+    /// Batch sizes available for a model's serving graph, ascending.
+    pub fn batches_for(&self, id: ModelId) -> Result<Vec<usize>> {
+        let entry = self.manifest.model(id)?;
+        Ok(self.manifest.graph(&entry.graph)?.files.keys().copied().collect())
+    }
+
+    /// Run MobileNet inference for `id` on a batch of images
+    /// (flat NHWC f32, `n` images). Pads to the smallest compiled batch
+    /// >= n and truncates the logits back to `n` rows.
+    pub fn infer(&self, id: ModelId, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        let (h, w, c) = self.manifest.img;
+        let classes = self.manifest.classes;
+        if images.len() != n * h * w * c {
+            return Err(anyhow!(
+                "images len {} != n {} * {h}x{w}x{c}",
+                images.len(),
+                n
+            ));
+        }
+        let entry = self.manifest.model(id)?;
+        let graph_entry = self.manifest.graph(&entry.graph)?;
+        let &batch = graph_entry
+            .files
+            .keys()
+            .find(|&&b| b >= n)
+            .or_else(|| graph_entry.files.keys().last())
+            .ok_or_else(|| anyhow!("no batches for {id}"))?;
+        if n > batch {
+            return Err(anyhow!("batch {n} exceeds max compiled batch {batch} for {id}"));
+        }
+        let file = &graph_entry.files[&batch];
+        let graph = self.graph(file)?;
+        let weights = self.weights(&entry.weights)?;
+
+        let mut padded = images.to_vec();
+        padded.resize(batch * h * w * c, 0.0);
+        let params = tensor::literal(&weights, &[weights.len()])?;
+        let imgs = tensor::literal(&padded, &[batch, h, w, c])?;
+        let out = graph.execute(&[params, imgs])?;
+        let logits = &out[0];
+        Ok(logits[..n * classes].to_vec())
+    }
+
+    /// DQN forward for `users`: state vector (len D) -> per-device
+    /// Q-values, row-major [users x actions_per_device].
+    pub fn dqn_forward(&self, users: usize, params: &[f32], state: &[f32]) -> Result<Vec<f32>> {
+        let d = self.manifest.dqn_for(users)?;
+        if state.len() != d.state_dim || params.len() != d.param_count {
+            return Err(anyhow!(
+                "dqn_forward dims: state {} (want {}), params {} (want {})",
+                state.len(),
+                d.state_dim,
+                params.len(),
+                d.param_count
+            ));
+        }
+        let graph = self.graph(&d.fwd.clone())?;
+        let p = tensor::literal(params, &[params.len()])?;
+        let s = tensor::literal(state, &[1, d.state_dim])?;
+        let out = graph.execute(&[p, s])?;
+        Ok(out[0].clone())
+    }
+
+    /// One DQN SGD train step over a replay minibatch.
+    /// Shapes: s/s2 [B, D] flat; a_onehot [B, users, 24] flat; r [B].
+    /// Returns (new_params, loss).
+    pub fn dqn_train(
+        &self,
+        users: usize,
+        params: &[f32],
+        s: &[f32],
+        a_onehot: &[f32],
+        r: &[f32],
+        s2: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let d = self.manifest.dqn_for(users)?;
+        let b = d.train_batch;
+        let apd = d.actions_per_device;
+        if s.len() != b * d.state_dim || s2.len() != b * d.state_dim {
+            return Err(anyhow!("dqn_train state dims"));
+        }
+        if a_onehot.len() != b * users * apd || r.len() != b {
+            return Err(anyhow!("dqn_train batch dims"));
+        }
+        let graph = self.graph(&d.train.clone())?;
+        let out = graph.execute(&[
+            tensor::literal(params, &[params.len()])?,
+            tensor::literal(s, &[b, d.state_dim])?,
+            tensor::literal(a_onehot, &[b, users, apd])?,
+            tensor::literal(r, &[b])?,
+            tensor::literal(s2, &[b, d.state_dim])?,
+            tensor::scalar(lr),
+        ])?;
+        let new_params = out[0].clone();
+        let loss = out[1][0];
+        Ok((new_params, loss))
+    }
+
+    /// Initial DQN parameters for `users` (from dqn_init_n*.bin).
+    pub fn dqn_init(&self, users: usize) -> Result<Vec<f32>> {
+        let d = self.manifest.dqn_for(users)?;
+        Ok((*self.weights(&d.init.clone())?).clone())
+    }
+
+    /// Pre-compile everything the serving path needs (startup warm-up so
+    /// first-request latency is not a compile).
+    pub fn warmup_serving(&self, models: &[ModelId]) -> Result<()> {
+        for &id in models {
+            let entry = self.manifest.model(id)?;
+            for file in self.manifest.graph(&entry.graph)?.files.values() {
+                self.graph(file)?;
+            }
+            self.weights(&entry.weights.clone())?;
+        }
+        Ok(())
+    }
+}
+
+/// `Runtime` wrapped for cross-thread use.
+///
+/// Safety: every xla object (client, executables, literals, buffers) is
+/// created, used and dropped while holding the mutex, so the non-atomic
+/// `Rc` refcounts inside the `xla` crate are never touched concurrently.
+/// Only plain `Vec<f32>`/`f32` values cross the API boundary.
+struct SendCell(Runtime);
+// SAFETY: see above — all access is serialized by SharedRuntime's Mutex.
+unsafe impl Send for SendCell {}
+
+pub struct SharedRuntime {
+    /// Manifest copy readable without taking the runtime lock.
+    pub manifest: Manifest,
+    inner: Mutex<SendCell>,
+}
+
+impl SharedRuntime {
+    pub fn load(artifacts_dir: &str) -> Result<SharedRuntime> {
+        let rt = Runtime::load(artifacts_dir)?;
+        Ok(SharedRuntime { manifest: rt.manifest.clone(), inner: Mutex::new(SendCell(rt)) })
+    }
+
+    fn with<T>(&self, f: impl FnOnce(&Runtime) -> T) -> T {
+        let guard = self.inner.lock().unwrap();
+        f(&guard.0)
+    }
+
+    pub fn infer(&self, id: ModelId, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        self.with(|rt| rt.infer(id, images, n))
+    }
+
+    pub fn dqn_forward(&self, users: usize, params: &[f32], state: &[f32]) -> Result<Vec<f32>> {
+        self.with(|rt| rt.dqn_forward(users, params, state))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn dqn_train(
+        &self,
+        users: usize,
+        params: &[f32],
+        s: &[f32],
+        a_onehot: &[f32],
+        r: &[f32],
+        s2: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        self.with(|rt| rt.dqn_train(users, params, s, a_onehot, r, s2, lr))
+    }
+
+    pub fn dqn_init(&self, users: usize) -> Result<Vec<f32>> {
+        self.with(|rt| rt.dqn_init(users))
+    }
+
+    pub fn warmup_serving(&self, models: &[ModelId]) -> Result<()> {
+        self.with(|rt| rt.warmup_serving(models))
+    }
+}
+
+/// Shared runtime for tests/benches (compiling MobileNet graphs takes
+/// seconds; do it once per process).
+pub fn shared(artifacts_dir: &str) -> &'static SharedRuntime {
+    static RT: OnceLock<SharedRuntime> = OnceLock::new();
+    RT.get_or_init(|| SharedRuntime::load(artifacts_dir).expect("runtime load"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rt() -> Option<Runtime> {
+        let d = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        std::path::Path::new(&format!("{d}/manifest.json"))
+            .exists()
+            .then(|| Runtime::load(d).unwrap())
+    }
+
+    #[test]
+    fn kernel_demo_matches_golden() {
+        let Some(rt) = rt() else { return };
+        let kd = rt.manifest.raw.field("kernel_demo").unwrap();
+        let (m, k, n) = (
+            kd.field("m").unwrap().as_usize().unwrap(),
+            kd.field("k").unwrap().as_usize().unwrap(),
+            kd.field("n").unwrap().as_usize().unwrap(),
+        );
+        let g = rt.graph(kd.field("file").unwrap().as_str().unwrap()).unwrap();
+        let x = tensor::read_f32_bin(&rt.manifest.path("goldens/matmul_x.bin")).unwrap();
+        let w = tensor::read_f32_bin(&rt.manifest.path("goldens/matmul_w.bin")).unwrap();
+        let want = tensor::read_f32_bin(&rt.manifest.path("goldens/matmul_y.bin")).unwrap();
+        let out = g
+            .execute(&[
+                tensor::literal(&x, &[m, k]).unwrap(),
+                tensor::literal(&w, &[k, n]).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out[0].len(), want.len());
+        for (a, b) in out[0].iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn graph_cache_returns_same_arc() {
+        let Some(rt) = rt() else { return };
+        let f = "kernel_matmul.hlo.txt";
+        let a = rt.graph(f).unwrap();
+        let b = rt.graph(f).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn infer_rejects_bad_sizes() {
+        let Some(rt) = rt() else { return };
+        assert!(rt.infer(ModelId(0), &[0.0; 10], 1).is_err());
+        let (h, w, c) = rt.manifest.img;
+        let img = vec![0.0; 100 * h * w * c];
+        assert!(rt.infer(ModelId(0), &img, 100).is_err()); // > max batch
+    }
+}

@@ -1,0 +1,82 @@
+//! Tensor plumbing between the flat-f32 artifact convention and the xla
+//! crate's `Literal`s: .bin weight loading, shaped literal construction,
+//! and output extraction.
+
+use anyhow::{bail, Context, Result};
+
+/// Read a little-endian f32 `.bin` produced by `aot.py::write_bin`.
+pub fn read_f32_bin(path: &str) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write the same format back (checkpointing trained DQN params).
+pub fn write_f32_bin(path: &str, data: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {path}"))
+}
+
+/// Build a shaped f32 literal from a flat slice.
+pub fn literal(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    if n != data.len() {
+        bail!("literal shape {:?} wants {} elements, got {}", dims, n, data.len());
+    }
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Scalar f32 literal.
+pub fn scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a flat f32 vector from a literal.
+pub fn to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_roundtrip() {
+        let path = std::env::temp_dir().join("eeco_tensor_test.bin");
+        let path = path.to_str().unwrap().to_string();
+        let data = vec![1.5f32, -2.25, 0.0, 3.0e7];
+        write_f32_bin(&path, &data).unwrap();
+        assert_eq!(read_f32_bin(&path).unwrap(), data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_length_rejected() {
+        let path = std::env::temp_dir().join("eeco_tensor_bad.bin");
+        std::fs::write(&path, [0u8; 5]).unwrap();
+        assert!(read_f32_bin(path.to_str().unwrap()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(literal(&[1.0, 2.0], &[3]).is_err());
+        let l = literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn missing_file_context() {
+        let e = read_f32_bin("/nonexistent/x.bin").unwrap_err();
+        assert!(format!("{e:#}").contains("/nonexistent/x.bin"));
+    }
+}

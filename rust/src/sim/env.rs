@@ -1,0 +1,275 @@
+//! The synchronous-round environment the RL agents interact with.
+//!
+//! Paper §4.2.2: all end devices submit one inference request per round
+//! (synchronous requests eliminate ambiguity between state vectors and
+//! optimal actions). Each `step(decision)`:
+//!
+//! 1. computes per-device response times from the calibrated latency model
+//!    under the current monitored state,
+//! 2. evaluates the Eq. 4 reward (accuracy-constrained negative average
+//!    response time),
+//! 3. advances the background-load Markov dynamics (what makes the Table 3
+//!    state vector informative),
+//! 4. returns the outcome + the next encoded state.
+
+use crate::config::{Calibration, Scenario};
+use crate::models;
+use crate::monitor::{self, EncodedState, NodeState, SystemState};
+use crate::network::Network;
+use crate::sim::latency::ResponseModel;
+use crate::types::{AccuracyConstraint, Decision};
+use crate::util::rng::Rng;
+
+/// Background-load dynamics parameters (Markov flips / random walk).
+#[derive(Debug, Clone)]
+pub struct Dynamics {
+    /// Per-round probability an end device's CPU busy bit flips.
+    pub p_dev_cpu_flip: f64,
+    /// Per-round probability any node's memory busy bit flips.
+    pub p_mem_flip: f64,
+    /// Per-round probability the edge/cloud background level random-walks.
+    pub p_ec_walk: f64,
+}
+
+impl Default for Dynamics {
+    fn default() -> Self {
+        Dynamics { p_dev_cpu_flip: 0.05, p_mem_flip: 0.02, p_ec_walk: 0.10 }
+    }
+}
+
+/// One round's outcome.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    pub responses_ms: Vec<f64>,
+    pub avg_ms: f64,
+    pub avg_accuracy: f64,
+    pub accuracy_ok: bool,
+    pub reward: f64,
+}
+
+pub struct Env {
+    pub model: ResponseModel,
+    pub state: SystemState,
+    pub threshold: f64,
+    pub dynamics: Dynamics,
+    penalty_ms: f64,
+    top5: [f64; crate::types::NUM_MODELS],
+    rng: Rng,
+    pub steps: usize,
+}
+
+impl Env {
+    pub fn new(
+        scenario: Scenario,
+        cal: Calibration,
+        constraint: AccuracyConstraint,
+        seed: u64,
+    ) -> Env {
+        let users = scenario.users();
+        let state = SystemState {
+            edge: NodeState::idle(scenario.edge_cond),
+            cloud: NodeState::idle(crate::types::NetCond::Regular),
+            devices: (0..users).map(|i| NodeState::idle(scenario.device_cond(i))).collect(),
+        };
+        let model = ResponseModel::new(Network::new(scenario, cal));
+        let penalty_ms = model.max_response_ms();
+        Env {
+            model,
+            state,
+            threshold: constraint.threshold(),
+            dynamics: Dynamics::default(),
+            penalty_ms,
+            top5: models::top5_table(),
+            rng: Rng::new(seed),
+            steps: 0,
+        }
+    }
+
+    pub fn users(&self) -> usize {
+        self.state.users()
+    }
+
+    pub fn penalty_ms(&self) -> f64 {
+        self.penalty_ms
+    }
+
+    /// Current encoded state (what Resource Monitoring broadcasts).
+    pub fn encoded(&self) -> EncodedState {
+        monitor::encode(&self.state)
+    }
+
+    /// Eq. 4: negative average response time, or the worst-case penalty
+    /// when the average-accuracy constraint is violated.
+    pub fn reward(&self, avg_ms: f64, avg_accuracy: f64) -> f64 {
+        if avg_accuracy > self.threshold {
+            -avg_ms
+        } else {
+            -self.penalty_ms
+        }
+    }
+
+    /// Apply a joint decision, observe responses, advance dynamics.
+    pub fn step(&mut self, decision: &Decision) -> StepOutcome {
+        assert_eq!(decision.n_users(), self.users(), "decision arity");
+        let responses = self.model.sampled_responses(decision, &self.state, &mut self.rng);
+        let avg_ms = responses.iter().sum::<f64>() / responses.len() as f64;
+        let avg_accuracy = decision.avg_accuracy(&self.top5);
+        let accuracy_ok = avg_accuracy > self.threshold;
+        let reward = self.reward(avg_ms, avg_accuracy);
+        self.advance();
+        self.steps += 1;
+        StepOutcome { responses_ms: responses, avg_ms, avg_accuracy, accuracy_ok, reward }
+    }
+
+    /// Deterministic objective for a decision under the *current* state —
+    /// what the brute-force oracle enumerates (noise-free, Eq. 2's P1).
+    pub fn expected_avg_ms(&self, decision: &Decision) -> f64 {
+        let r = self.model.expected_responses(decision, &self.state);
+        r.iter().sum::<f64>() / r.len() as f64
+    }
+
+    pub fn accuracy_of(&self, decision: &Decision) -> f64 {
+        decision.avg_accuracy(&self.top5)
+    }
+
+    /// Background-load Markov dynamics (monitorable state evolution).
+    fn advance(&mut self) {
+        let d = self.dynamics.clone();
+        for dev in &mut self.state.devices {
+            if self.rng.bool(d.p_dev_cpu_flip) {
+                dev.cpu = if monitor::binary_level(dev.cpu) == 1 { 0.1 } else { 0.9 };
+            }
+            if self.rng.bool(d.p_mem_flip) {
+                dev.mem = if monitor::binary_level(dev.mem) == 1 { 0.1 } else { 0.9 };
+            }
+        }
+        for node in [&mut self.state.edge, &mut self.state.cloud] {
+            if self.rng.bool(d.p_ec_walk) {
+                // Mean-reverting walk: background bursts arrive but decay
+                // towards idle (p_down > p_up), so the near-idle states the
+                // paper's tables are reported at dominate the visit mass.
+                let delta = if self.rng.bool(0.35) { 1.0 } else { -1.0 };
+                node.cpu = (node.cpu + delta / 9.0).clamp(0.0, 8.0 / 9.0 + 1e-9);
+            }
+            if self.rng.bool(d.p_mem_flip) {
+                node.mem = if monitor::binary_level(node.mem) == 1 { 0.1 } else { 0.9 };
+            }
+        }
+    }
+
+    /// Freeze dynamics (deterministic evaluation of learned policies).
+    pub fn freeze(&mut self) {
+        self.dynamics = Dynamics { p_dev_cpu_flip: 0.0, p_mem_flip: 0.0, p_ec_walk: 0.0 };
+    }
+
+    /// Reset background load to idle (start of an evaluation episode).
+    pub fn reset_load(&mut self) {
+        for dev in &mut self.state.devices {
+            dev.cpu = 0.0;
+            dev.mem = 0.0;
+        }
+        self.state.edge.cpu = 0.0;
+        self.state.edge.mem = 0.0;
+        self.state.cloud.cpu = 0.0;
+        self.state.cloud.mem = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::{Action, ModelId, Tier};
+
+    fn env(constraint: AccuracyConstraint) -> Env {
+        Env::new(Scenario::exp_a(3), Calibration::default(), constraint, 7)
+    }
+
+    fn decision(n: usize, m: u8) -> Decision {
+        Decision::uniform(n, Action { tier: Tier::Local, model: ModelId(m) })
+    }
+
+    #[test]
+    fn step_produces_consistent_outcome() {
+        let mut e = env(AccuracyConstraint::Min);
+        let out = e.step(&decision(3, 0));
+        assert_eq!(out.responses_ms.len(), 3);
+        assert!((out.avg_ms - out.responses_ms.iter().sum::<f64>() / 3.0).abs() < 1e-9);
+        assert!(out.accuracy_ok);
+        assert!((out.reward + out.avg_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constraint_violation_gets_penalty() {
+        let mut e = env(AccuracyConstraint::AtLeast(85.0));
+        let out = e.step(&decision(3, 7)); // d7: 72.8% < 85%
+        assert!(!out.accuracy_ok);
+        assert_eq!(out.reward, -e.penalty_ms());
+        assert!(out.reward < -out.avg_ms); // penalty is worse than honesty
+    }
+
+    #[test]
+    fn max_constraint_requires_d0() {
+        let e = env(AccuracyConstraint::Max);
+        assert!(e.accuracy_of(&decision(3, 0)) > e.threshold);
+        assert!(e.accuracy_of(&decision(3, 4)) < e.threshold); // d4: 88.9 < 89.89
+    }
+
+    #[test]
+    fn dynamics_eventually_change_state() {
+        let mut e = env(AccuracyConstraint::Min);
+        let k0 = e.encoded().key;
+        let mut changed = false;
+        for _ in 0..200 {
+            e.step(&decision(3, 0));
+            if e.encoded().key != k0 {
+                changed = true;
+                break;
+            }
+        }
+        assert!(changed, "background dynamics never moved the state");
+    }
+
+    #[test]
+    fn frozen_env_is_static() {
+        let mut e = env(AccuracyConstraint::Min);
+        e.freeze();
+        let k0 = e.encoded().key;
+        for _ in 0..50 {
+            e.step(&decision(3, 0));
+        }
+        assert_eq!(e.encoded().key, k0);
+    }
+
+    #[test]
+    fn expected_avg_is_deterministic() {
+        let e = env(AccuracyConstraint::Min);
+        let d = decision(3, 2);
+        assert_eq!(e.expected_avg_ms(&d), e.expected_avg_ms(&d));
+    }
+
+    #[test]
+    fn seeded_runs_reproduce() {
+        let run = |seed| {
+            let mut e = Env::new(
+                Scenario::exp_b(4),
+                Calibration::default(),
+                AccuracyConstraint::Min,
+                seed,
+            );
+            (0..20).map(|_| e.step(&decision(4, 1)).avg_ms).collect::<Vec<_>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4));
+    }
+
+    #[test]
+    fn reset_load_returns_to_idle_key() {
+        let mut e = env(AccuracyConstraint::Min);
+        let k0 = e.encoded().key;
+        for _ in 0..100 {
+            e.step(&decision(3, 0));
+        }
+        e.reset_load();
+        assert_eq!(e.encoded().key, k0);
+    }
+}

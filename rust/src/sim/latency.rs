@@ -1,0 +1,291 @@
+//! Closed-form response-time model (Eq. 1 instantiated; DESIGN.md §6).
+//!
+//! For a synchronous round with joint decision `o`, device i's response is
+//!
+//!   T_i = compute(model_i, tier_i, k_tier, background)
+//!       + path_overhead(i, tier_i)            (Table 12 messages)
+//!       + queueing(tier_i, #offloaded)        (shared edge ingress)
+//!       + monitoring overhead                 (Fig 8: < 0.8%)
+//!
+//! with processor-sharing contention at shared tiers, a busy-CPU multiplier
+//! on occupied end devices, and background-load slowdown on edge/cloud —
+//! this is what makes the monitored state (Table 3) decision-relevant.
+
+use crate::monitor::SystemState;
+use crate::network::Network;
+use crate::types::{Decision, DeviceId, ModelId, Tier};
+use crate::util::rng::Rng;
+
+/// Slowdown from background utilization on a shared node: a node at 100%
+/// background load services ~60% slower (calibrated against the spread of
+/// the paper's per-scenario tables).
+const BACKGROUND_SLOWDOWN: f64 = 0.6;
+/// Extra slowdown when a node's memory is saturated (paging pressure).
+const MEM_BUSY_SLOWDOWN: f64 = 0.2;
+
+#[derive(Debug, Clone)]
+pub struct ResponseModel {
+    pub net: Network,
+}
+
+impl ResponseModel {
+    pub fn new(net: Network) -> ResponseModel {
+        ResponseModel { net }
+    }
+
+    /// Number of co-scheduled tasks per tier for a joint decision.
+    pub fn tier_counts(decision: &Decision) -> [usize; 3] {
+        let mut counts = [0usize; 3];
+        for a in &decision.0 {
+            counts[a.tier.index()] += 1;
+        }
+        counts
+    }
+
+    /// Deterministic (expected) response time for one device's action
+    /// within the joint decision context.
+    pub fn device_response_ms(
+        &self,
+        device: DeviceId,
+        model: ModelId,
+        tier: Tier,
+        counts: &[usize; 3],
+        sys: &SystemState,
+    ) -> f64 {
+        let cal = &self.net.cal;
+        let k = match tier {
+            Tier::Local => 1, // each end node hosts exactly its own user
+            Tier::Edge => counts[Tier::Edge.index()],
+            Tier::Cloud => counts[Tier::Cloud.index()],
+        };
+        let mut compute = cal.compute_ms_contended(model, tier, k);
+        // Background load on the executing node.
+        let node = match tier {
+            Tier::Local => &sys.devices[device],
+            Tier::Edge => &sys.edge,
+            Tier::Cloud => &sys.cloud,
+        };
+        match tier {
+            Tier::Local => {
+                if crate::monitor::binary_level(node.cpu) == 1 {
+                    compute *= cal.busy_cpu_factor;
+                }
+            }
+            _ => {
+                compute *= 1.0 + BACKGROUND_SLOWDOWN * node.cpu;
+            }
+        }
+        if crate::monitor::binary_level(node.mem) == 1 {
+            compute *= 1.0 + MEM_BUSY_SLOWDOWN;
+        }
+
+        let offloaded = counts[Tier::Edge.index()] + counts[Tier::Cloud.index()];
+        let subtotal = compute
+            + self.net.path_overhead_ms(device, tier)
+            + self.net.queueing_ms(tier, offloaded);
+        subtotal * (1.0 + cal.monitor_overhead_frac)
+    }
+
+    /// Expected per-device responses for a joint decision (no noise) —
+    /// this is the objective the brute-force oracle minimizes.
+    pub fn expected_responses(&self, decision: &Decision, sys: &SystemState) -> Vec<f64> {
+        assert_eq!(decision.n_users(), sys.users(), "decision/users mismatch");
+        let counts = Self::tier_counts(decision);
+        decision
+            .0
+            .iter()
+            .enumerate()
+            .map(|(i, a)| self.device_response_ms(i, a.model, a.tier, &counts, sys))
+            .collect()
+    }
+
+    /// Sampled responses with multiplicative log-normal noise.
+    pub fn sampled_responses(
+        &self,
+        decision: &Decision,
+        sys: &SystemState,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        let sigma = self.net.cal.noise_sigma;
+        self.expected_responses(decision, sys)
+            .into_iter()
+            .map(|t| t * (sigma * rng.normal()).exp())
+            .collect()
+    }
+
+    /// Worst-case response (Eq. 4's penalty when the accuracy constraint is
+    /// violated): the most accurate model, fully contended on the slowest
+    /// placement, weak messaging, busy background — with margin.
+    pub fn max_response_ms(&self) -> f64 {
+        let n = self.net.users();
+        let cal = &self.net.cal;
+        let worst_compute = Tier::ALL
+            .iter()
+            .map(|&t| {
+                let k = if t == Tier::Local { 1 } else { n };
+                let mut c = cal.compute_ms_contended(ModelId(0), t, k);
+                c *= match t {
+                    Tier::Local => cal.busy_cpu_factor,
+                    _ => 1.0 + BACKGROUND_SLOWDOWN,
+                };
+                c * (1.0 + MEM_BUSY_SLOWDOWN)
+            })
+            .fold(0.0, f64::max);
+        let worst_msgs = cal.message_total_ms(crate::types::NetCond::Weak)
+            + cal.update_ms[1]
+            + cal.decision_ms[1];
+        let worst_queue = (n.saturating_sub(1)) as f64 / 2.0 * cal.link_queue_ms;
+        (worst_compute + worst_msgs + worst_queue) * 1.05
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Calibration, Scenario};
+    use crate::monitor::NodeState;
+    use crate::types::{Action, NetCond};
+
+    fn sys(n: usize) -> SystemState {
+        SystemState {
+            edge: NodeState::idle(NetCond::Regular),
+            cloud: NodeState::idle(NetCond::Regular),
+            devices: vec![NodeState::idle(NetCond::Regular); n],
+        }
+    }
+
+    fn model(name: &str, n: usize) -> ResponseModel {
+        ResponseModel::new(Network::new(
+            Scenario::by_name(name, n).unwrap(),
+            Calibration::default(),
+        ))
+    }
+
+    fn uniform(n: usize, tier: Tier, m: u8) -> Decision {
+        Decision::uniform(n, Action { tier, model: ModelId(m) })
+    }
+
+    #[test]
+    fn anchor_device_only_459() {
+        let rm = model("exp-a", 5);
+        let r = rm.expected_responses(&uniform(5, Tier::Local, 0), &sys(5));
+        let avg = r.iter().sum::<f64>() / 5.0;
+        assert!((avg / 459.0 - 1.0).abs() < 0.06, "avg={avg}"); // Fig 5 ~459 ms
+    }
+
+    #[test]
+    fn anchor_edge_only_5users() {
+        let rm = model("exp-a", 5);
+        let r = rm.expected_responses(&uniform(5, Tier::Edge, 0), &sys(5));
+        let avg = r.iter().sum::<f64>() / 5.0;
+        assert!((0.8..1.25).contains(&(avg / 1140.0)), "avg={avg}"); // Fig 1b
+    }
+
+    #[test]
+    fn anchor_cloud_only_5users() {
+        let rm = model("exp-a", 5);
+        let r = rm.expected_responses(&uniform(5, Tier::Cloud, 0), &sys(5));
+        let avg = r.iter().sum::<f64>() / 5.0;
+        assert!((0.7..1.3).contains(&(avg / 665.0)), "avg={avg}"); // Fig 1b
+    }
+
+    #[test]
+    fn single_user_cloud_beats_local_on_regular_net() {
+        let rm = model("exp-a", 1);
+        let s = sys(1);
+        let local = rm.expected_responses(&uniform(1, Tier::Local, 0), &s)[0];
+        let cloud = rm.expected_responses(&uniform(1, Tier::Cloud, 0), &s)[0];
+        assert!(cloud < local, "cloud={cloud} local={local}"); // Fig 1a regular
+    }
+
+    #[test]
+    fn weak_network_flips_preference_to_local() {
+        let rm = model("exp-d", 1);
+        let s = SystemState {
+            edge: NodeState::idle(NetCond::Weak),
+            cloud: NodeState::idle(NetCond::Weak),
+            devices: vec![NodeState::idle(NetCond::Weak)],
+        };
+        let local = rm.expected_responses(&uniform(1, Tier::Local, 0), &s)[0];
+        let cloud = rm.expected_responses(&uniform(1, Tier::Cloud, 0), &s)[0];
+        let cloud_hops = rm.net.path_overhead_ms(0, Tier::Cloud);
+        assert!(local < cloud, "local={local} cloud={cloud}"); // Fig 1a weak
+        assert!(cloud_hops > 270.0, "weak cloud path pays both hops");
+    }
+
+    #[test]
+    fn smaller_models_are_faster_everywhere() {
+        let rm = model("exp-a", 3);
+        let s = sys(3);
+        for tier in Tier::ALL {
+            let d0 = rm.expected_responses(&uniform(3, tier, 0), &s);
+            let d3 = rm.expected_responses(&uniform(3, tier, 3), &s);
+            for (a, b) in d0.iter().zip(&d3) {
+                assert!(b < a);
+            }
+        }
+    }
+
+    #[test]
+    fn busy_device_doubles_local_compute() {
+        let rm = model("exp-a", 1);
+        let mut s = sys(1);
+        let idle = rm.expected_responses(&uniform(1, Tier::Local, 0), &s)[0];
+        s.devices[0].cpu = 0.9;
+        let busy = rm.expected_responses(&uniform(1, Tier::Local, 0), &s)[0];
+        assert!(busy > idle * 1.5);
+    }
+
+    #[test]
+    fn background_load_slows_shared_tiers() {
+        let rm = model("exp-a", 2);
+        let mut s = sys(2);
+        let idle = rm.expected_responses(&uniform(2, Tier::Edge, 0), &s)[0];
+        s.edge.cpu = 1.0;
+        let loaded = rm.expected_responses(&uniform(2, Tier::Edge, 0), &s)[0];
+        assert!(loaded > idle * 1.4);
+    }
+
+    #[test]
+    fn penalty_exceeds_any_decision() {
+        let rm = model("exp-d", 5);
+        let worst = rm.max_response_ms();
+        let s = sys(5);
+        for tier in Tier::ALL {
+            for m in [0u8, 3, 7] {
+                let avg = rm
+                    .expected_responses(&uniform(5, tier, m), &s)
+                    .iter()
+                    .sum::<f64>()
+                    / 5.0;
+                assert!(worst >= avg, "worst={worst} avg={avg} tier={tier:?} m=d{m}");
+            }
+        }
+    }
+
+    #[test]
+    fn noise_is_centered() {
+        let rm = model("exp-a", 1);
+        let s = sys(1);
+        let mut rng = Rng::new(5);
+        let expected = rm.expected_responses(&uniform(1, Tier::Local, 0), &s)[0];
+        let mean: f64 = (0..2000)
+            .map(|_| rm.sampled_responses(&uniform(1, Tier::Local, 0), &s, &mut rng)[0])
+            .sum::<f64>()
+            / 2000.0;
+        assert!((mean / expected - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn tier_counts_sum_to_users() {
+        let d = Decision(vec![
+            Action { tier: Tier::Local, model: ModelId(0) },
+            Action { tier: Tier::Edge, model: ModelId(1) },
+            Action { tier: Tier::Cloud, model: ModelId(2) },
+            Action { tier: Tier::Edge, model: ModelId(3) },
+        ]);
+        let c = ResponseModel::tier_counts(&d);
+        assert_eq!(c, [1, 2, 1]);
+        assert_eq!(c.iter().sum::<usize>(), 4);
+    }
+}

@@ -1,0 +1,11 @@
+//! Simulation substrate: the calibrated response-time model, the
+//! synchronous-round RL environment, and workload generators for the
+//! measured-mode serving path.
+
+pub mod env;
+pub mod latency;
+pub mod workload;
+
+pub use env::{Dynamics, Env, StepOutcome};
+pub use latency::ResponseModel;
+pub use workload::{Arrival, Request, WorkloadGen};

@@ -1,0 +1,139 @@
+//! Workload generation for the measured-mode serving path: synthetic
+//! images (deterministic per request id) and Poisson / periodic arrival
+//! processes per end device.
+
+use crate::types::DeviceId;
+use crate::util::rng::Rng;
+
+/// One inference request as submitted by an end device (paper Fig 4 step 1).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub device: DeviceId,
+    /// Arrival time in ms since workload start.
+    pub arrival_ms: f64,
+}
+
+/// Arrival process per device.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Fixed period (the paper's periodic service requests).
+    Periodic { period_ms: f64 },
+    /// Poisson with given rate (requests/sec).
+    Poisson { rate_per_s: f64 },
+}
+
+/// Generates the merged, time-ordered request stream for N devices.
+pub struct WorkloadGen {
+    arrival: Arrival,
+    users: usize,
+    rng: Rng,
+    next_id: u64,
+}
+
+impl WorkloadGen {
+    pub fn new(arrival: Arrival, users: usize, seed: u64) -> WorkloadGen {
+        assert!(users > 0);
+        WorkloadGen { arrival, users, rng: Rng::new(seed), next_id: 0 }
+    }
+
+    /// Generate all requests with arrival < horizon_ms, time-ordered.
+    pub fn generate(&mut self, horizon_ms: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        for device in 0..self.users {
+            let mut t = 0.0;
+            loop {
+                let dt = match self.arrival {
+                    Arrival::Periodic { period_ms } => period_ms,
+                    Arrival::Poisson { rate_per_s } => {
+                        self.rng.exponential(rate_per_s / 1000.0)
+                    }
+                };
+                t += dt;
+                if t >= horizon_ms {
+                    break;
+                }
+                out.push(Request { id: self.next_id, device, arrival_ms: t });
+                self.next_id += 1;
+            }
+        }
+        out.sort_by(|a, b| a.arrival_ms.partial_cmp(&b.arrival_ms).unwrap());
+        out
+    }
+
+    /// One synchronous round: every device submits at the same instant
+    /// (paper §4.2.2's synchronized request model).
+    pub fn sync_round(&mut self, at_ms: f64) -> Vec<Request> {
+        (0..self.users)
+            .map(|device| {
+                let id = self.next_id;
+                self.next_id += 1;
+                Request { id, device, arrival_ms: at_ms }
+            })
+            .collect()
+    }
+}
+
+/// Deterministic synthetic image for a request id (NHWC f32 in [0,1)).
+pub fn synth_image(id: u64, h: usize, w: usize, c: usize) -> Vec<f32> {
+    let mut rng = Rng::new(0x1AA6E5EED ^ id);
+    (0..h * w * c).map(|_| rng.f64() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn periodic_counts() {
+        let mut g = WorkloadGen::new(Arrival::Periodic { period_ms: 100.0 }, 3, 1);
+        let reqs = g.generate(1000.0);
+        assert_eq!(reqs.len(), 3 * 9); // t = 100..900
+        // time ordered
+        for w in reqs.windows(2) {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms);
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approx() {
+        let mut g = WorkloadGen::new(Arrival::Poisson { rate_per_s: 50.0 }, 1, 2);
+        let reqs = g.generate(60_000.0);
+        let expected = 50.0 * 60.0;
+        assert!((reqs.len() as f64 / expected - 1.0).abs() < 0.1, "n={}", reqs.len());
+    }
+
+    #[test]
+    fn ids_unique_and_devices_covered() {
+        let mut g = WorkloadGen::new(Arrival::Periodic { period_ms: 10.0 }, 4, 3);
+        let reqs = g.generate(100.0);
+        let mut ids: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), reqs.len());
+        for d in 0..4 {
+            assert!(reqs.iter().any(|r| r.device == d));
+        }
+    }
+
+    #[test]
+    fn sync_round_is_simultaneous() {
+        let mut g = WorkloadGen::new(Arrival::Periodic { period_ms: 1.0 }, 5, 4);
+        let round = g.sync_round(42.0);
+        assert_eq!(round.len(), 5);
+        assert!(round.iter().all(|r| r.arrival_ms == 42.0));
+        let round2 = g.sync_round(43.0);
+        assert!(round2[0].id > round[4].id);
+    }
+
+    #[test]
+    fn synth_image_deterministic_and_bounded() {
+        let a = synth_image(7, 8, 8, 3);
+        let b = synth_image(7, 8, 8, 3);
+        let c = synth_image(8, 8, 8, 3);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 192);
+        assert!(a.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+}

@@ -1,0 +1,251 @@
+//! Core domain types shared across the stack: tiers, network conditions,
+//! models, per-device actions and joint decisions (paper §4.1 notation).
+
+use std::fmt;
+
+/// Where a device's inference executes (paper: o_i^S / o_i^E / o_i^C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Tier {
+    /// On the requesting end-node device itself ("L" in paper tables).
+    Local,
+    /// On the shared edge node.
+    Edge,
+    /// On the cloud node (reached through the edge).
+    Cloud,
+}
+
+impl Tier {
+    pub const ALL: [Tier; 3] = [Tier::Local, Tier::Edge, Tier::Cloud];
+
+    pub fn index(self) -> usize {
+        match self {
+            Tier::Local => 0,
+            Tier::Edge => 1,
+            Tier::Cloud => 2,
+        }
+    }
+
+    pub fn from_index(i: usize) -> Tier {
+        Tier::ALL[i]
+    }
+
+    /// Paper-table letter (L/E/C).
+    pub fn letter(self) -> char {
+        match self {
+            Tier::Local => 'L',
+            Tier::Edge => 'E',
+            Tier::Cloud => 'C',
+        }
+    }
+}
+
+impl fmt::Display for Tier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.letter())
+    }
+}
+
+/// Network signal condition of a link (paper Table 5: R / W).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NetCond {
+    Regular,
+    Weak,
+}
+
+impl NetCond {
+    pub fn letter(self) -> char {
+        match self {
+            NetCond::Regular => 'R',
+            NetCond::Weak => 'W',
+        }
+    }
+
+    pub fn from_letter(c: char) -> Option<NetCond> {
+        match c.to_ascii_uppercase() {
+            'R' => Some(NetCond::Regular),
+            'W' => Some(NetCond::Weak),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for NetCond {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.letter())
+    }
+}
+
+/// MobileNet variant id d0..d7 (paper Table 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ModelId(pub u8);
+
+pub const NUM_MODELS: usize = 8;
+
+impl ModelId {
+    pub fn all() -> impl Iterator<Item = ModelId> {
+        (0..NUM_MODELS as u8).map(ModelId)
+    }
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "d{}", self.0)
+    }
+}
+
+/// End-node device index (S1..SN in the paper; 0-based here).
+pub type DeviceId = usize;
+
+/// Per-device action: placement x model (24 combinations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Action {
+    pub tier: Tier,
+    pub model: ModelId,
+}
+
+pub const ACTIONS_PER_DEVICE: usize = 3 * NUM_MODELS; // 24
+
+impl Action {
+    /// Dense index in [0, 24): tier-major, model-minor.
+    pub fn index(self) -> usize {
+        self.tier.index() * NUM_MODELS + self.model.index()
+    }
+
+    pub fn from_index(i: usize) -> Action {
+        assert!(i < ACTIONS_PER_DEVICE, "action index {i}");
+        Action { tier: Tier::from_index(i / NUM_MODELS), model: ModelId((i % NUM_MODELS) as u8) }
+    }
+
+    pub fn all() -> impl Iterator<Item = Action> {
+        (0..ACTIONS_PER_DEVICE).map(Action::from_index)
+    }
+}
+
+impl fmt::Display for Action {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}, {}", self.model, self.tier)
+    }
+}
+
+/// Joint orchestration decision: one action per active end device
+/// (the o vector + model selections of paper Eq. 1/2).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Decision(pub Vec<Action>);
+
+impl Decision {
+    pub fn n_users(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn uniform(n: usize, action: Action) -> Decision {
+        Decision(vec![action; n])
+    }
+
+    /// Spatial average top-5 accuracy of the selected models (the
+    /// `\overline{accuracy}` of Eq. 2), given the per-model accuracies.
+    pub fn avg_accuracy(&self, top5: &[f64; NUM_MODELS]) -> f64 {
+        self.0.iter().map(|a| top5[a.model.index()]).sum::<f64>() / self.0.len() as f64
+    }
+}
+
+impl fmt::Display for Decision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self.0.iter().map(|a| format!("{{{a}}}")).collect();
+        write!(f, "{}", parts.join(" "))
+    }
+}
+
+/// Accuracy constraint levels used throughout the evaluation (paper §6.1.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AccuracyConstraint {
+    /// No constraint ("Min" in tables).
+    Min,
+    /// avg top-5 accuracy must exceed this percentage.
+    AtLeast(f64),
+    /// Maximum achievable (89.9% = d0 everywhere).
+    Max,
+}
+
+impl AccuracyConstraint {
+    /// Threshold in percent for Eq. 4's check.
+    pub fn threshold(self) -> f64 {
+        match self {
+            AccuracyConstraint::Min => 0.0,
+            AccuracyConstraint::AtLeast(t) => t,
+            AccuracyConstraint::Max => 89.89, // strictly-below-d0 epsilon
+        }
+    }
+
+    pub fn label(self) -> String {
+        match self {
+            AccuracyConstraint::Min => "Min".to_string(),
+            AccuracyConstraint::AtLeast(t) => format!("{t:.0}%"),
+            AccuracyConstraint::Max => "Max".to_string(),
+        }
+    }
+
+    /// The five evaluation levels of Fig 5 / Table 9.
+    pub const LEVELS: [AccuracyConstraint; 5] = [
+        AccuracyConstraint::Min,
+        AccuracyConstraint::AtLeast(80.0),
+        AccuracyConstraint::AtLeast(85.0),
+        AccuracyConstraint::AtLeast(89.0),
+        AccuracyConstraint::Max,
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn action_index_roundtrip() {
+        for i in 0..ACTIONS_PER_DEVICE {
+            assert_eq!(Action::from_index(i).index(), i);
+        }
+        assert_eq!(Action::all().count(), 24);
+    }
+
+    #[test]
+    fn tier_letters() {
+        assert_eq!(Tier::Local.letter(), 'L');
+        assert_eq!(Tier::Edge.to_string(), "E");
+        assert_eq!(Tier::from_index(2), Tier::Cloud);
+    }
+
+    #[test]
+    fn netcond_parse() {
+        assert_eq!(NetCond::from_letter('r'), Some(NetCond::Regular));
+        assert_eq!(NetCond::from_letter('W'), Some(NetCond::Weak));
+        assert_eq!(NetCond::from_letter('x'), None);
+    }
+
+    #[test]
+    fn decision_accuracy() {
+        let top5 = [89.9, 88.2, 84.9, 74.2, 88.9, 87.0, 83.2, 72.8];
+        let d = Decision(vec![
+            Action { tier: Tier::Local, model: ModelId(0) },
+            Action { tier: Tier::Edge, model: ModelId(7) },
+        ]);
+        assert!((d.avg_accuracy(&top5) - (89.9 + 72.8) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constraint_thresholds() {
+        assert_eq!(AccuracyConstraint::Min.threshold(), 0.0);
+        assert_eq!(AccuracyConstraint::AtLeast(85.0).threshold(), 85.0);
+        assert!(AccuracyConstraint::Max.threshold() > 89.0);
+        assert_eq!(AccuracyConstraint::LEVELS.len(), 5);
+        assert_eq!(AccuracyConstraint::AtLeast(80.0).label(), "80%");
+    }
+
+    #[test]
+    fn display_formats_match_paper_tables() {
+        let a = Action { tier: Tier::Cloud, model: ModelId(0) };
+        assert_eq!(a.to_string(), "d0, C");
+    }
+}

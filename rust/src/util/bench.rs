@@ -1,0 +1,141 @@
+//! In-crate micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs binaries with `harness = false` that call
+//! [`Bench::new`] + [`Bench::run`]. Each benchmark warms up, then samples
+//! wall time per iteration batch and reports mean / p50 / p99 / throughput.
+//! Results can be dumped as JSON for EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats::Sample;
+
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("mean_ns", self.mean_ns)
+            .set("p50_ns", self.p50_ns)
+            .set("p99_ns", self.p99_ns)
+            .set("iters", self.iters as usize)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    suite: String,
+    warmup: Duration,
+    measure: Duration,
+    max_samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        // EECO_BENCH_FAST=1 shrinks budgets (CI smoke runs).
+        let fast = std::env::var("EECO_BENCH_FAST").is_ok();
+        println!("\n== bench suite: {suite} ==");
+        Bench {
+            suite: suite.to_string(),
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_samples: 2000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, treating one call as one iteration.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) {
+        // Warmup.
+        let t0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // Choose batch so each sample is ~>1µs (timer resolution) but we
+        // still collect many samples inside the budget.
+        let est_ns = (self.warmup.as_nanos() as f64 / warm_iters.max(1) as f64).max(1.0);
+        let batch = ((1_000.0 / est_ns).ceil() as u64).clamp(1, 10_000);
+
+        let mut sample = Sample::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.measure && sample.len() < self.max_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            sample.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            mean_ns: sample.mean(),
+            p50_ns: sample.pct(50.0),
+            p99_ns: sample.pct(99.0),
+            iters: total_iters,
+        };
+        println!(
+            "  {:<44} mean {:>12}  p50 {:>12}  p99 {:>12}  ({} iters)",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.p50_ns),
+            fmt_ns(res.p99_ns),
+            res.iters
+        );
+        self.results.push(res);
+    }
+
+    /// Write all results as JSON under results/bench_<suite>.json.
+    pub fn save(&self) {
+        let _ = std::fs::create_dir_all("results");
+        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
+        let path = format!("results/bench_{}.json", self.suite);
+        if std::fs::write(&path, arr.to_string_pretty()).is_ok() {
+            println!("  -> {path}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("EECO_BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        b.run("noop-ish", || std::hint::black_box(3u64).wrapping_mul(7));
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].mean_ns >= 0.0);
+        assert!(b.results[0].iters > 0);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

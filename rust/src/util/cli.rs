@@ -1,0 +1,101 @@
+//! Tiny CLI argument parser (no clap offline): `--key value`, `--key=value`,
+//! boolean `--flag`, and positional arguments, with typed getters.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = args("train --users 5 --algo=dqn extra --verbose");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("users"), Some("5"));
+        assert_eq!(a.get("algo"), Some("dqn"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = args("--steps 100 --lr 0.9");
+        assert_eq!(a.usize("steps", 1), 100);
+        assert_eq!(a.f64("lr", 0.1), 0.9);
+        assert_eq!(a.usize("missing", 7), 7);
+        assert_eq!(a.f64("steps", 0.0), 100.0);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args("--a --b v --c");
+        assert!(a.flag("a") && a.flag("c"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn bad_parse_falls_back() {
+        let a = args("--n notanumber");
+        assert_eq!(a.usize("n", 3), 3);
+    }
+}

@@ -1,0 +1,85 @@
+//! Leveled stderr logger controlled by `EECO_LOG` (error|warn|info|debug|trace).
+//! Default level: info. Thread-safe via a single atomic level check + eprintln.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Once;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static INIT: Once = Once::new();
+
+pub fn init() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("EECO_LOG") {
+            set_level(match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "debug" => Level::Debug,
+                "trace" => Level::Trace,
+                _ => Level::Info,
+            });
+        }
+    });
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    l as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    init();
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {module}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::logsys::log($crate::util::logsys::Level::Info, module_path!(), format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($t:tt)*) => { $crate::util::logsys::log($crate::util::logsys::Level::Warn, module_path!(), format_args!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($t:tt)*) => { $crate::util::logsys::log($crate::util::logsys::Level::Debug, module_path!(), format_args!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

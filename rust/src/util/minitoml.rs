@@ -1,0 +1,246 @@
+//! Minimal TOML-subset parser (no `toml` crate offline) for the config
+//! system: `[section]` / `[section.sub]` headers, `key = value` with
+//! strings, integers, floats, booleans and flat arrays, `#` comments.
+//! Values land in a flat `section.key -> Value` map.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn parse(src: &str) -> Result<Doc, String> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section", lineno + 1));
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let value = parse_value(v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.entries.insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.i64(key, default as i64) as usize
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_top_level(body).into_iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+# top comment
+title = "eeco"
+[sim]
+users = 5           # inline comment
+weak_delay_ms = 20.0
+enabled = true
+conds = ["R", "W"]
+[agent.qlearning]
+lr = 0.9
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str("title", ""), "eeco");
+        assert_eq!(doc.usize("sim.users", 0), 5);
+        assert_eq!(doc.f64("sim.weak_delay_ms", 0.0), 20.0);
+        assert!(doc.bool("sim.enabled", false));
+        assert_eq!(doc.f64("agent.qlearning.lr", 0.0), 0.9);
+        let arr = doc.get("sim.conds").unwrap();
+        assert_eq!(
+            arr,
+            &Value::Arr(vec![Value::Str("R".into()), Value::Str("W".into())])
+        );
+    }
+
+    #[test]
+    fn hash_in_string_kept() {
+        let doc = Doc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.f64("nope", 1.5), 1.5);
+        assert_eq!(doc.str("nope", "d"), "d");
+    }
+
+    #[test]
+    fn errors_on_bad_lines() {
+        assert!(Doc::parse("just a line").is_err());
+        assert!(Doc::parse("[]").is_err());
+        assert!(Doc::parse("k = ").is_err());
+        assert!(Doc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = Doc::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(doc.get("a"), Some(&Value::Int(3)));
+        assert_eq!(doc.get("b"), Some(&Value::Float(3.5)));
+        assert_eq!(doc.f64("a", 0.0), 3.0); // ints coerce to f64
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let doc = Doc::parse("m = [[1, 2], [3]]").unwrap();
+        if let Some(Value::Arr(rows)) = doc.get("m") {
+            assert_eq!(rows.len(), 2);
+            assert_eq!(rows[0], Value::Arr(vec![Value::Int(1), Value::Int(2)]));
+        } else {
+            panic!("expected array");
+        }
+    }
+}

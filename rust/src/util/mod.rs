@@ -1,0 +1,13 @@
+//! In-crate infrastructure replacing the crates that are unavailable
+//! offline on this image (serde/serde_json, toml, rand, clap, criterion,
+//! proptest, tokio). See DESIGN.md §1 "Dependency reality".
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logsys;
+pub mod minitoml;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,142 @@
+//! Fixed-size thread pool over std::sync::mpsc (no tokio offline).
+//!
+//! Used by the measured-mode cluster executors (one pool per simulated node,
+//! sized to the node's vCPU count so concurrency contention is physically
+//! real) and by the serving coordinator's dispatcher.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(size: usize, name: &str) -> ThreadPool {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("{name}-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: shut down
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, size }
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Run a closure on the pool and block for its result.
+    pub fn run<T: Send + 'static>(&self, f: impl FnOnce() -> T + Send + 'static) -> T {
+        let (tx, rx) = mpsc::channel();
+        self.execute(move || {
+            let _ = tx.send(f());
+        });
+        rx.recv().expect("job panicked")
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4, "t");
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn run_returns_value() {
+        let pool = ThreadPool::new(2, "t");
+        assert_eq!(pool.run(|| 21 * 2), 42);
+    }
+
+    #[test]
+    fn single_worker_serializes() {
+        // With one worker, jobs can never overlap: max concurrency == 1.
+        let pool = ThreadPool::new(1, "t");
+        let active = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..16 {
+            let (a, p, tx) = (Arc::clone(&active), Arc::clone(&peak), tx.clone());
+            pool.execute(move || {
+                let cur = a.fetch_add(1, Ordering::SeqCst) + 1;
+                p.fetch_max(cur, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                a.fetch_sub(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..16 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(peak.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = ThreadPool::new(2, "t");
+        let c = Arc::new(AtomicUsize::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&c);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        drop(pool); // must not hang, must run all queued jobs
+        assert_eq!(c.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,93 @@
+//! In-crate property-testing harness (proptest is unavailable offline).
+//!
+//! `forall(cases, seed, gen, check)` draws `cases` random inputs from `gen`
+//! and asserts `check` on each; failures report the case index and the
+//! reproducing seed so `EECO_PROP_SEED=<n>` re-runs the exact input. Used by
+//! the coordinator/agent invariant suites (DESIGN.md §8).
+
+use super::rng::Rng;
+
+/// Run `check` against `cases` generated inputs; panics with the failing
+/// seed + debug-printed input on the first violation.
+pub fn forall<T: std::fmt::Debug>(
+    cases: usize,
+    base_seed: u64,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut check: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = std::env::var("EECO_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(base_seed);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            panic!(
+                "property failed (case {case}/{cases}, reproduce with EECO_PROP_SEED={}):\n  input: {input:?}\n  {msg}",
+                base.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Convenience: property over a plain rng (input generated inside check).
+pub fn forall_rng(
+    cases: usize,
+    base_seed: u64,
+    mut check: impl FnMut(&mut Rng) -> Result<(), String>,
+) {
+    forall(cases, base_seed, |r| r.next_u64(), |&s| check(&mut Rng::new(s)).map_err(|e| e))
+}
+
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($msg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($msg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            100,
+            1,
+            |r| (r.below(100), r.below(100)),
+            |&(a, b)| {
+                if a + b >= a {
+                    Ok(())
+                } else {
+                    Err("overflow".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        forall(50, 2, |r| r.below(10), |&x| if x < 5 { Ok(()) } else { Err(format!("x={x}")) });
+    }
+
+    #[test]
+    fn forall_rng_deterministic() {
+        let mut seen = Vec::new();
+        forall_rng(5, 3, |r| {
+            seen.push(r.next_u64());
+            Ok(())
+        });
+        let mut again = Vec::new();
+        forall_rng(5, 3, |r| {
+            again.push(r.next_u64());
+            Ok(())
+        });
+        assert_eq!(seen, again);
+    }
+}

@@ -1,0 +1,304 @@
+//! Streaming statistics, percentiles, histograms and convergence detection —
+//! the measurement substrate behind metrics/, the experiment drivers and the
+//! bench harness.
+
+/// Welford online mean/variance with min/max.
+#[derive(Debug, Clone, Default)]
+pub struct OnlineStats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl OnlineStats {
+    pub fn new() -> Self {
+        OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &OnlineStats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Percentile over a sample (interpolated, like numpy's 'linear').
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Sample container with lazily-sorted percentile queries.
+#[derive(Debug, Clone, Default)]
+pub struct Sample {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Sample {
+    pub fn new() -> Self {
+        Sample { xs: Vec::new(), sorted: true }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            f64::NAN
+        } else {
+            self.xs.iter().sum::<f64>() / self.xs.len() as f64
+        }
+    }
+
+    pub fn pct(&mut self, p: f64) -> f64 {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        percentile(&self.xs, p)
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+}
+
+/// Exponentially-weighted moving average (resource monitor smoothing).
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => self.alpha * x + (1.0 - self.alpha) * prev,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Convergence detector over a reward/metric stream: converged when the
+/// rolling-window mean has moved by < `tol` (relative) for `patience`
+/// consecutive windows. Used for Table 11 / Fig 6/7 convergence steps.
+#[derive(Debug, Clone)]
+pub struct Convergence {
+    window: usize,
+    tol: f64,
+    patience: usize,
+    buf: Vec<f64>,
+    last_mean: Option<f64>,
+    stable: usize,
+    pub converged_at: Option<usize>,
+    seen: usize,
+}
+
+impl Convergence {
+    pub fn new(window: usize, tol: f64, patience: usize) -> Self {
+        assert!(window > 0 && patience > 0);
+        Convergence {
+            window,
+            tol,
+            patience,
+            buf: Vec::with_capacity(window),
+            last_mean: None,
+            stable: 0,
+            converged_at: None,
+            seen: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        self.buf.push(x);
+        if self.buf.len() < self.window {
+            return;
+        }
+        let mean = self.buf.iter().sum::<f64>() / self.buf.len() as f64;
+        self.buf.clear();
+        if let Some(prev) = self.last_mean {
+            let denom = prev.abs().max(1e-9);
+            if ((mean - prev) / denom).abs() < self.tol {
+                self.stable += 1;
+                if self.stable >= self.patience && self.converged_at.is_none() {
+                    self.converged_at = Some(self.seen);
+                }
+            } else {
+                self.stable = 0;
+            }
+        }
+        self.last_mean = Some(mean);
+    }
+
+    pub fn is_converged(&self) -> bool {
+        self.converged_at.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_stats_basic() {
+        let mut s = OnlineStats::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+    }
+
+    #[test]
+    fn online_stats_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut whole = OnlineStats::new();
+        xs.iter().for_each(|&x| whole.push(x));
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        xs[..37].iter().for_each(|&x| a.push(x));
+        xs[37..].iter().for_each(|&x| b.push(x));
+        a.merge(&b);
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.var() - whole.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_pct() {
+        let mut s = Sample::new();
+        for i in (1..=100).rev() {
+            s.push(i as f64);
+        }
+        assert!((s.pct(50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(s.pct(100.0), 100.0);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_converges_to_constant() {
+        let mut e = Ewma::new(0.3);
+        let mut v = 0.0;
+        for _ in 0..200 {
+            v = e.push(5.0);
+        }
+        assert!((v - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn convergence_detects_plateau() {
+        let mut c = Convergence::new(10, 0.01, 3);
+        // decaying then flat signal
+        for i in 0..500 {
+            let x = if i < 200 { 100.0 / (1.0 + i as f64) } else { 0.5 };
+            c.push(x);
+        }
+        assert!(c.is_converged());
+        let at = c.converged_at.unwrap();
+        assert!(at > 100 && at < 400, "converged_at={at}");
+    }
+
+    #[test]
+    fn convergence_not_triggered_by_noise_free_growth() {
+        let mut c = Convergence::new(5, 0.001, 4);
+        for i in 0..100 {
+            c.push(i as f64);
+        }
+        assert!(!c.is_converged());
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration: full train-then-evaluate round trips over the synchronous
+//! environment, including the DQN agent driving real PJRT train steps, and
+//! shape checks against the paper's qualitative results.
+
+use eeco::agent::baseline::FixedAgent;
+use eeco::agent::dqn::DqnAgent;
+use eeco::agent::{bruteforce, Agent};
+use eeco::orchestrator::Orchestrator;
+use eeco::prelude::*;
+use eeco::sim::Env;
+
+fn env(scen: Scenario, c: AccuracyConstraint, seed: u64) -> Env {
+    Env::new(scen, Calibration::default(), c, seed)
+}
+
+#[test]
+fn fixed_strategies_reproduce_fig1b_shape() {
+    // Fig 1(b): device flat; edge grows fastest; cloud in between.
+    let mut device = Vec::new();
+    let mut edge = Vec::new();
+    let mut cloud = Vec::new();
+    for users in 1..=5 {
+        for (tier, out) in
+            [(Tier::Local, &mut device), (Tier::Edge, &mut edge), (Tier::Cloud, &mut cloud)]
+        {
+            let mut o = Orchestrator::new(
+                env(Scenario::exp_a(users), AccuracyConstraint::Max, 3),
+                Box::new(FixedAgent::new(tier, users)),
+            );
+            o.env.freeze();
+            out.push(o.evaluate(10).response.mean());
+        }
+    }
+    // device-only constant in user count
+    assert!((device[4] - device[0]).abs() < 5.0, "device {device:?}");
+    // edge grows fastest and tops everything at 5 users
+    assert!(edge[4] > cloud[4] && cloud[4] > device[4], "edge={edge:?} cloud={cloud:?}");
+    assert!(edge[4] / edge[0] > 2.0, "edge contention growth {edge:?}");
+    // crossover: cloud best at 1 user, device best at 5 (paper Fig 1/5)
+    assert!(cloud[0] < device[0]);
+    assert!(device[4] < cloud[4]);
+}
+
+#[test]
+fn oracle_reproduces_table9_trends() {
+    // Relaxing the constraint must monotonically improve response time and
+    // the Min row must pick d7 everywhere (Table 9).
+    for scen in Scenario::all(5) {
+        let mut prev = f64::INFINITY;
+        for c in [
+            AccuracyConstraint::Max,
+            AccuracyConstraint::AtLeast(89.0),
+            AccuracyConstraint::AtLeast(85.0),
+            AccuracyConstraint::AtLeast(80.0),
+            AccuracyConstraint::Min,
+        ] {
+            let e = env(scen.clone(), c, 4);
+            let (d, avg) = bruteforce::optimal(&e, c.threshold()).unwrap();
+            assert!(avg <= prev + 1e-9, "{}: {c:?} {avg} > {prev}", scen.name);
+            prev = avg;
+            if matches!(c, AccuracyConstraint::Min) {
+                assert!(
+                    d.0.iter().all(|a| a.model.0 == 7),
+                    "{}: Min should pick d7 (got {d})",
+                    scen.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ours_beats_sota_at_relaxed_accuracy() {
+    // The headline: with the 89% constraint our cross-layer decision beats
+    // the offload-only SOTA (which is pinned to d0/Max accuracy).
+    for scen in Scenario::all(5) {
+        let e = env(scen.clone(), AccuracyConstraint::AtLeast(89.0), 5);
+        let (_, ours) = bruteforce::optimal(&e, 89.0).unwrap();
+        // SOTA's best possible: optimal placement with d0 only
+        let (_, sota) = bruteforce::optimal(&e, AccuracyConstraint::Max.threshold()).unwrap();
+        let speedup = 1.0 - ours / sota;
+        assert!(
+            speedup > 0.05,
+            "{}: ours={ours:.0} sota={sota:.0} speedup={:.0}%",
+            scen.name,
+            speedup * 100.0
+        );
+    }
+}
+
+#[test]
+fn dqn_agent_full_loop_improves() {
+    let d = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(&format!("{d}/manifest.json")).exists() {
+        return;
+    }
+    let rt = std::sync::Arc::new(eeco::runtime::SharedRuntime::load(d).unwrap());
+    let users = 3;
+    let mut agent =
+        DqnAgent::new(users, Hyper::paper_defaults(Algo::Dqn, users), rt, 11).unwrap();
+    agent.train_every = 4; // keep the test fast on one core
+    let mut o = Orchestrator::new(
+        env(Scenario::exp_a(users), AccuracyConstraint::Min, 12),
+        Box::new(agent),
+    );
+    o.env.freeze();
+    let before = o.evaluate(20).response.mean();
+    let _ = o.train_full(1500, 500);
+    let after = o.evaluate(20).response.mean();
+    assert!(
+        after < before * 0.9,
+        "DQN training should improve response: {before:.0} -> {after:.0}"
+    );
+}
+
+#[test]
+fn per_scenario_optimal_single_user_matches_table8() {
+    // Table 8 single-user decisions: EXP-A -> cloud, EXP-D -> local.
+    let a = env(Scenario::exp_a(1), AccuracyConstraint::Max, 6);
+    let (d, _) = bruteforce::optimal(&a, a.threshold).unwrap();
+    assert_eq!(d.0[0].tier, Tier::Cloud, "EXP-A");
+    let dd = env(Scenario::exp_d(1), AccuracyConstraint::Max, 6);
+    let (d, _) = bruteforce::optimal(&dd, dd.threshold).unwrap();
+    assert_eq!(d.0[0].tier, Tier::Local, "EXP-D");
+}
+
+#[test]
+fn weak_scenarios_cost_more_at_max_accuracy() {
+    // Table 9 Max rows: EXP-D >= EXP-B >= EXP-A in avg response.
+    let avg = |scen: Scenario| {
+        let e = env(scen, AccuracyConstraint::Max, 7);
+        bruteforce::optimal(&e, e.threshold).unwrap().1
+    };
+    let a = avg(Scenario::exp_a(5));
+    let b = avg(Scenario::exp_b(5));
+    let d = avg(Scenario::exp_d(5));
+    assert!(a <= b + 1e-9 && b <= d + 1e-9, "a={a:.0} b={b:.0} d={d:.0}");
+}
+
+#[test]
+fn trained_sota_agent_only_uses_d0() {
+    let users = 3;
+    let mut o = Orchestrator::new(
+        env(Scenario::exp_a(users), AccuracyConstraint::Max, 8),
+        Box::new(eeco::agent::baseline::sota_agent(
+            users,
+            Hyper::paper_defaults(Algo::QLearning, users),
+            9,
+        )),
+    );
+    let _ = o.train_full(2000, 1000);
+    let (d, _, acc) = o.representative_decision();
+    assert!(d.0.iter().all(|a| a.model.0 == 0));
+    assert!((acc - 89.9).abs() < 1e-6);
+}

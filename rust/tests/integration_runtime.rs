@@ -1,0 +1,146 @@
+//! Integration: AOT artifacts -> PJRT runtime -> numerics vs the goldens
+//! dumped by python/compile/aot.py from the *same jitted graphs*.
+//! These tests require `make artifacts`; they skip silently otherwise.
+
+use eeco::runtime::{tensor, SharedRuntime};
+use eeco::types::ModelId;
+
+fn rt() -> Option<&'static SharedRuntime> {
+    let d = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    std::path::Path::new(&format!("{d}/manifest.json"))
+        .exists()
+        .then(|| eeco::runtime::shared(d))
+}
+
+fn golden(rt: &SharedRuntime, name: &str) -> Vec<f32> {
+    tensor::read_f32_bin(&rt.manifest.path(&format!("goldens/{name}"))).unwrap()
+}
+
+#[test]
+fn mobilenet_d0_matches_python_golden() {
+    let Some(rt) = rt() else { return };
+    let img = golden(rt, "mobilenet_d0_in.bin");
+    let want = golden(rt, "mobilenet_d0_out.bin");
+    let got = rt.infer(ModelId(0), &img, 1).unwrap();
+    assert_eq!(got.len(), want.len());
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs() as f64)
+        .fold(0.0, f64::max);
+    assert!(max_err < 1e-2, "max|err|={max_err}");
+}
+
+#[test]
+fn all_eight_models_infer_finite_logits() {
+    let Some(rt) = rt() else { return };
+    let (h, w, c) = rt.manifest.img;
+    let img = eeco::sim::workload::synth_image(0, h, w, c);
+    for m in ModelId::all() {
+        let logits = rt.infer(m, &img, 1).unwrap();
+        assert_eq!(logits.len(), rt.manifest.classes, "{m}");
+        assert!(logits.iter().all(|v| v.is_finite()), "{m} produced non-finite logits");
+    }
+}
+
+#[test]
+fn batched_inference_matches_single() {
+    let Some(rt) = rt() else { return };
+    let (h, w, c) = rt.manifest.img;
+    let imgs: Vec<Vec<f32>> = (0..3).map(|i| eeco::sim::workload::synth_image(i, h, w, c)).collect();
+    let flat: Vec<f32> = imgs.iter().flatten().copied().collect();
+    let batched = rt.infer(ModelId(3), &flat, 3).unwrap();
+    let classes = rt.manifest.classes;
+    for (i, img) in imgs.iter().enumerate() {
+        let single = rt.infer(ModelId(3), img, 1).unwrap();
+        for (a, b) in single.iter().zip(&batched[i * classes..(i + 1) * classes]) {
+            assert!((a - b).abs() < 1e-3, "row {i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn fp32_and_int8_weights_differ_in_output() {
+    let Some(rt) = rt() else { return };
+    let (h, w, c) = rt.manifest.img;
+    let img = eeco::sim::workload::synth_image(5, h, w, c);
+    let d0 = rt.infer(ModelId(0), &img, 1).unwrap();
+    let d4 = rt.infer(ModelId(4), &img, 1).unwrap();
+    // same graph, fake-quantized weights: close but not identical
+    assert_ne!(d0, d4);
+}
+
+#[test]
+fn dqn_forward_matches_python_golden() {
+    let Some(rt) = rt() else { return };
+    let theta = rt.dqn_init(3).unwrap();
+    let state = golden(rt, "dqn3_state.bin");
+    let want = golden(rt, "dqn3_q.bin");
+    let got = rt.dqn_forward(3, &theta, &state).unwrap();
+    assert_eq!(got.len(), want.len()); // 1 x 3 x 24
+    for (a, b) in got.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn dqn_train_step_matches_python_golden() {
+    let Some(rt) = rt() else { return };
+    let theta = rt.dqn_init(3).unwrap();
+    let s = golden(rt, "dqn3_train_s.bin");
+    let a = golden(rt, "dqn3_train_a.bin");
+    let r = golden(rt, "dqn3_train_r.bin");
+    let s2 = golden(rt, "dqn3_train_s2.bin");
+    let want_theta = golden(rt, "dqn3_train_theta.bin");
+    let want_loss = golden(rt, "dqn3_train_loss.bin")[0];
+    let (new_theta, loss) = rt.dqn_train(3, &theta, &s, &a, &r, &s2, 1e-3).unwrap();
+    assert!((loss - want_loss).abs() < 1e-3, "loss {loss} vs {want_loss}");
+    let max_err = new_theta
+        .iter()
+        .zip(&want_theta)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 1e-4, "params max|err|={max_err}");
+}
+
+#[test]
+fn dqn_training_reduces_loss_from_rust() {
+    let Some(rt) = rt() else { return };
+    // Fixed synthetic batch: loss must decrease over repeated SGD steps.
+    let users = 3;
+    let entry = rt.manifest.dqn_for(users).unwrap().clone();
+    let mut theta = rt.dqn_init(users).unwrap();
+    let mut rng = eeco::util::rng::Rng::new(9);
+    let b = entry.train_batch;
+    let d = entry.state_dim;
+    let s: Vec<f32> = (0..b * d).map(|_| rng.f64() as f32).collect();
+    let s2: Vec<f32> = (0..b * d).map(|_| rng.f64() as f32).collect();
+    let mut a = vec![0f32; b * users * entry.actions_per_device];
+    for bi in 0..b {
+        for dev in 0..users {
+            let ai = rng.below(entry.actions_per_device);
+            a[bi * users * entry.actions_per_device + dev * entry.actions_per_device + ai] = 1.0;
+        }
+    }
+    let r: Vec<f32> = (0..b).map(|_| -(rng.f64() as f32)).collect();
+    let (_, loss0) = rt.dqn_train(users, &theta, &s, &a, &r, &s2, 1e-2).unwrap();
+    let mut last = loss0;
+    for _ in 0..30 {
+        let (t, l) = rt.dqn_train(users, &theta, &s, &a, &r, &s2, 1e-2).unwrap();
+        theta = t;
+        last = l;
+    }
+    assert!(last < loss0, "loss {loss0} -> {last}");
+}
+
+#[test]
+fn weights_are_cached_and_reused() {
+    let Some(rt) = rt() else { return };
+    // Two inferences with the same model: second must not re-read weights
+    // (we can't observe the cache directly; assert stability instead).
+    let (h, w, c) = rt.manifest.img;
+    let img = eeco::sim::workload::synth_image(2, h, w, c);
+    let a = rt.infer(ModelId(1), &img, 1).unwrap();
+    let b = rt.infer(ModelId(1), &img, 1).unwrap();
+    assert_eq!(a, b, "inference must be deterministic");
+}

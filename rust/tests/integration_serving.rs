@@ -1,0 +1,129 @@
+//! Integration: the measured-mode serving path — router -> batcher ->
+//! per-node thread pools -> real PJRT MobileNet inference. Requires built
+//! artifacts (skips otherwise).
+
+use std::sync::Arc;
+
+use eeco::cluster::Cluster;
+use eeco::coordinator::{serve_round, Router, ServeConfig};
+use eeco::network::Network;
+use eeco::prelude::*;
+use eeco::runtime::SharedRuntime;
+use eeco::sim::WorkloadGen;
+
+fn rt() -> Option<Arc<SharedRuntime>> {
+    let d = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    std::path::Path::new(&format!("{d}/manifest.json"))
+        .exists()
+        .then(|| Arc::new(SharedRuntime::load(d).unwrap()))
+}
+
+fn fast_cfg() -> ServeConfig {
+    ServeConfig { time_scale: 0.01, max_batch: 8, window_ms: 1.0 }
+}
+
+fn decision(users: usize, pattern: &[(Tier, u8)]) -> Decision {
+    Decision(
+        (0..users)
+            .map(|i| {
+                let (tier, m) = pattern[i % pattern.len()];
+                Action { tier, model: ModelId(m) }
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn serve_round_conserves_requests() {
+    let Some(rt) = rt() else { return };
+    let users = 3;
+    let cal = Calibration::default();
+    let cluster = Cluster::new(users, &cal, rt);
+    let network = Network::new(Scenario::exp_a(users), cal);
+    let router = Router::new(decision(users, &[(Tier::Local, 7), (Tier::Edge, 7), (Tier::Cloud, 7)]));
+    let mut wl = WorkloadGen::new(eeco::sim::Arrival::Periodic { period_ms: 1.0 }, users, 1);
+    let reqs = wl.sync_round(0.0);
+    let recs = serve_round(&cluster, &network, &router, &reqs, &fast_cfg()).unwrap();
+    assert_eq!(recs.len(), users);
+    let mut ids: Vec<u64> = recs.iter().map(|r| r.req_id).collect();
+    ids.sort_unstable();
+    let mut want: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+    want.sort_unstable();
+    assert_eq!(ids, want);
+}
+
+#[test]
+fn latency_components_are_positive_and_sum() {
+    let Some(rt) = rt() else { return };
+    let users = 2;
+    let cal = Calibration::default();
+    let cluster = Cluster::new(users, &cal, rt);
+    let network = Network::new(Scenario::exp_b(users), cal);
+    let router = Router::new(decision(users, &[(Tier::Edge, 3), (Tier::Cloud, 3)]));
+    let mut wl = WorkloadGen::new(eeco::sim::Arrival::Periodic { period_ms: 1.0 }, users, 2);
+    let recs =
+        serve_round(&cluster, &network, &router, &wl.sync_round(0.0), &fast_cfg()).unwrap();
+    for r in &recs {
+        assert!(r.compute_ms > 0.0, "compute must be measured");
+        assert!(r.network_ms > 0.0);
+        assert!(r.queue_ms >= 0.0);
+        assert!((r.total_ms - (r.network_ms + r.queue_ms + r.compute_ms)).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn same_model_same_node_requests_get_batched() {
+    let Some(rt) = rt() else { return };
+    let users = 4;
+    let cal = Calibration::default();
+    let cluster = Cluster::new(users, &cal, rt);
+    let network = Network::new(Scenario::exp_a(users), cal);
+    // all four offload d7 to the edge -> one batch of 4
+    let router = Router::new(decision(users, &[(Tier::Edge, 7)]));
+    let mut wl = WorkloadGen::new(eeco::sim::Arrival::Periodic { period_ms: 1.0 }, users, 3);
+    let recs =
+        serve_round(&cluster, &network, &router, &wl.sync_round(0.0), &fast_cfg()).unwrap();
+    assert!(recs.iter().all(|r| r.batch_size == 4), "batch sizes: {:?}",
+        recs.iter().map(|r| r.batch_size).collect::<Vec<_>>());
+}
+
+#[test]
+fn weak_scenario_reports_higher_network_cost() {
+    let Some(rt) = rt() else { return };
+    let users = 1;
+    let cal = Calibration::default();
+    let cluster = Cluster::new(users, &cal, rt);
+    let run = |scen: Scenario| {
+        let network = Network::new(scen, Calibration::default());
+        let router = Router::new(decision(users, &[(Tier::Edge, 7)]));
+        let mut wl = WorkloadGen::new(eeco::sim::Arrival::Periodic { period_ms: 1.0 }, users, 4);
+        serve_round(&cluster, &network, &router, &wl.sync_round(0.0), &fast_cfg()).unwrap()[0]
+            .network_ms
+    };
+    let regular = run(Scenario::exp_a(users));
+    let weak = run(Scenario::exp_d(users));
+    assert!((regular - 21.4).abs() < 1e-9);
+    assert!((weak - 141.0).abs() < 1e-9);
+}
+
+#[test]
+fn multiple_rounds_accumulate_distinct_ids() {
+    let Some(rt) = rt() else { return };
+    let users = 2;
+    let cal = Calibration::default();
+    let cluster = Cluster::new(users, &cal, rt);
+    let network = Network::new(Scenario::exp_a(users), cal);
+    let router = Router::new(decision(users, &[(Tier::Local, 7)]));
+    let mut wl = WorkloadGen::new(eeco::sim::Arrival::Periodic { period_ms: 1.0 }, users, 5);
+    let mut all = Vec::new();
+    for r in 0..3 {
+        let recs =
+            serve_round(&cluster, &network, &router, &wl.sync_round(r as f64), &fast_cfg())
+                .unwrap();
+        all.extend(recs);
+    }
+    let mut ids: Vec<u64> = all.iter().map(|r| r.req_id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), 6, "every request served exactly once");
+}

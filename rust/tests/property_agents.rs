@@ -1,0 +1,207 @@
+//! Property tests over the agents: factored-vs-exact argmax agreement,
+//! brute-force DP vs naive enumeration, Q-update boundedness, constraint
+//! handling, transfer-table integrity.
+
+use eeco::agent::qlearning::{ExactJointAgent, QTableAgent};
+use eeco::agent::{bruteforce, ActionSet, Agent};
+use eeco::monitor::EncodedState;
+use eeco::prelude::*;
+use eeco::sim::Env;
+use eeco::util::prop::forall;
+use eeco::util::rng::Rng;
+
+fn st(key: u64, dim: usize) -> EncodedState {
+    EncodedState { key, vec: vec![0.0; dim] }
+}
+
+#[test]
+fn prop_bruteforce_dp_equals_naive() {
+    forall(
+        25,
+        0xB1,
+        |rng| {
+            let users = rng.range(1, 3);
+            let scen = *rng.choose(&["exp-a", "exp-b", "exp-c", "exp-d"]);
+            let thr = *rng.choose(&[0.0, 80.0, 85.0, 89.0, 89.89]);
+            (users, scen.to_string(), thr, rng.next_u64())
+        },
+        |(users, scen, thr, seed)| {
+            let mut env = Env::new(
+                Scenario::by_name(scen, *users).unwrap(),
+                Calibration::default(),
+                AccuracyConstraint::Min,
+                *seed,
+            );
+            // randomize background state so the DP sees varied inputs
+            let d = Decision::uniform(*users, Action::from_index(0));
+            let mut r = Rng::new(*seed);
+            for _ in 0..r.below(30) {
+                env.step(&d);
+            }
+            let a = bruteforce::optimal(&env, *thr);
+            let b = bruteforce::optimal_naive(&env, *thr);
+            match (a, b) {
+                (None, None) => Ok(()),
+                (Some((_, x)), Some((_, y))) if (x - y).abs() < 1e-9 => Ok(()),
+                (x, y) => Err(format!(
+                    "dp={:?} naive={:?}",
+                    x.map(|v| v.1),
+                    y.map(|v| v.1)
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_bruteforce_respects_constraint() {
+    forall(
+        40,
+        0xB2,
+        |rng| (rng.range(1, 5), *rng.choose(&[80.0, 85.0, 89.0]), rng.next_u64()),
+        |(users, thr, seed)| {
+            let env = Env::new(
+                Scenario::exp_b(*users),
+                Calibration::default(),
+                AccuracyConstraint::AtLeast(*thr),
+                *seed,
+            );
+            let (d, _) = bruteforce::optimal(&env, *thr).ok_or("no solution")?;
+            let acc = env.accuracy_of(&d);
+            if acc > *thr {
+                Ok(())
+            } else {
+                Err(format!("acc {acc} <= {thr} for {d}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_factored_matches_exact_on_bandit() {
+    // On a stateless 2-user problem with additive per-device costs the
+    // factored learner and the exact joint learner find the same optimum.
+    forall(
+        5,
+        0xB3,
+        |rng| {
+            // random per-device cost tables (additive => factored is exact)
+            let c0: Vec<f64> = (0..24).map(|_| rng.range_f64(10.0, 500.0)).collect();
+            let c1: Vec<f64> = (0..24).map(|_| rng.range_f64(10.0, 500.0)).collect();
+            (c0, c1, rng.next_u64())
+        },
+        |(c0, c1, seed)| {
+            let hyper = Hyper::paper_defaults(Algo::QLearning, 2);
+            let mut fact = QTableAgent::new(2, hyper.clone(), ActionSet::full(), *seed);
+            let mut exact = ExactJointAgent::new(2, hyper, seed.wrapping_add(1));
+            let s = st(0, 12);
+            for _ in 0..20_000 {
+                for agent in [&mut fact as &mut dyn Agent, &mut exact as &mut dyn Agent] {
+                    let d = agent.decide(&s, true);
+                    let r = -(c0[d.0[0].index()] + c1[d.0[1].index()]) / 2.0;
+                    agent.learn(&s, &d, r, &s);
+                }
+            }
+            let df = fact.decide(&s, false);
+            let de = exact.decide(&s, false);
+            let cost_f = c0[df.0[0].index()] + c1[df.0[1].index()];
+            let cost_e = c0[de.0[0].index()] + c1[de.0[1].index()];
+            let best: f64 = c0.iter().cloned().fold(f64::INFINITY, f64::min)
+                + c1.iter().cloned().fold(f64::INFINITY, f64::min);
+            // Both learners are stochastic approximations with a shared-
+            // reward noise floor; the factored one must land within 50% of
+            // the true additive optimum and must not lose badly to the
+            // exact joint table (which explores 576 arms).
+            if cost_f <= best * 1.5 && cost_f <= cost_e.max(best) * 1.5 {
+                Ok(())
+            } else {
+                Err(format!(
+                    "factored {cost_f:.1} vs exact {cost_e:.1} vs best {best:.1}"
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_q_values_bounded_by_reward_range() {
+    // With rewards in [-R, 0] and gamma=g, Q stays within [-R/(1-g), 0].
+    forall(
+        30,
+        0xB4,
+        |rng| (rng.next_u64(), rng.range(1, 4)),
+        |&(seed, users)| {
+            let hyper = Hyper::paper_defaults(Algo::QLearning, users);
+            let gamma = hyper.gamma;
+            let mut a = QTableAgent::new(users, hyper, ActionSet::full(), seed);
+            let mut rng = Rng::new(seed ^ 0xFF);
+            let r_max = 1000.0;
+            let states: Vec<EncodedState> = (0..4).map(|k| st(k, 3 * (users + 2))).collect();
+            for _ in 0..2000 {
+                let s = &states[rng.below(states.len())];
+                let s2 = &states[rng.below(states.len())];
+                let d = a.decide(s, true);
+                let r = -rng.range_f64(0.0, r_max);
+                a.learn(s, &d, r, s2);
+            }
+            let bound = r_max / (1.0 - gamma) + 1e-6;
+            for (_, row) in a.export_table() {
+                for q in row {
+                    if !(-bound..=1e-9).contains(&q) {
+                        return Err(format!("q={q} outside [-{bound}, 0]"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_decisions_always_arity_n() {
+    forall(
+        100,
+        0xB5,
+        |rng| (rng.range(1, 6), rng.next_u64()),
+        |&(users, seed)| {
+            let mut a = QTableAgent::new(
+                users,
+                Hyper::paper_defaults(Algo::QLearning, users),
+                ActionSet::full(),
+                seed,
+            );
+            let s = st(seed % 97, 3 * (users + 2));
+            for explore in [true, false] {
+                let d = a.decide(&s, explore);
+                if d.n_users() != users {
+                    return Err(format!("arity {} != {users}", d.n_users()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_oracle_beats_or_ties_every_uniform_strategy() {
+    forall(
+        40,
+        0xB6,
+        |rng| (rng.range(1, 6), rng.below(ACTIONS_PER_DEVICE), rng.next_u64()),
+        |&(users, action, seed)| {
+            let env = Env::new(
+                Scenario::exp_c(users),
+                Calibration::default(),
+                AccuracyConstraint::Min,
+                seed,
+            );
+            let (_, best) = bruteforce::optimal(&env, 0.0).ok_or("no solution")?;
+            let uniform = env.expected_avg_ms(&Decision::uniform(users, Action::from_index(action)));
+            if best <= uniform + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("oracle {best} worse than uniform {uniform}"))
+            }
+        },
+    );
+}

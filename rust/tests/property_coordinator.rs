@@ -1,0 +1,282 @@
+//! Property tests (in-crate harness, DESIGN.md §8) over the coordinator's
+//! pure logic: routing conservation, batcher invariants, state-encoder
+//! injectivity, latency-model monotonicity, reward semantics.
+
+use eeco::coordinator::{Batcher, Router};
+use eeco::monitor::{self, NodeState, SystemState};
+use eeco::prelude::*;
+use eeco::sim::{Env, ResponseModel};
+use eeco::util::prop::forall;
+use eeco::util::rng::Rng;
+
+fn rand_decision(rng: &mut Rng, users: usize) -> Decision {
+    Decision((0..users).map(|_| Action::from_index(rng.below(ACTIONS_PER_DEVICE))).collect())
+}
+
+fn rand_state(rng: &mut Rng, users: usize) -> SystemState {
+    let node = |rng: &mut Rng, cond| NodeState { cpu: rng.f64(), mem: rng.f64(), cond };
+    SystemState {
+        edge: node(rng, NetCond::Regular),
+        cloud: node(rng, NetCond::Regular),
+        devices: (0..users)
+            .map(|_| {
+                let c = if rng.bool(0.5) { NetCond::Weak } else { NetCond::Regular };
+                node(rng, c)
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_router_conserves_every_request() {
+    forall(
+        200,
+        0xA1,
+        |rng| {
+            let users = rng.range(1, 6);
+            (rand_decision(rng, users), users)
+        },
+        |(decision, users)| {
+            let router = Router::new(decision.clone());
+            for dev in 0..*users {
+                let route = router.route(dev as u64, dev);
+                if route.action != decision.0[dev] {
+                    return Err(format!("device {dev} routed to {:?}", route.action));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_offload_vector_sums_to_one() {
+    // The paper's constraint sum_j o_i^j = 1: every device's action selects
+    // exactly one tier by construction; verify through the index codec.
+    forall(
+        500,
+        0xA2,
+        |rng| rng.below(ACTIONS_PER_DEVICE),
+        |&i| {
+            let a = Action::from_index(i);
+            let mut o = [0u8; 3];
+            o[a.tier.index()] = 1;
+            if o.iter().map(|&x| x as usize).sum::<usize>() == 1 && a.index() == i {
+                Ok(())
+            } else {
+                Err(format!("action {i} broke the offload vector"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_never_loses_or_duplicates() {
+    forall(
+        100,
+        0xA3,
+        |rng| {
+            let max_batch = rng.range(1, 9);
+            let n = rng.range(1, 60);
+            let models: Vec<u8> = (0..n).map(|_| rng.below(8) as u8).collect();
+            (max_batch, models)
+        },
+        |(max_batch, models)| {
+            let mut b = Batcher::new(*max_batch, 5.0);
+            let mut out: Vec<u64> = Vec::new();
+            for (i, &m) in models.iter().enumerate() {
+                if let Some((_, batch)) = b.push(ModelId(m), i as u64, i as f64) {
+                    if batch.len() > *max_batch {
+                        return Err(format!("batch over max: {}", batch.len()));
+                    }
+                    out.extend(batch.into_iter().map(|p| p.req_id));
+                }
+            }
+            out.extend(b.drain().into_iter().flat_map(|(_, q)| q).map(|p| p.req_id));
+            out.sort_unstable();
+            let want: Vec<u64> = (0..models.len() as u64).collect();
+            if out == want {
+                Ok(())
+            } else {
+                Err(format!("lost/dup: {} of {}", out.len(), want.len()))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_window_bounds_wait() {
+    // A window flush is triggered by the *oldest* entry exceeding the
+    // window (younger entries ride along), and after poll(now) no entry
+    // older than the window remains queued.
+    forall(
+        100,
+        0xA4,
+        |rng| {
+            let events: Vec<(u8, f64)> =
+                (0..rng.range(1, 40)).map(|i| (rng.below(3) as u8, i as f64)).collect();
+            events
+        },
+        |events| {
+            let window = 3.0;
+            let mut b = Batcher::new(100, window);
+            let mut queued: Vec<(u64, f64)> = Vec::new();
+            for (i, &(m, t)) in events.iter().enumerate() {
+                b.push(ModelId(m), i as u64, t);
+                queued.push((i as u64, t));
+                for (_, batch) in b.poll(t) {
+                    let oldest =
+                        batch.iter().map(|p| p.enqueued_ms).fold(f64::INFINITY, f64::min);
+                    if t - oldest < window {
+                        return Err(format!("flush at {t} with young oldest {oldest}"));
+                    }
+                    queued.retain(|(id, _)| !batch.iter().any(|p| p.req_id == *id));
+                }
+                // nothing still queued may be overdue
+                for &(id, enq) in &queued {
+                    if t - enq >= window {
+                        return Err(format!("req {id} overdue at {t} (enqueued {enq})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_state_encoding_consistent_and_bounded() {
+    forall(
+        300,
+        0xA5,
+        |rng| {
+            let users = rng.range(1, 6);
+            rand_state(rng, users)
+        },
+        |s| {
+            let e1 = monitor::encode(s);
+            let e2 = monitor::encode(s);
+            if e1 != e2 {
+                return Err("encoding not deterministic".into());
+            }
+            if e1.vec.len() != 3 * (s.devices.len() + 2) {
+                return Err(format!("vec len {}", e1.vec.len()));
+            }
+            if (e1.key as f64) >= monitor::state_space_size(s.devices.len()) {
+                return Err(format!("key {} out of range", e1.key));
+            }
+            if e1.vec.iter().any(|v| !(0.0..=1.0).contains(v)) {
+                return Err("vec out of [0,1]".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_latency_monotone_in_contention() {
+    // Adding users to a shared tier never reduces anyone's response there.
+    forall(
+        200,
+        0xA6,
+        |rng| (rng.range(1, 5), rng.below(8) as u8, rng.bool(0.5)),
+        |&(k, model, edge)| {
+            let tier = if edge { Tier::Edge } else { Tier::Cloud };
+            let net = eeco::network::Network::new(Scenario::exp_a(5), Calibration::default());
+            let rm = ResponseModel::new(net);
+            let sys = SystemState {
+                edge: NodeState::idle(NetCond::Regular),
+                cloud: NodeState::idle(NetCond::Regular),
+                devices: vec![NodeState::idle(NetCond::Regular); 5],
+            };
+            let mut counts = [0usize; 3];
+            counts[tier.index()] = k;
+            let t1 = rm.device_response_ms(0, ModelId(model), tier, &counts, &sys);
+            counts[tier.index()] = k + 1;
+            let t2 = rm.device_response_ms(0, ModelId(model), tier, &counts, &sys);
+            if t2 >= t1 {
+                Ok(())
+            } else {
+                Err(format!("{tier:?} k={k}: {t1} -> {t2}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_weak_never_faster_than_regular() {
+    forall(
+        200,
+        0xA7,
+        |rng| (rng.below(ACTIONS_PER_DEVICE), rng.range(1, 6)),
+        |&(action, users)| {
+            let a = Action::from_index(action);
+            let d = Decision::uniform(users, a);
+            let run = |scen: Scenario| {
+                let e = Env::new(scen, Calibration::default(), AccuracyConstraint::Min, 1);
+                e.expected_avg_ms(&d)
+            };
+            let reg = run(Scenario::exp_a(users));
+            let weak = run(Scenario::exp_d(users));
+            if weak + 1e-9 >= reg {
+                Ok(())
+            } else {
+                Err(format!("{a:?}: weak {weak} < regular {reg}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_reward_ordering_matches_response() {
+    // Among accuracy-satisfying decisions, lower response <=> higher reward.
+    forall(
+        200,
+        0xA8,
+        |rng| {
+            let users = rng.range(1, 5);
+            (rand_decision(rng, users), rand_decision(rng, users), users)
+        },
+        |(d1, d2, users)| {
+            let e = Env::new(
+                Scenario::exp_b(*users),
+                Calibration::default(),
+                AccuracyConstraint::Min,
+                2,
+            );
+            let (t1, t2) = (e.expected_avg_ms(d1), e.expected_avg_ms(d2));
+            let (r1, r2) = (e.reward(t1, 100.0), e.reward(t2, 100.0));
+            if (t1 < t2) == (r1 > r2) || t1 == t2 {
+                Ok(())
+            } else {
+                Err(format!("t1={t1} t2={t2} r1={r1} r2={r2}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_penalty_dominates_all_feasible_rewards() {
+    forall(
+        100,
+        0xA9,
+        |rng| {
+            let users = rng.range(1, 6);
+            rand_decision(rng, users)
+        },
+        |d| {
+            let e = Env::new(
+                Scenario::exp_d(d.n_users()),
+                Calibration::default(),
+                AccuracyConstraint::Min,
+                3,
+            );
+            let t = e.expected_avg_ms(d);
+            if e.penalty_ms() + 1e-9 >= t {
+                Ok(())
+            } else {
+                Err(format!("penalty {} < response {t} for {d}", e.penalty_ms()))
+            }
+        },
+    );
+}
