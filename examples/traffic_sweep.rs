@@ -1,0 +1,66 @@
+//! Open-loop traffic study: what the orchestrated placement looks like
+//! under *asynchronous* arrivals, from idle to saturation.
+//!
+//! The paper's environment is synchronous (one request per device per
+//! round); this example drives the same calibrated latency model through
+//! the discrete-event core (`eeco::sim::des`) with per-device Poisson and
+//! bursty (MMPP) arrival processes, reporting per-request response
+//! percentiles, queueing delay and throughput per arrival rate.
+//!
+//! Run: `cargo run --release --example traffic_sweep`
+//! (sim-only: no artifacts needed; bit-exact for a fixed --seed)
+
+use eeco::config::Config;
+use eeco::experiments::{self, ExpCtx};
+use eeco::metrics::TrafficMetrics;
+use eeco::orchestrator::Orchestrator;
+use eeco::prelude::*;
+use eeco::sim::Env;
+
+fn main() -> anyhow::Result<()> {
+    // 1) The canonical sweep (also available as `eeco experiment
+    //    traffic_sweep`): 10 users, EXP-A, lambda from idle to overload.
+    let cfg = Config::default();
+    let ctx = ExpCtx::new(cfg);
+    experiments::run("traffic_sweep", &ctx)?;
+
+    // 2) The same machinery scoring a *trained* policy: train the paper's
+    //    Q-learner synchronously, then evaluate it open-loop — the async
+    //    evaluation mode the orchestrator grew for this.
+    let users = 5;
+    let constraint = AccuracyConstraint::AtLeast(85.0);
+    let env = Env::new(Scenario::exp_a(users), Calibration::default(), constraint, 42);
+    let agent = eeco::agent::qlearning::QTableAgent::new(
+        users,
+        Hyper::paper_defaults(Algo::QLearning, users),
+        eeco::agent::ActionSet::full(),
+        43,
+    );
+    let mut orch = Orchestrator::new(env, Box::new(agent));
+    orch.env.freeze();
+    let _ = orch.train_full(experiments::scaled(30_000), 10_000);
+    orch.env.reset_load();
+
+    println!("\n== trained policy under open-loop Poisson arrivals ({users} users) ==");
+    println!(
+        "{:>10} {:>8} {:>8} {:>8} {:>8} {:>10}",
+        "rate/s/dev", "p50 ms", "p95 ms", "p99 ms", "queue ms", "thr rps"
+    );
+    for rate in [0.5, 1.0, 2.0, 3.0] {
+        let m: TrafficMetrics = orch.evaluate_async(
+            ArrivalProcess::Poisson { rate_per_s: rate },
+            30_000.0,
+            42,
+        );
+        println!(
+            "{:>10.2} {:>8.0} {:>8.0} {:>8.0} {:>8.0} {:>10.1}",
+            rate,
+            m.response.p50_ms,
+            m.response.p95_ms,
+            m.response.p99_ms,
+            m.queueing.mean_ms,
+            m.throughput_rps
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! DES core throughput benches: the event queue is the substrate every
+//! open-loop evaluation and future scale experiment (admission control,
+//! autoscaling, sharding) runs on, so events/second is a first-class
+//! budget. Also covers arrival-schedule generation and the sync-round
+//! adapter the RL training loop now goes through.
+
+use eeco::prelude::*;
+use eeco::sim::arrivals::{schedule, ArrivalProcess};
+use eeco::sim::des;
+use eeco::sim::ResponseModel;
+use eeco::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("des");
+
+    let users = 10;
+    let model = ResponseModel::new(eeco::network::Network::new(
+        Scenario::exp_a(users),
+        Calibration::default(),
+    ));
+    let state = eeco::monitor::SystemState {
+        edge: eeco::monitor::NodeState::idle(NetCond::Regular),
+        cloud: eeco::monitor::NodeState::idle(NetCond::Regular),
+        devices: vec![eeco::monitor::NodeState::idle(NetCond::Regular); users],
+    };
+    let decision = Decision(
+        (0..users)
+            .map(|i| Action {
+                tier: Tier::from_index(i % 3),
+                model: ModelId((i % 8) as u8),
+            })
+            .collect(),
+    );
+
+    b.run("schedule_poisson_10u_60s", || {
+        schedule(ArrivalProcess::Poisson { rate_per_s: 2.0 }, users, 60_000.0, 1).len()
+    });
+
+    let trace = schedule(ArrivalProcess::Poisson { rate_per_s: 2.0 }, users, 60_000.0, 1);
+    println!("  (open-loop trace: {} requests)", trace.len());
+    b.run("open_loop_10u_60s_poisson2", || {
+        des::run_open_loop(&model, &state, &decision, &trace, 60_000.0, 2).completed.len()
+    });
+
+    let burst = schedule(
+        ArrivalProcess::Mmpp { calm_rate_per_s: 0.5, burst_rate_per_s: 6.0, mean_phase_ms: 2000.0 },
+        users,
+        60_000.0,
+        3,
+    );
+    b.run("open_loop_10u_60s_mmpp", || {
+        des::run_open_loop(&model, &state, &decision, &burst, 60_000.0, 4).completed.len()
+    });
+
+    b.run("sync_round_adapter_n10", || {
+        des::sync_round_responses(&model, &decision, &state)
+    });
+
+    b.save();
+}

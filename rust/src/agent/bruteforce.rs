@@ -14,11 +14,22 @@ use crate::models;
 use crate::sim::Env;
 use crate::types::{Action, Decision, ModelId, Tier, NUM_MODELS};
 
+/// Largest user count the exhaustive oracle will attempt: the 3^N tier
+/// sweep with the per-assignment DP is milliseconds through the paper's
+/// N = 5 and around a second at 6, but explodes beyond (and
+/// `3usize.pow(n)` would eventually overflow). Callers at open-loop scale
+/// (10+ users) use heuristic or learned policies instead.
+pub const MAX_ORACLE_USERS: usize = 6;
+
 /// Exact optimum: minimal expected average response time subject to the
-/// strict average-accuracy constraint. Returns None only if the constraint
-/// is unsatisfiable (threshold above all-d0).
+/// strict average-accuracy constraint. Returns None if the constraint is
+/// unsatisfiable (threshold above all-d0) or the instance exceeds
+/// [`MAX_ORACLE_USERS`] (exhaustive search impractical).
 pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
     let n = env.users();
+    if n > MAX_ORACLE_USERS {
+        return None;
+    }
     let acc10: Vec<usize> =
         models::CATALOG.iter().map(|m| (m.top5 * 10.0).round() as usize).collect();
     // smallest integer accuracy-sum (in tenths) that satisfies
@@ -32,14 +43,12 @@ pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
     let mut best: Option<(Decision, f64)> = None;
     let assignments = 3usize.pow(n as u32);
     let mut tiers = vec![Tier::Local; n];
-    for mut code in 0..assignments {
+    for code in 0..assignments {
         let mut c = code;
         for t in tiers.iter_mut() {
             *t = Tier::from_index(c % 3);
             c /= 3;
         }
-        code = 0;
-        let _ = code;
         let counts = {
             let mut k = [0usize; 3];
             for &t in &tiers {
@@ -187,6 +196,14 @@ mod tests {
     fn infeasible_returns_none() {
         let e = env("exp-a", 2, AccuracyConstraint::Min);
         assert!(optimal(&e, 95.0).is_none());
+    }
+
+    #[test]
+    fn oversized_instance_declines_instead_of_hanging() {
+        let e = env("exp-a", MAX_ORACLE_USERS + 2, AccuracyConstraint::Min);
+        assert!(optimal(&e, 0.0).is_none());
+        let ok = env("exp-a", 5, AccuracyConstraint::Min);
+        assert!(optimal(&ok, 0.0).is_some());
     }
 
     #[test]

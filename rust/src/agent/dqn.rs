@@ -172,6 +172,10 @@ impl Agent for DqnAgent {
     fn steps(&self) -> usize {
         self.steps
     }
+
+    fn epsilon(&self) -> f64 {
+        self.hyper.epsilon_at(self.steps)
+    }
 }
 
 // Integration-level tests live in rust/tests/ (they need built artifacts);

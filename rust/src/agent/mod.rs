@@ -44,6 +44,16 @@ pub trait Agent {
     /// Number of learn() calls so far (training-step counter for the
     /// convergence analyses of Fig 6/7, Table 11).
     fn steps(&self) -> usize;
+
+    /// Current exploration rate — what fraction of decisions are random
+    /// when `decide(_, explore = true)` is called. Epsilon-greedy learners
+    /// report their schedule's value at the current step; deterministic
+    /// policies (fixed strategies, oracles) report 0. Surfaced per round
+    /// in [`crate::metrics::RoundRecord::epsilon`] so training curves can
+    /// plot exploration decay.
+    fn epsilon(&self) -> f64 {
+        0.0
+    }
 }
 
 /// Restriction of the per-device action set (the SOTA baseline only

@@ -168,6 +168,10 @@ impl Agent for QTableAgent {
     fn steps(&self) -> usize {
         self.steps
     }
+
+    fn epsilon(&self) -> f64 {
+        self.hyper.epsilon_at(self.steps)
+    }
 }
 
 /// Exact joint-action Q-table (validation reference, N <= 2).
@@ -250,6 +254,10 @@ impl Agent for ExactJointAgent {
 
     fn steps(&self) -> usize {
         self.steps
+    }
+
+    fn epsilon(&self) -> f64 {
+        self.hyper.epsilon_at(self.steps)
     }
 }
 

@@ -25,6 +25,53 @@ pub enum Mode {
     Measured,
 }
 
+/// Arrival-process knobs for the open-loop (DES) evaluation paths — the
+/// `[traffic]` config section plus `--arrival/--rate/--horizon` CLI
+/// overrides. Kept as plain knobs here (the typed process lives in
+/// `sim::arrivals::ArrivalProcess`) so the config layer stays free of sim
+/// imports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficConfig {
+    /// Process name: "sync" | "poisson" | "mmpp" (alias "bursty").
+    pub process: String,
+    /// Per-device mean request rate (poisson; mmpp calm-phase rate).
+    pub rate_per_s: f64,
+    /// Round period for the "sync" process.
+    pub period_ms: f64,
+    /// Burst-phase rate multiplier for "mmpp".
+    pub burst_factor: f64,
+    /// Mean phase holding time for "mmpp", ms.
+    pub mean_phase_ms: f64,
+    /// Arrival horizon of one evaluation, ms of virtual time.
+    pub horizon_ms: f64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            process: "poisson".into(),
+            rate_per_s: 1.0,
+            period_ms: 1000.0,
+            burst_factor: 8.0,
+            mean_phase_ms: 2000.0,
+            horizon_ms: 60_000.0,
+        }
+    }
+}
+
+impl TrafficConfig {
+    pub fn arrival(&self) -> Result<crate::sim::ArrivalProcess, String> {
+        crate::sim::ArrivalProcess::by_name(
+            &self.process,
+            self.rate_per_s,
+            self.period_ms,
+            self.burst_factor,
+            self.mean_phase_ms,
+        )
+        .ok_or_else(|| format!("unknown arrival process '{}'", self.process))
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Config {
     pub users: usize,
@@ -36,6 +83,7 @@ pub struct Config {
     pub mode: Mode,
     pub seed: u64,
     pub steps: usize,
+    pub traffic: TrafficConfig,
     pub artifacts_dir: String,
     pub results_dir: String,
 }
@@ -53,6 +101,7 @@ impl Default for Config {
             mode: Mode::Sim,
             seed: 42,
             steps: 50_000,
+            traffic: TrafficConfig::default(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -99,6 +148,14 @@ impl Config {
         }
         self.hyper = Hyper::paper_defaults(self.algo, self.users).overridden(doc);
         self.calibration = Calibration::from_doc(doc);
+        let t = &mut self.traffic;
+        t.process = doc.str("traffic.process", &t.process);
+        t.rate_per_s = doc.f64("traffic.rate_per_s", t.rate_per_s);
+        t.period_ms = doc.f64("traffic.period_ms", t.period_ms);
+        t.burst_factor = doc.f64("traffic.burst_factor", t.burst_factor);
+        t.mean_phase_ms = doc.f64("traffic.mean_phase_ms", t.mean_phase_ms);
+        t.horizon_ms = doc.f64("traffic.horizon_ms", t.horizon_ms);
+        self.traffic.arrival().map(|_| ())?;
         Ok(())
     }
 
@@ -129,6 +186,12 @@ impl Config {
         if let Some(d) = args.get("artifacts") {
             self.artifacts_dir = d.to_string();
         }
+        if let Some(p) = args.get("arrival") {
+            self.traffic.process = p.to_string();
+        }
+        self.traffic.rate_per_s = args.f64("rate", self.traffic.rate_per_s);
+        self.traffic.horizon_ms = args.f64("horizon-ms", self.traffic.horizon_ms);
+        self.traffic.arrival().map(|_| ())?;
         Ok(())
     }
 }
@@ -197,5 +260,37 @@ mod tests {
     fn bad_scenario_errors() {
         let args = Args::parse(["--scenario", "exp-z"].iter().map(|s| s.to_string()));
         assert!(Config::load(&args).is_err());
+    }
+
+    #[test]
+    fn traffic_section_parses() {
+        let doc = Doc::parse(
+            "[traffic]\nprocess = \"mmpp\"\nrate_per_s = 4.5\nburst_factor = 10\nhorizon_ms = 30000\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.traffic.process, "mmpp");
+        assert_eq!(c.traffic.rate_per_s, 4.5);
+        assert_eq!(c.traffic.horizon_ms, 30_000.0);
+        assert!(matches!(
+            c.traffic.arrival().unwrap(),
+            crate::sim::ArrivalProcess::Mmpp { .. }
+        ));
+        // unknown process rejected at load time
+        let bad = Doc::parse("[traffic]\nprocess = \"fractal\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn traffic_cli_overrides() {
+        let args = Args::parse(
+            ["--arrival", "poisson", "--rate", "12", "--horizon-ms", "5000"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::load(&args).unwrap();
+        assert_eq!(c.traffic.rate_per_s, 12.0);
+        assert_eq!(c.traffic.horizon_ms, 5000.0);
     }
 }

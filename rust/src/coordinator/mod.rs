@@ -16,7 +16,6 @@ pub mod batcher;
 pub mod router;
 
 use std::sync::mpsc;
-use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -143,6 +142,115 @@ pub fn serve_round(
     let mut records = Vec::new();
     for _ in 0..n_groups {
         records.extend(rx.recv().expect("serving group lost")?);
+    }
+    records.sort_by_key(|r| r.req_id);
+    Ok(records)
+}
+
+/// Serve an arrival-schedule-driven request trace (the open-loop sibling
+/// of [`serve_round`]).
+///
+/// Requests arrive at their trace timestamps on a *virtual* clock; each
+/// executing node runs a dynamic batcher over that clock
+/// (`window_virtual_ms` window, `cfg.max_batch` cap), so batches form the
+/// way they would under live asynchronous traffic instead of synchronized
+/// rounds. When a batch flushes, it executes for real: modeled network
+/// transfer (scaled sleep) + measured PJRT compute on the node's pool.
+/// `queue_ms` in the returned records is the virtual batching wait
+/// (flush - arrival) plus the measured node-queue wait, so percentiles
+/// over `total_ms` reflect what open-loop clients would see.
+pub fn serve_trace(
+    cluster: &Cluster,
+    network: &Network,
+    router: &Router,
+    trace: &[Request],
+    cfg: &ServeConfig,
+    window_virtual_ms: f64,
+) -> Result<Vec<ResponseRecord>> {
+    use std::collections::BTreeMap;
+
+    // (tier index, device-if-local) -> batcher over virtual arrival time.
+    let mut batchers: BTreeMap<(usize, usize), Batcher> = BTreeMap::new();
+    // req_id -> routed action (the batcher only carries ids + times).
+    let mut routes: BTreeMap<u64, Route> = BTreeMap::new();
+    let mut records: Vec<ResponseRecord> = Vec::new();
+
+    let node_key = |r: &Route| match r.action.tier {
+        Tier::Local => (0usize, r.device),
+        Tier::Edge => (1, 0),
+        Tier::Cloud => (2, 0),
+    };
+
+    let execute = |key: (usize, usize),
+                       model: u8,
+                       batch: &[batcher::Pending],
+                       flush_ms: f64,
+                       routes: &BTreeMap<u64, Route>,
+                       records: &mut Vec<ResponseRecord>|
+     -> Result<()> {
+        let tier = Tier::from_index(key.0);
+        let node = cluster.node_for(key.1, tier);
+        let net_ms: f64 = batch
+            .iter()
+            .map(|p| network.path_overhead_ms(routes[&p.req_id].device, tier))
+            .fold(0.0, f64::max)
+            + network.queueing_ms(tier, batch.len());
+        std::thread::sleep(std::time::Duration::from_secs_f64(
+            net_ms * cfg.time_scale / 1e3,
+        ));
+        let queued_at = Instant::now();
+        let ids: Vec<u64> = batch.iter().map(|p| p.req_id).collect();
+        let (_logits, compute_ms) = node.infer_batch(crate::types::ModelId(model), &ids)?;
+        let measured_queue = (queued_at.elapsed().as_secs_f64() * 1e3 - compute_ms).max(0.0);
+        for p in batch {
+            let r = &routes[&p.req_id];
+            let batch_wait = (flush_ms - p.enqueued_ms).max(0.0);
+            let queue_ms = batch_wait + measured_queue;
+            records.push(ResponseRecord {
+                req_id: p.req_id,
+                device: r.device,
+                action: r.action,
+                network_ms: net_ms,
+                queue_ms,
+                compute_ms,
+                total_ms: net_ms + queue_ms + compute_ms,
+                batch_size: batch.len(),
+            });
+        }
+        Ok(())
+    };
+
+    for req in trace {
+        let now = req.arrival_ms;
+        // Flush any window that expired before this arrival, at its own
+        // expiry instant (oldest enqueue + window), not at `now`.
+        for (&key, b) in batchers.iter_mut() {
+            for (model, batch) in b.poll(now) {
+                let oldest =
+                    batch.iter().map(|p| p.enqueued_ms).fold(f64::INFINITY, f64::min);
+                let flush_ms = (oldest + window_virtual_ms).min(now);
+                execute(key, model.0, &batch, flush_ms, &routes, &mut records)?;
+            }
+        }
+        let route = router.route(req.id, req.device);
+        let key = node_key(&route);
+        routes.insert(req.id, route);
+        let b = batchers
+            .entry(key)
+            .or_insert_with(|| Batcher::new(cfg.max_batch, window_virtual_ms));
+        let routed = &routes[&req.id];
+        if let Some((model, batch)) = b.push(routed.action.model, req.id, now) {
+            execute(key, model.0, &batch, now, &routes, &mut records)?;
+        }
+    }
+    // End of trace: drain every residual batch at its window expiry.
+    let keys: Vec<(usize, usize)> = batchers.keys().copied().collect();
+    for key in keys {
+        let drained = batchers.get_mut(&key).map(|b| b.drain()).unwrap_or_default();
+        for (model, batch) in drained {
+            let oldest = batch.iter().map(|p| p.enqueued_ms).fold(f64::INFINITY, f64::min);
+            execute(key, model.0, &batch, oldest + window_virtual_ms, &routes, &mut records)?;
+        }
     }
     records.sort_by_key(|r| r.req_id);
     Ok(records)

@@ -6,6 +6,7 @@
 pub mod figures;
 pub mod overhead;
 pub mod tables;
+pub mod traffic;
 pub mod training;
 
 use std::sync::Arc;
@@ -98,10 +99,11 @@ impl ExpCtx {
     }
 }
 
-/// All experiment ids, in paper order.
+/// All experiment ids: the paper set in paper order, then the beyond-paper
+/// open-loop drivers.
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig1c", "fig5", "table8", "table9", "table10", "fig6", "fig7",
-    "table11", "fig8", "table12", "prediction",
+    "table11", "fig8", "table12", "prediction", "traffic_sweep",
 ];
 
 /// Dispatch an experiment by id.
@@ -120,6 +122,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "fig8" => overhead::fig8(ctx),
         "table12" => overhead::table12(ctx),
         "prediction" => overhead::prediction(ctx),
+        "traffic_sweep" => traffic::traffic_sweep(ctx),
         other => Err(anyhow!("unknown experiment '{other}' (known: {ALL:?})")),
     }
 }
@@ -150,7 +153,8 @@ mod tests {
         // unknown id errors, known ids exist in ALL
         let ctx = ExpCtx::new(Config::default());
         assert!(run("nope", &ctx).is_err());
-        assert_eq!(ALL.len(), 13);
+        // 13 paper experiments + the open-loop traffic sweep
+        assert_eq!(ALL.len(), 14);
     }
 
     #[test]

@@ -1,0 +1,182 @@
+//! Open-loop traffic drivers (beyond the paper): sweep per-device arrival
+//! rate from idle to saturation through the DES core and report
+//! per-request response percentiles + throughput — the workload regime
+//! the related work (DeepEdge, arXiv 2110.01863; delay-aware DRL
+//! offloading, arXiv 2103.07811) evaluates under, which the synchronous
+//! §4.2.2 environment cannot express.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Scenario;
+use crate::metrics::{render_table, Csv, TrafficMetrics};
+use crate::sim::{arrivals, ArrivalProcess};
+use crate::types::{AccuracyConstraint, Action, Decision, ModelId, Tier};
+
+use super::ExpCtx;
+
+/// The paper's Table 8 EXP-A optimum at 5 users keeps 3 local and sends
+/// 1 to the edge and 1 to the cloud; this scales that placement pattern
+/// cyclically to any user count (all d0, the Max-accuracy policy).
+pub fn scaled_table8_decision(users: usize) -> Decision {
+    Decision(
+        (0..users)
+            .map(|i| {
+                let tier = match i % 5 {
+                    0 | 1 | 2 => Tier::Local,
+                    3 => Tier::Edge,
+                    _ => Tier::Cloud,
+                };
+                Action { tier, model: ModelId(0) }
+            })
+            .collect(),
+    )
+}
+
+/// Per-device Poisson rates swept, requests/second: idle through the
+/// ~2.3 req/s/device capacity of the d0 placement into overload.
+pub const SWEEP_RATES: [f64; 6] = [0.25, 0.5, 1.0, 1.5, 2.0, 3.0];
+
+/// `traffic_sweep`: seeded Poisson λ sweep at 10 users (EXP-A), plus a
+/// burstiness comparison (MMPP at an equal mean rate) at one midpoint.
+pub fn traffic_sweep(ctx: &ExpCtx) -> Result<()> {
+    let users = 10;
+    let scenario = Scenario::exp_a(users);
+    println!("\n== traffic_sweep: open-loop Poisson arrivals, {users} users, {scenario} ==");
+    let env = ctx.env(scenario, AccuracyConstraint::Max, ctx.cfg.seed);
+    let decision = scaled_table8_decision(users);
+    let horizon_ms = ctx.cfg.traffic.horizon_ms;
+    let seed = ctx.cfg.seed;
+
+    let mut csv = Csv::new(&[
+        "process",
+        "rate_per_s",
+        "requests",
+        "throughput_rps",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "mean_queue_ms",
+    ]);
+    let mut rows = Vec::new();
+    let mut run = |label: &str, process: ArrivalProcess| {
+        let trace = arrivals::schedule(process, users, horizon_ms, seed);
+        let out = env.open_loop(&decision, &trace, horizon_ms, seed ^ 0xDE5);
+        let m = TrafficMetrics::from_outcome(&decision, &out);
+        let rate = process.mean_rate_per_s();
+        csv.row(&[
+            label.into(),
+            format!("{rate:.2}"),
+            m.requests.to_string(),
+            format!("{:.2}", m.throughput_rps),
+            format!("{:.1}", m.response.p50_ms),
+            format!("{:.1}", m.response.p95_ms),
+            format!("{:.1}", m.response.p99_ms),
+            format!("{:.1}", m.queueing.mean_ms),
+        ]);
+        rows.push(vec![
+            label.to_string(),
+            format!("{rate:.2}"),
+            m.requests.to_string(),
+            format!("{:.1}", m.throughput_rps),
+            format!("{:.0}", m.response.p50_ms),
+            format!("{:.0}", m.response.p95_ms),
+            format!("{:.0}", m.response.p99_ms),
+            format!("{:.0}", m.queueing.mean_ms),
+        ]);
+    };
+
+    for rate in SWEEP_RATES {
+        run("poisson", ArrivalProcess::Poisson { rate_per_s: rate });
+    }
+    // The process the `[traffic]` section / --arrival/--rate CLI selected
+    // (default: poisson at 1 req/s), at its own mean rate.
+    let configured = ctx.cfg.traffic.arrival().map_err(|e| anyhow!(e))?;
+    run("config", configured);
+    // Burstiness at an equal mean rate: same offered load, worse tails.
+    // Skipped when the configured process is already bursty.
+    if !matches!(configured, ArrivalProcess::Mmpp { .. }) {
+        run(
+            "mmpp",
+            ArrivalProcess::Mmpp {
+                calm_rate_per_s: 0.25,
+                burst_rate_per_s: 1.75,
+                mean_phase_ms: 4000.0,
+            },
+        );
+    }
+
+    print!(
+        "{}",
+        render_table(
+            &["process", "rate/s/dev", "reqs", "thr rps", "p50", "p95", "p99", "queue ms"],
+            &rows
+        )
+    );
+    println!("policy: {decision}");
+    csv.save(&ctx.cfg.results_dir, "traffic_sweep")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::experiments::ExpCtx;
+
+    #[test]
+    fn scaled_decision_keeps_table8_shape() {
+        let d = scaled_table8_decision(10);
+        let counts = crate::sim::ResponseModel::tier_counts(&d);
+        assert_eq!(counts, [6, 2, 2]);
+        assert!(d.0.iter().all(|a| a.model.0 == 0));
+    }
+
+    #[test]
+    fn traffic_sweep_runs_and_writes_csv() {
+        let cfg = Config {
+            results_dir: std::env::temp_dir()
+                .join("eeco_traffic_sweep")
+                .to_str()
+                .unwrap()
+                .into(),
+            traffic: crate::config::TrafficConfig {
+                horizon_ms: 3000.0, // keep the unit test fast
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let ctx = ExpCtx::new(cfg);
+        traffic_sweep(&ctx).unwrap();
+        let path = format!("{}/traffic_sweep.csv", ctx.cfg.results_dir);
+        let body = std::fs::read_to_string(path).unwrap();
+        // header + 6 poisson rows + configured row + mmpp comparison row
+        assert_eq!(body.lines().count(), 9, "{body}");
+        assert!(body.contains("mmpp"));
+        assert!(body.contains("config"));
+    }
+
+    #[test]
+    fn traffic_sweep_honors_configured_process() {
+        let cfg = Config {
+            results_dir: std::env::temp_dir()
+                .join("eeco_traffic_sweep_mmpp")
+                .to_str()
+                .unwrap()
+                .into(),
+            traffic: crate::config::TrafficConfig {
+                process: "mmpp".into(),
+                rate_per_s: 0.5,
+                horizon_ms: 2000.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let ctx = ExpCtx::new(cfg);
+        traffic_sweep(&ctx).unwrap();
+        let path = format!("{}/traffic_sweep.csv", ctx.cfg.results_dir);
+        let body = std::fs::read_to_string(path).unwrap();
+        // configured row present; the redundant mmpp comparison is skipped
+        assert_eq!(body.lines().count(), 8, "{body}");
+        assert!(body.contains("config"));
+    }
+}

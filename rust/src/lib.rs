@@ -31,7 +31,8 @@ pub mod experiments;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
-    pub use crate::config::{Algo, Calibration, Config, Hyper, Mode, Scenario};
+    pub use crate::config::{Algo, Calibration, Config, Hyper, Mode, Scenario, TrafficConfig};
+    pub use crate::sim::ArrivalProcess;
     pub use crate::models::{info as model_info, top5_table, CATALOG};
     pub use crate::types::{
         AccuracyConstraint, Action, Decision, ModelId, NetCond, Tier, ACTIONS_PER_DEVICE,

@@ -17,7 +17,7 @@ use anyhow::{anyhow, Result};
 
 use eeco::agent::bruteforce;
 use eeco::config::{Config, Mode};
-use eeco::coordinator::{serve_round, Router, ServeConfig};
+use eeco::coordinator::{serve_round, serve_trace, Router, ServeConfig};
 use eeco::experiments::{self, ExpCtx};
 use eeco::metrics::render_table;
 use eeco::orchestrator::Orchestrator;
@@ -60,12 +60,16 @@ COMMANDS:
   experiment <id|all>   regenerate paper figures/tables ({ids})
   train                 train an RL agent (--algo ql|dqn|sota, --users N,
                         --constraint min|80|85|89|max, --steps K, --scenario exp-a..d)
-  serve                 measured-mode serving over PJRT (--rounds R)
+  serve                 measured-mode serving over PJRT (--rounds R, or
+                        --trace to play the [traffic] arrival schedule
+                        through the virtual-clock dynamic batcher)
   calibrate             measure per-model compute times on this host
   info                  print model catalog + artifact summary
 
 OPTIONS (global): --users N  --scenario exp-a  --seed S  --artifacts DIR
-                  --config FILE  --mode sim|measured",
+                  --config FILE  --mode sim|measured
+OPTIONS (traffic): --arrival sync|poisson|mmpp  --rate R  --horizon-ms H
+                  (open-loop DES evaluation; see `experiment traffic_sweep`)",
         ids = experiments::ALL.join(",")
     );
 }
@@ -182,12 +186,34 @@ fn cmd_serve(args: &Args, cfg: Config) -> Result<()> {
 
     let mut all = Vec::new();
     let t0 = std::time::Instant::now();
-    for round in 0..rounds {
-        let reqs = wl.sync_round(round as f64 * 1000.0);
-        let recs = serve_round(&cluster, &network, &router, &reqs, &serve_cfg)?;
-        all.extend(recs);
+    if args.flag("trace") {
+        // Open-loop serving: play an arrival schedule (the [traffic]
+        // process) through the virtual-clock dynamic batcher.
+        let process = cfg.traffic.arrival().map_err(|e| anyhow!(e))?;
+        let trace = eeco::sim::arrivals::schedule(
+            process,
+            cfg.users,
+            cfg.traffic.horizon_ms,
+            cfg.seed,
+        );
+        println!(
+            "trace mode: {} requests over {:.0} ms virtual time",
+            trace.len(),
+            cfg.traffic.horizon_ms
+        );
+        all = serve_trace(&cluster, &network, &router, &trace, &serve_cfg, 50.0)?;
+    } else {
+        for round in 0..rounds {
+            let reqs = wl.sync_round(round as f64 * 1000.0);
+            let recs = serve_round(&cluster, &network, &router, &reqs, &serve_cfg)?;
+            all.extend(recs);
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
+    if all.is_empty() {
+        println!("no requests served (empty trace?)");
+        return Ok(());
+    }
 
     let mut rows = Vec::new();
     let mut total = 0.0;

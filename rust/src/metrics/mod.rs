@@ -46,9 +46,103 @@ impl RunMetrics {
             .set("rounds", self.rounds)
             .set("avg_response_ms", self.response.mean())
             .set("p50_response_ms", if self.response.is_empty() { f64::NAN } else { self.response.pct(50.0) })
+            .set("p95_response_ms", if self.response.is_empty() { f64::NAN } else { self.response.pct(95.0) })
             .set("p99_response_ms", if self.response.is_empty() { f64::NAN } else { self.response.pct(99.0) })
             .set("avg_accuracy", self.accuracy.mean())
             .set("avg_reward", self.reward.mean())
+    }
+}
+
+/// Per-request latency distribution summary (open-loop / trace serving).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySummary {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencySummary {
+    /// Summarize a latency sample (NaNs never appear in DES output).
+    pub fn of(values: &[f64]) -> LatencySummary {
+        if values.is_empty() {
+            return LatencySummary {
+                count: 0,
+                mean_ms: f64::NAN,
+                p50_ms: f64::NAN,
+                p95_ms: f64::NAN,
+                p99_ms: f64::NAN,
+                max_ms: f64::NAN,
+            };
+        }
+        let mut s = Sample::new();
+        for &v in values {
+            s.push(v);
+        }
+        LatencySummary {
+            count: values.len(),
+            mean_ms: s.mean(),
+            p50_ms: s.pct(50.0),
+            p95_ms: s.pct(95.0),
+            p99_ms: s.pct(99.0),
+            max_ms: s.pct(100.0),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.count)
+            .set("mean_ms", self.mean_ms)
+            .set("p50_ms", self.p50_ms)
+            .set("p95_ms", self.p95_ms)
+            .set("p99_ms", self.p99_ms)
+            .set("max_ms", self.max_ms)
+    }
+}
+
+/// Metrics of one open-loop (asynchronous-arrival) evaluation: response
+/// percentiles, queueing decomposition and throughput, plus the policy
+/// that served the trace. Produced by `Orchestrator::evaluate_async` and
+/// the `traffic_sweep` experiment.
+#[derive(Debug, Clone)]
+pub struct TrafficMetrics {
+    pub decision: Decision,
+    pub response: LatencySummary,
+    /// Waiting time only (shared-link + compute-queue), per request.
+    pub queueing: LatencySummary,
+    pub throughput_rps: f64,
+    /// Virtual time of the last departure.
+    pub makespan_ms: f64,
+    pub requests: usize,
+}
+
+impl TrafficMetrics {
+    pub fn from_outcome(
+        decision: &Decision,
+        outcome: &crate::sim::des::DesOutcome,
+    ) -> TrafficMetrics {
+        let waits: Vec<f64> =
+            outcome.completed.iter().map(|c| c.link_wait_ms + c.queue_ms).collect();
+        TrafficMetrics {
+            decision: decision.clone(),
+            response: LatencySummary::of(&outcome.responses_ms()),
+            queueing: LatencySummary::of(&waits),
+            throughput_rps: outcome.throughput_rps(),
+            makespan_ms: outcome.makespan_ms,
+            requests: outcome.completed.len(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("decision", self.decision.to_string())
+            .set("requests", self.requests)
+            .set("throughput_rps", self.throughput_rps)
+            .set("makespan_ms", self.makespan_ms)
+            .set("response", self.response.to_json())
+            .set("queueing", self.queueing.to_json())
     }
 }
 
@@ -171,5 +265,28 @@ mod tests {
         let t = render_table(&["col", "x"], &[vec!["value".into(), "1".into()]]);
         assert!(t.contains("| col   | x |"));
         assert!(t.contains("| value | 1 |"));
+    }
+
+    #[test]
+    fn latency_summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencySummary::of(&xs);
+        assert_eq!(s.count, 100);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        assert!((s.p50_ms - 50.5).abs() < 1e-9);
+        assert!(s.p95_ms > 94.0 && s.p95_ms < 96.5);
+        assert!(s.p99_ms > 98.0 && s.p99_ms <= 100.0);
+        assert_eq!(s.max_ms, 100.0);
+        assert_eq!(LatencySummary::of(&[]).count, 0);
+    }
+
+    #[test]
+    fn summary_reports_p95() {
+        let mut m = RunMetrics::new();
+        for v in 1..=20 {
+            m.push(&rec(v as f64 * 10.0));
+        }
+        let s = m.summary();
+        assert!(s.field("p95_response_ms").unwrap().as_f64().unwrap() > 180.0);
     }
 }

@@ -5,7 +5,7 @@
 //! (§6.1's "100% prediction accuracy" experiment).
 
 use crate::agent::{bruteforce, Agent};
-use crate::metrics::{RoundRecord, RunMetrics};
+use crate::metrics::{RoundRecord, RunMetrics, TrafficMetrics};
 use crate::sim::Env;
 use crate::types::Decision;
 use crate::util::stats::Convergence;
@@ -35,6 +35,9 @@ impl Orchestrator {
     /// execute, reward, learn.
     pub fn round(&mut self, explore: bool) -> RoundRecord {
         let state = self.env.encoded();
+        // The exploration rate that governed *this* decision (the learn()
+        // below advances the agent's schedule).
+        let epsilon = if explore { self.agent.epsilon() } else { 0.0 };
         let decision = self.agent.decide(&state, explore);
         let out = self.env.step(&decision);
         let next = self.env.encoded();
@@ -48,7 +51,7 @@ impl Orchestrator {
             avg_response_ms: out.avg_ms,
             avg_accuracy: out.avg_accuracy,
             reward: out.reward,
-            epsilon: f64::NAN,
+            epsilon,
         }
     }
 
@@ -113,6 +116,31 @@ impl Orchestrator {
             m.push(&rec);
         }
         m
+    }
+
+    /// Asynchronous (open-loop) evaluation: score the greedy policy under
+    /// stochastic arrivals instead of synchronous rounds.
+    ///
+    /// The agent's greedy decision at the current monitored state is
+    /// installed as the routing policy, an arrival trace is generated from
+    /// `process` over `horizon_ms`, and the DES core plays it through the
+    /// per-node vCPU queues. The returned [`TrafficMetrics`] carry
+    /// *per-request* response percentiles (p50/p95/p99) and throughput —
+    /// the open-loop quality signal round averages cannot express.
+    /// Deterministic for a fixed `seed` (trace and service noise both
+    /// derive from it).
+    pub fn evaluate_async(
+        &mut self,
+        process: crate::sim::ArrivalProcess,
+        horizon_ms: f64,
+        seed: u64,
+    ) -> TrafficMetrics {
+        let state = self.env.encoded();
+        let decision = self.agent.decide(&state, false);
+        let users = self.env.users();
+        let trace = crate::sim::arrivals::schedule(process, users, horizon_ms, seed);
+        let outcome = self.env.open_loop(&decision, &trace, horizon_ms, seed ^ 0x5EED_DE5);
+        TrafficMetrics::from_outcome(&decision, &outcome)
     }
 
     /// The representative greedy decision at the idle system state —
@@ -218,6 +246,46 @@ mod tests {
         let mut o = Orchestrator::new(env(1, AccuracyConstraint::Min), ql(1));
         o.evaluate(10);
         assert_eq!(o.agent.steps(), 0);
+    }
+
+    #[test]
+    fn round_records_surface_real_epsilon() {
+        let users = 2;
+        let mut o = Orchestrator::new(env(users, AccuracyConstraint::Min), ql(users));
+        let hyper = crate::config::Hyper::paper_defaults(
+            crate::config::Algo::QLearning,
+            users,
+        );
+        // first exploring round sees the schedule's step-0 value (1.0)
+        let rec = o.round(true);
+        assert_eq!(rec.epsilon, hyper.epsilon_at(0));
+        // subsequent rounds track the decaying schedule, not NaN
+        for step in 1..20 {
+            let rec = o.round(true);
+            assert!(rec.epsilon.is_finite());
+            assert_eq!(rec.epsilon, hyper.epsilon_at(step));
+        }
+        // greedy evaluation reports zero exploration
+        assert_eq!(o.round(false).epsilon, 0.0);
+    }
+
+    #[test]
+    fn async_evaluation_reports_percentiles_and_throughput() {
+        let users = 3;
+        let mut o = Orchestrator::new(env(users, AccuracyConstraint::Min), ql(users));
+        o.env.freeze();
+        o.env.reset_load();
+        let m = o.evaluate_async(
+            crate::sim::ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            10_000.0,
+            3,
+        );
+        assert!(m.requests > 10, "requests {}", m.requests);
+        assert!(m.response.p50_ms > 0.0);
+        assert!(m.response.p50_ms <= m.response.p95_ms);
+        assert!(m.response.p95_ms <= m.response.p99_ms);
+        assert!(m.throughput_rps > 0.0);
+        assert_eq!(m.decision.n_users(), users);
     }
 
     #[test]

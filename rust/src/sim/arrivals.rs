@@ -1,0 +1,272 @@
+//! Pluggable arrival processes for the discrete-event simulator.
+//!
+//! The paper's §4.2.2 environment is synchronous by construction: every
+//! end device submits exactly one request per round, so "arrival" is a
+//! degenerate process (all devices at the round boundary). Related work
+//! (DeepEdge, arXiv 2110.01863; delay-aware DRL offloading, arXiv
+//! 2103.07811) evaluates orchestrators under *stochastic open-loop*
+//! arrivals instead — Poisson streams per device, plus bursty (MMPP-style)
+//! traffic — which is what exposes real queueing at edge/cloud nodes.
+//!
+//! [`ArrivalProcess`] expresses all three as per-device inter-arrival
+//! distributions; [`schedule`] expands one into the merged, time-ordered
+//! request trace the DES core consumes. Every draw goes through an
+//! explicit [`Rng`], and devices draw from forked per-device streams, so a
+//! trace is a pure function of (process, users, horizon, seed) — the
+//! bit-exact determinism the property suite pins down.
+
+use crate::sim::workload::Request;
+use crate::util::rng::Rng;
+
+/// How each end device generates inference requests over virtual time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// The paper's synchronized-round model: every device submits at
+    /// t = 0, period, 2*period, ... (one request per device per round).
+    SyncRounds { period_ms: f64 },
+    /// Per-device homogeneous Poisson stream (exponential inter-arrivals).
+    Poisson { rate_per_s: f64 },
+    /// Two-state Markov-modulated Poisson process (bursty traffic): each
+    /// device alternates between a calm and a burst phase, with
+    /// exponentially distributed phase holding times.
+    Mmpp {
+        calm_rate_per_s: f64,
+        burst_rate_per_s: f64,
+        /// Mean holding time of each phase, ms.
+        mean_phase_ms: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Mean request rate per device in requests/second (used by drivers to
+    /// report offered load and by saturation sweeps to pick rates).
+    pub fn mean_rate_per_s(&self) -> f64 {
+        match *self {
+            ArrivalProcess::SyncRounds { period_ms } => 1000.0 / period_ms,
+            ArrivalProcess::Poisson { rate_per_s } => rate_per_s,
+            // Equal mean holding times => phases are equally likely.
+            ArrivalProcess::Mmpp { calm_rate_per_s, burst_rate_per_s, .. } => {
+                (calm_rate_per_s + burst_rate_per_s) / 2.0
+            }
+        }
+    }
+
+    /// All rate/period knobs strictly positive and finite — the condition
+    /// under which every inter-arrival draw advances time, i.e. traces
+    /// are finite. [`schedule`] asserts this; `by_name` (the config/CLI
+    /// path) refuses to construct an invalid process in the first place.
+    pub fn is_valid(&self) -> bool {
+        let pos = |v: f64| v.is_finite() && v > 0.0;
+        match *self {
+            ArrivalProcess::SyncRounds { period_ms } => pos(period_ms),
+            ArrivalProcess::Poisson { rate_per_s } => pos(rate_per_s),
+            ArrivalProcess::Mmpp { calm_rate_per_s, burst_rate_per_s, mean_phase_ms } => {
+                pos(calm_rate_per_s) && pos(burst_rate_per_s) && pos(mean_phase_ms)
+            }
+        }
+    }
+
+    /// Parse a process by name with the given rate knobs (config/CLI).
+    /// Returns None for an unknown name or non-positive knobs.
+    pub fn by_name(
+        name: &str,
+        rate_per_s: f64,
+        period_ms: f64,
+        burst_factor: f64,
+        mean_phase_ms: f64,
+    ) -> Option<ArrivalProcess> {
+        let p = match name.to_ascii_lowercase().as_str() {
+            "sync" | "sync-rounds" | "periodic" => ArrivalProcess::SyncRounds { period_ms },
+            "poisson" => ArrivalProcess::Poisson { rate_per_s },
+            "mmpp" | "bursty" => ArrivalProcess::Mmpp {
+                calm_rate_per_s: rate_per_s,
+                burst_rate_per_s: rate_per_s * burst_factor,
+                mean_phase_ms,
+            },
+            _ => return None,
+        };
+        p.is_valid().then_some(p)
+    }
+}
+
+/// One device's arrival-time generator.
+struct DeviceStream {
+    process: ArrivalProcess,
+    rng: Rng,
+    /// MMPP: currently in the burst phase?
+    bursting: bool,
+    /// MMPP: when the current phase ends.
+    phase_end_ms: f64,
+    t_ms: f64,
+}
+
+impl DeviceStream {
+    fn new(process: ArrivalProcess, mut rng: Rng) -> DeviceStream {
+        let (bursting, phase_end_ms) = match process {
+            ArrivalProcess::Mmpp { mean_phase_ms, .. } => {
+                (false, rng.exponential(1.0 / mean_phase_ms))
+            }
+            _ => (false, f64::INFINITY),
+        };
+        DeviceStream { process, rng, bursting, phase_end_ms, t_ms: 0.0 }
+    }
+
+    /// Next arrival time in ms, strictly advancing.
+    fn next(&mut self) -> f64 {
+        match self.process {
+            ArrivalProcess::SyncRounds { period_ms } => {
+                let t = self.t_ms;
+                self.t_ms += period_ms;
+                t
+            }
+            ArrivalProcess::Poisson { rate_per_s } => {
+                self.t_ms += self.rng.exponential(rate_per_s / 1000.0);
+                self.t_ms
+            }
+            ArrivalProcess::Mmpp { calm_rate_per_s, burst_rate_per_s, mean_phase_ms } => {
+                // Draw in the current phase's rate; cross phase boundaries
+                // by re-drawing from the boundary (memorylessness makes
+                // this exact for exponential inter-arrivals).
+                loop {
+                    let rate = if self.bursting { burst_rate_per_s } else { calm_rate_per_s };
+                    let dt = self.rng.exponential(rate / 1000.0);
+                    if self.t_ms + dt <= self.phase_end_ms {
+                        self.t_ms += dt;
+                        return self.t_ms;
+                    }
+                    self.t_ms = self.phase_end_ms;
+                    self.bursting = !self.bursting;
+                    self.phase_end_ms =
+                        self.t_ms + self.rng.exponential(1.0 / mean_phase_ms);
+                }
+            }
+        }
+    }
+}
+
+/// Expand an arrival process into the merged, time-ordered request trace
+/// for `users` devices over `[0, horizon_ms)`. Request ids are assigned in
+/// trace order (ties broken by device index) so the trace is canonical.
+pub fn schedule(
+    process: ArrivalProcess,
+    users: usize,
+    horizon_ms: f64,
+    seed: u64,
+) -> Vec<Request> {
+    assert!(users > 0, "schedule for zero devices");
+    assert!(horizon_ms > 0.0, "empty horizon");
+    assert!(process.is_valid(), "non-positive arrival knobs: {process:?}");
+    let mut base = Rng::new(seed);
+    let mut raw: Vec<(f64, usize)> = Vec::new();
+    for device in 0..users {
+        let mut stream = DeviceStream::new(process, base.fork());
+        loop {
+            let t = stream.next();
+            if t >= horizon_ms {
+                break;
+            }
+            raw.push((t, device));
+        }
+    }
+    raw.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    raw.into_iter()
+        .enumerate()
+        .map(|(id, (arrival_ms, device))| Request { id: id as u64, device, arrival_ms })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sync_rounds_are_simultaneous_per_period() {
+        let reqs = schedule(ArrivalProcess::SyncRounds { period_ms: 100.0 }, 4, 350.0, 1);
+        assert_eq!(reqs.len(), 4 * 4); // t = 0, 100, 200, 300
+        for chunk in reqs.chunks(4) {
+            assert!(chunk.iter().all(|r| r.arrival_ms == chunk[0].arrival_ms));
+            let devs: Vec<usize> = chunk.iter().map(|r| r.device).collect();
+            assert_eq!(devs, vec![0, 1, 2, 3], "device tie-break order");
+        }
+    }
+
+    #[test]
+    fn poisson_hits_expected_count() {
+        let lam = 40.0;
+        let reqs = schedule(ArrivalProcess::Poisson { rate_per_s: lam }, 2, 60_000.0, 2);
+        let expect = 2.0 * lam * 60.0;
+        assert!(
+            (reqs.len() as f64 / expect - 1.0).abs() < 0.1,
+            "n={} expect~{expect}",
+            reqs.len()
+        );
+    }
+
+    #[test]
+    fn traces_are_sorted_with_unique_sequential_ids() {
+        let reqs = schedule(ArrivalProcess::Poisson { rate_per_s: 100.0 }, 5, 2000.0, 3);
+        for (i, w) in reqs.windows(2).enumerate() {
+            assert!(w[0].arrival_ms <= w[1].arrival_ms, "unsorted at {i}");
+        }
+        for (i, r) in reqs.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = schedule(ArrivalProcess::Poisson { rate_per_s: 25.0 }, 3, 10_000.0, 7);
+        let b = schedule(ArrivalProcess::Poisson { rate_per_s: 25.0 }, 3, 10_000.0, 7);
+        let c = schedule(ArrivalProcess::Poisson { rate_per_s: 25.0 }, 3, 10_000.0, 8);
+        let times = |v: &[Request]| v.iter().map(|r| r.arrival_ms).collect::<Vec<_>>();
+        assert_eq!(times(&a), times(&b));
+        assert_ne!(times(&a), times(&c));
+    }
+
+    #[test]
+    fn mmpp_rate_between_calm_and_burst() {
+        let p = ArrivalProcess::Mmpp {
+            calm_rate_per_s: 10.0,
+            burst_rate_per_s: 100.0,
+            mean_phase_ms: 500.0,
+        };
+        let reqs = schedule(p, 1, 120_000.0, 4);
+        let rate = reqs.len() as f64 / 120.0;
+        assert!(rate > 15.0 && rate < 95.0, "mmpp rate {rate}");
+        assert!((p.mean_rate_per_s() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn by_name_parses_knobs() {
+        assert_eq!(
+            ArrivalProcess::by_name("poisson", 5.0, 0.0, 0.0, 0.0),
+            Some(ArrivalProcess::Poisson { rate_per_s: 5.0 })
+        );
+        assert_eq!(
+            ArrivalProcess::by_name("sync", 0.0, 250.0, 0.0, 0.0),
+            Some(ArrivalProcess::SyncRounds { period_ms: 250.0 })
+        );
+        assert!(matches!(
+            ArrivalProcess::by_name("bursty", 4.0, 0.0, 8.0, 300.0),
+            Some(ArrivalProcess::Mmpp { .. })
+        ));
+        assert_eq!(ArrivalProcess::by_name("nope", 1.0, 1.0, 1.0, 1.0), None);
+    }
+
+    #[test]
+    fn non_positive_knobs_rejected() {
+        // a zero period / rate would make the trace infinite
+        assert_eq!(ArrivalProcess::by_name("sync", 1.0, 0.0, 1.0, 1.0), None);
+        assert_eq!(ArrivalProcess::by_name("poisson", 0.0, 1.0, 1.0, 1.0), None);
+        assert_eq!(ArrivalProcess::by_name("poisson", -2.0, 1.0, 1.0, 1.0), None);
+        assert_eq!(ArrivalProcess::by_name("mmpp", 1.0, 1.0, 8.0, 0.0), None);
+        assert!(!ArrivalProcess::SyncRounds { period_ms: 0.0 }.is_valid());
+        assert!(ArrivalProcess::Poisson { rate_per_s: 0.5 }.is_valid());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive arrival knobs")]
+    fn schedule_refuses_invalid_process() {
+        schedule(ArrivalProcess::SyncRounds { period_ms: 0.0 }, 2, 100.0, 1);
+    }
+}

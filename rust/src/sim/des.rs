@@ -1,0 +1,559 @@
+//! Discrete-event simulation core: a binary-heap event queue over virtual
+//! time driving per-node multi-server FIFO queues.
+//!
+//! # Virtual-clock model
+//!
+//! The simulator owns a virtual clock that only moves when the next event
+//! is popped from a min-heap ordered by `(time, seq)` — `seq` is a
+//! monotonically increasing tie-breaker, so simultaneous events (e.g. a
+//! whole synchronous round arriving at t = 0) are processed in a fixed,
+//! deterministic order and a trace is a pure function of its inputs and
+//! seed. Wall-clock time never appears: a 10-minute saturation sweep runs
+//! in milliseconds, and two runs with the same seed are bit-exact (the
+//! property suite asserts this).
+//!
+//! # Request lifecycle (open-loop mode)
+//!
+//! ```text
+//! arrival --(path_overhead_ms: Table 12 messages)--> [shared edge ingress]
+//!         --(seize; holds the link for link_queue_ms)--> [compute node]
+//!         --(FIFO over the node's vCPU servers, Table 6 counts)--> depart
+//! ```
+//!
+//! - The **ingress link** is a single server that each offloaded request
+//!   holds for `link_queue_ms` while being forwarded immediately: the j-th
+//!   of k simultaneous uploads therefore waits (j-1) slots, whose
+//!   expectation (k-1)/2 x `link_queue_ms` is exactly the closed-form
+//!   `Network::queueing_ms` the synchronous model charges. Local execution
+//!   bypasses it.
+//! - **Compute nodes** (one per end device, one edge, one cloud) are
+//!   multi-server FIFO queues with `Calibration::vcpus` servers. Service
+//!   demand is [`ResponseModel::single_stream_service_ms`] — the same
+//!   calibrated law as the synchronous round, minus its analytic
+//!   contention term, because here contention *is* the queue.
+//!
+//! # Synchronous-round mode
+//!
+//! [`sync_round_responses`] runs the same event engine in the paper's
+//! §4.2.2 regime: all devices arrive at t = 0 and each request's service
+//! time is its full closed-form joint response (processor-sharing
+//! contention folded in analytically, infinite servers). This makes the
+//! RL environment (`sim::env::Env`) a thin adapter over the DES core while
+//! reproducing the seed environment's per-round outcomes exactly.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::collections::VecDeque;
+
+use crate::monitor::SystemState;
+use crate::sim::latency::ResponseModel;
+use crate::sim::workload::Request;
+use crate::types::{Action, Decision, Tier};
+use crate::util::rng::Rng;
+
+/// One finished request with its per-component latency breakdown.
+#[derive(Debug, Clone)]
+pub struct CompletedRequest {
+    pub id: u64,
+    pub device: usize,
+    pub action: Action,
+    pub arrival_ms: f64,
+    /// Fixed network path overhead (control + upload messages).
+    pub path_ms: f64,
+    /// Wait for the shared edge ingress link (0 for local execution).
+    pub link_wait_ms: f64,
+    /// Wait in the compute node's FIFO before a vCPU was free.
+    pub queue_ms: f64,
+    /// Service time on the compute node.
+    pub service_ms: f64,
+    pub depart_ms: f64,
+    /// depart - arrival: what the user experienced.
+    pub response_ms: f64,
+}
+
+/// Outcome of one DES run.
+#[derive(Debug, Clone, Default)]
+pub struct DesOutcome {
+    /// Completed requests in departure order.
+    pub completed: Vec<CompletedRequest>,
+    /// Virtual time of the last event (makespan).
+    pub makespan_ms: f64,
+    /// Arrival horizon the trace was generated for.
+    pub horizon_ms: f64,
+    /// Virtual times of every processed event, in processing order — the
+    /// monotonicity witness the property suite checks.
+    pub event_times: Vec<f64>,
+}
+
+impl DesOutcome {
+    /// Completed-request response times, in departure order.
+    pub fn responses_ms(&self) -> Vec<f64> {
+        self.completed.iter().map(|c| c.response_ms).collect()
+    }
+
+    /// Served requests per second of virtual time, over the makespan.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.completed.is_empty() || self.makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        self.completed.len() as f64 / (self.makespan_ms / 1000.0)
+    }
+
+    /// Mean wait (link + compute queue) — the congestion signal the
+    /// saturation sweep plots against arrival rate.
+    pub fn mean_queueing_ms(&self) -> f64 {
+        if self.completed.is_empty() {
+            return 0.0;
+        }
+        self.completed.iter().map(|c| c.link_wait_ms + c.queue_ms).sum::<f64>()
+            / self.completed.len() as f64
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum EventKind {
+    /// Request reaches a node's queue (ingress or compute).
+    Join { node: usize, req: usize },
+    /// One ingress hold expires; the link can admit the next upload.
+    LinkFree,
+    /// Compute service finishes for `req` on `node`.
+    Finish { node: usize, req: usize },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: invert so earliest (time, seq) pops
+        // first. total_cmp is a total order (times are never NaN).
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Multi-server FIFO queue.
+struct ServerQueue {
+    servers: usize,
+    busy: usize,
+    waiting: VecDeque<usize>,
+}
+
+impl ServerQueue {
+    fn new(servers: usize) -> ServerQueue {
+        assert!(servers > 0, "node with zero servers");
+        ServerQueue { servers, busy: 0, waiting: VecDeque::new() }
+    }
+}
+
+/// Per-request in-flight bookkeeping.
+struct InFlight {
+    id: u64,
+    device: usize,
+    action: Action,
+    arrival_ms: f64,
+    path_ms: f64,
+    link_enq_ms: f64,
+    link_wait_ms: f64,
+    compute_enq_ms: f64,
+    queue_ms: f64,
+    service_ms: f64,
+}
+
+/// Open-loop DES over a time-ordered arrival trace.
+///
+/// Each request executes the action the (frozen) `decision` assigns to its
+/// device — the policy snapshot an orchestrator under evaluation installed.
+/// `state` is the background-load snapshot service times are computed
+/// under, and `noise_seed` drives the multiplicative log-normal service
+/// noise (sigma from the calibration; pass the calibration's
+/// `noise_sigma = 0` via a custom [`crate::config::Calibration`] to
+/// disable it).
+pub fn run_open_loop(
+    model: &ResponseModel,
+    state: &SystemState,
+    decision: &Decision,
+    trace: &[Request],
+    horizon_ms: f64,
+    noise_seed: u64,
+) -> DesOutcome {
+    let users = state.users();
+    assert_eq!(decision.n_users(), users, "decision arity vs users");
+    debug_assert!(
+        trace.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+        "trace must be time-ordered"
+    );
+
+    // Node layout: [0, users) per-device compute, users = edge,
+    // users + 1 = cloud. The shared ingress link is handled separately.
+    let cal = &model.net.cal;
+    let mut nodes: Vec<ServerQueue> = (0..users)
+        .map(|_| ServerQueue::new(cal.vcpus[Tier::Local.index()]))
+        .collect();
+    nodes.push(ServerQueue::new(cal.vcpus[Tier::Edge.index()]));
+    nodes.push(ServerQueue::new(cal.vcpus[Tier::Cloud.index()]));
+    let mut link = ServerQueue::new(1);
+
+    let compute_node = |device: usize, tier: Tier| match tier {
+        Tier::Local => device,
+        Tier::Edge => users,
+        Tier::Cloud => users + 1,
+    };
+    // Ingress is addressed as a pseudo-node after the compute nodes.
+    let ingress = users + 2;
+
+    let mut rng = Rng::new(noise_seed);
+    let sigma = cal.noise_sigma;
+    let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(trace.len() * 2);
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, kind: EventKind| {
+        *seq += 1;
+        heap.push(Event { time, seq: *seq, kind });
+    };
+
+    // Seed the heap: each arrival materializes at its queue-join time
+    // after the fixed path overhead.
+    let mut flights: Vec<InFlight> = Vec::with_capacity(trace.len());
+    for r in trace {
+        let action = decision.0[r.device];
+        let path_ms = model.net.path_overhead_ms(r.device, action.tier);
+        let idx = flights.len();
+        flights.push(InFlight {
+            id: r.id,
+            device: r.device,
+            action,
+            arrival_ms: r.arrival_ms,
+            path_ms,
+            link_enq_ms: 0.0,
+            link_wait_ms: 0.0,
+            compute_enq_ms: 0.0,
+            queue_ms: 0.0,
+            service_ms: 0.0,
+        });
+        let target = if action.tier == Tier::Local {
+            compute_node(r.device, Tier::Local)
+        } else {
+            ingress
+        };
+        push(&mut heap, &mut seq, r.arrival_ms + path_ms, EventKind::Join { node: target, req: idx });
+    }
+
+    let mut out = DesOutcome {
+        completed: Vec::with_capacity(trace.len()),
+        makespan_ms: 0.0,
+        horizon_ms,
+        event_times: Vec::with_capacity(trace.len() * 3),
+    };
+
+    while let Some(ev) = heap.pop() {
+        debug_assert!(ev.time >= out.makespan_ms, "event time went backwards");
+        out.makespan_ms = out.makespan_ms.max(ev.time);
+        out.event_times.push(ev.time);
+        match ev.kind {
+            EventKind::Join { node, req } if node == ingress => {
+                flights[req].link_enq_ms = ev.time;
+                if link.busy < link.servers {
+                    link.busy += 1;
+                    // Forwarded immediately; the hold models the shared
+                    // uplink serializing simultaneous transfers.
+                    push(&mut heap, &mut seq, ev.time + cal.link_queue_ms, EventKind::LinkFree);
+                    let f = &flights[req];
+                    let target = compute_node(f.device, f.action.tier);
+                    push(&mut heap, &mut seq, ev.time, EventKind::Join { node: target, req });
+                } else {
+                    link.waiting.push_back(req);
+                }
+            }
+            EventKind::LinkFree => {
+                link.busy -= 1;
+                if let Some(req) = link.waiting.pop_front() {
+                    link.busy += 1;
+                    flights[req].link_wait_ms = ev.time - flights[req].link_enq_ms;
+                    push(&mut heap, &mut seq, ev.time + cal.link_queue_ms, EventKind::LinkFree);
+                    let f = &flights[req];
+                    let target = compute_node(f.device, f.action.tier);
+                    push(&mut heap, &mut seq, ev.time, EventKind::Join { node: target, req });
+                }
+            }
+            EventKind::Join { node, req } => {
+                flights[req].compute_enq_ms = ev.time;
+                let q = &mut nodes[node];
+                if q.busy < q.servers {
+                    q.busy += 1;
+                    let f = &flights[req];
+                    let mut svc = model.single_stream_service_ms(
+                        f.device,
+                        f.action.model,
+                        f.action.tier,
+                        state,
+                    );
+                    if sigma > 0.0 {
+                        svc *= (sigma * rng.normal()).exp();
+                    }
+                    flights[req].service_ms = svc;
+                    push(&mut heap, &mut seq, ev.time + svc, EventKind::Finish { node, req });
+                } else {
+                    q.waiting.push_back(req);
+                }
+            }
+            EventKind::Finish { node, req } => {
+                {
+                    let f = &mut flights[req];
+                    f.queue_ms = ev.time - f.compute_enq_ms - f.service_ms;
+                    out.completed.push(CompletedRequest {
+                        id: f.id,
+                        device: f.device,
+                        action: f.action,
+                        arrival_ms: f.arrival_ms,
+                        path_ms: f.path_ms,
+                        link_wait_ms: f.link_wait_ms,
+                        queue_ms: f.queue_ms.max(0.0),
+                        service_ms: f.service_ms,
+                        depart_ms: ev.time,
+                        response_ms: ev.time - f.arrival_ms,
+                    });
+                }
+                let q = &mut nodes[node];
+                q.busy -= 1;
+                if let Some(next) = q.waiting.pop_front() {
+                    q.busy += 1;
+                    let f = &flights[next];
+                    let mut svc = model.single_stream_service_ms(
+                        f.device,
+                        f.action.model,
+                        f.action.tier,
+                        state,
+                    );
+                    if sigma > 0.0 {
+                        svc *= (sigma * rng.normal()).exp();
+                    }
+                    flights[next].service_ms = svc;
+                    push(&mut heap, &mut seq, ev.time + svc, EventKind::Finish { node, req: next });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// One synchronous round (paper §4.2.2) through the event engine.
+///
+/// All devices arrive at t = 0; each request's service time is its full
+/// closed-form joint response (`ResponseModel::device_response_ms` with
+/// the round's tier counts — the analytic processor-sharing contention
+/// law), executed on infinite servers. The returned vector is indexed by
+/// device and equals `ResponseModel::expected_responses` exactly, which is
+/// what lets `Env` sit on the DES core without perturbing any seed
+/// behavior.
+pub fn sync_round_responses(
+    model: &ResponseModel,
+    decision: &Decision,
+    state: &SystemState,
+) -> Vec<f64> {
+    let users = state.users();
+    assert_eq!(decision.n_users(), users, "decision arity vs users");
+    let counts = ResponseModel::tier_counts(decision);
+
+    let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(users * 2);
+    for device in 0..users {
+        heap.push(Event {
+            time: 0.0,
+            seq: device as u64,
+            kind: EventKind::Join { node: device, req: device },
+        });
+    }
+
+    let mut responses = vec![0.0f64; users];
+    let mut seq = users as u64;
+    let mut clock = 0.0f64;
+    while let Some(ev) = heap.pop() {
+        debug_assert!(ev.time >= clock, "event time went backwards");
+        clock = clock.max(ev.time);
+        match ev.kind {
+            EventKind::Join { req: device, .. } => {
+                let a = decision.0[device];
+                let svc =
+                    model.device_response_ms(device, a.model, a.tier, &counts, state);
+                seq += 1;
+                heap.push(Event {
+                    time: ev.time + svc,
+                    seq,
+                    kind: EventKind::Finish { node: device, req: device },
+                });
+            }
+            EventKind::Finish { req: device, .. } => {
+                responses[device] = ev.time;
+            }
+            EventKind::LinkFree => unreachable!("no link events in a synchronous round"),
+        }
+    }
+    responses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Calibration, Scenario};
+    use crate::monitor::NodeState;
+    use crate::network::Network;
+    use crate::sim::arrivals::{schedule, ArrivalProcess};
+    use crate::types::{ModelId, NetCond};
+
+    fn setup(users: usize) -> (ResponseModel, SystemState) {
+        let model =
+            ResponseModel::new(Network::new(Scenario::exp_a(users), Calibration::default()));
+        let state = SystemState {
+            edge: NodeState::idle(NetCond::Regular),
+            cloud: NodeState::idle(NetCond::Regular),
+            devices: vec![NodeState::idle(NetCond::Regular); users],
+        };
+        (model, state)
+    }
+
+    fn uniform(users: usize, tier: Tier, m: u8) -> Decision {
+        Decision::uniform(users, Action { tier, model: ModelId(m) })
+    }
+
+    #[test]
+    fn sync_round_equals_closed_form() {
+        for users in 1..=5 {
+            let (model, state) = setup(users);
+            for tier in Tier::ALL {
+                for m in [0u8, 3, 7] {
+                    let d = uniform(users, tier, m);
+                    let des = sync_round_responses(&model, &d, &state);
+                    let closed = model.expected_responses(&d, &state);
+                    assert_eq!(des, closed, "users={users} tier={tier:?} d{m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn open_loop_completes_every_request() {
+        let users = 3;
+        let (model, state) = setup(users);
+        let trace = schedule(ArrivalProcess::Poisson { rate_per_s: 2.0 }, users, 20_000.0, 5);
+        let d = uniform(users, Tier::Edge, 7);
+        let out = run_open_loop(&model, &state, &d, &trace, 20_000.0, 6);
+        assert_eq!(out.completed.len(), trace.len());
+        let mut ids: Vec<u64> = out.completed.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        let mut want: Vec<u64> = trace.iter().map(|r| r.id).collect();
+        want.sort_unstable();
+        assert_eq!(ids, want);
+    }
+
+    /// Default calibration with service noise disabled.
+    fn quiet_cal() -> Calibration {
+        Calibration { noise_sigma: 0.0, ..Calibration::default() }
+    }
+
+    #[test]
+    fn idle_single_request_matches_service_plus_path() {
+        let users = 1;
+        let (_, state) = setup(users);
+        let trace = vec![Request { id: 0, device: 0, arrival_ms: 10.0 }];
+        let d = uniform(users, Tier::Cloud, 0);
+        let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
+        let out = run_open_loop(&model, &state, &d, &trace, 100.0, 1);
+        let c = &out.completed[0];
+        let want = model.net.path_overhead_ms(0, Tier::Cloud)
+            + model.single_stream_service_ms(0, ModelId(0), Tier::Cloud, &state);
+        assert!((c.response_ms - want).abs() < 1e-9, "{} vs {want}", c.response_ms);
+        assert_eq!(c.link_wait_ms, 0.0);
+        assert_eq!(c.queue_ms, 0.0);
+    }
+
+    #[test]
+    fn simultaneous_uploads_serialize_at_the_link() {
+        let users = 4;
+        let (_, state) = setup(users);
+        let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
+        let trace: Vec<Request> =
+            (0..users).map(|d| Request { id: d as u64, device: d, arrival_ms: 0.0 }).collect();
+        let d = uniform(users, Tier::Cloud, 7);
+        let out = run_open_loop(&model, &state, &d, &trace, 1.0, 2);
+        let mut waits: Vec<f64> = out.completed.iter().map(|c| c.link_wait_ms).collect();
+        waits.sort_by(f64::total_cmp);
+        let lq = model.net.cal.link_queue_ms;
+        for (j, w) in waits.iter().enumerate() {
+            assert!((w - j as f64 * lq).abs() < 1e-9, "j={j} wait={w}");
+        }
+    }
+
+    #[test]
+    fn saturating_a_device_builds_queue() {
+        let users = 1;
+        let (model, state) = setup(users);
+        // d0 local takes ~440 ms; arrivals every 100 ms pile up.
+        let trace: Vec<Request> = (0..10)
+            .map(|i| Request { id: i, device: 0, arrival_ms: i as f64 * 100.0 })
+            .collect();
+        let d = uniform(users, Tier::Local, 0);
+        let out = run_open_loop(&model, &state, &d, &trace, 1000.0, 3);
+        assert_eq!(out.completed.len(), 10);
+        assert!(out.mean_queueing_ms() > 500.0, "queue {:.0}", out.mean_queueing_ms());
+        // FIFO: departures in arrival order for a single device
+        let ids: Vec<u64> = out.completed.iter().map(|c| c.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn event_times_monotone_and_runs_bit_exact() {
+        let users = 5;
+        let (model, state) = setup(users);
+        let trace = schedule(ArrivalProcess::Poisson { rate_per_s: 5.0 }, users, 10_000.0, 9);
+        let d = Decision(
+            (0..users)
+                .map(|i| Action { tier: Tier::from_index(i % 3), model: ModelId((i % 8) as u8) })
+                .collect(),
+        );
+        let a = run_open_loop(&model, &state, &d, &trace, 10_000.0, 11);
+        let b = run_open_loop(&model, &state, &d, &trace, 10_000.0, 11);
+        for w in a.event_times.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        assert_eq!(a.responses_ms(), b.responses_ms(), "same seed must be bit-exact");
+        let c = run_open_loop(&model, &state, &d, &trace, 10_000.0, 12);
+        assert_ne!(a.responses_ms(), c.responses_ms(), "noise seed must matter");
+    }
+
+    #[test]
+    fn edge_vcpus_bound_concurrency() {
+        // 2 edge vCPUs (Table 6): 4 simultaneous edge requests run 2 at a
+        // time, so two of them wait ~ one service time in the FIFO.
+        let users = 4;
+        let (_, state) = setup(users);
+        // zero link slot isolates the compute queue
+        let cal = Calibration { link_queue_ms: 0.0, ..quiet_cal() };
+        let model = ResponseModel::new(Network::new(Scenario::exp_a(users), cal));
+        let trace: Vec<Request> =
+            (0..users).map(|d| Request { id: d as u64, device: d, arrival_ms: 0.0 }).collect();
+        let d = uniform(users, Tier::Edge, 0);
+        let out = run_open_loop(&model, &state, &d, &trace, 1.0, 4);
+        let svc = model.single_stream_service_ms(0, ModelId(0), Tier::Edge, &state);
+        let mut queues: Vec<f64> = out.completed.iter().map(|c| c.queue_ms).collect();
+        queues.sort_by(f64::total_cmp);
+        assert_eq!(queues.iter().filter(|&&q| q < 1e-9).count(), 2, "{queues:?}");
+        assert!((queues[2] - svc).abs() < 1e-6 && (queues[3] - svc).abs() < 1e-6);
+    }
+}

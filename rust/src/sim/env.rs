@@ -109,9 +109,21 @@ impl Env {
     }
 
     /// Apply a joint decision, observe responses, advance dynamics.
+    ///
+    /// The round executes through the DES core's synchronous-round mode
+    /// ([`crate::sim::des::sync_round_responses`]), which reproduces the
+    /// closed-form joint responses exactly; the environment then applies
+    /// its multiplicative log-normal noise per device, in device order, on
+    /// its own RNG stream — so outcomes are bit-identical to the pre-DES
+    /// environment for any seed.
     pub fn step(&mut self, decision: &Decision) -> StepOutcome {
         assert_eq!(decision.n_users(), self.users(), "decision arity");
-        let responses = self.model.sampled_responses(decision, &self.state, &mut self.rng);
+        let sigma = self.model.net.cal.noise_sigma;
+        let responses: Vec<f64> =
+            crate::sim::des::sync_round_responses(&self.model, decision, &self.state)
+                .into_iter()
+                .map(|t| t * (sigma * self.rng.normal()).exp())
+                .collect();
         let avg_ms = responses.iter().sum::<f64>() / responses.len() as f64;
         let avg_accuracy = decision.avg_accuracy(&self.top5);
         let accuracy_ok = avg_accuracy > self.threshold;
@@ -119,6 +131,21 @@ impl Env {
         self.advance();
         self.steps += 1;
         StepOutcome { responses_ms: responses, avg_ms, avg_accuracy, accuracy_ok, reward }
+    }
+
+    /// Open-loop DES evaluation: run a time-ordered arrival trace through
+    /// the event-queue core under the *current* background state with a
+    /// frozen per-device decision. Unlike [`Env::step`], responses here
+    /// include real queueing at the per-node vCPU queues and the shared
+    /// ingress link (see [`crate::sim::des::run_open_loop`]).
+    pub fn open_loop(
+        &self,
+        decision: &Decision,
+        trace: &[crate::sim::workload::Request],
+        horizon_ms: f64,
+        seed: u64,
+    ) -> crate::sim::des::DesOutcome {
+        crate::sim::des::run_open_loop(&self.model, &self.state, decision, trace, horizon_ms, seed)
     }
 
     /// Deterministic objective for a decision under the *current* state —

@@ -58,8 +58,30 @@ impl ResponseModel {
             Tier::Edge => counts[Tier::Edge.index()],
             Tier::Cloud => counts[Tier::Cloud.index()],
         };
-        let mut compute = cal.compute_ms_contended(model, tier, k);
         // Background load on the executing node.
+        let compute =
+            self.background_adjusted_ms(cal.compute_ms_contended(model, tier, k), device, tier, sys);
+
+        let offloaded = counts[Tier::Edge.index()] + counts[Tier::Cloud.index()];
+        let subtotal = compute
+            + self.net.path_overhead_ms(device, tier)
+            + self.net.queueing_ms(tier, offloaded);
+        subtotal * (1.0 + cal.monitor_overhead_frac)
+    }
+
+    /// Apply the executing node's background-load multipliers to a raw
+    /// compute time: busy-CPU factor on occupied end devices, linear
+    /// background slowdown on shared tiers, memory-pressure factor when
+    /// the node's memory is saturated. Shared by the synchronous round
+    /// model and the DES service law so the two can never drift apart.
+    fn background_adjusted_ms(
+        &self,
+        mut compute: f64,
+        device: DeviceId,
+        tier: Tier,
+        sys: &SystemState,
+    ) -> f64 {
+        let cal = &self.net.cal;
         let node = match tier {
             Tier::Local => &sys.devices[device],
             Tier::Edge => &sys.edge,
@@ -78,12 +100,27 @@ impl ResponseModel {
         if crate::monitor::binary_level(node.mem) == 1 {
             compute *= 1.0 + MEM_BUSY_SLOWDOWN;
         }
+        compute
+    }
 
-        let offloaded = counts[Tier::Edge.index()] + counts[Tier::Cloud.index()];
-        let subtotal = compute
-            + self.net.path_overhead_ms(device, tier)
-            + self.net.queueing_ms(tier, offloaded);
-        subtotal * (1.0 + cal.monitor_overhead_frac)
+    /// Single-stream *service* time of one request on its executing node:
+    /// calibrated compute under the node's background load plus the
+    /// monitoring overhead, but with **no** contention law, no path
+    /// overhead and no link queueing. This is the per-request service
+    /// demand the DES core (sim::des) schedules onto the node's vCPU
+    /// servers — contention there is real queueing, not the closed-form
+    /// (beta, delta) law the synchronous round uses.
+    pub fn single_stream_service_ms(
+        &self,
+        device: DeviceId,
+        model: ModelId,
+        tier: Tier,
+        sys: &SystemState,
+    ) -> f64 {
+        let cal = &self.net.cal;
+        let compute =
+            self.background_adjusted_ms(cal.compute_ms(model, tier), device, tier, sys);
+        compute * (1.0 + cal.monitor_overhead_frac)
     }
 
     /// Expected per-device responses for a joint decision (no noise) —

@@ -1,11 +1,17 @@
 //! Simulation substrate: the calibrated response-time model, the
-//! synchronous-round RL environment, and workload generators for the
-//! measured-mode serving path.
+//! discrete-event simulation core (virtual-time event queue + per-node
+//! vCPU queues), pluggable arrival processes, the synchronous-round RL
+//! environment (a thin adapter over the DES core), and workload
+//! generators for the measured-mode serving path.
 
+pub mod arrivals;
+pub mod des;
 pub mod env;
 pub mod latency;
 pub mod workload;
 
+pub use arrivals::ArrivalProcess;
+pub use des::{CompletedRequest, DesOutcome};
 pub use env::{Dynamics, Env, StepOutcome};
 pub use latency::ResponseModel;
 pub use workload::{Arrival, Request, WorkloadGen};

@@ -38,7 +38,7 @@ pub fn forall_rng(
     base_seed: u64,
     mut check: impl FnMut(&mut Rng) -> Result<(), String>,
 ) {
-    forall(cases, base_seed, |r| r.next_u64(), |&s| check(&mut Rng::new(s)).map_err(|e| e))
+    forall(cases, base_seed, |r| r.next_u64(), |&s| check(&mut Rng::new(s)))
 }
 
 #[macro_export]

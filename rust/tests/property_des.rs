@@ -1,0 +1,190 @@
+//! Property tests over the DES core (in-crate harness, DESIGN.md §8):
+//! event-time monotonicity, request conservation, bit-exact determinism
+//! for a fixed seed, and exact agreement of the synchronous-round adapter
+//! with the closed-form response model (what keeps the RL environment's
+//! seed behavior intact).
+
+use eeco::monitor::{NodeState, SystemState};
+use eeco::prelude::*;
+use eeco::sim::arrivals::{schedule, ArrivalProcess};
+use eeco::sim::{des, ResponseModel};
+use eeco::util::prop::forall;
+use eeco::util::rng::Rng;
+
+fn rand_decision(rng: &mut Rng, users: usize) -> Decision {
+    Decision((0..users).map(|_| Action::from_index(rng.below(ACTIONS_PER_DEVICE))).collect())
+}
+
+fn rand_state(rng: &mut Rng, users: usize) -> SystemState {
+    let node = |rng: &mut Rng, cond| NodeState { cpu: rng.f64(), mem: rng.f64(), cond };
+    SystemState {
+        edge: node(rng, NetCond::Regular),
+        cloud: node(rng, NetCond::Regular),
+        devices: (0..users)
+            .map(|_| {
+                let c = if rng.bool(0.5) { NetCond::Weak } else { NetCond::Regular };
+                node(rng, c)
+            })
+            .collect(),
+    }
+}
+
+fn rand_process(rng: &mut Rng) -> ArrivalProcess {
+    match rng.below(3) {
+        0 => ArrivalProcess::SyncRounds { period_ms: rng.range_f64(200.0, 2000.0) },
+        1 => ArrivalProcess::Poisson { rate_per_s: rng.range_f64(0.2, 4.0) },
+        _ => ArrivalProcess::Mmpp {
+            calm_rate_per_s: rng.range_f64(0.2, 1.0),
+            burst_rate_per_s: rng.range_f64(2.0, 6.0),
+            mean_phase_ms: rng.range_f64(500.0, 3000.0),
+        },
+    }
+}
+
+fn model_for(users: usize) -> ResponseModel {
+    ResponseModel::new(eeco::network::Network::new(
+        Scenario::exp_b(users),
+        Calibration::default(),
+    ))
+}
+
+#[test]
+fn prop_event_times_never_go_backwards() {
+    forall(
+        40,
+        0xD1,
+        |rng| {
+            let users = rng.range(1, 8);
+            (users, rand_decision(rng, users), rand_process(rng), rng.next_u64())
+        },
+        |(users, decision, process, seed)| {
+            let model = model_for(*users);
+            let state = SystemState {
+                edge: NodeState::idle(NetCond::Regular),
+                cloud: NodeState::idle(NetCond::Regular),
+                devices: vec![NodeState::idle(NetCond::Regular); *users],
+            };
+            let horizon = 5000.0;
+            let trace = schedule(*process, *users, horizon, *seed);
+            let out = des::run_open_loop(&model, &state, decision, &trace, horizon, *seed);
+            for (i, w) in out.event_times.windows(2).enumerate() {
+                if w[1] < w[0] {
+                    return Err(format!("event {i}: {} -> {}", w[0], w[1]));
+                }
+            }
+            if out.makespan_ms < 0.0 {
+                return Err("negative makespan".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_requests_in_equals_responses_out() {
+    forall(
+        40,
+        0xD2,
+        |rng| {
+            let users = rng.range(1, 8);
+            (users, rand_decision(rng, users), rand_process(rng), rng.next_u64())
+        },
+        |(users, decision, process, seed)| {
+            let model = model_for(*users);
+            let state = SystemState {
+                edge: NodeState::idle(NetCond::Regular),
+                cloud: NodeState::idle(NetCond::Regular),
+                devices: vec![NodeState::idle(NetCond::Regular); *users],
+            };
+            let horizon = 6000.0;
+            let trace = schedule(*process, *users, horizon, *seed);
+            let out = des::run_open_loop(&model, &state, decision, &trace, horizon, *seed);
+            if out.completed.len() != trace.len() {
+                return Err(format!("{} in, {} out", trace.len(), out.completed.len()));
+            }
+            let mut got: Vec<u64> = out.completed.iter().map(|c| c.id).collect();
+            got.sort_unstable();
+            let mut want: Vec<u64> = trace.iter().map(|r| r.id).collect();
+            want.sort_unstable();
+            if got != want {
+                return Err("request ids lost or duplicated".into());
+            }
+            // every response decomposes into nonnegative components
+            for c in &out.completed {
+                let sum = c.path_ms + c.link_wait_ms + c.queue_ms + c.service_ms;
+                if c.response_ms < -1e-9
+                    || c.link_wait_ms < -1e-9
+                    || c.queue_ms < -1e-9
+                    || (c.response_ms - sum).abs() > 1e-6
+                {
+                    return Err(format!("bad decomposition for req {}: {c:?}", c.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fixed_seed_is_bit_exact() {
+    forall(
+        30,
+        0xD3,
+        |rng| {
+            let users = rng.range(1, 8);
+            (users, rand_decision(rng, users), rand_process(rng), rng.next_u64())
+        },
+        |(users, decision, process, seed)| {
+            let model = model_for(*users);
+            let state = SystemState {
+                edge: NodeState::idle(NetCond::Regular),
+                cloud: NodeState::idle(NetCond::Regular),
+                devices: vec![NodeState::idle(NetCond::Regular); *users],
+            };
+            let horizon = 4000.0;
+            let t1 = schedule(*process, *users, horizon, *seed);
+            let t2 = schedule(*process, *users, horizon, *seed);
+            let a = des::run_open_loop(&model, &state, decision, &t1, horizon, *seed);
+            let b = des::run_open_loop(&model, &state, decision, &t2, horizon, *seed);
+            // bit-exact: identical departure order, ids and response times
+            if a.completed.len() != b.completed.len() {
+                return Err("different completion counts".into());
+            }
+            for (x, y) in a.completed.iter().zip(&b.completed) {
+                if x.id != y.id
+                    || x.response_ms.to_bits() != y.response_ms.to_bits()
+                    || x.depart_ms.to_bits() != y.depart_ms.to_bits()
+                {
+                    return Err(format!("diverged at req {}: {x:?} vs {y:?}", x.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sync_round_adapter_matches_closed_form_exactly() {
+    forall(
+        200,
+        0xD4,
+        |rng| {
+            let users = rng.range(1, 6);
+            (users, rand_decision(rng, users), rand_state(rng, users))
+        },
+        |(users, decision, state)| {
+            let model = model_for(*users);
+            let ours = des::sync_round_responses(&model, decision, state);
+            let closed = model.expected_responses(decision, state);
+            if ours.len() != closed.len() {
+                return Err("arity mismatch".into());
+            }
+            for (i, (a, b)) in ours.iter().zip(&closed).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("device {i}: des {a} != closed {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

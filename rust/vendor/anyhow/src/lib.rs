@@ -1,0 +1,180 @@
+//! Offline shim for the `anyhow` crate (crates.io is unreachable on this
+//! image). Implements exactly the surface eeco uses:
+//!
+//! - [`Error`]: a context chain of messages. `Display` shows the outermost
+//!   context; the alternate form (`{:#}`) shows the whole chain joined by
+//!   `": "`, matching upstream anyhow's formatting closely enough for the
+//!   error-message assertions in the test suite.
+//! - [`Result<T>`] alias with `Error` as the default error type.
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! - Blanket `From<E: std::error::Error>` so `?` converts std errors.
+
+use std::fmt;
+
+/// Error as a chain of context messages, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Error {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(mut self, msg: impl fmt::Display) -> Error {
+        self.chain.insert(0, msg.to_string());
+        self
+    }
+
+    /// The context messages, outermost first (mirrors anyhow's chain()).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // anyhow's Debug prints the message plus a cause list; a compact
+        // single-line chain keeps `unwrap()` panics readable.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+// NOTE: Error deliberately does NOT implement std::error::Error — that is
+// what makes the blanket From below coherent, same trick as upstream.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the source chain as context entries.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context(..)` / `.with_context(..)` on fallible values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e: Error = Error::from(io_err()).context("reading /tmp/x");
+        assert_eq!(format!("{e}"), "reading /tmp/x");
+        assert_eq!(format!("{e:#}"), "reading /tmp/x: file missing");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = anyhow!("got {} of {}", 1, 2);
+        assert_eq!(e.to_string(), "got 1 of 2");
+        let s = String::from("from a string");
+        assert_eq!(anyhow!(s).to_string(), "from a string");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "not ok");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "not ok");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        assert_eq!(Some(5u32).with_context(|| "x").unwrap(), 5);
+    }
+}

@@ -1,0 +1,158 @@
+//! Offline stub of the `xla` crate (PJRT C API bindings).
+//!
+//! This image has neither crates.io access nor the PJRT CPU plugin, so the
+//! runtime layer cannot execute real HLO graphs here. The stub keeps the
+//! type surface `eeco::runtime` compiles against:
+//!
+//! - [`Literal`] is fully functional (host-side shaped f32 buffers) — the
+//!   tensor-plumbing unit tests exercise it for real.
+//! - [`PjRtClient::cpu`] returns an error, so `Runtime::load` fails with a
+//!   clear message before anything else is attempted. Every runtime-
+//!   dependent test/bench/example already guards on
+//!   `artifacts/manifest.json` and skips cleanly, matching the seed's
+//!   behavior on hosts without built artifacts.
+//!
+//! Replacing this stub with the real `xla` crate requires no changes to
+//! eeco source — only this path dependency.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!("{what}: PJRT backend unavailable (offline xla stub)"))
+}
+
+/// Host-side shaped f32 buffer (the only dtype eeco moves across PJRT).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from a flat slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// 0-D scalar literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: vec![v], dims: vec![] }
+    }
+
+    /// Reshape; errors if the element count does not match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape {:?} wants {} elements, literal has {}",
+                dims,
+                n,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Flat element extraction. Only f32 is ever requested by eeco.
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from(v)).collect())
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples (tuples
+    /// only come out of executed graphs, which the stub cannot run).
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Device-side buffer handle (unobtainable through the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        // Touch the file so missing-artifact errors still mention the path.
+        std::fs::metadata(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto)
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_p: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Literal::scalar(7.5);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
