@@ -26,7 +26,7 @@ fn main() {
     let decision = Decision(
         (0..users)
             .map(|i| Action {
-                tier: Tier::from_index(i % 3),
+                placement: Tier::from_index(i % 3),
                 model: ModelId((i % 8) as u8),
             })
             .collect(),

@@ -32,9 +32,13 @@ fn main() {
         cloud: eeco::monitor::NodeState::idle(NetCond::Regular),
         devices: vec![eeco::monitor::NodeState::idle(NetCond::Regular); 5],
     };
-    let counts = [2usize, 2, 1];
+    let ctx = eeco::sim::RoundCtx {
+        edge_counts: vec![2],
+        cloud_count: 1,
+        ingress_counts: vec![3],
+    };
     b.run("device_response_ms", || {
-        rm.device_response_ms(0, ModelId(4), Tier::Edge, &counts, &sys)
+        rm.device_response_ms(0, ModelId(4), Tier::Edge(0), &ctx, &sys)
     });
 
     // full training loop throughput (the Fig 6 inner loop)

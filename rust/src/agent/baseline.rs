@@ -1,38 +1,45 @@
 //! Baseline strategies from the paper's evaluation (§6.1):
 //!
 //! - fixed orchestration: every device executes the most accurate model
-//!   (d0) at a fixed tier — "device only", "edge only", "cloud only";
+//!   (d0) at a fixed placement — "device only", "edge only", "cloud only"
+//!   (one per topology placement in the multi-edge case);
 //! - the state-of-the-art [36] baseline: Q-learning restricted to
 //!   computation-offloading actions with the model pinned to d0
 //!   (Table 1's "CO"-only action space).
 
 use crate::config::Hyper;
 use crate::monitor::EncodedState;
-use crate::types::{Action, Decision, ModelId, Tier};
+use crate::types::{Action, Decision, ModelId, Placement, Tier, Topology};
 
 use super::qlearning::QTableAgent;
 use super::{ActionSet, Agent};
 
-/// Fixed strategy: all devices at `tier` with d0.
+/// Fixed strategy: all devices at `placement` with d0.
 pub struct FixedAgent {
-    pub tier: Tier,
+    pub placement: Placement,
     users: usize,
     steps: usize,
 }
 
 impl FixedAgent {
-    pub fn new(tier: Tier, users: usize) -> FixedAgent {
-        FixedAgent { tier, users, steps: 0 }
+    pub fn new(placement: Placement, users: usize) -> FixedAgent {
+        FixedAgent { placement, users, steps: 0 }
     }
 
+    /// The paper's three fixed strategies (single-edge topology).
     pub fn all(users: usize) -> Vec<FixedAgent> {
-        Tier::ALL.iter().map(|&t| FixedAgent::new(t, users)).collect()
+        Tier::ALL.iter().map(|&p| FixedAgent::new(p, users)).collect()
+    }
+
+    /// One fixed strategy per placement of `topo`.
+    pub fn all_for(topo: &Topology) -> Vec<FixedAgent> {
+        topo.placements().into_iter().map(|p| FixedAgent::new(p, topo.users())).collect()
     }
 }
 
 impl Agent for FixedAgent {
     fn decide(&mut self, _state: &EncodedState, _explore: bool) -> Decision {
-        Decision::uniform(self.users, Action { tier: self.tier, model: ModelId(0) })
+        Decision::uniform(self.users, Action { placement: self.placement, model: ModelId(0) })
     }
 
     fn learn(&mut self, _s: &EncodedState, _d: &Decision, _r: f64, _n: &EncodedState) {
@@ -40,10 +47,11 @@ impl Agent for FixedAgent {
     }
 
     fn name(&self) -> String {
-        match self.tier {
-            Tier::Local => "Device only".into(),
-            Tier::Edge => "Edge only".into(),
-            Tier::Cloud => "Cloud only".into(),
+        match self.placement {
+            Placement::Local => "Device only".into(),
+            Placement::Edge(0) => "Edge only".into(),
+            Placement::Edge(k) => format!("Edge-{} only", k + 1),
+            Placement::Cloud => "Cloud only".into(),
         }
     }
 
@@ -52,15 +60,22 @@ impl Agent for FixedAgent {
     }
 }
 
-/// SOTA [36]: offload-only Q-learner (3 actions/device, d0 pinned).
+/// SOTA [36]: offload-only Q-learner (one d0 action per paper placement).
 pub fn sota_agent(users: usize, hyper: Hyper, seed: u64) -> QTableAgent {
     QTableAgent::new(users, hyper, ActionSet::offload_only_d0(), seed).with_name("SOTA [36]")
+}
+
+/// SOTA [36] over an arbitrary topology: one d0 action per placement.
+pub fn sota_agent_for(topo: &Topology, hyper: Hyper, seed: u64) -> QTableAgent {
+    QTableAgent::new(topo.users(), hyper, ActionSet::offload_only_d0_for(topo), seed)
+        .with_name("SOTA [36]")
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::Algo;
+    use crate::types::NetCond;
 
     fn st() -> EncodedState {
         EncodedState { key: 0, vec: vec![0.0; 12] }
@@ -69,11 +84,11 @@ mod tests {
     #[test]
     fn fixed_agents_never_deviate() {
         for mut a in FixedAgent::all(4) {
-            let tier = a.tier;
+            let p = a.placement;
             for _ in 0..5 {
                 let d = a.decide(&st(), true);
                 assert_eq!(d.n_users(), 4);
-                assert!(d.0.iter().all(|x| x.tier == tier && x.model.0 == 0));
+                assert!(d.0.iter().all(|x| x.placement == p && x.model.0 == 0));
                 a.learn(&st(), &d, -1.0, &st());
             }
             assert_eq!(a.steps(), 5);
@@ -83,7 +98,7 @@ mod tests {
     #[test]
     fn fixed_accuracy_is_max() {
         let top5 = crate::models::top5_table();
-        let mut a = FixedAgent::new(Tier::Edge, 3);
+        let mut a = FixedAgent::new(Tier::Edge(0), 3);
         let d = a.decide(&st(), false);
         assert!((d.avg_accuracy(&top5) - crate::models::MAX_ACCURACY).abs() < 1e-9);
     }
@@ -97,5 +112,20 @@ mod tests {
             assert!(d.0.iter().all(|x| x.model.0 == 0));
             a.learn(&st(), &d, -100.0, &st());
         }
+    }
+
+    #[test]
+    fn per_placement_baselines_cover_topology() {
+        let topo = Topology::uniform(&[NetCond::Regular; 4], NetCond::Regular, 3, [1, 2, 4]);
+        let agents = FixedAgent::all_for(&topo);
+        assert_eq!(agents.len(), 5);
+        let names: Vec<String> = agents.iter().map(|a| a.name()).collect();
+        assert_eq!(names[0], "Device only");
+        assert_eq!(names[1], "Edge only");
+        assert_eq!(names[2], "Edge-2 only");
+        assert_eq!(names[4], "Cloud only");
+        let mut sota = sota_agent_for(&topo, Hyper::paper_defaults(Algo::QLearning, 4), 2);
+        let d = sota.decide(&st(), false);
+        assert!(d.0.iter().all(|x| x.model.0 == 0));
     }
 }

@@ -1,35 +1,48 @@
 //! Brute-force optimal-decision oracle (paper §6.1: the "true optimal
 //! configuration" the RL agents are scored against; complexity Eq. 5/6).
 //!
-//! Naively the joint space is 24^N (~8M for N = 5). We enumerate exactly
-//! but efficiently: the response model couples devices only through tier
-//! counts, so we sweep the 3^N tier assignments and, within each, pick
-//! per-device models with a DP over the accuracy budget (top-5 values in
-//! integer tenths). This is exact and runs in milliseconds, which lets the
+//! Naively the joint space is (P*8)^N for P placements. We enumerate
+//! exactly but efficiently: the response model couples devices only
+//! through per-node counts, so we sweep the P^N placement assignments
+//! and, within each, pick per-device models with a DP over the accuracy
+//! budget (top-5 values in integer tenths). This is exact and runs in
+//! milliseconds through the paper's N = 5, which lets the
 //! prediction-accuracy experiment compare every agent decision against the
 //! optimum. A literal 24^N enumerator is kept for cross-validation at
 //! small N.
 
 use crate::models;
+use crate::sim::latency::RoundCtx;
 use crate::sim::Env;
-use crate::types::{Action, Decision, ModelId, Tier, NUM_MODELS};
+use crate::types::{Action, Decision, ModelId, ACTIONS_PER_DEVICE, NUM_MODELS};
 
-/// Largest user count the exhaustive oracle will attempt: the 3^N tier
-/// sweep with the per-assignment DP is milliseconds through the paper's
-/// N = 5 and around a second at 6, but explodes beyond (and
-/// `3usize.pow(n)` would eventually overflow). Callers at open-loop scale
-/// (10+ users) use heuristic or learned policies instead.
+/// Largest user count the exhaustive oracle will attempt on the paper's
+/// 3-placement topology: the 3^N sweep with the per-assignment DP is
+/// milliseconds through N = 5 and around a second at 6, but explodes
+/// beyond. Callers at open-loop scale (10+ users) use heuristic or
+/// learned policies instead.
 pub const MAX_ORACLE_USERS: usize = 6;
 
+/// Largest placement-assignment count the oracle will sweep — 3^6, the
+/// single-edge budget at [`MAX_ORACLE_USERS`]. Multi-edge topologies hit
+/// it at proportionally fewer users ((2+E)^N assignments).
+pub const MAX_ORACLE_ASSIGNMENTS: usize = 729;
+
 /// Exact optimum: minimal expected average response time subject to the
-/// strict average-accuracy constraint. Returns None if the constraint is
-/// unsatisfiable (threshold above all-d0) or the instance exceeds
-/// [`MAX_ORACLE_USERS`] (exhaustive search impractical).
+/// strict average-accuracy constraint, over the environment's topology.
+/// Returns None if the constraint is unsatisfiable (threshold above
+/// all-d0) or the instance exceeds the [`MAX_ORACLE_ASSIGNMENTS`] sweep
+/// budget (exhaustive search impractical).
 pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
     let n = env.users();
-    if n > MAX_ORACLE_USERS {
+    let topo = env.topology();
+    let places = topo.placements();
+    let num_p = places.len();
+    // Overflow-safe budget check before materializing num_p^n.
+    if (num_p as f64).powi(n as i32) > MAX_ORACLE_ASSIGNMENTS as f64 {
         return None;
     }
+    let assignments = num_p.pow(n as u32);
     let acc10: Vec<usize> =
         models::CATALOG.iter().map(|m| (m.top5 * 10.0).round() as usize).collect();
     // smallest integer accuracy-sum (in tenths) that satisfies
@@ -41,32 +54,20 @@ pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
     }
 
     let mut best: Option<(Decision, f64)> = None;
-    let assignments = 3usize.pow(n as u32);
-    let mut tiers = vec![Tier::Local; n];
+    let mut placements = vec![places[0]; n];
     for code in 0..assignments {
         let mut c = code;
-        for t in tiers.iter_mut() {
-            *t = Tier::from_index(c % 3);
-            c /= 3;
+        for p in placements.iter_mut() {
+            *p = places[c % num_p];
+            c /= num_p;
         }
-        let counts = {
-            let mut k = [0usize; 3];
-            for &t in &tiers {
-                k[t.index()] += 1;
-            }
-            k
-        };
+        let ctx = RoundCtx::from_placements(topo, placements.iter().copied());
         // Per-device, per-model expected response under this assignment.
         let mut cost = vec![[0.0f64; NUM_MODELS]; n];
-        for (i, &tier) in tiers.iter().enumerate() {
+        for (i, &p) in placements.iter().enumerate() {
             for m in 0..NUM_MODELS {
-                cost[i][m] = env.model.device_response_ms(
-                    i,
-                    ModelId(m as u8),
-                    tier,
-                    &counts,
-                    &env.state,
-                );
+                cost[i][m] =
+                    env.model.device_response_ms(i, ModelId(m as u8), p, &ctx, &env.state);
             }
         }
         // DP over devices with capped accuracy sum.
@@ -105,10 +106,10 @@ pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
                 a = pa;
             }
             let decision = Decision(
-                tiers
+                placements
                     .iter()
                     .zip(&ms)
-                    .map(|(&tier, &m)| Action { tier, model: ModelId(m as u8) })
+                    .map(|(&p, &m)| Action { placement: p, model: ModelId(m as u8) })
                     .collect(),
             );
             best = Some((decision, total));
@@ -117,18 +118,19 @@ pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
     best
 }
 
-/// Literal 24^N enumeration (cross-validation; N <= 3 in tests).
+/// Literal 24^N enumeration over the paper's single-edge action space
+/// (cross-validation; N <= 3 in tests).
 pub fn optimal_naive(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
     let n = env.users();
-    let total = crate::types::ACTIONS_PER_DEVICE.pow(n as u32);
+    let total = ACTIONS_PER_DEVICE.pow(n as u32);
     let top5 = models::top5_table();
     let mut best: Option<(Decision, f64)> = None;
     for joint in 0..total {
         let mut c = joint;
         let actions: Vec<Action> = (0..n)
             .map(|_| {
-                let a = Action::from_index(c % crate::types::ACTIONS_PER_DEVICE);
-                c /= crate::types::ACTIONS_PER_DEVICE;
+                let a = Action::from_index(c % ACTIONS_PER_DEVICE);
+                c /= ACTIONS_PER_DEVICE;
                 a
             })
             .collect();
@@ -148,7 +150,8 @@ pub fn optimal_naive(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
 mod tests {
     use super::*;
     use crate::config::{Calibration, Scenario};
-    use crate::types::AccuracyConstraint;
+    use crate::network::Network;
+    use crate::types::{AccuracyConstraint, Placement, Tier};
 
     fn env(name: &str, users: usize, c: AccuracyConstraint) -> Env {
         Env::new(Scenario::by_name(name, users).unwrap(), Calibration::default(), c, 1)
@@ -204,20 +207,29 @@ mod tests {
         assert!(optimal(&e, 0.0).is_none());
         let ok = env("exp-a", 5, AccuracyConstraint::Min);
         assert!(optimal(&ok, 0.0).is_some());
+        // the budget is assignment-count-based: a 2-edge topology (4
+        // placements) declines at 5 users (4^5 = 1024 > 729)...
+        let net2 = Network::with_edges(Scenario::exp_a(5), Calibration::default(), 2);
+        let e2 = Env::with_network(net2, AccuracyConstraint::Min, 1);
+        assert!(optimal(&e2, 0.0).is_none());
+        // ...but handles 4 users (4^4 = 256)
+        let net2 = Network::with_edges(Scenario::exp_a(4), Calibration::default(), 2);
+        let e2 = Env::with_network(net2, AccuracyConstraint::Min, 1);
+        assert!(optimal(&e2, 0.0).is_some());
     }
 
     #[test]
     fn weak_network_prefers_local_single_user() {
         let e = env("exp-d", 1, AccuracyConstraint::Max);
         let (d, _) = optimal(&e, AccuracyConstraint::Max.threshold()).unwrap();
-        assert_eq!(d.0[0].tier, Tier::Local); // Table 8 EXP-D, 1 user: {d0, L}
+        assert_eq!(d.0[0].placement, Tier::Local); // Table 8 EXP-D, 1 user: {d0, L}
     }
 
     #[test]
     fn regular_network_offloads_single_user() {
         let e = env("exp-a", 1, AccuracyConstraint::Max);
         let (d, _) = optimal(&e, AccuracyConstraint::Max.threshold()).unwrap();
-        assert_eq!(d.0[0].tier, Tier::Cloud); // Table 8 EXP-A, 1 user: {d0, C}
+        assert_eq!(d.0[0].placement, Tier::Cloud); // Table 8 EXP-A, 1 user: {d0, C}
     }
 
     #[test]
@@ -246,5 +258,19 @@ mod tests {
             assert!(avg <= prev + 1e-9, "constraint {c:?} worsened: {avg} > {prev}");
             prev = avg;
         }
+    }
+
+    #[test]
+    fn multi_edge_oracle_spreads_edge_load() {
+        // 4 users, 2 edges, Max accuracy: the oracle never packs both
+        // edge-bound users onto one edge when spreading is free.
+        let net = Network::with_edges(Scenario::exp_a(4), Calibration::default(), 2);
+        let e = Env::with_network(net, AccuracyConstraint::Max, 1);
+        let (d, avg) = optimal(&e, AccuracyConstraint::Max.threshold()).unwrap();
+        assert!(e.topology().admits(&d));
+        // the 2-edge optimum can only improve on the single-edge one
+        let e1 = env("exp-a", 4, AccuracyConstraint::Max);
+        let (_, avg1) = optimal(&e1, AccuracyConstraint::Max.threshold()).unwrap();
+        assert!(avg <= avg1 + 1e-9, "2-edge {avg} vs 1-edge {avg1}");
     }
 }

@@ -22,17 +22,19 @@ use anyhow::Result;
 use crate::config::Hyper;
 use crate::monitor::EncodedState;
 use crate::runtime::SharedRuntime;
-use crate::types::{Action, Decision, ACTIONS_PER_DEVICE};
+use crate::types::{Decision, Topology};
 use crate::util::rng::Rng;
 
 use super::replay::{ReplayBuffer, Transition};
-use super::Agent;
+use super::{ActionSet, Agent};
 
 pub const REWARD_SCALE: f64 = 1e-3;
 
 pub struct DqnAgent {
     pub users: usize,
     pub hyper: Hyper,
+    /// Per-device action set, slot-ordered ([users x len] Q output rows).
+    pub actions: ActionSet,
     rt: Arc<SharedRuntime>,
     pub params: Vec<f32>,
     replay: ReplayBuffer,
@@ -48,13 +50,37 @@ pub struct DqnAgent {
 
 impl DqnAgent {
     pub fn new(users: usize, hyper: Hyper, rt: Arc<SharedRuntime>, seed: u64) -> Result<DqnAgent> {
+        DqnAgent::with_actions(users, hyper, rt, seed, ActionSet::full())
+    }
+
+    /// DQN over an explicit action set (e.g. [`ActionSet::full_for`] a
+    /// multi-edge topology). The AOT artifacts bake the Q head's output
+    /// width, so the set's size must match what the manifest was compiled
+    /// for — mismatches error instead of silently mis-indexing.
+    pub fn with_actions(
+        users: usize,
+        hyper: Hyper,
+        rt: Arc<SharedRuntime>,
+        seed: u64,
+        actions: ActionSet,
+    ) -> Result<DqnAgent> {
         let entry = rt.manifest.dqn_for(users)?;
         let (state_dim, batch) = (entry.state_dim, entry.train_batch);
+        // The Q head's output width is baked into the AOT artifacts, so
+        // the set must match what this manifest was compiled for.
+        anyhow::ensure!(
+            actions.len() == entry.actions_per_device,
+            "DQN artifacts are compiled for {} actions/device, got {} — rebuild \
+             the L2 graphs for this topology or use the tabular agent",
+            entry.actions_per_device,
+            actions.len()
+        );
         let params = rt.dqn_init(users)?;
         Ok(DqnAgent {
             users,
             replay: ReplayBuffer::new(hyper.replay_capacity.max(batch)),
             hyper,
+            actions,
             rt,
             params,
             rng: Rng::new(seed),
@@ -67,6 +93,18 @@ impl DqnAgent {
         })
     }
 
+    /// DQN sized from `topo`'s action space (errors when the baked
+    /// artifacts don't cover it).
+    pub fn for_topology(
+        users: usize,
+        hyper: Hyper,
+        rt: Arc<SharedRuntime>,
+        seed: u64,
+        topo: &Topology,
+    ) -> Result<DqnAgent> {
+        DqnAgent::with_actions(users, hyper, rt, seed, ActionSet::full_for(topo))
+    }
+
     pub fn epsilon(&self) -> f64 {
         self.hyper.epsilon_at(self.steps)
     }
@@ -75,7 +113,7 @@ impl DqnAgent {
         self.train_steps
     }
 
-    /// Q-values for a state: row-major [users x 24].
+    /// Q-values for a state: row-major [users x actions-per-device].
     pub fn q_values(&self, state: &[f32]) -> Vec<f32> {
         self.rt
             .dqn_forward(self.users, &self.params, state)
@@ -83,10 +121,11 @@ impl DqnAgent {
     }
 
     fn greedy(&self, state: &[f32]) -> Vec<usize> {
+        let apd = self.actions.len();
         let q = self.q_values(state);
         (0..self.users)
             .map(|d| {
-                let row = &q[d * ACTIONS_PER_DEVICE..(d + 1) * ACTIONS_PER_DEVICE];
+                let row = &q[d * apd..(d + 1) * apd];
                 let mut best = 0;
                 for (i, &v) in row.iter().enumerate() {
                     if v > row[best] {
@@ -100,7 +139,7 @@ impl DqnAgent {
 
     fn train_minibatch(&mut self) {
         let d = self.state_dim;
-        let apd = ACTIONS_PER_DEVICE;
+        let apd = self.actions.len();
         let sample = self.replay.sample(self.batch, &mut self.rng);
         let mut s = Vec::with_capacity(self.batch * d);
         let mut s2 = Vec::with_capacity(self.batch * d);
@@ -138,12 +177,12 @@ impl Agent for DqnAgent {
     fn decide(&mut self, state: &EncodedState, explore: bool) -> Decision {
         assert_eq!(state.vec.len(), self.state_dim, "state dim");
         let eps = self.epsilon();
-        let idxs = if explore && self.rng.bool(eps) {
-            (0..self.users).map(|_| self.rng.below(ACTIONS_PER_DEVICE)).collect()
+        let idxs: Vec<usize> = if explore && self.rng.bool(eps) {
+            (0..self.users).map(|_| self.rng.below(self.actions.len())).collect()
         } else {
             self.greedy(&state.vec)
         };
-        Decision(idxs.into_iter().map(Action::from_index).collect())
+        Decision(idxs.into_iter().map(|i| self.actions.allowed[i]).collect())
     }
 
     fn learn(
@@ -155,7 +194,11 @@ impl Agent for DqnAgent {
     ) {
         self.replay.push(Transition {
             state: state.vec.clone(),
-            actions: decision.0.iter().map(|a| a.index()).collect(),
+            actions: decision
+                .0
+                .iter()
+                .map(|&a| self.actions.slot_of(a).expect("action outside DQN set"))
+                .collect(),
             reward,
             next_state: next_state.vec.clone(),
         });

@@ -11,6 +11,10 @@
 //!   SOTA [36] offload-only Q-learner with the model pinned to d0.
 //! - [`bruteforce`] — the exact optimal-decision oracle (Eq. 5/6 space).
 //! - [`transfer`] — transfer-learning warm start (Fig. 7).
+//!
+//! Action spaces are [`ActionSet`]s of concrete placement x model
+//! [`Action`]s, sized from the [`Topology`] (`full_for`) — the paper's 24
+//! actions per device are the single-edge instance.
 
 pub mod baseline;
 pub mod checkpoint;
@@ -21,7 +25,7 @@ pub mod replay;
 pub mod transfer;
 
 use crate::monitor::EncodedState;
-use crate::types::Decision;
+use crate::types::{Action, Decision, ModelId, Tier, Topology};
 
 /// A decision-making policy over the synchronous-round environment.
 pub trait Agent {
@@ -56,29 +60,52 @@ pub trait Agent {
     }
 }
 
-/// Restriction of the per-device action set (the SOTA baseline only
-/// offloads; fixed strategies use a single action).
-#[derive(Debug, Clone)]
+/// Per-device action set: the concrete placement x model actions an agent
+/// may pick, in slot order (the agents' Q rows are indexed by slot).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ActionSet {
-    /// Allowed per-device action indices (subset of 0..24).
-    pub allowed: Vec<usize>,
+    /// Allowed per-device actions, slot-ordered.
+    pub allowed: Vec<Action>,
 }
 
 impl ActionSet {
+    /// The paper's full 24-action set (single-edge topology).
     pub fn full() -> ActionSet {
-        ActionSet { allowed: (0..crate::types::ACTIONS_PER_DEVICE).collect() }
+        ActionSet { allowed: Action::all().collect() }
+    }
+
+    /// Every placement x model of `topo`, in dense-index order. On a
+    /// single-edge topology this equals [`ActionSet::full`] slot-for-slot.
+    pub fn full_for(topo: &Topology) -> ActionSet {
+        ActionSet { allowed: topo.actions() }
     }
 
     /// Offloading-only with the most accurate model (SOTA [36]): the three
-    /// placements of d0.
+    /// paper placements of d0.
     pub fn offload_only_d0() -> ActionSet {
-        use crate::types::{Action, ModelId, Tier};
         ActionSet {
             allowed: Tier::ALL
                 .iter()
-                .map(|&t| Action { tier: t, model: ModelId(0) }.index())
+                .map(|&p| Action { placement: p, model: ModelId(0) })
                 .collect(),
         }
+    }
+
+    /// SOTA [36] action set over `topo`: every placement (local plus each
+    /// edge plus cloud) with the model pinned to d0.
+    pub fn offload_only_d0_for(topo: &Topology) -> ActionSet {
+        ActionSet {
+            allowed: topo
+                .placements()
+                .into_iter()
+                .map(|p| Action { placement: p, model: ModelId(0) })
+                .collect(),
+        }
+    }
+
+    /// Slot of `action`, if allowed.
+    pub fn slot_of(&self, action: Action) -> Option<usize> {
+        self.allowed.iter().position(|&a| a == action)
     }
 
     pub fn len(&self) -> usize {
@@ -93,25 +120,58 @@ impl ActionSet {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::types::{Action, Tier};
+    use crate::types::{NetCond, Placement};
 
     #[test]
     fn full_set_covers_all() {
         let s = ActionSet::full();
         assert_eq!(s.len(), 24);
+        for (i, &a) in s.allowed.iter().enumerate() {
+            assert_eq!(a, Action::from_index(i));
+        }
     }
 
     #[test]
     fn sota_set_is_three_d0_placements() {
         let s = ActionSet::offload_only_d0();
         assert_eq!(s.len(), 3);
-        for &i in &s.allowed {
-            let a = Action::from_index(i);
+        for &a in &s.allowed {
             assert_eq!(a.model.0, 0);
         }
-        let tiers: Vec<Tier> = s.allowed.iter().map(|&i| Action::from_index(i).tier).collect();
-        assert!(tiers.contains(&Tier::Local));
-        assert!(tiers.contains(&Tier::Edge));
-        assert!(tiers.contains(&Tier::Cloud));
+        let ps: Vec<Placement> = s.allowed.iter().map(|a| a.placement).collect();
+        assert!(ps.contains(&Tier::Local));
+        assert!(ps.contains(&Tier::Edge(0)));
+        assert!(ps.contains(&Tier::Cloud));
+    }
+
+    #[test]
+    fn topology_sized_sets_scale_with_edges() {
+        let topo = |edges| {
+            Topology::uniform(&[NetCond::Regular; 4], NetCond::Regular, edges, [1, 2, 4])
+        };
+        let t1 = topo(1);
+        assert_eq!(ActionSet::full_for(&t1), ActionSet::full());
+        let t3 = topo(3);
+        let full = ActionSet::full_for(&t3);
+        assert_eq!(full.len(), (3 + 2) * 8);
+        for (i, &a) in full.allowed.iter().enumerate() {
+            assert_eq!(t3.action_index(a), i);
+        }
+        let sota = ActionSet::offload_only_d0_for(&t3);
+        assert_eq!(sota.len(), 5);
+        assert!(sota.allowed.iter().all(|a| a.model.0 == 0));
+    }
+
+    #[test]
+    fn slot_lookup_roundtrips() {
+        let s = ActionSet::full();
+        for (i, &a) in s.allowed.iter().enumerate() {
+            assert_eq!(s.slot_of(a), Some(i));
+        }
+        let restricted = ActionSet::offload_only_d0();
+        assert_eq!(
+            restricted.slot_of(Action { placement: Placement::Local, model: ModelId(3) }),
+            None
+        );
     }
 }

@@ -110,7 +110,7 @@ impl QTableAgent {
     }
 
     fn slot_of(&self, action: Action) -> Option<usize> {
-        self.actions.allowed.iter().position(|&i| i == action.index())
+        self.actions.slot_of(action)
     }
 }
 
@@ -128,7 +128,7 @@ impl Agent for QTableAgent {
             } else {
                 self.greedy_slot(state.key, device)
             };
-            actions.push(Action::from_index(self.actions.allowed[slot]));
+            actions.push(self.actions.allowed[slot]);
         }
         Decision(actions)
     }

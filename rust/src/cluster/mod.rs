@@ -1,7 +1,9 @@
 //! Measured-mode cluster substrate: simulated end/edge/cloud nodes that
 //! execute *real* PJRT MobileNet inference on per-node thread pools sized
-//! to the paper's vCPU counts (Table 6: end 1, edge 2, cloud 4), so
-//! concurrency contention is physically real wall-clock time.
+//! to the topology's vCPU counts (paper Table 6: end 1, edge 2, cloud 4),
+//! so concurrency contention is physically real wall-clock time. The node
+//! set mirrors the sim-side [`Topology`]: one node per device, one per
+//! edge, one cloud.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -11,22 +13,22 @@ use anyhow::Result;
 use crate::config::Calibration;
 use crate::runtime::SharedRuntime;
 use crate::sim::workload::synth_image;
-use crate::types::{ModelId, Tier};
+use crate::types::{ModelId, Placement, Topology};
 use crate::util::pool::ThreadPool;
 
 /// One compute node.
 pub struct Node {
     pub name: String,
-    pub tier: Tier,
+    pub placement: Placement,
     pub pool: Arc<ThreadPool>,
     rt: Arc<SharedRuntime>,
 }
 
 impl Node {
-    pub fn new(name: &str, tier: Tier, vcpus: usize, rt: Arc<SharedRuntime>) -> Node {
+    pub fn new(name: &str, placement: Placement, vcpus: usize, rt: Arc<SharedRuntime>) -> Node {
         Node {
             name: name.to_string(),
-            tier,
+            placement,
             pool: Arc::new(ThreadPool::new(vcpus, name)),
             rt: Arc::clone(&rt),
         }
@@ -52,31 +54,59 @@ impl Node {
     }
 }
 
-/// The end-edge-cloud topology (paper Table 6 shape).
+/// The end-edge-cloud node set (paper Table 6 shape, N edges).
 pub struct Cluster {
     pub devices: Vec<Node>,
-    pub edge: Node,
+    pub edges: Vec<Node>,
     pub cloud: Node,
 }
 
 impl Cluster {
+    /// The paper's single-edge cluster.
     pub fn new(users: usize, cal: &Calibration, rt: Arc<SharedRuntime>) -> Cluster {
         let devices = (0..users)
-            .map(|i| Node::new(&format!("S{}", i + 1), Tier::Local, cal.vcpus[0], Arc::clone(&rt)))
+            .map(|i| {
+                Node::new(&format!("S{}", i + 1), Placement::Local, cal.vcpus[0], Arc::clone(&rt))
+            })
             .collect();
         Cluster {
             devices,
-            edge: Node::new("E", Tier::Edge, cal.vcpus[1], Arc::clone(&rt)),
-            cloud: Node::new("C", Tier::Cloud, cal.vcpus[2], rt),
+            edges: vec![Node::new("E", Placement::Edge(0), cal.vcpus[1], Arc::clone(&rt))],
+            cloud: Node::new("C", Placement::Cloud, cal.vcpus[2], rt),
         }
     }
 
-    /// Node executing `tier` for requests from `device`.
-    pub fn node_for(&self, device: usize, tier: Tier) -> &Node {
-        match tier {
-            Tier::Local => &self.devices[device],
-            Tier::Edge => &self.edge,
-            Tier::Cloud => &self.cloud,
+    /// Cluster mirroring an explicit topology: one pool per device, one
+    /// per edge node (named E, E2, E3, ...), one cloud.
+    pub fn for_topology(topo: &Topology, rt: Arc<SharedRuntime>) -> Cluster {
+        let devices = (0..topo.users())
+            .map(|i| {
+                Node::new(
+                    &format!("S{}", i + 1),
+                    Placement::Local,
+                    topo.devices[i].vcpus,
+                    Arc::clone(&rt),
+                )
+            })
+            .collect();
+        let edges = topo
+            .edges
+            .iter()
+            .enumerate()
+            .map(|(j, e)| {
+                let name = Placement::Edge(j).to_string();
+                Node::new(&name, Placement::Edge(j), e.vcpus, Arc::clone(&rt))
+            })
+            .collect();
+        Cluster { devices, edges, cloud: Node::new("C", Placement::Cloud, topo.cloud.vcpus, rt) }
+    }
+
+    /// Node executing `p` for requests from `device`.
+    pub fn node_for(&self, device: usize, p: Placement) -> &Node {
+        match p {
+            Placement::Local => &self.devices[device],
+            Placement::Edge(j) => &self.edges[j],
+            Placement::Cloud => &self.cloud,
         }
     }
 

@@ -14,7 +14,7 @@
 //! mode can re-fit them (`eeco calibrate`).
 
 use crate::models::{self, Precision};
-use crate::types::{ModelId, NetCond, Tier};
+use crate::types::{ModelId, NetCond, Placement};
 use crate::util::minitoml::Doc;
 
 #[derive(Debug, Clone)]
@@ -93,23 +93,27 @@ impl Calibration {
         c
     }
 
-    /// Single-stream compute time of `model` on `tier`, no contention.
-    pub fn compute_ms(&self, model: ModelId, tier: Tier) -> f64 {
+    /// Single-stream compute time of `model` at placement `p`, no
+    /// contention. Calibration constants are per node *class* (end device
+    /// / edge / cloud), so every edge node shares the edge-class law.
+    pub fn compute_ms(&self, model: ModelId, p: Placement) -> f64 {
         let info = models::info(model);
         let f = match info.precision {
             Precision::Fp32 => 1.0,
             Precision::Int8 => self.int8_factor,
         };
-        self.overhead_ms[tier.index()] + info.mmacs * self.ms_per_mmac[tier.index()] * f
+        let c = p.class_index();
+        self.overhead_ms[c] + info.mmacs * self.ms_per_mmac[c] * f
     }
 
-    /// Contended compute time with `k` simultaneous tasks on `tier`:
+    /// Contended compute time with `k` simultaneous tasks at `p`:
     /// base * (1 + beta * (k-1)^delta). The sub-linear cloud delta models
     /// its larger vCPU pool; the super-linear edge delta its saturation.
-    pub fn compute_ms_contended(&self, model: ModelId, tier: Tier, k: usize) -> f64 {
-        let base = self.compute_ms(model, tier);
+    pub fn compute_ms_contended(&self, model: ModelId, p: Placement, k: usize) -> f64 {
+        let base = self.compute_ms(model, p);
         let extra = (k.max(1) - 1) as f64;
-        base * (1.0 + self.contention_beta[tier.index()] * extra.powf(self.contention_delta[tier.index()]))
+        let c = p.class_index();
+        base * (1.0 + self.contention_beta[c] * extra.powf(self.contention_delta[c]))
     }
 
     /// Total message overhead (request + update + decision) over one link
@@ -123,6 +127,7 @@ impl Calibration {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::types::Tier;
 
     const D0: ModelId = ModelId(0);
 
@@ -149,7 +154,7 @@ mod tests {
         let c = Calibration::default();
         let local = c.compute_ms(D0, Tier::Local) + 4.0;
         let cloud = c.compute_ms(D0, Tier::Cloud) + 2.0 * c.message_total_ms(NetCond::Weak);
-        let edge = c.compute_ms(D0, Tier::Edge) + c.message_total_ms(NetCond::Weak);
+        let edge = c.compute_ms(D0, Tier::Edge(0)) + c.message_total_ms(NetCond::Weak);
         assert!(local < cloud, "local={local} cloud={cloud}");
         assert!(local < edge + 90.0, "local={local} edge={edge}"); // edge is close; contention breaks the tie at N>1
     }
@@ -158,7 +163,7 @@ mod tests {
     fn anchors_edge_five_users() {
         let c = Calibration::default();
         // paper Fig 1b: ~1140 ms; allow +-15%
-        let t = c.compute_ms_contended(D0, Tier::Edge, 5) + c.message_total_ms(NetCond::Regular);
+        let t = c.compute_ms_contended(D0, Tier::Edge(0), 5) + c.message_total_ms(NetCond::Regular);
         assert!((0.85..1.15).contains(&(t / 1140.0)), "t={t}");
     }
 
@@ -174,7 +179,7 @@ mod tests {
     #[test]
     fn contention_monotone_in_users() {
         let c = Calibration::default();
-        for tier in [Tier::Edge, Tier::Cloud] {
+        for tier in [Tier::Edge(0), Tier::Cloud] {
             let mut prev = 0.0;
             for k in 1..=8 {
                 let t = c.compute_ms_contended(D0, tier, k);

@@ -72,6 +72,50 @@ impl TrafficConfig {
     }
 }
 
+/// `[topology]` section: how many edge nodes the end-edge-cloud network
+/// shards over, parsed from `edges = 2` or a sweep range `edges = "1..4"`
+/// (inclusive; `..=` also accepted) plus the `--edges` CLI override.
+/// Single-valued specs drive every topology-aware run; the range form is
+/// what `eeco experiment multi_edge` sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TopologyConfig {
+    pub edges_min: usize,
+    pub edges_max: usize,
+    /// True when the user set the spec ([topology] / --edges) — lets
+    /// sweep experiments tell an explicit `--edges 1` apart from the
+    /// unconfigured default (which they replace with their own range).
+    pub explicit: bool,
+}
+
+impl Default for TopologyConfig {
+    fn default() -> Self {
+        TopologyConfig { edges_min: 1, edges_max: 1, explicit: false }
+    }
+}
+
+impl TopologyConfig {
+    /// The edge count non-sweep runs use (the range's lower bound).
+    pub fn edges(&self) -> usize {
+        self.edges_min
+    }
+
+    /// Parse `"3"`, `"1..4"` or `"1..=4"` (both ranges inclusive).
+    pub fn parse_spec(s: &str) -> Result<TopologyConfig, String> {
+        let err = || format!("bad edge spec '{s}' (want N, A..B or A..=B)");
+        let (min, max) = if let Some((a, b)) = s.split_once("..") {
+            let b = b.strip_prefix('=').unwrap_or(b);
+            (a.trim().parse().map_err(|_| err())?, b.trim().parse().map_err(|_| err())?)
+        } else {
+            let n: usize = s.trim().parse().map_err(|_| err())?;
+            (n, n)
+        };
+        if min < 1 || max < min {
+            return Err(err());
+        }
+        Ok(TopologyConfig { edges_min: min, edges_max: max, explicit: true })
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Config {
     pub users: usize,
@@ -84,6 +128,7 @@ pub struct Config {
     pub seed: u64,
     pub steps: usize,
     pub traffic: TrafficConfig,
+    pub topology: TopologyConfig,
     pub artifacts_dir: String,
     pub results_dir: String,
 }
@@ -102,6 +147,7 @@ impl Default for Config {
             seed: 42,
             steps: 50_000,
             traffic: TrafficConfig::default(),
+            topology: TopologyConfig::default(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -156,6 +202,14 @@ impl Config {
         t.mean_phase_ms = doc.f64("traffic.mean_phase_ms", t.mean_phase_ms);
         t.horizon_ms = doc.f64("traffic.horizon_ms", t.horizon_ms);
         self.traffic.arrival().map(|_| ())?;
+        if let Some(v) = doc.get("topology.edges") {
+            let spec = match (v.as_str(), v.as_i64()) {
+                (Some(s), _) => s.to_string(),
+                (None, Some(n)) => n.to_string(),
+                _ => return Err("topology.edges must be an int or range string".into()),
+            };
+            self.topology = TopologyConfig::parse_spec(&spec)?;
+        }
         Ok(())
     }
 
@@ -192,6 +246,9 @@ impl Config {
         self.traffic.rate_per_s = args.f64("rate", self.traffic.rate_per_s);
         self.traffic.horizon_ms = args.f64("horizon-ms", self.traffic.horizon_ms);
         self.traffic.arrival().map(|_| ())?;
+        if let Some(spec) = args.get("edges") {
+            self.topology = TopologyConfig::parse_spec(spec)?;
+        }
         Ok(())
     }
 }
@@ -280,6 +337,42 @@ mod tests {
         // unknown process rejected at load time
         let bad = Doc::parse("[traffic]\nprocess = \"fractal\"\n").unwrap();
         assert!(Config::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn topology_section_and_cli_parse() {
+        assert_eq!(TopologyConfig::default().edges(), 1);
+        assert_eq!(
+            TopologyConfig::parse_spec("3").unwrap(),
+            TopologyConfig { edges_min: 3, edges_max: 3, explicit: true }
+        );
+        assert_eq!(
+            TopologyConfig::parse_spec("1..4").unwrap(),
+            TopologyConfig { edges_min: 1, edges_max: 4, explicit: true }
+        );
+        assert_eq!(
+            TopologyConfig::parse_spec("2..=5").unwrap(),
+            TopologyConfig { edges_min: 2, edges_max: 5, explicit: true }
+        );
+        assert!(!TopologyConfig::default().explicit);
+        assert!(TopologyConfig::parse_spec("0").is_err());
+        assert!(TopologyConfig::parse_spec("4..2").is_err());
+        assert!(TopologyConfig::parse_spec("wat").is_err());
+
+        let doc = Doc::parse("[topology]\nedges = 2\n").unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.topology.edges(), 2);
+        let doc = Doc::parse("[topology]\nedges = \"1..4\"\n").unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.topology, TopologyConfig { edges_min: 1, edges_max: 4, explicit: true });
+
+        let args = Args::parse(["--edges", "1..3"].iter().map(|s| s.to_string()));
+        let c = Config::load(&args).unwrap();
+        assert_eq!(c.topology, TopologyConfig { edges_min: 1, edges_max: 3, explicit: true });
+        let bad = Args::parse(["--edges", "zero"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
     }
 
     #[test]

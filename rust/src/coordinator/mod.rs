@@ -23,7 +23,7 @@ use anyhow::Result;
 use crate::cluster::Cluster;
 use crate::network::Network;
 use crate::sim::Request;
-use crate::types::{Action, Tier};
+use crate::types::{Action, Placement};
 
 pub use batcher::Batcher;
 pub use router::{Route, Router};
@@ -73,29 +73,32 @@ pub fn serve_round(
     cfg: &ServeConfig,
 ) -> Result<Vec<ResponseRecord>> {
     let routes = router.route_round(requests);
-    // Group by (tier, device-if-local, model) — one batch per executing
-    // node per model.
+    // Group by (placement, sub-key, model) — one batch per executing node
+    // per model, where cloud-bound requests additionally split by their
+    // home edge so each batch shares exactly one ingress link (the same
+    // per-link serialization the DES core models). Placement's derived
+    // ordering keys the map deterministically (local, then each edge,
+    // then cloud).
     use std::collections::BTreeMap;
-    let mut groups: BTreeMap<(usize, usize, u8), Vec<Route>> = BTreeMap::new();
+    let mut groups: BTreeMap<(Placement, usize, u8), Vec<Route>> = BTreeMap::new();
     for r in routes {
-        let node_key = match r.action.tier {
-            Tier::Local => (0usize, r.device),
-            Tier::Edge => (1, 0),
-            Tier::Cloud => (2, 0),
+        let sub_key = match r.action.placement {
+            Placement::Local => r.device,
+            Placement::Cloud => network.topo.home_edge(r.device),
+            Placement::Edge(_) => 0,
         };
-        groups.entry((node_key.0, node_key.1, r.action.model.0)).or_default().push(r);
+        groups.entry((r.action.placement, sub_key, r.action.model.0)).or_default().push(r);
     }
 
     let (tx, rx) = mpsc::channel::<Result<Vec<ResponseRecord>>>();
     let n_groups = groups.len();
     std::thread::scope(|scope| {
-        for ((tier_i, dev, model), routes) in groups {
+        for ((placement, dev, model), routes) in groups {
             let tx = tx.clone();
             let cfg = cfg.clone();
             let network = network.clone();
             scope.spawn(move || {
-                let tier = Tier::from_index(tier_i);
-                let node = cluster.node_for(dev, tier);
+                let node = cluster.node_for(dev, placement);
                 let mut out = Vec::new();
                 // Split the group into batches of at most max_batch.
                 for chunk in routes.chunks(cfg.max_batch) {
@@ -103,9 +106,9 @@ pub fn serve_round(
                     // (simultaneous uploads serialize at the shared link).
                     let net_ms: f64 = chunk
                         .iter()
-                        .map(|r| network.path_overhead_ms(r.device, tier))
+                        .map(|r| network.path_overhead_ms(r.device, placement))
                         .fold(0.0, f64::max)
-                        + network.queueing_ms(tier, chunk.len());
+                        + network.queueing_ms(placement, chunk.len());
                     std::thread::sleep(std::time::Duration::from_secs_f64(
                         net_ms * cfg.time_scale / 1e3,
                     ));
@@ -169,32 +172,34 @@ pub fn serve_trace(
 ) -> Result<Vec<ResponseRecord>> {
     use std::collections::BTreeMap;
 
-    // (tier index, device-if-local) -> batcher over virtual arrival time.
-    let mut batchers: BTreeMap<(usize, usize), Batcher> = BTreeMap::new();
+    // (placement, sub-key) -> batcher over virtual arrival time; cloud
+    // traffic batches per home edge so every batch rides one ingress
+    // link, mirroring serve_round's grouping and the DES link model.
+    let mut batchers: BTreeMap<(Placement, usize), Batcher> = BTreeMap::new();
     // req_id -> routed action (the batcher only carries ids + times).
     let mut routes: BTreeMap<u64, Route> = BTreeMap::new();
     let mut records: Vec<ResponseRecord> = Vec::new();
 
-    let node_key = |r: &Route| match r.action.tier {
-        Tier::Local => (0usize, r.device),
-        Tier::Edge => (1, 0),
-        Tier::Cloud => (2, 0),
+    let node_key = |r: &Route| match r.action.placement {
+        Placement::Local => (Placement::Local, r.device),
+        Placement::Cloud => (Placement::Cloud, network.topo.home_edge(r.device)),
+        p => (p, 0),
     };
 
-    let execute = |key: (usize, usize),
+    let execute = |key: (Placement, usize),
                        model: u8,
                        batch: &[batcher::Pending],
                        flush_ms: f64,
                        routes: &BTreeMap<u64, Route>,
                        records: &mut Vec<ResponseRecord>|
      -> Result<()> {
-        let tier = Tier::from_index(key.0);
-        let node = cluster.node_for(key.1, tier);
+        let placement = key.0;
+        let node = cluster.node_for(key.1, placement);
         let net_ms: f64 = batch
             .iter()
-            .map(|p| network.path_overhead_ms(routes[&p.req_id].device, tier))
+            .map(|p| network.path_overhead_ms(routes[&p.req_id].device, placement))
             .fold(0.0, f64::max)
-            + network.queueing_ms(tier, batch.len());
+            + network.queueing_ms(placement, batch.len());
         std::thread::sleep(std::time::Duration::from_secs_f64(
             net_ms * cfg.time_scale / 1e3,
         ));
@@ -244,7 +249,7 @@ pub fn serve_trace(
         }
     }
     // End of trace: drain every residual batch at its window expiry.
-    let keys: Vec<(usize, usize)> = batchers.keys().copied().collect();
+    let keys: Vec<(Placement, usize)> = batchers.keys().copied().collect();
     for key in keys {
         let drained = batchers.get_mut(&key).map(|b| b.drain()).unwrap_or_default();
         for (model, batch) in drained {

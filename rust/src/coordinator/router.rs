@@ -4,7 +4,7 @@
 //! latest per-device decision vector (refreshed by the agent each
 //! synchronous round) and stamps requests with their target.
 
-use crate::types::{Action, Decision, DeviceId};
+use crate::types::{Action, Decision, DeviceId, Topology};
 
 #[derive(Debug, Clone)]
 pub struct Route {
@@ -22,6 +22,14 @@ pub struct Router {
 
 impl Router {
     pub fn new(decision: Decision) -> Router {
+        Router { decision }
+    }
+
+    /// Router validated against a topology: every routed placement must
+    /// name a node that exists (edge ids within range, one action per
+    /// device). Panics on a decision the node table cannot execute.
+    pub fn for_topology(decision: Decision, topo: &Topology) -> Router {
+        assert!(topo.admits(&decision), "decision outside topology");
         Router { decision }
     }
 
@@ -65,7 +73,7 @@ mod tests {
         Decision(
             (0..n)
                 .map(|i| Action {
-                    tier: Tier::from_index(i % 3),
+                    placement: Tier::from_index(i % 3),
                     model: ModelId((i % 8) as u8),
                 })
                 .collect(),
@@ -97,6 +105,28 @@ mod tests {
     #[should_panic(expected = "unknown device")]
     fn rejects_unknown_device() {
         Router::new(decision(2)).route(0, 5);
+    }
+
+    #[test]
+    fn topology_validation_accepts_and_rejects() {
+        use crate::types::{NetCond, Placement, Topology};
+        let topo = Topology::uniform(&[NetCond::Regular; 5], NetCond::Regular, 2, [1, 2, 4]);
+        let ok = Decision(
+            (0..5)
+                .map(|i| Action {
+                    placement: Placement::Edge(i % 2),
+                    model: ModelId(0),
+                })
+                .collect(),
+        );
+        let r = Router::for_topology(ok, &topo);
+        assert_eq!(r.users(), 5);
+        let bad = Decision(vec![
+            Action { placement: Placement::Edge(2), model: ModelId(0) };
+            5
+        ]);
+        let res = std::panic::catch_unwind(|| Router::for_topology(bad, &topo));
+        assert!(res.is_err(), "edge id outside topology must be rejected");
     }
 
     #[test]

@@ -62,7 +62,7 @@ pub fn fig1c(ctx: &ExpCtx) -> Result<()> {
         for tier in Tier::ALL {
             for m in ModelId::all() {
                 let env = ctx.env(Scenario::exp_a(users), AccuracyConstraint::Min, 3);
-                let d = Decision::uniform(users, Action { tier, model: m });
+                let d = Decision::uniform(users, Action { placement: tier, model: m });
                 let ms = env.expected_avg_ms(&d);
                 let acc = crate::models::info(m).top5;
                 csv.row(&[

@@ -13,15 +13,16 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
 
-use crate::agent::baseline::{sota_agent, FixedAgent};
+use crate::agent::baseline::{sota_agent_for, FixedAgent};
 use crate::agent::dqn::DqnAgent;
 use crate::agent::qlearning::QTableAgent;
 use crate::agent::{ActionSet, Agent};
 use crate::config::{Algo, Config, Hyper, Scenario};
+use crate::network::Network;
 use crate::orchestrator::Orchestrator;
 use crate::runtime::SharedRuntime;
 use crate::sim::Env;
-use crate::types::{AccuracyConstraint, Tier};
+use crate::types::{AccuracyConstraint, Tier, Topology};
 
 /// Shared context: config + lazily-loaded PJRT runtime (only DQN and the
 /// measured-mode experiments need artifacts).
@@ -43,8 +44,19 @@ impl ExpCtx {
         Ok(Arc::clone(guard.as_ref().unwrap()))
     }
 
+    /// Network for `scenario` over the configured edge count
+    /// (`[topology] edges` / `--edges`; 1 = the paper's network).
+    pub fn network(&self, scenario: Scenario) -> Network {
+        Network::with_edges(scenario, self.cfg.calibration.clone(), self.cfg.topology.edges())
+    }
+
     pub fn env(&self, scenario: Scenario, constraint: AccuracyConstraint, seed: u64) -> Env {
-        Env::new(scenario, self.cfg.calibration.clone(), constraint, seed)
+        Env::with_network(self.network(scenario), constraint, seed)
+    }
+
+    /// Topology of the configured network for `users` devices.
+    pub fn topology(&self, users: usize) -> Topology {
+        self.network(self.cfg.scenario.resized(users)).topo
     }
 
     pub fn make_agent(
@@ -53,23 +65,25 @@ impl ExpCtx {
         users: usize,
         seed: u64,
     ) -> Result<Box<dyn Agent>> {
+        let topo = self.topology(users);
         Ok(match algo {
             Algo::QLearning => Box::new(QTableAgent::new(
                 users,
                 Hyper::paper_defaults(Algo::QLearning, users),
-                ActionSet::full(),
+                ActionSet::full_for(&topo),
                 seed,
             )),
-            Algo::Sota => Box::new(sota_agent(
-                users,
+            Algo::Sota => Box::new(sota_agent_for(
+                &topo,
                 Hyper::paper_defaults(Algo::QLearning, users),
                 seed,
             )),
-            Algo::Dqn => Box::new(DqnAgent::new(
+            Algo::Dqn => Box::new(DqnAgent::for_topology(
                 users,
                 Hyper::paper_defaults(Algo::Dqn, users),
                 self.runtime()?,
                 seed,
+                &topo,
             )?),
         })
     }
@@ -103,7 +117,7 @@ impl ExpCtx {
 /// open-loop drivers.
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig1c", "fig5", "table8", "table9", "table10", "fig6", "fig7",
-    "table11", "fig8", "table12", "prediction", "traffic_sweep",
+    "table11", "fig8", "table12", "prediction", "traffic_sweep", "multi_edge",
 ];
 
 /// Dispatch an experiment by id.
@@ -123,6 +137,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "table12" => overhead::table12(ctx),
         "prediction" => overhead::prediction(ctx),
         "traffic_sweep" => traffic::traffic_sweep(ctx),
+        "multi_edge" => traffic::multi_edge(ctx),
         other => Err(anyhow!("unknown experiment '{other}' (known: {ALL:?})")),
     }
 }
@@ -153,8 +168,8 @@ mod tests {
         // unknown id errors, known ids exist in ALL
         let ctx = ExpCtx::new(Config::default());
         assert!(run("nope", &ctx).is_err());
-        // 13 paper experiments + the open-loop traffic sweep
-        assert_eq!(ALL.len(), 14);
+        // 13 paper experiments + the open-loop traffic sweep + multi_edge
+        assert_eq!(ALL.len(), 15);
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub fn fig8(ctx: &ExpCtx) -> Result<()> {
         let env = ctx.env(Scenario::exp_a(1), AccuracyConstraint::Max, 1);
         let d = crate::types::Decision::uniform(
             1,
-            crate::types::Action { tier, model: crate::types::ModelId(0) },
+            crate::types::Action { placement: tier, model: crate::types::ModelId(0) },
         );
         let with = env.expected_avg_ms(&d);
         let base = with / (1.0 + cal.monitor_overhead_frac);
@@ -90,7 +90,14 @@ pub fn prediction(ctx: &ExpCtx) -> Result<()> {
             orch.env.freeze();
             orch.env.reset_load();
             let _ = orch.train_full(steps, steps);
-            let acc = orch.prediction_accuracy(20, 0.05);
+            // On topologies past the oracle's enumeration budget no trial
+            // can be scored; report n/a instead of a misleading 0%.
+            let (acc, scored) = orch.prediction_accuracy_scored(20, 0.05);
+            let acc_label = if scored > 0 {
+                format!("{:.0}%", acc * 100.0)
+            } else {
+                "n/a (oracle declined)".to_string()
+            };
             // decide() latency (the paper's IO overhead numbers)
             let state = orch.env.encoded();
             let t0 = Instant::now();
@@ -102,13 +109,13 @@ pub fn prediction(ctx: &ExpCtx) -> Result<()> {
             csv.row(&[
                 algo.label().into(),
                 users.to_string(),
-                format!("{:.0}%", acc * 100.0),
+                acc_label.clone(),
                 format!("{ms:.4}"),
             ]);
             rows.push(vec![
                 algo.label().into(),
                 users.to_string(),
-                format!("{:.0}%", acc * 100.0),
+                acc_label,
                 format!("{:.1} µs", ms * 1e3),
             ]);
         }

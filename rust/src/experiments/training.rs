@@ -11,9 +11,9 @@ use crate::agent::transfer::{warm_start_dqn, warm_start_qtable};
 use crate::agent::{dqn::DqnAgent, qlearning::QTableAgent, ActionSet};
 use crate::config::{Algo, Hyper, Scenario};
 use crate::metrics::{render_table, Csv};
-use crate::monitor::bruteforce_complexity;
+use crate::monitor;
 use crate::orchestrator::Orchestrator;
-use crate::types::{AccuracyConstraint, ACTIONS_PER_DEVICE};
+use crate::types::AccuracyConstraint;
 
 use super::{scaled, ExpCtx};
 
@@ -121,13 +121,28 @@ pub fn fig7(ctx: &ExpCtx) -> Result<()> {
     let mut csv = Csv::new(&["algo", "init", "converged_at", "speedup"]);
     let mut rows = Vec::new();
 
+    // target quality: the oracle optimum under the target constraint.
+    // On topologies past the oracle's assignment budget there is no
+    // reference target, so the comparison is skipped instead of panicking.
+    let target_reward = {
+        let env = ctx.env(Scenario::exp_a(users), target, 704);
+        match crate::agent::bruteforce::optimal(&env, target.threshold()) {
+            Some((_, best)) => -best,
+            None => {
+                println!("  (oracle declines this topology/user count: fig7 skipped)");
+                return Ok(());
+            }
+        }
+    };
+    let topo = ctx.topology(users);
+
     // --- Q-Learning ---
     // Donor trained without constraint (Min), kept concrete so its table
     // can be exported for the warm start.
     let steps = budget(Algo::QLearning, users);
     let hyper = Hyper::paper_defaults(Algo::QLearning, users);
     let donor_agent: QTableAgent = {
-        let mut a = QTableAgent::new(users, hyper.clone(), ActionSet::full(), 701);
+        let mut a = QTableAgent::new(users, hyper.clone(), ActionSet::full_for(&topo), 701);
         let mut env = ctx.env(Scenario::exp_a(users), AccuracyConstraint::Min, 700);
         for _ in 0..steps {
             let s = env.encoded();
@@ -139,11 +154,6 @@ pub fn fig7(ctx: &ExpCtx) -> Result<()> {
         a
     };
 
-    // target quality: the oracle optimum under the target constraint
-    let target_reward = {
-        let env = ctx.env(Scenario::exp_a(users), target, 704);
-        -crate::agent::bruteforce::optimal(&env, target.threshold()).unwrap().1
-    };
     for (label, warm) in [("scratch", false), ("transfer", true)] {
         let mut hyper_run = hyper.clone();
         if warm {
@@ -151,7 +161,7 @@ pub fn fig7(ctx: &ExpCtx) -> Result<()> {
             // warm policy is exploited, not overwritten by random actions
             hyper_run.eps_start = 0.2;
         }
-        let mut agent = QTableAgent::new(users, hyper_run, ActionSet::full(), 702);
+        let mut agent = QTableAgent::new(users, hyper_run, ActionSet::full_for(&topo), 702);
         if warm {
             warm_start_qtable(&donor_agent, &mut agent);
         }
@@ -170,7 +180,7 @@ pub fn fig7(ctx: &ExpCtx) -> Result<()> {
         let steps = budget(Algo::Dqn, users);
         let hyper = Hyper::paper_defaults(Algo::Dqn, users);
         let rt = ctx.runtime()?;
-        let mut donor = DqnAgent::new(users, hyper.clone(), rt.clone(), 710)?;
+        let mut donor = DqnAgent::for_topology(users, hyper.clone(), rt.clone(), 710, &topo)?;
         {
             let mut env = ctx.env(Scenario::exp_a(users), AccuracyConstraint::Min, 711);
             for _ in 0..steps {
@@ -181,16 +191,12 @@ pub fn fig7(ctx: &ExpCtx) -> Result<()> {
                 crate::agent::Agent::learn(&mut donor, &s, &d, out.reward, &s2);
             }
         }
-        let target_reward = {
-            let env = ctx.env(Scenario::exp_a(users), target, 714);
-            -crate::agent::bruteforce::optimal(&env, target.threshold()).unwrap().1
-        };
         for (label, warm) in [("scratch", false), ("transfer", true)] {
             let mut hyper_run = hyper.clone();
             if warm {
                 hyper_run.eps_start = 0.2;
             }
-            let mut agent = DqnAgent::new(users, hyper_run, rt.clone(), 712)?;
+            let mut agent = DqnAgent::for_topology(users, hyper_run, rt.clone(), 712, &topo)?;
             if warm {
                 warm_start_dqn(&donor, &mut agent);
             }
@@ -239,7 +245,14 @@ pub fn table11(ctx: &ExpCtx) -> Result<()> {
             let ql = conv(Algo::QLearning)?;
             let dq = if have_rt { conv(Algo::Dqn)? } else { "n/a".into() };
             let sota = if c == AccuracyConstraint::Max { conv(Algo::Sota)? } else { "-".into() };
-            let bf = format!("{:.1e}", bruteforce_complexity(users, ACTIONS_PER_DEVICE));
+            // |S x A| of the topology this run actually uses (Eq. 6;
+            // reduces to the paper's single-edge column by default)
+            let topo = ctx.topology(users);
+            let bf = format!(
+                "{:.1e}",
+                monitor::state_space_size_for(users, topo.num_edges())
+                    * (topo.actions_per_device() as f64).powi(users as i32)
+            );
             csv.row(&[users.to_string(), c.label(), ql.clone(), dq.clone(), sota.clone(), bf.clone()]);
             rows.push(vec![users.to_string(), c.label(), ql, dq, sota, bf]);
         }

@@ -35,8 +35,8 @@ pub mod prelude {
     pub use crate::sim::ArrivalProcess;
     pub use crate::models::{info as model_info, top5_table, CATALOG};
     pub use crate::types::{
-        AccuracyConstraint, Action, Decision, ModelId, NetCond, Tier, ACTIONS_PER_DEVICE,
-        NUM_MODELS,
+        AccuracyConstraint, Action, Decision, ModelId, NetCond, NodeSpec, Placement, Tier,
+        Topology, ACTIONS_PER_DEVICE, NUM_MODELS,
     };
     pub use crate::util::rng::Rng;
 }

@@ -37,6 +37,14 @@ fn main() {
 fn run(args: &Args) -> Result<()> {
     let cfg = Config::load(args).map_err(|e| anyhow!(e))?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    if cfg.topology.edges_min != cfg.topology.edges_max && cmd != "experiment" {
+        return Err(anyhow!(
+            "--edges {}..{} is a sweep range (for `experiment multi_edge`); `{cmd}` needs a \
+             single edge count",
+            cfg.topology.edges_min,
+            cfg.topology.edges_max
+        ));
+    }
     match cmd {
         "experiment" => cmd_experiment(args, cfg),
         "train" => cmd_train(args, cfg),
@@ -68,6 +76,9 @@ COMMANDS:
 
 OPTIONS (global): --users N  --scenario exp-a  --seed S  --artifacts DIR
                   --config FILE  --mode sim|measured
+OPTIONS (topology): --edges K | --edges A..B   number of edge nodes the
+                  network shards over (range form drives `experiment
+                  multi_edge`; default 1 = the paper's network)
 OPTIONS (traffic): --arrival sync|poisson|mmpp  --rate R  --horizon-ms H
                   (open-loop DES evaluation; see `experiment traffic_sweep`)",
         ids = experiments::ALL.join(",")
@@ -132,7 +143,7 @@ fn cmd_train(args: &Args, cfg: Config) -> Result<()> {
             let mut concrete = eeco::agent::qlearning::QTableAgent::new(
                 cfg.users,
                 cfg.hyper.clone(),
-                eeco::agent::ActionSet::full(),
+                eeco::agent::ActionSet::full_for(&ctx.topology(cfg.users)),
                 cfg.seed + 1,
             );
             let mut env2 = ctx.env(cfg.scenario.clone(), cfg.constraint, cfg.seed);
@@ -178,9 +189,13 @@ fn cmd_serve(args: &Args, cfg: Config) -> Result<()> {
     let models: Vec<ModelId> = decision.0.iter().map(|a| a.model).collect();
     rt.warmup_serving(&models)?;
 
-    let cluster = eeco::cluster::Cluster::new(cfg.users, &cfg.calibration, rt);
-    let network = eeco::network::Network::new(cfg.scenario.clone(), cfg.calibration.clone());
-    let router = Router::new(decision);
+    let network = eeco::network::Network::with_edges(
+        cfg.scenario.clone(),
+        cfg.calibration.clone(),
+        cfg.topology.edges(),
+    );
+    let cluster = eeco::cluster::Cluster::for_topology(&network.topo, rt);
+    let router = Router::for_topology(decision, &network.topo);
     let mut wl = WorkloadGen::new(Arrival::Periodic { period_ms: 1000.0 }, cfg.users, cfg.seed);
     let serve_cfg = ServeConfig::default();
 

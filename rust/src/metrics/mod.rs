@@ -224,7 +224,7 @@ mod tests {
     fn rec(ms: f64) -> RoundRecord {
         RoundRecord {
             step: 0,
-            decision: Decision(vec![Action { tier: Tier::Local, model: ModelId(0) }]),
+            decision: Decision(vec![Action { placement: Tier::Local, model: ModelId(0) }]),
             response_ms: vec![ms],
             avg_response_ms: ms,
             avg_accuracy: 89.9,

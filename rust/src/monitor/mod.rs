@@ -2,8 +2,14 @@
 //! Table 3 discretization, and the two state encodings the agents consume —
 //! an exact integer key (Q-table rows) and a normalized f32 vector
 //! (DQN input, Eq. 3 ordering).
+//!
+//! Snapshots come in two concrete shapes: [`SystemState`] is the paper's
+//! fixed single-edge view, [`TopoState`] the N-edge generalization. Both
+//! implement [`StateView`], which is what the latency model, the DES core
+//! and the encoder consume — so every consumer works for any edge count,
+//! and the single-edge path stays bit-identical to the seed.
 
-use crate::types::NetCond;
+use crate::types::{NetCond, Topology};
 
 /// Raw utilization snapshot of one node, as the Resource Monitoring
 /// service would report it (CPU %, memory %, link condition).
@@ -23,7 +29,19 @@ impl NodeState {
     }
 }
 
-/// Full system snapshot: Eq. 3's S_tau before discretization.
+/// Read-only view of the per-node background state of an N-edge topology.
+/// Implemented by [`SystemState`] (one edge, the paper's shape) and
+/// [`TopoState`] (any edge count).
+pub trait StateView {
+    fn users(&self) -> usize;
+    fn num_edges(&self) -> usize;
+    fn device_node(&self, i: usize) -> &NodeState;
+    fn edge_node(&self, k: usize) -> &NodeState;
+    fn cloud_node(&self) -> &NodeState;
+}
+
+/// Full system snapshot in the paper's fixed single-edge shape: Eq. 3's
+/// S_tau before discretization.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemState {
     pub edge: NodeState,
@@ -34,6 +52,78 @@ pub struct SystemState {
 impl SystemState {
     pub fn users(&self) -> usize {
         self.devices.len()
+    }
+}
+
+impl StateView for SystemState {
+    fn users(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn num_edges(&self) -> usize {
+        1
+    }
+
+    fn device_node(&self, i: usize) -> &NodeState {
+        &self.devices[i]
+    }
+
+    fn edge_node(&self, k: usize) -> &NodeState {
+        // hard assert: a multi-edge model paired with the single-edge
+        // state shape must fail loudly, not silently read edge 0
+        assert_eq!(k, 0, "SystemState has exactly one edge");
+        &self.edge
+    }
+
+    fn cloud_node(&self) -> &NodeState {
+        &self.cloud
+    }
+}
+
+/// System snapshot over an explicit [`Topology`]: one [`NodeState`] per
+/// edge node. The canonical state type for multi-edge networks; with one
+/// edge it encodes identically to [`SystemState`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TopoState {
+    pub edges: Vec<NodeState>,
+    pub cloud: NodeState,
+    pub devices: Vec<NodeState>,
+}
+
+impl TopoState {
+    /// All nodes idle, link conditions taken from the topology table.
+    pub fn idle(topo: &Topology) -> TopoState {
+        TopoState {
+            edges: topo.edges.iter().map(|e| NodeState::idle(e.cond)).collect(),
+            cloud: NodeState::idle(topo.cloud.cond),
+            devices: topo.devices.iter().map(|d| NodeState::idle(d.cond)).collect(),
+        }
+    }
+
+    pub fn users(&self) -> usize {
+        self.devices.len()
+    }
+}
+
+impl StateView for TopoState {
+    fn users(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    fn device_node(&self, i: usize) -> &NodeState {
+        &self.devices[i]
+    }
+
+    fn edge_node(&self, k: usize) -> &NodeState {
+        &self.edges[k]
+    }
+
+    fn cloud_node(&self) -> &NodeState {
+        &self.cloud
     }
 }
 
@@ -65,31 +155,38 @@ pub struct EncodedState {
     /// Exact mixed-radix key over the Table 3 levels (Q-table row id).
     pub key: u64,
     /// Normalized per-component values in Eq. 3 order:
-    /// [P^E, M^E, B^E, P^C, M^C, B^C, P^S1, M^S1, B^S1, ...].
+    /// [P^E1, M^E1, B^E1, ..., P^C, M^C, B^C, P^S1, M^S1, B^S1, ...].
     pub vec: Vec<f32>,
 }
 
-/// Encode a snapshot per Table 3. The DQN vector carries the *discretized*
+/// Encode a snapshot per Table 3: each edge node (in id order), then the
+/// cloud, then the end devices. The DQN vector carries the *discretized*
 /// levels (normalized to [0,1]) so both agents see identical information,
-/// as in the paper.
-pub fn encode(s: &SystemState) -> EncodedState {
+/// as in the paper. For a single edge this is byte-identical to the
+/// pre-topology encoding.
+pub fn encode<S: StateView>(s: &S) -> EncodedState {
     let mut key: u64 = 0;
-    let mut vec = Vec::with_capacity(3 * (s.devices.len() + 2));
+    let mut vec = Vec::with_capacity(3 * (s.users() + 1 + s.num_edges()));
     let mut push = |key: &mut u64, vec: &mut Vec<f32>, level: usize, radix: usize| {
         debug_assert!(level < radix);
         *key = *key * radix as u64 + level as u64;
         vec.push(level as f32 / (radix - 1) as f32);
     };
-    // Edge
-    push(&mut key, &mut vec, cpu_level_ec(s.edge.cpu), CPU_LEVELS_EC);
-    push(&mut key, &mut vec, binary_level(s.edge.mem), BINARY);
-    push(&mut key, &mut vec, cond_level(s.edge.cond), BINARY);
+    // Edge nodes
+    for k in 0..s.num_edges() {
+        let e = s.edge_node(k);
+        push(&mut key, &mut vec, cpu_level_ec(e.cpu), CPU_LEVELS_EC);
+        push(&mut key, &mut vec, binary_level(e.mem), BINARY);
+        push(&mut key, &mut vec, cond_level(e.cond), BINARY);
+    }
     // Cloud
-    push(&mut key, &mut vec, cpu_level_ec(s.cloud.cpu), CPU_LEVELS_EC);
-    push(&mut key, &mut vec, binary_level(s.cloud.mem), BINARY);
-    push(&mut key, &mut vec, cond_level(s.cloud.cond), BINARY);
+    let c = s.cloud_node();
+    push(&mut key, &mut vec, cpu_level_ec(c.cpu), CPU_LEVELS_EC);
+    push(&mut key, &mut vec, binary_level(c.mem), BINARY);
+    push(&mut key, &mut vec, cond_level(c.cond), BINARY);
     // End devices
-    for d in &s.devices {
+    for i in 0..s.users() {
+        let d = s.device_node(i);
         push(&mut key, &mut vec, binary_level(d.cpu), BINARY);
         push(&mut key, &mut vec, binary_level(d.mem), BINARY);
         push(&mut key, &mut vec, cond_level(d.cond), BINARY);
@@ -97,9 +194,15 @@ pub fn encode(s: &SystemState) -> EncodedState {
     EncodedState { key, vec }
 }
 
-/// |State| per Eq. 5: (2*2*2)^N * (9*2*2)^2.
+/// |State| per Eq. 5 for the paper's single-edge network:
+/// (2*2*2)^N * (9*2*2)^2.
 pub fn state_space_size(users: usize) -> f64 {
-    8f64.powi(users as i32) * 36f64.powi(2)
+    state_space_size_for(users, 1)
+}
+
+/// |State| generalized to `edges` edge nodes: 8^N * 36^(edges + 1).
+pub fn state_space_size_for(users: usize, edges: usize) -> f64 {
+    8f64.powi(users as i32) * 36f64.powi(edges as i32 + 1)
 }
 
 /// |State x Action| per Eq. 6 (brute-force complexity, Table 11 column).
@@ -182,5 +285,28 @@ mod tests {
         // to ~1e12 (5 users); the exponential growth is the claim.
         assert!(bruteforce_complexity(5, 24) / bruteforce_complexity(3, 24) > 1e3);
         assert_eq!(state_space_size(5), 8f64.powi(5) * 1296.0);
+    }
+
+    #[test]
+    fn single_edge_topo_state_encodes_like_system_state() {
+        let s = state(4);
+        let t = TopoState {
+            edges: vec![s.edge],
+            cloud: s.cloud,
+            devices: s.devices.clone(),
+        };
+        assert_eq!(encode(&s), encode(&t));
+    }
+
+    #[test]
+    fn multi_edge_encoding_grows_and_separates_edges() {
+        let topo = Topology::uniform(&[R, W, R], W, 3, [1, 2, 4]);
+        let mut t = TopoState::idle(&topo);
+        let e = encode(&t);
+        assert_eq!(e.vec.len(), 3 * (3 + 1 + 3));
+        assert!((e.key as f64) < state_space_size_for(3, 3));
+        let k0 = e.key;
+        t.edges[2].cpu = 0.9; // distinct edge -> distinct key
+        assert_ne!(encode(&t).key, k0);
     }
 }

@@ -1,16 +1,25 @@
 //! Network substrate: per-link conditions (Table 5 scenarios), message
-//! costs (Table 12), path overheads per offloading target, and shared-link
+//! costs (Table 12), path overheads per placement, and shared-link
 //! queueing for simultaneous uploads.
 //!
-//! Topology (paper Fig 4): each end device S_i has one uplink to the edge;
-//! the edge has one uplink to the cloud. Every request is orchestrated by
-//! the cloud-hosted Intelligent Orchestrator, so even locally-executed
-//! inferences pay the (small) update + decision control messages — but
-//! only offloaded ones pay the image-upload request cost, keeping device
-//! performance network-independent as the paper observes in §3.1.
+//! # Topology
+//!
+//! The network is an explicit [`Topology`] node table: each end device S_i
+//! has one uplink to its edge layer; each edge node E_k has one uplink to
+//! the cloud and one ingress link that serializes the uploads traversing
+//! it. Devices are statically homed (`Topology::home_edge`), so cloud
+//! traffic from S_i always rides edge `i % k`'s uplink. The paper's
+//! network (Fig 4) is the single-edge instance, which [`Network::new`]
+//! builds by default and which reproduces every Table 12 figure exactly.
+//!
+//! Every request is orchestrated by the cloud-hosted Intelligent
+//! Orchestrator, so even locally-executed inferences pay the (small)
+//! update + decision control messages — but only offloaded ones pay the
+//! image-upload request cost, keeping device performance
+//! network-independent as the paper observes in §3.1.
 
 use crate::config::{Calibration, Scenario};
-use crate::types::{DeviceId, NetCond, Tier};
+use crate::types::{DeviceId, NetCond, Placement, Topology};
 
 /// The three framework messages of Table 12.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,38 +43,51 @@ impl MsgKind {
     }
 }
 
-/// Static network model for one scenario.
+/// Static network model for one scenario over an explicit topology.
 #[derive(Debug, Clone)]
 pub struct Network {
     pub scenario: Scenario,
     pub cal: Calibration,
+    pub topo: Topology,
 }
 
 impl Network {
+    /// The paper's single-edge network for `scenario`.
     pub fn new(scenario: Scenario, cal: Calibration) -> Network {
-        Network { scenario, cal }
+        Network::with_edges(scenario, cal, 1)
+    }
+
+    /// Same scenario sharded over `edges` identical edge nodes (every
+    /// edge->cloud uplink carries the scenario's E-column condition).
+    pub fn with_edges(scenario: Scenario, cal: Calibration, edges: usize) -> Network {
+        let topo =
+            Topology::uniform(&scenario.device_conds, scenario.edge_cond, edges, cal.vcpus);
+        Network { scenario, cal, topo }
     }
 
     pub fn users(&self) -> usize {
         self.scenario.users()
     }
 
-    /// Fixed message overhead for device `i` executing at `tier`.
+    /// Fixed message overhead for device `i` executing at `p`.
     ///
     /// Local execution never uploads the image (paper §3.1: "performance
     /// of the user end device is independent of the network connection"),
     /// so it pays only the update + decision control messages. Edge
     /// execution pays the full request over the device link; cloud
-    /// execution additionally pays the full set over the edge->cloud hop.
-    pub fn path_overhead_ms(&self, device: DeviceId, tier: Tier) -> f64 {
-        let dev = self.scenario.device_cond(device);
+    /// execution additionally pays the full set over the home edge's
+    /// edge->cloud hop.
+    pub fn path_overhead_ms(&self, device: DeviceId, p: Placement) -> f64 {
+        // the topology table is the single source of truth for link
+        // conditions (scenario is its constructor input, kept for naming)
+        let dev = self.topo.device_cond(device);
         let ctl = MsgKind::Update.cost_ms(&self.cal, dev)
             + MsgKind::Decision.cost_ms(&self.cal, dev);
-        match tier {
-            Tier::Local => ctl,
-            Tier::Edge => ctl + MsgKind::Request.cost_ms(&self.cal, dev),
-            Tier::Cloud => {
-                let e = self.scenario.edge_cond;
+        match p {
+            Placement::Local => ctl,
+            Placement::Edge(_) => ctl + MsgKind::Request.cost_ms(&self.cal, dev),
+            Placement::Cloud => {
+                let e = self.topo.edge_cond(self.topo.home_edge(device));
                 ctl + MsgKind::Request.cost_ms(&self.cal, dev)
                     + MsgKind::Request.cost_ms(&self.cal, e)
                     + MsgKind::Update.cost_ms(&self.cal, e)
@@ -74,15 +96,16 @@ impl Network {
         }
     }
 
-    /// Average extra queueing when `k_offloaded` requests traverse the
-    /// shared edge ingress simultaneously: the j-th of k serialized
+    /// Average extra queueing when `k_shared` requests traverse the same
+    /// edge-ingress link simultaneously: the j-th of k serialized
     /// transfers waits (j-1) slots, so the expected extra is
-    /// (k-1)/2 * link_queue_ms. Zero for local execution.
-    pub fn queueing_ms(&self, tier: Tier, k_offloaded: usize) -> f64 {
-        if tier == Tier::Local || k_offloaded <= 1 {
+    /// (k-1)/2 * link_queue_ms. Zero for local execution, which bypasses
+    /// the ingress entirely.
+    pub fn queueing_ms(&self, p: Placement, k_shared: usize) -> f64 {
+        if p == Placement::Local || k_shared <= 1 {
             return 0.0;
         }
-        (k_offloaded.saturating_sub(1)) as f64 / 2.0 * self.cal.link_queue_ms
+        (k_shared.saturating_sub(1)) as f64 / 2.0 * self.cal.link_queue_ms
     }
 
     /// The weak-link packet delta the paper injects (20 ms per egress
@@ -94,7 +117,7 @@ impl Network {
     /// Broadcast cost of one resource-monitoring round for device `i`
     /// (Fig 8 overhead accounting).
     pub fn monitor_broadcast_ms(&self, device: DeviceId) -> f64 {
-        MsgKind::Update.cost_ms(&self.cal, self.scenario.device_cond(device))
+        MsgKind::Update.cost_ms(&self.cal, self.topo.device_cond(device))
     }
 }
 
@@ -102,6 +125,7 @@ impl Network {
 mod tests {
     use super::*;
     use crate::config::Scenario;
+    use crate::types::Tier;
 
     fn net(name: &str, users: usize) -> Network {
         Network::new(Scenario::by_name(name, users).unwrap(), Calibration::default())
@@ -122,7 +146,7 @@ mod tests {
         // local: control messages only (1.4 ms regular)
         assert!((n.path_overhead_ms(0, Tier::Local) - 1.4).abs() < 1e-9);
         // edge: + request upload = Table 12 total (21.4 ms)
-        assert!((n.path_overhead_ms(0, Tier::Edge) - 21.4).abs() < 1e-9);
+        assert!((n.path_overhead_ms(0, Tier::Edge(0)) - 21.4).abs() < 1e-9);
         // cloud: + the full edge->cloud hop (another 21.4)
         assert!((n.path_overhead_ms(0, Tier::Cloud) - 42.8).abs() < 1e-9);
     }
@@ -138,14 +162,14 @@ mod tests {
     #[test]
     fn weak_device_link_dominates() {
         let n = net("exp-d", 5);
-        assert!((n.path_overhead_ms(0, Tier::Edge) - 141.0).abs() < 1e-9);
-        assert!(n.path_overhead_ms(0, Tier::Cloud) > n.path_overhead_ms(0, Tier::Edge));
+        assert!((n.path_overhead_ms(0, Tier::Edge(0)) - 141.0).abs() < 1e-9);
+        assert!(n.path_overhead_ms(0, Tier::Cloud) > n.path_overhead_ms(0, Tier::Edge(0)));
     }
 
     #[test]
     fn mixed_scenario_per_device() {
         let n = net("exp-b", 5); // R W R W R, edge W
-        assert!(n.path_overhead_ms(0, Tier::Edge) < n.path_overhead_ms(1, Tier::Edge));
+        assert!(n.path_overhead_ms(0, Tier::Edge(0)) < n.path_overhead_ms(1, Tier::Edge(0)));
         // cloud path picks up the weak edge hop even for regular devices
         assert!((n.path_overhead_ms(0, Tier::Cloud) - (21.4 + 141.0)).abs() < 1e-9);
     }
@@ -153,14 +177,44 @@ mod tests {
     #[test]
     fn queueing_grows_with_offload_count() {
         let n = net("exp-a", 5);
-        assert_eq!(n.queueing_ms(Tier::Edge, 1), 0.0);
+        assert_eq!(n.queueing_ms(Tier::Edge(0), 1), 0.0);
         assert_eq!(n.queueing_ms(Tier::Local, 5), 0.0);
-        assert!(n.queueing_ms(Tier::Edge, 5) > n.queueing_ms(Tier::Edge, 2));
+        assert!(n.queueing_ms(Tier::Edge(0), 5) > n.queueing_ms(Tier::Edge(0), 2));
     }
 
     #[test]
     fn weak_delta_is_paper_emulation() {
         let n = net("exp-a", 1);
         assert_eq!(n.weak_delta_ms(), 117.0); // 137 - 20
+    }
+
+    #[test]
+    fn multi_edge_topology_homes_devices_round_robin() {
+        let n = Network::with_edges(Scenario::exp_a(6), Calibration::default(), 3);
+        assert_eq!(n.topo.num_edges(), 3);
+        assert_eq!(n.topo.home_edge(0), 0);
+        assert_eq!(n.topo.home_edge(5), 2);
+        // any edge placement pays the same device uplink cost
+        assert_eq!(
+            n.path_overhead_ms(0, Placement::Edge(0)),
+            n.path_overhead_ms(0, Placement::Edge(2))
+        );
+        // cloud still pays both hops
+        assert!(n.path_overhead_ms(0, Placement::Cloud) > n.path_overhead_ms(0, Placement::Edge(1)));
+    }
+
+    #[test]
+    fn single_edge_topology_mirrors_scenario() {
+        let n = net("exp-b", 5);
+        assert_eq!(n.topo.users(), 5);
+        assert_eq!(n.topo.num_edges(), 1);
+        for i in 0..5 {
+            assert_eq!(n.topo.device_cond(i), n.scenario.device_cond(i));
+        }
+        assert_eq!(n.topo.edge_cond(0), n.scenario.edge_cond);
+        assert_eq!(
+            [n.topo.devices[0].vcpus, n.topo.edges[0].vcpus, n.topo.cloud.vcpus],
+            n.cal.vcpus
+        );
     }
 }

@@ -55,40 +55,18 @@ impl Orchestrator {
         }
     }
 
-    /// Train until `max_steps` or convergence (rolling-window mean of the
-    /// reward stable within 1% for `patience` windows). `curve_every`
-    /// controls the sampling density of the returned curve.
-    pub fn train(&mut self, max_steps: usize, curve_every: usize) -> TrainResult {
-        let window = (max_steps / 100).clamp(10, 2000);
-        let mut conv = Convergence::new(window, 0.01, 3);
-        let mut curve = Vec::new();
-        let mut acc = 0.0;
-        let mut count = 0usize;
-        for step in 0..max_steps {
-            let rec = self.round(true);
-            conv.push(rec.reward);
-            acc += rec.reward;
-            count += 1;
-            if (step + 1) % curve_every.max(1) == 0 {
-                curve.push((step + 1, acc / count as f64));
-                acc = 0.0;
-                count = 0;
-            }
-            if conv.is_converged() && step > 2 * window {
-                // keep training to max_steps only if caller wants full
-                // curves; for Table 11 we stop at convergence.
-                break;
-            }
-        }
-        TrainResult {
-            steps: self.agent.steps(),
-            converged_at: conv.converged_at,
-            curve,
-        }
-    }
-
-    /// Train for exactly `steps` rounds (full curves for Fig. 6/7).
-    pub fn train_full(&mut self, steps: usize, curve_every: usize) -> TrainResult {
+    /// The one training loop: run up to `steps` exploring rounds, sample
+    /// the windowed average-reward curve every `curve_every` rounds, and —
+    /// when `stop_at_convergence` — break once the rolling-window mean of
+    /// the reward is stable within 1% for the patience window (Table 11's
+    /// stopping rule). [`Orchestrator::train`] and
+    /// [`Orchestrator::train_full`] are the two calling conventions.
+    fn train_loop(
+        &mut self,
+        steps: usize,
+        curve_every: usize,
+        stop_at_convergence: bool,
+    ) -> TrainResult {
         let window = (steps / 100).clamp(10, 2000);
         let mut conv = Convergence::new(window, 0.01, 3);
         let mut curve = Vec::new();
@@ -104,8 +82,23 @@ impl Orchestrator {
                 acc = 0.0;
                 count = 0;
             }
+            if stop_at_convergence && conv.is_converged() && step > 2 * window {
+                break;
+            }
         }
         TrainResult { steps: self.agent.steps(), converged_at: conv.converged_at, curve }
+    }
+
+    /// Train until `max_steps` or convergence (rolling-window mean of the
+    /// reward stable within 1% for `patience` windows). `curve_every`
+    /// controls the sampling density of the returned curve.
+    pub fn train(&mut self, max_steps: usize, curve_every: usize) -> TrainResult {
+        self.train_loop(max_steps, curve_every, true)
+    }
+
+    /// Train for exactly `steps` rounds (full curves for Fig. 6/7).
+    pub fn train_full(&mut self, steps: usize, curve_every: usize) -> TrainResult {
+        self.train_loop(steps, curve_every, false)
     }
 
     /// Greedy evaluation over `rounds` (no exploration, no learning).
@@ -158,14 +151,30 @@ impl Orchestrator {
     /// objective value over `trials` evolving states (§6.1: the paper
     /// reports 100% after convergence). Matching is by expected average
     /// response (distinct decisions can tie exactly).
+    ///
+    /// Trials where the oracle declines to score (instances past its
+    /// enumeration budget, see [`bruteforce::optimal`]) are skipped rather
+    /// than counted as misses; the returned rate is over scored trials
+    /// only, and 0.0 — never NaN — when nothing could be scored. Callers
+    /// that must distinguish "0% hit-rate" from "nothing scorable" use
+    /// [`Orchestrator::prediction_accuracy_scored`].
     pub fn prediction_accuracy(&mut self, trials: usize, tol: f64) -> f64 {
+        self.prediction_accuracy_scored(trials, tol).0
+    }
+
+    /// [`Orchestrator::prediction_accuracy`] plus how many of the
+    /// `trials` the oracle actually scored — 0 scored means the rate
+    /// carries no information (the instance is past the oracle budget).
+    pub fn prediction_accuracy_scored(&mut self, trials: usize, tol: f64) -> (f64, usize) {
         let mut hits = 0usize;
+        let mut scored = 0usize;
         for _ in 0..trials {
             let state = self.env.encoded();
             let decision = self.agent.decide(&state, false);
             let ours = self.env.expected_avg_ms(&decision);
             let acc_ok = self.env.accuracy_of(&decision) > self.env.threshold;
             if let Some((_, best)) = bruteforce::optimal(&self.env, self.env.threshold) {
+                scored += 1;
                 if acc_ok && (ours - best) / best <= tol {
                     hits += 1;
                 }
@@ -173,7 +182,10 @@ impl Orchestrator {
             // advance dynamics by actually executing the chosen decision
             self.env.step(&decision);
         }
-        hits as f64 / trials as f64
+        if scored == 0 {
+            return (0.0, 0);
+        }
+        (hits as f64 / scored as f64, scored)
     }
 }
 
@@ -286,6 +298,38 @@ mod tests {
         assert!(m.response.p95_ms <= m.response.p99_ms);
         assert!(m.throughput_rps > 0.0);
         assert_eq!(m.decision.n_users(), users);
+    }
+
+    #[test]
+    fn prediction_accuracy_skips_declined_oracle_and_never_nans() {
+        // 8 users: past the oracle's enumeration budget, every trial is
+        // declined -> 0.0 over zero scored trials, not NaN.
+        let users = 8;
+        let mut o = Orchestrator::new(env(users, AccuracyConstraint::Min), ql(users));
+        let acc = o.prediction_accuracy(3, 0.02);
+        assert_eq!(acc, 0.0);
+        assert!(acc.is_finite());
+        // the scored count disambiguates "0% hit-rate" from "unscorable"
+        assert_eq!(o.prediction_accuracy_scored(3, 0.02), (0.0, 0));
+        // zero trials is also defined
+        let mut o2 = Orchestrator::new(env(1, AccuracyConstraint::Min), ql(1));
+        assert_eq!(o2.prediction_accuracy(0, 0.02), 0.0);
+    }
+
+    #[test]
+    fn train_full_runs_exact_budget_train_may_stop_early() {
+        let mut o = Orchestrator::new(env(1, AccuracyConstraint::Min), ql(1));
+        let full = o.train_full(500, 100);
+        assert_eq!(full.steps, 500);
+        assert_eq!(full.curve.len(), 5);
+        // `train` shares the loop but may stop at convergence
+        let mut o2 = Orchestrator::new(env(1, AccuracyConstraint::Min), ql(1));
+        o2.env.freeze();
+        let early = o2.train(20_000, 1000);
+        assert!(early.steps <= 20_000);
+        if let Some(at) = early.converged_at {
+            assert!(at <= early.steps);
+        }
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Discrete-event simulation core: a binary-heap event queue over virtual
-//! time driving per-node multi-server FIFO queues.
+//! time driving per-node multi-server FIFO queues, laid out from the
+//! network's [`Topology`](crate::types::Topology) (any number of edge
+//! nodes).
 //!
 //! # Virtual-clock model
 //!
@@ -15,22 +17,25 @@
 //! # Request lifecycle (open-loop mode)
 //!
 //! ```text
-//! arrival --(path_overhead_ms: Table 12 messages)--> [shared edge ingress]
-//!         --(seize; holds the link for link_queue_ms)--> [compute node]
-//!         --(FIFO over the node's vCPU servers, Table 6 counts)--> depart
+//! arrival --(path_overhead_ms: Table 12 messages)--> [ingress link of the
+//!         target's edge] --(seize; holds the link for link_queue_ms)-->
+//!         [compute node] --(FIFO over the node's vCPU servers)--> depart
 //! ```
 //!
-//! - The **ingress link** is a single server that each offloaded request
-//!   holds for `link_queue_ms` while being forwarded immediately: the j-th
-//!   of k simultaneous uploads therefore waits (j-1) slots, whose
-//!   expectation (k-1)/2 x `link_queue_ms` is exactly the closed-form
-//!   `Network::queueing_ms` the synchronous model charges. Local execution
-//!   bypasses it.
-//! - **Compute nodes** (one per end device, one edge, one cloud) are
-//!   multi-server FIFO queues with `Calibration::vcpus` servers. Service
-//!   demand is [`ResponseModel::single_stream_service_ms`] — the same
-//!   calibrated law as the synchronous round, minus its analytic
-//!   contention term, because here contention *is* the queue.
+//! - Each edge node owns one **ingress link**: a single server that each
+//!   offloaded request holds for `link_queue_ms` while being forwarded
+//!   immediately. The j-th of k simultaneous uploads on one link therefore
+//!   waits (j-1) slots, whose expectation (k-1)/2 x `link_queue_ms` is
+//!   exactly the closed-form `Network::queueing_ms` the synchronous model
+//!   charges per ingress. Local execution bypasses the links; cloud-bound
+//!   requests ride their device's home-edge link
+//!   ([`Topology::ingress_edge`](crate::types::Topology::ingress_edge)).
+//! - **Compute nodes** (one per end device, one per edge, one cloud) are
+//!   multi-server FIFO queues with the topology's per-node vCPU counts
+//!   (Table 6 by default). Service demand is
+//!   [`ResponseModel::single_stream_service_ms`] — the same calibrated law
+//!   as the synchronous round, minus its analytic contention term, because
+//!   here contention *is* the queue.
 //!
 //! # Synchronous-round mode
 //!
@@ -45,10 +50,10 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
 
-use crate::monitor::SystemState;
-use crate::sim::latency::ResponseModel;
+use crate::monitor::StateView;
+use crate::sim::latency::{ResponseModel, RoundCtx};
 use crate::sim::workload::Request;
-use crate::types::{Action, Decision, Tier};
+use crate::types::{Action, Decision, Placement};
 use crate::util::rng::Rng;
 
 /// One finished request with its per-component latency breakdown.
@@ -60,7 +65,7 @@ pub struct CompletedRequest {
     pub arrival_ms: f64,
     /// Fixed network path overhead (control + upload messages).
     pub path_ms: f64,
-    /// Wait for the shared edge ingress link (0 for local execution).
+    /// Wait for the target edge's ingress link (0 for local execution).
     pub link_wait_ms: f64,
     /// Wait in the compute node's FIFO before a vCPU was free.
     pub queue_ms: f64,
@@ -112,10 +117,11 @@ impl DesOutcome {
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum EventKind {
-    /// Request reaches a node's queue (ingress or compute).
+    /// Request reaches a node's queue (ingress pseudo-node or compute).
     Join { node: usize, req: usize },
-    /// One ingress hold expires; the link can admit the next upload.
-    LinkFree,
+    /// One hold on edge `link`'s ingress expires; it can admit the next
+    /// upload.
+    LinkFree { link: usize },
     /// Compute service finishes for `req` on `node`.
     Finish { node: usize, req: usize },
 }
@@ -183,42 +189,49 @@ struct InFlight {
 /// Each request executes the action the (frozen) `decision` assigns to its
 /// device — the policy snapshot an orchestrator under evaluation installed.
 /// `state` is the background-load snapshot service times are computed
-/// under, and `noise_seed` drives the multiplicative log-normal service
-/// noise (sigma from the calibration; pass the calibration's
+/// under (any [`StateView`] whose edge count matches the model's
+/// topology), and `noise_seed` drives the multiplicative log-normal
+/// service noise (sigma from the calibration; pass the calibration's
 /// `noise_sigma = 0` via a custom [`crate::config::Calibration`] to
 /// disable it).
-pub fn run_open_loop(
+pub fn run_open_loop<S: StateView>(
     model: &ResponseModel,
-    state: &SystemState,
+    state: &S,
     decision: &Decision,
     trace: &[Request],
     horizon_ms: f64,
     noise_seed: u64,
 ) -> DesOutcome {
     let users = state.users();
+    let topo = &model.net.topo;
     assert_eq!(decision.n_users(), users, "decision arity vs users");
+    assert_eq!(topo.users(), users, "topology arity vs state");
+    assert_eq!(topo.num_edges(), state.num_edges(), "topology edges vs state");
+    assert!(topo.admits(decision), "decision outside topology");
     debug_assert!(
         trace.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
         "trace must be time-ordered"
     );
 
-    // Node layout: [0, users) per-device compute, users = edge,
-    // users + 1 = cloud. The shared ingress link is handled separately.
+    // Node layout: [0, users) per-device compute, [users, users + E) the
+    // edge nodes, users + E the cloud. Each edge's ingress link is
+    // addressed as a pseudo-node after the compute nodes.
     let cal = &model.net.cal;
-    let mut nodes: Vec<ServerQueue> = (0..users)
-        .map(|_| ServerQueue::new(cal.vcpus[Tier::Local.index()]))
-        .collect();
-    nodes.push(ServerQueue::new(cal.vcpus[Tier::Edge.index()]));
-    nodes.push(ServerQueue::new(cal.vcpus[Tier::Cloud.index()]));
-    let mut link = ServerQueue::new(1);
+    let num_edges = topo.num_edges();
+    let mut nodes: Vec<ServerQueue> =
+        (0..users).map(|i| ServerQueue::new(topo.devices[i].vcpus)).collect();
+    for e in &topo.edges {
+        nodes.push(ServerQueue::new(e.vcpus));
+    }
+    nodes.push(ServerQueue::new(topo.cloud.vcpus));
+    let mut links: Vec<ServerQueue> = (0..num_edges).map(|_| ServerQueue::new(1)).collect();
 
-    let compute_node = |device: usize, tier: Tier| match tier {
-        Tier::Local => device,
-        Tier::Edge => users,
-        Tier::Cloud => users + 1,
+    let compute_node = |device: usize, p: Placement| match p {
+        Placement::Local => device,
+        Placement::Edge(j) => users + j,
+        Placement::Cloud => users + num_edges,
     };
-    // Ingress is addressed as a pseudo-node after the compute nodes.
-    let ingress = users + 2;
+    let ingress_base = users + num_edges + 1;
 
     let mut rng = Rng::new(noise_seed);
     let sigma = cal.noise_sigma;
@@ -234,7 +247,7 @@ pub fn run_open_loop(
     let mut flights: Vec<InFlight> = Vec::with_capacity(trace.len());
     for r in trace {
         let action = decision.0[r.device];
-        let path_ms = model.net.path_overhead_ms(r.device, action.tier);
+        let path_ms = model.net.path_overhead_ms(r.device, action.placement);
         let idx = flights.len();
         flights.push(InFlight {
             id: r.id,
@@ -248,10 +261,9 @@ pub fn run_open_loop(
             queue_ms: 0.0,
             service_ms: 0.0,
         });
-        let target = if action.tier == Tier::Local {
-            compute_node(r.device, Tier::Local)
-        } else {
-            ingress
+        let target = match topo.ingress_edge(r.device, action.placement) {
+            None => compute_node(r.device, Placement::Local),
+            Some(link) => ingress_base + link,
         };
         push(&mut heap, &mut seq, r.arrival_ms + path_ms, EventKind::Join { node: target, req: idx });
     }
@@ -268,28 +280,41 @@ pub fn run_open_loop(
         out.makespan_ms = out.makespan_ms.max(ev.time);
         out.event_times.push(ev.time);
         match ev.kind {
-            EventKind::Join { node, req } if node == ingress => {
+            EventKind::Join { node, req } if node >= ingress_base => {
+                let link_id = node - ingress_base;
                 flights[req].link_enq_ms = ev.time;
+                let link = &mut links[link_id];
                 if link.busy < link.servers {
                     link.busy += 1;
-                    // Forwarded immediately; the hold models the shared
+                    // Forwarded immediately; the hold models the edge's
                     // uplink serializing simultaneous transfers.
-                    push(&mut heap, &mut seq, ev.time + cal.link_queue_ms, EventKind::LinkFree);
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        ev.time + cal.link_queue_ms,
+                        EventKind::LinkFree { link: link_id },
+                    );
                     let f = &flights[req];
-                    let target = compute_node(f.device, f.action.tier);
+                    let target = compute_node(f.device, f.action.placement);
                     push(&mut heap, &mut seq, ev.time, EventKind::Join { node: target, req });
                 } else {
                     link.waiting.push_back(req);
                 }
             }
-            EventKind::LinkFree => {
+            EventKind::LinkFree { link: link_id } => {
+                let link = &mut links[link_id];
                 link.busy -= 1;
                 if let Some(req) = link.waiting.pop_front() {
                     link.busy += 1;
                     flights[req].link_wait_ms = ev.time - flights[req].link_enq_ms;
-                    push(&mut heap, &mut seq, ev.time + cal.link_queue_ms, EventKind::LinkFree);
+                    push(
+                        &mut heap,
+                        &mut seq,
+                        ev.time + cal.link_queue_ms,
+                        EventKind::LinkFree { link: link_id },
+                    );
                     let f = &flights[req];
-                    let target = compute_node(f.device, f.action.tier);
+                    let target = compute_node(f.device, f.action.placement);
                     push(&mut heap, &mut seq, ev.time, EventKind::Join { node: target, req });
                 }
             }
@@ -302,7 +327,7 @@ pub fn run_open_loop(
                     let mut svc = model.single_stream_service_ms(
                         f.device,
                         f.action.model,
-                        f.action.tier,
+                        f.action.placement,
                         state,
                     );
                     if sigma > 0.0 {
@@ -339,7 +364,7 @@ pub fn run_open_loop(
                     let mut svc = model.single_stream_service_ms(
                         f.device,
                         f.action.model,
-                        f.action.tier,
+                        f.action.placement,
                         state,
                     );
                     if sigma > 0.0 {
@@ -358,19 +383,20 @@ pub fn run_open_loop(
 ///
 /// All devices arrive at t = 0; each request's service time is its full
 /// closed-form joint response (`ResponseModel::device_response_ms` with
-/// the round's tier counts — the analytic processor-sharing contention
+/// the round's contention context — the analytic processor-sharing
 /// law), executed on infinite servers. The returned vector is indexed by
 /// device and equals `ResponseModel::expected_responses` exactly, which is
 /// what lets `Env` sit on the DES core without perturbing any seed
 /// behavior.
-pub fn sync_round_responses(
+pub fn sync_round_responses<S: StateView>(
     model: &ResponseModel,
     decision: &Decision,
-    state: &SystemState,
+    state: &S,
 ) -> Vec<f64> {
     let users = state.users();
     assert_eq!(decision.n_users(), users, "decision arity vs users");
-    let counts = ResponseModel::tier_counts(decision);
+    assert_eq!(model.net.topo.num_edges(), state.num_edges(), "topology edges vs state");
+    let ctx = RoundCtx::of(&model.net.topo, decision);
 
     let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(users * 2);
     for device in 0..users {
@@ -390,8 +416,7 @@ pub fn sync_round_responses(
         match ev.kind {
             EventKind::Join { req: device, .. } => {
                 let a = decision.0[device];
-                let svc =
-                    model.device_response_ms(device, a.model, a.tier, &counts, state);
+                let svc = model.device_response_ms(device, a.model, a.placement, &ctx, state);
                 seq += 1;
                 heap.push(Event {
                     time: ev.time + svc,
@@ -402,7 +427,7 @@ pub fn sync_round_responses(
             EventKind::Finish { req: device, .. } => {
                 responses[device] = ev.time;
             }
-            EventKind::LinkFree => unreachable!("no link events in a synchronous round"),
+            EventKind::LinkFree { .. } => unreachable!("no link events in a synchronous round"),
         }
     }
     responses
@@ -412,10 +437,10 @@ pub fn sync_round_responses(
 mod tests {
     use super::*;
     use crate::config::{Calibration, Scenario};
-    use crate::monitor::NodeState;
+    use crate::monitor::{NodeState, SystemState, TopoState};
     use crate::network::Network;
     use crate::sim::arrivals::{schedule, ArrivalProcess};
-    use crate::types::{ModelId, NetCond};
+    use crate::types::{ModelId, NetCond, Tier};
 
     fn setup(users: usize) -> (ResponseModel, SystemState) {
         let model =
@@ -428,20 +453,20 @@ mod tests {
         (model, state)
     }
 
-    fn uniform(users: usize, tier: Tier, m: u8) -> Decision {
-        Decision::uniform(users, Action { tier, model: ModelId(m) })
+    fn uniform(users: usize, p: Placement, m: u8) -> Decision {
+        Decision::uniform(users, Action { placement: p, model: ModelId(m) })
     }
 
     #[test]
     fn sync_round_equals_closed_form() {
         for users in 1..=5 {
             let (model, state) = setup(users);
-            for tier in Tier::ALL {
+            for p in Tier::ALL {
                 for m in [0u8, 3, 7] {
-                    let d = uniform(users, tier, m);
+                    let d = uniform(users, p, m);
                     let des = sync_round_responses(&model, &d, &state);
                     let closed = model.expected_responses(&d, &state);
-                    assert_eq!(des, closed, "users={users} tier={tier:?} d{m}");
+                    assert_eq!(des, closed, "users={users} p={p:?} d{m}");
                 }
             }
         }
@@ -452,7 +477,7 @@ mod tests {
         let users = 3;
         let (model, state) = setup(users);
         let trace = schedule(ArrivalProcess::Poisson { rate_per_s: 2.0 }, users, 20_000.0, 5);
-        let d = uniform(users, Tier::Edge, 7);
+        let d = uniform(users, Tier::Edge(0), 7);
         let out = run_open_loop(&model, &state, &d, &trace, 20_000.0, 6);
         assert_eq!(out.completed.len(), trace.len());
         let mut ids: Vec<u64> = out.completed.iter().map(|c| c.id).collect();
@@ -524,7 +549,10 @@ mod tests {
         let trace = schedule(ArrivalProcess::Poisson { rate_per_s: 5.0 }, users, 10_000.0, 9);
         let d = Decision(
             (0..users)
-                .map(|i| Action { tier: Tier::from_index(i % 3), model: ModelId((i % 8) as u8) })
+                .map(|i| Action {
+                    placement: Tier::from_index(i % 3),
+                    model: ModelId((i % 8) as u8),
+                })
                 .collect(),
         );
         let a = run_open_loop(&model, &state, &d, &trace, 10_000.0, 11);
@@ -548,12 +576,67 @@ mod tests {
         let model = ResponseModel::new(Network::new(Scenario::exp_a(users), cal));
         let trace: Vec<Request> =
             (0..users).map(|d| Request { id: d as u64, device: d, arrival_ms: 0.0 }).collect();
-        let d = uniform(users, Tier::Edge, 0);
+        let d = uniform(users, Tier::Edge(0), 0);
         let out = run_open_loop(&model, &state, &d, &trace, 1.0, 4);
-        let svc = model.single_stream_service_ms(0, ModelId(0), Tier::Edge, &state);
+        let svc = model.single_stream_service_ms(0, ModelId(0), Tier::Edge(0), &state);
         let mut queues: Vec<f64> = out.completed.iter().map(|c| c.queue_ms).collect();
         queues.sort_by(f64::total_cmp);
         assert_eq!(queues.iter().filter(|&&q| q < 1e-9).count(), 2, "{queues:?}");
         assert!((queues[2] - svc).abs() < 1e-6 && (queues[3] - svc).abs() < 1e-6);
+    }
+
+    #[test]
+    fn two_edges_serialize_uploads_independently() {
+        // 4 simultaneous edge uploads, split 2 + 2 across two edges: each
+        // link serializes only its own pair, so the per-link waits are
+        // {0, lq} instead of the single-edge {0, lq, 2lq, 3lq}.
+        let users = 4;
+        let cal = quiet_cal();
+        let model = ResponseModel::new(Network::with_edges(Scenario::exp_a(users), cal, 2));
+        let state = TopoState::idle(&model.net.topo);
+        let trace: Vec<Request> =
+            (0..users).map(|d| Request { id: d as u64, device: d, arrival_ms: 0.0 }).collect();
+        let d = Decision(
+            (0..users)
+                .map(|i| Action { placement: Placement::Edge(i % 2), model: ModelId(7) })
+                .collect(),
+        );
+        let out = run_open_loop(&model, &state, &d, &trace, 1.0, 2);
+        let lq = model.net.cal.link_queue_ms;
+        let mut waits: Vec<f64> = out.completed.iter().map(|c| c.link_wait_ms).collect();
+        waits.sort_by(f64::total_cmp);
+        assert_eq!(out.completed.len(), users);
+        for (j, w) in waits.iter().enumerate() {
+            // two links, two holds each: waits 0, 0, lq, lq
+            let want = if j < 2 { 0.0 } else { lq };
+            assert!((w - want).abs() < 1e-9, "j={j} wait={w}");
+        }
+    }
+
+    #[test]
+    fn multi_edge_sync_round_matches_closed_form() {
+        for edges in 1..=3usize {
+            let users = 6;
+            let model = ResponseModel::new(Network::with_edges(
+                Scenario::exp_b(users),
+                Calibration::default(),
+                edges,
+            ));
+            let state = TopoState::idle(&model.net.topo);
+            let d = Decision(
+                (0..users)
+                    .map(|i| {
+                        let placements = model.net.topo.placements();
+                        Action {
+                            placement: placements[i % placements.len()],
+                            model: ModelId((i % 8) as u8),
+                        }
+                    })
+                    .collect(),
+            );
+            let des = sync_round_responses(&model, &d, &state);
+            let closed = model.expected_responses(&d, &state);
+            assert_eq!(des, closed, "edges={edges}");
+        }
     }
 }

@@ -11,13 +11,17 @@
 //! 3. advances the background-load Markov dynamics (what makes the Table 3
 //!    state vector informative),
 //! 4. returns the outcome + the next encoded state.
+//!
+//! The environment runs over an explicit [`Topology`]
+//! ([`Env::with_network`]); [`Env::new`] builds the paper's single-edge
+//! network and reproduces the seed environment bit-for-bit.
 
 use crate::config::{Calibration, Scenario};
 use crate::models;
-use crate::monitor::{self, EncodedState, NodeState, SystemState};
+use crate::monitor::{self, EncodedState, TopoState};
 use crate::network::Network;
 use crate::sim::latency::ResponseModel;
-use crate::types::{AccuracyConstraint, Decision};
+use crate::types::{AccuracyConstraint, Decision, Topology};
 use crate::util::rng::Rng;
 
 /// Background-load dynamics parameters (Markov flips / random walk).
@@ -27,7 +31,7 @@ pub struct Dynamics {
     pub p_dev_cpu_flip: f64,
     /// Per-round probability any node's memory busy bit flips.
     pub p_mem_flip: f64,
-    /// Per-round probability the edge/cloud background level random-walks.
+    /// Per-round probability an edge/cloud background level random-walks.
     pub p_ec_walk: f64,
 }
 
@@ -49,7 +53,7 @@ pub struct StepOutcome {
 
 pub struct Env {
     pub model: ResponseModel,
-    pub state: SystemState,
+    pub state: TopoState,
     pub threshold: f64,
     pub dynamics: Dynamics,
     penalty_ms: f64,
@@ -59,19 +63,20 @@ pub struct Env {
 }
 
 impl Env {
+    /// The paper's single-edge environment for `scenario`.
     pub fn new(
         scenario: Scenario,
         cal: Calibration,
         constraint: AccuracyConstraint,
         seed: u64,
     ) -> Env {
-        let users = scenario.users();
-        let state = SystemState {
-            edge: NodeState::idle(scenario.edge_cond),
-            cloud: NodeState::idle(crate::types::NetCond::Regular),
-            devices: (0..users).map(|i| NodeState::idle(scenario.device_cond(i))).collect(),
-        };
-        let model = ResponseModel::new(Network::new(scenario, cal));
+        Env::with_network(Network::new(scenario, cal), constraint, seed)
+    }
+
+    /// Environment over an arbitrary topology (any edge count).
+    pub fn with_network(net: Network, constraint: AccuracyConstraint, seed: u64) -> Env {
+        let state = TopoState::idle(&net.topo);
+        let model = ResponseModel::new(net);
         let penalty_ms = model.max_response_ms();
         Env {
             model,
@@ -87,6 +92,11 @@ impl Env {
 
     pub fn users(&self) -> usize {
         self.state.users()
+    }
+
+    /// The node table this environment runs over.
+    pub fn topology(&self) -> &Topology {
+        &self.model.net.topo
     }
 
     pub fn penalty_ms(&self) -> f64 {
@@ -136,8 +146,8 @@ impl Env {
     /// Open-loop DES evaluation: run a time-ordered arrival trace through
     /// the event-queue core under the *current* background state with a
     /// frozen per-device decision. Unlike [`Env::step`], responses here
-    /// include real queueing at the per-node vCPU queues and the shared
-    /// ingress link (see [`crate::sim::des::run_open_loop`]).
+    /// include real queueing at the per-node vCPU queues and the per-edge
+    /// ingress links (see [`crate::sim::des::run_open_loop`]).
     pub fn open_loop(
         &self,
         decision: &Decision,
@@ -170,7 +180,7 @@ impl Env {
                 dev.mem = if monitor::binary_level(dev.mem) == 1 { 0.1 } else { 0.9 };
             }
         }
-        for node in [&mut self.state.edge, &mut self.state.cloud] {
+        for node in self.state.edges.iter_mut().chain(std::iter::once(&mut self.state.cloud)) {
             if self.rng.bool(d.p_ec_walk) {
                 // Mean-reverting walk: background bursts arrive but decay
                 // towards idle (p_down > p_up), so the near-idle states the
@@ -195,8 +205,10 @@ impl Env {
             dev.cpu = 0.0;
             dev.mem = 0.0;
         }
-        self.state.edge.cpu = 0.0;
-        self.state.edge.mem = 0.0;
+        for edge in &mut self.state.edges {
+            edge.cpu = 0.0;
+            edge.mem = 0.0;
+        }
         self.state.cloud.cpu = 0.0;
         self.state.cloud.mem = 0.0;
     }
@@ -205,14 +217,14 @@ impl Env {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::types::{Action, ModelId, Tier};
+    use crate::types::{Action, ModelId, Placement, Tier};
 
     fn env(constraint: AccuracyConstraint) -> Env {
         Env::new(Scenario::exp_a(3), Calibration::default(), constraint, 7)
     }
 
     fn decision(n: usize, m: u8) -> Decision {
-        Decision::uniform(n, Action { tier: Tier::Local, model: ModelId(m) })
+        Decision::uniform(n, Action { placement: Tier::Local, model: ModelId(m) })
     }
 
     #[test]
@@ -298,5 +310,32 @@ mod tests {
         }
         e.reset_load();
         assert_eq!(e.encoded().key, k0);
+    }
+
+    #[test]
+    fn multi_edge_env_steps_and_encodes() {
+        let net = Network::with_edges(Scenario::exp_a(4), Calibration::default(), 3);
+        let mut e = Env::with_network(net, AccuracyConstraint::Min, 9);
+        assert_eq!(e.topology().num_edges(), 3);
+        // state vector covers 3 edges + cloud + 4 devices
+        assert_eq!(e.encoded().vec.len(), 3 * (4 + 1 + 3));
+        let d = Decision(
+            (0..4)
+                .map(|i| Action { placement: Placement::Edge(i % 3), model: ModelId(0) })
+                .collect(),
+        );
+        let out = e.step(&d);
+        assert_eq!(out.responses_ms.len(), 4);
+        assert!(out.avg_ms > 0.0);
+    }
+
+    #[test]
+    fn single_edge_env_matches_seed_construction() {
+        // with_network(single edge) is the documented equivalent of the
+        // seed's direct construction: same users, same encoded idle key.
+        let a = Env::new(Scenario::exp_b(4), Calibration::default(), AccuracyConstraint::Min, 3);
+        assert_eq!(a.users(), 4);
+        assert_eq!(a.topology().num_edges(), 1);
+        assert_eq!(a.state.edges.len(), 1);
     }
 }

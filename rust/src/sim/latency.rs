@@ -1,19 +1,23 @@
-//! Closed-form response-time model (Eq. 1 instantiated; DESIGN.md §6).
+//! Closed-form response-time model (Eq. 1 instantiated; DESIGN.md §6),
+//! generalized over an explicit [`Topology`].
 //!
 //! For a synchronous round with joint decision `o`, device i's response is
 //!
-//!   T_i = compute(model_i, tier_i, k_tier, background)
-//!       + path_overhead(i, tier_i)            (Table 12 messages)
-//!       + queueing(tier_i, #offloaded)        (shared edge ingress)
-//!       + monitoring overhead                 (Fig 8: < 0.8%)
+//!   T_i = compute(model_i, placement_i, k_node, background)
+//!       + path_overhead(i, placement_i)        (Table 12 messages)
+//!       + queueing(ingress link of i)          (per-edge ingress sharing)
+//!       + monitoring overhead                  (Fig 8: < 0.8%)
 //!
-//! with processor-sharing contention at shared tiers, a busy-CPU multiplier
+//! with processor-sharing contention on each shared *node* (requests
+//! co-scheduled on the same edge node or the cloud), a busy-CPU multiplier
 //! on occupied end devices, and background-load slowdown on edge/cloud —
 //! this is what makes the monitored state (Table 3) decision-relevant.
+//! On the single-edge topology every formula reduces to the paper's exact
+//! three-tier law.
 
-use crate::monitor::SystemState;
+use crate::monitor::StateView;
 use crate::network::Network;
-use crate::types::{Decision, DeviceId, ModelId, Tier};
+use crate::types::{Decision, DeviceId, ModelId, Placement, Topology};
 use crate::util::rng::Rng;
 
 /// Slowdown from background utilization on a shared node: a node at 100%
@@ -22,6 +26,62 @@ use crate::util::rng::Rng;
 const BACKGROUND_SLOWDOWN: f64 = 0.6;
 /// Extra slowdown when a node's memory is saturated (paging pressure).
 const MEM_BUSY_SLOWDOWN: f64 = 0.2;
+
+/// Per-round contention context for a joint decision: how many requests
+/// each shared node co-schedules and how many uploads each edge-ingress
+/// link serializes. On the single-edge topology this is exactly the
+/// paper's (edge count, cloud count, offloaded total) triple.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RoundCtx {
+    /// Requests co-scheduled on each edge node.
+    pub edge_counts: Vec<usize>,
+    /// Requests co-scheduled on the cloud node.
+    pub cloud_count: usize,
+    /// Uploads traversing each edge-ingress link (the edge's own requests
+    /// plus the cloud-bound traffic homed through it).
+    pub ingress_counts: Vec<usize>,
+}
+
+impl RoundCtx {
+    pub fn of(topo: &Topology, decision: &Decision) -> RoundCtx {
+        assert!(topo.admits(decision), "decision outside topology");
+        Self::from_placements(topo, decision.0.iter().map(|a| a.placement))
+    }
+
+    /// Build from per-device placements (device order).
+    pub fn from_placements(
+        topo: &Topology,
+        placements: impl IntoIterator<Item = Placement>,
+    ) -> RoundCtx {
+        let k = topo.num_edges();
+        let mut ctx =
+            RoundCtx { edge_counts: vec![0; k], cloud_count: 0, ingress_counts: vec![0; k] };
+        for (device, p) in placements.into_iter().enumerate() {
+            match p {
+                Placement::Local => {}
+                Placement::Edge(j) => {
+                    ctx.edge_counts[j] += 1;
+                    ctx.ingress_counts[j] += 1;
+                }
+                Placement::Cloud => {
+                    ctx.cloud_count += 1;
+                    ctx.ingress_counts[topo.home_edge(device)] += 1;
+                }
+            }
+        }
+        ctx
+    }
+
+    /// Requests co-scheduled on the node executing `p` (1 for local
+    /// execution: each end node hosts exactly its own user).
+    pub fn node_count(&self, p: Placement) -> usize {
+        match p {
+            Placement::Local => 1,
+            Placement::Edge(j) => self.edge_counts[j],
+            Placement::Cloud => self.cloud_count,
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct ResponseModel {
@@ -33,62 +93,60 @@ impl ResponseModel {
         ResponseModel { net }
     }
 
-    /// Number of co-scheduled tasks per tier for a joint decision.
+    /// Number of co-scheduled tasks per tier class for a joint decision —
+    /// the paper's three-tier view (all edge nodes collapsed onto index 1).
     pub fn tier_counts(decision: &Decision) -> [usize; 3] {
         let mut counts = [0usize; 3];
         for a in &decision.0 {
-            counts[a.tier.index()] += 1;
+            counts[a.placement.class_index()] += 1;
         }
         counts
     }
 
     /// Deterministic (expected) response time for one device's action
     /// within the joint decision context.
-    pub fn device_response_ms(
+    pub fn device_response_ms<S: StateView>(
         &self,
         device: DeviceId,
         model: ModelId,
-        tier: Tier,
-        counts: &[usize; 3],
-        sys: &SystemState,
+        p: Placement,
+        ctx: &RoundCtx,
+        sys: &S,
     ) -> f64 {
         let cal = &self.net.cal;
-        let k = match tier {
-            Tier::Local => 1, // each end node hosts exactly its own user
-            Tier::Edge => counts[Tier::Edge.index()],
-            Tier::Cloud => counts[Tier::Cloud.index()],
-        };
+        let k = ctx.node_count(p);
         // Background load on the executing node.
         let compute =
-            self.background_adjusted_ms(cal.compute_ms_contended(model, tier, k), device, tier, sys);
+            self.background_adjusted_ms(cal.compute_ms_contended(model, p, k), device, p, sys);
 
-        let offloaded = counts[Tier::Edge.index()] + counts[Tier::Cloud.index()];
-        let subtotal = compute
-            + self.net.path_overhead_ms(device, tier)
-            + self.net.queueing_ms(tier, offloaded);
+        let queueing = match self.net.topo.ingress_edge(device, p) {
+            None => 0.0,
+            Some(j) => self.net.queueing_ms(p, ctx.ingress_counts[j]),
+        };
+        let subtotal = compute + self.net.path_overhead_ms(device, p) + queueing;
         subtotal * (1.0 + cal.monitor_overhead_frac)
     }
 
     /// Apply the executing node's background-load multipliers to a raw
     /// compute time: busy-CPU factor on occupied end devices, linear
-    /// background slowdown on shared tiers, memory-pressure factor when
+    /// background slowdown on shared nodes, memory-pressure factor when
     /// the node's memory is saturated. Shared by the synchronous round
     /// model and the DES service law so the two can never drift apart.
-    fn background_adjusted_ms(
+    fn background_adjusted_ms<S: StateView>(
         &self,
         mut compute: f64,
         device: DeviceId,
-        tier: Tier,
-        sys: &SystemState,
+        p: Placement,
+        sys: &S,
     ) -> f64 {
         let cal = &self.net.cal;
-        let node = match tier {
-            Tier::Local => &sys.devices[device],
-            Tier::Edge => &sys.edge,
-            Tier::Cloud => &sys.cloud,
+        let node = match p {
+            Placement::Local => sys.device_node(device),
+            Placement::Edge(j) => sys.edge_node(j),
+            Placement::Cloud => sys.cloud_node(),
         };
-        match tier {
-            Tier::Local => {
+        match p {
+            Placement::Local => {
                 if crate::monitor::binary_level(node.cpu) == 1 {
                     compute *= cal.busy_cpu_factor;
                 }
@@ -110,37 +168,37 @@ impl ResponseModel {
     /// demand the DES core (sim::des) schedules onto the node's vCPU
     /// servers — contention there is real queueing, not the closed-form
     /// (beta, delta) law the synchronous round uses.
-    pub fn single_stream_service_ms(
+    pub fn single_stream_service_ms<S: StateView>(
         &self,
         device: DeviceId,
         model: ModelId,
-        tier: Tier,
-        sys: &SystemState,
+        p: Placement,
+        sys: &S,
     ) -> f64 {
         let cal = &self.net.cal;
-        let compute =
-            self.background_adjusted_ms(cal.compute_ms(model, tier), device, tier, sys);
+        let compute = self.background_adjusted_ms(cal.compute_ms(model, p), device, p, sys);
         compute * (1.0 + cal.monitor_overhead_frac)
     }
 
     /// Expected per-device responses for a joint decision (no noise) —
     /// this is the objective the brute-force oracle minimizes.
-    pub fn expected_responses(&self, decision: &Decision, sys: &SystemState) -> Vec<f64> {
+    pub fn expected_responses<S: StateView>(&self, decision: &Decision, sys: &S) -> Vec<f64> {
         assert_eq!(decision.n_users(), sys.users(), "decision/users mismatch");
-        let counts = Self::tier_counts(decision);
+        assert_eq!(self.net.topo.num_edges(), sys.num_edges(), "topology edges vs state");
+        let ctx = RoundCtx::of(&self.net.topo, decision);
         decision
             .0
             .iter()
             .enumerate()
-            .map(|(i, a)| self.device_response_ms(i, a.model, a.tier, &counts, sys))
+            .map(|(i, a)| self.device_response_ms(i, a.model, a.placement, &ctx, sys))
             .collect()
     }
 
     /// Sampled responses with multiplicative log-normal noise.
-    pub fn sampled_responses(
+    pub fn sampled_responses<S: StateView>(
         &self,
         decision: &Decision,
-        sys: &SystemState,
+        sys: &S,
         rng: &mut Rng,
     ) -> Vec<f64> {
         let sigma = self.net.cal.noise_sigma;
@@ -156,13 +214,16 @@ impl ResponseModel {
     pub fn max_response_ms(&self) -> f64 {
         let n = self.net.users();
         let cal = &self.net.cal;
-        let worst_compute = Tier::ALL
-            .iter()
-            .map(|&t| {
-                let k = if t == Tier::Local { 1 } else { n };
-                let mut c = cal.compute_ms_contended(ModelId(0), t, k);
-                c *= match t {
-                    Tier::Local => cal.busy_cpu_factor,
+        let worst_compute = self
+            .net
+            .topo
+            .placements()
+            .into_iter()
+            .map(|p| {
+                let k = if p == Placement::Local { 1 } else { n };
+                let mut c = cal.compute_ms_contended(ModelId(0), p, k);
+                c *= match p {
+                    Placement::Local => cal.busy_cpu_factor,
                     _ => 1.0 + BACKGROUND_SLOWDOWN,
                 };
                 c * (1.0 + MEM_BUSY_SLOWDOWN)
@@ -180,8 +241,8 @@ impl ResponseModel {
 mod tests {
     use super::*;
     use crate::config::{Calibration, Scenario};
-    use crate::monitor::NodeState;
-    use crate::types::{Action, NetCond};
+    use crate::monitor::{NodeState, SystemState};
+    use crate::types::{Action, NetCond, Tier};
 
     fn sys(n: usize) -> SystemState {
         SystemState {
@@ -198,8 +259,8 @@ mod tests {
         ))
     }
 
-    fn uniform(n: usize, tier: Tier, m: u8) -> Decision {
-        Decision::uniform(n, Action { tier, model: ModelId(m) })
+    fn uniform(n: usize, p: Placement, m: u8) -> Decision {
+        Decision::uniform(n, Action { placement: p, model: ModelId(m) })
     }
 
     #[test]
@@ -213,7 +274,7 @@ mod tests {
     #[test]
     fn anchor_edge_only_5users() {
         let rm = model("exp-a", 5);
-        let r = rm.expected_responses(&uniform(5, Tier::Edge, 0), &sys(5));
+        let r = rm.expected_responses(&uniform(5, Tier::Edge(0), 0), &sys(5));
         let avg = r.iter().sum::<f64>() / 5.0;
         assert!((0.8..1.25).contains(&(avg / 1140.0)), "avg={avg}"); // Fig 1b
     }
@@ -254,9 +315,9 @@ mod tests {
     fn smaller_models_are_faster_everywhere() {
         let rm = model("exp-a", 3);
         let s = sys(3);
-        for tier in Tier::ALL {
-            let d0 = rm.expected_responses(&uniform(3, tier, 0), &s);
-            let d3 = rm.expected_responses(&uniform(3, tier, 3), &s);
+        for p in Tier::ALL {
+            let d0 = rm.expected_responses(&uniform(3, p, 0), &s);
+            let d3 = rm.expected_responses(&uniform(3, p, 3), &s);
             for (a, b) in d0.iter().zip(&d3) {
                 assert!(b < a);
             }
@@ -277,9 +338,9 @@ mod tests {
     fn background_load_slows_shared_tiers() {
         let rm = model("exp-a", 2);
         let mut s = sys(2);
-        let idle = rm.expected_responses(&uniform(2, Tier::Edge, 0), &s)[0];
+        let idle = rm.expected_responses(&uniform(2, Tier::Edge(0), 0), &s)[0];
         s.edge.cpu = 1.0;
-        let loaded = rm.expected_responses(&uniform(2, Tier::Edge, 0), &s)[0];
+        let loaded = rm.expected_responses(&uniform(2, Tier::Edge(0), 0), &s)[0];
         assert!(loaded > idle * 1.4);
     }
 
@@ -288,14 +349,14 @@ mod tests {
         let rm = model("exp-d", 5);
         let worst = rm.max_response_ms();
         let s = sys(5);
-        for tier in Tier::ALL {
+        for p in Tier::ALL {
             for m in [0u8, 3, 7] {
                 let avg = rm
-                    .expected_responses(&uniform(5, tier, m), &s)
+                    .expected_responses(&uniform(5, p, m), &s)
                     .iter()
                     .sum::<f64>()
                     / 5.0;
-                assert!(worst >= avg, "worst={worst} avg={avg} tier={tier:?} m=d{m}");
+                assert!(worst >= avg, "worst={worst} avg={avg} p={p:?} m=d{m}");
             }
         }
     }
@@ -316,13 +377,74 @@ mod tests {
     #[test]
     fn tier_counts_sum_to_users() {
         let d = Decision(vec![
-            Action { tier: Tier::Local, model: ModelId(0) },
-            Action { tier: Tier::Edge, model: ModelId(1) },
-            Action { tier: Tier::Cloud, model: ModelId(2) },
-            Action { tier: Tier::Edge, model: ModelId(3) },
+            Action { placement: Tier::Local, model: ModelId(0) },
+            Action { placement: Tier::Edge(0), model: ModelId(1) },
+            Action { placement: Tier::Cloud, model: ModelId(2) },
+            Action { placement: Tier::Edge(0), model: ModelId(3) },
         ]);
         let c = ResponseModel::tier_counts(&d);
         assert_eq!(c, [1, 2, 1]);
         assert_eq!(c.iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn round_ctx_matches_tier_counts_single_edge() {
+        let rm = model("exp-a", 4);
+        let d = Decision(vec![
+            Action { placement: Tier::Local, model: ModelId(0) },
+            Action { placement: Tier::Edge(0), model: ModelId(1) },
+            Action { placement: Tier::Cloud, model: ModelId(2) },
+            Action { placement: Tier::Edge(0), model: ModelId(3) },
+        ]);
+        let ctx = RoundCtx::of(&rm.net.topo, &d);
+        let counts = ResponseModel::tier_counts(&d);
+        assert_eq!(ctx.edge_counts, vec![counts[1]]);
+        assert_eq!(ctx.cloud_count, counts[2]);
+        // single ingress carries every offloaded request
+        assert_eq!(ctx.ingress_counts, vec![counts[1] + counts[2]]);
+    }
+
+    #[test]
+    fn sharding_across_edges_relieves_node_contention() {
+        let cal = Calibration::default();
+        let one = ResponseModel::new(Network::with_edges(Scenario::exp_a(4), cal.clone(), 1));
+        let two = ResponseModel::new(Network::with_edges(Scenario::exp_a(4), cal, 2));
+        let all_one_edge = uniform(4, Placement::Edge(0), 0);
+        let split = Decision(
+            (0..4)
+                .map(|i| Action { placement: Placement::Edge(i % 2), model: ModelId(0) })
+                .collect(),
+        );
+        let s1 = crate::monitor::TopoState::idle(&one.net.topo);
+        let s2 = crate::monitor::TopoState::idle(&two.net.topo);
+        let packed: f64 =
+            one.expected_responses(&all_one_edge, &s1).iter().sum::<f64>() / 4.0;
+        let sharded: f64 = two.expected_responses(&split, &s2).iter().sum::<f64>() / 4.0;
+        assert!(
+            sharded < packed,
+            "2-edge split {sharded} should beat packed single edge {packed}"
+        );
+    }
+
+    #[test]
+    fn cloud_traffic_loads_home_edge_ingress() {
+        let rm = ResponseModel::new(Network::with_edges(
+            Scenario::exp_a(4),
+            Calibration::default(),
+            2,
+        ));
+        // devices 0 and 2 are homed on edge 0; 1 and 3 on edge 1
+        let d = Decision(vec![
+            Action { placement: Placement::Cloud, model: ModelId(0) },
+            Action { placement: Placement::Local, model: ModelId(0) },
+            Action { placement: Placement::Edge(0), model: ModelId(0) },
+            Action { placement: Placement::Edge(1), model: ModelId(0) },
+        ]);
+        let ctx = RoundCtx::of(&rm.net.topo, &d);
+        assert_eq!(ctx.edge_counts, vec![1, 1]);
+        assert_eq!(ctx.cloud_count, 1);
+        // edge 0's ingress carries its own request plus device 0's
+        // cloud-bound upload; edge 1 only its own
+        assert_eq!(ctx.ingress_counts, vec![2, 1]);
     }
 }

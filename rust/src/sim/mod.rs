@@ -13,5 +13,5 @@ pub mod workload;
 pub use arrivals::ArrivalProcess;
 pub use des::{CompletedRequest, DesOutcome};
 pub use env::{Dynamics, Env, StepOutcome};
-pub use latency::ResponseModel;
+pub use latency::{ResponseModel, RoundCtx};
 pub use workload::{Arrival, Request, WorkloadGen};

@@ -1,47 +1,120 @@
-//! Core domain types shared across the stack: tiers, network conditions,
-//! models, per-device actions and joint decisions (paper §4.1 notation).
+//! Core domain types shared across the stack: placements in an N-node
+//! end-edge-cloud topology, network conditions, models, per-device actions
+//! and joint decisions (paper §4.1 notation, generalized past the paper's
+//! fixed {local, edge, cloud} triple).
+//!
+//! # Topology model
+//!
+//! The paper's formulation (o_i^S / o_i^E / o_i^C) assumes exactly one
+//! edge node. Here the node table is explicit: a [`Topology`] lists every
+//! end device, every edge node and the cloud, each as a [`NodeSpec`]
+//! carrying its uplink condition and vCPU capacity. Where a request
+//! executes is a [`Placement`] — on the requesting device itself
+//! (`Local`), on a specific edge node (`Edge(k)`), or on the cloud
+//! (`Cloud`, reached through the device's home edge). [`Tier`] is retained
+//! as a thin alias of [`Placement`] so the paper's three-tier vocabulary
+//! (and its L/E/C table letters) keeps working; the default single-edge
+//! topology reproduces the paper bit-for-bit.
+//!
+//! Placements have a topology-derived dense index (`Local`, then each
+//! edge, then `Cloud`), which is what sizes the agents' action spaces:
+//! an [`Action`] is placement x model, indexed placement-major.
 
 use std::fmt;
 
-/// Where a device's inference executes (paper: o_i^S / o_i^E / o_i^C).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub enum Tier {
+/// Where a device's inference executes: the generalization of the paper's
+/// o_i^S / o_i^E / o_i^C to N edge nodes.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Placement {
     /// On the requesting end-node device itself ("L" in paper tables).
     Local,
-    /// On the shared edge node.
-    Edge,
-    /// On the cloud node (reached through the edge).
+    /// On edge node `k` (0-based; the paper's single edge is `Edge(0)`,
+    /// printed "E").
+    Edge(usize),
+    /// On the cloud node (reached through the device's home edge).
     Cloud,
 }
 
-impl Tier {
-    pub const ALL: [Tier; 3] = [Tier::Local, Tier::Edge, Tier::Cloud];
+/// The paper's three-tier view is the single-edge special case of
+/// [`Placement`]; the alias keeps the original vocabulary alive.
+pub type Tier = Placement;
 
+impl Placement {
+    /// The paper's placement triple (single-edge topology).
+    pub const ALL: [Placement; 3] = [Placement::Local, Placement::Edge(0), Placement::Cloud];
+
+    /// Dense placement index in the paper's single-edge layout
+    /// (L = 0, E = 1, C = 2). Multi-edge placements must be indexed
+    /// through [`Topology::placement_index`], which accounts for the
+    /// actual edge count.
     pub fn index(self) -> usize {
         match self {
-            Tier::Local => 0,
-            Tier::Edge => 1,
-            Tier::Cloud => 2,
+            Placement::Local => 0,
+            Placement::Edge(k) => {
+                assert!(k == 0, "Edge({k}) needs Topology::placement_index");
+                1
+            }
+            Placement::Cloud => 2,
         }
     }
 
-    pub fn from_index(i: usize) -> Tier {
-        Tier::ALL[i]
+    pub fn from_index(i: usize) -> Placement {
+        Placement::ALL[i]
     }
 
-    /// Paper-table letter (L/E/C).
+    /// Node-class index (0 = end device, 1 = edge, 2 = cloud) — what the
+    /// per-class calibration arrays (`ms_per_mmac`, contention laws,
+    /// default vCPU counts) are keyed by. All edge nodes share a class.
+    pub fn class_index(self) -> usize {
+        match self {
+            Placement::Local => 0,
+            Placement::Edge(_) => 1,
+            Placement::Cloud => 2,
+        }
+    }
+
+    /// Which edge node this placement runs on, if any.
+    pub fn edge_id(self) -> Option<usize> {
+        match self {
+            Placement::Edge(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Paper-table letter (L/E/C). All edges share 'E'; [`fmt::Display`]
+    /// disambiguates edges beyond the first.
     pub fn letter(self) -> char {
         match self {
-            Tier::Local => 'L',
-            Tier::Edge => 'E',
-            Tier::Cloud => 'C',
+            Placement::Local => 'L',
+            Placement::Edge(_) => 'E',
+            Placement::Cloud => 'C',
         }
     }
 }
 
-impl fmt::Display for Tier {
+impl fmt::Display for Placement {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}", self.letter())
+        match *self {
+            // Edge(0) prints the paper's bare "E" so default-topology
+            // tables stay byte-identical; further edges are numbered.
+            Placement::Edge(k) if k > 0 => write!(f, "E{}", k + 1),
+            p => write!(f, "{}", p.letter()),
+        }
+    }
+}
+
+impl fmt::Debug for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Matches the pre-topology derive output for the paper triple
+        // ("Local"/"Edge"/"Cloud") so `{tier:?}` labels in experiment
+        // CSVs are unchanged on the default topology. Further edges are
+        // numbered 1-based, consistent with the "E2"/"E3" Display view.
+        match *self {
+            Placement::Local => write!(f, "Local"),
+            Placement::Edge(0) => write!(f, "Edge"),
+            Placement::Edge(k) => write!(f, "Edge{}", k + 1),
+            Placement::Cloud => write!(f, "Cloud"),
+        }
     }
 }
 
@@ -75,6 +148,169 @@ impl fmt::Display for NetCond {
     }
 }
 
+/// One node's capabilities in the topology table: the condition of its
+/// uplink towards the next layer and its vCPU count (paper Table 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeSpec {
+    /// Condition of the node's uplink (device -> its edge, edge -> cloud;
+    /// the cloud's own entry is nominal).
+    pub cond: NetCond,
+    /// vCPUs available for inference on this node.
+    pub vcpus: usize,
+}
+
+/// Explicit node table of an end-edge-cloud network: every end device,
+/// every edge node, and the cloud.
+///
+/// Devices are statically homed: device `i` reaches the cloud through edge
+/// `i % num_edges()` ([`Topology::home_edge`]), and each edge owns one
+/// ingress link that serializes the uploads traversing it. The paper's
+/// network (Fig 4) is exactly [`Topology`] with one edge.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// One entry per end device (S1..SN): uplink condition + vCPUs.
+    pub devices: Vec<NodeSpec>,
+    /// One entry per edge node: edge->cloud uplink condition + vCPUs.
+    pub edges: Vec<NodeSpec>,
+    /// The cloud node.
+    pub cloud: NodeSpec,
+}
+
+impl Topology {
+    /// Build a topology with `num_edges` identical edge nodes
+    /// (`edge_cond` uplinks) and per-class vCPU counts
+    /// `[device, edge, cloud]`.
+    pub fn uniform(
+        device_conds: &[NetCond],
+        edge_cond: NetCond,
+        num_edges: usize,
+        vcpus: [usize; 3],
+    ) -> Topology {
+        assert!(!device_conds.is_empty(), "at least one device");
+        assert!(num_edges >= 1, "at least one edge node");
+        Topology {
+            devices: device_conds.iter().map(|&cond| NodeSpec { cond, vcpus: vcpus[0] }).collect(),
+            edges: (0..num_edges).map(|_| NodeSpec { cond: edge_cond, vcpus: vcpus[1] }).collect(),
+            cloud: NodeSpec { cond: NetCond::Regular, vcpus: vcpus[2] },
+        }
+    }
+
+    pub fn users(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Number of distinct placements: local + each edge + cloud.
+    pub fn num_placements(&self) -> usize {
+        self.num_edges() + 2
+    }
+
+    /// Per-device action-space size: placements x models. Equals the
+    /// paper's 24 ([`ACTIONS_PER_DEVICE`]) for the single-edge topology.
+    pub fn actions_per_device(&self) -> usize {
+        self.num_placements() * NUM_MODELS
+    }
+
+    /// All placements in dense-index order: Local, Edge(0..k), Cloud.
+    pub fn placements(&self) -> Vec<Placement> {
+        let mut out = Vec::with_capacity(self.num_placements());
+        out.push(Placement::Local);
+        out.extend((0..self.num_edges()).map(Placement::Edge));
+        out.push(Placement::Cloud);
+        out
+    }
+
+    /// Dense placement index: Local = 0, Edge(j) = 1 + j,
+    /// Cloud = 1 + num_edges. Coincides with [`Placement::index`] on the
+    /// single-edge topology.
+    pub fn placement_index(&self, p: Placement) -> usize {
+        match p {
+            Placement::Local => 0,
+            Placement::Edge(j) => {
+                assert!(j < self.num_edges(), "edge {j} outside topology");
+                1 + j
+            }
+            Placement::Cloud => 1 + self.num_edges(),
+        }
+    }
+
+    pub fn placement_from_index(&self, i: usize) -> Placement {
+        let k = self.num_edges();
+        match i {
+            0 => Placement::Local,
+            j if j <= k => Placement::Edge(j - 1),
+            j if j == k + 1 => Placement::Cloud,
+            j => panic!("placement index {j} outside topology ({} placements)", k + 2),
+        }
+    }
+
+    /// Dense action index (placement-major, model-minor), sized by this
+    /// topology. Equals [`Action::index`] on the single-edge topology.
+    pub fn action_index(&self, a: Action) -> usize {
+        self.placement_index(a.placement) * NUM_MODELS + a.model.index()
+    }
+
+    pub fn action_from_index(&self, i: usize) -> Action {
+        assert!(i < self.actions_per_device(), "action index {i}");
+        Action {
+            placement: self.placement_from_index(i / NUM_MODELS),
+            model: ModelId((i % NUM_MODELS) as u8),
+        }
+    }
+
+    /// All actions in dense-index order.
+    pub fn actions(&self) -> Vec<Action> {
+        (0..self.actions_per_device()).map(|i| self.action_from_index(i)).collect()
+    }
+
+    /// The edge that homes device `i`'s traffic towards the cloud.
+    pub fn home_edge(&self, device: DeviceId) -> usize {
+        device % self.num_edges()
+    }
+
+    /// Which edge-ingress link a request from `device` executing at `p`
+    /// traverses: none for local execution, the target edge's own link
+    /// for edge execution, the home edge's link for cloud execution.
+    pub fn ingress_edge(&self, device: DeviceId, p: Placement) -> Option<usize> {
+        match p {
+            Placement::Local => None,
+            Placement::Edge(j) => Some(j),
+            Placement::Cloud => Some(self.home_edge(device)),
+        }
+    }
+
+    /// Condition of edge `j`'s uplink to the cloud.
+    pub fn edge_cond(&self, j: usize) -> NetCond {
+        self.edges[j].cond
+    }
+
+    /// Condition of device `i`'s uplink to its edge layer.
+    pub fn device_cond(&self, i: DeviceId) -> NetCond {
+        self.devices[i].cond
+    }
+
+    /// vCPUs of the node executing `p` for requests from `device`.
+    pub fn vcpus_of(&self, device: DeviceId, p: Placement) -> usize {
+        match p {
+            Placement::Local => self.devices[device].vcpus,
+            Placement::Edge(j) => self.edges[j].vcpus,
+            Placement::Cloud => self.cloud.vcpus,
+        }
+    }
+
+    /// True when every action in `d` targets a node that exists here.
+    pub fn admits(&self, d: &Decision) -> bool {
+        d.n_users() == self.users()
+            && d.0.iter().all(|a| match a.placement {
+                Placement::Edge(j) => j < self.num_edges(),
+                _ => true,
+            })
+    }
+}
+
 /// MobileNet variant id d0..d7 (paper Table 4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ModelId(pub u8);
@@ -100,24 +336,32 @@ impl fmt::Display for ModelId {
 /// End-node device index (S1..SN in the paper; 0-based here).
 pub type DeviceId = usize;
 
-/// Per-device action: placement x model (24 combinations).
+/// Per-device action: placement x model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Action {
-    pub tier: Tier,
+    pub placement: Placement,
     pub model: ModelId,
 }
 
+/// Per-device action count in the paper's single-edge topology
+/// (3 placements x 8 models). General topologies size their action spaces
+/// via [`Topology::actions_per_device`].
 pub const ACTIONS_PER_DEVICE: usize = 3 * NUM_MODELS; // 24
 
 impl Action {
-    /// Dense index in [0, 24): tier-major, model-minor.
+    /// Dense index in [0, 24): placement-major, model-minor, in the
+    /// paper's single-edge layout. See [`Topology::action_index`] for the
+    /// topology-sized equivalent.
     pub fn index(self) -> usize {
-        self.tier.index() * NUM_MODELS + self.model.index()
+        self.placement.index() * NUM_MODELS + self.model.index()
     }
 
     pub fn from_index(i: usize) -> Action {
         assert!(i < ACTIONS_PER_DEVICE, "action index {i}");
-        Action { tier: Tier::from_index(i / NUM_MODELS), model: ModelId((i % NUM_MODELS) as u8) }
+        Action {
+            placement: Placement::from_index(i / NUM_MODELS),
+            model: ModelId((i % NUM_MODELS) as u8),
+        }
     }
 
     pub fn all() -> impl Iterator<Item = Action> {
@@ -127,7 +371,7 @@ impl Action {
 
 impl fmt::Display for Action {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "{}, {}", self.model, self.tier)
+        write!(f, "{}, {}", self.model, self.placement)
     }
 }
 
@@ -213,7 +457,7 @@ mod tests {
     #[test]
     fn tier_letters() {
         assert_eq!(Tier::Local.letter(), 'L');
-        assert_eq!(Tier::Edge.to_string(), "E");
+        assert_eq!(Tier::Edge(0).to_string(), "E");
         assert_eq!(Tier::from_index(2), Tier::Cloud);
     }
 
@@ -228,8 +472,8 @@ mod tests {
     fn decision_accuracy() {
         let top5 = [89.9, 88.2, 84.9, 74.2, 88.9, 87.0, 83.2, 72.8];
         let d = Decision(vec![
-            Action { tier: Tier::Local, model: ModelId(0) },
-            Action { tier: Tier::Edge, model: ModelId(7) },
+            Action { placement: Placement::Local, model: ModelId(0) },
+            Action { placement: Placement::Edge(0), model: ModelId(7) },
         ]);
         assert!((d.avg_accuracy(&top5) - (89.9 + 72.8) / 2.0).abs() < 1e-9);
     }
@@ -245,7 +489,74 @@ mod tests {
 
     #[test]
     fn display_formats_match_paper_tables() {
-        let a = Action { tier: Tier::Cloud, model: ModelId(0) };
+        let a = Action { placement: Placement::Cloud, model: ModelId(0) };
         assert_eq!(a.to_string(), "d0, C");
+        // additional edges are numbered 1-based in both renderings; the
+        // first keeps the bare paper letter
+        assert_eq!(Placement::Edge(1).to_string(), "E2");
+        assert_eq!(format!("{:?}", Placement::Edge(0)), "Edge");
+        assert_eq!(format!("{:?}", Placement::Edge(2)), "Edge3");
+    }
+
+    fn topo(users: usize, edges: usize) -> Topology {
+        Topology::uniform(&vec![NetCond::Regular; users], NetCond::Regular, edges, [1, 2, 4])
+    }
+
+    #[test]
+    fn topology_dense_indexing_roundtrips() {
+        for edges in 1..=4 {
+            let t = topo(5, edges);
+            assert_eq!(t.num_placements(), edges + 2);
+            assert_eq!(t.actions_per_device(), (edges + 2) * NUM_MODELS);
+            for (i, p) in t.placements().into_iter().enumerate() {
+                assert_eq!(t.placement_index(p), i);
+                assert_eq!(t.placement_from_index(i), p);
+            }
+            for i in 0..t.actions_per_device() {
+                assert_eq!(t.action_index(t.action_from_index(i)), i);
+            }
+        }
+    }
+
+    #[test]
+    fn single_edge_topology_matches_paper_layout() {
+        let t = topo(3, 1);
+        assert_eq!(t.placements(), Placement::ALL.to_vec());
+        for i in 0..ACTIONS_PER_DEVICE {
+            assert_eq!(t.action_from_index(i), Action::from_index(i));
+            assert_eq!(t.action_index(Action::from_index(i)), Action::from_index(i).index());
+        }
+    }
+
+    #[test]
+    fn home_edge_round_robins_devices() {
+        let t = topo(6, 3);
+        let homes: Vec<usize> = (0..6).map(|i| t.home_edge(i)).collect();
+        assert_eq!(homes, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(t.ingress_edge(4, Placement::Cloud), Some(1));
+        assert_eq!(t.ingress_edge(4, Placement::Edge(2)), Some(2));
+        assert_eq!(t.ingress_edge(4, Placement::Local), None);
+    }
+
+    #[test]
+    fn admits_checks_edge_ids_and_arity() {
+        let t = topo(2, 2);
+        let ok = Decision(vec![
+            Action { placement: Placement::Edge(1), model: ModelId(0) },
+            Action { placement: Placement::Cloud, model: ModelId(3) },
+        ]);
+        assert!(t.admits(&ok));
+        let bad_edge = Decision(vec![
+            Action { placement: Placement::Edge(2), model: ModelId(0) },
+            Action { placement: Placement::Local, model: ModelId(0) },
+        ]);
+        assert!(!t.admits(&bad_edge));
+        assert!(!t.admits(&Decision(vec![ok.0[1]])));
+    }
+
+    #[test]
+    #[should_panic(expected = "Topology::placement_index")]
+    fn paper_index_rejects_multi_edge_placements() {
+        let _ = Placement::Edge(1).index();
     }
 }

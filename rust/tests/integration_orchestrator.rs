@@ -21,7 +21,7 @@ fn fixed_strategies_reproduce_fig1b_shape() {
     let mut cloud = Vec::new();
     for users in 1..=5 {
         for (tier, out) in
-            [(Tier::Local, &mut device), (Tier::Edge, &mut edge), (Tier::Cloud, &mut cloud)]
+            [(Tier::Local, &mut device), (Tier::Edge(0), &mut edge), (Tier::Cloud, &mut cloud)]
         {
             let mut o = Orchestrator::new(
                 env(Scenario::exp_a(users), AccuracyConstraint::Max, 3),
@@ -118,10 +118,10 @@ fn per_scenario_optimal_single_user_matches_table8() {
     // Table 8 single-user decisions: EXP-A -> cloud, EXP-D -> local.
     let a = env(Scenario::exp_a(1), AccuracyConstraint::Max, 6);
     let (d, _) = bruteforce::optimal(&a, a.threshold).unwrap();
-    assert_eq!(d.0[0].tier, Tier::Cloud, "EXP-A");
+    assert_eq!(d.0[0].placement, Tier::Cloud, "EXP-A");
     let dd = env(Scenario::exp_d(1), AccuracyConstraint::Max, 6);
     let (d, _) = bruteforce::optimal(&dd, dd.threshold).unwrap();
-    assert_eq!(d.0[0].tier, Tier::Local, "EXP-D");
+    assert_eq!(d.0[0].placement, Tier::Local, "EXP-D");
 }
 
 #[test]

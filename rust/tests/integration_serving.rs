@@ -26,8 +26,8 @@ fn decision(users: usize, pattern: &[(Tier, u8)]) -> Decision {
     Decision(
         (0..users)
             .map(|i| {
-                let (tier, m) = pattern[i % pattern.len()];
-                Action { tier, model: ModelId(m) }
+                let (placement, m) = pattern[i % pattern.len()];
+                Action { placement, model: ModelId(m) }
             })
             .collect(),
     )
@@ -40,7 +40,7 @@ fn serve_round_conserves_requests() {
     let cal = Calibration::default();
     let cluster = Cluster::new(users, &cal, rt);
     let network = Network::new(Scenario::exp_a(users), cal);
-    let router = Router::new(decision(users, &[(Tier::Local, 7), (Tier::Edge, 7), (Tier::Cloud, 7)]));
+    let router = Router::new(decision(users, &[(Tier::Local, 7), (Tier::Edge(0), 7), (Tier::Cloud, 7)]));
     let mut wl = WorkloadGen::new(eeco::sim::Arrival::Periodic { period_ms: 1.0 }, users, 1);
     let reqs = wl.sync_round(0.0);
     let recs = serve_round(&cluster, &network, &router, &reqs, &fast_cfg()).unwrap();
@@ -59,7 +59,7 @@ fn latency_components_are_positive_and_sum() {
     let cal = Calibration::default();
     let cluster = Cluster::new(users, &cal, rt);
     let network = Network::new(Scenario::exp_b(users), cal);
-    let router = Router::new(decision(users, &[(Tier::Edge, 3), (Tier::Cloud, 3)]));
+    let router = Router::new(decision(users, &[(Tier::Edge(0), 3), (Tier::Cloud, 3)]));
     let mut wl = WorkloadGen::new(eeco::sim::Arrival::Periodic { period_ms: 1.0 }, users, 2);
     let recs =
         serve_round(&cluster, &network, &router, &wl.sync_round(0.0), &fast_cfg()).unwrap();
@@ -79,7 +79,7 @@ fn same_model_same_node_requests_get_batched() {
     let cluster = Cluster::new(users, &cal, rt);
     let network = Network::new(Scenario::exp_a(users), cal);
     // all four offload d7 to the edge -> one batch of 4
-    let router = Router::new(decision(users, &[(Tier::Edge, 7)]));
+    let router = Router::new(decision(users, &[(Tier::Edge(0), 7)]));
     let mut wl = WorkloadGen::new(eeco::sim::Arrival::Periodic { period_ms: 1.0 }, users, 3);
     let recs =
         serve_round(&cluster, &network, &router, &wl.sync_round(0.0), &fast_cfg()).unwrap();
@@ -95,7 +95,7 @@ fn weak_scenario_reports_higher_network_cost() {
     let cluster = Cluster::new(users, &cal, rt);
     let run = |scen: Scenario| {
         let network = Network::new(scen, Calibration::default());
-        let router = Router::new(decision(users, &[(Tier::Edge, 7)]));
+        let router = Router::new(decision(users, &[(Tier::Edge(0), 7)]));
         let mut wl = WorkloadGen::new(eeco::sim::Arrival::Periodic { period_ms: 1.0 }, users, 4);
         serve_round(&cluster, &network, &router, &wl.sync_round(0.0), &fast_cfg()).unwrap()[0]
             .network_ms

@@ -163,9 +163,9 @@ fn serve_trace_conserves_requests_through_the_batcher() {
     let cluster = eeco::cluster::Cluster::new(users, &cal, rt);
     let network = eeco::network::Network::new(Scenario::exp_a(users), cal);
     let decision = Decision(vec![
-        Action { tier: Tier::Edge, model: ModelId(7) },
-        Action { tier: Tier::Edge, model: ModelId(7) },
-        Action { tier: Tier::Cloud, model: ModelId(7) },
+        Action { placement: Tier::Edge(0), model: ModelId(7) },
+        Action { placement: Tier::Edge(0), model: ModelId(7) },
+        Action { placement: Tier::Cloud, model: ModelId(7) },
     ]);
     let router = eeco::coordinator::Router::new(decision);
     let cfg = eeco::coordinator::ServeConfig { time_scale: 0.01, max_batch: 4, window_ms: 1.0 };
@@ -205,7 +205,7 @@ fn env_rounds_still_match_closed_form_after_des_rewire() {
     );
     env.freeze();
     for m in [0u8, 3, 7] {
-        let d = Decision::uniform(users, Action { tier: Tier::Edge, model: ModelId(m) });
+        let d = Decision::uniform(users, Action { placement: Tier::Edge(0), model: ModelId(m) });
         let expected = env.expected_avg_ms(&d);
         let out = env.step(&d);
         assert!(

@@ -5,7 +5,7 @@
 use eeco::coordinator::{Batcher, Router};
 use eeco::monitor::{self, NodeState, SystemState};
 use eeco::prelude::*;
-use eeco::sim::{Env, ResponseModel};
+use eeco::sim::{Env, ResponseModel, RoundCtx};
 use eeco::util::prop::forall;
 use eeco::util::rng::Rng;
 
@@ -60,7 +60,7 @@ fn prop_offload_vector_sums_to_one() {
         |&i| {
             let a = Action::from_index(i);
             let mut o = [0u8; 3];
-            o[a.tier.index()] = 1;
+            o[a.placement.index()] = 1;
             if o.iter().map(|&x| x as usize).sum::<usize>() == 1 && a.index() == i {
                 Ok(())
             } else {
@@ -181,7 +181,7 @@ fn prop_latency_monotone_in_contention() {
         0xA6,
         |rng| (rng.range(1, 5), rng.below(8) as u8, rng.bool(0.5)),
         |&(k, model, edge)| {
-            let tier = if edge { Tier::Edge } else { Tier::Cloud };
+            let tier = if edge { Tier::Edge(0) } else { Tier::Cloud };
             let net = eeco::network::Network::new(Scenario::exp_a(5), Calibration::default());
             let rm = ResponseModel::new(net);
             let sys = SystemState {
@@ -189,11 +189,12 @@ fn prop_latency_monotone_in_contention() {
                 cloud: NodeState::idle(NetCond::Regular),
                 devices: vec![NodeState::idle(NetCond::Regular); 5],
             };
-            let mut counts = [0usize; 3];
-            counts[tier.index()] = k;
-            let t1 = rm.device_response_ms(0, ModelId(model), tier, &counts, &sys);
-            counts[tier.index()] = k + 1;
-            let t2 = rm.device_response_ms(0, ModelId(model), tier, &counts, &sys);
+            let ctx = |k: usize| {
+                let (e, c) = if edge { (k, 0) } else { (0, k) };
+                RoundCtx { edge_counts: vec![e], cloud_count: c, ingress_counts: vec![k] }
+            };
+            let t1 = rm.device_response_ms(0, ModelId(model), tier, &ctx(k), &sys);
+            let t2 = rm.device_response_ms(0, ModelId(model), tier, &ctx(k + 1), &sys);
             if t2 >= t1 {
                 Ok(())
             } else {

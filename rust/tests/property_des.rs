@@ -163,6 +163,162 @@ fn prop_fixed_seed_is_bit_exact() {
     );
 }
 
+// --- N-edge topology properties (the multi-edge generalization must keep
+// --- every invariant the single-edge core established) ------------------
+
+fn multi_edge_model(users: usize, edges: usize) -> ResponseModel {
+    ResponseModel::new(eeco::network::Network::with_edges(
+        Scenario::exp_b(users),
+        Calibration::default(),
+        edges,
+    ))
+}
+
+fn rand_decision_for(rng: &mut Rng, topo: &eeco::types::Topology) -> Decision {
+    Decision(
+        (0..topo.users())
+            .map(|_| topo.action_from_index(rng.below(topo.actions_per_device())))
+            .collect(),
+    )
+}
+
+#[test]
+fn prop_multi_edge_requests_conserved_and_times_monotone() {
+    forall(
+        30,
+        0xE1,
+        |rng| (rng.range(1, 8), rng.range(1, 5), rng.next_u64()),
+        |&(users, edges, seed)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let state = eeco::monitor::TopoState::idle(&model.net.topo);
+            let horizon = 5000.0;
+            let trace =
+                schedule(ArrivalProcess::Poisson { rate_per_s: 2.0 }, users, horizon, seed);
+            let out = des::run_open_loop(&model, &state, &decision, &trace, horizon, seed);
+            if out.completed.len() != trace.len() {
+                return Err(format!(
+                    "edges={edges}: {} in, {} out",
+                    trace.len(),
+                    out.completed.len()
+                ));
+            }
+            let mut got: Vec<u64> = out.completed.iter().map(|c| c.id).collect();
+            got.sort_unstable();
+            let mut want: Vec<u64> = trace.iter().map(|r| r.id).collect();
+            want.sort_unstable();
+            if got != want {
+                return Err("request ids lost or duplicated".into());
+            }
+            for (i, w) in out.event_times.windows(2).enumerate() {
+                if w[1] < w[0] {
+                    return Err(format!("edges={edges} event {i}: {} -> {}", w[0], w[1]));
+                }
+            }
+            for c in &out.completed {
+                let sum = c.path_ms + c.link_wait_ms + c.queue_ms + c.service_ms;
+                if c.link_wait_ms < -1e-9
+                    || c.queue_ms < -1e-9
+                    || (c.response_ms - sum).abs() > 1e-6
+                {
+                    return Err(format!("bad decomposition for req {}: {c:?}", c.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_multi_edge_fixed_seed_is_bit_exact() {
+    forall(
+        25,
+        0xE2,
+        |rng| (rng.range(1, 8), rng.range(1, 5), rng.next_u64()),
+        |&(users, edges, seed)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let state = eeco::monitor::TopoState::idle(&model.net.topo);
+            let horizon = 4000.0;
+            let trace =
+                schedule(ArrivalProcess::Poisson { rate_per_s: 1.5 }, users, horizon, seed);
+            let a = des::run_open_loop(&model, &state, &decision, &trace, horizon, seed);
+            let b = des::run_open_loop(&model, &state, &decision, &trace, horizon, seed);
+            if a.completed.len() != b.completed.len() {
+                return Err("different completion counts".into());
+            }
+            for (x, y) in a.completed.iter().zip(&b.completed) {
+                if x.id != y.id
+                    || x.response_ms.to_bits() != y.response_ms.to_bits()
+                    || x.depart_ms.to_bits() != y.depart_ms.to_bits()
+                {
+                    return Err(format!("diverged at req {}: {x:?} vs {y:?}", x.id));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_multi_edge_sync_round_matches_closed_form() {
+    forall(
+        60,
+        0xE3,
+        |rng| (rng.range(1, 6), rng.range(1, 5), rng.next_u64()),
+        |&(users, edges, seed)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let state = eeco::monitor::TopoState::idle(&model.net.topo);
+            let ours = des::sync_round_responses(&model, &decision, &state);
+            let closed = model.expected_responses(&decision, &state);
+            for (i, (a, b)) in ours.iter().zip(&closed).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("edges={edges} device {i}: des {a} != closed {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_single_edge_topo_state_bit_identical_to_system_state() {
+    // The TopoState path through the same topology must reproduce the
+    // paper-shaped SystemState path exactly — the bridge that keeps every
+    // seed behavior intact under the topology API.
+    forall(
+        60,
+        0xE4,
+        |rng| {
+            let users = rng.range(1, 6);
+            (users, rand_decision(rng, users), rand_state(rng, users))
+        },
+        |(users, decision, state)| {
+            let model = model_for(*users);
+            let topo_state = eeco::monitor::TopoState {
+                edges: vec![state.edge],
+                cloud: state.cloud,
+                devices: state.devices.clone(),
+            };
+            let a = model.expected_responses(decision, state);
+            let b = model.expected_responses(decision, &topo_state);
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                if x.to_bits() != y.to_bits() {
+                    return Err(format!("device {i}: system {x} != topo {y}"));
+                }
+            }
+            if eeco::monitor::encode(state) != eeco::monitor::encode(&topo_state) {
+                return Err("encodings diverged".into());
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 fn prop_sync_round_adapter_matches_closed_form_exactly() {
     forall(

@@ -1,0 +1,179 @@
+//! Regression pins for the topology-generalized placement API: the
+//! default 3-node (single-edge) topology must reproduce the seed's
+//! closed-form numbers *bit-for-bit*.
+//!
+//! The seed's pre-topology response law is restated here verbatim —
+//! per-tier message paths, the shared-ingress queueing expectation, the
+//! busy/background multipliers, the monitoring fraction — and checked
+//! against `ResponseModel::expected_responses` over random scenarios,
+//! decisions and background states. The table-level outputs (decision
+//! strings, Table 12 message totals, the Table 8 single-user optima) are
+//! pinned alongside.
+
+use eeco::agent::bruteforce;
+use eeco::monitor::{binary_level, NodeState, SystemState};
+use eeco::network::{MsgKind, Network};
+use eeco::prelude::*;
+use eeco::sim::{Env, ResponseModel};
+use eeco::util::prop::forall;
+use eeco::util::rng::Rng;
+
+/// The seed's `Network::path_overhead_ms`, restated: control messages on
+/// the device link, plus the upload for offloaded execution, plus the full
+/// message set over the edge->cloud hop for cloud execution.
+fn seed_path_overhead_ms(scen: &Scenario, cal: &Calibration, device: usize, tier: Tier) -> f64 {
+    let dev = scen.device_cond(device);
+    let ctl = MsgKind::Update.cost_ms(cal, dev) + MsgKind::Decision.cost_ms(cal, dev);
+    match tier {
+        Tier::Local => ctl,
+        Tier::Edge(_) => ctl + MsgKind::Request.cost_ms(cal, dev),
+        Tier::Cloud => {
+            let e = scen.edge_cond;
+            ctl + MsgKind::Request.cost_ms(cal, dev)
+                + MsgKind::Request.cost_ms(cal, e)
+                + MsgKind::Update.cost_ms(cal, e)
+                + MsgKind::Decision.cost_ms(cal, e)
+        }
+    }
+}
+
+/// The seed's per-device closed-form response: contended compute under
+/// background multipliers, plus path overhead, plus the (k-1)/2 shared-
+/// link expectation over *all* offloaded requests, times the monitoring
+/// fraction. Float-operation order matches the seed exactly.
+fn seed_expected_responses(
+    scen: &Scenario,
+    cal: &Calibration,
+    decision: &Decision,
+    sys: &SystemState,
+) -> Vec<f64> {
+    let mut counts = [0usize; 3];
+    for a in &decision.0 {
+        counts[a.placement.class_index()] += 1;
+    }
+    let offloaded = counts[1] + counts[2];
+    decision
+        .0
+        .iter()
+        .enumerate()
+        .map(|(device, a)| {
+            let tier = a.placement;
+            let k = match tier {
+                Tier::Local => 1,
+                Tier::Edge(_) => counts[1],
+                Tier::Cloud => counts[2],
+            };
+            let mut compute = cal.compute_ms_contended(a.model, tier, k);
+            let node = match tier {
+                Tier::Local => &sys.devices[device],
+                Tier::Edge(_) => &sys.edge,
+                Tier::Cloud => &sys.cloud,
+            };
+            match tier {
+                Tier::Local => {
+                    if binary_level(node.cpu) == 1 {
+                        compute *= cal.busy_cpu_factor;
+                    }
+                }
+                _ => {
+                    compute *= 1.0 + 0.6 * node.cpu;
+                }
+            }
+            if binary_level(node.mem) == 1 {
+                compute *= 1.0 + 0.2;
+            }
+            let queueing = if tier == Tier::Local || offloaded <= 1 {
+                0.0
+            } else {
+                (offloaded - 1) as f64 / 2.0 * cal.link_queue_ms
+            };
+            let subtotal =
+                compute + seed_path_overhead_ms(scen, cal, device, tier) + queueing;
+            subtotal * (1.0 + cal.monitor_overhead_frac)
+        })
+        .collect()
+}
+
+fn rand_state(rng: &mut Rng, scen: &Scenario) -> SystemState {
+    let node = |rng: &mut Rng, cond| NodeState { cpu: rng.f64(), mem: rng.f64(), cond };
+    SystemState {
+        edge: node(rng, scen.edge_cond),
+        cloud: node(rng, NetCond::Regular),
+        devices: (0..scen.users()).map(|i| node(rng, scen.device_cond(i))).collect(),
+    }
+}
+
+#[test]
+fn default_topology_reproduces_seed_closed_form_bit_exact() {
+    forall(
+        150,
+        0xF1,
+        |rng| {
+            let users = rng.range(1, 7);
+            let scen = *rng.choose(&["exp-a", "exp-b", "exp-c", "exp-d"]);
+            (users, scen.to_string(), rng.next_u64())
+        },
+        |(users, scen_name, seed)| {
+            let scen = Scenario::by_name(scen_name, *users).unwrap();
+            let cal = Calibration::default();
+            let model = ResponseModel::new(Network::new(scen.clone(), cal.clone()));
+            let mut rng = Rng::new(*seed);
+            let decision = Decision(
+                (0..*users)
+                    .map(|_| Action::from_index(rng.below(ACTIONS_PER_DEVICE)))
+                    .collect(),
+            );
+            let sys = rand_state(&mut rng, &scen);
+            let seed_law = seed_expected_responses(&scen, &cal, &decision, &sys);
+            let topo_law = model.expected_responses(&decision, &sys);
+            for (i, (a, b)) in seed_law.iter().zip(&topo_law).enumerate() {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "{scen_name}/{users}u device {i}: seed {a} != topology {b}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn path_overheads_pin_table12_totals() {
+    // The seed's pinned path costs: 1.4 (local control), 21.4 (edge =
+    // Table 12 regular total), 42.8 (cloud pays both hops), 141.0 (weak
+    // Table 12 total).
+    let n = Network::new(Scenario::exp_a(5), Calibration::default());
+    assert!((n.path_overhead_ms(0, Tier::Local) - 1.4).abs() < 1e-9);
+    assert!((n.path_overhead_ms(0, Tier::Edge(0)) - 21.4).abs() < 1e-9);
+    assert!((n.path_overhead_ms(0, Tier::Cloud) - 42.8).abs() < 1e-9);
+    let w = Network::new(Scenario::exp_d(5), Calibration::default());
+    assert!((w.path_overhead_ms(0, Tier::Edge(0)) - 141.0).abs() < 1e-9);
+}
+
+#[test]
+fn table8_single_user_decisions_pin_seed_strings() {
+    // Table 8's single-user rows, rendered exactly as the seed printed
+    // them (the L/E/C letters come from the Placement display view).
+    let max = AccuracyConstraint::Max;
+    let e = Env::new(Scenario::exp_a(1), Calibration::default(), max, 1);
+    let (d, _) = bruteforce::optimal(&e, max.threshold()).unwrap();
+    assert_eq!(d.to_string(), "{d0, C}");
+    let e = Env::new(Scenario::exp_d(1), Calibration::default(), max, 1);
+    let (d, _) = bruteforce::optimal(&e, max.threshold()).unwrap();
+    assert_eq!(d.to_string(), "{d0, L}");
+}
+
+#[test]
+fn placement_letters_render_like_seed_tiers() {
+    assert_eq!(Tier::Local.to_string(), "L");
+    assert_eq!(Tier::Edge(0).to_string(), "E");
+    assert_eq!(Tier::Cloud.to_string(), "C");
+    let a = Action { placement: Tier::Edge(0), model: ModelId(3) };
+    assert_eq!(a.to_string(), "d3, E");
+    // the paper's 24-action dense layout is unchanged
+    assert_eq!(ACTIONS_PER_DEVICE, 24);
+    for (i, a) in Action::all().enumerate() {
+        assert_eq!(a.index(), i);
+    }
+}
