@@ -57,5 +57,21 @@ fn main() {
         agent.learn(&s, &d, out.reward, &s2);
     });
 
+    // Training rounds/second through the orchestrator at the paper's
+    // 5-user scale (Table 11's budget driver): each iteration is 100
+    // cached rounds of decide + step + learn, so rounds/sec is
+    // 100 / (mean seconds per iteration). This is the loop the
+    // allocation-free sync path + threaded state encoding speed up.
+    let env5 =
+        Env::new(Scenario::exp_a(5), Calibration::default(), AccuracyConstraint::AtLeast(85.0), 4);
+    let agent5 = Box::new(eeco::agent::qlearning::QTableAgent::new(
+        5,
+        Hyper::paper_defaults(Algo::QLearning, 5),
+        eeco::agent::ActionSet::full(),
+        5,
+    ));
+    let mut orch = eeco::orchestrator::Orchestrator::new(env5, agent5);
+    b.run("train_100rounds_ql_n5", || orch.train_full(100, 100).steps);
+
     b.save();
 }

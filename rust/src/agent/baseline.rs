@@ -19,11 +19,19 @@ pub struct FixedAgent {
     pub placement: Placement,
     users: usize,
     steps: usize,
+    /// Rendered once at construction so `Agent::name` can borrow.
+    name: String,
 }
 
 impl FixedAgent {
     pub fn new(placement: Placement, users: usize) -> FixedAgent {
-        FixedAgent { placement, users, steps: 0 }
+        let name = match placement {
+            Placement::Local => "Device only".to_string(),
+            Placement::Edge(0) => "Edge only".to_string(),
+            Placement::Edge(k) => format!("Edge-{} only", k + 1),
+            Placement::Cloud => "Cloud only".to_string(),
+        };
+        FixedAgent { placement, users, steps: 0, name }
     }
 
     /// The paper's three fixed strategies (single-edge topology).
@@ -46,13 +54,8 @@ impl Agent for FixedAgent {
         self.steps += 1; // fixed strategies don't learn, but count rounds
     }
 
-    fn name(&self) -> String {
-        match self.placement {
-            Placement::Local => "Device only".into(),
-            Placement::Edge(0) => "Edge only".into(),
-            Placement::Edge(k) => format!("Edge-{} only", k + 1),
-            Placement::Cloud => "Cloud only".into(),
-        }
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn steps(&self) -> usize {
@@ -119,7 +122,7 @@ mod tests {
         let topo = Topology::uniform(&[NetCond::Regular; 4], NetCond::Regular, 3, [1, 2, 4]);
         let agents = FixedAgent::all_for(&topo);
         assert_eq!(agents.len(), 5);
-        let names: Vec<String> = agents.iter().map(|a| a.name()).collect();
+        let names: Vec<String> = agents.iter().map(|a| a.name().to_string()).collect();
         assert_eq!(names[0], "Device only");
         assert_eq!(names[1], "Edge only");
         assert_eq!(names[2], "Edge-2 only");

@@ -12,7 +12,8 @@
 //! small N.
 
 use crate::models;
-use crate::sim::latency::RoundCtx;
+use crate::monitor::StateView;
+use crate::sim::latency::{ResponseModel, RoundCtx};
 use crate::sim::Env;
 use crate::types::{Action, Decision, ModelId, ACTIONS_PER_DEVICE, NUM_MODELS};
 
@@ -34,8 +35,24 @@ pub const MAX_ORACLE_ASSIGNMENTS: usize = 729;
 /// all-d0) or the instance exceeds the [`MAX_ORACLE_ASSIGNMENTS`] sweep
 /// budget (exhaustive search impractical).
 pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
-    let n = env.users();
-    let topo = env.topology();
+    optimal_for(&env.model, &env.state, threshold)
+}
+
+/// [`optimal`] over an explicit (response model, background state) pair —
+/// a pure function of its inputs, which is what lets the prediction-
+/// accuracy experiment fan its per-trial oracle calls out across a thread
+/// pool. Every per-assignment buffer (placement vector, round context,
+/// cost matrix, DP rows, parent table) is allocated once and reused
+/// across the up-to-[`MAX_ORACLE_ASSIGNMENTS`] placement sweep.
+pub fn optimal_for<S: StateView>(
+    model: &ResponseModel,
+    state: &S,
+    threshold: f64,
+) -> Option<(Decision, f64)> {
+    let n = state.users();
+    let topo = &model.net.topo;
+    assert_eq!(topo.users(), n, "topology arity vs state");
+    assert_eq!(topo.num_edges(), state.num_edges(), "topology edges vs state");
     let places = topo.placements();
     let num_p = places.len();
     // Overflow-safe budget check before materializing num_p^n.
@@ -53,30 +70,39 @@ pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
         return None; // not satisfiable even with all-d0
     }
 
+    const INF: f64 = f64::INFINITY;
     let mut best: Option<(Decision, f64)> = None;
+    // Hoisted per-assignment scratch: refilled, never reallocated, inside
+    // the placement sweep.
     let mut placements = vec![places[0]; n];
+    let mut ctx = RoundCtx::from_placements(topo, placements.iter().copied());
+    let mut cost = vec![[0.0f64; NUM_MODELS]; n];
+    let mut dp = vec![INF; a_need + 1];
+    let mut next = vec![INF; a_need + 1];
+    // Flattened parent table, row i at [i * (a_need + 1), ...). Entries
+    // are only ever read along chains the current assignment's DP wrote
+    // (a finite dp cell implies its parent was set this iteration), so
+    // stale values from earlier assignments are never observed.
+    let mut parent: Vec<(usize, usize)> = vec![(0, 0); n * (a_need + 1)];
+    let mut ms = vec![0usize; n];
     for code in 0..assignments {
         let mut c = code;
         for p in placements.iter_mut() {
             *p = places[c % num_p];
             c /= num_p;
         }
-        let ctx = RoundCtx::from_placements(topo, placements.iter().copied());
+        ctx.rebuild(topo, placements.iter().copied());
         // Per-device, per-model expected response under this assignment.
-        let mut cost = vec![[0.0f64; NUM_MODELS]; n];
         for (i, &p) in placements.iter().enumerate() {
             for m in 0..NUM_MODELS {
-                cost[i][m] =
-                    env.model.device_response_ms(i, ModelId(m as u8), p, &ctx, &env.state);
+                cost[i][m] = model.device_response_ms(i, ModelId(m as u8), p, &ctx, state);
             }
         }
         // DP over devices with capped accuracy sum.
-        const INF: f64 = f64::INFINITY;
-        let mut dp = vec![INF; a_need + 1];
-        let mut parent: Vec<Vec<(usize, usize)>> = vec![vec![(0, 0); a_need + 1]; n];
+        dp.fill(INF);
         dp[0] = 0.0;
         for i in 0..n {
-            let mut next = vec![INF; a_need + 1];
+            next.fill(INF);
             for a in 0..=a_need {
                 if dp[a] == INF {
                     continue;
@@ -86,11 +112,11 @@ pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
                     let c2 = dp[a] + cost[i][m];
                     if c2 < next[a2] {
                         next[a2] = c2;
-                        parent[i][a2] = (a, m);
+                        parent[i * (a_need + 1) + a2] = (a, m);
                     }
                 }
             }
-            dp = next;
+            std::mem::swap(&mut dp, &mut next);
         }
         if dp[a_need] == INF {
             continue;
@@ -98,10 +124,9 @@ pub fn optimal(env: &Env, threshold: f64) -> Option<(Decision, f64)> {
         let total = dp[a_need] / n as f64;
         if best.as_ref().map(|(_, b)| total < *b).unwrap_or(true) {
             // Reconstruct model choices.
-            let mut ms = vec![0usize; n];
             let mut a = a_need;
             for i in (0..n).rev() {
-                let (pa, m) = parent[i][a];
+                let (pa, m) = parent[i * (a_need + 1) + a];
                 ms[i] = m;
                 a = pa;
             }
@@ -177,6 +202,25 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn optimal_for_matches_env_entry_and_is_pure() {
+        // The (model, state) entry point must agree with the Env wrapper
+        // bitwise, and repeated calls (buffer-reuse hygiene inside the
+        // sweep) must be identical — the contract the parallel oracle in
+        // prediction_accuracy relies on.
+        for (scenario, users) in [("exp-a", 3usize), ("exp-b", 4)] {
+            let c = AccuracyConstraint::AtLeast(85.0);
+            let e = env(scenario, users, c);
+            let a = optimal(&e, c.threshold()).unwrap();
+            let b = optimal_for(&e.model, &e.state, c.threshold()).unwrap();
+            assert_eq!(a.0, b.0, "{scenario}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "{scenario}");
+            let b2 = optimal_for(&e.model, &e.state, c.threshold()).unwrap();
+            assert_eq!(b.0, b2.0);
+            assert_eq!(b.1.to_bits(), b2.1.to_bits());
         }
     }
 

@@ -208,8 +208,8 @@ impl Agent for DqnAgent {
         }
     }
 
-    fn name(&self) -> String {
-        "Deep Q-Learning".into()
+    fn name(&self) -> &str {
+        "Deep Q-Learning"
     }
 
     fn steps(&self) -> usize {

@@ -43,7 +43,9 @@ pub trait Agent {
         next_state: &EncodedState,
     );
 
-    fn name(&self) -> String;
+    /// Human-readable policy name (borrowed: `name` sits on per-round
+    /// logging paths, so it must not allocate).
+    fn name(&self) -> &str;
 
     /// Number of learn() calls so far (training-step counter for the
     /// convergence analyses of Fig 6/7, Table 11).

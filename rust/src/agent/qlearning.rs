@@ -96,9 +96,12 @@ impl QTableAgent {
         self.table.len()
     }
 
-    /// Export the raw table (transfer learning / checkpoints).
-    pub fn export_table(&self) -> HashMap<u64, Vec<f64>> {
-        self.table.clone()
+    /// Borrow the raw table (transfer learning / checkpoints). Callers
+    /// that need ownership clone at the call site — the previous
+    /// clone-on-every-export copied the whole value function even for
+    /// read-only consumers like the checkpoint writer.
+    pub fn export_table(&self) -> &HashMap<u64, Vec<f64>> {
+        &self.table
     }
 
     pub fn import_table(&mut self, table: HashMap<u64, Vec<f64>>) {
@@ -161,8 +164,8 @@ impl Agent for QTableAgent {
         self.steps += 1;
     }
 
-    fn name(&self) -> String {
-        self.name.clone()
+    fn name(&self) -> &str {
+        &self.name
     }
 
     fn steps(&self) -> usize {
@@ -248,8 +251,8 @@ impl Agent for ExactJointAgent {
         self.steps += 1;
     }
 
-    fn name(&self) -> String {
-        "Q-Learning (exact joint)".into()
+    fn name(&self) -> &str {
+        "Q-Learning (exact joint)"
     }
 
     fn steps(&self) -> usize {

@@ -12,7 +12,7 @@ use super::qlearning::QTableAgent;
 pub fn warm_start_qtable(donor: &QTableAgent, fresh: &mut QTableAgent) {
     assert_eq!(donor.users, fresh.users, "user count mismatch");
     assert_eq!(donor.actions.len(), fresh.actions.len(), "action set mismatch");
-    fresh.import_table(donor.export_table());
+    fresh.import_table(donor.export_table().clone());
 }
 
 /// Warm-start a DQN agent from a donor's parameters.

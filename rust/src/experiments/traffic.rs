@@ -5,14 +5,17 @@
 //! offloading, arXiv 2103.07811) evaluates under, which the synchronous
 //! §4.2.2 environment cannot express.
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Result};
 
-use crate::config::Scenario;
+use crate::config::{Calibration, Scenario};
 use crate::metrics::{render_table, Csv, TrafficMetrics};
 use crate::monitor::TopoState;
 use crate::network::Network;
-use crate::sim::{arrivals, des, ArrivalProcess, ResponseModel};
+use crate::sim::{arrivals, des, ArrivalProcess, Env, ResponseModel};
 use crate::types::{AccuracyConstraint, Action, Decision, ModelId, Placement, Tier, Topology};
+use crate::util::pool::ThreadPool;
 
 use super::ExpCtx;
 
@@ -56,18 +59,98 @@ pub fn sharded_table8_decision(topo: &Topology) -> Decision {
 /// ~2.3 req/s/device capacity of the d0 placement into overload.
 pub const SWEEP_RATES: [f64; 6] = [0.25, 0.5, 1.0, 1.5, 2.0, 3.0];
 
+/// A sweep pool sized to the work: one worker per cell up to the machine's
+/// parallelism, or None when a single worker would just add overhead.
+fn sweep_pool(cells: usize) -> Option<ThreadPool> {
+    let threads =
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(cells);
+    (threads > 1).then(|| ThreadPool::new(threads, "sweep"))
+}
+
+/// One sweep cell: a labeled arrival process scored by an open-loop DES
+/// run of `decision` under `env`'s current background state.
+fn sweep_cell(
+    env: &Env,
+    decision: &Decision,
+    process: ArrivalProcess,
+    horizon_ms: f64,
+    seed: u64,
+) -> TrafficMetrics {
+    let trace = arrivals::schedule(process, env.users(), horizon_ms, seed);
+    let out = env.open_loop(decision, &trace, horizon_ms, seed ^ 0xDE5);
+    TrafficMetrics::from_outcome(decision, &out)
+}
+
+/// Score every `(label, process)` cell of an open-loop sweep. With a pool
+/// the cells run in parallel; each cell is an independent, deterministic
+/// DES run and results land back in input order, so the table is
+/// row-for-row bit-identical to the serial path (the property test pins
+/// this) — only wall-clock changes.
+pub fn sweep_cells(
+    env: &Arc<Env>,
+    decision: &Decision,
+    cells: Vec<(String, ArrivalProcess)>,
+    horizon_ms: f64,
+    seed: u64,
+    pool: Option<&ThreadPool>,
+) -> Vec<(String, ArrivalProcess, TrafficMetrics)> {
+    match pool {
+        Some(pool) => {
+            let env = Arc::clone(env);
+            let decision = decision.clone();
+            pool.map_indexed(cells, move |_, (label, process)| {
+                let m = sweep_cell(&env, &decision, process, horizon_ms, seed);
+                (label, process, m)
+            })
+        }
+        None => cells
+            .into_iter()
+            .map(|(label, process)| {
+                let m = sweep_cell(env, decision, process, horizon_ms, seed);
+                (label, process, m)
+            })
+            .collect(),
+    }
+}
+
 /// `traffic_sweep`: seeded Poisson λ sweep at 10 users (EXP-A), plus a
 /// burstiness comparison (MMPP at an equal mean rate) at one midpoint.
+/// The cells are independent DES runs, so they execute in parallel on a
+/// [`ThreadPool`] — row order and bytes identical to the serial sweep.
 pub fn traffic_sweep(ctx: &ExpCtx) -> Result<()> {
     let users = 10;
     let scenario = Scenario::exp_a(users);
     println!("\n== traffic_sweep: open-loop Poisson arrivals, {users} users, {scenario} ==");
-    let env = ctx.env(scenario, AccuracyConstraint::Max, ctx.cfg.seed);
+    let env = Arc::new(ctx.env(scenario, AccuracyConstraint::Max, ctx.cfg.seed));
     // shards edge-bound load across the configured edge set; identical to
     // the paper's Table 8 pattern on the default single-edge topology
     let decision = sharded_table8_decision(env.topology());
     let horizon_ms = ctx.cfg.traffic.horizon_ms;
     let seed = ctx.cfg.seed;
+
+    let mut cells: Vec<(String, ArrivalProcess)> = SWEEP_RATES
+        .iter()
+        .map(|&rate| ("poisson".to_string(), ArrivalProcess::Poisson { rate_per_s: rate }))
+        .collect();
+    // The process the `[traffic]` section / --arrival/--rate CLI selected
+    // (default: poisson at 1 req/s), at its own mean rate.
+    let configured = ctx.cfg.traffic.arrival().map_err(|e| anyhow!(e))?;
+    cells.push(("config".to_string(), configured));
+    // Burstiness at an equal mean rate: same offered load, worse tails.
+    // Skipped when the configured process is already bursty.
+    if !matches!(configured, ArrivalProcess::Mmpp { .. }) {
+        cells.push((
+            "mmpp".to_string(),
+            ArrivalProcess::Mmpp {
+                calm_rate_per_s: 0.25,
+                burst_rate_per_s: 1.75,
+                mean_phase_ms: 4000.0,
+            },
+        ));
+    }
+
+    let pool = sweep_pool(cells.len());
+    let results = sweep_cells(&env, &decision, cells, horizon_ms, seed, pool.as_ref());
 
     let mut csv = Csv::new(&[
         "process",
@@ -80,13 +163,10 @@ pub fn traffic_sweep(ctx: &ExpCtx) -> Result<()> {
         "mean_queue_ms",
     ]);
     let mut rows = Vec::new();
-    let mut run = |label: &str, process: ArrivalProcess| {
-        let trace = arrivals::schedule(process, users, horizon_ms, seed);
-        let out = env.open_loop(&decision, &trace, horizon_ms, seed ^ 0xDE5);
-        let m = TrafficMetrics::from_outcome(&decision, &out);
+    for (label, process, m) in &results {
         let rate = process.mean_rate_per_s();
         csv.row(&[
-            label.into(),
+            label.clone(),
             format!("{rate:.2}"),
             m.requests.to_string(),
             format!("{:.2}", m.throughput_rps),
@@ -96,7 +176,7 @@ pub fn traffic_sweep(ctx: &ExpCtx) -> Result<()> {
             format!("{:.1}", m.queueing.mean_ms),
         ]);
         rows.push(vec![
-            label.to_string(),
+            label.clone(),
             format!("{rate:.2}"),
             m.requests.to_string(),
             format!("{:.1}", m.throughput_rps),
@@ -105,26 +185,6 @@ pub fn traffic_sweep(ctx: &ExpCtx) -> Result<()> {
             format!("{:.0}", m.response.p99_ms),
             format!("{:.0}", m.queueing.mean_ms),
         ]);
-    };
-
-    for rate in SWEEP_RATES {
-        run("poisson", ArrivalProcess::Poisson { rate_per_s: rate });
-    }
-    // The process the `[traffic]` section / --arrival/--rate CLI selected
-    // (default: poisson at 1 req/s), at its own mean rate.
-    let configured = ctx.cfg.traffic.arrival().map_err(|e| anyhow!(e))?;
-    run("config", configured);
-    // Burstiness at an equal mean rate: same offered load, worse tails.
-    // Skipped when the configured process is already bursty.
-    if !matches!(configured, ArrivalProcess::Mmpp { .. }) {
-        run(
-            "mmpp",
-            ArrivalProcess::Mmpp {
-                calm_rate_per_s: 0.25,
-                burst_rate_per_s: 1.75,
-                mean_phase_ms: 4000.0,
-            },
-        );
     }
 
     print!(
@@ -139,13 +199,42 @@ pub fn traffic_sweep(ctx: &ExpCtx) -> Result<()> {
     Ok(())
 }
 
+/// One edge-count cell of the `multi_edge` sweep: build the N-edge
+/// network, play the Poisson trace through the DES, summarize. A pure
+/// function of its arguments — what makes the parallel sweep bit-identical
+/// to the serial one.
+#[allow(clippy::too_many_arguments)]
+fn multi_edge_cell(
+    scenario: &Scenario,
+    cal: &Calibration,
+    edges: usize,
+    users: usize,
+    rate: f64,
+    horizon_ms: f64,
+    seed: u64,
+) -> TrafficMetrics {
+    let net = Network::with_edges(scenario.clone(), cal.clone(), edges);
+    let model = ResponseModel::new(net);
+    let state = TopoState::idle(&model.net.topo);
+    let decision = sharded_table8_decision(&model.net.topo);
+    let trace = arrivals::schedule(
+        ArrivalProcess::Poisson { rate_per_s: rate },
+        users,
+        horizon_ms,
+        seed,
+    );
+    let out = des::run_open_loop(&model, &state, &decision, &trace, horizon_ms, seed ^ 0xED6E);
+    TrafficMetrics::from_outcome(&decision, &out)
+}
+
 /// `multi_edge`: sweep the edge-node count of the end-edge-cloud network
 /// (the `[topology] edges` / `--edges` range; default 1..=4) under
 /// Poisson load, reporting per-edge-count response percentiles and
 /// throughput. This is the multi-edge sharding payoff the ROADMAP names:
 /// the same offered load and placement pattern, spread over more edge
 /// nodes, relieves both the per-edge vCPU queues and the per-edge
-/// ingress links.
+/// ingress links. Edge counts are scored in parallel (input-order
+/// results), one independent DES run per cell.
 pub fn multi_edge(ctx: &ExpCtx) -> Result<()> {
     let users = ctx.cfg.users; // honored as-is (default 5)
     let scenario = ctx.cfg.scenario.resized(users);
@@ -165,6 +254,35 @@ pub fn multi_edge(ctx: &ExpCtx) -> Result<()> {
     let rate = ctx.cfg.traffic.rate_per_s;
     let seed = ctx.cfg.seed;
 
+    let edge_counts: Vec<usize> = (lo..=hi).collect();
+    let pool = sweep_pool(edge_counts.len());
+    let results: Vec<(usize, TrafficMetrics)> = match pool.as_ref() {
+        Some(p) => {
+            let scen = scenario.clone();
+            let cal = ctx.cfg.calibration.clone();
+            p.map_indexed(edge_counts, move |_, edges| {
+                (edges, multi_edge_cell(&scen, &cal, edges, users, rate, horizon_ms, seed))
+            })
+        }
+        None => edge_counts
+            .into_iter()
+            .map(|edges| {
+                (
+                    edges,
+                    multi_edge_cell(
+                        &scenario,
+                        &ctx.cfg.calibration,
+                        edges,
+                        users,
+                        rate,
+                        horizon_ms,
+                        seed,
+                    ),
+                )
+            })
+            .collect(),
+    };
+
     let mut csv = Csv::new(&[
         "edges",
         "rate_per_s",
@@ -176,19 +294,7 @@ pub fn multi_edge(ctx: &ExpCtx) -> Result<()> {
         "mean_queue_ms",
     ]);
     let mut rows = Vec::new();
-    for edges in lo..=hi {
-        let net = Network::with_edges(scenario.clone(), ctx.cfg.calibration.clone(), edges);
-        let model = ResponseModel::new(net);
-        let state = TopoState::idle(&model.net.topo);
-        let decision = sharded_table8_decision(&model.net.topo);
-        let trace = arrivals::schedule(
-            ArrivalProcess::Poisson { rate_per_s: rate },
-            users,
-            horizon_ms,
-            seed,
-        );
-        let out = des::run_open_loop(&model, &state, &decision, &trace, horizon_ms, seed ^ 0xED6E);
-        let m = TrafficMetrics::from_outcome(&decision, &out);
+    for (edges, m) in &results {
         csv.row(&[
             edges.to_string(),
             format!("{rate:.2}"),
@@ -308,6 +414,59 @@ mod tests {
             p95.last().unwrap() <= &(p95[0] + 1e-6),
             "p95 worsened with more edges: {p95:?}"
         );
+    }
+
+    #[test]
+    fn parallel_sweep_cells_identical_to_serial() {
+        // The determinism contract of the parallelized rate sweep: with
+        // the same cells, the pooled path returns row-for-row identical
+        // metrics (noise and all — each cell derives everything from its
+        // own seed) in input order.
+        let users = 6;
+        let env = std::sync::Arc::new(crate::sim::Env::new(
+            Scenario::exp_a(users),
+            crate::config::Calibration::default(),
+            AccuracyConstraint::Max,
+            5,
+        ));
+        let decision = sharded_table8_decision(env.topology());
+        let cells: Vec<(String, ArrivalProcess)> = vec![
+            ("a".into(), ArrivalProcess::Poisson { rate_per_s: 0.5 }),
+            ("b".into(), ArrivalProcess::Poisson { rate_per_s: 2.0 }),
+            (
+                "c".into(),
+                ArrivalProcess::Mmpp {
+                    calm_rate_per_s: 0.25,
+                    burst_rate_per_s: 1.75,
+                    mean_phase_ms: 1000.0,
+                },
+            ),
+            ("d".into(), ArrivalProcess::SyncRounds { period_ms: 700.0 }),
+        ];
+        let serial = sweep_cells(&env, &decision, cells.clone(), 3000.0, 9, None);
+        let pool = crate::util::pool::ThreadPool::new(4, "t");
+        let parallel = sweep_cells(&env, &decision, cells, 3000.0, 9, Some(&pool));
+        assert_eq!(serial.len(), parallel.len());
+        for ((ls, ps, ms), (lp, pp, mp)) in serial.iter().zip(&parallel) {
+            assert_eq!(ls, lp);
+            assert_eq!(ps, pp);
+            assert_eq!(ms, mp, "cell {ls} diverged between serial and parallel");
+        }
+    }
+
+    #[test]
+    fn parallel_multi_edge_cells_identical_to_serial() {
+        let scenario = Scenario::exp_a(10);
+        let cal = crate::config::Calibration::default();
+        let serial: Vec<TrafficMetrics> = (1..=3)
+            .map(|edges| multi_edge_cell(&scenario, &cal, edges, 10, 2.0, 2500.0, 3))
+            .collect();
+        let pool = crate::util::pool::ThreadPool::new(3, "t");
+        let (scen, c) = (scenario.clone(), cal.clone());
+        let parallel = pool.map_indexed(vec![1usize, 2, 3], move |_, edges| {
+            multi_edge_cell(&scen, &c, edges, 10, 2.0, 2500.0, 3)
+        });
+        assert_eq!(serial, parallel);
     }
 
     #[test]

@@ -54,7 +54,9 @@ impl RunMetrics {
 }
 
 /// Per-request latency distribution summary (open-loop / trace serving).
-#[derive(Debug, Clone, Copy)]
+/// `PartialEq` is bitwise-style float equality — what the parallel-sweep
+/// property tests use to assert parallel rows equal serial rows exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LatencySummary {
     pub count: usize,
     pub mean_ms: f64,
@@ -106,7 +108,7 @@ impl LatencySummary {
 /// percentiles, queueing decomposition and throughput, plus the policy
 /// that served the trace. Produced by `Orchestrator::evaluate_async` and
 /// the `traffic_sweep` experiment.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TrafficMetrics {
     pub decision: Decision,
     pub response: LatencySummary,

@@ -53,7 +53,7 @@ use std::collections::VecDeque;
 use crate::monitor::StateView;
 use crate::sim::latency::{ResponseModel, RoundCtx};
 use crate::sim::workload::Request;
-use crate::types::{Action, Decision, Placement};
+use crate::types::{Action, Decision, ModelId, Placement, NUM_MODELS};
 use crate::util::rng::Rng;
 
 /// One finished request with its per-component latency breakdown.
@@ -86,7 +86,10 @@ pub struct DesOutcome {
     /// Arrival horizon the trace was generated for.
     pub horizon_ms: f64,
     /// Virtual times of every processed event, in processing order — the
-    /// monotonicity witness the property suite checks.
+    /// monotonicity witness the property suite checks. Collection is
+    /// opt-in: [`run_open_loop`] fills it (the tests read it), while the
+    /// reusable [`DesCore`] hot path leaves it empty unless
+    /// [`DesCore::collect_event_times`] is set.
     pub event_times: Vec<f64>,
 }
 
@@ -184,6 +187,382 @@ struct InFlight {
     service_ms: f64,
 }
 
+/// Dense placement slot within a [`DesCore`] table row: Local, then each
+/// edge, then Cloud — the same order as [`crate::types::Topology::placements`].
+fn place_slot(p: Placement, num_edges: usize) -> usize {
+    match p {
+        Placement::Local => 0,
+        Placement::Edge(j) => {
+            assert!(j < num_edges, "edge {j} outside installed topology");
+            1 + j
+        }
+        Placement::Cloud => 1 + num_edges,
+    }
+}
+
+fn push_event(heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, kind: EventKind) {
+    *seq += 1;
+    heap.push(Event { time, seq: *seq, kind });
+}
+
+/// Reusable open-loop DES engine: memoized service tables plus the scratch
+/// arena (event heap, in-flight records, per-node queues, link queues) the
+/// per-call API would otherwise reallocate.
+///
+/// [`DesCore::install`] precomputes a dense users x models x placements
+/// table of [`ResponseModel::single_stream_service_ms`] and per-device
+/// path overheads for one (model, background-state) pair — the calibrated
+/// response law is then pure index arithmetic inside the event loop, and
+/// the same install serves any number of traces and decisions (what the
+/// sweep drivers and, later, mid-trace re-decisions need). Outcomes are
+/// bit-identical to the allocate-per-call [`run_open_loop`], which is now
+/// a thin wrapper over a fresh core; the property suite pins both the
+/// table entries (against the single-stream law) and whole-trace reuse
+/// (against fresh runs).
+pub struct DesCore {
+    users: usize,
+    num_edges: usize,
+    num_places: usize,
+    /// users x NUM_MODELS x num_places single-stream service times.
+    svc: Vec<f64>,
+    /// users x num_places fixed path overheads.
+    path: Vec<f64>,
+    /// Which edge-ingress link each (device, placement) traverses, encoded
+    /// as 1 + link id (0 = local execution, no link).
+    ingress: Vec<usize>,
+    link_queue_ms: f64,
+    sigma: f64,
+    // --- reusable scratch ---
+    heap: BinaryHeap<Event>,
+    flights: Vec<InFlight>,
+    nodes: Vec<ServerQueue>,
+    links: Vec<ServerQueue>,
+    /// Record per-event virtual times into `DesOutcome::event_times`
+    /// (monotonicity witness). Off by default: it is test-only
+    /// instrumentation that costs a push per event on the hot path.
+    pub collect_event_times: bool,
+}
+
+impl Default for DesCore {
+    fn default() -> Self {
+        DesCore::new()
+    }
+}
+
+impl DesCore {
+    /// An empty core; call [`DesCore::install`] before running.
+    pub fn new() -> DesCore {
+        DesCore {
+            users: 0,
+            num_edges: 0,
+            num_places: 0,
+            svc: Vec::new(),
+            path: Vec::new(),
+            ingress: Vec::new(),
+            link_queue_ms: 0.0,
+            sigma: 0.0,
+            heap: BinaryHeap::new(),
+            flights: Vec::new(),
+            nodes: Vec::new(),
+            links: Vec::new(),
+            collect_event_times: false,
+        }
+    }
+
+    /// Precompute the service/path tables and node layout for one
+    /// (response model, background state) pair. Service times and path
+    /// overheads are the exact values the per-request law would produce —
+    /// same function, evaluated once per (device, model, placement)
+    /// instead of once per request.
+    pub fn install<S: StateView>(&mut self, model: &ResponseModel, state: &S) {
+        let topo = &model.net.topo;
+        let users = state.users();
+        assert_eq!(topo.users(), users, "topology arity vs state");
+        assert_eq!(topo.num_edges(), state.num_edges(), "topology edges vs state");
+        self.users = users;
+        self.num_edges = topo.num_edges();
+        self.num_places = topo.num_placements();
+        let places = topo.placements();
+
+        self.svc.clear();
+        self.svc.reserve(users * NUM_MODELS * self.num_places);
+        for device in 0..users {
+            for m in 0..NUM_MODELS {
+                for &p in &places {
+                    self.svc.push(model.single_stream_service_ms(
+                        device,
+                        ModelId(m as u8),
+                        p,
+                        state,
+                    ));
+                }
+            }
+        }
+        self.path.clear();
+        self.path.reserve(users * self.num_places);
+        self.ingress.clear();
+        self.ingress.reserve(users * self.num_places);
+        for device in 0..users {
+            for &p in &places {
+                self.path.push(model.net.path_overhead_ms(device, p));
+                self.ingress.push(match topo.ingress_edge(device, p) {
+                    None => 0,
+                    Some(link) => 1 + link,
+                });
+            }
+        }
+        self.link_queue_ms = model.net.cal.link_queue_ms;
+        self.sigma = model.net.cal.noise_sigma;
+
+        // Node layout: [0, users) per-device compute, [users, users + E)
+        // the edge nodes, users + E the cloud; one ingress link per edge.
+        self.nodes.clear();
+        self.nodes.extend(topo.devices.iter().map(|d| ServerQueue::new(d.vcpus)));
+        self.nodes.extend(topo.edges.iter().map(|e| ServerQueue::new(e.vcpus)));
+        self.nodes.push(ServerQueue::new(topo.cloud.vcpus));
+        self.links.clear();
+        self.links.extend((0..self.num_edges).map(|_| ServerQueue::new(1)));
+    }
+
+    /// Memoized single-stream service time for (device, model, placement)
+    /// under the installed background state — bitwise equal to
+    /// [`ResponseModel::single_stream_service_ms`].
+    pub fn service_ms(&self, device: usize, model: ModelId, p: Placement) -> f64 {
+        self.svc[(device * NUM_MODELS + model.index()) * self.num_places
+            + place_slot(p, self.num_edges)]
+    }
+
+    /// Memoized fixed path overhead for (device, placement) — bitwise
+    /// equal to [`crate::network::Network::path_overhead_ms`].
+    pub fn path_ms(&self, device: usize, p: Placement) -> f64 {
+        self.path[device * self.num_places + place_slot(p, self.num_edges)]
+    }
+
+    /// Run one open-loop trace into `out`, reusing every buffer.
+    ///
+    /// Same contract as [`run_open_loop`] (which delegates here): the
+    /// frozen `decision` routes each request, `noise_seed` drives the
+    /// multiplicative log-normal service noise, and the outcome is a pure
+    /// function of (installed tables, decision, trace, seed).
+    /// `out.event_times` stays empty unless
+    /// [`DesCore::collect_event_times`] is set.
+    pub fn run_open_loop_into(
+        &mut self,
+        decision: &Decision,
+        trace: &[Request],
+        horizon_ms: f64,
+        noise_seed: u64,
+        out: &mut DesOutcome,
+    ) {
+        assert!(self.users > 0, "DesCore::install must precede run_open_loop_into");
+        assert_eq!(decision.n_users(), self.users, "decision arity vs installed topology");
+        assert!(
+            decision.0.iter().all(|a| match a.placement {
+                Placement::Edge(j) => j < self.num_edges,
+                _ => true,
+            }),
+            "decision outside topology"
+        );
+        debug_assert!(
+            trace.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+            "trace must be time-ordered"
+        );
+
+        // Reset the arena (retains capacity from prior runs).
+        self.heap.clear();
+        self.flights.clear();
+        self.flights.reserve(trace.len());
+        for q in self.nodes.iter_mut() {
+            q.busy = 0;
+            q.waiting.clear();
+        }
+        for l in self.links.iter_mut() {
+            l.busy = 0;
+            l.waiting.clear();
+        }
+        out.completed.clear();
+        out.completed.reserve(trace.len());
+        out.event_times.clear();
+        out.makespan_ms = 0.0;
+        out.horizon_ms = horizon_ms;
+
+        let users = self.users;
+        let num_edges = self.num_edges;
+        let num_places = self.num_places;
+        let ingress_base = users + num_edges + 1;
+        let compute_node = |device: usize, p: Placement| match p {
+            Placement::Local => device,
+            Placement::Edge(j) => users + j,
+            Placement::Cloud => users + num_edges,
+        };
+
+        let mut rng = Rng::new(noise_seed);
+        let sigma = self.sigma;
+        let mut seq = 0u64;
+
+        // Seed the heap: each arrival materializes at its queue-join time
+        // after the fixed path overhead.
+        for r in trace {
+            let action = decision.0[r.device];
+            let pslot = place_slot(action.placement, num_edges);
+            let path_ms = self.path[r.device * num_places + pslot];
+            let idx = self.flights.len();
+            self.flights.push(InFlight {
+                id: r.id,
+                device: r.device,
+                action,
+                arrival_ms: r.arrival_ms,
+                path_ms,
+                link_enq_ms: 0.0,
+                link_wait_ms: 0.0,
+                compute_enq_ms: 0.0,
+                queue_ms: 0.0,
+                service_ms: 0.0,
+            });
+            let target = match self.ingress[r.device * num_places + pslot] {
+                0 => compute_node(r.device, Placement::Local),
+                link_plus_1 => ingress_base + (link_plus_1 - 1),
+            };
+            push_event(
+                &mut self.heap,
+                &mut seq,
+                r.arrival_ms + path_ms,
+                EventKind::Join { node: target, req: idx },
+            );
+        }
+
+        while let Some(ev) = self.heap.pop() {
+            debug_assert!(ev.time >= out.makespan_ms, "event time went backwards");
+            out.makespan_ms = out.makespan_ms.max(ev.time);
+            if self.collect_event_times {
+                out.event_times.push(ev.time);
+            }
+            match ev.kind {
+                EventKind::Join { node, req } if node >= ingress_base => {
+                    let link_id = node - ingress_base;
+                    self.flights[req].link_enq_ms = ev.time;
+                    let link = &mut self.links[link_id];
+                    if link.busy < link.servers {
+                        link.busy += 1;
+                        // Forwarded immediately; the hold models the edge's
+                        // uplink serializing simultaneous transfers.
+                        push_event(
+                            &mut self.heap,
+                            &mut seq,
+                            ev.time + self.link_queue_ms,
+                            EventKind::LinkFree { link: link_id },
+                        );
+                        let (device, placement) = {
+                            let f = &self.flights[req];
+                            (f.device, f.action.placement)
+                        };
+                        let target = compute_node(device, placement);
+                        push_event(
+                            &mut self.heap,
+                            &mut seq,
+                            ev.time,
+                            EventKind::Join { node: target, req },
+                        );
+                    } else {
+                        link.waiting.push_back(req);
+                    }
+                }
+                EventKind::LinkFree { link: link_id } => {
+                    let link = &mut self.links[link_id];
+                    link.busy -= 1;
+                    if let Some(req) = link.waiting.pop_front() {
+                        link.busy += 1;
+                        self.flights[req].link_wait_ms = ev.time - self.flights[req].link_enq_ms;
+                        push_event(
+                            &mut self.heap,
+                            &mut seq,
+                            ev.time + self.link_queue_ms,
+                            EventKind::LinkFree { link: link_id },
+                        );
+                        let (device, placement) = {
+                            let f = &self.flights[req];
+                            (f.device, f.action.placement)
+                        };
+                        let target = compute_node(device, placement);
+                        push_event(
+                            &mut self.heap,
+                            &mut seq,
+                            ev.time,
+                            EventKind::Join { node: target, req },
+                        );
+                    }
+                }
+                EventKind::Join { node, req } => {
+                    self.flights[req].compute_enq_ms = ev.time;
+                    let q = &mut self.nodes[node];
+                    if q.busy < q.servers {
+                        q.busy += 1;
+                        let (device, action) = {
+                            let f = &self.flights[req];
+                            (f.device, f.action)
+                        };
+                        let mut svc = self.svc[(device * NUM_MODELS + action.model.index())
+                            * num_places
+                            + place_slot(action.placement, num_edges)];
+                        if sigma > 0.0 {
+                            svc *= (sigma * rng.normal()).exp();
+                        }
+                        self.flights[req].service_ms = svc;
+                        push_event(
+                            &mut self.heap,
+                            &mut seq,
+                            ev.time + svc,
+                            EventKind::Finish { node, req },
+                        );
+                    } else {
+                        q.waiting.push_back(req);
+                    }
+                }
+                EventKind::Finish { node, req } => {
+                    {
+                        let f = &mut self.flights[req];
+                        f.queue_ms = ev.time - f.compute_enq_ms - f.service_ms;
+                        out.completed.push(CompletedRequest {
+                            id: f.id,
+                            device: f.device,
+                            action: f.action,
+                            arrival_ms: f.arrival_ms,
+                            path_ms: f.path_ms,
+                            link_wait_ms: f.link_wait_ms,
+                            queue_ms: f.queue_ms.max(0.0),
+                            service_ms: f.service_ms,
+                            depart_ms: ev.time,
+                            response_ms: ev.time - f.arrival_ms,
+                        });
+                    }
+                    let q = &mut self.nodes[node];
+                    q.busy -= 1;
+                    if let Some(next) = q.waiting.pop_front() {
+                        q.busy += 1;
+                        let (device, action) = {
+                            let f = &self.flights[next];
+                            (f.device, f.action)
+                        };
+                        let mut svc = self.svc[(device * NUM_MODELS + action.model.index())
+                            * num_places
+                            + place_slot(action.placement, num_edges)];
+                        if sigma > 0.0 {
+                            svc *= (sigma * rng.normal()).exp();
+                        }
+                        self.flights[next].service_ms = svc;
+                        push_event(
+                            &mut self.heap,
+                            &mut seq,
+                            ev.time + svc,
+                            EventKind::Finish { node, req: next },
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Open-loop DES over a time-ordered arrival trace.
 ///
 /// Each request executes the action the (frozen) `decision` assigns to its
@@ -194,6 +573,11 @@ struct InFlight {
 /// service noise (sigma from the calibration; pass the calibration's
 /// `noise_sigma = 0` via a custom [`crate::config::Calibration`] to
 /// disable it).
+///
+/// Convenience wrapper over a fresh [`DesCore`] (with event-time
+/// collection on, for the property witnesses); callers on a hot path —
+/// sweeps, repeated evaluations — should hold a [`DesCore`], install once,
+/// and call [`DesCore::run_open_loop_into`] per trace instead.
 pub fn run_open_loop<S: StateView>(
     model: &ResponseModel,
     state: &S,
@@ -208,174 +592,12 @@ pub fn run_open_loop<S: StateView>(
     assert_eq!(topo.users(), users, "topology arity vs state");
     assert_eq!(topo.num_edges(), state.num_edges(), "topology edges vs state");
     assert!(topo.admits(decision), "decision outside topology");
-    debug_assert!(
-        trace.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
-        "trace must be time-ordered"
-    );
 
-    // Node layout: [0, users) per-device compute, [users, users + E) the
-    // edge nodes, users + E the cloud. Each edge's ingress link is
-    // addressed as a pseudo-node after the compute nodes.
-    let cal = &model.net.cal;
-    let num_edges = topo.num_edges();
-    let mut nodes: Vec<ServerQueue> =
-        (0..users).map(|i| ServerQueue::new(topo.devices[i].vcpus)).collect();
-    for e in &topo.edges {
-        nodes.push(ServerQueue::new(e.vcpus));
-    }
-    nodes.push(ServerQueue::new(topo.cloud.vcpus));
-    let mut links: Vec<ServerQueue> = (0..num_edges).map(|_| ServerQueue::new(1)).collect();
-
-    let compute_node = |device: usize, p: Placement| match p {
-        Placement::Local => device,
-        Placement::Edge(j) => users + j,
-        Placement::Cloud => users + num_edges,
-    };
-    let ingress_base = users + num_edges + 1;
-
-    let mut rng = Rng::new(noise_seed);
-    let sigma = cal.noise_sigma;
-    let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(trace.len() * 2);
-    let mut seq = 0u64;
-    let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, kind: EventKind| {
-        *seq += 1;
-        heap.push(Event { time, seq: *seq, kind });
-    };
-
-    // Seed the heap: each arrival materializes at its queue-join time
-    // after the fixed path overhead.
-    let mut flights: Vec<InFlight> = Vec::with_capacity(trace.len());
-    for r in trace {
-        let action = decision.0[r.device];
-        let path_ms = model.net.path_overhead_ms(r.device, action.placement);
-        let idx = flights.len();
-        flights.push(InFlight {
-            id: r.id,
-            device: r.device,
-            action,
-            arrival_ms: r.arrival_ms,
-            path_ms,
-            link_enq_ms: 0.0,
-            link_wait_ms: 0.0,
-            compute_enq_ms: 0.0,
-            queue_ms: 0.0,
-            service_ms: 0.0,
-        });
-        let target = match topo.ingress_edge(r.device, action.placement) {
-            None => compute_node(r.device, Placement::Local),
-            Some(link) => ingress_base + link,
-        };
-        push(&mut heap, &mut seq, r.arrival_ms + path_ms, EventKind::Join { node: target, req: idx });
-    }
-
-    let mut out = DesOutcome {
-        completed: Vec::with_capacity(trace.len()),
-        makespan_ms: 0.0,
-        horizon_ms,
-        event_times: Vec::with_capacity(trace.len() * 3),
-    };
-
-    while let Some(ev) = heap.pop() {
-        debug_assert!(ev.time >= out.makespan_ms, "event time went backwards");
-        out.makespan_ms = out.makespan_ms.max(ev.time);
-        out.event_times.push(ev.time);
-        match ev.kind {
-            EventKind::Join { node, req } if node >= ingress_base => {
-                let link_id = node - ingress_base;
-                flights[req].link_enq_ms = ev.time;
-                let link = &mut links[link_id];
-                if link.busy < link.servers {
-                    link.busy += 1;
-                    // Forwarded immediately; the hold models the edge's
-                    // uplink serializing simultaneous transfers.
-                    push(
-                        &mut heap,
-                        &mut seq,
-                        ev.time + cal.link_queue_ms,
-                        EventKind::LinkFree { link: link_id },
-                    );
-                    let f = &flights[req];
-                    let target = compute_node(f.device, f.action.placement);
-                    push(&mut heap, &mut seq, ev.time, EventKind::Join { node: target, req });
-                } else {
-                    link.waiting.push_back(req);
-                }
-            }
-            EventKind::LinkFree { link: link_id } => {
-                let link = &mut links[link_id];
-                link.busy -= 1;
-                if let Some(req) = link.waiting.pop_front() {
-                    link.busy += 1;
-                    flights[req].link_wait_ms = ev.time - flights[req].link_enq_ms;
-                    push(
-                        &mut heap,
-                        &mut seq,
-                        ev.time + cal.link_queue_ms,
-                        EventKind::LinkFree { link: link_id },
-                    );
-                    let f = &flights[req];
-                    let target = compute_node(f.device, f.action.placement);
-                    push(&mut heap, &mut seq, ev.time, EventKind::Join { node: target, req });
-                }
-            }
-            EventKind::Join { node, req } => {
-                flights[req].compute_enq_ms = ev.time;
-                let q = &mut nodes[node];
-                if q.busy < q.servers {
-                    q.busy += 1;
-                    let f = &flights[req];
-                    let mut svc = model.single_stream_service_ms(
-                        f.device,
-                        f.action.model,
-                        f.action.placement,
-                        state,
-                    );
-                    if sigma > 0.0 {
-                        svc *= (sigma * rng.normal()).exp();
-                    }
-                    flights[req].service_ms = svc;
-                    push(&mut heap, &mut seq, ev.time + svc, EventKind::Finish { node, req });
-                } else {
-                    q.waiting.push_back(req);
-                }
-            }
-            EventKind::Finish { node, req } => {
-                {
-                    let f = &mut flights[req];
-                    f.queue_ms = ev.time - f.compute_enq_ms - f.service_ms;
-                    out.completed.push(CompletedRequest {
-                        id: f.id,
-                        device: f.device,
-                        action: f.action,
-                        arrival_ms: f.arrival_ms,
-                        path_ms: f.path_ms,
-                        link_wait_ms: f.link_wait_ms,
-                        queue_ms: f.queue_ms.max(0.0),
-                        service_ms: f.service_ms,
-                        depart_ms: ev.time,
-                        response_ms: ev.time - f.arrival_ms,
-                    });
-                }
-                let q = &mut nodes[node];
-                q.busy -= 1;
-                if let Some(next) = q.waiting.pop_front() {
-                    q.busy += 1;
-                    let f = &flights[next];
-                    let mut svc = model.single_stream_service_ms(
-                        f.device,
-                        f.action.model,
-                        f.action.placement,
-                        state,
-                    );
-                    if sigma > 0.0 {
-                        svc *= (sigma * rng.normal()).exp();
-                    }
-                    flights[next].service_ms = svc;
-                    push(&mut heap, &mut seq, ev.time + svc, EventKind::Finish { node, req: next });
-                }
-            }
-        }
-    }
+    let mut core = DesCore::new();
+    core.collect_event_times = true;
+    core.install(model, state);
+    let mut out = DesOutcome::default();
+    core.run_open_loop_into(decision, trace, horizon_ms, noise_seed, &mut out);
     out
 }
 
@@ -393,12 +615,54 @@ pub fn sync_round_responses<S: StateView>(
     decision: &Decision,
     state: &S,
 ) -> Vec<f64> {
+    let mut scratch = SyncScratch::new();
+    let mut responses = Vec::new();
+    sync_round_responses_into(model, decision, state, &mut scratch, &mut responses);
+    responses
+}
+
+/// Reusable scratch for [`sync_round_responses_into`]: the event heap and
+/// round-context buffers one synchronous round would otherwise allocate.
+/// The RL environment holds one per instance, so the per-training-round
+/// hot path (millions of `Env::step` calls per run) stops allocating.
+pub struct SyncScratch {
+    heap: BinaryHeap<Event>,
+    ctx: RoundCtx,
+}
+
+impl Default for SyncScratch {
+    fn default() -> Self {
+        SyncScratch::new()
+    }
+}
+
+impl SyncScratch {
+    pub fn new() -> SyncScratch {
+        SyncScratch {
+            heap: BinaryHeap::new(),
+            ctx: RoundCtx { edge_counts: Vec::new(), cloud_count: 0, ingress_counts: Vec::new() },
+        }
+    }
+}
+
+/// [`sync_round_responses`] writing into caller-owned buffers: `out` is
+/// cleared and filled with the per-device responses (device order), and
+/// `scratch` is reused across calls. Bit-identical to the allocating API.
+pub fn sync_round_responses_into<S: StateView>(
+    model: &ResponseModel,
+    decision: &Decision,
+    state: &S,
+    scratch: &mut SyncScratch,
+    out: &mut Vec<f64>,
+) {
     let users = state.users();
     assert_eq!(decision.n_users(), users, "decision arity vs users");
     assert_eq!(model.net.topo.num_edges(), state.num_edges(), "topology edges vs state");
-    let ctx = RoundCtx::of(&model.net.topo, decision);
+    assert!(model.net.topo.admits(decision), "decision outside topology");
+    let SyncScratch { heap, ctx } = scratch;
+    ctx.rebuild(&model.net.topo, decision.0.iter().map(|a| a.placement));
 
-    let mut heap: BinaryHeap<Event> = BinaryHeap::with_capacity(users * 2);
+    heap.clear();
     for device in 0..users {
         heap.push(Event {
             time: 0.0,
@@ -407,7 +671,8 @@ pub fn sync_round_responses<S: StateView>(
         });
     }
 
-    let mut responses = vec![0.0f64; users];
+    out.clear();
+    out.resize(users, 0.0);
     let mut seq = users as u64;
     let mut clock = 0.0f64;
     while let Some(ev) = heap.pop() {
@@ -416,7 +681,7 @@ pub fn sync_round_responses<S: StateView>(
         match ev.kind {
             EventKind::Join { req: device, .. } => {
                 let a = decision.0[device];
-                let svc = model.device_response_ms(device, a.model, a.placement, &ctx, state);
+                let svc = model.device_response_ms(device, a.model, a.placement, ctx, state);
                 seq += 1;
                 heap.push(Event {
                     time: ev.time + svc,
@@ -425,12 +690,11 @@ pub fn sync_round_responses<S: StateView>(
                 });
             }
             EventKind::Finish { req: device, .. } => {
-                responses[device] = ev.time;
+                out[device] = ev.time;
             }
             EventKind::LinkFree { .. } => unreachable!("no link events in a synchronous round"),
         }
     }
-    responses
 }
 
 #[cfg(test)]
@@ -611,6 +875,142 @@ mod tests {
             let want = if j < 2 { 0.0 } else { lq };
             assert!((w - want).abs() < 1e-9, "j={j} wait={w}");
         }
+    }
+
+    #[test]
+    fn sync_scratch_reuse_matches_alloc_api() {
+        // One scratch serves rounds of different decisions, states and
+        // even different user counts/topologies, bit-exactly.
+        let mut scratch = SyncScratch::new();
+        let mut buf = Vec::new();
+        for users in 1..=4 {
+            let (model, state) = setup(users);
+            for m in [0u8, 3, 7] {
+                for p in Tier::ALL {
+                    let d = uniform(users, p, m);
+                    sync_round_responses_into(&model, &d, &state, &mut scratch, &mut buf);
+                    let fresh = sync_round_responses(&model, &d, &state);
+                    assert_eq!(buf, fresh, "users={users} p={p:?} d{m}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn des_core_reuse_is_bit_exact_and_isolated() {
+        let users = 5;
+        let (model, state) = setup(users);
+        let d = Decision(
+            (0..users)
+                .map(|i| Action {
+                    placement: Tier::from_index(i % 3),
+                    model: ModelId((i % 8) as u8),
+                })
+                .collect(),
+        );
+        let t1 = schedule(ArrivalProcess::Poisson { rate_per_s: 3.0 }, users, 8_000.0, 21);
+        let t2 = schedule(
+            ArrivalProcess::Mmpp {
+                calm_rate_per_s: 0.5,
+                burst_rate_per_s: 5.0,
+                mean_phase_ms: 1500.0,
+            },
+            users,
+            6_000.0,
+            22,
+        );
+        let a1 = run_open_loop(&model, &state, &d, &t1, 8_000.0, 31);
+        let a2 = run_open_loop(&model, &state, &d, &t2, 6_000.0, 32);
+
+        let same = |x: &DesOutcome, y: &DesOutcome| {
+            assert_eq!(x.completed.len(), y.completed.len());
+            for (a, b) in x.completed.iter().zip(&y.completed) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.response_ms.to_bits(), b.response_ms.to_bits());
+                assert_eq!(a.depart_ms.to_bits(), b.depart_ms.to_bits());
+                assert_eq!(a.link_wait_ms.to_bits(), b.link_wait_ms.to_bits());
+                assert_eq!(a.queue_ms.to_bits(), b.queue_ms.to_bits());
+                assert_eq!(a.service_ms.to_bits(), b.service_ms.to_bits());
+            }
+            assert_eq!(x.makespan_ms.to_bits(), y.makespan_ms.to_bits());
+        };
+
+        let mut core = DesCore::new();
+        core.install(&model, &state);
+        let mut out = DesOutcome::default();
+        core.run_open_loop_into(&d, &t1, 8_000.0, 31, &mut out);
+        same(&out, &a1);
+        // event-time collection is opt-in; the hot path skips it
+        assert!(out.event_times.is_empty());
+        // a second, different trace through the same arena...
+        core.run_open_loop_into(&d, &t2, 6_000.0, 32, &mut out);
+        same(&out, &a2);
+        // ...and the first again: no state leaks between runs
+        core.run_open_loop_into(&d, &t1, 8_000.0, 31, &mut out);
+        same(&out, &a1);
+    }
+
+    #[test]
+    fn service_table_pins_single_stream_law_bitwise() {
+        // The memoized tables must be the exact pre-refactor per-request
+        // law — same function, evaluated once — including under busy
+        // background states that exercise every multiplier.
+        for edges in 1..=3usize {
+            let users = 4;
+            let model = ResponseModel::new(Network::with_edges(
+                Scenario::exp_b(users),
+                Calibration::default(),
+                edges,
+            ));
+            let mut state = TopoState::idle(&model.net.topo);
+            state.devices[0].cpu = 0.9; // busy end device
+            state.devices[1].mem = 0.8; // memory pressure
+            state.edges[0].cpu = 0.7; // loaded edge
+            state.cloud.cpu = 0.4;
+            state.cloud.mem = 0.9;
+            let mut core = DesCore::new();
+            core.install(&model, &state);
+            for device in 0..users {
+                for m in 0..8u8 {
+                    for p in model.net.topo.placements() {
+                        let table = core.service_ms(device, ModelId(m), p);
+                        let law =
+                            model.single_stream_service_ms(device, ModelId(m), p, &state);
+                        assert_eq!(table.to_bits(), law.to_bits(), "svc {device}/{m}/{p:?}");
+                        let path = core.path_ms(device, p);
+                        let want = model.net.path_overhead_ms(device, p);
+                        assert_eq!(path.to_bits(), want.to_bits(), "path {device}/{p:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_edge_pair_trace_matches_component_law() {
+        // Two simultaneous edge uploads, noise off: responses decompose as
+        // path + service (first through the link) and path + link-slot +
+        // service (second), all terms straight from the calibrated model —
+        // the table-driven engine pinned to the closed-form components.
+        let users = 2;
+        let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
+        let (_, state) = setup(users);
+        let trace: Vec<Request> =
+            (0..users).map(|d| Request { id: d as u64, device: d, arrival_ms: 0.0 }).collect();
+        let d = uniform(users, Tier::Edge(0), 0);
+        let out = run_open_loop(&model, &state, &d, &trace, 1.0, 7);
+        let svc = model.single_stream_service_ms(0, ModelId(0), Tier::Edge(0), &state);
+        let path = model.net.path_overhead_ms(0, Tier::Edge(0));
+        let lq = model.net.cal.link_queue_ms;
+        let mut got: Vec<f64> = out.completed.iter().map(|c| c.response_ms).collect();
+        got.sort_by(f64::total_cmp);
+        assert!((got[0] - (path + svc)).abs() < 1e-9, "{} vs {}", got[0], path + svc);
+        assert!(
+            (got[1] - (path + lq + svc)).abs() < 1e-9,
+            "{} vs {}",
+            got[1],
+            path + lq + svc
+        );
     }
 
     #[test]

@@ -60,6 +60,11 @@ pub struct Env {
     top5: [f64; crate::types::NUM_MODELS],
     rng: Rng,
     pub steps: usize,
+    /// Reusable DES sync-round scratch + response buffer: `step` runs
+    /// millions of times per training run, so the per-round heap/context
+    /// allocations are hoisted here.
+    scratch: crate::sim::des::SyncScratch,
+    sync_buf: Vec<f64>,
 }
 
 impl Env {
@@ -87,6 +92,8 @@ impl Env {
             top5: models::top5_table(),
             rng: Rng::new(seed),
             steps: 0,
+            scratch: crate::sim::des::SyncScratch::new(),
+            sync_buf: Vec::new(),
         }
     }
 
@@ -129,11 +136,16 @@ impl Env {
     pub fn step(&mut self, decision: &Decision) -> StepOutcome {
         assert_eq!(decision.n_users(), self.users(), "decision arity");
         let sigma = self.model.net.cal.noise_sigma;
+        crate::sim::des::sync_round_responses_into(
+            &self.model,
+            decision,
+            &self.state,
+            &mut self.scratch,
+            &mut self.sync_buf,
+        );
+        let rng = &mut self.rng;
         let responses: Vec<f64> =
-            crate::sim::des::sync_round_responses(&self.model, decision, &self.state)
-                .into_iter()
-                .map(|t| t * (sigma * self.rng.normal()).exp())
-                .collect();
+            self.sync_buf.iter().map(|&t| t * (sigma * rng.normal()).exp()).collect();
         let avg_ms = responses.iter().sum::<f64>() / responses.len() as f64;
         let avg_accuracy = decision.avg_accuracy(&self.top5);
         let accuracy_ok = avg_accuracy > self.threshold;

@@ -53,23 +53,40 @@ impl RoundCtx {
         topo: &Topology,
         placements: impl IntoIterator<Item = Placement>,
     ) -> RoundCtx {
-        let k = topo.num_edges();
         let mut ctx =
-            RoundCtx { edge_counts: vec![0; k], cloud_count: 0, ingress_counts: vec![0; k] };
+            RoundCtx { edge_counts: Vec::new(), cloud_count: 0, ingress_counts: Vec::new() };
+        ctx.rebuild(topo, placements);
+        ctx
+    }
+
+    /// Recount in place from per-device placements (device order),
+    /// reusing the existing buffers — the allocation-free path the hot
+    /// loops (per-training-round sync rounds, the brute-force placement
+    /// sweep) use instead of [`RoundCtx::from_placements`].
+    pub fn rebuild(
+        &mut self,
+        topo: &Topology,
+        placements: impl IntoIterator<Item = Placement>,
+    ) {
+        let k = topo.num_edges();
+        self.edge_counts.clear();
+        self.edge_counts.resize(k, 0);
+        self.ingress_counts.clear();
+        self.ingress_counts.resize(k, 0);
+        self.cloud_count = 0;
         for (device, p) in placements.into_iter().enumerate() {
             match p {
                 Placement::Local => {}
                 Placement::Edge(j) => {
-                    ctx.edge_counts[j] += 1;
-                    ctx.ingress_counts[j] += 1;
+                    self.edge_counts[j] += 1;
+                    self.ingress_counts[j] += 1;
                 }
                 Placement::Cloud => {
-                    ctx.cloud_count += 1;
-                    ctx.ingress_counts[topo.home_edge(device)] += 1;
+                    self.cloud_count += 1;
+                    self.ingress_counts[topo.home_edge(device)] += 1;
                 }
             }
         }
-        ctx
     }
 
     /// Requests co-scheduled on the node executing `p` (1 for local

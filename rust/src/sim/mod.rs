@@ -11,7 +11,7 @@ pub mod latency;
 pub mod workload;
 
 pub use arrivals::ArrivalProcess;
-pub use des::{CompletedRequest, DesOutcome};
+pub use des::{CompletedRequest, DesCore, DesOutcome, SyncScratch};
 pub use env::{Dynamics, Env, StepOutcome};
 pub use latency::{ResponseModel, RoundCtx};
 pub use workload::{Arrival, Request, WorkloadGen};

@@ -106,13 +106,38 @@ impl Bench {
         self.results.push(res);
     }
 
-    /// Write all results as JSON under results/bench_<suite>.json.
+    /// Write all results as JSON under results/bench_<suite>.json, plus a
+    /// repo-root `BENCH_<suite>.json` trajectory file.
+    ///
+    /// The repo-root copy is the one committed across PRs so perf changes
+    /// show up in review diffs (the ROADMAP "Perf budget" section reads
+    /// it). It carries a `fast` flag so smoke runs (`EECO_BENCH_FAST=1`,
+    /// the non-gating CI job) are distinguishable from full measurement
+    /// runs — only commit `fast: false` baselines.
     pub fn save(&self) {
+        let doc = Json::obj()
+            .set("suite", self.suite.as_str())
+            .set("fast", std::env::var("EECO_BENCH_FAST").is_ok())
+            .set("results", Json::Arr(self.results.iter().map(|r| r.to_json()).collect()));
+        let body = doc.to_string_pretty();
         let _ = std::fs::create_dir_all("results");
-        let arr = Json::Arr(self.results.iter().map(|r| r.to_json()).collect());
         let path = format!("results/bench_{}.json", self.suite);
-        if std::fs::write(&path, arr.to_string_pretty()).is_ok() {
+        if std::fs::write(&path, &body).is_ok() {
             println!("  -> {path}");
+        }
+        // The crate lives at <repo>/rust; its parent is the workspace
+        // root regardless of the bench binary's working directory. Prefer
+        // the runtime CARGO_MANIFEST_DIR (correct even for a binary built
+        // in a different checkout) and fall back to the compile-time path
+        // for bare invocations outside cargo.
+        let manifest = std::env::var("CARGO_MANIFEST_DIR")
+            .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+        if let Some(root) = std::path::Path::new(&manifest).parent() {
+            let tracked = root.join(format!("BENCH_{}.json", self.suite));
+            match std::fs::write(&tracked, &body) {
+                Ok(()) => println!("  -> {}", tracked.display()),
+                Err(e) => eprintln!("  !! could not write {}: {e}", tracked.display()),
+            }
         }
     }
 }

@@ -62,6 +62,46 @@ impl ThreadPool {
         });
         rx.recv().expect("job panicked")
     }
+
+    /// Map `f` over `items` on the pool, returning results **in input
+    /// order** regardless of completion order — the deterministic fan-out
+    /// primitive the sweep drivers use: because each result lands back at
+    /// its item's index, parallel output is byte-identical to the serial
+    /// `items.into_iter().map(...)` whenever `f` is a pure function of
+    /// `(index, item)`. Blocks until every item is done.
+    pub fn map_indexed<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send + 'static,
+        T: Send + 'static,
+        F: Fn(usize, I) -> T + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let f = Arc::new(f);
+        // Panics are caught in the job (so the worker thread survives and
+        // queued siblings still run) and re-raised here in the caller —
+        // without this, a panicking job would kill its worker and leave
+        // the collector blocked forever once the pool ran out of threads.
+        let (tx, rx) = mpsc::channel::<(usize, std::thread::Result<T>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let tx = tx.clone();
+            self.execute(move || {
+                let r =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (*f)(i, item)));
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, v) = rx.recv().expect("map_indexed worker lost");
+            slots[i] = Some(v.unwrap_or_else(|panic| std::panic::resume_unwind(panic)));
+        }
+        slots.into_iter().map(|s| s.expect("missing map_indexed slot")).collect()
+    }
 }
 
 impl Drop for ThreadPool {
@@ -124,6 +164,55 @@ mod tests {
             rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
         }
         assert_eq!(peak.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn map_indexed_preserves_input_order() {
+        // Later items finish first (longer sleeps up front), yet results
+        // come back slot-for-slot in input order.
+        let pool = ThreadPool::new(4, "t");
+        let items: Vec<usize> = (0..32).collect();
+        let out = pool.map_indexed(items, |i, x| {
+            assert_eq!(i, x);
+            std::thread::sleep(std::time::Duration::from_millis(((32 - x) % 5) as u64));
+            x * 10
+        });
+        assert_eq!(out, (0..32).map(|x| x * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_indexed_handles_empty_and_single_worker() {
+        let pool = ThreadPool::new(1, "t");
+        let empty: Vec<u32> = pool.map_indexed(Vec::new(), |_, x: u32| x);
+        assert!(empty.is_empty());
+        let out = pool.map_indexed(vec![5u32, 6, 7], |i, x| (i, x));
+        assert_eq!(out, vec![(0, 5), (1, 6), (2, 7)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn map_indexed_propagates_job_panics_instead_of_hanging() {
+        // One worker, first job panics: the worker must survive (panic is
+        // caught in the job), the remaining jobs still run, and the panic
+        // resurfaces in the caller — not a deadlock.
+        let pool = ThreadPool::new(1, "t");
+        let _ = pool.map_indexed(vec![0usize, 1, 2], |_, x| {
+            if x == 0 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn map_indexed_matches_serial_map() {
+        // The determinism contract: for a pure f, parallel == serial.
+        let pool = ThreadPool::new(3, "t");
+        let f = |i: usize, x: u64| x.wrapping_mul(31).wrapping_add(i as u64);
+        let items: Vec<u64> = (0..100).map(|v| v * 7 + 3).collect();
+        let serial: Vec<u64> = items.iter().enumerate().map(|(i, &x)| f(i, x)).collect();
+        let parallel = pool.map_indexed(items, f);
+        assert_eq!(parallel, serial);
     }
 
     #[test]

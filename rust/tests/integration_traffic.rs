@@ -25,8 +25,8 @@ impl Agent for PinnedPolicy {
 
     fn learn(&mut self, _s: &EncodedState, _d: &Decision, _r: f64, _n: &EncodedState) {}
 
-    fn name(&self) -> String {
-        "pinned".into()
+    fn name(&self) -> &str {
+        "pinned"
     }
 
     fn steps(&self) -> usize {

@@ -145,9 +145,10 @@ fn prop_q_values_bounded_by_reward_range() {
                 a.learn(s, &d, r, s2);
             }
             let bound = r_max / (1.0 - gamma) + 1e-6;
+            // export_table borrows: rows are &Vec<f64> here
             for (_, row) in a.export_table() {
                 for q in row {
-                    if !(-bound..=1e-9).contains(&q) {
+                    if !(-bound..=1e-9).contains(q) {
                         return Err(format!("q={q} outside [-{bound}, 0]"));
                     }
                 }

@@ -286,6 +286,72 @@ fn prop_multi_edge_sync_round_matches_closed_form() {
 }
 
 #[test]
+fn prop_des_core_reuse_bit_identical_to_fresh_runs() {
+    // The table-driven, buffer-reusing DesCore is the production hot path;
+    // this pins it to the allocate-per-call wrapper bit-for-bit across
+    // random topologies, decisions, processes and background states —
+    // including back-to-back runs through ONE core (no cross-run leaks).
+    forall(
+        25,
+        0xE5,
+        |rng| (rng.range(1, 8), rng.range(1, 4), rng.next_u64()),
+        |&(users, edges, seed)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let mut state = eeco::monitor::TopoState::idle(&model.net.topo);
+            // busy background so the memoized tables cover every multiplier
+            for d in state.devices.iter_mut() {
+                d.cpu = drng.f64();
+                d.mem = drng.f64();
+            }
+            for e in state.edges.iter_mut() {
+                e.cpu = drng.f64();
+            }
+            state.cloud.cpu = drng.f64();
+            let horizon = 4000.0;
+            let process = rand_process(&mut drng);
+            let t1 = schedule(process, users, horizon, seed);
+            let t2 = schedule(ArrivalProcess::Poisson { rate_per_s: 2.5 }, users, horizon, !seed);
+            let fresh1 = des::run_open_loop(&model, &state, &decision, &t1, horizon, seed);
+            let fresh2 =
+                des::run_open_loop(&model, &state, &decision, &t2, horizon, seed ^ 0xABCD);
+
+            let mut core = des::DesCore::new();
+            core.install(&model, &state);
+            let mut out = des::DesOutcome::default();
+            let check = |out: &des::DesOutcome, want: &des::DesOutcome, tag: &str| {
+                if out.completed.len() != want.completed.len() {
+                    return Err(format!("{tag}: completion count diverged"));
+                }
+                for (a, b) in out.completed.iter().zip(&want.completed) {
+                    if a.id != b.id
+                        || a.response_ms.to_bits() != b.response_ms.to_bits()
+                        || a.depart_ms.to_bits() != b.depart_ms.to_bits()
+                        || a.link_wait_ms.to_bits() != b.link_wait_ms.to_bits()
+                        || a.queue_ms.to_bits() != b.queue_ms.to_bits()
+                        || a.service_ms.to_bits() != b.service_ms.to_bits()
+                    {
+                        return Err(format!("{tag}: req {} diverged: {a:?} vs {b:?}", a.id));
+                    }
+                }
+                if out.makespan_ms.to_bits() != want.makespan_ms.to_bits() {
+                    return Err(format!("{tag}: makespan diverged"));
+                }
+                Ok(())
+            };
+            core.run_open_loop_into(&decision, &t1, horizon, seed, &mut out);
+            check(&out, &fresh1, "first run")?;
+            core.run_open_loop_into(&decision, &t2, horizon, seed ^ 0xABCD, &mut out);
+            check(&out, &fresh2, "second run")?;
+            core.run_open_loop_into(&decision, &t1, horizon, seed, &mut out);
+            check(&out, &fresh1, "replay after reuse")?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_single_edge_topo_state_bit_identical_to_system_state() {
     // The TopoState path through the same topology must reproduce the
     // paper-shaped SystemState path exactly — the bridge that keeps every
