@@ -55,6 +55,14 @@ fn main() {
         des::run_open_loop(&model, &state, &decision, &trace, 60_000.0, 2).completed.len()
     });
 
+    // Control-plane overhead probe: the same trace through the sliced
+    // driver with a 5 s control period (12 ticks) — the cost of pausable
+    // virtual time vs the monolithic run above.
+    b.run("open_loop_10u_60s_12ticks", || {
+        core.run_sliced(&decision, &trace, 60_000.0, 5_000.0, 2, &mut out);
+        out.completed.len()
+    });
+
     let burst = schedule(
         ArrivalProcess::Mmpp { calm_rate_per_s: 0.5, burst_rate_per_s: 6.0, mean_phase_ms: 2000.0 },
         users,

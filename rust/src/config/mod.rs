@@ -72,6 +72,54 @@ impl TrafficConfig {
     }
 }
 
+/// `[control]` section: the online control plane's knobs
+/// (`Orchestrator::evaluate_online` and the `drift` experiment), plus the
+/// `--control-period` / `--online-learning` CLI overrides.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlConfig {
+    /// Control period in ms of virtual time: how often the orchestrator
+    /// pauses the trace, re-encodes the live state and re-decides.
+    /// Non-finite (default) = one epoch spanning the horizon (the frozen-
+    /// snapshot evaluation); the `drift` experiment sweeps its own range
+    /// when this is left unset.
+    pub period_ms: f64,
+    /// Learn online from each epoch's realized reward. On by default —
+    /// online adaptation is the paper's thesis; set
+    /// `online_learning = false` (or `--online-learning false`) for the
+    /// pure re-decision ablation (recall the trained table, never update
+    /// it). The frozen-snapshot corner (`evaluate_async`) never learns
+    /// regardless, by definition.
+    pub online_learning: bool,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig { period_ms: f64::INFINITY, online_learning: true }
+    }
+}
+
+impl ControlConfig {
+    /// True when the user pinned a concrete control period.
+    pub fn explicit_period(&self) -> bool {
+        self.period_ms.is_finite()
+    }
+}
+
+/// `[drift]` section: the piecewise drift scenario played over the
+/// evaluation horizon, as a `sim::drift::DriftSchedule` spec string (see
+/// its `parse` docs; e.g. `"20000:rate=3,net=weak"`), plus the `--drift`
+/// CLI override. Empty = no drift.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DriftConfig {
+    pub spec: String,
+}
+
+impl DriftConfig {
+    pub fn schedule(&self) -> Result<crate::sim::DriftSchedule, String> {
+        crate::sim::DriftSchedule::parse(&self.spec)
+    }
+}
+
 /// `[topology]` section: how many edge nodes the end-edge-cloud network
 /// shards over, parsed from `edges = 2` or a sweep range `edges = "1..4"`
 /// (inclusive; `..=` also accepted) plus the `--edges` CLI override.
@@ -129,6 +177,8 @@ pub struct Config {
     pub steps: usize,
     pub traffic: TrafficConfig,
     pub topology: TopologyConfig,
+    pub control: ControlConfig,
+    pub drift: DriftConfig,
     pub artifacts_dir: String,
     pub results_dir: String,
 }
@@ -148,6 +198,8 @@ impl Default for Config {
             steps: 50_000,
             traffic: TrafficConfig::default(),
             topology: TopologyConfig::default(),
+            control: ControlConfig::default(),
+            drift: DriftConfig::default(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -210,6 +262,22 @@ impl Config {
             };
             self.topology = TopologyConfig::parse_spec(&spec)?;
         }
+        if let Some(v) = doc.get("control.period_ms") {
+            let p = v
+                .as_f64()
+                .ok_or_else(|| "control.period_ms must be a number (ms)".to_string())?;
+            if !(p.is_finite() && p > 0.0) {
+                return Err(format!("control.period_ms must be finite and > 0, got {p}"));
+            }
+            self.control.period_ms = p;
+        }
+        if let Some(v) = doc.get("control.online_learning") {
+            self.control.online_learning = v.as_bool().ok_or_else(|| {
+                "control.online_learning must be a bare boolean (true|false)".to_string()
+            })?;
+        }
+        self.drift.spec = doc.str("drift.spec", &self.drift.spec);
+        self.drift.schedule().map(|_| ())?;
         Ok(())
     }
 
@@ -249,6 +317,26 @@ impl Config {
         if let Some(spec) = args.get("edges") {
             self.topology = TopologyConfig::parse_spec(spec)?;
         }
+        if let Some(v) = args.get("control-period") {
+            let p: f64 = v
+                .parse()
+                .map_err(|_| format!("bad --control-period '{v}' (want ms)"))?;
+            if !(p.is_finite() && p > 0.0) {
+                return Err(format!("--control-period must be finite and > 0, got {p}"));
+            }
+            self.control.period_ms = p;
+        }
+        if let Some(v) = args.get("online-learning") {
+            self.control.online_learning = v
+                .parse()
+                .map_err(|_| format!("bad --online-learning '{v}' (want true|false)"))?;
+        } else if args.flag("online-learning") {
+            self.control.online_learning = true;
+        }
+        if let Some(spec) = args.get("drift") {
+            self.drift.spec = spec.to_string();
+        }
+        self.drift.schedule().map(|_| ())?;
         Ok(())
     }
 }
@@ -372,6 +460,72 @@ mod tests {
         let c = Config::load(&args).unwrap();
         assert_eq!(c.topology, TopologyConfig { edges_min: 1, edges_max: 3, explicit: true });
         let bad = Args::parse(["--edges", "zero"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+    }
+
+    #[test]
+    fn control_and_drift_sections_parse() {
+        let doc = Doc::parse(
+            "[control]\nperiod_ms = 5000\nonline_learning = true\n\n[drift]\nspec = \"20000:rate=3,net=weak\"\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        assert!(!c.control.explicit_period());
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.control.period_ms, 5000.0);
+        assert!(c.control.online_learning);
+        assert!(c.control.explicit_period());
+        let sched = c.drift.schedule().unwrap();
+        assert_eq!(sched.first_change_ms(), Some(20_000.0));
+        // invalid knobs rejected at load time — including wrong types,
+        // which must not silently fall back to the default
+        let bad = Doc::parse("[control]\nperiod_ms = 0\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[control]\nperiod_ms = \"fast\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[control]\nonline_learning = \"false\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let off = Doc::parse("[control]\nonline_learning = false\n").unwrap();
+        let mut c2 = Config::default();
+        c2.apply_toml(&off).unwrap();
+        assert!(!c2.control.online_learning);
+        let bad = Doc::parse("[drift]\nspec = \"1000:net=fast\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn control_and_drift_cli_overrides() {
+        let args = Args::parse(
+            ["--control-period", "2500", "--online-learning", "--drift", "8000:rate=2"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::load(&args).unwrap();
+        assert_eq!(c.control.period_ms, 2500.0);
+        assert!(c.control.online_learning);
+        assert_eq!(c.drift.spec, "8000:rate=2");
+        assert_eq!(c.drift.schedule().unwrap().rate_mult_at(9000.0), 2.0);
+        // defaults: frozen-snapshot period, online learning on, no drift
+        let d = Config::default();
+        assert!(d.control.online_learning);
+        assert!(d.drift.schedule().unwrap().is_identity());
+        // the pure re-decision ablation: --online-learning false
+        let off = Args::parse(
+            ["--online-learning", "false"].iter().map(|s| s.to_string()),
+        );
+        assert!(!Config::load(&off).unwrap().control.online_learning);
+        // bad values rejected — including unparsable ones, which must not
+        // silently fall back to the default
+        let bad = Args::parse(["--control-period", "-5"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(["--control-period", "abc"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(["--control-period", "NaN"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad =
+            Args::parse(["--online-learning", "maybe"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(["--drift", "nope:rate=1"].iter().map(|s| s.to_string()));
         assert!(Config::load(&bad).is_err());
     }
 

@@ -1,0 +1,390 @@
+//! `drift`: the online-orchestration headline experiment (beyond the
+//! paper's synchronous tables). A mid-trace drift — rate burst plus
+//! network degradation, scripted by a [`DriftSchedule`] — hits an
+//! open-loop arrival trace, and we sweep the control period of the online
+//! control plane against two anchors:
+//!
+//! - **frozen**: the pre-drift greedy decision replayed open-loop for the
+//!   whole trace (control period = horizon) — the strongest thing the
+//!   repo could evaluate before the control plane existed;
+//! - **oracle**: the per-epoch brute-force optimum recomputed from each
+//!   control tick's live observed state (closed-form objective), the
+//!   re-decision quality ceiling.
+//!
+//! The learned policy is a tabular Q-learner trained with link-condition
+//! drift in its background dynamics (`Dynamics::p_cond_flip`), so both
+//! regular and weak regimes are in its table; during the trace it keeps
+//! learning online from each epoch's realized reward. Reported per row:
+//! overall and pre/post-drift percentiles, adaptation lag, peak backlog —
+//! how fast the policy re-converges as a function of the control period.
+
+use anyhow::{anyhow, Result};
+
+use crate::agent::bruteforce;
+use crate::agent::qlearning::QTableAgent;
+use crate::agent::{ActionSet, Agent};
+use crate::config::{Algo, Hyper};
+use crate::metrics::{render_table, Csv, OnlineReport};
+use crate::orchestrator::{ControlCfg, Orchestrator};
+use crate::sim::drift::DriftSchedule;
+
+use super::ExpCtx;
+
+/// Default drift scenario over `horizon_ms`: at one third of the trace
+/// the network degrades to weak and every device's arrival rate triples —
+/// past the single-vCPU capacity of the accurate-model local placements,
+/// so a frozen decision that keeps devices local saturates while
+/// offloading (or smaller models) can keep up.
+fn default_drift(horizon_ms: f64) -> DriftSchedule {
+    DriftSchedule::parse(&format!("{}:rate=3,net=weak", horizon_ms / 3.0))
+        .expect("default drift spec")
+}
+
+/// Control periods swept when `--control-period` doesn't pin one.
+fn sweep_periods(horizon_ms: f64) -> Vec<f64> {
+    vec![horizon_ms / 60.0, horizon_ms / 30.0, horizon_ms / 12.0, horizon_ms / 6.0]
+}
+
+pub fn drift(ctx: &ExpCtx) -> Result<()> {
+    let users = ctx.cfg.users;
+    let scenario = ctx.cfg.scenario.resized(users);
+    let seed = ctx.cfg.seed;
+    let horizon = ctx.cfg.traffic.horizon_ms;
+    let process = ctx.cfg.traffic.arrival().map_err(|e| anyhow!(e))?;
+    let schedule = if ctx.cfg.drift.spec.is_empty() {
+        default_drift(horizon)
+    } else {
+        ctx.cfg.drift.schedule().map_err(|e| anyhow!(e))?
+    };
+    // The pre/post split and the recovery comparison are meaningless
+    // unless something actually drifts inside the horizon — reject
+    // instead of reporting NaN columns.
+    let onset = match schedule.first_change_ms() {
+        Some(t) if t > 0.0 && t < horizon => t,
+        Some(t) => {
+            return Err(anyhow!(
+                "[drift] first change at {t:.0} ms must fall strictly inside the horizon \
+                 (0, {horizon:.0}) for `experiment drift`"
+            ))
+        }
+        None => {
+            return Err(anyhow!(
+                "[drift] spec '{}' never changes anything; give `experiment drift` a real \
+                 scenario (e.g. \"{:.0}:rate=3,net=weak\") or leave it unset for the default",
+                ctx.cfg.drift.spec,
+                horizon / 3.0
+            ))
+        }
+    };
+    println!(
+        "\n== drift: {users} users, {scenario}, horizon {horizon:.0} ms, drift onset {onset:.0} ms =="
+    );
+    for s in schedule.segments() {
+        println!(
+            "   drift @{:>8.0} ms: rate x{:.1}, dev {:?}, edge {:?}",
+            s.start_ms, s.rate_mult, s.device_cond, s.edge_cond
+        );
+    }
+
+    // 1. Train the master policy with cond-flip background dynamics so
+    //    the table covers both link regimes (the trace then only has to
+    //    *recall* the weak-regime rows, not discover them).
+    let steps = super::scaled(ctx.cfg.steps.min(40_000));
+    let topo = ctx.topology(users);
+    let hyper = Hyper::paper_defaults(Algo::QLearning, users);
+    let mut train_env = ctx.env(scenario.clone(), ctx.cfg.constraint, seed);
+    train_env.dynamics.p_cond_flip = 0.02;
+    let mut master = QTableAgent::new(users, hyper.clone(), ActionSet::full_for(&topo), seed + 1);
+    // thread each step's post-step encoding into the next (encode is
+    // pure; step() is the only env mutation) — one encode per round
+    let mut s = train_env.encoded();
+    for _ in 0..steps {
+        let d = master.decide(&s, true);
+        let out = train_env.step(&d);
+        let s2 = train_env.encoded();
+        master.learn(&s, &d, out.reward, &s2);
+        s = s2;
+    }
+    println!(
+        "   trained {} steps under cond-flip dynamics ({} states visited)",
+        master.steps(),
+        master.states_visited()
+    );
+
+    // 2. Evaluation harness: a frozen idle environment; every row gets a
+    //    fresh warm-started copy of the master table so online learning
+    //    in one row cannot leak into the next.
+    let mut eval_env = ctx.env(scenario.clone(), ctx.cfg.constraint, seed);
+    eval_env.freeze();
+    eval_env.reset_load();
+    let fresh_agent = || -> Box<dyn Agent> {
+        let mut a = QTableAgent::new(users, hyper.clone(), ActionSet::full_for(&topo), seed + 1);
+        a.import_table(master.export_table().clone());
+        Box::new(a)
+    };
+    let mut orch = Orchestrator::new(eval_env, fresh_agent());
+
+    let periods = if ctx.cfg.control.explicit_period() {
+        vec![ctx.cfg.control.period_ms]
+    } else {
+        sweep_periods(horizon)
+    };
+
+    struct Row {
+        policy: String,
+        period_ms: f64,
+        report: OnlineReport,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+
+    // frozen anchor: single epoch over the same drifted trace (the
+    // orchestrator's construction-time agent is still untouched here)
+    let frozen = orch.evaluate_online(
+        process,
+        horizon,
+        seed,
+        &ControlCfg { period_ms: f64::INFINITY, online_learning: false },
+        &schedule,
+    );
+    rows.push(Row { policy: "frozen".into(), period_ms: horizon, report: frozen });
+
+    // online rows: re-decide every period, learning from epoch rewards
+    // unless `[control] online_learning = false` asked for the pure
+    // re-decision ablation (recall the trained table, never update it)
+    let learn = ctx.cfg.control.online_learning;
+    let online_label = if learn { "online" } else { "online-norelearn" };
+    for &period in &periods {
+        orch.agent = fresh_agent();
+        let rep = orch.evaluate_online(
+            process,
+            horizon,
+            seed,
+            &ControlCfg { period_ms: period, online_learning: learn },
+            &schedule,
+        );
+        rows.push(Row { policy: online_label.into(), period_ms: period, report: rep });
+    }
+
+    // per-epoch oracle at the finest swept period: brute-force optimum of
+    // the live observed state. The budget check is decidable up front
+    // (placements^users vs the enumeration cap, state-independent), so
+    // probe once before paying for a whole trace that would be thrown
+    // away; `declined` stays as a belt-and-braces guard in the loop.
+    let oracle_period = periods.iter().cloned().fold(f64::INFINITY, f64::min);
+    let model = orch.env.model.clone();
+    let threshold = orch.env.threshold;
+    if bruteforce::optimal_for(&model, &orch.env.state, threshold).is_none() {
+        println!(
+            "   (oracle row skipped: instance past the enumeration budget or constraint \
+             unsatisfiable)"
+        );
+    } else {
+        orch.agent = fresh_agent();
+        let mut declined = false;
+        let mut decide = |obs: &crate::monitor::TopoState| {
+            match bruteforce::optimal_for(&model, obs, threshold) {
+                Some((d, _)) => Some(d),
+                None => {
+                    declined = true;
+                    None
+                }
+            }
+        };
+        let rep = orch.run_online(
+            process,
+            horizon,
+            seed,
+            oracle_period,
+            false,
+            false,
+            &schedule,
+            &mut decide,
+        );
+        if declined {
+            println!("   (oracle row skipped: the oracle declined mid-trace)");
+        } else {
+            rows.push(Row { policy: "oracle".into(), period_ms: oracle_period, report: rep });
+        }
+    }
+
+    // 3. Report.
+    let mut csv = Csv::new(&[
+        "policy",
+        "period_ms",
+        "requests",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "pre_p95_ms",
+        "post_p95_ms",
+        "adapt_lag_ms",
+        "decision_changes",
+        "peak_backlog",
+        "learn_steps",
+    ]);
+    let mut table = Vec::new();
+    for r in &rows {
+        let (pre, post) = r.report.split_at(onset);
+        let lag = r.report.adaptation_lag_ms(onset);
+        let lag_s = lag.map(|l| format!("{l:.0}")).unwrap_or_else(|| "-".into());
+        csv.row(&[
+            r.policy.clone(),
+            format!("{:.0}", r.period_ms),
+            r.report.metrics.requests.to_string(),
+            format!("{:.1}", r.report.metrics.response.p50_ms),
+            format!("{:.1}", r.report.metrics.response.p95_ms),
+            format!("{:.1}", r.report.metrics.response.p99_ms),
+            format!("{:.1}", pre.p95_ms),
+            format!("{:.1}", post.p95_ms),
+            lag_s.clone(),
+            r.report.decision_changes().to_string(),
+            r.report.metrics.peak_backlog.to_string(),
+            r.report.learn_steps.to_string(),
+        ]);
+        table.push(vec![
+            r.policy.clone(),
+            format!("{:.0}", r.period_ms),
+            r.report.metrics.requests.to_string(),
+            format!("{:.0}", r.report.metrics.response.p95_ms),
+            format!("{:.0}", pre.p95_ms),
+            format!("{:.0}", post.p95_ms),
+            lag_s,
+            r.report.decision_changes().to_string(),
+            r.report.metrics.peak_backlog.to_string(),
+        ]);
+    }
+    print!(
+        "{}",
+        render_table(
+            &[
+                "policy",
+                "period",
+                "reqs",
+                "p95",
+                "pre p95",
+                "post p95",
+                "adapt lag",
+                "changes",
+                "backlog",
+            ],
+            &table
+        )
+    );
+
+    let frozen_post = rows[0].report.split_at(onset).1.p95_ms;
+    let best_online = rows
+        .iter()
+        .filter(|r| r.policy.starts_with("online"))
+        .map(|r| (r.period_ms, r.report.split_at(onset).1.p95_ms))
+        .fold((f64::NAN, f64::INFINITY), |acc, x| if x.1 < acc.1 { x } else { acc });
+    if best_online.1 < frozen_post {
+        println!(
+            "online beats frozen post-drift: p95 {:.0} ms vs {:.0} ms (best period {:.0} ms, {:.1}x)",
+            best_online.1,
+            frozen_post,
+            best_online.0,
+            frozen_post / best_online.1
+        );
+    } else {
+        println!(
+            "online did NOT beat frozen post-drift here (p95 {:.0} vs {:.0}) — try a longer \
+             horizon or a harsher [drift] spec",
+            best_online.1, frozen_post
+        );
+    }
+    csv.save(&ctx.cfg.results_dir, "drift")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Config, TrafficConfig};
+    use crate::experiments::ExpCtx;
+
+    #[test]
+    fn drift_experiment_runs_and_reports_all_rows() {
+        // Structure/determinism smoke of the full driver on a small
+        // instance (2 users keeps the oracle in budget and training
+        // fast; noise off makes rows deterministic). Whether the online
+        // rows *win* depends on what the short-trained policy froze to,
+        // so the hard recovery guarantee is asserted end-to-end in
+        // tests/integration_online.rs with a provably-frozen agent; here
+        // we pin the report shape and that every row replays the same
+        // drifted trace.
+        let cfg = Config {
+            users: 2,
+            steps: 2_000,
+            seed: 5,
+            constraint: crate::types::AccuracyConstraint::Min,
+            calibration: crate::config::Calibration {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+            traffic: TrafficConfig {
+                horizon_ms: 24_000.0,
+                rate_per_s: 1.0,
+                ..Default::default()
+            },
+            drift: crate::config::DriftConfig { spec: "6000:rate=6,net=weak".into() },
+            results_dir: std::env::temp_dir().join("eeco_drift").to_str().unwrap().into(),
+            ..Default::default()
+        };
+        let ctx = ExpCtx::new(cfg);
+        drift(&ctx).unwrap();
+        let body =
+            std::fs::read_to_string(format!("{}/drift.csv", ctx.cfg.results_dir)).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        // header + frozen + 4 online periods + oracle (2 users: in budget)
+        assert_eq!(lines.len(), 7, "{body}");
+        assert!(lines[1].starts_with("frozen,"));
+        assert_eq!(lines[1..].iter().filter(|l| l.starts_with("online,")).count(), 4);
+        assert!(lines.iter().any(|l| l.starts_with("oracle,")));
+        // every row served the same drifted trace
+        let reqs: Vec<&str> =
+            lines[1..].iter().map(|l| l.split(',').nth(2).unwrap()).collect();
+        assert!(reqs.iter().all(|&r| r == reqs[0]), "{reqs:?}");
+        // pre/post p95 columns are real numbers for every row, and the
+        // frozen row by construction has a single epoch -> no re-decision
+        for l in &lines[1..] {
+            let pre: f64 = l.split(',').nth(6).unwrap().parse().unwrap();
+            let post: f64 = l.split(',').nth(7).unwrap().parse().unwrap();
+            assert!(pre.is_finite() && post.is_finite(), "{l}");
+        }
+        let frozen_changes: usize = lines[1].split(',').nth(9).unwrap().parse().unwrap();
+        assert_eq!(frozen_changes, 0);
+        // online rows really learned online
+        for l in lines[1..].iter().filter(|l| l.starts_with("online,")) {
+            let learn: usize = l.split(',').nth(11).unwrap().parse().unwrap();
+            assert!(learn > 0, "online row without learning: {l}");
+        }
+    }
+
+    #[test]
+    fn drift_experiment_rejects_degenerate_scenarios() {
+        // onset past the horizon -> NaN pre/post splits; reject up front
+        // (before any training runs, so this is cheap)
+        let mk = |spec: &str| {
+            let cfg = Config {
+                traffic: TrafficConfig { horizon_ms: 24_000.0, ..Default::default() },
+                drift: crate::config::DriftConfig { spec: spec.into() },
+                ..Default::default()
+            };
+            ExpCtx::new(cfg)
+        };
+        assert!(drift(&mk("30000:rate=2")).is_err(), "onset past horizon");
+        assert!(drift(&mk("24000:rate=2")).is_err(), "onset at horizon");
+        assert!(drift(&mk("0:rate=1")).is_err(), "identity spec");
+    }
+
+    #[test]
+    fn default_drift_and_periods_scale_with_horizon() {
+        let d = default_drift(60_000.0);
+        assert_eq!(d.first_change_ms(), Some(20_000.0));
+        assert_eq!(d.rate_mult_at(30_000.0), 3.0);
+        let p = sweep_periods(60_000.0);
+        assert_eq!(p.len(), 4);
+        assert!(p.windows(2).all(|w| w[0] < w[1]));
+        assert!(p.iter().all(|&x| x > 0.0 && x < 60_000.0));
+    }
+}

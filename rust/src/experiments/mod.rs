@@ -3,6 +3,7 @@
 //! `results/<id>.csv` (+ JSON where useful); `examples/paper_experiments`
 //! runs all of them for EXPERIMENTS.md.
 
+pub mod drift;
 pub mod figures;
 pub mod overhead;
 pub mod tables;
@@ -117,7 +118,7 @@ impl ExpCtx {
 /// open-loop drivers.
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig1c", "fig5", "table8", "table9", "table10", "fig6", "fig7",
-    "table11", "fig8", "table12", "prediction", "traffic_sweep", "multi_edge",
+    "table11", "fig8", "table12", "prediction", "traffic_sweep", "multi_edge", "drift",
 ];
 
 /// Dispatch an experiment by id.
@@ -138,6 +139,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "prediction" => overhead::prediction(ctx),
         "traffic_sweep" => traffic::traffic_sweep(ctx),
         "multi_edge" => traffic::multi_edge(ctx),
+        "drift" => drift::drift(ctx),
         other => Err(anyhow!("unknown experiment '{other}' (known: {ALL:?})")),
     }
 }
@@ -168,8 +170,8 @@ mod tests {
         // unknown id errors, known ids exist in ALL
         let ctx = ExpCtx::new(Config::default());
         assert!(run("nope", &ctx).is_err());
-        // 13 paper experiments + the open-loop traffic sweep + multi_edge
-        assert_eq!(ALL.len(), 15);
+        // 13 paper experiments + traffic_sweep + multi_edge + drift
+        assert_eq!(ALL.len(), 16);
     }
 
     #[test]

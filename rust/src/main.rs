@@ -80,7 +80,20 @@ OPTIONS (topology): --edges K | --edges A..B   number of edge nodes the
                   network shards over (range form drives `experiment
                   multi_edge`; default 1 = the paper's network)
 OPTIONS (traffic): --arrival sync|poisson|mmpp  --rate R  --horizon-ms H
-                  (open-loop DES evaluation; see `experiment traffic_sweep`)",
+                  (open-loop DES evaluation; see `experiment traffic_sweep`)
+OPTIONS (control): --control-period MS   pause the open-loop trace every MS
+                  of virtual time to re-encode live state and re-decide
+                  (unset = frozen snapshot; `experiment drift` sweeps a
+                  range when unset)
+                  --online-learning [true|false]   learn() from each
+                  control epoch's realized reward during online evaluation
+                  (default true; false = pure re-decision from the trained
+                  table, the `experiment drift` ablation)
+OPTIONS (drift):  --drift \"T:rate=K,net=weak;...\"   piecewise drift
+                  schedule over the horizon (rate multipliers + link-cond
+                  overrides; keys rate|net|dev|edge) — the scenario
+                  `experiment drift` replays against frozen/online/oracle
+                  policies",
         ids = experiments::ALL.join(",")
     );
 }

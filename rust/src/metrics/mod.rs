@@ -105,11 +105,13 @@ impl LatencySummary {
 }
 
 /// Metrics of one open-loop (asynchronous-arrival) evaluation: response
-/// percentiles, queueing decomposition and throughput, plus the policy
-/// that served the trace. Produced by `Orchestrator::evaluate_async` and
-/// the `traffic_sweep` experiment.
+/// percentiles, queueing decomposition, throughput and queue-depth
+/// observability, plus the policy that served the trace. Produced by
+/// `Orchestrator::evaluate_async`/`evaluate_online` and the
+/// `traffic_sweep`/`drift` experiments.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrafficMetrics {
+    /// The routing policy (for the online control loop: the last epoch's).
     pub decision: Decision,
     pub response: LatencySummary,
     /// Waiting time only (shared-link + compute-queue), per request.
@@ -118,6 +120,12 @@ pub struct TrafficMetrics {
     /// Virtual time of the last departure.
     pub makespan_ms: f64,
     pub requests: usize,
+    /// Largest instantaneous backlog any compute node held
+    /// ([`crate::sim::des::DesOutcome::peak_backlog`]).
+    pub peak_backlog: usize,
+    /// Time-weighted mean backlog of the busiest compute node
+    /// ([`crate::sim::des::DesOutcome::busiest_mean_backlog`]).
+    pub busiest_mean_backlog: f64,
 }
 
 impl TrafficMetrics {
@@ -134,6 +142,8 @@ impl TrafficMetrics {
             throughput_rps: outcome.throughput_rps(),
             makespan_ms: outcome.makespan_ms,
             requests: outcome.completed.len(),
+            peak_backlog: outcome.peak_backlog(),
+            busiest_mean_backlog: outcome.busiest_mean_backlog(),
         }
     }
 
@@ -143,8 +153,91 @@ impl TrafficMetrics {
             .set("requests", self.requests)
             .set("throughput_rps", self.throughput_rps)
             .set("makespan_ms", self.makespan_ms)
+            .set("peak_backlog", self.peak_backlog)
+            .set("busiest_mean_backlog", self.busiest_mean_backlog)
             .set("response", self.response.to_json())
             .set("queueing", self.queueing.to_json())
+    }
+}
+
+/// One control epoch of the online loop: the decision in force over
+/// `[start_ms, end_ms)`, what it observed-and-earned, and the agent's
+/// exploration rate when it decided. The per-epoch timeline is the
+/// adaptation story a frozen-snapshot evaluation cannot tell.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub start_ms: f64,
+    pub end_ms: f64,
+    /// The decision routing arrivals of this epoch.
+    pub decision: Decision,
+    /// Exploration rate in force at the decision (0 for greedy).
+    pub epsilon: f64,
+    /// Requests *completed* during the epoch (what the realized reward is
+    /// computed over; arrivals routed here may complete later).
+    pub requests: usize,
+    /// Latency summary of this epoch's completions.
+    pub response: LatencySummary,
+    /// Eq. 4 reward realized over the epoch's completions (0 when none
+    /// completed — such epochs are skipped by online learning).
+    ///
+    /// Deliberately SARSA-like: the reward is the system's realized cost
+    /// *while this decision was in force*, so right after a policy
+    /// switch it still includes the drain of requests launched under the
+    /// previous decision (a good switch can be penalized for one
+    /// backlog-drain epoch before its own performance shows). The
+    /// alternative — crediting each decision only with completions it
+    /// launched — would starve the learner of any signal exactly when a
+    /// saturated placement never finishes its own arrivals in-epoch,
+    /// which is the regime online adaptation exists for.
+    pub reward: f64,
+}
+
+/// Outcome of one online (control-plane) evaluation:
+/// the per-epoch decision timeline, aggregate per-request metrics, and
+/// the raw DES outcome for custom splits.
+#[derive(Debug, Clone)]
+pub struct OnlineReport {
+    pub epochs: Vec<EpochRecord>,
+    pub metrics: TrafficMetrics,
+    pub outcome: crate::sim::des::DesOutcome,
+    /// Online `learn()` calls performed during the run.
+    pub learn_steps: usize,
+}
+
+impl OnlineReport {
+    /// Latency summaries of requests arriving before vs from `t_ms` —
+    /// the pre-drift / post-drift split of a drift scenario.
+    pub fn split_at(&self, t_ms: f64) -> (LatencySummary, LatencySummary) {
+        let mut pre = Vec::new();
+        let mut post = Vec::new();
+        for c in &self.outcome.completed {
+            if c.arrival_ms < t_ms {
+                pre.push(c.response_ms);
+            } else {
+                post.push(c.response_ms);
+            }
+        }
+        (LatencySummary::of(&pre), LatencySummary::of(&post))
+    }
+
+    /// How long after a drift at `onset_ms` the control plane changed its
+    /// decision: the start of the first epoch at or after the onset whose
+    /// decision differs from the one in force when the drift hit, minus
+    /// the onset. None when the policy never moved (or nothing preceded
+    /// the onset).
+    pub fn adaptation_lag_ms(&self, onset_ms: f64) -> Option<f64> {
+        let before = self.epochs.iter().rev().find(|e| e.start_ms < onset_ms)?;
+        let frozen = before.decision.clone();
+        self.epochs
+            .iter()
+            .find(|e| e.start_ms >= onset_ms && e.decision != frozen)
+            .map(|e| e.start_ms - onset_ms)
+    }
+
+    /// Number of epoch boundaries where the decision actually changed.
+    pub fn decision_changes(&self) -> usize {
+        self.epochs.windows(2).filter(|w| w[0].decision != w[1].decision).count()
     }
 }
 
@@ -280,6 +373,61 @@ mod tests {
         assert!(s.p99_ms > 98.0 && s.p99_ms <= 100.0);
         assert_eq!(s.max_ms, 100.0);
         assert_eq!(LatencySummary::of(&[]).count, 0);
+    }
+
+    #[test]
+    fn online_report_split_and_adaptation_lag() {
+        use crate::sim::des::{CompletedRequest, DesOutcome};
+        let act = |m: u8| Action { placement: Tier::Local, model: ModelId(m) };
+        let dec = |m: u8| Decision(vec![act(m)]);
+        let completed: Vec<CompletedRequest> = (0..10)
+            .map(|i| {
+                let arrival = i as f64 * 1000.0;
+                let resp = if i < 5 { 100.0 } else { 400.0 };
+                CompletedRequest {
+                    id: i as u64,
+                    device: 0,
+                    action: act(0),
+                    arrival_ms: arrival,
+                    path_ms: 1.0,
+                    link_wait_ms: 0.0,
+                    queue_ms: 0.0,
+                    service_ms: resp,
+                    depart_ms: arrival + resp,
+                    response_ms: resp,
+                }
+            })
+            .collect();
+        let outcome = DesOutcome { completed, makespan_ms: 9400.0, ..Default::default() };
+        let epoch = |k: usize, m: u8| EpochRecord {
+            epoch: k,
+            start_ms: k as f64 * 2500.0,
+            end_ms: (k + 1) as f64 * 2500.0,
+            decision: dec(m),
+            epsilon: 0.0,
+            requests: 2,
+            response: LatencySummary::of(&[100.0]),
+            reward: -100.0,
+        };
+        let metrics = TrafficMetrics::from_outcome(&dec(0), &outcome);
+        let report = OnlineReport {
+            // decision changes one epoch after the drift at 5000
+            epochs: vec![epoch(0, 0), epoch(1, 0), epoch(2, 0), epoch(3, 7)],
+            metrics,
+            outcome,
+            learn_steps: 3,
+        };
+        let (pre, post) = report.split_at(5000.0);
+        assert_eq!(pre.count, 5);
+        assert_eq!(post.count, 5);
+        assert!((pre.mean_ms - 100.0).abs() < 1e-9);
+        assert!((post.mean_ms - 400.0).abs() < 1e-9);
+        // drift at 5000: epoch 2 (start 5000) kept the old decision,
+        // epoch 3 (start 7500) changed -> lag 2500
+        assert_eq!(report.adaptation_lag_ms(5000.0), Some(2500.0));
+        assert_eq!(report.decision_changes(), 1);
+        // onset before any epoch: nothing preceded it
+        assert_eq!(report.adaptation_lag_ms(-1.0), None);
     }
 
     #[test]

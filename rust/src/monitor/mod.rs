@@ -127,6 +127,29 @@ impl StateView for TopoState {
     }
 }
 
+/// Overlay live queue-derived utilization onto a background snapshot: the
+/// control plane's mid-trace observation. `load` is per-compute-node
+/// utilization in DES node order (each end device, then each edge, then
+/// the cloud — [`crate::sim::DesCore::utilization`]); each node's CPU
+/// becomes `max(background, live)`, so an idle simulator observes exactly
+/// the background state (what pins the single-epoch control loop bitwise
+/// to the frozen-snapshot evaluation) while a congested node raises its
+/// Table 3 CPU level even when the background Markov state is idle.
+pub fn overlay_live_load(base: &TopoState, load: &[f64]) -> TopoState {
+    let users = base.devices.len();
+    let edges = base.edges.len();
+    assert_eq!(load.len(), users + edges + 1, "load vector vs node layout");
+    let mut s = base.clone();
+    for (i, d) in s.devices.iter_mut().enumerate() {
+        d.cpu = d.cpu.max(load[i]);
+    }
+    for (k, e) in s.edges.iter_mut().enumerate() {
+        e.cpu = e.cpu.max(load[users + k]);
+    }
+    s.cloud.cpu = s.cloud.cpu.max(load[users + edges]);
+    s
+}
+
 // --- Table 3 discretization -------------------------------------------------
 
 /// Edge/cloud CPU levels ("Nine discrete levels").
@@ -296,6 +319,33 @@ mod tests {
             devices: s.devices.clone(),
         };
         assert_eq!(encode(&s), encode(&t));
+    }
+
+    #[test]
+    fn live_load_overlay_is_max_merge() {
+        let topo = Topology::uniform(&[R, R, R], W, 1, [1, 2, 4]);
+        let mut base = TopoState::idle(&topo);
+        base.devices[1].cpu = 0.7; // background busier than live
+        // zero live load observes exactly the background state
+        let idle = overlay_live_load(&base, &[0.0; 5]);
+        assert_eq!(idle, base);
+        assert_eq!(encode(&idle), encode(&base));
+        // live congestion raises the observed level without touching mem
+        let hot = overlay_live_load(&base, &[1.0, 0.2, 0.0, 0.5, 0.25]);
+        assert_eq!(hot.devices[0].cpu, 1.0);
+        assert_eq!(hot.devices[1].cpu, 0.7, "background wins when busier");
+        assert_eq!(hot.edges[0].cpu, 0.5);
+        assert_eq!(hot.cloud.cpu, 0.25);
+        assert_eq!(hot.devices[0].mem, base.devices[0].mem);
+        assert_ne!(encode(&hot).key, encode(&base).key);
+    }
+
+    #[test]
+    #[should_panic(expected = "load vector vs node layout")]
+    fn live_load_overlay_rejects_wrong_arity() {
+        let topo = Topology::uniform(&[R, R], R, 1, [1, 2, 4]);
+        let base = TopoState::idle(&topo);
+        let _ = overlay_live_load(&base, &[0.0; 3]);
     }
 
     #[test]

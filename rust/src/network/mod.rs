@@ -69,7 +69,8 @@ impl Network {
         self.scenario.users()
     }
 
-    /// Fixed message overhead for device `i` executing at `p`.
+    /// Fixed message overhead for device `i` executing at `p`, under the
+    /// topology table's static link conditions.
     ///
     /// Local execution never uploads the image (paper §3.1: "performance
     /// of the user end device is independent of the network connection"),
@@ -78,16 +79,29 @@ impl Network {
     /// execution additionally pays the full set over the home edge's
     /// edge->cloud hop.
     pub fn path_overhead_ms(&self, device: DeviceId, p: Placement) -> f64 {
-        // the topology table is the single source of truth for link
-        // conditions (scenario is its constructor input, kept for naming)
-        let dev = self.topo.device_cond(device);
+        self.path_overhead_ms_with(
+            p,
+            self.topo.device_cond(device),
+            self.topo.edge_cond(self.topo.home_edge(device)),
+        )
+    }
+
+    /// [`Network::path_overhead_ms`] with the link conditions passed in
+    /// explicitly: `dev` is the device's uplink condition and `home_edge`
+    /// its home edge's edge->cloud uplink (only read for cloud
+    /// execution). This is what lets the response model charge the
+    /// *monitored* conditions — which a [`crate::sim::drift::DriftSchedule`]
+    /// can change mid-trace — instead of the topology's static table;
+    /// when the monitored conds mirror the table (every pre-drift path)
+    /// the result is bit-identical.
+    pub fn path_overhead_ms_with(&self, p: Placement, dev: NetCond, home_edge: NetCond) -> f64 {
         let ctl = MsgKind::Update.cost_ms(&self.cal, dev)
             + MsgKind::Decision.cost_ms(&self.cal, dev);
         match p {
             Placement::Local => ctl,
             Placement::Edge(_) => ctl + MsgKind::Request.cost_ms(&self.cal, dev),
             Placement::Cloud => {
-                let e = self.topo.edge_cond(self.topo.home_edge(device));
+                let e = home_edge;
                 ctl + MsgKind::Request.cost_ms(&self.cal, dev)
                     + MsgKind::Request.cost_ms(&self.cal, e)
                     + MsgKind::Update.cost_ms(&self.cal, e)
@@ -180,6 +194,28 @@ mod tests {
         assert_eq!(n.queueing_ms(Tier::Edge(0), 1), 0.0);
         assert_eq!(n.queueing_ms(Tier::Local, 5), 0.0);
         assert!(n.queueing_ms(Tier::Edge(0), 5) > n.queueing_ms(Tier::Edge(0), 2));
+    }
+
+    #[test]
+    fn explicit_cond_path_matches_table_conds() {
+        // Passing the topology's own conds through the explicit-cond
+        // entry must be bitwise the table-driven overhead; flipping the
+        // conds moves it by the Table 12 weak deltas.
+        let n = net("exp-b", 5); // R W R W R devices, edge W
+        for device in 0..5 {
+            for p in [Tier::Local, Tier::Edge(0), Tier::Cloud] {
+                let table = n.path_overhead_ms(device, p);
+                let explicit = n.path_overhead_ms_with(
+                    p,
+                    n.topo.device_cond(device),
+                    n.topo.edge_cond(n.topo.home_edge(device)),
+                );
+                assert_eq!(table.to_bits(), explicit.to_bits(), "dev {device} {p:?}");
+            }
+        }
+        let weak = n.path_overhead_ms_with(Tier::Edge(0), NetCond::Weak, NetCond::Regular);
+        let reg = n.path_overhead_ms_with(Tier::Edge(0), NetCond::Regular, NetCond::Regular);
+        assert!(weak > reg + 100.0, "weak uplink must pay the packet delta");
     }
 
     #[test]

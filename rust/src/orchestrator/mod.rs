@@ -3,16 +3,71 @@
 //! detection (Fig. 6/7, Table 11), greedy evaluation (Fig. 5, Tables 8/9),
 //! and the prediction-accuracy check against the brute-force optimum
 //! (§6.1's "100% prediction accuracy" experiment).
+//!
+//! # One control loop
+//!
+//! Every driver here is one observe -> decide -> execute -> record ->
+//! learn epoch loop, at two degenerate corners of the control period:
+//!
+//! - **Synchronous rounds** (control period == round boundary): each
+//!   epoch is one paper §4.2.2 round through [`Orchestrator::round`];
+//!   [`Orchestrator::train`]/[`Orchestrator::train_full`] and
+//!   [`Orchestrator::evaluate`] are thin configurations of the shared
+//!   private `sync_epochs` driver (explore+learn vs greedy).
+//! - **Open loop** ([`Orchestrator::evaluate_online`] /
+//!   [`Orchestrator::train_online`]): epochs are `period_ms` slices of
+//!   a stochastic arrival trace through the pausable DES control plane —
+//!   at each control tick the live monitored state (background load
+//!   merged with queue depths, under the drift schedule's conds) is
+//!   re-encoded, the agent re-decides, and subsequent arrivals route
+//!   under the new decision while requests in flight complete under the
+//!   one that launched them. [`Orchestrator::evaluate_async`] is the
+//!   single-epoch corner (control period = horizon), pinned bit-exact
+//!   against the historical frozen-snapshot evaluation.
 
 use std::sync::Arc;
 
 use crate::agent::{bruteforce, Agent};
-use crate::metrics::{RoundRecord, RunMetrics, TrafficMetrics};
-use crate::monitor::{EncodedState, TopoState};
-use crate::sim::Env;
+use crate::metrics::{
+    EpochRecord, LatencySummary, OnlineReport, RoundRecord, RunMetrics, TrafficMetrics,
+};
+use crate::monitor::{self, EncodedState, TopoState};
+use crate::sim::des::{DesCore, DesOutcome};
+use crate::sim::drift::{DriftSchedule, DriftSegment};
+use crate::sim::{arrivals, ArrivalProcess, Env};
 use crate::types::Decision;
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Convergence;
+
+/// The online control plane's knobs are the `[control]` config section;
+/// re-exported here under the name the drivers use. The default is one
+/// epoch spanning the horizon with online learning enabled;
+/// [`Orchestrator::evaluate_async`] opts out of learning explicitly (a
+/// frozen snapshot never learns).
+pub use crate::config::ControlConfig as ControlCfg;
+
+/// Bring the DES service/path tables in line with the drift segment in
+/// force at `at_ms`: when its cond overrides differ from the installed
+/// segment's, rebuild the physics state from the environment's background
+/// snapshot and re-table the core — leaving requests in flight (and the
+/// queues they occupy) untouched. No-op while the segment's conds are
+/// unchanged (rate drift lives in the arrival trace, not the tables).
+fn sync_drift_tables(
+    env: &Env,
+    drift: &DriftSchedule,
+    at_ms: f64,
+    seg: &mut DriftSegment,
+    phys: &mut TopoState,
+    core: &mut DesCore,
+) {
+    let now = *drift.at(at_ms);
+    if (now.device_cond, now.edge_cond) != (seg.device_cond, seg.edge_cond) {
+        *seg = now;
+        *phys = env.state.clone();
+        seg.apply_conds(phys);
+        core.retable(&env.model, phys);
+    }
+}
 
 /// Training-curve point: (step, windowed average reward).
 pub type CurvePoint = (usize, f64);
@@ -76,6 +131,30 @@ impl Orchestrator {
         (rec, next)
     }
 
+    /// The synchronous-epoch driver both training and greedy evaluation
+    /// run on (the "control period == round boundary" corner of the
+    /// control loop): up to `epochs` rounds through
+    /// [`Orchestrator::round_with`], threading each round's post-step
+    /// encoding into the next (sound: this loop owns `&mut self` between
+    /// rounds), handing every record to `sink`. `sink` returning false
+    /// stops the loop — the convergence early-exit of
+    /// [`Orchestrator::train`].
+    fn sync_epochs(
+        &mut self,
+        epochs: usize,
+        explore: bool,
+        mut sink: impl FnMut(usize, &RoundRecord) -> bool,
+    ) {
+        let mut carry: Option<EncodedState> = None;
+        for step in 0..epochs {
+            let (rec, next) = self.round_with(explore, carry.take());
+            carry = Some(next);
+            if !sink(step, &rec) {
+                break;
+            }
+        }
+    }
+
     /// The one training loop: run up to `steps` exploring rounds, sample
     /// the windowed average-reward curve every `curve_every` rounds, and —
     /// when `stop_at_convergence` — break once the rolling-window mean of
@@ -93,12 +172,7 @@ impl Orchestrator {
         let mut curve = Vec::new();
         let mut acc = 0.0;
         let mut count = 0usize;
-        // Thread each round's post-step encoding into the next round
-        // (sound here: this loop owns &mut self between rounds).
-        let mut carry: Option<EncodedState> = None;
-        for step in 0..steps {
-            let (rec, next) = self.round_with(true, carry.take());
-            carry = Some(next);
+        self.sync_epochs(steps, true, |step, rec| {
             conv.push(rec.reward);
             acc += rec.reward;
             count += 1;
@@ -107,10 +181,8 @@ impl Orchestrator {
                 acc = 0.0;
                 count = 0;
             }
-            if stop_at_convergence && conv.is_converged() && step > 2 * window {
-                break;
-            }
-        }
+            !(stop_at_convergence && conv.is_converged() && step > 2 * window)
+        });
         TrainResult { steps: self.agent.steps(), converged_at: conv.converged_at, curve }
     }
 
@@ -129,12 +201,10 @@ impl Orchestrator {
     /// Greedy evaluation over `rounds` (no exploration, no learning).
     pub fn evaluate(&mut self, rounds: usize) -> RunMetrics {
         let mut m = RunMetrics::new();
-        let mut carry: Option<EncodedState> = None;
-        for _ in 0..rounds {
-            let (rec, next) = self.round_with(false, carry.take());
-            carry = Some(next);
-            m.push(&rec);
-        }
+        self.sync_epochs(rounds, false, |_, rec| {
+            m.push(rec);
+            true
+        });
         m
     }
 
@@ -149,18 +219,226 @@ impl Orchestrator {
     /// the open-loop quality signal round averages cannot express.
     /// Deterministic for a fixed `seed` (trace and service noise both
     /// derive from it).
+    ///
+    /// This is the frozen-snapshot corner of the control loop: one epoch
+    /// spanning the whole horizon, no drift. The integration suite pins
+    /// it bitwise against the historical decide-once + `run_open_loop`
+    /// path.
     pub fn evaluate_async(
         &mut self,
-        process: crate::sim::ArrivalProcess,
+        process: ArrivalProcess,
         horizon_ms: f64,
         seed: u64,
     ) -> TrafficMetrics {
-        let state = self.env.encoded();
-        let decision = self.agent.decide(&state, false);
+        // Frozen snapshot by definition: one epoch, no drift, no learning
+        // (explicitly off — the config default enables online learning
+        // for the control-plane drivers, but a frozen evaluation must
+        // leave the agent untouched).
+        let frozen = ControlCfg { period_ms: f64::INFINITY, online_learning: false };
+        self.evaluate_online(process, horizon_ms, seed, &frozen, &DriftSchedule::none())
+            .metrics
+    }
+
+    /// Online (control-plane) evaluation: play a stochastic arrival trace
+    /// through the DES, pausing every `ctl.period_ms` of virtual time to
+    /// re-encode the live monitored state — background load merged with
+    /// per-node queue depths ([`monitor::overlay_live_load`]) under
+    /// `drift`'s current link conditions — and let the agent re-decide.
+    /// Arrivals route under the decision of their epoch; requests in
+    /// flight complete under the decision that launched them. With
+    /// `ctl.online_learning` the agent also `learn()`s each epoch's
+    /// realized Eq. 4 reward (greedy decisions, no exploration): the
+    /// paper's online-adaptation story under drift. The reward is
+    /// SARSA-like — the realized cost while the decision was in force,
+    /// including the drain of requests launched under the previous
+    /// decision (see [`EpochRecord::reward`] for the rationale).
+    ///
+    /// Deterministic for a fixed `seed`; with the identity drift schedule
+    /// and one epoch it reproduces [`Orchestrator::evaluate_async`]
+    /// bitwise.
+    pub fn evaluate_online(
+        &mut self,
+        process: ArrivalProcess,
+        horizon_ms: f64,
+        seed: u64,
+        ctl: &ControlCfg,
+        drift: &DriftSchedule,
+    ) -> OnlineReport {
+        self.run_online(
+            process,
+            horizon_ms,
+            seed,
+            ctl.period_ms,
+            false,
+            ctl.online_learning,
+            drift,
+            &mut |_| None,
+        )
+    }
+
+    /// [`Orchestrator::evaluate_online`] with exploration on: epsilon-
+    /// greedy decisions at each control tick plus online learning — the
+    /// open-loop counterpart of [`Orchestrator::train`], for training
+    /// directly against trace dynamics.
+    pub fn train_online(
+        &mut self,
+        process: ArrivalProcess,
+        horizon_ms: f64,
+        seed: u64,
+        period_ms: f64,
+        drift: &DriftSchedule,
+    ) -> OnlineReport {
+        self.run_online(process, horizon_ms, seed, period_ms, true, true, drift, &mut |_| None)
+    }
+
+    /// The open-loop control loop all online drivers share. `decide`
+    /// overrides the agent when it returns Some (the drift experiment's
+    /// per-epoch oracle); with the default `|_| None` every decision is
+    /// the agent's.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run_online(
+        &mut self,
+        process: ArrivalProcess,
+        horizon_ms: f64,
+        seed: u64,
+        period_ms: f64,
+        explore: bool,
+        learn: bool,
+        drift: &DriftSchedule,
+        decide: &mut dyn FnMut(&TopoState) -> Option<Decision>,
+    ) -> OnlineReport {
         let users = self.env.users();
-        let trace = crate::sim::arrivals::schedule(process, users, horizon_ms, seed);
-        let outcome = self.env.open_loop(&decision, &trace, horizon_ms, seed ^ 0x5EED_DE5);
-        TrafficMetrics::from_outcome(&decision, &outcome)
+        let trace = arrivals::schedule_with_drift(process, users, horizon_ms, seed, drift);
+        let period = if period_ms.is_finite() && period_ms > 0.0 { period_ms } else { horizon_ms };
+
+        let mut core = DesCore::new();
+        let mut out = DesOutcome::default();
+        // Physics state: the background snapshot under the drift segment's
+        // cond overrides. Live queue depths are *observation only* — the
+        // DES models congestion as real queueing, so folding it back into
+        // the service law would double-count it.
+        let mut seg = *drift.at(0.0);
+        let mut phys = self.env.state.clone();
+        seg.apply_conds(&mut phys);
+        core.install(&self.env.model, &phys);
+        core.begin(seed ^ 0x5EED_DE5, &mut out);
+
+        let mut epochs: Vec<EpochRecord> = Vec::new();
+        let mut learn_steps = 0usize;
+        // (state, decision, reward) of the epoch awaiting its next-state
+        // encoding for learn(); None when the epoch saw no completions.
+        let mut pending: Option<(EncodedState, Decision, f64)> = None;
+        let mut cursor = 0usize;
+        let mut t = 0.0f64;
+        let mut epoch = 0usize;
+        loop {
+            let t_end = if t + period >= horizon_ms { horizon_ms } else { t + period };
+            // The world drifts regardless of the controller: make sure the
+            // tables match the segment in force at this tick before
+            // observing (a boundary exactly at t must already be visible).
+            sync_drift_tables(&self.env, drift, t, &mut seg, &mut phys, &mut core);
+            // Observe: live queue depths over the physics state.
+            let obs = self.observe_live(&core, &phys);
+            let enc = monitor::encode(&obs);
+            if learn {
+                if let Some((ps, pd, pr)) = pending.take() {
+                    self.agent.learn(&ps, &pd, pr, &enc);
+                    learn_steps += 1;
+                }
+            }
+            let epsilon = if explore { self.agent.epsilon() } else { 0.0 };
+            let decision = match decide(&obs) {
+                Some(d) => d,
+                None => self.agent.decide(&enc, explore),
+            };
+            // Advance virtual time to the next control tick (final epoch:
+            // drain everything, like the frozen evaluation), pausing at
+            // every drift boundary on the way so cond changes are
+            // physical at the time they happen — independent of the
+            // control period. Arrivals are admitted per drift slice
+            // (always under this epoch's decision) so each is routed with
+            // the path overheads in force at its arrival time.
+            let before = out.completed.len();
+            let mut seg_t = t;
+            loop {
+                sync_drift_tables(&self.env, drift, seg_t, &mut seg, &mut phys, &mut core);
+                let boundary = drift.next_boundary_after(seg_t);
+                let stop = boundary.min(t_end);
+                let next = cursor + trace[cursor..].partition_point(|r| r.arrival_ms < stop);
+                core.admit(&decision, &trace[cursor..next]);
+                cursor = next;
+                if t_end >= horizon_ms {
+                    // final epoch: step through any remaining boundaries,
+                    // then drain
+                    if boundary.is_finite() {
+                        core.run_until(boundary, &mut out);
+                        seg_t = boundary;
+                        continue;
+                    }
+                    core.run_until(f64::INFINITY, &mut out);
+                    break;
+                } else if boundary < t_end {
+                    core.run_until(boundary, &mut out);
+                    seg_t = boundary;
+                } else {
+                    core.run_until(t_end, &mut out);
+                    break;
+                }
+            }
+            // Record the epoch from its realized completions.
+            let responses: Vec<f64> =
+                out.completed[before..].iter().map(|c| c.response_ms).collect();
+            let summary = LatencySummary::of(&responses);
+            let reward = if responses.is_empty() {
+                0.0
+            } else {
+                self.env.reward(summary.mean_ms, self.env.accuracy_of(&decision))
+            };
+            pending = if responses.is_empty() {
+                None
+            } else {
+                Some((enc, decision.clone(), reward))
+            };
+            epochs.push(EpochRecord {
+                epoch,
+                start_ms: t,
+                end_ms: t_end,
+                decision,
+                epsilon,
+                requests: responses.len(),
+                response: summary,
+                reward,
+            });
+            epoch += 1;
+            t = t_end;
+            if t >= horizon_ms {
+                break;
+            }
+        }
+        // Close out the last epoch's learning against the drained state.
+        if learn {
+            if let Some((ps, pd, pr)) = pending.take() {
+                let obs = self.observe_live(&core, &phys);
+                let enc = monitor::encode(&obs);
+                self.agent.learn(&ps, &pd, pr, &enc);
+                learn_steps += 1;
+            }
+        }
+        core.finalize(&mut out);
+        out.horizon_ms = horizon_ms;
+        let last_decision =
+            epochs.last().map(|e| e.decision.clone()).expect("at least one epoch");
+        let metrics = TrafficMetrics::from_outcome(&last_decision, &out);
+        OnlineReport { epochs, metrics, outcome: out, learn_steps }
+    }
+
+    /// The control plane's mid-trace observation: the physics state (background
+    /// load + drift conds) with each compute node's live queue-derived
+    /// utilization max-merged in.
+    fn observe_live(&self, core: &DesCore, phys: &TopoState) -> TopoState {
+        let load: Vec<f64> =
+            (0..core.num_compute_nodes()).map(|i| core.utilization(i)).collect();
+        monitor::overlay_live_load(phys, &load)
     }
 
     /// The representative greedy decision at the idle system state —
@@ -344,6 +622,122 @@ mod tests {
         assert!(m.response.p95_ms <= m.response.p99_ms);
         assert!(m.throughput_rps > 0.0);
         assert_eq!(m.decision.n_users(), users);
+    }
+
+    #[test]
+    fn evaluate_async_pins_frozen_snapshot_bitwise() {
+        // The collapsed driver's single-epoch corner must reproduce the
+        // historical decide-once + run_open_loop evaluation bit-for-bit.
+        let users = 3;
+        let mk = || {
+            let mut o = Orchestrator::new(env(users, AccuracyConstraint::Min), ql(users));
+            let _ = o.train_full(300, 300); // nontrivial policy + env rng state
+            o
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let process = crate::sim::ArrivalProcess::Poisson { rate_per_s: 1.5 };
+        let got = a.evaluate_async(process, 8_000.0, 9);
+
+        // the historical frozen-snapshot path, restated verbatim
+        let state = b.env.encoded();
+        let decision = b.agent.decide(&state, false);
+        let trace = crate::sim::arrivals::schedule(process, users, 8_000.0, 9);
+        let outcome = b.env.open_loop(&decision, &trace, 8_000.0, 9 ^ 0x5EED_DE5);
+        let want = TrafficMetrics::from_outcome(&decision, &outcome);
+        assert!(got.requests > 0, "trace must be non-trivial");
+        assert_eq!(got, want);
+
+        // explicit single-epoch evaluate_online is the same thing
+        let mut c = mk();
+        let frozen = ControlCfg { period_ms: f64::INFINITY, online_learning: false };
+        let rep = c.evaluate_online(
+            process,
+            8_000.0,
+            9,
+            &frozen,
+            &crate::sim::DriftSchedule::none(),
+        );
+        assert_eq!(rep.epochs.len(), 1);
+        assert_eq!(rep.metrics, want);
+        assert_eq!(rep.learn_steps, 0);
+        // the default config learns online (single final update here) but
+        // the realized trace — and therefore the metrics — are identical:
+        // learning happens strictly after each epoch's physics
+        let mut d = mk();
+        let rep2 = d.evaluate_online(
+            process,
+            8_000.0,
+            9,
+            &ControlCfg::default(),
+            &crate::sim::DriftSchedule::none(),
+        );
+        assert_eq!(rep2.metrics, want);
+        assert_eq!(rep2.learn_steps, 1);
+        assert_eq!(d.agent.steps(), 300 + 1);
+    }
+
+    #[test]
+    fn online_control_loop_reports_epochs_and_learns() {
+        let users = 2;
+        let process = crate::sim::ArrivalProcess::Poisson { rate_per_s: 1.0 };
+        let none = crate::sim::DriftSchedule::none();
+
+        let mut o = Orchestrator::new(env(users, AccuracyConstraint::Min), ql(users));
+        o.env.freeze();
+        let ctl = ControlCfg { period_ms: 2_000.0, online_learning: true };
+        let rep = o.evaluate_online(process, 10_000.0, 5, &ctl, &none);
+        assert_eq!(rep.epochs.len(), 5);
+        for (k, e) in rep.epochs.iter().enumerate() {
+            assert_eq!(e.epoch, k);
+            assert!((e.start_ms - k as f64 * 2_000.0).abs() < 1e-9);
+            assert!(e.end_ms > e.start_ms);
+            assert_eq!(e.epsilon, 0.0, "evaluation decides greedily");
+        }
+        assert!((rep.epochs.last().unwrap().end_ms - 10_000.0).abs() < 1e-9);
+        // every completion is attributed to exactly one epoch
+        let per_epoch: usize = rep.epochs.iter().map(|e| e.requests).sum();
+        assert_eq!(per_epoch, rep.metrics.requests);
+        assert!(rep.metrics.requests > 0);
+        // online learning really advanced the agent
+        assert!(rep.learn_steps >= 1);
+        assert_eq!(o.agent.steps(), rep.learn_steps);
+
+        // with learning off the agent is untouched
+        let mut o2 = Orchestrator::new(env(users, AccuracyConstraint::Min), ql(users));
+        o2.env.freeze();
+        let ctl_off = ControlCfg { period_ms: 2_000.0, online_learning: false };
+        let rep2 = o2.evaluate_online(process, 10_000.0, 5, &ctl_off, &none);
+        assert_eq!(rep2.learn_steps, 0);
+        assert_eq!(o2.agent.steps(), 0);
+    }
+
+    #[test]
+    fn fixed_policy_control_ticks_do_not_perturb_physics() {
+        // A policy that never changes must see (numerically) the same
+        // trace outcome whether the clock pauses 1 or many times.
+        use crate::agent::baseline::FixedAgent;
+        let users = 4;
+        let process = crate::sim::ArrivalProcess::Poisson { rate_per_s: 1.2 };
+        let none = crate::sim::DriftSchedule::none();
+        let run = |period: f64| {
+            let mut o = Orchestrator::new(
+                env(users, AccuracyConstraint::Max),
+                Box::new(FixedAgent::new(Tier::Edge(0), users)),
+            );
+            o.env.freeze();
+            let ctl = ControlCfg { period_ms: period, online_learning: false };
+            o.evaluate_online(process, 12_000.0, 17, &ctl, &none)
+        };
+        let single = run(f64::INFINITY);
+        let ticked = run(1_500.0);
+        assert_eq!(ticked.epochs.len(), 8);
+        assert_eq!(single.metrics.requests, ticked.metrics.requests);
+        assert!((single.metrics.makespan_ms - ticked.metrics.makespan_ms).abs() < 1e-9);
+        assert!(
+            (single.metrics.response.p95_ms - ticked.metrics.response.p95_ms).abs() < 1e-9
+        );
+        assert_eq!(ticked.decision_changes(), 0);
     }
 
     #[test]

@@ -6,13 +6,15 @@
 //! # Virtual-clock model
 //!
 //! The simulator owns a virtual clock that only moves when the next event
-//! is popped from a min-heap ordered by `(time, seq)` — `seq` is a
-//! monotonically increasing tie-breaker, so simultaneous events (e.g. a
+//! is popped from a min-heap ordered by `(time, tie class, seq)` —
+//! admitted arrival joins tie-break by request id (class 0), generated
+//! events by creation order (class 1) — so simultaneous events (e.g. a
 //! whole synchronous round arriving at t = 0) are processed in a fixed,
-//! deterministic order and a trace is a pure function of its inputs and
-//! seed. Wall-clock time never appears: a 10-minute saturation sweep runs
-//! in milliseconds, and two runs with the same seed are bit-exact (the
-//! property suite asserts this).
+//! deterministic order that is also independent of how the control plane
+//! slices the trace into admits, and a trace is a pure function of its
+//! inputs and seed. Wall-clock time never appears: a 10-minute saturation
+//! sweep runs in milliseconds, and two runs with the same seed are
+//! bit-exact (the property suite asserts this).
 //!
 //! # Request lifecycle (open-loop mode)
 //!
@@ -76,6 +78,18 @@ pub struct CompletedRequest {
     pub response_ms: f64,
 }
 
+/// Time-weighted backlog statistics of one compute node over a run:
+/// backlog counts requests at the node (in service + waiting in its
+/// FIFO); the ingress links are excluded (their waits are already
+/// reported per request as `link_wait_ms`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BacklogStats {
+    /// Largest instantaneous backlog the node ever held.
+    pub max: usize,
+    /// Time-weighted mean backlog over the run's makespan.
+    pub mean: f64,
+}
+
 /// Outcome of one DES run.
 #[derive(Debug, Clone, Default)]
 pub struct DesOutcome {
@@ -91,6 +105,10 @@ pub struct DesOutcome {
     /// reusable [`DesCore`] hot path leaves it empty unless
     /// [`DesCore::collect_event_times`] is set.
     pub event_times: Vec<f64>,
+    /// Per-compute-node backlog statistics in DES node order (each end
+    /// device, then each edge, then the cloud) — the congestion signal
+    /// the drift experiment and admission control report.
+    pub node_backlog: Vec<BacklogStats>,
 }
 
 impl DesOutcome {
@@ -116,6 +134,18 @@ impl DesOutcome {
         self.completed.iter().map(|c| c.link_wait_ms + c.queue_ms).sum::<f64>()
             / self.completed.len() as f64
     }
+
+    /// Largest instantaneous backlog any compute node held over the run.
+    pub fn peak_backlog(&self) -> usize {
+        self.node_backlog.iter().map(|b| b.max).max().unwrap_or(0)
+    }
+
+    /// Time-weighted mean backlog of the *busiest* node (the one with the
+    /// largest mean) — the sustained-congestion signal, robust against
+    /// dilution by the many idle devices of a large fleet.
+    pub fn busiest_mean_backlog(&self) -> f64 {
+        self.node_backlog.iter().map(|b| b.mean).fold(0.0, f64::max)
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -132,24 +162,37 @@ enum EventKind {
 #[derive(Debug, Clone, Copy)]
 struct Event {
     time: f64,
+    /// Tie class at equal times: 0 = admitted arrival joins (ordered by
+    /// request id), 1 = simulator-generated events (ordered by creation
+    /// counter). Keeping arrival ordering keyed on the *request id*
+    /// rather than a shared push counter makes the pop order independent
+    /// of how the trace was batched into admits — what pins epoch-split
+    /// control-plane runs bitwise to monolithic ones even when event
+    /// times tie exactly. For a monolithic run this reproduces the
+    /// historical single-counter order: arrivals were always seeded
+    /// first (all with lower seqs than any generated event) in trace
+    /// order, which is id order.
+    prio: u8,
     seq: u64,
     kind: EventKind,
 }
 
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.time == other.time && self.prio == other.prio && self.seq == other.seq
     }
 }
 impl Eq for Event {}
 
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap: invert so earliest (time, seq) pops
-        // first. total_cmp is a total order (times are never NaN).
+        // BinaryHeap is a max-heap: invert so the earliest
+        // (time, prio, seq) pops first. total_cmp is a total order
+        // (times are never NaN).
         other
             .time
             .total_cmp(&self.time)
+            .then_with(|| other.prio.cmp(&self.prio))
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -200,9 +243,10 @@ fn place_slot(p: Placement, num_edges: usize) -> usize {
     }
 }
 
+/// Push a simulator-generated event (tie class 1, creation order).
 fn push_event(heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, kind: EventKind) {
     *seq += 1;
-    heap.push(Event { time, seq: *seq, kind });
+    heap.push(Event { time, prio: 1, seq: *seq, kind });
 }
 
 /// Reusable open-loop DES engine: memoized service tables plus the scratch
@@ -237,6 +281,19 @@ pub struct DesCore {
     flights: Vec<InFlight>,
     nodes: Vec<ServerQueue>,
     links: Vec<ServerQueue>,
+    // --- control-plane run state (valid between begin() and finalize()) ---
+    /// Service-noise stream of the current run.
+    rng: Rng,
+    /// Event tie-break counter of the current run.
+    seq: u64,
+    /// Per-compute-node instantaneous backlog (in service + waiting).
+    bl_cur: Vec<u32>,
+    /// Per-compute-node peak backlog over the run.
+    bl_max: Vec<u32>,
+    /// Per-compute-node time-weighted backlog integral (backlog x ms).
+    bl_area: Vec<f64>,
+    /// Virtual time of each node's last backlog change (integral marker).
+    bl_mark: Vec<f64>,
     /// Record per-event virtual times into `DesOutcome::event_times`
     /// (monotonicity witness). Off by default: it is test-only
     /// instrumentation that costs a push per event on the hot path.
@@ -265,6 +322,12 @@ impl DesCore {
             flights: Vec::new(),
             nodes: Vec::new(),
             links: Vec::new(),
+            rng: Rng::new(0),
+            seq: 0,
+            bl_cur: Vec::new(),
+            bl_max: Vec::new(),
+            bl_area: Vec::new(),
+            bl_mark: Vec::new(),
             collect_event_times: false,
         }
     }
@@ -282,6 +345,42 @@ impl DesCore {
         self.users = users;
         self.num_edges = topo.num_edges();
         self.num_places = topo.num_placements();
+        self.fill_tables(model, state);
+
+        // Node layout: [0, users) per-device compute, [users, users + E)
+        // the edge nodes, users + E the cloud; one ingress link per edge.
+        self.nodes.clear();
+        self.nodes.extend(topo.devices.iter().map(|d| ServerQueue::new(d.vcpus)));
+        self.nodes.extend(topo.edges.iter().map(|e| ServerQueue::new(e.vcpus)));
+        self.nodes.push(ServerQueue::new(topo.cloud.vcpus));
+        self.links.clear();
+        self.links.extend((0..self.num_edges).map(|_| ServerQueue::new(1)));
+    }
+
+    /// Recompute the service/path tables for a new background state —
+    /// e.g. a mid-trace [`crate::sim::drift::DriftSchedule`] cond change —
+    /// **without** touching the arena, so requests in flight (and the
+    /// queues they occupy) survive the swap. The topology must be the one
+    /// installed; only the state (background load, monitored conds) may
+    /// differ.
+    pub fn retable<S: StateView>(&mut self, model: &ResponseModel, state: &S) {
+        assert!(self.users > 0, "DesCore::install must precede retable");
+        assert_eq!(state.users(), self.users, "retable users vs installed topology");
+        assert_eq!(model.net.topo.users(), self.users, "retable topology arity");
+        assert_eq!(model.net.topo.num_edges(), self.num_edges, "retable topology edges");
+        assert_eq!(state.num_edges(), self.num_edges, "retable state edges");
+        self.fill_tables(model, state);
+    }
+
+    /// Fill the memoized users x models x placements service table and the
+    /// users x placements path/ingress tables. Path overheads charge the
+    /// *state's* monitored link conditions
+    /// ([`ResponseModel::path_overhead_ms`]) — bit-identical to the static
+    /// table whenever the state mirrors the topology, and the lever drift
+    /// scenarios move mid-trace.
+    fn fill_tables<S: StateView>(&mut self, model: &ResponseModel, state: &S) {
+        let topo = &model.net.topo;
+        let users = self.users;
         let places = topo.placements();
 
         self.svc.clear();
@@ -304,7 +403,7 @@ impl DesCore {
         self.ingress.reserve(users * self.num_places);
         for device in 0..users {
             for &p in &places {
-                self.path.push(model.net.path_overhead_ms(device, p));
+                self.path.push(model.path_overhead_ms(device, p, state));
                 self.ingress.push(match topo.ingress_edge(device, p) {
                     None => 0,
                     Some(link) => 1 + link,
@@ -313,15 +412,6 @@ impl DesCore {
         }
         self.link_queue_ms = model.net.cal.link_queue_ms;
         self.sigma = model.net.cal.noise_sigma;
-
-        // Node layout: [0, users) per-device compute, [users, users + E)
-        // the edge nodes, users + E the cloud; one ingress link per edge.
-        self.nodes.clear();
-        self.nodes.extend(topo.devices.iter().map(|d| ServerQueue::new(d.vcpus)));
-        self.nodes.extend(topo.edges.iter().map(|e| ServerQueue::new(e.vcpus)));
-        self.nodes.push(ServerQueue::new(topo.cloud.vcpus));
-        self.links.clear();
-        self.links.extend((0..self.num_edges).map(|_| ServerQueue::new(1)));
     }
 
     /// Memoized single-stream service time for (device, model, placement)
@@ -346,6 +436,11 @@ impl DesCore {
     /// function of (installed tables, decision, trace, seed).
     /// `out.event_times` stays empty unless
     /// [`DesCore::collect_event_times`] is set.
+    ///
+    /// Thin composition of the control-plane primitives — one epoch
+    /// spanning the whole trace: [`DesCore::begin`], one
+    /// [`DesCore::admit`], [`DesCore::run_until`] infinity,
+    /// [`DesCore::finalize`].
     pub fn run_open_loop_into(
         &mut self,
         decision: &Decision,
@@ -354,7 +449,94 @@ impl DesCore {
         noise_seed: u64,
         out: &mut DesOutcome,
     ) {
-        assert!(self.users > 0, "DesCore::install must precede run_open_loop_into");
+        self.begin(noise_seed, out);
+        out.completed.reserve(trace.len());
+        self.admit(decision, trace);
+        self.run_until(f64::INFINITY, out);
+        self.finalize(out);
+        out.horizon_ms = horizon_ms;
+    }
+
+    /// Run one open-loop trace with the virtual clock paused every
+    /// `period_ms` — a fixed-decision control loop without re-decision.
+    /// This is the canonical admission-slicing convention
+    /// (`Orchestrator::run_online` implements the same one, plus
+    /// re-decision and drift): arrivals strictly before each tick are
+    /// admitted before advancing to it, and the final epoch drains.
+    /// Bitwise identical to [`DesCore::run_open_loop_into`] for any
+    /// period — the pin the control-plane property tests and the
+    /// `open_loop_10u_60s_12ticks` bench exercise through this one
+    /// helper, so the convention cannot silently fork.
+    pub fn run_sliced(
+        &mut self,
+        decision: &Decision,
+        trace: &[Request],
+        horizon_ms: f64,
+        period_ms: f64,
+        noise_seed: u64,
+        out: &mut DesOutcome,
+    ) {
+        assert!(horizon_ms > 0.0, "empty horizon");
+        assert!(period_ms > 0.0, "non-positive control period");
+        self.begin(noise_seed, out);
+        let mut t = 0.0;
+        let mut i = 0usize;
+        while t < horizon_ms {
+            let end = if t + period_ms >= horizon_ms { horizon_ms } else { t + period_ms };
+            let j = i + trace[i..].partition_point(|r| r.arrival_ms < end);
+            self.admit(decision, &trace[i..j]);
+            i = j;
+            if end >= horizon_ms {
+                self.run_until(f64::INFINITY, out);
+            } else {
+                self.run_until(end, out);
+            }
+            t = end;
+        }
+        self.finalize(out);
+        out.horizon_ms = horizon_ms;
+    }
+
+    /// Start a run: reset the arena (retaining capacity), seed the
+    /// service-noise stream, and clear `out`. The control plane calls
+    /// this once per trace, then alternates [`DesCore::admit`] /
+    /// [`DesCore::run_until`] per control epoch.
+    pub fn begin(&mut self, noise_seed: u64, out: &mut DesOutcome) {
+        assert!(self.users > 0, "DesCore::install must precede begin");
+        self.heap.clear();
+        self.flights.clear();
+        for q in self.nodes.iter_mut() {
+            q.busy = 0;
+            q.waiting.clear();
+        }
+        for l in self.links.iter_mut() {
+            l.busy = 0;
+            l.waiting.clear();
+        }
+        self.rng = Rng::new(noise_seed);
+        self.seq = 0;
+        let n = self.nodes.len();
+        self.bl_cur.clear();
+        self.bl_cur.resize(n, 0);
+        self.bl_max.clear();
+        self.bl_max.resize(n, 0);
+        self.bl_area.clear();
+        self.bl_area.resize(n, 0.0);
+        self.bl_mark.clear();
+        self.bl_mark.resize(n, 0.0);
+        out.completed.clear();
+        out.event_times.clear();
+        out.node_backlog.clear();
+        out.makespan_ms = 0.0;
+        out.horizon_ms = 0.0;
+    }
+
+    /// Admit a time-ordered batch of arrivals, each routed by `decision`
+    /// (the control plane's *current* policy — requests admitted in an
+    /// earlier epoch keep the action that launched them). Each arrival
+    /// materializes at its queue-join time after the fixed path overhead.
+    pub fn admit(&mut self, decision: &Decision, arrivals: &[Request]) {
+        assert!(self.users > 0, "DesCore::install must precede admit");
         assert_eq!(decision.n_users(), self.users, "decision arity vs installed topology");
         assert!(
             decision.0.iter().all(|a| match a.placement {
@@ -364,45 +546,14 @@ impl DesCore {
             "decision outside topology"
         );
         debug_assert!(
-            trace.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
+            arrivals.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
             "trace must be time-ordered"
         );
-
-        // Reset the arena (retains capacity from prior runs).
-        self.heap.clear();
-        self.flights.clear();
-        self.flights.reserve(trace.len());
-        for q in self.nodes.iter_mut() {
-            q.busy = 0;
-            q.waiting.clear();
-        }
-        for l in self.links.iter_mut() {
-            l.busy = 0;
-            l.waiting.clear();
-        }
-        out.completed.clear();
-        out.completed.reserve(trace.len());
-        out.event_times.clear();
-        out.makespan_ms = 0.0;
-        out.horizon_ms = horizon_ms;
-
-        let users = self.users;
         let num_edges = self.num_edges;
         let num_places = self.num_places;
-        let ingress_base = users + num_edges + 1;
-        let compute_node = |device: usize, p: Placement| match p {
-            Placement::Local => device,
-            Placement::Edge(j) => users + j,
-            Placement::Cloud => users + num_edges,
-        };
-
-        let mut rng = Rng::new(noise_seed);
-        let sigma = self.sigma;
-        let mut seq = 0u64;
-
-        // Seed the heap: each arrival materializes at its queue-join time
-        // after the fixed path overhead.
-        for r in trace {
+        let ingress_base = self.users + num_edges + 1;
+        self.flights.reserve(arrivals.len());
+        for r in arrivals {
             let action = decision.0[r.device];
             let pslot = place_slot(action.placement, num_edges);
             let path_ms = self.path[r.device * num_places + pslot];
@@ -420,18 +571,57 @@ impl DesCore {
                 service_ms: 0.0,
             });
             let target = match self.ingress[r.device * num_places + pslot] {
-                0 => compute_node(r.device, Placement::Local),
+                0 => r.device, // local execution: the device's own node
                 link_plus_1 => ingress_base + (link_plus_1 - 1),
             };
-            push_event(
-                &mut self.heap,
-                &mut seq,
-                r.arrival_ms + path_ms,
-                EventKind::Join { node: target, req: idx },
-            );
+            // Arrival joins carry tie class 0 and the request id, so the
+            // pop order at equal times is a property of the trace alone —
+            // identical however the trace is sliced into admits. Ids must
+            // therefore be unique and trace-ordered across all admits of
+            // one run (the canonical `arrivals::schedule` traces are).
+            self.heap.push(Event {
+                time: r.arrival_ms + path_ms,
+                prio: 0,
+                seq: r.id,
+                kind: EventKind::Join { node: target, req: idx },
+            });
         }
+    }
 
-        while let Some(ev) = self.heap.pop() {
+    /// Account a backlog change of compute node `node` at time `t`:
+    /// integrate the old level over the elapsed interval, then shift.
+    fn backlog_shift(&mut self, node: usize, t: f64, delta: i32) {
+        self.bl_area[node] += self.bl_cur[node] as f64 * (t - self.bl_mark[node]);
+        self.bl_mark[node] = t;
+        let cur = (self.bl_cur[node] as i64 + delta as i64) as u32;
+        self.bl_cur[node] = cur;
+        if cur > self.bl_max[node] {
+            self.bl_max[node] = cur;
+        }
+    }
+
+    /// Process events up to and including virtual time `limit_ms`
+    /// (infinity = drain the heap). Returning with events still pending
+    /// is what lets a control plane pause the clock at a control tick,
+    /// observe the live queues, swap the decision table and resume —
+    /// requests in flight are untouched.
+    pub fn run_until(&mut self, limit_ms: f64, out: &mut DesOutcome) {
+        let users = self.users;
+        let num_edges = self.num_edges;
+        let num_places = self.num_places;
+        let ingress_base = users + num_edges + 1;
+        let compute_node = |device: usize, p: Placement| match p {
+            Placement::Local => device,
+            Placement::Edge(j) => users + j,
+            Placement::Cloud => users + num_edges,
+        };
+        let sigma = self.sigma;
+
+        while let Some(&ev) = self.heap.peek() {
+            if ev.time > limit_ms {
+                break;
+            }
+            self.heap.pop();
             debug_assert!(ev.time >= out.makespan_ms, "event time went backwards");
             out.makespan_ms = out.makespan_ms.max(ev.time);
             if self.collect_event_times {
@@ -448,7 +638,7 @@ impl DesCore {
                         // uplink serializing simultaneous transfers.
                         push_event(
                             &mut self.heap,
-                            &mut seq,
+                            &mut self.seq,
                             ev.time + self.link_queue_ms,
                             EventKind::LinkFree { link: link_id },
                         );
@@ -459,7 +649,7 @@ impl DesCore {
                         let target = compute_node(device, placement);
                         push_event(
                             &mut self.heap,
-                            &mut seq,
+                            &mut self.seq,
                             ev.time,
                             EventKind::Join { node: target, req },
                         );
@@ -475,7 +665,7 @@ impl DesCore {
                         self.flights[req].link_wait_ms = ev.time - self.flights[req].link_enq_ms;
                         push_event(
                             &mut self.heap,
-                            &mut seq,
+                            &mut self.seq,
                             ev.time + self.link_queue_ms,
                             EventKind::LinkFree { link: link_id },
                         );
@@ -486,13 +676,14 @@ impl DesCore {
                         let target = compute_node(device, placement);
                         push_event(
                             &mut self.heap,
-                            &mut seq,
+                            &mut self.seq,
                             ev.time,
                             EventKind::Join { node: target, req },
                         );
                     }
                 }
                 EventKind::Join { node, req } => {
+                    self.backlog_shift(node, ev.time, 1);
                     self.flights[req].compute_enq_ms = ev.time;
                     let q = &mut self.nodes[node];
                     if q.busy < q.servers {
@@ -505,12 +696,12 @@ impl DesCore {
                             * num_places
                             + place_slot(action.placement, num_edges)];
                         if sigma > 0.0 {
-                            svc *= (sigma * rng.normal()).exp();
+                            svc *= (sigma * self.rng.normal()).exp();
                         }
                         self.flights[req].service_ms = svc;
                         push_event(
                             &mut self.heap,
-                            &mut seq,
+                            &mut self.seq,
                             ev.time + svc,
                             EventKind::Finish { node, req },
                         );
@@ -519,6 +710,7 @@ impl DesCore {
                     }
                 }
                 EventKind::Finish { node, req } => {
+                    self.backlog_shift(node, ev.time, -1);
                     {
                         let f = &mut self.flights[req];
                         f.queue_ms = ev.time - f.compute_enq_ms - f.service_ms;
@@ -547,12 +739,12 @@ impl DesCore {
                             * num_places
                             + place_slot(action.placement, num_edges)];
                         if sigma > 0.0 {
-                            svc *= (sigma * rng.normal()).exp();
+                            svc *= (sigma * self.rng.normal()).exp();
                         }
                         self.flights[next].service_ms = svc;
                         push_event(
                             &mut self.heap,
-                            &mut seq,
+                            &mut self.seq,
                             ev.time + svc,
                             EventKind::Finish { node, req: next },
                         );
@@ -560,6 +752,43 @@ impl DesCore {
                 }
             }
         }
+    }
+
+    /// Close the run's bookkeeping: integrate every node's backlog out to
+    /// the final makespan and publish the per-node statistics into
+    /// `out.node_backlog`. Call once after the last
+    /// [`DesCore::run_until`].
+    pub fn finalize(&mut self, out: &mut DesOutcome) {
+        let t = out.makespan_ms;
+        out.node_backlog.clear();
+        out.node_backlog.reserve(self.nodes.len());
+        for i in 0..self.nodes.len() {
+            let area = self.bl_area[i] + self.bl_cur[i] as f64 * (t - self.bl_mark[i]);
+            let mean = if t > 0.0 { area / t } else { 0.0 };
+            out.node_backlog.push(BacklogStats { max: self.bl_max[i] as usize, mean });
+        }
+    }
+
+    /// Number of compute nodes in the installed layout (each end device,
+    /// then each edge, then the cloud — the order of
+    /// [`DesOutcome::node_backlog`] and the `node` argument below).
+    pub fn num_compute_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Instantaneous backlog (in service + waiting) of a compute node —
+    /// live mid-trace observability for the control plane.
+    pub fn backlog(&self, node: usize) -> usize {
+        let q = &self.nodes[node];
+        q.busy + q.waiting.len()
+    }
+
+    /// Instantaneous backlog normalized by the node's parallel servers,
+    /// clamped to [0, 1] — the utilization proxy the control plane merges
+    /// into the monitored state at each control tick.
+    pub fn utilization(&self, node: usize) -> f64 {
+        let q = &self.nodes[node];
+        ((q.busy + q.waiting.len()) as f64 / q.servers as f64).min(1.0)
     }
 }
 
@@ -664,8 +893,11 @@ pub fn sync_round_responses_into<S: StateView>(
 
     heap.clear();
     for device in 0..users {
+        // one tie class throughout the synchronous round: (time, seq)
+        // ordering exactly as before the control-plane refactor
         heap.push(Event {
             time: 0.0,
+            prio: 0,
             seq: device as u64,
             kind: EventKind::Join { node: device, req: device },
         });
@@ -685,6 +917,7 @@ pub fn sync_round_responses_into<S: StateView>(
                 seq += 1;
                 heap.push(Event {
                     time: ev.time + svc,
+                    prio: 0,
                     seq,
                     kind: EventKind::Finish { node: device, req: device },
                 });
@@ -1011,6 +1244,147 @@ mod tests {
             got[1],
             path + lq + svc
         );
+    }
+
+    #[test]
+    fn epoch_split_run_matches_monolithic_run() {
+        // Pausing the clock at control ticks (admit per epoch + bounded
+        // run_until) with an unchanged decision must reproduce the
+        // monolithic run: same physics, same noise draws, same bytes.
+        let users = 5;
+        let (model, state) = setup(users);
+        let d = Decision(
+            (0..users)
+                .map(|i| Action {
+                    placement: Tier::from_index(i % 3),
+                    model: ModelId((i % 8) as u8),
+                })
+                .collect(),
+        );
+        let horizon = 12_000.0;
+        let trace = schedule(ArrivalProcess::Poisson { rate_per_s: 3.0 }, users, horizon, 41);
+        let mono = run_open_loop(&model, &state, &d, &trace, horizon, 51);
+
+        let mut core = DesCore::new();
+        core.install(&model, &state);
+        let mut out = DesOutcome::default();
+        core.run_sliced(&d, &trace, horizon, 2_500.0, 51, &mut out);
+        assert_eq!(out.completed.len(), mono.completed.len());
+        for (a, b) in out.completed.iter().zip(&mono.completed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.response_ms.to_bits(), b.response_ms.to_bits());
+            assert_eq!(a.depart_ms.to_bits(), b.depart_ms.to_bits());
+        }
+        assert_eq!(out.makespan_ms.to_bits(), mono.makespan_ms.to_bits());
+        // backlog stats agree too: same trajectory, differently sliced
+        assert_eq!(out.node_backlog.len(), mono.node_backlog.len());
+        for (a, b) in out.node_backlog.iter().zip(&mono.node_backlog) {
+            assert_eq!(a.max, b.max);
+            assert!((a.mean - b.mean).abs() < 1e-9, "{} vs {}", a.mean, b.mean);
+        }
+    }
+
+    #[test]
+    fn epoch_split_is_tie_stable_on_sync_round_traces() {
+        // The adversarial case for pausable runs: a synchronized trace
+        // with noise off produces *exact* event-time ties (simultaneous
+        // round arrivals, constant link holds, identical services).
+        // Arrival tie-breaks are keyed on request id — a property of the
+        // trace, not of admission batching — so a misaligned control
+        // period must still reproduce the monolithic run bitwise.
+        let users = 4;
+        let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
+        let state = TopoState::idle(&model.net.topo);
+        let d = Decision(
+            (0..users)
+                .map(|i| Action {
+                    // everyone offloads: round arrivals collide at the
+                    // shared ingress link and the edge/cloud queues
+                    placement: if i % 2 == 0 { Tier::Edge(0) } else { Tier::Cloud },
+                    model: ModelId((i % 3) as u8),
+                })
+                .collect(),
+        );
+        let horizon = 9_000.0;
+        let trace =
+            schedule(ArrivalProcess::SyncRounds { period_ms: 750.0 }, users, horizon, 1);
+        let mono = run_open_loop(&model, &state, &d, &trace, horizon, 5);
+
+        let mut core = DesCore::new();
+        core.install(&model, &state);
+        let mut out = DesOutcome::default();
+        // period misaligned with the 750 ms rounds: ticks land mid-round
+        // and on round boundaries alike
+        core.run_sliced(&d, &trace, horizon, 1_000.0, 5, &mut out);
+        assert_eq!(out.completed.len(), mono.completed.len());
+        for (a, b) in out.completed.iter().zip(&mono.completed) {
+            assert_eq!(a.id, b.id, "departure order must match under exact ties");
+            assert_eq!(a.response_ms.to_bits(), b.response_ms.to_bits());
+            assert_eq!(a.queue_ms.to_bits(), b.queue_ms.to_bits());
+            assert_eq!(a.link_wait_ms.to_bits(), b.link_wait_ms.to_bits());
+        }
+        assert_eq!(out.makespan_ms.to_bits(), mono.makespan_ms.to_bits());
+    }
+
+    #[test]
+    fn retable_swaps_service_law_without_disturbing_flights() {
+        // A request in service keeps the service time it drew; a request
+        // admitted after a retable executes under the new table.
+        let users = 1;
+        let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
+        let idle = TopoState::idle(&model.net.topo);
+        let mut busy = idle.clone();
+        busy.devices[0].cpu = 0.9; // busy-CPU factor on local compute
+        let svc_idle = model.single_stream_service_ms(0, ModelId(0), Tier::Local, &idle);
+        let svc_busy = model.single_stream_service_ms(0, ModelId(0), Tier::Local, &busy);
+        assert!(svc_busy > svc_idle * 1.5);
+        let path = model.net.path_overhead_ms(0, Tier::Local);
+        let d = uniform(users, Tier::Local, 0);
+
+        let mut core = DesCore::new();
+        core.install(&model, &idle);
+        let mut out = DesOutcome::default();
+        core.begin(7, &mut out);
+        core.admit(&d, &[Request { id: 0, device: 0, arrival_ms: 0.0 }]);
+        // pause mid-service: request 0 started under the idle table
+        core.run_until(path + 1.0, &mut out);
+        assert_eq!(core.backlog(0), 1, "request 0 must be in service at the pause");
+        core.retable(&model, &busy);
+        core.admit(&d, &[Request { id: 1, device: 0, arrival_ms: 2_000.0 }]);
+        core.run_until(f64::INFINITY, &mut out);
+        core.finalize(&mut out);
+
+        assert_eq!(out.completed.len(), 2);
+        let r0 = out.completed.iter().find(|c| c.id == 0).unwrap();
+        let r1 = out.completed.iter().find(|c| c.id == 1).unwrap();
+        assert!((r0.service_ms - svc_idle).abs() < 1e-9, "in-flight kept idle law");
+        assert!((r1.service_ms - svc_busy).abs() < 1e-9, "post-retable uses busy law");
+    }
+
+    #[test]
+    fn backlog_stats_surface_congestion() {
+        // The saturating single-device trace piles a queue: stats must see
+        // it, and an idle run must not.
+        let users = 1;
+        let (model, state) = setup(users);
+        let trace: Vec<Request> = (0..10)
+            .map(|i| Request { id: i, device: 0, arrival_ms: i as f64 * 100.0 })
+            .collect();
+        let d = uniform(users, Tier::Local, 0);
+        let out = run_open_loop(&model, &state, &d, &trace, 1000.0, 3);
+        // node 0 is the lone device; edge/cloud nodes stay empty
+        assert_eq!(out.node_backlog.len(), 1 + 1 + 1);
+        assert!(out.node_backlog[0].max >= 5, "{:?}", out.node_backlog);
+        assert!(out.node_backlog[0].mean > 1.0, "{:?}", out.node_backlog);
+        assert_eq!(out.node_backlog[1].max, 0);
+        assert_eq!(out.node_backlog[2].max, 0);
+        assert_eq!(out.peak_backlog(), out.node_backlog[0].max);
+        assert!(out.busiest_mean_backlog() > 1.0);
+
+        let light = vec![Request { id: 0, device: 0, arrival_ms: 0.0 }];
+        let out2 = run_open_loop(&model, &state, &d, &light, 1000.0, 3);
+        assert_eq!(out2.peak_backlog(), 1);
+        assert!(out2.busiest_mean_backlog() < 1.0);
     }
 
     #[test]

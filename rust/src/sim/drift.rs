@@ -1,0 +1,372 @@
+//! Piecewise-constant drift schedules over virtual time: the scenario
+//! generator for *online* orchestration.
+//!
+//! The paper's headline claim is that the orchestrator keeps adapting as
+//! system state drifts, yet a frozen-snapshot evaluation never exercises
+//! that. A [`DriftSchedule`] scripts the drift: a sorted list of
+//! [`DriftSegment`]s, each changing (from its `start_ms` on) the arrival
+//! **rate multiplier** and/or overriding the **link conditions** of the
+//! device and edge uplinks. Arrival generation
+//! ([`crate::sim::arrivals::schedule_with_drift`]) respects the rate
+//! multiplier by re-drawing across segment boundaries (exact for
+//! exponential inter-arrivals by memorylessness), and the control plane
+//! ([`crate::orchestrator::Orchestrator::evaluate_online`]) applies the
+//! cond overrides to the monitored state at every control tick — which is
+//! also what the response model's path overheads read, so drift is both
+//! *observable* and *physical*.
+//!
+//! The identity schedule ([`DriftSchedule::none`]) is bit-transparent:
+//! traces and DES outcomes are bitwise identical to the undrifted paths
+//! (the property suite pins this).
+
+use crate::monitor::TopoState;
+use crate::types::NetCond;
+
+/// One piecewise-constant regime, in force from `start_ms` until the next
+/// segment begins (or forever).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftSegment {
+    /// Virtual time this regime begins, ms.
+    pub start_ms: f64,
+    /// Multiplier on every device's mean arrival rate (1.0 = nominal).
+    /// Applies to Poisson/MMPP rates and shrinks the sync-round period.
+    pub rate_mult: f64,
+    /// Override for every device uplink's condition (None = leave the
+    /// background state's conds untouched).
+    pub device_cond: Option<NetCond>,
+    /// Override for every edge->cloud uplink's condition.
+    pub edge_cond: Option<NetCond>,
+}
+
+impl DriftSegment {
+    /// The nominal regime starting at `start_ms`: rate x1, no overrides.
+    pub fn nominal(start_ms: f64) -> DriftSegment {
+        DriftSegment { start_ms, rate_mult: 1.0, device_cond: None, edge_cond: None }
+    }
+
+    /// Apply this segment's cond overrides to a background snapshot.
+    pub fn apply_conds(&self, state: &mut TopoState) {
+        if let Some(c) = self.device_cond {
+            for d in &mut state.devices {
+                d.cond = c;
+            }
+        }
+        if let Some(c) = self.edge_cond {
+            for e in &mut state.edges {
+                e.cond = c;
+            }
+        }
+    }
+
+    fn is_nominal(&self) -> bool {
+        self.rate_mult == 1.0 && self.device_cond.is_none() && self.edge_cond.is_none()
+    }
+}
+
+/// Sorted, non-empty list of [`DriftSegment`]s; the first always starts at
+/// t = 0 (constructors insert a nominal head segment when the spec's first
+/// change begins later).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftSchedule {
+    segments: Vec<DriftSegment>,
+}
+
+impl Default for DriftSchedule {
+    fn default() -> Self {
+        DriftSchedule::none()
+    }
+}
+
+impl DriftSchedule {
+    /// The identity schedule: one nominal segment from t = 0. Every
+    /// drift-aware path is bit-identical to its undrifted counterpart
+    /// under this schedule.
+    pub fn none() -> DriftSchedule {
+        DriftSchedule { segments: vec![DriftSegment::nominal(0.0)] }
+    }
+
+    /// Build from explicit segments (sorted by `start_ms`, strictly
+    /// increasing, all knobs finite, rate multipliers positive). A nominal
+    /// head segment is inserted when the first change starts after t = 0.
+    pub fn new(mut segments: Vec<DriftSegment>) -> Result<DriftSchedule, String> {
+        if segments.is_empty() {
+            return Ok(DriftSchedule::none());
+        }
+        for s in &segments {
+            if !(s.start_ms.is_finite() && s.start_ms >= 0.0) {
+                return Err(format!("drift segment start {} must be finite and >= 0", s.start_ms));
+            }
+            if !(s.rate_mult.is_finite() && s.rate_mult > 0.0) {
+                return Err(format!("drift rate multiplier {} must be finite and > 0", s.rate_mult));
+            }
+        }
+        for w in segments.windows(2) {
+            if w[1].start_ms <= w[0].start_ms {
+                return Err(format!(
+                    "drift segments must start at strictly increasing times ({} then {})",
+                    w[0].start_ms, w[1].start_ms
+                ));
+            }
+        }
+        if segments[0].start_ms > 0.0 {
+            segments.insert(0, DriftSegment::nominal(0.0));
+        }
+        Ok(DriftSchedule { segments })
+    }
+
+    /// Parse a compact spec: segments separated by `;`, each
+    /// `START_MS[:key=value[,key=value...]]` with keys
+    ///
+    /// - `rate` — arrival-rate multiplier (`rate=3` = 3x nominal),
+    /// - `net`  — both device and edge uplink conds (`regular`/`weak`/`r`/`w`),
+    /// - `dev`  — device uplink conds only,
+    /// - `edge` — edge->cloud uplink conds only.
+    ///
+    /// The spec is a timeline of *changes*: keys omitted in a segment
+    /// carry forward from the previous one (so
+    /// `"20000:net=weak;40000:rate=2"` keeps the network weak through the
+    /// rate burst). Revert explicitly with `rate=1` / `net=regular`.
+    ///
+    /// Example: `"20000:rate=3,net=weak;40000:rate=1,net=regular"` — a
+    /// rate burst plus network degradation at t = 20 s, recovering at
+    /// t = 40 s. An empty spec parses to [`DriftSchedule::none`].
+    pub fn parse(spec: &str) -> Result<DriftSchedule, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(DriftSchedule::none());
+        }
+        let mut segments: Vec<DriftSegment> = Vec::new();
+        let mut prev = DriftSegment::nominal(0.0);
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (start_s, opts) = match part.split_once(':') {
+                Some((a, b)) => (a, b),
+                None => (part, ""),
+            };
+            let start_ms: f64 = start_s
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad drift segment start '{start_s}' (want ms)"))?;
+            // carry the previous segment's regime forward; this segment's
+            // keys override it
+            let mut seg = DriftSegment { start_ms, ..prev };
+            for opt in opts.split(',') {
+                let opt = opt.trim();
+                if opt.is_empty() {
+                    continue;
+                }
+                let (k, v) = opt
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad drift option '{opt}' (want key=value)"))?;
+                let (k, v) = (k.trim(), v.trim());
+                match k {
+                    "rate" => {
+                        seg.rate_mult = v
+                            .parse()
+                            .map_err(|_| format!("bad drift rate multiplier '{v}'"))?;
+                    }
+                    "net" => {
+                        let c = parse_cond(v)?;
+                        seg.device_cond = Some(c);
+                        seg.edge_cond = Some(c);
+                    }
+                    "dev" => seg.device_cond = Some(parse_cond(v)?),
+                    "edge" => seg.edge_cond = Some(parse_cond(v)?),
+                    other => {
+                        return Err(format!(
+                            "unknown drift key '{other}' (want rate|net|dev|edge)"
+                        ))
+                    }
+                }
+            }
+            prev = seg;
+            segments.push(seg);
+        }
+        DriftSchedule::new(segments)
+    }
+
+    /// All segments in order (first always starts at 0).
+    pub fn segments(&self) -> &[DriftSegment] {
+        &self.segments
+    }
+
+    /// True when no segment changes anything: every drift-aware path is
+    /// then bit-identical to its undrifted counterpart.
+    pub fn is_identity(&self) -> bool {
+        self.segments.iter().all(|s| s.is_nominal())
+    }
+
+    /// The segment in force at virtual time `t_ms` (the last one starting
+    /// at or before it).
+    pub fn at(&self, t_ms: f64) -> &DriftSegment {
+        let mut cur = &self.segments[0];
+        for s in &self.segments {
+            if s.start_ms <= t_ms {
+                cur = s;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    /// Arrival-rate multiplier in force at `t_ms`.
+    pub fn rate_mult_at(&self, t_ms: f64) -> f64 {
+        self.at(t_ms).rate_mult
+    }
+
+    /// Start of the next segment strictly after `t_ms` (infinity when
+    /// none): where the control plane re-syncs the DES tables to the
+    /// world's conditions.
+    pub fn next_boundary_after(&self, t_ms: f64) -> f64 {
+        for s in &self.segments {
+            if s.start_ms > t_ms {
+                return s.start_ms;
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Start of the next segment strictly after `t_ms` whose *rate
+    /// multiplier* differs from the one in force at `t_ms` (infinity when
+    /// the rate never changes again): the redraw boundary for drifted
+    /// arrival streams. Cond-only segments are transparent here, so a
+    /// schedule that only degrades link conditions leaves the arrival
+    /// trace bit-identical to the undrifted one.
+    pub fn next_rate_boundary_after(&self, t_ms: f64) -> f64 {
+        let cur = self.rate_mult_at(t_ms);
+        for s in &self.segments {
+            if s.start_ms > t_ms && s.rate_mult != cur {
+                return s.start_ms;
+            }
+        }
+        f64::INFINITY
+    }
+
+    /// Virtual time of the first segment that changes anything (the drift
+    /// onset the pre/post latency split reports against); None for the
+    /// identity schedule.
+    pub fn first_change_ms(&self) -> Option<f64> {
+        self.segments.iter().find(|s| !s.is_nominal()).map(|s| s.start_ms)
+    }
+}
+
+fn parse_cond(v: &str) -> Result<NetCond, String> {
+    match v.to_ascii_lowercase().as_str() {
+        "regular" | "r" => Ok(NetCond::Regular),
+        "weak" | "w" => Ok(NetCond::Weak),
+        other => Err(format!("bad link condition '{other}' (want regular|weak)")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_schedule_is_transparent() {
+        let d = DriftSchedule::none();
+        assert!(d.is_identity());
+        assert_eq!(d.rate_mult_at(0.0), 1.0);
+        assert_eq!(d.rate_mult_at(1e9), 1.0);
+        assert_eq!(d.next_boundary_after(0.0), f64::INFINITY);
+        assert_eq!(d.first_change_ms(), None);
+        assert_eq!(DriftSchedule::parse("").unwrap(), d);
+    }
+
+    #[test]
+    fn parse_spec_roundtrips_segments() {
+        let d = DriftSchedule::parse("20000:rate=3,net=weak;40000:rate=1,net=regular").unwrap();
+        assert!(!d.is_identity());
+        assert_eq!(d.segments().len(), 3, "nominal head + two changes");
+        assert_eq!(d.rate_mult_at(0.0), 1.0);
+        assert_eq!(d.rate_mult_at(20_000.0), 3.0);
+        assert_eq!(d.at(25_000.0).device_cond, Some(NetCond::Weak));
+        assert_eq!(d.at(45_000.0).device_cond, Some(NetCond::Regular));
+        assert_eq!(d.rate_mult_at(45_000.0), 1.0);
+        assert_eq!(d.next_boundary_after(0.0), 20_000.0);
+        assert_eq!(d.next_boundary_after(20_000.0), 40_000.0);
+        assert_eq!(d.next_boundary_after(40_000.0), f64::INFINITY);
+        assert_eq!(d.next_rate_boundary_after(0.0), 20_000.0);
+        assert_eq!(d.next_rate_boundary_after(20_000.0), 40_000.0);
+        assert_eq!(d.first_change_ms(), Some(20_000.0));
+    }
+
+    #[test]
+    fn cond_only_segments_are_rate_transparent() {
+        // A schedule that only degrades the network must not move any
+        // arrival-stream redraw boundary (the trace stays bit-identical
+        // to the undrifted one), while the table-sync boundary still sees
+        // the segment.
+        let d = DriftSchedule::parse("5000:net=weak").unwrap();
+        assert_eq!(d.next_rate_boundary_after(0.0), f64::INFINITY);
+        assert_eq!(d.next_boundary_after(0.0), 5_000.0);
+        // consecutive equal-rate segments are transparent too
+        let d2 = DriftSchedule::parse("1000:rate=2;2000:rate=2,net=weak;3000:rate=1").unwrap();
+        assert_eq!(d2.next_rate_boundary_after(0.0), 1_000.0);
+        assert_eq!(d2.next_rate_boundary_after(1_500.0), 3_000.0);
+    }
+
+    #[test]
+    fn parse_dev_and_edge_keys_separate() {
+        let d = DriftSchedule::parse("1000:dev=w;2000:edge=weak").unwrap();
+        let s1 = d.at(1500.0);
+        assert_eq!(s1.device_cond, Some(NetCond::Weak));
+        assert_eq!(s1.edge_cond, None);
+        let s2 = d.at(2500.0);
+        assert_eq!(s2.edge_cond, Some(NetCond::Weak));
+        // omitted keys carry forward: the device degradation persists
+        assert_eq!(s2.device_cond, Some(NetCond::Weak));
+    }
+
+    #[test]
+    fn omitted_keys_carry_forward_until_reverted() {
+        // the spec is a timeline of changes, not absolute restatements
+        let d = DriftSchedule::parse("2000:net=weak;4000:rate=3;6000:net=regular").unwrap();
+        let burst = d.at(5000.0);
+        assert_eq!(burst.rate_mult, 3.0);
+        assert_eq!(burst.device_cond, Some(NetCond::Weak), "net=weak persists into the burst");
+        let recovered = d.at(7000.0);
+        assert_eq!(recovered.device_cond, Some(NetCond::Regular));
+        assert_eq!(recovered.rate_mult, 3.0, "rate stays boosted until reverted");
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(DriftSchedule::parse("abc").is_err());
+        assert!(DriftSchedule::parse("1000:rate=0").is_err());
+        assert!(DriftSchedule::parse("1000:rate=-2").is_err());
+        assert!(DriftSchedule::parse("1000:net=fast").is_err());
+        assert!(DriftSchedule::parse("1000:wat=1").is_err());
+        assert!(DriftSchedule::parse("2000:rate=2;1000:rate=3").is_err());
+        assert!(DriftSchedule::parse("1000:rate").is_err());
+    }
+
+    #[test]
+    fn apply_conds_overrides_only_requested_links() {
+        let topo = crate::types::Topology::uniform(
+            &[NetCond::Regular; 3],
+            NetCond::Regular,
+            2,
+            [1, 2, 4],
+        );
+        let base = TopoState::idle(&topo);
+        let mut s = base.clone();
+        DriftSegment {
+            start_ms: 0.0,
+            rate_mult: 1.0,
+            device_cond: Some(NetCond::Weak),
+            edge_cond: None,
+        }
+        .apply_conds(&mut s);
+        assert!(s.devices.iter().all(|d| d.cond == NetCond::Weak));
+        assert!(s.edges.iter().all(|e| e.cond == NetCond::Regular));
+        // nominal segment leaves the state untouched
+        let mut t = base.clone();
+        DriftSegment::nominal(0.0).apply_conds(&mut t);
+        assert_eq!(t, base);
+    }
+}

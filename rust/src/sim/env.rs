@@ -21,7 +21,7 @@ use crate::models;
 use crate::monitor::{self, EncodedState, TopoState};
 use crate::network::Network;
 use crate::sim::latency::ResponseModel;
-use crate::types::{AccuracyConstraint, Decision, Topology};
+use crate::types::{AccuracyConstraint, Decision, NetCond, Topology};
 use crate::util::rng::Rng;
 
 /// Background-load dynamics parameters (Markov flips / random walk).
@@ -33,11 +33,19 @@ pub struct Dynamics {
     pub p_mem_flip: f64,
     /// Per-round probability an edge/cloud background level random-walks.
     pub p_ec_walk: f64,
+    /// Per-round probability a device/edge uplink condition flips between
+    /// Regular and Weak. Default 0 (the paper's scenarios hold conds
+    /// fixed); the drift experiment trains with this on so the learned
+    /// policy covers both regimes — what lets it re-decide sensibly when
+    /// a [`crate::sim::drift::DriftSchedule`] degrades the network
+    /// mid-trace. At exactly 0 no RNG draws are made, so every
+    /// pre-existing seeded run is bit-identical.
+    pub p_cond_flip: f64,
 }
 
 impl Default for Dynamics {
     fn default() -> Self {
-        Dynamics { p_dev_cpu_flip: 0.05, p_mem_flip: 0.02, p_ec_walk: 0.10 }
+        Dynamics { p_dev_cpu_flip: 0.05, p_mem_flip: 0.02, p_ec_walk: 0.10, p_cond_flip: 0.0 }
     }
 }
 
@@ -204,22 +212,47 @@ impl Env {
                 node.mem = if monitor::binary_level(node.mem) == 1 { 0.1 } else { 0.9 };
             }
         }
+        // Link-condition drift (Regular <-> Weak). Strictly gated: at the
+        // default p = 0 this consumes no RNG draws, keeping every seeded
+        // pre-drift run bit-identical.
+        if d.p_cond_flip > 0.0 {
+            let flip = |c: NetCond| match c {
+                NetCond::Regular => NetCond::Weak,
+                NetCond::Weak => NetCond::Regular,
+            };
+            for dev in &mut self.state.devices {
+                if self.rng.bool(d.p_cond_flip) {
+                    dev.cond = flip(dev.cond);
+                }
+            }
+            for edge in &mut self.state.edges {
+                if self.rng.bool(d.p_cond_flip) {
+                    edge.cond = flip(edge.cond);
+                }
+            }
+        }
     }
 
     /// Freeze dynamics (deterministic evaluation of learned policies).
     pub fn freeze(&mut self) {
-        self.dynamics = Dynamics { p_dev_cpu_flip: 0.0, p_mem_flip: 0.0, p_ec_walk: 0.0 };
+        self.dynamics =
+            Dynamics { p_dev_cpu_flip: 0.0, p_mem_flip: 0.0, p_ec_walk: 0.0, p_cond_flip: 0.0 };
     }
 
-    /// Reset background load to idle (start of an evaluation episode).
+    /// Reset background load to idle and link conditions to the topology
+    /// table (start of an evaluation episode). Restoring conds is a no-op
+    /// unless cond-flip dynamics ran (`Dynamics::p_cond_flip > 0`).
     pub fn reset_load(&mut self) {
-        for dev in &mut self.state.devices {
+        let topo = &self.model.net.topo;
+        for (i, dev) in self.state.devices.iter_mut().enumerate() {
             dev.cpu = 0.0;
             dev.mem = 0.0;
+            dev.cond = topo.devices[i].cond;
         }
-        for edge in &mut self.state.edges {
+        for (k, edge) in self.state.edges.iter_mut().enumerate() {
             edge.cpu = 0.0;
             edge.mem = 0.0;
+            edge.cond = topo.edges[k].cond;
         }
         self.state.cloud.cpu = 0.0;
         self.state.cloud.mem = 0.0;
@@ -322,6 +355,44 @@ mod tests {
         }
         e.reset_load();
         assert_eq!(e.encoded().key, k0);
+    }
+
+    #[test]
+    fn cond_flip_dynamics_drift_and_reset_restores() {
+        let mut e = env(AccuracyConstraint::Min);
+        e.dynamics = Dynamics {
+            p_dev_cpu_flip: 0.0,
+            p_mem_flip: 0.0,
+            p_ec_walk: 0.0,
+            p_cond_flip: 0.5,
+        };
+        let d0 = decision(3, 0);
+        let mut flipped = false;
+        for _ in 0..50 {
+            e.step(&d0);
+            if e.state.devices.iter().any(|d| d.cond == NetCond::Weak)
+                || e.state.edges.iter().any(|x| x.cond == NetCond::Weak)
+            {
+                flipped = true;
+                break;
+            }
+        }
+        assert!(flipped, "cond-flip dynamics never moved a link condition");
+        // a weak monitored uplink must slow that device's offloaded path
+        e.reset_load();
+        let base = e.expected_avg_ms(&Decision::uniform(
+            3,
+            Action { placement: Tier::Cloud, model: ModelId(0) },
+        ));
+        e.state.devices[0].cond = NetCond::Weak;
+        let degraded = e.expected_avg_ms(&Decision::uniform(
+            3,
+            Action { placement: Tier::Cloud, model: ModelId(0) },
+        ));
+        assert!(degraded > base, "weak cond must be physical: {base} -> {degraded}");
+        // reset_load restores the topology's conds
+        e.reset_load();
+        assert!(e.state.devices.iter().all(|d| d.cond == NetCond::Regular));
     }
 
     #[test]

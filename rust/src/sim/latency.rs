@@ -140,8 +140,22 @@ impl ResponseModel {
             None => 0.0,
             Some(j) => self.net.queueing_ms(p, ctx.ingress_counts[j]),
         };
-        let subtotal = compute + self.net.path_overhead_ms(device, p) + queueing;
+        let subtotal = compute + self.path_overhead_ms(device, p, sys) + queueing;
         subtotal * (1.0 + cal.monitor_overhead_frac)
+    }
+
+    /// Path overhead under the *monitored* link conditions: the state's
+    /// per-node conds (which background dynamics or a drift schedule may
+    /// have moved off the topology table) drive the Table 12 message
+    /// costs. When the state mirrors the table — every pre-drift path —
+    /// this is bitwise [`Network::path_overhead_ms`], which the topology
+    /// regression suite pins.
+    pub fn path_overhead_ms<S: StateView>(&self, device: DeviceId, p: Placement, sys: &S) -> f64 {
+        self.net.path_overhead_ms_with(
+            p,
+            sys.device_node(device).cond,
+            sys.edge_node(self.net.topo.home_edge(device)).cond,
+        )
     }
 
     /// Apply the executing node's background-load multipliers to a raw
@@ -389,6 +403,41 @@ mod tests {
             .sum::<f64>()
             / 2000.0;
         assert!((mean / expected - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn monitored_conds_drive_path_overheads() {
+        // The response model charges the *state's* link conditions, so a
+        // mid-trace degradation (drift) is physical: flipping the
+        // monitored conds to Weak on an all-Regular topology slows every
+        // offloaded path by the Table 12 packet deltas while local
+        // execution stays (nearly) network-independent.
+        let rm = model("exp-a", 2); // all-Regular topology
+        let mut s = sys(2);
+        let cloud = uniform(2, Tier::Cloud, 0);
+        let local = uniform(2, Tier::Local, 0);
+        let base_cloud = rm.expected_responses(&cloud, &s);
+        let base_local = rm.expected_responses(&local, &s);
+        for dev in &mut s.devices {
+            dev.cond = NetCond::Weak;
+        }
+        s.edge.cond = NetCond::Weak;
+        let weak_cloud = rm.expected_responses(&cloud, &s);
+        let weak_local = rm.expected_responses(&local, &s);
+        for (b, w) in base_cloud.iter().zip(&weak_cloud) {
+            assert!(w - b > 200.0, "weak monitored conds must slow cloud paths: {b} -> {w}");
+        }
+        for (b, w) in base_local.iter().zip(&weak_local) {
+            assert!(w - b < 5.0, "local must stay network-independent: {b} -> {w}");
+        }
+        // with state conds mirroring the table, the state-driven path is
+        // bitwise the table-driven one
+        let idle = sys(2);
+        for p in Tier::ALL {
+            let a = rm.path_overhead_ms(0, p, &idle);
+            let b = rm.net.path_overhead_ms(0, p);
+            assert_eq!(a.to_bits(), b.to_bits(), "{p:?}");
+        }
     }
 
     #[test]

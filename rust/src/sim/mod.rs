@@ -1,17 +1,20 @@
 //! Simulation substrate: the calibrated response-time model, the
 //! discrete-event simulation core (virtual-time event queue + per-node
-//! vCPU queues), pluggable arrival processes, the synchronous-round RL
-//! environment (a thin adapter over the DES core), and workload
-//! generators for the measured-mode serving path.
+//! vCPU queues, pausable at control ticks), pluggable arrival processes,
+//! piecewise drift schedules (rate bursts + link-cond changes mid-trace),
+//! the synchronous-round RL environment (a thin adapter over the DES
+//! core), and workload generators for the measured-mode serving path.
 
 pub mod arrivals;
 pub mod des;
+pub mod drift;
 pub mod env;
 pub mod latency;
 pub mod workload;
 
 pub use arrivals::ArrivalProcess;
-pub use des::{CompletedRequest, DesCore, DesOutcome, SyncScratch};
+pub use des::{BacklogStats, CompletedRequest, DesCore, DesOutcome, SyncScratch};
+pub use drift::{DriftSchedule, DriftSegment};
 pub use env::{Dynamics, Env, StepOutcome};
 pub use latency::{ResponseModel, RoundCtx};
 pub use workload::{Arrival, Request, WorkloadGen};

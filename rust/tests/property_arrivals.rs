@@ -1,0 +1,141 @@
+//! Property tests over the arrival processes (in-crate harness): the
+//! empirical inter-arrival statistics must pin the configured rates —
+//! Poisson streams hit their per-device rate, MMPP streams land between
+//! their calm and burst rates and at their analytic mean for equal phase
+//! holding times — and drifted schedules are deterministic pure functions
+//! of (process, users, horizon, seed, schedule).
+
+use eeco::sim::arrivals::{schedule, schedule_with_drift, ArrivalProcess};
+use eeco::sim::DriftSchedule;
+use eeco::util::prop::forall;
+
+#[test]
+fn prop_poisson_interarrival_mean_matches_rate() {
+    forall(
+        25,
+        0xA11,
+        |rng| {
+            let rate = rng.range_f64(1.0, 8.0);
+            (rate, rng.next_u64())
+        },
+        |(rate, seed)| {
+            // One device, long horizon: the empirical mean inter-arrival
+            // must sit within 10% of 1000/rate ms. With >= 2000 gaps the
+            // estimator's relative sigma is <= 1/sqrt(2000) ~ 2.2%, so
+            // the 10% bound is > 4 sigma — deterministic seeds make each
+            // case a fixed draw, and none sits that far out.
+            let horizon = 2_000_000.0;
+            let reqs = schedule(ArrivalProcess::Poisson { rate_per_s: *rate }, 1, horizon, *seed);
+            if reqs.len() < 500 {
+                return Err(format!("degenerate trace: {} arrivals", reqs.len()));
+            }
+            let mut gaps = 0.0;
+            for w in reqs.windows(2) {
+                gaps += w[1].arrival_ms - w[0].arrival_ms;
+            }
+            let mean_gap = gaps / (reqs.len() - 1) as f64;
+            let want = 1000.0 / rate;
+            let rel = (mean_gap / want - 1.0).abs();
+            if rel > 0.10 {
+                return Err(format!(
+                    "rate {rate}: mean gap {mean_gap:.2} ms vs expected {want:.2} ms ({rel:.3} off)"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mmpp_empirical_rate_within_phase_envelope() {
+    forall(
+        15,
+        0xB22,
+        |rng| {
+            let calm = rng.range_f64(0.5, 2.0);
+            let burst = calm * rng.range_f64(3.0, 8.0);
+            let phase = rng.range_f64(500.0, 3000.0);
+            (calm, burst, phase, rng.next_u64())
+        },
+        |(calm, burst, phase, seed)| {
+            let p = ArrivalProcess::Mmpp {
+                calm_rate_per_s: *calm,
+                burst_rate_per_s: *burst,
+                mean_phase_ms: *phase,
+            };
+            // >= 400 phase alternations: the dominant (between-phase)
+            // variance gives the rate estimator a relative sigma under
+            // ~4%, so the 15% bound is comfortably past 3 sigma.
+            let horizon = 1_200_000.0;
+            let reqs = schedule(p, 1, horizon, *seed);
+            let rate = reqs.len() as f64 / (horizon / 1000.0);
+            // strictly inside the phase envelope...
+            if !(rate > *calm && rate < *burst) {
+                return Err(format!("rate {rate:.3} outside ({calm}, {burst})"));
+            }
+            // ...and near the analytic mean (equal phase holding times):
+            // (calm + burst) / 2
+            let want = p.mean_rate_per_s();
+            let rel = (rate / want - 1.0).abs();
+            if rel > 0.15 {
+                return Err(format!("rate {rate:.3} vs mean {want:.3} ({rel:.3} off)"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_drifted_schedules_deterministic_and_identity_transparent() {
+    forall(
+        20,
+        0xC33,
+        |rng| {
+            let rate = rng.range_f64(1.0, 4.0);
+            let onset = rng.range_f64(30_000.0, 50_000.0);
+            let mult = rng.range_f64(2.0, 6.0);
+            (rate, onset, mult, rng.next_u64())
+        },
+        |(rate, onset, mult, seed)| {
+            let p = ArrivalProcess::Poisson { rate_per_s: *rate };
+            let spec = format!("{onset}:rate={mult},net=weak");
+            let drift = DriftSchedule::parse(&spec)?;
+            let horizon = 120_000.0;
+            let a = schedule_with_drift(p, 3, horizon, *seed, &drift);
+            let b = schedule_with_drift(p, 3, horizon, *seed, &drift);
+            if a.len() != b.len() {
+                return Err("same seed produced different lengths".into());
+            }
+            for (x, y) in a.iter().zip(&b) {
+                if x.arrival_ms.to_bits() != y.arrival_ms.to_bits()
+                    || x.device != y.device
+                    || x.id != y.id
+                {
+                    return Err("same seed diverged".into());
+                }
+            }
+            // identity schedule == plain schedule, bitwise
+            let plain = schedule(p, 3, horizon, *seed);
+            let ident = schedule_with_drift(p, 3, horizon, *seed, &DriftSchedule::none());
+            if plain.len() != ident.len() {
+                return Err("identity drift changed the trace length".into());
+            }
+            for (x, y) in plain.iter().zip(&ident) {
+                if x.arrival_ms.to_bits() != y.arrival_ms.to_bits() {
+                    return Err("identity drift perturbed arrival times".into());
+                }
+            }
+            // the burst window really densifies relative to offered rate
+            let pre = a.iter().filter(|r| r.arrival_ms < *onset).count() as f64;
+            let post = a.iter().filter(|r| r.arrival_ms >= *onset).count() as f64;
+            let pre_rate = pre / (onset / 1000.0);
+            let post_rate = post / ((horizon - onset) / 1000.0);
+            if post_rate < pre_rate * 1.3 {
+                return Err(format!(
+                    "burst window not denser: {pre_rate:.2}/s then {post_rate:.2}/s (mult {mult})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
