@@ -18,7 +18,7 @@ fn main() {
     let router = Router::new(decision.clone());
     b.run("router_route_single", || router.route(7, 3));
     let reqs: Vec<eeco::sim::Request> = (0..users)
-        .map(|d| eeco::sim::Request { id: d as u64, device: d, arrival_ms: 0.0 })
+        .map(|d| eeco::sim::Request::at(d as u64, d, 0.0))
         .collect();
     b.run("router_route_round_n5", || router.route_round(&reqs));
 

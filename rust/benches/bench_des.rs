@@ -100,6 +100,28 @@ fn main() {
         out.completed.len()
     });
 
+    // Admission-path overhead probe: a 50-user trace well past saturation
+    // through the deadline-shed ingress (per-arrival predicted-completion
+    // check + shed accounting) at a 5 s control period. Compare against
+    // the unpoliced series above to keep the admission tax visible.
+    let mut overload_trace =
+        schedule(ArrivalProcess::Poisson { rate_per_s: 8.0 }, big_users, 60_000.0, 7);
+    eeco::sim::admission::stamp_deadlines(&mut overload_trace, &big_core, 0.0, 3.0);
+    println!("  (overload trace: {} requests)", overload_trace.len());
+    let mut shed_policy = eeco::sim::DeadlineShed;
+    b.run("open_loop_50u_overload_shed", || {
+        big_core.run_admitted(
+            &big_decision,
+            &overload_trace,
+            60_000.0,
+            5_000.0,
+            &mut shed_policy,
+            8,
+            &mut out,
+        );
+        out.completed.len() + out.shed
+    });
+
     // The per-training-round adapter, on its allocation-free scratch path.
     let mut scratch = des::SyncScratch::new();
     let mut responses = Vec::new();

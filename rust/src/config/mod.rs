@@ -105,6 +105,96 @@ impl ControlConfig {
     }
 }
 
+/// `[admission]` section: the ingress admission policy of the deadline-
+/// aware request lifecycle (`sim::admission`), plus the `--admission` /
+/// `--slo` CLI overrides. Strictly validated like `[control]`/`[drift]`:
+/// unknown keys and out-of-range knobs are rejected at load time.
+///
+/// Deadlines are stamped per request only when the section (or a CLI
+/// override) is present: a fixed `deadline_ms` SLO when set, otherwise
+/// `slo_multiplier` times the device's oracle latency (the fastest
+/// unloaded full-accuracy response any placement could serve it). With
+/// the section absent — or `policy = "admit_all"` — every evaluation is
+/// byte-identical to the pre-admission engine (property-pinned).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionConfig {
+    /// "admit_all" | "deadline_shed" | "defer" | "degrade".
+    pub policy: String,
+    /// Fixed per-request SLO in ms; 0 (default) = derive deadlines from
+    /// `slo_multiplier` instead.
+    pub deadline_ms: f64,
+    /// Deadline = this multiple of the oracle latency; must be > 1.0
+    /// (an SLO at or below the unloaded optimum admits nothing).
+    pub slo_multiplier: f64,
+    /// Max re-queues per request for the "defer" policy.
+    pub defer_budget: usize,
+    /// True when the user configured the section ([admission] /
+    /// --admission) — what switches the policed ingress (and deadline
+    /// stamping) on.
+    pub explicit: bool,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            policy: "admit_all".into(),
+            deadline_ms: 0.0,
+            slo_multiplier: 3.0,
+            defer_budget: 3,
+            explicit: false,
+        }
+    }
+}
+
+/// The admission policies `[admission] policy` / `--admission` accept.
+pub const ADMISSION_POLICIES: [&str; 4] = ["admit_all", "deadline_shed", "defer", "degrade"];
+
+impl AdmissionConfig {
+    /// True when the policed ingress (and deadline stamping) is on.
+    pub fn active(&self) -> bool {
+        self.explicit
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !ADMISSION_POLICIES.contains(&self.policy.as_str()) {
+            return Err(format!(
+                "unknown admission policy '{}' (known: {})",
+                self.policy,
+                ADMISSION_POLICIES.join(", ")
+            ));
+        }
+        if !(self.deadline_ms.is_finite() && self.deadline_ms >= 0.0) {
+            return Err(format!(
+                "admission.deadline_ms must be finite and >= 0, got {}",
+                self.deadline_ms
+            ));
+        }
+        if !(self.slo_multiplier.is_finite() && self.slo_multiplier > 1.0) {
+            return Err(format!(
+                "admission.slo_multiplier must be > 1.0 (deadline = multiple of the \
+                 unloaded oracle latency), got {}",
+                self.slo_multiplier
+            ));
+        }
+        if self.defer_budget == 0 {
+            return Err("admission.defer_budget must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Build the configured `sim::admission` policy object.
+    pub fn build(&self) -> Result<Box<dyn crate::sim::AdmissionPolicy>, String> {
+        self.validate()?;
+        Ok(match self.policy.as_str() {
+            "admit_all" => Box::new(crate::sim::AdmitAll),
+            "deadline_shed" => Box::new(crate::sim::DeadlineShed),
+            "defer" => Box::new(crate::sim::Defer::new(self.defer_budget as u32)),
+            "degrade" => Box::new(crate::sim::Degrade),
+            other => unreachable!("validated policy {other}"),
+        })
+    }
+}
+
 /// `[drift]` section: the piecewise drift scenario played over the
 /// evaluation horizon, as a `sim::drift::DriftSchedule` spec string (see
 /// its `parse` docs; e.g. `"20000:rate=3,net=weak"`), plus the `--drift`
@@ -179,6 +269,7 @@ pub struct Config {
     pub topology: TopologyConfig,
     pub control: ControlConfig,
     pub drift: DriftConfig,
+    pub admission: AdmissionConfig,
     pub artifacts_dir: String,
     pub results_dir: String,
 }
@@ -200,6 +291,7 @@ impl Default for Config {
             topology: TopologyConfig::default(),
             control: ControlConfig::default(),
             drift: DriftConfig::default(),
+            admission: AdmissionConfig::default(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -278,6 +370,58 @@ impl Config {
         }
         self.drift.spec = doc.str("drift.spec", &self.drift.spec);
         self.drift.schedule().map(|_| ())?;
+        // [admission]: strict like [control]/[drift] — unknown keys and
+        // wrong value types are load-time errors, never silent defaults.
+        const ADMISSION_KEYS: [&str; 4] =
+            ["policy", "deadline_ms", "slo_multiplier", "defer_budget"];
+        for key in doc.entries.keys() {
+            if let Some(k) = key.strip_prefix("admission.") {
+                if !ADMISSION_KEYS.contains(&k) {
+                    return Err(format!(
+                        "unknown [admission] key '{k}' (known: {})",
+                        ADMISSION_KEYS.join(", ")
+                    ));
+                }
+            }
+        }
+        let mut touched = false;
+        if let Some(v) = doc.get("admission.policy") {
+            self.admission.policy = v
+                .as_str()
+                .ok_or_else(|| "admission.policy must be a string".to_string())?
+                .to_string();
+            touched = true;
+        }
+        if let Some(v) = doc.get("admission.deadline_ms") {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| "admission.deadline_ms must be a number (ms)".to_string())?;
+            if !(x.is_finite() && x > 0.0) {
+                return Err(format!("admission.deadline_ms must be finite and > 0, got {x}"));
+            }
+            self.admission.deadline_ms = x;
+            touched = true;
+        }
+        if let Some(v) = doc.get("admission.slo_multiplier") {
+            self.admission.slo_multiplier = v
+                .as_f64()
+                .ok_or_else(|| "admission.slo_multiplier must be a number".to_string())?;
+            touched = true;
+        }
+        if let Some(v) = doc.get("admission.defer_budget") {
+            let b = v
+                .as_i64()
+                .ok_or_else(|| "admission.defer_budget must be an integer".to_string())?;
+            if b < 1 {
+                return Err(format!("admission.defer_budget must be >= 1, got {b}"));
+            }
+            self.admission.defer_budget = b as usize;
+            touched = true;
+        }
+        if touched {
+            self.admission.explicit = true;
+        }
+        self.admission.validate()?;
         Ok(())
     }
 
@@ -337,6 +481,16 @@ impl Config {
             self.drift.spec = spec.to_string();
         }
         self.drift.schedule().map(|_| ())?;
+        if let Some(p) = args.get("admission") {
+            self.admission.policy = p.to_string();
+            self.admission.explicit = true;
+        }
+        if let Some(v) = args.get("slo") {
+            self.admission.slo_multiplier =
+                v.parse().map_err(|_| format!("bad --slo '{v}' (want a multiplier > 1.0)"))?;
+            self.admission.explicit = true;
+        }
+        self.admission.validate()?;
         Ok(())
     }
 }
@@ -526,6 +680,69 @@ mod tests {
             Args::parse(["--online-learning", "maybe"].iter().map(|s| s.to_string()));
         assert!(Config::load(&bad).is_err());
         let bad = Args::parse(["--drift", "nope:rate=1"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+    }
+
+    #[test]
+    fn admission_section_parses_strictly() {
+        // defaults: admit-all, inactive, valid
+        let d = Config::default();
+        assert!(!d.admission.active());
+        assert_eq!(d.admission.policy, "admit_all");
+        assert!(d.admission.validate().is_ok());
+        assert_eq!(d.admission.build().unwrap().name(), "admit_all");
+
+        let doc = Doc::parse(
+            "[admission]\npolicy = \"deadline_shed\"\nslo_multiplier = 2.5\ndefer_budget = 5\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert!(c.admission.active());
+        assert_eq!(c.admission.policy, "deadline_shed");
+        assert_eq!(c.admission.slo_multiplier, 2.5);
+        assert_eq!(c.admission.defer_budget, 5);
+        assert_eq!(c.admission.build().unwrap().name(), "deadline_shed");
+
+        // a fixed SLO is also accepted
+        let fixed = Doc::parse("[admission]\npolicy = \"defer\"\ndeadline_ms = 800\n").unwrap();
+        let mut c2 = Config::default();
+        c2.apply_toml(&fixed).unwrap();
+        assert_eq!(c2.admission.deadline_ms, 800.0);
+        assert_eq!(c2.admission.build().unwrap().name(), "defer");
+
+        // unknown keys rejected (the strict [control]/[drift] style)
+        let bad = Doc::parse("[admission]\npolizy = \"admit_all\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        // unknown policy rejected
+        let bad = Doc::parse("[admission]\npolicy = \"yolo\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        // slo_multiplier must exceed 1.0 (and be the right type)
+        let bad = Doc::parse("[admission]\nslo_multiplier = 1.0\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[admission]\nslo_multiplier = \"fast\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        // degenerate knobs rejected, not silently defaulted
+        let bad = Doc::parse("[admission]\ndeadline_ms = 0\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[admission]\ndefer_budget = 0\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn admission_cli_overrides() {
+        let args =
+            Args::parse(["--admission", "degrade", "--slo", "4"].iter().map(|s| s.to_string()));
+        let c = Config::load(&args).unwrap();
+        assert!(c.admission.active());
+        assert_eq!(c.admission.policy, "degrade");
+        assert_eq!(c.admission.slo_multiplier, 4.0);
+        // bad values rejected at load time
+        let bad = Args::parse(["--admission", "nope"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(["--slo", "0.5"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(["--slo", "many"].iter().map(|s| s.to_string()));
         assert!(Config::load(&bad).is_err());
     }
 

@@ -93,7 +93,7 @@ mod tests {
     fn round_conservation() {
         let r = Router::new(decision(4));
         let reqs: Vec<Request> =
-            (0..4).map(|d| Request { id: 100 + d as u64, device: d, arrival_ms: 0.0 }).collect();
+            (0..4).map(|d| Request::at(100 + d as u64, d, 0.0)).collect();
         let routes = r.route_round(&reqs);
         assert_eq!(routes.len(), 4);
         let mut ids: Vec<u64> = routes.iter().map(|x| x.req_id).collect();

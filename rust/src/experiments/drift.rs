@@ -138,13 +138,17 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
     let mut rows: Vec<Row> = Vec::new();
 
     // frozen anchor: single epoch over the same drifted trace (the
-    // orchestrator's construction-time agent is still untouched here)
-    let frozen = orch.evaluate_online(
+    // orchestrator's construction-time agent is still untouched here).
+    // Every row honors the configured [admission] ingress (inactive by
+    // default — bit-identical to the pre-admission experiment).
+    let admission = ctx.cfg.admission.clone();
+    let frozen = orch.evaluate_admission(
         process,
         horizon,
         seed,
         &ControlCfg { period_ms: f64::INFINITY, online_learning: false },
         &schedule,
+        &admission,
     );
     rows.push(Row { policy: "frozen".into(), period_ms: horizon, report: frozen });
 
@@ -155,12 +159,13 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
     let online_label = if learn { "online" } else { "online-norelearn" };
     for &period in &periods {
         orch.agent = fresh_agent();
-        let rep = orch.evaluate_online(
+        let rep = orch.evaluate_admission(
             process,
             horizon,
             seed,
             &ControlCfg { period_ms: period, online_learning: learn },
             &schedule,
+            &admission,
         );
         rows.push(Row { policy: online_label.into(), period_ms: period, report: rep });
     }
@@ -198,6 +203,7 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
             false,
             false,
             &schedule,
+            &admission,
             &mut decide,
         );
         if declined {
@@ -221,6 +227,10 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
         "decision_changes",
         "peak_backlog",
         "learn_steps",
+        "deadline_misses",
+        "shed",
+        "deferred",
+        "degraded",
     ]);
     let mut table = Vec::new();
     for r in &rows {
@@ -240,6 +250,10 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
             r.report.decision_changes().to_string(),
             r.report.metrics.peak_backlog.to_string(),
             r.report.learn_steps.to_string(),
+            r.report.metrics.deadline_misses.to_string(),
+            r.report.metrics.shed.to_string(),
+            r.report.metrics.deferrals.to_string(),
+            r.report.metrics.degraded.to_string(),
         ]);
         table.push(vec![
             r.policy.clone(),
@@ -251,6 +265,7 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
             lag_s,
             r.report.decision_changes().to_string(),
             r.report.metrics.peak_backlog.to_string(),
+            format!("{}/{}", r.report.metrics.deadline_misses, r.report.metrics.shed),
         ]);
     }
     print!(
@@ -266,6 +281,7 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
                 "adapt lag",
                 "changes",
                 "backlog",
+                "miss/shed",
             ],
             &table
         )

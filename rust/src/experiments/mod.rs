@@ -6,6 +6,7 @@
 pub mod drift;
 pub mod figures;
 pub mod overhead;
+pub mod overload;
 pub mod tables;
 pub mod traffic;
 pub mod training;
@@ -119,6 +120,7 @@ impl ExpCtx {
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig1c", "fig5", "table8", "table9", "table10", "fig6", "fig7",
     "table11", "fig8", "table12", "prediction", "traffic_sweep", "multi_edge", "drift",
+    "overload",
 ];
 
 /// Dispatch an experiment by id.
@@ -140,6 +142,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "traffic_sweep" => traffic::traffic_sweep(ctx),
         "multi_edge" => traffic::multi_edge(ctx),
         "drift" => drift::drift(ctx),
+        "overload" => overload::overload(ctx),
         other => Err(anyhow!("unknown experiment '{other}' (known: {ALL:?})")),
     }
 }
@@ -170,8 +173,8 @@ mod tests {
         // unknown id errors, known ids exist in ALL
         let ctx = ExpCtx::new(Config::default());
         assert!(run("nope", &ctx).is_err());
-        // 13 paper experiments + traffic_sweep + multi_edge + drift
-        assert_eq!(ALL.len(), 16);
+        // 13 paper experiments + traffic_sweep + multi_edge + drift + overload
+        assert_eq!(ALL.len(), 17);
     }
 
     #[test]

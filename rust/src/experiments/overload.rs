@@ -1,0 +1,235 @@
+//! `overload`: the goodput-vs-tail-latency study the ROADMAP has promised
+//! since PR 1. Sweeps per-device arrival rates from below saturation to
+//! several times past it (the single-vCPU local-d0 placement saturates
+//! near ~2.3 req/s/device) and plays the same deadline-stamped trace
+//! through each ingress admission policy:
+//!
+//! - **admit_all** — the pre-admission engine: everything completes, the
+//!   backlog and the tail diverge past saturation, goodput collapses;
+//! - **deadline_shed** — rejects predicted-late arrivals, holding the
+//!   admitted tail inside the SLO at the cost of shed work;
+//! - **defer** — bounded re-queue to the next control tick (rides out
+//!   bursts without dropping);
+//! - **degrade** — re-maps predicted-late arrivals to cheaper model
+//!   variants (the accuracy–time trade-off as an admission verb).
+//!
+//! Deadlines come from the `[admission]` config (default: 3x the oracle
+//! latency — the fastest unloaded full-accuracy response per device).
+
+use anyhow::Result;
+
+use crate::agent::baseline::FixedAgent;
+use crate::config::{AdmissionConfig, Scenario, ADMISSION_POLICIES};
+use crate::metrics::{render_table, Csv};
+use crate::monitor::TopoState;
+use crate::orchestrator::{ControlCfg, Orchestrator};
+use crate::sim::{arrivals, ArrivalProcess, DesCore, DriftSchedule};
+use crate::types::{AccuracyConstraint, Tier};
+
+use super::ExpCtx;
+
+/// Per-device Poisson rates swept: one comfortable point, roughly the
+/// local-d0 saturation knee, then 2x and 3x past it.
+pub const OVERLOAD_RATES: [f64; 4] = [1.0, 2.0, 4.0, 7.0];
+
+pub fn overload(ctx: &ExpCtx) -> Result<()> {
+    let users = 10;
+    let scenario = Scenario::exp_a(users);
+    let horizon = ctx.cfg.traffic.horizon_ms;
+    let seed = ctx.cfg.seed;
+    // Honor a user-tuned [admission] (slo_multiplier / deadline_ms /
+    // defer_budget); the policy column is swept regardless.
+    let base = ctx.cfg.admission.clone();
+    println!(
+        "\n== overload: {users} users, {scenario}, local-d0 policy, horizon {horizon:.0} ms, \
+         slo x{} ==",
+        base.slo_multiplier
+    );
+
+    // The decision under stress: everyone local on the most accurate
+    // model — the paper's accuracy-first anchor, whose single vCPU per
+    // device is exactly what overload exposes. The SLO column comes from
+    // the same oracle the stamping path uses
+    // ([`DesCore::oracle_response_ms`], device 0 — exp_a devices are
+    // uniform), computed once up front so it can never diverge from the
+    // deadlines actually stamped on the requests.
+    let slo_ms = {
+        let env = ctx.env(scenario.clone(), AccuracyConstraint::Max, seed);
+        let state = TopoState::idle(env.topology());
+        let mut core = DesCore::new();
+        core.install(&env.model, &state);
+        if base.deadline_ms > 0.0 {
+            base.deadline_ms
+        } else {
+            base.slo_multiplier * core.oracle_response_ms(0)
+        }
+    };
+
+    let mut csv = Csv::new(&[
+        "policy",
+        "rate_per_s",
+        "offered",
+        "completed",
+        "shed",
+        "deferred",
+        "degraded",
+        "deadline_misses",
+        "goodput_rps",
+        "throughput_rps",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "slo_ms",
+        "peak_backlog",
+    ]);
+    let mut table = Vec::new();
+    for &rate in &OVERLOAD_RATES {
+        // Offered load from the trace itself (every policy row replays the
+        // same seeded trace), so the CSV's conservation property
+        // `offered = completed + shed` is an independent check that the
+        // lifecycle loses nothing — not a sum of the run's own counters.
+        let offered = arrivals::schedule(
+            ArrivalProcess::Poisson { rate_per_s: rate },
+            users,
+            horizon,
+            seed,
+        )
+        .len();
+        for policy in ADMISSION_POLICIES {
+            let mut orch = Orchestrator::new(
+                ctx.env(scenario.clone(), AccuracyConstraint::Max, seed),
+                Box::new(FixedAgent::new(Tier::Local, users)),
+            );
+            orch.env.freeze();
+            orch.env.reset_load();
+            let admission =
+                AdmissionConfig { policy: policy.to_string(), explicit: true, ..base.clone() };
+            // ~20 control ticks: deferral has real re-queue points and the
+            // backlog probe refreshes at a realistic cadence.
+            let ctl = ControlCfg { period_ms: horizon / 20.0, online_learning: false };
+            let rep = orch.evaluate_admission(
+                ArrivalProcess::Poisson { rate_per_s: rate },
+                horizon,
+                seed,
+                &ctl,
+                &DriftSchedule::none(),
+                &admission,
+            );
+            let m = &rep.metrics;
+            csv.row(&[
+                policy.to_string(),
+                format!("{rate:.2}"),
+                offered.to_string(),
+                m.requests.to_string(),
+                m.shed.to_string(),
+                m.deferrals.to_string(),
+                m.degraded.to_string(),
+                m.deadline_misses.to_string(),
+                format!("{:.3}", m.goodput_rps),
+                format!("{:.3}", m.throughput_rps),
+                format!("{:.1}", m.response.p50_ms),
+                format!("{:.1}", m.response.p95_ms),
+                format!("{:.1}", m.response.p99_ms),
+                format!("{slo_ms:.1}"),
+                m.peak_backlog.to_string(),
+            ]);
+            table.push(vec![
+                policy.to_string(),
+                format!("{rate:.1}"),
+                offered.to_string(),
+                m.shed.to_string(),
+                m.degraded.to_string(),
+                m.deadline_misses.to_string(),
+                format!("{:.2}", m.goodput_rps),
+                format!("{:.0}", m.response.p99_ms),
+                m.peak_backlog.to_string(),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        render_table(
+            &["policy", "rate/s", "offered", "shed", "degraded", "missed", "goodput", "p99",
+              "backlog"],
+            &table
+        )
+    );
+    println!("slo per request: {slo_ms:.0} ms (x{} oracle latency)", base.slo_multiplier);
+    println!(
+        "reading: past ~2.3 req/s/device admit_all's p99 and backlog diverge while its \
+         goodput collapses; deadline_shed holds p99 inside the SLO and keeps goodput at \
+         capacity; degrade trades accuracy for on-time completions"
+    );
+    csv.save(&ctx.cfg.results_dir, "overload")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::experiments::ExpCtx;
+
+    #[test]
+    fn overload_experiment_shows_shed_holding_the_slo() {
+        // Noise off: the admission prediction is exact for the homogeneous
+        // local-d0 mix, so the acceptance contract is deterministic —
+        // at the top rate admit_all blows the SLO while deadline_shed's
+        // p99 stays inside it with better goodput.
+        let cfg = Config {
+            results_dir: std::env::temp_dir()
+                .join("eeco_overload")
+                .to_str()
+                .unwrap()
+                .into(),
+            calibration: crate::config::Calibration {
+                noise_sigma: 0.0,
+                ..Default::default()
+            },
+            traffic: crate::config::TrafficConfig {
+                horizon_ms: 8_000.0, // keep the unit test fast
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let ctx = ExpCtx::new(cfg);
+        overload(&ctx).unwrap();
+        let body =
+            std::fs::read_to_string(format!("{}/overload.csv", ctx.cfg.results_dir)).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 1 + OVERLOAD_RATES.len() * ADMISSION_POLICIES.len(), "{body}");
+        let col = |line: &str, i: usize| line.split(',').nth(i).unwrap().to_string();
+        let top_rate = format!("{:.2}", OVERLOAD_RATES[OVERLOAD_RATES.len() - 1]);
+        let row = |policy: &str| -> Vec<String> {
+            lines[1..]
+                .iter()
+                .find(|l| col(l, 0) == policy && col(l, 1) == top_rate)
+                .unwrap_or_else(|| panic!("no {policy} row at rate {top_rate}: {body}"))
+                .split(',')
+                .map(|s| s.to_string())
+                .collect()
+        };
+        let f = |row: &[String], i: usize| -> f64 { row[i].parse().unwrap() };
+        let all = row("admit_all");
+        let shed = row("deadline_shed");
+        let degrade = row("degrade");
+        let defer = row("defer");
+        let slo: f64 = f(&all, 13);
+        // admit_all diverges: p99 far past the SLO
+        assert!(f(&all, 12) > 2.0 * slo, "admit_all p99 {} vs slo {slo}", f(&all, 12));
+        // deadline_shed holds the admitted tail inside the SLO...
+        assert!(f(&shed, 12) <= slo, "shed p99 {} vs slo {slo}", f(&shed, 12));
+        assert!(f(&shed, 4) > 0.0, "3x overload must shed");
+        assert_eq!(f(&shed, 7), 0.0, "exact prediction: no admitted miss");
+        // ...with goodput at least admit_all's (the acceptance contract)
+        assert!(f(&shed, 8) >= f(&all, 8), "goodput {} vs {}", f(&shed, 8), f(&all, 8));
+        // goodput is reported for every policy, and the alternates engage
+        assert!(f(&degrade, 8) > 0.0 && f(&defer, 8) > 0.0 && f(&all, 8) > 0.0);
+        assert!(f(&degrade, 6) > 0.0, "overload must trigger degrades");
+        assert!(f(&defer, 5) > 0.0, "overload must trigger deferrals");
+        // conservation: nothing vanishes
+        for r in [&all, &shed, &degrade, &defer] {
+            assert_eq!(f(r, 2), f(r, 3) + f(r, 4), "offered = completed + shed: {r:?}");
+        }
+    }
+}

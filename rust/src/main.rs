@@ -45,6 +45,29 @@ fn run(args: &Args) -> Result<()> {
             cfg.topology.edges_max
         ));
     }
+    // [admission] drives the control-plane experiments; anywhere else it
+    // would be silently ignored, which the section's strict-validation
+    // stance forbids — fail safe: reject unless the target is known to
+    // honor it (no command allowlist to fall out of sync with the
+    // dispatch below).
+    if cfg.admission.active() {
+        let exp = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+        let honored = cmd == "experiment" && matches!(exp, "drift" | "overload");
+        if !honored {
+            let target =
+                if cmd == "experiment" { format!("experiment {exp}") } else { cmd.to_string() };
+            let effect = if exp == "all" {
+                "mixes policed (drift, overload) and silently unpoliced legs"
+            } else {
+                "would run unpoliced"
+            };
+            return Err(anyhow!(
+                "--admission / [admission] is honored by `experiment drift` and `experiment \
+                 overload` only; `{target}` {effect} — drop the flag or run those \
+                 experiments directly"
+            ));
+        }
+    }
     match cmd {
         "experiment" => cmd_experiment(args, cfg),
         "train" => cmd_train(args, cfg),
@@ -93,7 +116,23 @@ OPTIONS (drift):  --drift \"T:rate=K,net=weak;...\"   piecewise drift
                   schedule over the horizon (rate multipliers + link-cond
                   overrides; keys rate|net|dev|edge) — the scenario
                   `experiment drift` replays against frozen/online/oracle
-                  policies",
+                  policies
+OPTIONS (admission): --admission admit_all|deadline_shed|defer|degrade
+                  ingress admission policy for `experiment drift` /
+                  `experiment overload` (rejected elsewhere — other
+                  commands would silently run unpoliced):
+                  every arrival carries a deadline and may be shed,
+                  deferred to the next control tick, or degraded to a
+                  cheaper model when its predicted completion misses it
+                  ([admission] policy/deadline_ms/slo_multiplier/
+                  defer_budget; unset = admit everything, bit-identical
+                  to the pre-admission engine)
+                  --slo K   deadline = K x the oracle latency (the
+                  fastest unloaded d0 response per device; K > 1.0,
+                  default 3.0; [admission] deadline_ms pins an absolute
+                  SLO instead) — `experiment overload` sweeps arrival
+                  rates past saturation comparing the policies on
+                  goodput vs tail latency",
         ids = experiments::ALL.join(",")
     );
 }

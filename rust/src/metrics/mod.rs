@@ -126,6 +126,24 @@ pub struct TrafficMetrics {
     /// Time-weighted mean backlog of the busiest compute node
     /// ([`crate::sim::des::DesOutcome::busiest_mean_backlog`]).
     pub busiest_mean_backlog: f64,
+    /// Arrivals the admission policy rejected at ingress (0 without an
+    /// `[admission]` config).
+    pub shed: usize,
+    /// Defer events (bounded re-queues to a later control tick).
+    pub deferrals: usize,
+    /// Requests admitted with a degraded (cheaper) model variant.
+    pub degraded: usize,
+    /// Completions that blew their stamped deadline (0 when none).
+    pub deadline_misses: usize,
+    /// On-time completions per second of virtual time
+    /// ([`crate::sim::des::DesOutcome::goodput_rps`]); equals
+    /// `throughput_rps` when no deadlines are stamped.
+    pub goodput_rps: f64,
+    /// Latency split per deadline outcome: summaries over on-time and
+    /// late completions (None when that class is empty — note
+    /// `requests = on-time + late` always holds).
+    pub response_on_time: Option<LatencySummary>,
+    pub response_late: Option<LatencySummary>,
 }
 
 impl TrafficMetrics {
@@ -135,6 +153,17 @@ impl TrafficMetrics {
     ) -> TrafficMetrics {
         let waits: Vec<f64> =
             outcome.completed.iter().map(|c| c.link_wait_ms + c.queue_ms).collect();
+        let mut on_time = Vec::new();
+        let mut late = Vec::new();
+        for c in &outcome.completed {
+            if c.on_time() {
+                on_time.push(c.response_ms);
+            } else {
+                late.push(c.response_ms);
+            }
+        }
+        let summarize =
+            |v: &Vec<f64>| if v.is_empty() { None } else { Some(LatencySummary::of(v)) };
         TrafficMetrics {
             decision: decision.clone(),
             response: LatencySummary::of(&outcome.responses_ms()),
@@ -144,19 +173,38 @@ impl TrafficMetrics {
             requests: outcome.completed.len(),
             peak_backlog: outcome.peak_backlog(),
             busiest_mean_backlog: outcome.busiest_mean_backlog(),
+            shed: outcome.shed,
+            deferrals: outcome.deferrals,
+            degraded: outcome.degraded,
+            deadline_misses: late.len(),
+            goodput_rps: outcome.goodput_rps(),
+            response_on_time: summarize(&on_time),
+            response_late: summarize(&late),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("decision", self.decision.to_string())
             .set("requests", self.requests)
             .set("throughput_rps", self.throughput_rps)
+            .set("goodput_rps", self.goodput_rps)
             .set("makespan_ms", self.makespan_ms)
             .set("peak_backlog", self.peak_backlog)
             .set("busiest_mean_backlog", self.busiest_mean_backlog)
+            .set("shed", self.shed)
+            .set("deferrals", self.deferrals)
+            .set("degraded", self.degraded)
+            .set("deadline_misses", self.deadline_misses)
             .set("response", self.response.to_json())
-            .set("queueing", self.queueing.to_json())
+            .set("queueing", self.queueing.to_json());
+        if let Some(s) = &self.response_on_time {
+            j = j.set("response_on_time", s.to_json());
+        }
+        if let Some(s) = &self.response_late {
+            j = j.set("response_late", s.to_json());
+        }
+        j
     }
 }
 
@@ -190,7 +238,20 @@ pub struct EpochRecord {
     /// launched — would starve the learner of any signal exactly when a
     /// saturated placement never finishes its own arrivals in-epoch,
     /// which is the regime online adaptation exists for.
+    ///
+    /// Under an admission policy each shed arrival additionally counts as
+    /// one worst-case (`penalty_ms`) response in the epoch mean, so
+    /// `learn()` sees the cost of rejecting work, not just the rosy
+    /// latency of the survivors.
     pub reward: f64,
+    /// Arrivals shed at ingress during the epoch.
+    pub shed: usize,
+    /// Defer events during the epoch.
+    pub deferrals: usize,
+    /// Degraded admissions during the epoch.
+    pub degraded: usize,
+    /// Epoch completions that blew their deadline.
+    pub deadline_misses: usize,
 }
 
 /// Outcome of one online (control-plane) evaluation:
@@ -395,6 +456,7 @@ mod tests {
                     service_ms: resp,
                     depart_ms: arrival + resp,
                     response_ms: resp,
+                    deadline_ms: f64::INFINITY,
                 }
             })
             .collect();
@@ -408,6 +470,10 @@ mod tests {
             requests: 2,
             response: LatencySummary::of(&[100.0]),
             reward: -100.0,
+            shed: 0,
+            deferrals: 0,
+            degraded: 0,
+            deadline_misses: 0,
         };
         let metrics = TrafficMetrics::from_outcome(&dec(0), &outcome);
         let report = OnlineReport {
@@ -428,6 +494,59 @@ mod tests {
         assert_eq!(report.decision_changes(), 1);
         // onset before any epoch: nothing preceded it
         assert_eq!(report.adaptation_lag_ms(-1.0), None);
+    }
+
+    #[test]
+    fn traffic_metrics_split_deadline_outcomes_and_goodput() {
+        use crate::sim::des::{CompletedRequest, DesOutcome};
+        let act = Action { placement: Tier::Local, model: ModelId(0) };
+        let req = |id: u64, resp: f64, deadline: f64| CompletedRequest {
+            id,
+            device: 0,
+            action: act,
+            arrival_ms: 0.0,
+            path_ms: 1.0,
+            link_wait_ms: 0.0,
+            queue_ms: 0.0,
+            service_ms: resp,
+            depart_ms: resp,
+            response_ms: resp,
+            deadline_ms: deadline,
+        };
+        let outcome = DesOutcome {
+            completed: vec![req(0, 100.0, 500.0), req(1, 200.0, 500.0), req(2, 900.0, 500.0)],
+            makespan_ms: 1000.0,
+            shed: 2,
+            deferrals: 1,
+            degraded: 1,
+            ..Default::default()
+        };
+        let m = TrafficMetrics::from_outcome(&Decision(vec![act]), &outcome);
+        assert_eq!(m.requests, 3);
+        assert_eq!((m.shed, m.deferrals, m.degraded), (2, 1, 1));
+        assert_eq!(m.deadline_misses, 1);
+        assert!((m.throughput_rps - 3.0).abs() < 1e-9);
+        assert!((m.goodput_rps - 2.0).abs() < 1e-9);
+        let on = m.response_on_time.unwrap();
+        assert_eq!(on.count, 2);
+        assert!((on.mean_ms - 150.0).abs() < 1e-9);
+        let late = m.response_late.unwrap();
+        assert_eq!(late.count, 1);
+        assert!((late.mean_ms - 900.0).abs() < 1e-9);
+        let j = m.to_json();
+        assert_eq!(j.field("shed").unwrap().as_usize(), Some(2));
+        assert_eq!(j.field("deadline_misses").unwrap().as_usize(), Some(1));
+
+        // no deadlines: goodput == throughput, late split absent
+        let plain = DesOutcome {
+            completed: vec![req(0, 100.0, f64::INFINITY)],
+            makespan_ms: 1000.0,
+            ..Default::default()
+        };
+        let m = TrafficMetrics::from_outcome(&Decision(vec![act]), &plain);
+        assert_eq!(m.goodput_rps.to_bits(), m.throughput_rps.to_bits());
+        assert!(m.response_late.is_none());
+        assert_eq!(m.response_on_time.unwrap().count, 1);
     }
 
     #[test]

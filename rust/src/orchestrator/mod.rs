@@ -32,8 +32,10 @@ use crate::metrics::{
     EpochRecord, LatencySummary, OnlineReport, RoundRecord, RunMetrics, TrafficMetrics,
 };
 use crate::monitor::{self, EncodedState, TopoState};
+use crate::sim::admission::{self, AdmissionPolicy};
 use crate::sim::des::{DesCore, DesOutcome};
 use crate::sim::drift::{DriftSchedule, DriftSegment};
+use crate::sim::workload::Request;
 use crate::sim::{arrivals, ArrivalProcess, Env};
 use crate::types::Decision;
 use crate::util::pool::ThreadPool;
@@ -45,6 +47,11 @@ use crate::util::stats::Convergence;
 /// [`Orchestrator::evaluate_async`] opts out of learning explicitly (a
 /// frozen snapshot never learns).
 pub use crate::config::ControlConfig as ControlCfg;
+
+/// The ingress admission knobs are the `[admission]` config section;
+/// re-exported like [`ControlCfg`]. The default is inactive (admit
+/// everything, no deadlines) — bit-identical to the pre-admission engine.
+pub use crate::config::AdmissionConfig as AdmissionCfg;
 
 /// Bring the DES service/path tables in line with the drift segment in
 /// force at `at_ms`: when its cond overrides differ from the installed
@@ -264,6 +271,25 @@ impl Orchestrator {
         ctl: &ControlCfg,
         drift: &DriftSchedule,
     ) -> OnlineReport {
+        self.evaluate_admission(process, horizon_ms, seed, ctl, drift, &AdmissionCfg::default())
+    }
+
+    /// [`Orchestrator::evaluate_online`] with a configured ingress
+    /// admission policy: each arrival is judged at its arrival instant
+    /// against the live queues (predicted completion from the memoized
+    /// service tables + backlog + en-route admissions vs the stamped
+    /// deadline) and may be shed, deferred to the next control tick, or
+    /// degraded to a cheaper model before enqueueing. With the default
+    /// (inactive) config this *is* `evaluate_online`, byte for byte.
+    pub fn evaluate_admission(
+        &mut self,
+        process: ArrivalProcess,
+        horizon_ms: f64,
+        seed: u64,
+        ctl: &ControlCfg,
+        drift: &DriftSchedule,
+        admission: &AdmissionCfg,
+    ) -> OnlineReport {
         self.run_online(
             process,
             horizon_ms,
@@ -272,6 +298,7 @@ impl Orchestrator {
             false,
             ctl.online_learning,
             drift,
+            admission,
             &mut |_| None,
         )
     }
@@ -288,7 +315,17 @@ impl Orchestrator {
         period_ms: f64,
         drift: &DriftSchedule,
     ) -> OnlineReport {
-        self.run_online(process, horizon_ms, seed, period_ms, true, true, drift, &mut |_| None)
+        self.run_online(
+            process,
+            horizon_ms,
+            seed,
+            period_ms,
+            true,
+            true,
+            drift,
+            &AdmissionCfg::default(),
+            &mut |_| None,
+        )
     }
 
     /// The open-loop control loop all online drivers share. `decide`
@@ -305,10 +342,11 @@ impl Orchestrator {
         explore: bool,
         learn: bool,
         drift: &DriftSchedule,
+        admission: &AdmissionCfg,
         decide: &mut dyn FnMut(&TopoState) -> Option<Decision>,
     ) -> OnlineReport {
         let users = self.env.users();
-        let trace = arrivals::schedule_with_drift(process, users, horizon_ms, seed, drift);
+        let mut trace = arrivals::schedule_with_drift(process, users, horizon_ms, seed, drift);
         let period = if period_ms.is_finite() && period_ms > 0.0 { period_ms } else { horizon_ms };
 
         let mut core = DesCore::new();
@@ -321,6 +359,23 @@ impl Orchestrator {
         let mut phys = self.env.state.clone();
         seg.apply_conds(&mut phys);
         core.install(&self.env.model, &phys);
+        // Policed ingress only when the user configured [admission]: the
+        // default path must stay bitwise the pre-admission engine, and an
+        // invalid config never reaches here (Config::load validates).
+        let mut policy: Option<Box<dyn AdmissionPolicy>> = if admission.active() {
+            admission::stamp_deadlines(
+                &mut trace,
+                &core,
+                admission.deadline_ms,
+                admission.slo_multiplier,
+            );
+            let mut p = admission.build().expect("admission config validated at load time");
+            p.reset();
+            Some(p)
+        } else {
+            None
+        };
+        let mut deferred: Vec<Request> = Vec::new();
         core.begin(seed ^ 0x5EED_DE5, &mut out);
 
         let mut epochs: Vec<EpochRecord> = Vec::new();
@@ -351,6 +406,15 @@ impl Orchestrator {
                 Some(d) => d,
                 None => self.agent.decide(&enc, explore),
             };
+            let (shed0, defer0, degrade0) = (out.shed, out.deferrals, out.degraded);
+            // Requests deferred at an earlier tick are re-presented now,
+            // under this epoch's decision and against the live backlog.
+            if let Some(pol) = policy.as_mut() {
+                if !deferred.is_empty() {
+                    let batch = std::mem::take(&mut deferred);
+                    core.admit_policed(&decision, &batch, t, &mut **pol, &mut deferred, &mut out);
+                }
+            }
             // Advance virtual time to the next control tick (final epoch:
             // drain everything, like the frozen evaluation), pausing at
             // every drift boundary on the way so cond changes are
@@ -365,15 +429,48 @@ impl Orchestrator {
                 let boundary = drift.next_boundary_after(seg_t);
                 let stop = boundary.min(t_end);
                 let next = cursor + trace[cursor..].partition_point(|r| r.arrival_ms < stop);
-                core.admit(&decision, &trace[cursor..next]);
+                match policy.as_mut() {
+                    Some(pol) => core.admit_policed(
+                        &decision,
+                        &trace[cursor..next],
+                        seg_t,
+                        &mut **pol,
+                        &mut deferred,
+                        &mut out,
+                    ),
+                    None => core.admit(&decision, &trace[cursor..next]),
+                }
                 cursor = next;
                 if t_end >= horizon_ms {
-                    // final epoch: step through any remaining boundaries,
-                    // then drain
-                    if boundary.is_finite() {
+                    // final epoch: step through the remaining in-horizon
+                    // boundaries first (arrivals are admitted per slice)
+                    if boundary < t_end {
                         core.run_until(boundary, &mut out);
                         seg_t = boundary;
                         continue;
+                    }
+                    // Every arrival is admitted. Resolve outstanding
+                    // deferrals at the horizon *before* the clock passes
+                    // it — draining after a post-horizon drift boundary
+                    // would inject joins behind the makespan and corrupt
+                    // the backlog integrals.
+                    if let Some(pol) = policy.as_mut() {
+                        core.drain_deferred(
+                            &decision,
+                            horizon_ms,
+                            &mut **pol,
+                            &mut deferred,
+                            &mut out,
+                        );
+                    }
+                    // The world keeps drifting while the backlog drains:
+                    // step through post-horizon boundaries so cond
+                    // changes stay physical, then drain the heap.
+                    let mut b = boundary;
+                    while b.is_finite() {
+                        core.run_until(b, &mut out);
+                        sync_drift_tables(&self.env, drift, b, &mut seg, &mut phys, &mut core);
+                        b = drift.next_boundary_after(b);
                     }
                     core.run_until(f64::INFINITY, &mut out);
                     break;
@@ -385,16 +482,45 @@ impl Orchestrator {
                     break;
                 }
             }
-            // Record the epoch from its realized completions.
+            // Record the epoch from its realized completions (plus, under
+            // an admission policy, the worst-case cost of what it shed —
+            // learn() must see that rejecting work is not free).
             let responses: Vec<f64> =
                 out.completed[before..].iter().map(|c| c.response_ms).collect();
             let summary = LatencySummary::of(&responses);
-            let reward = if responses.is_empty() {
+            let epoch_shed = out.shed - shed0;
+            let epoch_degraded = out.degraded - degrade0;
+            // Accuracy for Eq. 4: nominal until the ingress has overridden
+            // any model this run — from then on the *realized* mean over
+            // the epoch's served models, so a Degrade ingress is graded on
+            // what it actually served even when degraded admissions drain
+            // into a later epoch. Keying on realized degradation (not
+            // merely an active policy) keeps admit_all / shed / defer runs
+            // bitwise on the nominal path — what lets explicit
+            // `--admission admit_all` stay byte-identical to the
+            // pre-admission engine.
+            let accuracy = if out.degraded > 0 && !responses.is_empty() {
+                let t5 = crate::models::top5_table();
+                out.completed[before..]
+                    .iter()
+                    .map(|c| t5[c.action.model.index()])
+                    .sum::<f64>()
+                    / responses.len() as f64
+            } else {
+                self.env.accuracy_of(&decision)
+            };
+            let reward = if responses.is_empty() && epoch_shed == 0 {
                 0.0
             } else {
-                self.env.reward(summary.mean_ms, self.env.accuracy_of(&decision))
+                let mean_ms = if epoch_shed == 0 {
+                    summary.mean_ms
+                } else {
+                    (responses.iter().sum::<f64>() + epoch_shed as f64 * self.env.penalty_ms())
+                        / (responses.len() + epoch_shed) as f64
+                };
+                self.env.reward(mean_ms, accuracy)
             };
-            pending = if responses.is_empty() {
+            pending = if responses.is_empty() && epoch_shed == 0 {
                 None
             } else {
                 Some((enc, decision.clone(), reward))
@@ -408,6 +534,13 @@ impl Orchestrator {
                 requests: responses.len(),
                 response: summary,
                 reward,
+                shed: epoch_shed,
+                deferrals: out.deferrals - defer0,
+                degraded: epoch_degraded,
+                deadline_misses: out.completed[before..]
+                    .iter()
+                    .filter(|c| !c.on_time())
+                    .count(),
             });
             epoch += 1;
             t = t_end;

@@ -1,0 +1,400 @@
+//! Pluggable ingress admission control for the DES request lifecycle.
+//!
+//! Under the saturation rates `traffic_sweep` probes, "every arrival is
+//! enqueued and must complete" makes tail latency diverge and says nothing
+//! about goodput — the regime a system serving heavy multi-user traffic
+//! actually lives in. Following the delay-aware offloading line of work
+//! (per-task deadlines as first-class state, arXiv 2103.07811) and the
+//! accuracy–time trade-off line (degrading to a smaller model as a
+//! principled alternative to dropping, see PAPERS.md), every arrival now
+//! passes through an [`AdmissionPolicy`] at ingress which may:
+//!
+//! - **admit** it unchanged ([`AdmitAll`] — the default, bit-identical to
+//!   the pre-admission engine; property-pinned),
+//! - **shed** it ([`DeadlineShed`]: reject when the predicted completion —
+//!   memoized service tables + live backlog — misses the deadline),
+//! - **defer** it ([`Defer`]: bounded re-queue to the next control tick),
+//! - **degrade** it ([`Degrade`]: re-map to a cheaper model variant that
+//!   the prediction says can still meet the deadline).
+//!
+//! Policies never draw from the RNG and never touch the event heap
+//! directly — they only return a verdict — so the admitted sub-trace plays
+//! through exactly the PR-4 physics (same float ops, same noise draw
+//! order).
+
+use std::collections::HashMap;
+
+use crate::sim::des::DesCore;
+use crate::sim::workload::Request;
+use crate::types::{Action, ModelId, NUM_MODELS};
+
+/// What the ingress does with one arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitVerdict {
+    /// Enqueue under the decision's action.
+    Admit,
+    /// Reject outright: the request never enters the system (it still
+    /// counts against goodput).
+    Shed,
+    /// Re-present at the next control tick (bounded by the policy).
+    Defer,
+    /// Enqueue, but run this (cheaper) action instead of the decision's.
+    Degrade(Action),
+}
+
+/// What a policy can see when judging one arrival: the request (with its
+/// stamped deadline), the action the current decision assigns it, and a
+/// predicted-completion probe over the core's memoized tables + live
+/// backlog.
+pub struct AdmitQuery<'a> {
+    core: &'a DesCore,
+    pub req: &'a Request,
+    /// The action the routing decision assigns this request.
+    pub action: Action,
+    /// Judgment instant: the request's own arrival time, floored at the
+    /// re-presentation tick for deferred requests.
+    pub now_ms: f64,
+}
+
+impl<'a> AdmitQuery<'a> {
+    pub fn new(core: &'a DesCore, req: &'a Request, action: Action, now_ms: f64) -> Self {
+        AdmitQuery { core, req, action, now_ms }
+    }
+
+    /// Predicted absolute completion time if `action` were admitted now:
+    /// queue-join after the fixed path overhead, one uplink-serialization
+    /// hold per upload already committed to the placement's ingress link
+    /// (offloaded placements only), an optimistic FIFO wait of
+    /// (backlog + en-route admissions) service quanta across the node's
+    /// servers, then the memoized single-stream service time.
+    ///
+    /// The compute-wait estimate prices queued work at the *candidate's
+    /// own* service time — exact for a homogeneous per-node mix (each end
+    /// device queues only its own requests), optimistic when a cheaper
+    /// candidate queues behind dearer work; the link term is slightly
+    /// conservative (link holds overlap the compute of earlier requests).
+    /// Deterministic: no RNG, reads only the installed tables and live
+    /// queue state.
+    pub fn predicted_depart_ms(&self, action: Action) -> f64 {
+        let d = self.req.device;
+        let p = action.placement;
+        let join = self.req.arrival_ms.max(self.now_ms) + self.core.path_ms(d, p);
+        let link_wait = match self.core.ingress_link(d, p) {
+            None => 0.0,
+            Some(l) => self.core.link_load(l) as f64 * self.core.link_hold_ms(),
+        };
+        let svc = self.core.service_ms(d, action.model, p);
+        let node = self.core.compute_node(d, p);
+        let queued = (self.core.backlog(node) + self.core.enroute_count(node)) as f64;
+        join + link_wait + queued / self.core.node_servers(node) as f64 * svc + svc
+    }
+
+    /// Would `action` (predictedly) blow the request's deadline? Always
+    /// false for unstamped requests (`deadline_ms = +inf`).
+    pub fn misses_deadline(&self, action: Action) -> bool {
+        self.predicted_depart_ms(action) > self.req.deadline_ms
+    }
+}
+
+/// Ingress admission policy: one verdict per arrival. Implementations may
+/// keep per-request state (e.g. defer counts) but must be deterministic
+/// functions of the queries they have seen — the DES's bit-exactness
+/// contract extends through them.
+pub trait AdmissionPolicy {
+    fn name(&self) -> &'static str;
+    fn decide(&mut self, q: &AdmitQuery) -> AdmitVerdict;
+
+    /// Clear per-run state (e.g. spent defer budgets). The run drivers
+    /// call this at the start of every trace, so one policy instance
+    /// serves many runs with identical outcomes for identical inputs.
+    /// Stateless policies keep the default no-op.
+    fn reset(&mut self) {}
+}
+
+/// Admit everything — the pre-admission engine, verbatim. The property
+/// suite pins runs through this policy byte-identical to the PR-4 path
+/// (same noise draw order, zero extra draws).
+pub struct AdmitAll;
+
+impl AdmissionPolicy for AdmitAll {
+    fn name(&self) -> &'static str {
+        "admit_all"
+    }
+
+    fn decide(&mut self, _q: &AdmitQuery) -> AdmitVerdict {
+        AdmitVerdict::Admit
+    }
+}
+
+/// Shed any arrival whose predicted completion misses its deadline: the
+/// classic load-shedding ingress. Keeps the admitted tail inside the SLO
+/// by construction wherever the prediction is exact (local placements —
+/// homogeneous per-node service — with noise off) and within the noise /
+/// link-estimate envelope otherwise.
+pub struct DeadlineShed;
+
+impl AdmissionPolicy for DeadlineShed {
+    fn name(&self) -> &'static str {
+        "deadline_shed"
+    }
+
+    fn decide(&mut self, q: &AdmitQuery) -> AdmitVerdict {
+        if q.misses_deadline(q.action) {
+            AdmitVerdict::Shed
+        } else {
+            AdmitVerdict::Admit
+        }
+    }
+}
+
+/// Defer deadline-missing arrivals to the next control tick, at most
+/// `budget` times per request; once the budget is spent the request is
+/// admitted regardless (it completes, possibly late — deferral trades
+/// immediate queueing for a chance that the backlog drains).
+pub struct Defer {
+    budget: u32,
+    counts: HashMap<u64, u32>,
+}
+
+impl Defer {
+    pub fn new(budget: u32) -> Defer {
+        assert!(budget >= 1, "defer budget must be >= 1");
+        Defer { budget, counts: HashMap::new() }
+    }
+}
+
+impl AdmissionPolicy for Defer {
+    fn name(&self) -> &'static str {
+        "defer"
+    }
+
+    fn reset(&mut self) {
+        self.counts.clear();
+    }
+
+    fn decide(&mut self, q: &AdmitQuery) -> AdmitVerdict {
+        if !q.misses_deadline(q.action) {
+            return AdmitVerdict::Admit;
+        }
+        let seen = self.counts.entry(q.req.id).or_insert(0);
+        if *seen < self.budget {
+            *seen += 1;
+            AdmitVerdict::Defer
+        } else {
+            AdmitVerdict::Admit
+        }
+    }
+}
+
+/// Re-map deadline-missing arrivals to a less accurate model variant at
+/// the same placement: the accuracy–time trade-off as an admission verb.
+/// Candidates are the variants strictly less accurate than the decision's,
+/// tried in *descending top-5 accuracy* (catalog index order is monotone
+/// in neither speed nor accuracy across the fp32/int8 precision bands),
+/// so the pick loses the least accuracy that still meets the deadline.
+/// When nothing meets it, the predicted-fastest variant runs anyway
+/// (serve *something* fast rather than enqueueing the dearest model into
+/// a hopeless backlog).
+pub struct Degrade;
+
+/// Model indices in descending top-5 accuracy (d0 89.9, d4 88.9, d1 88.2,
+/// d5 87.0, d2 84.9, d6 83.2, d3 74.2, d7 72.8). Precomputed so the
+/// admission hot path does zero per-arrival sorting; a unit test pins it
+/// against the live catalog so it cannot drift.
+const ACCURACY_ORDER: [usize; NUM_MODELS] = [0, 4, 1, 5, 2, 6, 3, 7];
+
+impl AdmissionPolicy for Degrade {
+    fn name(&self) -> &'static str {
+        "degrade"
+    }
+
+    fn decide(&mut self, q: &AdmitQuery) -> AdmitVerdict {
+        if !q.misses_deadline(q.action) {
+            return AdmitVerdict::Admit;
+        }
+        let pos = ACCURACY_ORDER
+            .iter()
+            .position(|&m| m == q.action.model.index())
+            .expect("catalog model");
+        for &m in &ACCURACY_ORDER[pos + 1..] {
+            let cand = Action { placement: q.action.placement, model: ModelId(m as u8) };
+            if !q.misses_deadline(cand) {
+                return AdmitVerdict::Degrade(cand);
+            }
+        }
+        // Nothing meets the deadline: serve the fastest variant anyway.
+        // d7 (minimal MMACs x int8 factor) is the service-time minimum at
+        // any placement, so it is the static answer.
+        let fastest =
+            Action { placement: q.action.placement, model: ModelId((NUM_MODELS - 1) as u8) };
+        if fastest.model == q.action.model {
+            AdmitVerdict::Admit
+        } else {
+            AdmitVerdict::Degrade(fastest)
+        }
+    }
+}
+
+/// Stamp each request's absolute deadline from the `[admission]` config:
+/// a fixed per-request SLO when `deadline_ms > 0`, otherwise
+/// `slo_multiplier` times the device's oracle latency — the fastest
+/// unloaded full-accuracy response any placement could serve it
+/// ([`DesCore::oracle_response_ms`], from the installed tables).
+pub fn stamp_deadlines(
+    trace: &mut [Request],
+    core: &DesCore,
+    deadline_ms: f64,
+    slo_multiplier: f64,
+) {
+    if deadline_ms > 0.0 {
+        crate::sim::workload::stamp_fixed_deadlines(trace, deadline_ms);
+        return;
+    }
+    assert!(
+        slo_multiplier.is_finite() && slo_multiplier > 1.0,
+        "slo_multiplier must be > 1.0"
+    );
+    for r in trace.iter_mut() {
+        r.deadline_ms = r.arrival_ms + slo_multiplier * core.oracle_response_ms(r.device);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Calibration, Scenario};
+    use crate::monitor::TopoState;
+    use crate::network::Network;
+    use crate::sim::latency::ResponseModel;
+    use crate::types::{Placement, Tier};
+
+    fn installed_core(users: usize) -> (ResponseModel, TopoState, DesCore) {
+        let cal = Calibration { noise_sigma: 0.0, ..Calibration::default() };
+        let model = ResponseModel::new(Network::new(Scenario::exp_a(users), cal));
+        let state = TopoState::idle(&model.net.topo);
+        let mut core = DesCore::new();
+        core.install(&model, &state);
+        (model, state, core)
+    }
+
+    #[test]
+    fn stamping_uses_fixed_slo_or_oracle_multiple() {
+        let (model, state, core) = installed_core(2);
+        let mut trace = vec![Request::at(0, 0, 100.0), Request::at(1, 1, 250.0)];
+        stamp_deadlines(&mut trace, &core, 500.0, 3.0);
+        assert_eq!(trace[0].deadline_ms, 600.0);
+        assert_eq!(trace[1].deadline_ms, 750.0);
+
+        stamp_deadlines(&mut trace, &core, 0.0, 3.0);
+        // oracle = fastest unloaded d0 response over placements
+        let oracle: f64 = model
+            .net
+            .topo
+            .placements()
+            .into_iter()
+            .map(|p| {
+                model.net.path_overhead_ms(0, p)
+                    + model.single_stream_service_ms(0, ModelId(0), p, &state)
+            })
+            .fold(f64::INFINITY, f64::min);
+        assert!((trace[0].deadline_ms - (100.0 + 3.0 * oracle)).abs() < 1e-9);
+        assert_eq!(core.oracle_response_ms(0).to_bits(), oracle.to_bits());
+    }
+
+    #[test]
+    fn admit_all_never_interferes() {
+        let (_, _, core) = installed_core(1);
+        let mut r = Request::at(0, 0, 0.0);
+        r.deadline_ms = 1.0; // hopeless deadline
+        let action = Action { placement: Tier::Local, model: ModelId(0) };
+        let q = AdmitQuery::new(&core, &r, action, 0.0);
+        assert_eq!(AdmitAll.decide(&q), AdmitVerdict::Admit);
+        assert!(q.misses_deadline(action));
+    }
+
+    #[test]
+    fn shed_defers_and_degrade_react_to_deadlines() {
+        let (model, state, core) = installed_core(1);
+        let action = Action { placement: Tier::Local, model: ModelId(0) };
+        let d0_local = model.net.path_overhead_ms(0, Tier::Local)
+            + model.single_stream_service_ms(0, ModelId(0), Tier::Local, &state);
+
+        // generous deadline: everyone admits unchanged
+        let mut roomy = Request::at(0, 0, 0.0);
+        roomy.deadline_ms = d0_local * 2.0;
+        let q = AdmitQuery::new(&core, &roomy, action, 0.0);
+        assert_eq!(DeadlineShed.decide(&q), AdmitVerdict::Admit);
+        assert_eq!(Defer::new(2).decide(&q), AdmitVerdict::Admit);
+        assert_eq!(Degrade.decide(&q), AdmitVerdict::Admit);
+
+        // deadline between d7 and d0: shed rejects, degrade re-maps to a
+        // cheaper variant at the same placement, defer spends its budget
+        // then admits
+        let d7_local = model.net.path_overhead_ms(0, Tier::Local)
+            + model.single_stream_service_ms(0, ModelId(7), Tier::Local, &state);
+        assert!(d7_local < d0_local);
+        let mut tight = Request::at(1, 0, 0.0);
+        tight.deadline_ms = (d7_local + d0_local) / 2.0;
+        let q = AdmitQuery::new(&core, &tight, action, 0.0);
+        assert_eq!(DeadlineShed.decide(&q), AdmitVerdict::Shed);
+        match Degrade.decide(&q) {
+            AdmitVerdict::Degrade(a) => {
+                assert_eq!(a.placement, Placement::Local);
+                assert!(a.model.index() > 0, "must pick a cheaper variant");
+                assert!(!q.misses_deadline(a));
+            }
+            v => panic!("expected a degrade, got {v:?}"),
+        }
+        let mut defer = Defer::new(2);
+        assert_eq!(defer.decide(&q), AdmitVerdict::Defer);
+        assert_eq!(defer.decide(&q), AdmitVerdict::Defer);
+        assert_eq!(defer.decide(&q), AdmitVerdict::Admit, "budget exhausted");
+
+        // hopeless deadline: degrade still serves the cheapest variant
+        let mut hopeless = Request::at(2, 0, 0.0);
+        hopeless.deadline_ms = 0.5;
+        let q = AdmitQuery::new(&core, &hopeless, action, 0.0);
+        assert_eq!(
+            Degrade.decide(&q),
+            AdmitVerdict::Degrade(Action {
+                placement: Placement::Local,
+                model: ModelId((NUM_MODELS - 1) as u8)
+            })
+        );
+    }
+
+    #[test]
+    fn accuracy_order_pins_the_catalog() {
+        // the precomputed degrade order must match the live catalog:
+        // strictly descending top-5 accuracy, covering every model once
+        let t5 = crate::models::top5_table();
+        for w in ACCURACY_ORDER.windows(2) {
+            assert!(t5[w[0]] > t5[w[1]], "order breaks at {w:?}");
+        }
+        let mut all = ACCURACY_ORDER.to_vec();
+        all.sort_unstable();
+        assert_eq!(all, (0..NUM_MODELS).collect::<Vec<_>>());
+        // ...and d7 really is the service-time minimum the fallback uses
+        let (_, _, core) = installed_core(1);
+        let svc = |m: u8| core.service_ms(0, ModelId(m), Tier::Local);
+        for m in 0..(NUM_MODELS - 1) as u8 {
+            assert!(svc(7) < svc(m), "d7 must be fastest (vs d{m})");
+        }
+    }
+
+    #[test]
+    fn prediction_accounts_for_backlog_and_enroute() {
+        let (_, _, mut core) = installed_core(1);
+        let action = Action { placement: Tier::Local, model: ModelId(0) };
+        let r = Request::at(0, 0, 0.0);
+        let mut out = crate::sim::des::DesOutcome::default();
+        core.begin(1, &mut out);
+        let idle = AdmitQuery::new(&core, &r, action, 0.0).predicted_depart_ms(action);
+        // each admitted-but-unprocessed request adds one service quantum
+        let d = crate::types::Decision::uniform(1, action);
+        core.admit(&d, &[Request::at(1, 0, 0.0)]);
+        let one = AdmitQuery::new(&core, &r, action, 0.0).predicted_depart_ms(action);
+        let svc = core.service_ms(0, ModelId(0), Tier::Local);
+        assert!((one - idle - svc).abs() < 1e-9, "idle={idle} one={one} svc={svc}");
+    }
+}

@@ -208,9 +208,12 @@ pub fn schedule_with_drift(
         }
     }
     raw.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    // Deadlines start at +inf (no deadline): admission control stamps them
+    // afterwards (`sim::workload::stamp_fixed_deadlines` or the
+    // SLO-multiplier path in `sim::admission::stamp_deadlines`).
     raw.into_iter()
         .enumerate()
-        .map(|(id, (arrival_ms, device))| Request { id: id as u64, device, arrival_ms })
+        .map(|(id, (arrival_ms, device))| Request::at(id as u64, device, arrival_ms))
         .collect()
 }
 

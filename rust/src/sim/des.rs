@@ -53,6 +53,7 @@ use std::collections::BinaryHeap;
 use std::collections::VecDeque;
 
 use crate::monitor::StateView;
+use crate::sim::admission::{AdmissionPolicy, AdmitQuery, AdmitVerdict};
 use crate::sim::latency::{ResponseModel, RoundCtx};
 use crate::sim::workload::Request;
 use crate::types::{Action, Decision, ModelId, Placement, NUM_MODELS};
@@ -76,6 +77,17 @@ pub struct CompletedRequest {
     pub depart_ms: f64,
     /// depart - arrival: what the user experienced.
     pub response_ms: f64,
+    /// Absolute deadline the request carried (`+inf` when none was
+    /// stamped). `depart_ms <= deadline_ms` is what counts as goodput.
+    pub deadline_ms: f64,
+}
+
+impl CompletedRequest {
+    /// Did this response land within its deadline? (Always true for
+    /// unstamped requests.)
+    pub fn on_time(&self) -> bool {
+        self.depart_ms <= self.deadline_ms
+    }
 }
 
 /// Time-weighted backlog statistics of one compute node over a run:
@@ -109,6 +121,15 @@ pub struct DesOutcome {
     /// device, then each edge, then the cloud) — the congestion signal
     /// the drift experiment and admission control report.
     pub node_backlog: Vec<BacklogStats>,
+    /// Arrivals rejected at ingress by the admission policy (they never
+    /// entered the system; `completed + shed` = offered arrivals when no
+    /// requests are still deferred or in flight).
+    pub shed: usize,
+    /// Defer events: bounded re-queues to a later control tick (one
+    /// request deferred twice counts twice).
+    pub deferrals: usize,
+    /// Requests admitted with a degraded (cheaper) model variant.
+    pub degraded: usize,
 }
 
 impl DesOutcome {
@@ -145,6 +166,27 @@ impl DesOutcome {
     /// dilution by the many idle devices of a large fleet.
     pub fn busiest_mean_backlog(&self) -> f64 {
         self.node_backlog.iter().map(|b| b.mean).fold(0.0, f64::max)
+    }
+
+    /// Completions that landed within their deadline (all of them when no
+    /// deadlines were stamped).
+    pub fn on_time_count(&self) -> usize {
+        self.completed.iter().filter(|c| c.on_time()).count()
+    }
+
+    /// Completions that blew their deadline (0 when no deadlines).
+    pub fn deadline_misses(&self) -> usize {
+        self.completed.len() - self.on_time_count()
+    }
+
+    /// On-time completions per second of virtual time — the goodput the
+    /// overload study compares admission policies on. Equals
+    /// [`DesOutcome::throughput_rps`] when no deadlines were stamped.
+    pub fn goodput_rps(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            return 0.0;
+        }
+        self.on_time_count() as f64 / (self.makespan_ms / 1000.0)
     }
 }
 
@@ -222,12 +264,24 @@ struct InFlight {
     device: usize,
     action: Action,
     arrival_ms: f64,
+    deadline_ms: f64,
     path_ms: f64,
     link_enq_ms: f64,
     link_wait_ms: f64,
     compute_enq_ms: f64,
     queue_ms: f64,
     service_ms: f64,
+}
+
+/// Compute-node index for (device, placement) in the DES layout: each end
+/// device, then each edge, then the cloud. Shared by the event loop and
+/// the admission-prediction probe so the mapping cannot fork.
+fn compute_node_index(users: usize, num_edges: usize, device: usize, p: Placement) -> usize {
+    match p {
+        Placement::Local => device,
+        Placement::Edge(j) => users + j,
+        Placement::Cloud => users + num_edges,
+    }
 }
 
 /// Dense placement slot within a [`DesCore`] table row: Local, then each
@@ -240,6 +294,16 @@ fn place_slot(p: Placement, num_edges: usize) -> usize {
             1 + j
         }
         Placement::Cloud => 1 + num_edges,
+    }
+}
+
+/// Inverse of [`place_slot`]: the placement a dense slot denotes. Kept
+/// adjacent so the canonical order cannot fork between the two.
+fn slot_place(slot: usize, num_edges: usize) -> Placement {
+    match slot {
+        0 => Placement::Local,
+        j if j <= num_edges => Placement::Edge(j - 1),
+        _ => Placement::Cloud,
     }
 }
 
@@ -294,6 +358,16 @@ pub struct DesCore {
     bl_area: Vec<f64>,
     /// Virtual time of each node's last backlog change (integral marker).
     bl_mark: Vec<f64>,
+    /// Per-compute-node count of requests admitted but not yet arrived at
+    /// the node's queue (their Join event is still in the heap). Feeds the
+    /// admission predictor — an admission batch must see its *own* earlier
+    /// admissions as committed load, not just the processed backlog.
+    enroute: Vec<u32>,
+    /// Per-ingress-link count of admitted offloaded requests that have not
+    /// yet reached the link — the link-side companion of `enroute`, so the
+    /// admission predictor can price the uplink serialization a batch of
+    /// simultaneous offloads will suffer.
+    enroute_link: Vec<u32>,
     /// Record per-event virtual times into `DesOutcome::event_times`
     /// (monotonicity witness). Off by default: it is test-only
     /// instrumentation that costs a push per event on the hot path.
@@ -328,6 +402,8 @@ impl DesCore {
             bl_max: Vec::new(),
             bl_area: Vec::new(),
             bl_mark: Vec::new(),
+            enroute: Vec::new(),
+            enroute_link: Vec::new(),
             collect_event_times: false,
         }
     }
@@ -355,6 +431,10 @@ impl DesCore {
         self.nodes.push(ServerQueue::new(topo.cloud.vcpus));
         self.links.clear();
         self.links.extend((0..self.num_edges).map(|_| ServerQueue::new(1)));
+        self.enroute.clear();
+        self.enroute.resize(self.nodes.len(), 0);
+        self.enroute_link.clear();
+        self.enroute_link.resize(self.links.len(), 0);
     }
 
     /// Recompute the service/path tables for a new background state —
@@ -524,18 +604,102 @@ impl DesCore {
         self.bl_area.resize(n, 0.0);
         self.bl_mark.clear();
         self.bl_mark.resize(n, 0.0);
+        self.enroute.clear();
+        self.enroute.resize(n, 0);
+        self.enroute_link.clear();
+        self.enroute_link.resize(self.links.len(), 0);
         out.completed.clear();
         out.event_times.clear();
         out.node_backlog.clear();
         out.makespan_ms = 0.0;
         out.horizon_ms = 0.0;
+        out.shed = 0;
+        out.deferrals = 0;
+        out.degraded = 0;
     }
 
     /// Admit a time-ordered batch of arrivals, each routed by `decision`
     /// (the control plane's *current* policy — requests admitted in an
     /// earlier epoch keep the action that launched them). Each arrival
     /// materializes at its queue-join time after the fixed path overhead.
+    ///
+    /// This is the unconditional-ingress path
+    /// ([`AdmitAll`](crate::sim::admission::AdmitAll) semantics, zero
+    /// per-arrival overhead); [`DesCore::admit_policed`] is the same
+    /// enqueue behind a pluggable [`AdmissionPolicy`].
     pub fn admit(&mut self, decision: &Decision, arrivals: &[Request]) {
+        self.check_admit_batch(decision, arrivals);
+        self.flights.reserve(arrivals.len());
+        for r in arrivals {
+            // floor -inf: max(arrival, -inf) is bitwise the arrival, so
+            // this is exactly the historical enqueue
+            self.admit_request(r, decision.0[r.device], f64::NEG_INFINITY);
+        }
+    }
+
+    /// Admit a time-ordered batch through an [`AdmissionPolicy`].
+    ///
+    /// Each arrival is judged *at its own effective arrival time*
+    /// (`max(arrival, floor_ms)`): the virtual clock is advanced to that
+    /// instant first, so the predicted-completion probe sees the live
+    /// queues as they actually stand when the request shows up — not a
+    /// snapshot frozen at the batch's control tick. Verdicts are therefore
+    /// independent of how long the control period is (a whole-horizon
+    /// batch judges exactly like per-tick batches); the `enroute` counters
+    /// cover only genuinely simultaneous admissions. Admitted (or
+    /// degraded) requests enqueue exactly as [`DesCore::admit`] would,
+    /// shed ones are only counted, deferred ones are pushed onto
+    /// `deferred` for the caller to re-present at its next tick (where
+    /// `floor_ms` = the tick re-judges them at that instant). Counters
+    /// accumulate on `out`.
+    ///
+    /// Policies return verdicts only — no RNG, no heap access — and the
+    /// DES is event-driven, so interleaving the clock with admissions
+    /// processes the identical event sequence (same pops, same noise draw
+    /// order): with [`AdmitAll`] this is bit-identical to
+    /// [`DesCore::admit`] + `run_until` (the property suite pins it).
+    ///
+    /// [`AdmitAll`]: crate::sim::admission::AdmitAll
+    pub fn admit_policed(
+        &mut self,
+        decision: &Decision,
+        arrivals: &[Request],
+        floor_ms: f64,
+        policy: &mut dyn AdmissionPolicy,
+        deferred: &mut Vec<Request>,
+        out: &mut DesOutcome,
+    ) {
+        self.check_admit_batch(decision, arrivals);
+        for r in arrivals {
+            let at = r.arrival_ms.max(floor_ms);
+            // advance strictly *before* the judgment instant: events tied
+            // exactly at `at` keep their heap order against this
+            // arrival's own join, so AdmitAll stays bitwise batch-equal
+            // even at exact ties
+            self.run_before(at, out);
+            let action = decision.0[r.device];
+            let verdict = policy.decide(&AdmitQuery::new(self, r, action, at));
+            match verdict {
+                AdmitVerdict::Admit => self.admit_request(r, action, floor_ms),
+                AdmitVerdict::Degrade(a) => {
+                    assert_eq!(
+                        a.placement, action.placement,
+                        "degrade may remap the model, not the placement"
+                    );
+                    self.admit_request(r, a, floor_ms);
+                    out.degraded += 1;
+                }
+                AdmitVerdict::Shed => out.shed += 1,
+                AdmitVerdict::Defer => {
+                    deferred.push(r.clone());
+                    out.deferrals += 1;
+                }
+            }
+        }
+    }
+
+    /// Shared batch preconditions of both admit paths.
+    fn check_admit_batch(&self, decision: &Decision, arrivals: &[Request]) {
         assert!(self.users > 0, "DesCore::install must precede admit");
         assert_eq!(decision.n_users(), self.users, "decision arity vs installed topology");
         assert!(
@@ -549,43 +713,52 @@ impl DesCore {
             arrivals.windows(2).all(|w| w[0].arrival_ms <= w[1].arrival_ms),
             "trace must be time-ordered"
         );
+    }
+
+    /// Enqueue one admitted request under `action`. `floor_ms` lower-bounds
+    /// the effective arrival (a deferred request re-admitted at a later
+    /// tick joins from that tick, not its original past); fresh arrivals
+    /// always satisfy `arrival >= floor`, so the floor is bit-transparent
+    /// for them.
+    fn admit_request(&mut self, r: &Request, action: Action, floor_ms: f64) {
         let num_edges = self.num_edges;
         let num_places = self.num_places;
         let ingress_base = self.users + num_edges + 1;
-        self.flights.reserve(arrivals.len());
-        for r in arrivals {
-            let action = decision.0[r.device];
-            let pslot = place_slot(action.placement, num_edges);
-            let path_ms = self.path[r.device * num_places + pslot];
-            let idx = self.flights.len();
-            self.flights.push(InFlight {
-                id: r.id,
-                device: r.device,
-                action,
-                arrival_ms: r.arrival_ms,
-                path_ms,
-                link_enq_ms: 0.0,
-                link_wait_ms: 0.0,
-                compute_enq_ms: 0.0,
-                queue_ms: 0.0,
-                service_ms: 0.0,
-            });
-            let target = match self.ingress[r.device * num_places + pslot] {
-                0 => r.device, // local execution: the device's own node
-                link_plus_1 => ingress_base + (link_plus_1 - 1),
-            };
-            // Arrival joins carry tie class 0 and the request id, so the
-            // pop order at equal times is a property of the trace alone —
-            // identical however the trace is sliced into admits. Ids must
-            // therefore be unique and trace-ordered across all admits of
-            // one run (the canonical `arrivals::schedule` traces are).
-            self.heap.push(Event {
-                time: r.arrival_ms + path_ms,
-                prio: 0,
-                seq: r.id,
-                kind: EventKind::Join { node: target, req: idx },
-            });
-        }
+        let pslot = place_slot(action.placement, num_edges);
+        let path_ms = self.path[r.device * num_places + pslot];
+        let idx = self.flights.len();
+        self.flights.push(InFlight {
+            id: r.id,
+            device: r.device,
+            action,
+            arrival_ms: r.arrival_ms,
+            deadline_ms: r.deadline_ms,
+            path_ms,
+            link_enq_ms: 0.0,
+            link_wait_ms: 0.0,
+            compute_enq_ms: 0.0,
+            queue_ms: 0.0,
+            service_ms: 0.0,
+        });
+        self.enroute[compute_node_index(self.users, num_edges, r.device, action.placement)] += 1;
+        let target = match self.ingress[r.device * num_places + pslot] {
+            0 => r.device, // local execution: the device's own node
+            link_plus_1 => {
+                self.enroute_link[link_plus_1 - 1] += 1;
+                ingress_base + (link_plus_1 - 1)
+            }
+        };
+        // Arrival joins carry tie class 0 and the request id, so the
+        // pop order at equal times is a property of the trace alone —
+        // identical however the trace is sliced into admits. Ids must
+        // therefore be unique and trace-ordered across all admits of
+        // one run (the canonical `arrivals::schedule` traces are).
+        self.heap.push(Event {
+            time: r.arrival_ms.max(floor_ms) + path_ms,
+            prio: 0,
+            seq: r.id,
+            kind: EventKind::Join { node: target, req: idx },
+        });
     }
 
     /// Account a backlog change of compute node `node` at time `t`:
@@ -606,19 +779,33 @@ impl DesCore {
     /// observe the live queues, swap the decision table and resume —
     /// requests in flight are untouched.
     pub fn run_until(&mut self, limit_ms: f64, out: &mut DesOutcome) {
+        self.run_events::<true>(limit_ms, out)
+    }
+
+    /// Process events strictly *before* `limit_ms` — the admission
+    /// interleave's bound, so events tied exactly at an arrival's
+    /// judgment instant are ordered against its join by the heap
+    /// comparator exactly as batch admission would.
+    fn run_before(&mut self, limit_ms: f64, out: &mut DesOutcome) {
+        self.run_events::<false>(limit_ms, out)
+    }
+
+    /// The event loop behind [`DesCore::run_until`] (INCLUSIVE = true)
+    /// and [`DesCore::run_before`] (false); the bound test monomorphizes
+    /// away.
+    fn run_events<const INCLUSIVE: bool>(&mut self, limit_ms: f64, out: &mut DesOutcome) {
         let users = self.users;
         let num_edges = self.num_edges;
         let num_places = self.num_places;
         let ingress_base = users + num_edges + 1;
-        let compute_node = |device: usize, p: Placement| match p {
-            Placement::Local => device,
-            Placement::Edge(j) => users + j,
-            Placement::Cloud => users + num_edges,
-        };
+        let compute_node =
+            |device: usize, p: Placement| compute_node_index(users, num_edges, device, p);
         let sigma = self.sigma;
 
         while let Some(&ev) = self.heap.peek() {
-            if ev.time > limit_ms {
+            let past_limit =
+                if INCLUSIVE { ev.time > limit_ms } else { ev.time >= limit_ms };
+            if past_limit {
                 break;
             }
             self.heap.pop();
@@ -630,6 +817,8 @@ impl DesCore {
             match ev.kind {
                 EventKind::Join { node, req } if node >= ingress_base => {
                     let link_id = node - ingress_base;
+                    // the upload reached its link: committed -> queued
+                    self.enroute_link[link_id] -= 1;
                     self.flights[req].link_enq_ms = ev.time;
                     let link = &mut self.links[link_id];
                     if link.busy < link.servers {
@@ -684,6 +873,9 @@ impl DesCore {
                 }
                 EventKind::Join { node, req } => {
                     self.backlog_shift(node, ev.time, 1);
+                    // the admitted request reached its compute queue: it is
+                    // now part of the backlog, not the en-route count
+                    self.enroute[node] -= 1;
                     self.flights[req].compute_enq_ms = ev.time;
                     let q = &mut self.nodes[node];
                     if q.busy < q.servers {
@@ -725,6 +917,7 @@ impl DesCore {
                             service_ms: f.service_ms,
                             depart_ms: ev.time,
                             response_ms: ev.time - f.arrival_ms,
+                            deadline_ms: f.deadline_ms,
                         });
                     }
                     let q = &mut self.nodes[node];
@@ -789,6 +982,147 @@ impl DesCore {
     pub fn utilization(&self, node: usize) -> f64 {
         let q = &self.nodes[node];
         ((q.busy + q.waiting.len()) as f64 / q.servers as f64).min(1.0)
+    }
+
+    /// Parallel servers (vCPUs) of a compute node.
+    pub fn node_servers(&self, node: usize) -> usize {
+        self.nodes[node].servers
+    }
+
+    /// Compute-node index a request from `device` executing at `p` runs on
+    /// (the `node` argument of [`DesCore::backlog`] etc.).
+    pub fn compute_node(&self, device: usize, p: Placement) -> usize {
+        compute_node_index(self.users, self.num_edges, device, p)
+    }
+
+    /// Requests admitted whose Join event has not yet reached `node` —
+    /// committed load the processed backlog cannot see. The admission
+    /// predictor sums this with [`DesCore::backlog`] so a batch of
+    /// admissions at one control tick prices its own earlier members.
+    pub fn enroute_count(&self, node: usize) -> usize {
+        self.enroute[node] as usize
+    }
+
+    /// Uploads committed to edge `link`'s ingress: currently holding it,
+    /// waiting in its queue, or admitted but not yet arrived. Each delays
+    /// a newcomer by one [`DesCore::link_hold_ms`] slot — the admission
+    /// predictor's uplink-serialization estimate.
+    pub fn link_load(&self, link: usize) -> usize {
+        let l = &self.links[link];
+        l.busy + l.waiting.len() + self.enroute_link[link] as usize
+    }
+
+    /// Which edge-ingress link a request from `device` executing at `p`
+    /// traverses, if any (memoized [`crate::types::Topology::ingress_edge`]).
+    pub fn ingress_link(&self, device: usize, p: Placement) -> Option<usize> {
+        match self.ingress[device * self.num_places + place_slot(p, self.num_edges)] {
+            0 => None,
+            link_plus_1 => Some(link_plus_1 - 1),
+        }
+    }
+
+    /// The per-upload serialization hold of an edge-ingress link
+    /// (calibration `link_queue_ms`).
+    pub fn link_hold_ms(&self) -> f64 {
+        self.link_queue_ms
+    }
+
+    /// Oracle latency of `device` under the installed tables: the fastest
+    /// *unloaded* full-accuracy (d0) response any placement could serve it
+    /// — min over placements of path overhead + single-stream service.
+    /// The `[admission] slo_multiplier` deadline is a multiple of this.
+    pub fn oracle_response_ms(&self, device: usize) -> f64 {
+        assert!(self.users > 0, "DesCore::install must precede oracle_response_ms");
+        let d0 = crate::models::MOST_ACCURATE;
+        let mut best = f64::INFINITY;
+        for slot in 0..self.num_places {
+            let p = slot_place(slot, self.num_edges);
+            let t = self.path_ms(device, p) + self.service_ms(device, d0, p);
+            best = best.min(t);
+        }
+        best
+    }
+
+    /// Resolve outstanding deferrals when no later control tick exists:
+    /// one re-judgment at `floor_ms` (normally the horizon) against the
+    /// live queues — the last chance for a drained backlog to admit them
+    /// cleanly — then any straggler the policy would defer *again* is
+    /// forced in, uncounted: with no tick to defer to, a "defer" verdict
+    /// re-queues nothing, and re-judging at the same frozen instant until
+    /// a budget burns out would only inflate the deferral counter with
+    /// phantom re-queues. Shared by [`DesCore::run_admitted`] and the
+    /// orchestrator's online loop so the end-of-trace drain convention
+    /// cannot fork.
+    pub fn drain_deferred(
+        &mut self,
+        decision: &Decision,
+        floor_ms: f64,
+        policy: &mut dyn AdmissionPolicy,
+        deferred: &mut Vec<Request>,
+        out: &mut DesOutcome,
+    ) {
+        if deferred.is_empty() {
+            return;
+        }
+        let batch = std::mem::take(deferred);
+        self.admit_policed(decision, &batch, floor_ms, policy, deferred, out);
+        if !deferred.is_empty() {
+            out.deferrals -= deferred.len();
+            let batch = std::mem::take(deferred);
+            let mut all = crate::sim::admission::AdmitAll;
+            self.admit_policed(decision, &batch, floor_ms, &mut all, deferred, out);
+        }
+    }
+
+    /// Run one open-loop trace through an [`AdmissionPolicy`], pausing the
+    /// clock every `period_ms` like [`DesCore::run_sliced`]: arrivals
+    /// strictly before each tick are judged (and admitted/shed/degraded)
+    /// at the previous tick, deferred requests are re-presented at the
+    /// next tick, and outstanding deferrals are resolved at the horizon
+    /// before the final drain ([`DesCore::drain_deferred`]).
+    ///
+    /// With [`AdmitAll`](crate::sim::admission::AdmitAll) this is bitwise
+    /// [`DesCore::run_sliced`] — and therefore bitwise
+    /// [`DesCore::run_open_loop_into`] — which is the property-pinned
+    /// default-path contract of the admission refactor.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_admitted(
+        &mut self,
+        decision: &Decision,
+        trace: &[Request],
+        horizon_ms: f64,
+        period_ms: f64,
+        policy: &mut dyn AdmissionPolicy,
+        noise_seed: u64,
+        out: &mut DesOutcome,
+    ) {
+        assert!(horizon_ms > 0.0, "empty horizon");
+        assert!(period_ms > 0.0, "non-positive control period");
+        self.begin(noise_seed, out);
+        policy.reset();
+        let mut deferred: Vec<Request> = Vec::new();
+        let mut t = 0.0;
+        let mut i = 0usize;
+        while t < horizon_ms {
+            let end = if t + period_ms >= horizon_ms { horizon_ms } else { t + period_ms };
+            // re-present what the last tick deferred, then the fresh slice
+            if !deferred.is_empty() {
+                let batch = std::mem::take(&mut deferred);
+                self.admit_policed(decision, &batch, t, policy, &mut deferred, out);
+            }
+            let j = i + trace[i..].partition_point(|r| r.arrival_ms < end);
+            self.admit_policed(decision, &trace[i..j], t, policy, &mut deferred, out);
+            i = j;
+            if end >= horizon_ms {
+                self.drain_deferred(decision, horizon_ms, policy, &mut deferred, out);
+                self.run_until(f64::INFINITY, out);
+            } else {
+                self.run_until(end, out);
+            }
+            t = end;
+        }
+        self.finalize(out);
+        out.horizon_ms = horizon_ms;
     }
 }
 
@@ -993,7 +1327,7 @@ mod tests {
     fn idle_single_request_matches_service_plus_path() {
         let users = 1;
         let (_, state) = setup(users);
-        let trace = vec![Request { id: 0, device: 0, arrival_ms: 10.0 }];
+        let trace = vec![Request::at(0, 0, 10.0)];
         let d = uniform(users, Tier::Cloud, 0);
         let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
         let out = run_open_loop(&model, &state, &d, &trace, 100.0, 1);
@@ -1011,7 +1345,7 @@ mod tests {
         let (_, state) = setup(users);
         let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
         let trace: Vec<Request> =
-            (0..users).map(|d| Request { id: d as u64, device: d, arrival_ms: 0.0 }).collect();
+            (0..users).map(|d| Request::at(d as u64, d, 0.0)).collect();
         let d = uniform(users, Tier::Cloud, 7);
         let out = run_open_loop(&model, &state, &d, &trace, 1.0, 2);
         let mut waits: Vec<f64> = out.completed.iter().map(|c| c.link_wait_ms).collect();
@@ -1028,7 +1362,7 @@ mod tests {
         let (model, state) = setup(users);
         // d0 local takes ~440 ms; arrivals every 100 ms pile up.
         let trace: Vec<Request> = (0..10)
-            .map(|i| Request { id: i, device: 0, arrival_ms: i as f64 * 100.0 })
+            .map(|i| Request::at(i, 0, i as f64 * 100.0))
             .collect();
         let d = uniform(users, Tier::Local, 0);
         let out = run_open_loop(&model, &state, &d, &trace, 1000.0, 3);
@@ -1072,7 +1406,7 @@ mod tests {
         let cal = Calibration { link_queue_ms: 0.0, ..quiet_cal() };
         let model = ResponseModel::new(Network::new(Scenario::exp_a(users), cal));
         let trace: Vec<Request> =
-            (0..users).map(|d| Request { id: d as u64, device: d, arrival_ms: 0.0 }).collect();
+            (0..users).map(|d| Request::at(d as u64, d, 0.0)).collect();
         let d = uniform(users, Tier::Edge(0), 0);
         let out = run_open_loop(&model, &state, &d, &trace, 1.0, 4);
         let svc = model.single_stream_service_ms(0, ModelId(0), Tier::Edge(0), &state);
@@ -1092,7 +1426,7 @@ mod tests {
         let model = ResponseModel::new(Network::with_edges(Scenario::exp_a(users), cal, 2));
         let state = TopoState::idle(&model.net.topo);
         let trace: Vec<Request> =
-            (0..users).map(|d| Request { id: d as u64, device: d, arrival_ms: 0.0 }).collect();
+            (0..users).map(|d| Request::at(d as u64, d, 0.0)).collect();
         let d = Decision(
             (0..users)
                 .map(|i| Action { placement: Placement::Edge(i % 2), model: ModelId(7) })
@@ -1229,7 +1563,7 @@ mod tests {
         let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
         let (_, state) = setup(users);
         let trace: Vec<Request> =
-            (0..users).map(|d| Request { id: d as u64, device: d, arrival_ms: 0.0 }).collect();
+            (0..users).map(|d| Request::at(d as u64, d, 0.0)).collect();
         let d = uniform(users, Tier::Edge(0), 0);
         let out = run_open_loop(&model, &state, &d, &trace, 1.0, 7);
         let svc = model.single_stream_service_ms(0, ModelId(0), Tier::Edge(0), &state);
@@ -1345,12 +1679,12 @@ mod tests {
         core.install(&model, &idle);
         let mut out = DesOutcome::default();
         core.begin(7, &mut out);
-        core.admit(&d, &[Request { id: 0, device: 0, arrival_ms: 0.0 }]);
+        core.admit(&d, &[Request::at(0, 0, 0.0)]);
         // pause mid-service: request 0 started under the idle table
         core.run_until(path + 1.0, &mut out);
         assert_eq!(core.backlog(0), 1, "request 0 must be in service at the pause");
         core.retable(&model, &busy);
-        core.admit(&d, &[Request { id: 1, device: 0, arrival_ms: 2_000.0 }]);
+        core.admit(&d, &[Request::at(1, 0, 2_000.0)]);
         core.run_until(f64::INFINITY, &mut out);
         core.finalize(&mut out);
 
@@ -1368,7 +1702,7 @@ mod tests {
         let users = 1;
         let (model, state) = setup(users);
         let trace: Vec<Request> = (0..10)
-            .map(|i| Request { id: i, device: 0, arrival_ms: i as f64 * 100.0 })
+            .map(|i| Request::at(i, 0, i as f64 * 100.0))
             .collect();
         let d = uniform(users, Tier::Local, 0);
         let out = run_open_loop(&model, &state, &d, &trace, 1000.0, 3);
@@ -1381,10 +1715,138 @@ mod tests {
         assert_eq!(out.peak_backlog(), out.node_backlog[0].max);
         assert!(out.busiest_mean_backlog() > 1.0);
 
-        let light = vec![Request { id: 0, device: 0, arrival_ms: 0.0 }];
+        let light = vec![Request::at(0, 0, 0.0)];
         let out2 = run_open_loop(&model, &state, &d, &light, 1000.0, 3);
         assert_eq!(out2.peak_backlog(), 1);
         assert!(out2.busiest_mean_backlog() < 1.0);
+    }
+
+    #[test]
+    fn run_admitted_with_admit_all_matches_pr4_engine_bitwise() {
+        // The tentpole contract: the policed ingress with AdmitAll —
+        // deadlines stamped and all — reproduces the pre-admission engine
+        // byte for byte (same event order, same noise draw order, zero
+        // extra draws), for any slicing of the trace.
+        use crate::sim::admission::{stamp_deadlines, AdmitAll};
+        let users = 5;
+        let (model, state) = setup(users);
+        let d = Decision(
+            (0..users)
+                .map(|i| Action {
+                    placement: Tier::from_index(i % 3),
+                    model: ModelId((i % 8) as u8),
+                })
+                .collect(),
+        );
+        let horizon = 12_000.0;
+        let trace = schedule(ArrivalProcess::Poisson { rate_per_s: 3.0 }, users, horizon, 41);
+        let mono = run_open_loop(&model, &state, &d, &trace, horizon, 51);
+
+        let mut core = DesCore::new();
+        core.install(&model, &state);
+        let mut stamped = trace.clone();
+        stamp_deadlines(&mut stamped, &core, 0.0, 3.0);
+        let mut out = DesOutcome::default();
+        core.run_admitted(&d, &stamped, horizon, 2_500.0, &mut AdmitAll, 51, &mut out);
+        assert_eq!(out.completed.len(), mono.completed.len());
+        for (a, b) in out.completed.iter().zip(&mono.completed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.response_ms.to_bits(), b.response_ms.to_bits());
+            assert_eq!(a.depart_ms.to_bits(), b.depart_ms.to_bits());
+            assert_eq!(a.service_ms.to_bits(), b.service_ms.to_bits());
+        }
+        assert_eq!(out.makespan_ms.to_bits(), mono.makespan_ms.to_bits());
+        assert_eq!((out.shed, out.deferrals, out.degraded), (0, 0, 0));
+        // deadlines ride along without perturbing physics; miss accounting
+        // is live
+        assert!(out.completed.iter().all(|c| c.deadline_ms.is_finite()));
+        assert_eq!(out.deadline_misses() + out.on_time_count(), out.completed.len());
+    }
+
+    #[test]
+    fn deadline_shed_keeps_admitted_tail_inside_the_slo() {
+        // Saturate one single-vCPU device 3x past capacity with noise off:
+        // the prediction is exact (homogeneous per-node service), so every
+        // admitted request departs within its deadline and the rest shed.
+        use crate::sim::admission::{stamp_deadlines, AdmitAll, DeadlineShed};
+        let users = 1;
+        let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
+        let state = TopoState::idle(&model.net.topo);
+        let d = uniform(users, Tier::Local, 0);
+        let horizon = 20_000.0;
+        // ~2.3 req/s capacity; offer 7 req/s
+        let trace = schedule(ArrivalProcess::Poisson { rate_per_s: 7.0 }, users, horizon, 9);
+        let mut core = DesCore::new();
+        core.install(&model, &state);
+        let mut stamped = trace.clone();
+        stamp_deadlines(&mut stamped, &core, 0.0, 3.0);
+
+        let mut shed_out = DesOutcome::default();
+        core.run_admitted(&d, &stamped, horizon, 1_000.0, &mut DeadlineShed, 3, &mut shed_out);
+        assert!(shed_out.shed > 0, "3x overload must shed");
+        assert_eq!(shed_out.completed.len() + shed_out.shed, stamped.len());
+        assert_eq!(shed_out.deadline_misses(), 0, "exact prediction: no admitted miss");
+
+        let mut all_out = DesOutcome::default();
+        core.run_admitted(&d, &stamped, horizon, 1_000.0, &mut AdmitAll, 3, &mut all_out);
+        assert_eq!(all_out.completed.len(), stamped.len());
+        assert!(all_out.deadline_misses() > all_out.on_time_count());
+        assert!(
+            shed_out.goodput_rps() > all_out.goodput_rps(),
+            "shed goodput {} must beat admit-all {}",
+            shed_out.goodput_rps(),
+            all_out.goodput_rps()
+        );
+    }
+
+    #[test]
+    fn defer_requeues_to_later_ticks_and_degrade_remaps_models() {
+        use crate::sim::admission::{Defer, Degrade};
+        let users = 1;
+        let model = ResponseModel::new(Network::new(Scenario::exp_a(users), quiet_cal()));
+        let state = TopoState::idle(&model.net.topo);
+        let d = uniform(users, Tier::Local, 0);
+        let svc = model.single_stream_service_ms(0, ModelId(0), Tier::Local, &state);
+        // a burst of 5 simultaneous requests, each allowed ~2.2 services
+        let mut trace: Vec<Request> =
+            (0..5).map(|i| Request::at(i, 0, 0.0)).collect();
+        for r in trace.iter_mut() {
+            r.deadline_ms = 2.2 * svc;
+        }
+        let mut core = DesCore::new();
+        core.install(&model, &state);
+
+        let mut defer_policy = Defer::new(2);
+        let mut defer_out = DesOutcome::default();
+        core.run_admitted(&d, &trace, 4.0 * svc, svc, &mut defer_policy, 1, &mut defer_out);
+        // deferral never drops: everything completes, some of it deferred
+        assert_eq!(defer_out.completed.len(), trace.len());
+        assert_eq!(defer_out.shed, 0);
+        assert!(defer_out.deferrals > 0, "burst past the deadline must defer");
+        // one policy instance serves many runs identically: per-run state
+        // (spent defer budgets) resets at the start of each trace
+        let mut again = DesOutcome::default();
+        core.run_admitted(&d, &trace, 4.0 * svc, svc, &mut defer_policy, 1, &mut again);
+        assert_eq!(again.deferrals, defer_out.deferrals);
+        assert_eq!(again.completed.len(), defer_out.completed.len());
+        for (a, b) in again.completed.iter().zip(&defer_out.completed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.response_ms.to_bits(), b.response_ms.to_bits());
+        }
+
+        let mut deg_out = DesOutcome::default();
+        core.run_admitted(&d, &trace, 4.0 * svc, svc, &mut Degrade, 1, &mut deg_out);
+        assert_eq!(deg_out.completed.len(), trace.len());
+        assert_eq!(deg_out.shed, 0);
+        assert!(deg_out.degraded > 0, "burst must trigger degrades");
+        assert!(
+            deg_out.completed.iter().any(|c| c.action.model.index() > 0),
+            "a degraded request must run a cheaper variant"
+        );
+        // the accuracy-time trade-off pays off: cheaper variants drain the
+        // same burst sooner, so goodput-per-virtual-second comes out ahead
+        assert!(deg_out.makespan_ms < defer_out.makespan_ms);
+        assert!(deg_out.goodput_rps() > defer_out.goodput_rps());
     }
 
     #[test]

@@ -1,10 +1,13 @@
 //! Simulation substrate: the calibrated response-time model, the
 //! discrete-event simulation core (virtual-time event queue + per-node
-//! vCPU queues, pausable at control ticks), pluggable arrival processes,
-//! piecewise drift schedules (rate bursts + link-cond changes mid-trace),
-//! the synchronous-round RL environment (a thin adapter over the DES
-//! core), and workload generators for the measured-mode serving path.
+//! vCPU queues, pausable at control ticks), pluggable ingress admission
+//! control (shed / defer / degrade over per-request deadlines), pluggable
+//! arrival processes, piecewise drift schedules (rate bursts + link-cond
+//! changes mid-trace), the synchronous-round RL environment (a thin
+//! adapter over the DES core), and workload generators for the
+//! measured-mode serving path.
 
+pub mod admission;
 pub mod arrivals;
 pub mod des;
 pub mod drift;
@@ -12,6 +15,9 @@ pub mod env;
 pub mod latency;
 pub mod workload;
 
+pub use admission::{
+    AdmissionPolicy, AdmitAll, AdmitQuery, AdmitVerdict, DeadlineShed, Defer, Degrade,
+};
 pub use arrivals::ArrivalProcess;
 pub use des::{BacklogStats, CompletedRequest, DesCore, DesOutcome, SyncScratch};
 pub use drift::{DriftSchedule, DriftSegment};

@@ -12,6 +12,32 @@ pub struct Request {
     pub device: DeviceId,
     /// Arrival time in ms since workload start.
     pub arrival_ms: f64,
+    /// Absolute deadline (virtual-time ms): the response is useful — counts
+    /// towards goodput — only if the request departs by this time. Every
+    /// generator stamps `+inf` (no deadline); an `[admission]` config
+    /// tightens it per request (fixed SLO via [`stamp_fixed_deadlines`], or
+    /// an SLO multiplier over the oracle latency via
+    /// `sim::admission::stamp_deadlines`).
+    pub deadline_ms: f64,
+}
+
+impl Request {
+    /// A request with no deadline (`deadline_ms = +inf`) — the
+    /// pre-admission default every generator produces.
+    pub fn at(id: u64, device: DeviceId, arrival_ms: f64) -> Request {
+        Request { id, device, arrival_ms, deadline_ms: f64::INFINITY }
+    }
+}
+
+/// Stamp a fixed per-request SLO: each request must depart within `slo_ms`
+/// of its arrival. The `[admission] deadline_ms` path (the SLO-multiplier
+/// alternative needs the calibrated service tables and lives in
+/// `sim::admission::stamp_deadlines`).
+pub fn stamp_fixed_deadlines(trace: &mut [Request], slo_ms: f64) {
+    assert!(slo_ms.is_finite() && slo_ms > 0.0, "non-positive SLO");
+    for r in trace {
+        r.deadline_ms = r.arrival_ms + slo_ms;
+    }
 }
 
 /// Arrival process per device.
@@ -53,7 +79,7 @@ impl WorkloadGen {
                 if t >= horizon_ms {
                     break;
                 }
-                out.push(Request { id: self.next_id, device, arrival_ms: t });
+                out.push(Request::at(self.next_id, device, t));
                 self.next_id += 1;
             }
         }
@@ -68,7 +94,7 @@ impl WorkloadGen {
             .map(|device| {
                 let id = self.next_id;
                 self.next_id += 1;
-                Request { id, device, arrival_ms: at_ms }
+                Request::at(id, device, at_ms)
             })
             .collect()
     }
@@ -124,6 +150,24 @@ mod tests {
         assert!(round.iter().all(|r| r.arrival_ms == 42.0));
         let round2 = g.sync_round(43.0);
         assert!(round2[0].id > round[4].id);
+    }
+
+    #[test]
+    fn generators_stamp_no_deadline_and_fixed_slo_stamps_one() {
+        let mut g = WorkloadGen::new(Arrival::Periodic { period_ms: 100.0 }, 2, 1);
+        let mut reqs = g.generate(500.0);
+        assert!(reqs.iter().all(|r| r.deadline_ms == f64::INFINITY));
+        stamp_fixed_deadlines(&mut reqs, 250.0);
+        for r in &reqs {
+            assert_eq!(r.deadline_ms, r.arrival_ms + 250.0);
+        }
+        assert_eq!(Request::at(7, 1, 30.0).deadline_ms, f64::INFINITY);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive SLO")]
+    fn fixed_slo_must_be_positive() {
+        stamp_fixed_deadlines(&mut [Request::at(0, 0, 0.0)], 0.0);
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Integration tests of the deadline-aware admission lifecycle through
+//! the orchestrator's control plane: the inactive-default bit-exactness
+//! contract, the DeadlineShed goodput guarantee under a 3x overload, and
+//! the reward-visible shed cost of the online loop.
+
+use eeco::agent::baseline::FixedAgent;
+use eeco::orchestrator::{AdmissionCfg, ControlCfg, Orchestrator};
+use eeco::prelude::*;
+use eeco::sim::{ArrivalProcess, DriftSchedule, Env};
+
+fn quiet_env(users: usize, seed: u64) -> Env {
+    // noise off: the admission predictions are then exact for the
+    // homogeneous local-d0 mix and every comparison is deterministic
+    let cal = Calibration { noise_sigma: 0.0, ..Calibration::default() };
+    Env::new(Scenario::exp_a(users), cal, AccuracyConstraint::Max, seed)
+}
+
+fn local_orch(users: usize, seed: u64) -> Orchestrator {
+    let mut o =
+        Orchestrator::new(quiet_env(users, seed), Box::new(FixedAgent::new(Tier::Local, users)));
+    o.env.freeze();
+    o.env.reset_load();
+    o
+}
+
+/// The acceptance contract: under a 3x overload (the single-vCPU local-d0
+/// placement saturates near ~2.3 req/s/device; we offer 7), DeadlineShed
+/// must keep goodput at least AdmitAll's — in practice several times it,
+/// because AdmitAll's unbounded backlog makes almost every completion
+/// late while stretching the makespan.
+#[test]
+fn deadline_shed_goodput_beats_admit_all_under_3x_overload() {
+    let users = 4;
+    let horizon = 20_000.0;
+    let seed = 17;
+    let process = ArrivalProcess::Poisson { rate_per_s: 7.0 };
+    let ctl = ControlCfg { period_ms: 1_000.0, online_learning: false };
+    let none = DriftSchedule::none();
+
+    let run = |policy: &str| {
+        let admission = AdmissionCfg {
+            policy: policy.into(),
+            explicit: true,
+            ..AdmissionCfg::default()
+        };
+        local_orch(users, 7).evaluate_admission(process, horizon, seed, &ctl, &none, &admission)
+    };
+
+    let all = run("admit_all");
+    let shed = run("deadline_shed");
+    // same offered trace; everything is accounted for
+    assert_eq!(all.metrics.requests, shed.metrics.requests + shed.metrics.shed);
+    assert_eq!(all.metrics.shed, 0);
+    assert!(shed.metrics.shed > 0, "3x overload must shed");
+
+    // AdmitAll diverges: most completions are late and the queue is deep
+    assert!(all.metrics.deadline_misses > all.metrics.requests / 2);
+    assert!(all.metrics.peak_backlog > shed.metrics.peak_backlog);
+    // DeadlineShed's prediction is exact here: no admitted request misses,
+    // so its whole tail sits inside the SLO
+    assert_eq!(shed.metrics.deadline_misses, 0);
+    assert!(shed.metrics.response_late.is_none());
+
+    // the goodput contract (with lots of headroom in practice)
+    assert!(
+        shed.metrics.goodput_rps >= all.metrics.goodput_rps,
+        "shed goodput {} must be at least admit_all's {}",
+        shed.metrics.goodput_rps,
+        all.metrics.goodput_rps
+    );
+
+    // shed cost reaches the learner's reward: epochs that shed score worse
+    // than the same-latency epoch would alone
+    let shed_epochs: Vec<_> = shed.epochs.iter().filter(|e| e.shed > 0).collect();
+    assert!(!shed_epochs.is_empty());
+    for e in &shed_epochs {
+        if e.requests > 0 {
+            assert!(
+                e.reward < -e.response.mean_ms,
+                "epoch {}: reward {} must price {} sheds below the bare mean {}",
+                e.epoch,
+                e.reward,
+                e.shed,
+                e.response.mean_ms
+            );
+        }
+    }
+}
+
+/// With `[admission]` absent (the default config), evaluate_online through
+/// the policed-capable driver is byte-identical to the pre-admission
+/// engine — and an explicit `admit_all` only adds deadline accounting on
+/// top of identical physics.
+#[test]
+fn inactive_and_admit_all_admission_preserve_pr4_outputs() {
+    let users = 3;
+    let horizon = 12_000.0;
+    let seed = 5;
+    let process = ArrivalProcess::Poisson { rate_per_s: 1.5 };
+    let ctl = ControlCfg { period_ms: 2_000.0, online_learning: false };
+    let none = DriftSchedule::none();
+
+    let base = local_orch(users, 3).evaluate_online(process, horizon, seed, &ctl, &none);
+    assert_eq!((base.metrics.shed, base.metrics.deferrals, base.metrics.degraded), (0, 0, 0));
+    assert_eq!(base.metrics.deadline_misses, 0);
+    assert_eq!(base.metrics.goodput_rps.to_bits(), base.metrics.throughput_rps.to_bits());
+
+    let admission =
+        AdmissionCfg { policy: "admit_all".into(), explicit: true, ..AdmissionCfg::default() };
+    let policed = local_orch(users, 3)
+        .evaluate_admission(process, horizon, seed, &ctl, &none, &admission);
+    // identical physics, bit for bit
+    assert_eq!(policed.metrics.requests, base.metrics.requests);
+    assert_eq!(policed.metrics.makespan_ms.to_bits(), base.metrics.makespan_ms.to_bits());
+    assert_eq!(
+        policed.metrics.response.p99_ms.to_bits(),
+        base.metrics.response.p99_ms.to_bits()
+    );
+    assert_eq!(
+        policed.metrics.queueing.mean_ms.to_bits(),
+        base.metrics.queueing.mean_ms.to_bits()
+    );
+    assert_eq!((policed.metrics.shed, policed.metrics.deferrals), (0, 0));
+    // ...now with deadline accounting live: every completion lands in
+    // exactly one outcome class
+    let on = policed.metrics.response_on_time.map(|s| s.count).unwrap_or(0);
+    let late = policed.metrics.response_late.map(|s| s.count).unwrap_or(0);
+    assert_eq!(on + late, policed.metrics.requests);
+    assert_eq!(late, policed.metrics.deadline_misses);
+    assert!(on > 0, "sub-capacity load must land mostly on time");
+}
+
+/// Defer and degrade drive their counters through the epoch records, and
+/// deferral shifts work later without losing it.
+#[test]
+fn defer_and_degrade_surface_in_epoch_records() {
+    let users = 2;
+    let horizon = 10_000.0;
+    let seed = 11;
+    let process = ArrivalProcess::Poisson { rate_per_s: 6.0 };
+    let ctl = ControlCfg { period_ms: 1_000.0, online_learning: false };
+    let none = DriftSchedule::none();
+
+    let run = |policy: &str| {
+        let admission = AdmissionCfg {
+            policy: policy.into(),
+            explicit: true,
+            ..AdmissionCfg::default()
+        };
+        local_orch(users, 9).evaluate_admission(process, horizon, seed, &ctl, &none, &admission)
+    };
+
+    let deferred = run("defer");
+    assert!(deferred.metrics.deferrals > 0, "overload must defer");
+    assert_eq!(deferred.metrics.shed, 0, "defer never drops");
+    assert_eq!(
+        deferred.epochs.iter().map(|e| e.deferrals).sum::<usize>(),
+        deferred.metrics.deferrals
+    );
+
+    let degraded = run("degrade");
+    assert!(degraded.metrics.degraded > 0, "overload must degrade");
+    assert_eq!(degraded.metrics.shed, 0, "degrade serves everything");
+    assert_eq!(
+        degraded.epochs.iter().map(|e| e.degraded).sum::<usize>(),
+        degraded.metrics.degraded
+    );
+    // degraded service is cheaper, so the tail sits far below admit_all's
+    let all = run("admit_all");
+    assert!(
+        degraded.metrics.response.p95_ms < all.metrics.response.p95_ms,
+        "degrade p95 {} vs admit_all p95 {}",
+        degraded.metrics.response.p95_ms,
+        all.metrics.response.p95_ms
+    );
+    // per-epoch miss counts add up to the run's total
+    assert_eq!(
+        all.epochs.iter().map(|e| e.deadline_misses).sum::<usize>(),
+        all.metrics.deadline_misses
+    );
+}
