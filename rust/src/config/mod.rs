@@ -210,6 +210,117 @@ impl DriftConfig {
     }
 }
 
+/// `[telemetry]` section: the DES flight recorder (per-request trace
+/// spans + periodic gauges streamed as JSONL/CSV), plus the
+/// `--telemetry PATH` / `--telemetry-format` CLI overrides. Off by
+/// default; attaching a recorder is bitwise-transparent to every run
+/// (property-pinned), so enabling this never changes results — only
+/// emits them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryConfig {
+    /// Record at all? Set by `[telemetry] enabled = true` or by passing
+    /// `--telemetry PATH`.
+    pub enabled: bool,
+    /// Bounded in-memory buffer: records drain to the sink whenever this
+    /// many are pending (and at the final flush).
+    pub capacity: usize,
+    /// "jsonl" (one JSON object per line) | "csv" (flat rows).
+    pub format: String,
+    /// Output file; empty = a driver-chosen default under `results_dir`.
+    pub path: String,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            enabled: false,
+            capacity: 4096,
+            format: "jsonl".into(),
+            path: String::new(),
+        }
+    }
+}
+
+impl TelemetryConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.capacity == 0 {
+            return Err("telemetry.capacity must be >= 1".into());
+        }
+        crate::sim::telemetry::Format::parse(&self.format).map(|_| ())
+    }
+}
+
+/// `[fleet]` section: which scenario x admission slices the
+/// `eeco experiment fleet` matrix runs, plus the `--fleet-scenarios` /
+/// `--fleet-policies` / `--fast` CLI overrides. Placement tiers are
+/// always crossed in full.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// "all" or a comma list of `sim::scenarios::FLEET_SCENARIOS` names.
+    pub scenarios: String,
+    /// "all" or a comma list of [`ADMISSION_POLICIES`] names.
+    pub policies: String,
+    /// Arrival horizon of each fleet cell, ms of virtual time.
+    pub horizon_ms: f64,
+    /// Shrink to a 2-scenario x 2-policy smoke slice on a short horizon
+    /// (also forced by `EECO_FAST=1`, like every experiment driver).
+    pub fast: bool,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            scenarios: "all".into(),
+            policies: "all".into(),
+            horizon_ms: 30_000.0,
+            fast: false,
+        }
+    }
+}
+
+impl FleetConfig {
+    fn split(spec: &str, universe: &[&str], what: &str) -> Result<Vec<String>, String> {
+        if spec.trim() == "all" {
+            return Ok(universe.iter().map(|s| s.to_string()).collect());
+        }
+        let names: Vec<String> =
+            spec.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+        if names.is_empty() {
+            return Err(format!("empty fleet {what} list '{spec}'"));
+        }
+        for n in &names {
+            if !universe.contains(&n.as_str()) {
+                return Err(format!(
+                    "unknown fleet {what} '{n}' (known: {})",
+                    universe.join(", ")
+                ));
+            }
+        }
+        Ok(names)
+    }
+
+    /// Resolve the scenario slice ("all" = the whole library, in order).
+    pub fn scenario_names(&self) -> Result<Vec<String>, String> {
+        FleetConfig::split(&self.scenarios, &crate::sim::FLEET_SCENARIOS, "scenario")
+    }
+
+    /// Resolve the admission-policy slice.
+    pub fn policy_names(&self) -> Result<Vec<String>, String> {
+        FleetConfig::split(&self.policies, &ADMISSION_POLICIES, "policy")
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.horizon_ms.is_finite() && self.horizon_ms > 0.0) {
+            return Err(format!(
+                "fleet.horizon_ms must be finite and > 0, got {}",
+                self.horizon_ms
+            ));
+        }
+        self.scenario_names().map(|_| ())?;
+        self.policy_names().map(|_| ())
+    }
+}
+
 /// `[topology]` section: how many edge nodes the end-edge-cloud network
 /// shards over, parsed from `edges = 2` or a sweep range `edges = "1..4"`
 /// (inclusive; `..=` also accepted) plus the `--edges` CLI override.
@@ -270,6 +381,8 @@ pub struct Config {
     pub control: ControlConfig,
     pub drift: DriftConfig,
     pub admission: AdmissionConfig,
+    pub telemetry: TelemetryConfig,
+    pub fleet: FleetConfig,
     pub artifacts_dir: String,
     pub results_dir: String,
 }
@@ -292,6 +405,8 @@ impl Default for Config {
             control: ControlConfig::default(),
             drift: DriftConfig::default(),
             admission: AdmissionConfig::default(),
+            telemetry: TelemetryConfig::default(),
+            fleet: FleetConfig::default(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -422,6 +537,79 @@ impl Config {
             self.admission.explicit = true;
         }
         self.admission.validate()?;
+        // [telemetry] / [fleet]: same strict style — unknown keys and
+        // wrong value types are load-time errors, never silent defaults.
+        const TELEMETRY_KEYS: [&str; 4] = ["enabled", "capacity", "format", "path"];
+        const FLEET_KEYS: [&str; 4] = ["scenarios", "policies", "horizon_ms", "fast"];
+        for key in doc.entries.keys() {
+            if let Some(k) = key.strip_prefix("telemetry.") {
+                if !TELEMETRY_KEYS.contains(&k) {
+                    return Err(format!(
+                        "unknown [telemetry] key '{k}' (known: {})",
+                        TELEMETRY_KEYS.join(", ")
+                    ));
+                }
+            }
+            if let Some(k) = key.strip_prefix("fleet.") {
+                if !FLEET_KEYS.contains(&k) {
+                    return Err(format!(
+                        "unknown [fleet] key '{k}' (known: {})",
+                        FLEET_KEYS.join(", ")
+                    ));
+                }
+            }
+        }
+        if let Some(v) = doc.get("telemetry.enabled") {
+            self.telemetry.enabled = v.as_bool().ok_or_else(|| {
+                "telemetry.enabled must be a bare boolean (true|false)".to_string()
+            })?;
+        }
+        if let Some(v) = doc.get("telemetry.capacity") {
+            let c = v
+                .as_i64()
+                .ok_or_else(|| "telemetry.capacity must be an integer".to_string())?;
+            if c < 1 {
+                return Err(format!("telemetry.capacity must be >= 1, got {c}"));
+            }
+            self.telemetry.capacity = c as usize;
+        }
+        if let Some(v) = doc.get("telemetry.format") {
+            self.telemetry.format = v
+                .as_str()
+                .ok_or_else(|| "telemetry.format must be a string (jsonl|csv)".to_string())?
+                .to_string();
+        }
+        if let Some(v) = doc.get("telemetry.path") {
+            self.telemetry.path = v
+                .as_str()
+                .ok_or_else(|| "telemetry.path must be a string".to_string())?
+                .to_string();
+        }
+        self.telemetry.validate()?;
+        if let Some(v) = doc.get("fleet.scenarios") {
+            self.fleet.scenarios = v
+                .as_str()
+                .ok_or_else(|| "fleet.scenarios must be a string".to_string())?
+                .to_string();
+        }
+        if let Some(v) = doc.get("fleet.policies") {
+            self.fleet.policies = v
+                .as_str()
+                .ok_or_else(|| "fleet.policies must be a string".to_string())?
+                .to_string();
+        }
+        if let Some(v) = doc.get("fleet.horizon_ms") {
+            let h = v
+                .as_f64()
+                .ok_or_else(|| "fleet.horizon_ms must be a number (ms)".to_string())?;
+            self.fleet.horizon_ms = h;
+        }
+        if let Some(v) = doc.get("fleet.fast") {
+            self.fleet.fast = v
+                .as_bool()
+                .ok_or_else(|| "fleet.fast must be a bare boolean (true|false)".to_string())?;
+        }
+        self.fleet.validate()?;
         Ok(())
     }
 
@@ -491,6 +679,27 @@ impl Config {
             self.admission.explicit = true;
         }
         self.admission.validate()?;
+        if let Some(p) = args.get("telemetry") {
+            if p.is_empty() {
+                return Err("--telemetry needs an output path".into());
+            }
+            self.telemetry.enabled = true;
+            self.telemetry.path = p.to_string();
+        }
+        if let Some(f) = args.get("telemetry-format") {
+            self.telemetry.format = f.to_string();
+        }
+        self.telemetry.validate()?;
+        if let Some(s) = args.get("fleet-scenarios") {
+            self.fleet.scenarios = s.to_string();
+        }
+        if let Some(p) = args.get("fleet-policies") {
+            self.fleet.policies = p.to_string();
+        }
+        if args.flag("fast") {
+            self.fleet.fast = true;
+        }
+        self.fleet.validate()?;
         Ok(())
     }
 }
@@ -743,6 +952,99 @@ mod tests {
         let bad = Args::parse(["--slo", "0.5"].iter().map(|s| s.to_string()));
         assert!(Config::load(&bad).is_err());
         let bad = Args::parse(["--slo", "many"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+    }
+
+    #[test]
+    fn telemetry_section_parses_strictly() {
+        // defaults: disabled, jsonl, bounded buffer
+        let d = Config::default();
+        assert!(!d.telemetry.enabled);
+        assert_eq!(d.telemetry.format, "jsonl");
+        assert!(d.telemetry.validate().is_ok());
+
+        let doc = Doc::parse(
+            "[telemetry]\nenabled = true\ncapacity = 128\nformat = \"csv\"\npath = \"/tmp/t.csv\"\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert!(c.telemetry.enabled);
+        assert_eq!(c.telemetry.capacity, 128);
+        assert_eq!(c.telemetry.format, "csv");
+        assert_eq!(c.telemetry.path, "/tmp/t.csv");
+
+        // unknown keys, wrong types and bad knobs rejected at load time
+        let bad = Doc::parse("[telemetry]\nenabld = true\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[telemetry]\nenabled = \"yes\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[telemetry]\ncapacity = 0\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[telemetry]\nformat = \"xml\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn telemetry_cli_overrides() {
+        let args = Args::parse(
+            ["--telemetry", "/tmp/trace.jsonl"].iter().map(|s| s.to_string()),
+        );
+        let c = Config::load(&args).unwrap();
+        assert!(c.telemetry.enabled, "--telemetry PATH switches recording on");
+        assert_eq!(c.telemetry.path, "/tmp/trace.jsonl");
+        let args = Args::parse(
+            ["--telemetry", "/tmp/t.csv", "--telemetry-format", "csv"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        assert_eq!(Config::load(&args).unwrap().telemetry.format, "csv");
+        let bad =
+            Args::parse(["--telemetry-format", "xml"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+    }
+
+    #[test]
+    fn fleet_section_parses_strictly() {
+        let d = Config::default();
+        assert_eq!(d.fleet.scenario_names().unwrap().len(), crate::sim::FLEET_SCENARIOS.len());
+        assert_eq!(d.fleet.policy_names().unwrap().len(), ADMISSION_POLICIES.len());
+        assert!(!d.fleet.fast);
+
+        let doc = Doc::parse(
+            "[fleet]\nscenarios = \"diurnal,flash_crowd\"\npolicies = \"admit_all\"\nhorizon_ms = 9000\nfast = true\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.fleet.scenario_names().unwrap(), vec!["diurnal", "flash_crowd"]);
+        assert_eq!(c.fleet.policy_names().unwrap(), vec!["admit_all"]);
+        assert_eq!(c.fleet.horizon_ms, 9000.0);
+        assert!(c.fleet.fast);
+
+        let bad = Doc::parse("[fleet]\nscenarios = \"rush_hour\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[fleet]\npolicies = \"yolo\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[fleet]\nhorizon_ms = 0\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[fleet]\nscenarioz = \"all\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn fleet_cli_overrides() {
+        let args = Args::parse(
+            ["--fleet-scenarios", "brownout", "--fleet-policies", "defer,degrade", "--fast"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::load(&args).unwrap();
+        assert_eq!(c.fleet.scenario_names().unwrap(), vec!["brownout"]);
+        assert_eq!(c.fleet.policy_names().unwrap(), vec!["defer", "degrade"]);
+        assert!(c.fleet.fast);
+        let bad =
+            Args::parse(["--fleet-scenarios", "nope"].iter().map(|s| s.to_string()));
         assert!(Config::load(&bad).is_err());
     }
 

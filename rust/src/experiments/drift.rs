@@ -343,7 +343,14 @@ mod tests {
                 ..Default::default()
             },
             drift: crate::config::DriftConfig { spec: "6000:rate=6,net=weak".into() },
-            results_dir: std::env::temp_dir().join("eeco_drift").to_str().unwrap().into(),
+            results_dir: {
+                // per-process dir, cleared up front: a stale CSV must not
+                // satisfy the read below if this run fails to write
+                let dir =
+                    std::env::temp_dir().join(format!("eeco_drift_{}", std::process::id()));
+                std::fs::remove_dir_all(&dir).ok();
+                dir.to_str().unwrap().into()
+            },
             ..Default::default()
         };
         let ctx = ExpCtx::new(cfg);

@@ -185,7 +185,11 @@ mod tests {
     #[test]
     fn fig1a_runs_fast() {
         let mut cfg = Config::default();
-        cfg.results_dir = std::env::temp_dir().join("eeco_fig1a").to_str().unwrap().into();
+        // per-process dir, cleared up front: a stale CSV must not satisfy
+        // the existence check below if this run fails to write
+        let dir = std::env::temp_dir().join(format!("eeco_fig1a_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        cfg.results_dir = dir.to_str().unwrap().into();
         let ctx = ExpCtx::new(cfg);
         fig1a(&ctx).unwrap();
         assert!(std::path::Path::new(&format!("{}/fig1a.csv", ctx.cfg.results_dir)).exists());

@@ -1,0 +1,337 @@
+//! `fleet`: the scenario x placement x admission matrix — every named
+//! fleet scenario (`sim::scenarios`: diurnal, flash crowd, brownout,
+//! churn, multi-tenant) against every fixed placement tier and every
+//! ingress admission policy, in one comparative report.
+//!
+//! Each matrix cell is a pure function of its spec (scenario name,
+//! tier, policy) plus the shared (seed, horizon, calibration): it builds
+//! its own environment and orchestrator and plays the scenario's drifted
+//! arrival trace through the policed DES control plane. Cells therefore
+//! fan out across a thread pool (`util::pool::map_indexed`, input-order
+//! results) with outcomes bit-identical to the serial loop.
+//!
+//! Outputs: a stdout table, `results/fleet.csv`, `results/fleet.json`
+//! (re-parsed after writing — the report must round-trip through our own
+//! JSON parser), and, when `[telemetry]` is enabled, one flight-recorder
+//! trace per cell under `results/fleet_telemetry/`.
+
+use anyhow::{anyhow, Result};
+
+use crate::agent::baseline::FixedAgent;
+use crate::config::{AdmissionConfig, Scenario};
+use crate::metrics::{render_table, save_json, Csv};
+use crate::orchestrator::{ControlCfg, Orchestrator};
+use crate::sim::scenarios;
+use crate::sim::telemetry::{Format, Recorder};
+use crate::sim::Env;
+use crate::types::{AccuracyConstraint, Tier};
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+
+use super::ExpCtx;
+
+/// The fixed placement tiers every fleet run crosses (label = report id).
+const TIERS: [(Tier, &str); 3] =
+    [(Tier::Local, "local"), (Tier::Edge(0), "edge"), (Tier::Cloud, "cloud")];
+
+/// One matrix cell's spec: everything a worker needs to rebuild the run.
+struct Cell {
+    scenario: String,
+    tier: Tier,
+    tier_name: &'static str,
+    policy: String,
+}
+
+/// One finished cell, in report-column order.
+struct Row {
+    scenario: String,
+    tier: &'static str,
+    policy: String,
+    requests: usize,
+    shed: usize,
+    deferrals: usize,
+    degraded: usize,
+    deadline_misses: usize,
+    goodput_rps: f64,
+    throughput_rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    p99_ms: f64,
+    peak_backlog: usize,
+    makespan_ms: f64,
+}
+
+pub fn fleet(ctx: &ExpCtx) -> Result<()> {
+    let users = 5;
+    let fast = ctx.cfg.fleet.fast || std::env::var("EECO_FAST").is_ok();
+    let mut scenario_names = ctx.cfg.fleet.scenario_names().map_err(|e| anyhow!(e))?;
+    let mut policies = ctx.cfg.fleet.policy_names().map_err(|e| anyhow!(e))?;
+    let mut horizon = ctx.cfg.fleet.horizon_ms;
+    if fast {
+        // smoke slice: 2 scenarios x 2 policies on a short horizon
+        scenario_names.truncate(2);
+        policies.truncate(2);
+        horizon = horizon.min(8_000.0);
+    }
+    let seed = ctx.cfg.seed;
+    println!(
+        "\n== fleet: {} scenario(s) x {} tier(s) x {} policy(ies), {users} users, \
+         horizon {horizon:.0} ms ==",
+        scenario_names.len(),
+        TIERS.len(),
+        policies.len()
+    );
+
+    let cells: Vec<Cell> = scenario_names
+        .iter()
+        .flat_map(|s| {
+            let policies = &policies;
+            TIERS.iter().flat_map(move |&(tier, tier_name)| {
+                policies.iter().map(move |p| Cell {
+                    scenario: s.clone(),
+                    tier,
+                    tier_name,
+                    policy: p.clone(),
+                })
+            })
+        })
+        .collect();
+
+    // Everything a worker needs, owned: cells are pure functions of their
+    // spec plus these shared knobs.
+    let calibration = ctx.cfg.calibration.clone();
+    let admission_base = ctx.cfg.admission.clone();
+    let telemetry: Option<(usize, Format, String)> = if ctx.cfg.telemetry.enabled {
+        let format = Format::parse(&ctx.cfg.telemetry.format).map_err(|e| anyhow!(e))?;
+        let dir = format!("{}/fleet_telemetry", ctx.cfg.results_dir);
+        Some((ctx.cfg.telemetry.capacity, format, dir))
+    } else {
+        None
+    };
+    let run_cell = move |_i: usize, cell: Cell| -> Row {
+        let scn = scenarios::by_name(&cell.scenario, horizon).expect("scenario name validated");
+        let env = Env::new(
+            Scenario::exp_a(users),
+            calibration.clone(),
+            AccuracyConstraint::Max,
+            seed,
+        );
+        let mut orch = Orchestrator::new(env, Box::new(FixedAgent::new(cell.tier, users)));
+        orch.env.freeze();
+        orch.env.reset_load();
+        if let Some((cap, format, dir)) = &telemetry {
+            let path = format!(
+                "{dir}/{}_{}_{}.{}",
+                cell.scenario,
+                cell.tier_name,
+                cell.policy,
+                format.extension()
+            );
+            // a failed trace file is a lost trace, not a lost cell
+            if let Ok(rec) = Recorder::to_file(*cap, *format, &path) {
+                orch.recorder = Some(rec);
+            }
+        }
+        let admission = AdmissionConfig {
+            policy: cell.policy.clone(),
+            explicit: true,
+            ..admission_base.clone()
+        };
+        // ~10 control ticks: deferral gets re-queue points and gauges
+        // sample at a realistic cadence.
+        let ctl = ControlCfg { period_ms: horizon / 10.0, online_learning: false };
+        let rep =
+            orch.evaluate_admission(scn.process, horizon, seed, &ctl, &scn.drift, &admission);
+        let m = rep.metrics;
+        Row {
+            scenario: cell.scenario,
+            tier: cell.tier_name,
+            policy: cell.policy,
+            requests: m.requests,
+            shed: m.shed,
+            deferrals: m.deferrals,
+            degraded: m.degraded,
+            deadline_misses: m.deadline_misses,
+            goodput_rps: m.goodput_rps,
+            throughput_rps: m.throughput_rps,
+            p50_ms: m.response.p50_ms,
+            p95_ms: m.response.p95_ms,
+            p99_ms: m.response.p99_ms,
+            peak_backlog: m.peak_backlog,
+            makespan_ms: m.makespan_ms,
+        }
+    };
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(cells.len().max(1));
+    let pool = ThreadPool::new(workers, "fleet");
+    let rows = pool.map_indexed(cells, run_cell);
+
+    let mut csv = Csv::new(&[
+        "scenario",
+        "tier",
+        "policy",
+        "requests",
+        "shed",
+        "deferred",
+        "degraded",
+        "deadline_misses",
+        "goodput_rps",
+        "throughput_rps",
+        "p50_ms",
+        "p95_ms",
+        "p99_ms",
+        "peak_backlog",
+        "makespan_ms",
+    ]);
+    let mut table = Vec::new();
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        csv.row(&[
+            r.scenario.clone(),
+            r.tier.to_string(),
+            r.policy.clone(),
+            r.requests.to_string(),
+            r.shed.to_string(),
+            r.deferrals.to_string(),
+            r.degraded.to_string(),
+            r.deadline_misses.to_string(),
+            format!("{:.3}", r.goodput_rps),
+            format!("{:.3}", r.throughput_rps),
+            format!("{:.1}", r.p50_ms),
+            format!("{:.1}", r.p95_ms),
+            format!("{:.1}", r.p99_ms),
+            r.peak_backlog.to_string(),
+            format!("{:.1}", r.makespan_ms),
+        ]);
+        table.push(vec![
+            r.scenario.clone(),
+            r.tier.to_string(),
+            r.policy.clone(),
+            r.requests.to_string(),
+            r.shed.to_string(),
+            r.degraded.to_string(),
+            r.deadline_misses.to_string(),
+            format!("{:.2}", r.goodput_rps),
+            format!("{:.0}", r.p99_ms),
+            r.peak_backlog.to_string(),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .set("scenario", r.scenario.as_str())
+                .set("tier", r.tier)
+                .set("policy", r.policy.as_str())
+                .set("requests", r.requests)
+                .set("shed", r.shed)
+                .set("deferred", r.deferrals)
+                .set("degraded", r.degraded)
+                .set("deadline_misses", r.deadline_misses)
+                .set("goodput_rps", r.goodput_rps)
+                .set("throughput_rps", r.throughput_rps)
+                .set("p50_ms", r.p50_ms)
+                .set("p95_ms", r.p95_ms)
+                .set("p99_ms", r.p99_ms)
+                .set("peak_backlog", r.peak_backlog)
+                .set("makespan_ms", r.makespan_ms),
+        );
+    }
+    print!(
+        "{}",
+        render_table(
+            &["scenario", "tier", "policy", "reqs", "shed", "degraded", "missed", "goodput",
+              "p99", "backlog"],
+            &table
+        )
+    );
+    // comparative reading: the best (tier, policy) per scenario by goodput
+    for s in &scenario_names {
+        if let Some(best) = rows
+            .iter()
+            .filter(|r| &r.scenario == s)
+            .max_by(|a, b| a.goodput_rps.total_cmp(&b.goodput_rps))
+        {
+            println!(
+                "best for {s}: {}/{} (goodput {:.2} rps, p99 {:.0} ms)",
+                best.tier, best.policy, best.goodput_rps, best.p99_ms
+            );
+        }
+    }
+
+    csv.save(&ctx.cfg.results_dir, "fleet")?;
+    let report = Json::obj()
+        .set("users", users)
+        .set("horizon_ms", horizon)
+        .set("seed", seed as i64)
+        .set("rows", Json::Arr(json_rows));
+    let json_path = save_json(&ctx.cfg.results_dir, "fleet", &report)?;
+    // The report must survive a round trip through our own parser — a
+    // fully-shed cell once emitted NaN fields no JSON parser accepts.
+    let body = std::fs::read_to_string(&json_path)?;
+    let back = Json::parse(&body).map_err(|e| anyhow!("fleet.json does not re-parse: {e}"))?;
+    let n = back
+        .field("rows")
+        .ok()
+        .and_then(|r| match r {
+            Json::Arr(v) => Some(v.len()),
+            _ => None,
+        })
+        .unwrap_or(0);
+    if n != rows.len() {
+        return Err(anyhow!("fleet.json re-parse: {n} rows, expected {}", rows.len()));
+    }
+    if let Some((_, _, dir)) = &telemetry {
+        println!("per-cell telemetry traces under {dir}/");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::experiments::ExpCtx;
+
+    #[test]
+    fn fleet_fast_slice_runs_matrix_into_one_report() {
+        // per-process dir, cleared up front: stale artifacts must not
+        // satisfy the existence checks below
+        let dir = std::env::temp_dir().join(format!("eeco_fleet_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = Config {
+            results_dir: dir.to_str().unwrap().into(),
+            ..Default::default()
+        };
+        cfg.fleet.fast = true;
+        cfg.fleet.horizon_ms = 6_000.0;
+        cfg.telemetry.enabled = true; // exercise the per-cell recorders
+        let ctx = ExpCtx::new(cfg);
+        fleet(&ctx).unwrap();
+
+        // fast slice: 2 scenarios x 3 tiers x 2 policies
+        let body =
+            std::fs::read_to_string(format!("{}/fleet.csv", ctx.cfg.results_dir)).unwrap();
+        assert_eq!(body.lines().count(), 1 + 2 * TIERS.len() * 2, "{body}");
+
+        // the JSON report re-parses with one object per cell
+        let json =
+            std::fs::read_to_string(format!("{}/fleet.json", ctx.cfg.results_dir)).unwrap();
+        let j = Json::parse(&json).unwrap();
+        match j.field("rows").unwrap() {
+            Json::Arr(v) => {
+                assert_eq!(v.len(), 2 * TIERS.len() * 2);
+                for row in v {
+                    assert!(row.field("scenario").unwrap().as_str().is_some());
+                    assert!(row.field("goodput_rps").is_ok());
+                }
+            }
+            other => panic!("rows must be an array, got {other:?}"),
+        }
+
+        // one flight-recorder trace per cell
+        let traces =
+            std::fs::read_dir(format!("{}/fleet_telemetry", ctx.cfg.results_dir)).unwrap();
+        assert_eq!(traces.count(), 2 * TIERS.len() * 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

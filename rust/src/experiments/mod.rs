@@ -5,6 +5,7 @@
 
 pub mod drift;
 pub mod figures;
+pub mod fleet;
 pub mod overhead;
 pub mod overload;
 pub mod tables;
@@ -120,7 +121,7 @@ impl ExpCtx {
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig1c", "fig5", "table8", "table9", "table10", "fig6", "fig7",
     "table11", "fig8", "table12", "prediction", "traffic_sweep", "multi_edge", "drift",
-    "overload",
+    "overload", "fleet",
 ];
 
 /// Dispatch an experiment by id.
@@ -143,6 +144,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "multi_edge" => traffic::multi_edge(ctx),
         "drift" => drift::drift(ctx),
         "overload" => overload::overload(ctx),
+        "fleet" => fleet::fleet(ctx),
         other => Err(anyhow!("unknown experiment '{other}' (known: {ALL:?})")),
     }
 }
@@ -173,8 +175,9 @@ mod tests {
         // unknown id errors, known ids exist in ALL
         let ctx = ExpCtx::new(Config::default());
         assert!(run("nope", &ctx).is_err());
-        // 13 paper experiments + traffic_sweep + multi_edge + drift + overload
-        assert_eq!(ALL.len(), 17);
+        // 13 paper experiments + traffic_sweep + multi_edge + drift +
+        // overload + fleet
+        assert_eq!(ALL.len(), 18);
     }
 
     #[test]

@@ -366,12 +366,12 @@ mod tests {
 
     #[test]
     fn multi_edge_sweep_runs_and_more_edges_never_hurt_tails() {
+        // per-process dir, cleared up front: a stale CSV must not satisfy
+        // the read below if this run fails to write
+        let dir = std::env::temp_dir().join(format!("eeco_multi_edge_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
         let cfg = Config {
-            results_dir: std::env::temp_dir()
-                .join("eeco_multi_edge")
-                .to_str()
-                .unwrap()
-                .into(),
+            results_dir: dir.to_str().unwrap().into(),
             users: 10,
             // noise off: the sweep is then fully deterministic and the
             // per-request comparison across edge counts is exact
@@ -471,12 +471,11 @@ mod tests {
 
     #[test]
     fn traffic_sweep_runs_and_writes_csv() {
+        let dir =
+            std::env::temp_dir().join(format!("eeco_traffic_sweep_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
         let cfg = Config {
-            results_dir: std::env::temp_dir()
-                .join("eeco_traffic_sweep")
-                .to_str()
-                .unwrap()
-                .into(),
+            results_dir: dir.to_str().unwrap().into(),
             traffic: crate::config::TrafficConfig {
                 horizon_ms: 3000.0, // keep the unit test fast
                 ..Default::default()
@@ -495,12 +494,11 @@ mod tests {
 
     #[test]
     fn traffic_sweep_honors_configured_process() {
+        let dir =
+            std::env::temp_dir().join(format!("eeco_traffic_mmpp_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
         let cfg = Config {
-            results_dir: std::env::temp_dir()
-                .join("eeco_traffic_sweep_mmpp")
-                .to_str()
-                .unwrap()
-                .into(),
+            results_dir: dir.to_str().unwrap().into(),
             traffic: crate::config::TrafficConfig {
                 process: "mmpp".into(),
                 rate_per_s: 0.5,

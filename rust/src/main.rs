@@ -52,19 +52,19 @@ fn run(args: &Args) -> Result<()> {
     // dispatch below).
     if cfg.admission.active() {
         let exp = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
-        let honored = cmd == "experiment" && matches!(exp, "drift" | "overload");
+        let honored = cmd == "experiment" && matches!(exp, "drift" | "overload" | "fleet");
         if !honored {
             let target =
                 if cmd == "experiment" { format!("experiment {exp}") } else { cmd.to_string() };
             let effect = if exp == "all" {
-                "mixes policed (drift, overload) and silently unpoliced legs"
+                "mixes policed (drift, overload, fleet) and silently unpoliced legs"
             } else {
                 "would run unpoliced"
             };
             return Err(anyhow!(
-                "--admission / [admission] is honored by `experiment drift` and `experiment \
-                 overload` only; `{target}` {effect} — drop the flag or run those \
-                 experiments directly"
+                "--admission / [admission] is honored by `experiment drift`, `experiment \
+                 overload` and `experiment fleet` only; `{target}` {effect} — drop the flag \
+                 or run those experiments directly"
             ));
         }
     }
@@ -132,7 +132,23 @@ OPTIONS (admission): --admission admit_all|deadline_shed|defer|degrade
                   default 3.0; [admission] deadline_ms pins an absolute
                   SLO instead) — `experiment overload` sweeps arrival
                   rates past saturation comparing the policies on
-                  goodput vs tail latency",
+                  goodput vs tail latency
+OPTIONS (fleet):  --fleet-scenarios a,b|all  --fleet-policies a,b|all
+                  slice of the `experiment fleet` matrix: named scenarios
+                  (diurnal, flash_crowd, brownout, churn, multi_tenant) x
+                  placement tiers x admission policies into one
+                  comparative report (results/fleet.csv + fleet.json)
+                  --fast   smoke slice (2 scenarios x 2 policies, short
+                  horizon; EECO_FAST=1 does the same)
+OPTIONS (telemetry): --telemetry PATH  attach the flight recorder and
+                  write per-request trace spans (arrival, admission
+                  verdict, service start, completion) + per-tick gauges
+                  (backlog, en-route, utilization) to PATH; off by
+                  default and bitwise-transparent to every metric
+                  --telemetry-format jsonl|csv   trace encoding
+                  ([telemetry] enabled/capacity/format/path in TOML;
+                  `experiment fleet` writes one trace per matrix cell
+                  under results/fleet_telemetry/)",
         ids = experiments::ALL.join(",")
     );
 }

@@ -136,8 +136,10 @@ pub struct TrafficMetrics {
     /// Completions that blew their stamped deadline (0 when none).
     pub deadline_misses: usize,
     /// On-time completions per second of virtual time
-    /// ([`crate::sim::des::DesOutcome::goodput_rps`]); equals
-    /// `throughput_rps` when no deadlines are stamped.
+    /// ([`crate::sim::des::DesOutcome::goodput_rps`]): normalized by the
+    /// arrival horizon when the run carries one — immune to the makespan
+    /// shrink a shedding policy causes — else by the makespan, where it
+    /// equals `throughput_rps` when no deadlines are stamped.
     pub goodput_rps: f64,
     /// Latency split per deadline outcome: summaries over on-time and
     /// late completions (None when that class is empty — note
@@ -547,6 +549,31 @@ mod tests {
         assert_eq!(m.goodput_rps.to_bits(), m.throughput_rps.to_bits());
         assert!(m.response_late.is_none());
         assert_eq!(m.response_on_time.unwrap().count, 1);
+    }
+
+    #[test]
+    fn fully_shed_run_emits_json_that_reparses() {
+        use crate::sim::des::DesOutcome;
+        use crate::util::json::Json;
+        // 100% shed: zero completions, so every LatencySummary field is
+        // NaN. The report JSON must still be valid — the crate's own
+        // parser has to accept what the writer emits (regression: NaN
+        // used to be written verbatim, which Json::parse rejects).
+        let act = Action { placement: Tier::Local, model: ModelId(0) };
+        let outcome = DesOutcome { shed: 42, horizon_ms: 10_000.0, ..Default::default() };
+        let m = TrafficMetrics::from_outcome(&Decision(vec![act]), &outcome);
+        assert_eq!(m.requests, 0);
+        assert_eq!(m.shed, 42);
+        assert!(m.response.mean_ms.is_nan());
+        let s = m.to_json().to_string_pretty();
+        let back = Json::parse(&s).expect("fully-shed report must reparse");
+        assert_eq!(back.field("shed").unwrap().as_usize(), Some(42));
+        // NaN percentiles round-trip as null (no value), not garbage
+        assert_eq!(back.field("response").unwrap().field("mean_ms").unwrap().as_f64(), None);
+        // and a pretty summary with NaN percentiles reparses too
+        let mut rm = RunMetrics::new();
+        let js = rm.summary().to_string_pretty();
+        Json::parse(&js).expect("empty-run summary must reparse");
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::monitor::{self, EncodedState, TopoState};
 use crate::sim::admission::{self, AdmissionPolicy};
 use crate::sim::des::{DesCore, DesOutcome};
 use crate::sim::drift::{DriftSchedule, DriftSegment};
+use crate::sim::telemetry::Recorder;
 use crate::sim::workload::Request;
 use crate::sim::{arrivals, ArrivalProcess, Env};
 use crate::types::Decision;
@@ -90,11 +91,16 @@ pub struct TrainResult {
 pub struct Orchestrator {
     pub env: Env,
     pub agent: Box<dyn Agent>,
+    /// Optional flight recorder the next online run attaches to its DES
+    /// core (request spans, admission verdicts, per-tick gauges, epoch
+    /// marks). Taken for the duration of the run and put back flushed;
+    /// None (the default) records nothing and is bitwise-transparent.
+    pub recorder: Option<Recorder>,
 }
 
 impl Orchestrator {
     pub fn new(env: Env, agent: Box<dyn Agent>) -> Orchestrator {
-        Orchestrator { env, agent }
+        Orchestrator { env, agent, recorder: None }
     }
 
     /// One orchestrated round (Fig. 4 steps 1-5): observe state, decide,
@@ -377,6 +383,7 @@ impl Orchestrator {
         };
         let mut deferred: Vec<Request> = Vec::new();
         core.begin(seed ^ 0x5EED_DE5, &mut out);
+        core.set_recorder(self.recorder.take());
 
         let mut epochs: Vec<EpochRecord> = Vec::new();
         let mut learn_steps = 0usize;
@@ -392,6 +399,9 @@ impl Orchestrator {
             // tables match the segment in force at this tick before
             // observing (a boundary exactly at t must already be visible).
             sync_drift_tables(&self.env, drift, t, &mut seg, &mut phys, &mut core);
+            // Sample the flight recorder's gauges at the same instant the
+            // controller observes (no-op without a recorder).
+            core.record_gauges(t);
             // Observe: live queue depths over the physics state.
             let obs = self.observe_live(&core, &phys);
             let enc = monitor::encode(&obs);
@@ -542,6 +552,7 @@ impl Orchestrator {
                     .filter(|c| !c.on_time())
                     .count(),
             });
+            core.record_epoch(t_end, epoch);
             epoch += 1;
             t = t_end;
             if t >= horizon_ms {
@@ -558,6 +569,10 @@ impl Orchestrator {
             }
         }
         core.finalize(&mut out);
+        if let Some(mut rec) = core.take_recorder() {
+            rec.flush();
+            self.recorder = Some(rec);
+        }
         out.horizon_ms = horizon_ms;
         let last_decision =
             epochs.last().map(|e| e.decision.clone()).expect("at least one epoch");

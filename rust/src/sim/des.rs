@@ -55,6 +55,7 @@ use std::collections::VecDeque;
 use crate::monitor::StateView;
 use crate::sim::admission::{AdmissionPolicy, AdmitQuery, AdmitVerdict};
 use crate::sim::latency::{ResponseModel, RoundCtx};
+use crate::sim::telemetry::{Recorder, SpanKind};
 use crate::sim::workload::Request;
 use crate::types::{Action, Decision, ModelId, Placement, NUM_MODELS};
 use crate::util::rng::Rng;
@@ -180,13 +181,20 @@ impl DesOutcome {
     }
 
     /// On-time completions per second of virtual time — the goodput the
-    /// overload study compares admission policies on. Equals
+    /// overload study compares admission policies on.
+    ///
+    /// Normalized by the arrival horizon when the run carries one
+    /// (`horizon_ms > 0`): the makespan *shrinks* when a policy sheds the
+    /// tail of the trace, which would inflate goodput exactly for the
+    /// shedding policies the study compares. Ad-hoc outcomes without a
+    /// horizon fall back to the makespan, where it equals
     /// [`DesOutcome::throughput_rps`] when no deadlines were stamped.
     pub fn goodput_rps(&self) -> f64 {
-        if self.makespan_ms <= 0.0 {
+        let denom_ms = if self.horizon_ms > 0.0 { self.horizon_ms } else { self.makespan_ms };
+        if denom_ms <= 0.0 {
             return 0.0;
         }
-        self.on_time_count() as f64 / (self.makespan_ms / 1000.0)
+        self.on_time_count() as f64 / (denom_ms / 1000.0)
     }
 }
 
@@ -372,6 +380,10 @@ pub struct DesCore {
     /// (monotonicity witness). Off by default: it is test-only
     /// instrumentation that costs a push per event on the hot path.
     pub collect_event_times: bool,
+    /// Optional flight recorder (off by default). Attaching one is
+    /// bitwise-transparent: every hook copies scalars the engine already
+    /// computed — zero extra RNG draws, no float-path changes.
+    recorder: Option<Recorder>,
 }
 
 impl Default for DesCore {
@@ -405,6 +417,7 @@ impl DesCore {
             enroute: Vec::new(),
             enroute_link: Vec::new(),
             collect_event_times: false,
+            recorder: None,
         }
     }
 
@@ -686,11 +699,30 @@ impl DesCore {
                         a.placement, action.placement,
                         "degrade may remap the model, not the placement"
                     );
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.span(
+                            at,
+                            SpanKind::Degrade,
+                            r.id,
+                            r.device as i64,
+                            -1,
+                            a.model.index() as i64,
+                            f64::NAN,
+                        );
+                    }
                     self.admit_request(r, a, floor_ms);
                     out.degraded += 1;
                 }
-                AdmitVerdict::Shed => out.shed += 1,
+                AdmitVerdict::Shed => {
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.span(at, SpanKind::Shed, r.id, r.device as i64, -1, -1, f64::NAN);
+                    }
+                    out.shed += 1;
+                }
                 AdmitVerdict::Defer => {
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.span(at, SpanKind::Defer, r.id, r.device as i64, -1, -1, f64::NAN);
+                    }
                     deferred.push(r.clone());
                     out.deferrals += 1;
                 }
@@ -759,6 +791,18 @@ impl DesCore {
             seq: r.id,
             kind: EventKind::Join { node: target, req: idx },
         });
+        if let Some(rec) = self.recorder.as_mut() {
+            let node = compute_node_index(self.users, num_edges, r.device, action.placement);
+            rec.span(
+                r.arrival_ms.max(floor_ms),
+                SpanKind::Admit,
+                r.id,
+                r.device as i64,
+                node as i64,
+                action.model.index() as i64,
+                f64::NAN,
+            );
+        }
     }
 
     /// Account a backlog change of compute node `node` at time `t`:
@@ -897,6 +941,17 @@ impl DesCore {
                             ev.time + svc,
                             EventKind::Finish { node, req },
                         );
+                        if let Some(rec) = self.recorder.as_mut() {
+                            rec.span(
+                                ev.time,
+                                SpanKind::ServiceStart,
+                                self.flights[req].id,
+                                device as i64,
+                                node as i64,
+                                action.model.index() as i64,
+                                f64::NAN,
+                            );
+                        }
                     } else {
                         q.waiting.push_back(req);
                     }
@@ -920,6 +975,23 @@ impl DesCore {
                             deadline_ms: f.deadline_ms,
                         });
                     }
+                    if self.recorder.is_some() {
+                        let (id, device, model, resp) = {
+                            let f = &self.flights[req];
+                            (f.id, f.device, f.action.model, ev.time - f.arrival_ms)
+                        };
+                        if let Some(rec) = self.recorder.as_mut() {
+                            rec.span(
+                                ev.time,
+                                SpanKind::Complete,
+                                id,
+                                device as i64,
+                                node as i64,
+                                model.index() as i64,
+                                resp,
+                            );
+                        }
+                    }
                     let q = &mut self.nodes[node];
                     q.busy -= 1;
                     if let Some(next) = q.waiting.pop_front() {
@@ -941,6 +1013,17 @@ impl DesCore {
                             ev.time + svc,
                             EventKind::Finish { node, req: next },
                         );
+                        if let Some(rec) = self.recorder.as_mut() {
+                            rec.span(
+                                ev.time,
+                                SpanKind::ServiceStart,
+                                self.flights[next].id,
+                                device as i64,
+                                node as i64,
+                                action.model.index() as i64,
+                                f64::NAN,
+                            );
+                        }
                     }
                 }
             }
@@ -967,6 +1050,46 @@ impl DesCore {
     /// [`DesOutcome::node_backlog`] and the `node` argument below).
     pub fn num_compute_nodes(&self) -> usize {
         self.nodes.len()
+    }
+
+    /// Attach (or detach) a flight recorder. `None` — the default — keeps
+    /// the engine on its zero-instrumentation path; with a recorder every
+    /// lifecycle hook copies already-computed scalars only, so runs stay
+    /// bitwise identical either way (the property suite pins this).
+    pub fn set_recorder(&mut self, recorder: Option<Recorder>) {
+        self.recorder = recorder;
+    }
+
+    /// Detach the recorder; call [`Recorder::flush`] on it afterwards to
+    /// drain its buffered records.
+    pub fn take_recorder(&mut self) -> Option<Recorder> {
+        self.recorder.take()
+    }
+
+    /// Sample every compute node's gauges (backlog, en-route count,
+    /// utilization) into the recorder at virtual time `t_ms`. No-op
+    /// without a recorder; the control plane calls this at its ticks.
+    pub fn record_gauges(&mut self, t_ms: f64) {
+        if let Some(mut rec) = self.recorder.take() {
+            for node in 0..self.nodes.len() {
+                rec.gauge(
+                    t_ms,
+                    node,
+                    self.backlog(node),
+                    self.enroute_count(node),
+                    self.utilization(node),
+                );
+            }
+            self.recorder = Some(rec);
+        }
+    }
+
+    /// Mark a control-plane epoch boundary (the epoch index rides the
+    /// span's `req` column). No-op without a recorder.
+    pub fn record_epoch(&mut self, t_ms: f64, epoch: usize) {
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.span(t_ms, SpanKind::Epoch, epoch as u64, -1, -1, -1, f64::NAN);
+        }
     }
 
     /// Instantaneous backlog (in service + waiting) of a compute node —

@@ -3,9 +3,11 @@
 //! vCPU queues, pausable at control ticks), pluggable ingress admission
 //! control (shed / defer / degrade over per-request deadlines), pluggable
 //! arrival processes, piecewise drift schedules (rate bursts + link-cond
-//! changes mid-trace), the synchronous-round RL environment (a thin
-//! adapter over the DES core), and workload generators for the
-//! measured-mode serving path.
+//! changes mid-trace), named fleet scenarios composing the three, the
+//! synchronous-round RL environment (a thin adapter over the DES core),
+//! flight-recorder telemetry (per-request trace spans + periodic gauges,
+//! off by default and bitwise-transparent), and workload generators for
+//! the measured-mode serving path.
 
 pub mod admission;
 pub mod arrivals;
@@ -13,6 +15,8 @@ pub mod des;
 pub mod drift;
 pub mod env;
 pub mod latency;
+pub mod scenarios;
+pub mod telemetry;
 pub mod workload;
 
 pub use admission::{
@@ -23,4 +27,6 @@ pub use des::{BacklogStats, CompletedRequest, DesCore, DesOutcome, SyncScratch};
 pub use drift::{DriftSchedule, DriftSegment};
 pub use env::{Dynamics, Env, StepOutcome};
 pub use latency::{ResponseModel, RoundCtx};
+pub use scenarios::{FleetScenario, FLEET_SCENARIOS};
+pub use telemetry::{FileSink, Format, MemSink, Record, Recorder, Sink, SpanKind};
 pub use workload::{Arrival, Request, WorkloadGen};

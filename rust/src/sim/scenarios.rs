@@ -1,0 +1,175 @@
+//! Named fleet scenarios: curated (arrival process, drift schedule)
+//! compositions modeling the traffic regimes an end-edge-cloud
+//! orchestrator meets in production. The `eeco experiment fleet` driver
+//! runs every scenario against every placement policy and admission
+//! policy into one comparative report; each scenario is a pure function
+//! of the horizon, so a fleet cell is reproducible from
+//! (scenario name, horizon, seed) alone.
+//!
+//! The library (names in [`FLEET_SCENARIOS`]):
+//!
+//! - `diurnal` — a compressed day: nominal load, a morning ramp to 2.5x,
+//!   a midday lull at 0.5x, an evening shoulder at 1.5x.
+//! - `flash_crowd` — a 6x arrival spike for one fifth of the horizon
+//!   (viral burst), then back to nominal.
+//! - `brownout` — steady load while every device uplink degrades to weak
+//!   for the middle third of the horizon, then recovers.
+//! - `churn` — devices joining/leaving in aggregate: the offered rate
+//!   alternates between 0.5x and 2.5x every sixth of the horizon.
+//! - `multi_tenant` — bursty MMPP tenants sharing the edge, whose
+//!   edge->cloud uplink also turns weak in the second half.
+
+use crate::sim::arrivals::ArrivalProcess;
+use crate::sim::drift::{DriftSchedule, DriftSegment};
+use crate::types::NetCond;
+
+/// One named scenario: what arrives, and how the world drifts while it
+/// does. Placement/admission policies are deliberately *not* part of a
+/// scenario — the fleet crosses scenarios with those axes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetScenario {
+    pub name: &'static str,
+    pub process: ArrivalProcess,
+    pub drift: DriftSchedule,
+}
+
+/// Names of the scenario library, in fleet-report order.
+pub const FLEET_SCENARIOS: [&str; 5] =
+    ["diurnal", "flash_crowd", "brownout", "churn", "multi_tenant"];
+
+/// A rate-only drift segment.
+fn rate(start_ms: f64, mult: f64) -> DriftSegment {
+    DriftSegment { rate_mult: mult, ..DriftSegment::nominal(start_ms) }
+}
+
+/// Build a scenario by name, shaped to `horizon_ms` (drift breakpoints
+/// are fractions of the horizon, so the same scenario compresses onto a
+/// smoke-test horizon or stretches over a long trace). None for an
+/// unknown name.
+pub fn by_name(name: &str, horizon_ms: f64) -> Option<FleetScenario> {
+    assert!(
+        horizon_ms.is_finite() && horizon_ms > 0.0,
+        "fleet scenario horizon must be positive"
+    );
+    let h = horizon_ms;
+    // DriftSchedule::new cannot fail here: every breakpoint below is a
+    // strictly increasing positive fraction of a positive horizon.
+    let sched = |segs: Vec<DriftSegment>| DriftSchedule::new(segs).unwrap();
+    let s = match name {
+        "diurnal" => FleetScenario {
+            name: "diurnal",
+            process: ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            drift: sched(vec![
+                rate(h / 4.0, 2.5),
+                rate(h / 2.0, 0.5),
+                rate(3.0 * h / 4.0, 1.5),
+            ]),
+        },
+        "flash_crowd" => FleetScenario {
+            name: "flash_crowd",
+            process: ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            drift: sched(vec![rate(2.0 * h / 5.0, 6.0), rate(3.0 * h / 5.0, 1.0)]),
+        },
+        "brownout" => FleetScenario {
+            name: "brownout",
+            process: ArrivalProcess::Poisson { rate_per_s: 1.5 },
+            drift: sched(vec![
+                DriftSegment {
+                    device_cond: Some(NetCond::Weak),
+                    ..DriftSegment::nominal(h / 3.0)
+                },
+                // segments do not carry forward through ::new — restore
+                // the uplinks explicitly
+                DriftSegment {
+                    device_cond: Some(NetCond::Regular),
+                    ..DriftSegment::nominal(2.0 * h / 3.0)
+                },
+            ]),
+        },
+        "churn" => FleetScenario {
+            name: "churn",
+            process: ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            drift: sched(
+                (1..6)
+                    .map(|i| rate(i as f64 * h / 6.0, if i % 2 == 1 { 0.5 } else { 2.5 }))
+                    .collect(),
+            ),
+        },
+        "multi_tenant" => FleetScenario {
+            name: "multi_tenant",
+            process: ArrivalProcess::Mmpp {
+                calm_rate_per_s: 0.8,
+                burst_rate_per_s: 4.0,
+                mean_phase_ms: 2_000.0,
+            },
+            drift: sched(vec![DriftSegment {
+                edge_cond: Some(NetCond::Weak),
+                ..DriftSegment::nominal(h / 2.0)
+            }]),
+        },
+        _ => return None,
+    };
+    Some(s)
+}
+
+/// The whole library, shaped to `horizon_ms`, in [`FLEET_SCENARIOS`]
+/// order.
+pub fn all(horizon_ms: f64) -> Vec<FleetScenario> {
+    FLEET_SCENARIOS.iter().map(|n| by_name(n, horizon_ms).unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_name_builds_and_unknown_does_not() {
+        for name in FLEET_SCENARIOS {
+            let s = by_name(name, 30_000.0).unwrap();
+            assert_eq!(s.name, name);
+            assert!(s.process.is_valid(), "{name}");
+        }
+        assert!(by_name("rush_hour", 30_000.0).is_none());
+        assert_eq!(all(30_000.0).len(), FLEET_SCENARIOS.len());
+    }
+
+    #[test]
+    fn breakpoints_scale_with_the_horizon() {
+        for h in [8_000.0, 120_000.0] {
+            let s = by_name("flash_crowd", h).unwrap();
+            assert_eq!(s.drift.first_change_ms(), Some(2.0 * h / 5.0));
+            assert_eq!(s.drift.rate_mult_at(h / 2.0), 6.0, "inside the spike");
+            assert_eq!(s.drift.rate_mult_at(0.9 * h), 1.0, "after recovery");
+        }
+    }
+
+    #[test]
+    fn brownout_degrades_then_restores_device_uplinks() {
+        let s = by_name("brownout", 9_000.0).unwrap();
+        assert_eq!(s.drift.at(1_000.0).device_cond, None);
+        assert_eq!(s.drift.at(4_000.0).device_cond, Some(NetCond::Weak));
+        assert_eq!(s.drift.at(8_000.0).device_cond, Some(NetCond::Regular));
+        // rate stays nominal throughout: brownout is a cond-only scenario,
+        // so its arrival trace is bit-identical to the undrifted stream
+        assert_eq!(s.drift.next_rate_boundary_after(0.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn churn_alternates_rate_regimes() {
+        let h = 12_000.0;
+        let s = by_name("churn", h).unwrap();
+        assert_eq!(s.drift.rate_mult_at(0.5 * h / 6.0), 1.0, "head segment");
+        assert_eq!(s.drift.rate_mult_at(1.5 * h / 6.0), 0.5);
+        assert_eq!(s.drift.rate_mult_at(2.5 * h / 6.0), 2.5);
+        assert_eq!(s.drift.rate_mult_at(5.5 * h / 6.0), 0.5);
+    }
+
+    #[test]
+    fn multi_tenant_is_bursty_with_a_weak_second_half_backhaul() {
+        let s = by_name("multi_tenant", 10_000.0).unwrap();
+        assert!(matches!(s.process, ArrivalProcess::Mmpp { .. }));
+        assert_eq!(s.drift.at(2_000.0).edge_cond, None);
+        assert_eq!(s.drift.at(7_000.0).edge_cond, Some(NetCond::Weak));
+        assert_eq!(s.drift.at(7_000.0).device_cond, None);
+    }
+}

@@ -1,0 +1,425 @@
+//! Flight-recorder telemetry: per-request trace spans and periodic gauge
+//! samples, captured into a bounded buffer that flushes incrementally to
+//! a pluggable sink as JSONL or CSV.
+//!
+//! The recorder is **off by default and bitwise-transparent**: attaching
+//! one to a [`DesCore`](crate::sim::des::DesCore) draws zero extra RNG
+//! values and changes no float path — every hook copies scalars the
+//! engine already computed. Two recorder-on runs of the same inputs emit
+//! byte-identical output (records are formatted from deterministic state
+//! only; JSONL keys are sorted by the [`Json`] writer's `BTreeMap`), and
+//! the property suite pins recorder-off runs byte-identical to the
+//! pre-telemetry engine.
+//!
+//! # Record vocabulary
+//!
+//! Spans trace one request's lifecycle: `admit` (enqueued at its
+//! effective arrival), the admission verdicts `shed` / `defer` /
+//! `degrade`, `service_start` (a vCPU picked it up), and the terminal
+//! `complete` (with the user-visible response time). The control plane
+//! adds `epoch` spans at its decision boundaries. Gauges sample per-node
+//! backlog, en-route count and utilization at control ticks. Numeric ids
+//! that do not apply to a record are `-1`; float fields that do not apply
+//! are NaN, which serializes as `null` (JSONL) or an empty cell (CSV).
+
+use std::io::Write as _;
+use std::sync::{Arc, Mutex};
+
+use crate::config::TelemetryConfig;
+use crate::util::json::Json;
+
+/// What a span marks in the request lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Request enqueued (also emitted for degraded admissions, so every
+    /// request that entered the system has exactly one admit span).
+    Admit,
+    /// Rejected at ingress; terminal — the request never entered.
+    Shed,
+    /// Re-queued to a later control tick (one request may defer twice).
+    Defer,
+    /// Admitted under a cheaper model variant (paired with an admit span
+    /// carrying the degraded model id).
+    Degrade,
+    /// A vCPU began serving the request.
+    ServiceStart,
+    /// Request departed; terminal for admitted requests.
+    Complete,
+    /// Control-plane epoch boundary (`req` = epoch index).
+    Epoch,
+}
+
+impl SpanKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::Shed => "shed",
+            SpanKind::Defer => "defer",
+            SpanKind::Degrade => "degrade",
+            SpanKind::ServiceStart => "service_start",
+            SpanKind::Complete => "complete",
+            SpanKind::Epoch => "epoch",
+        }
+    }
+}
+
+/// One telemetry record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Record {
+    Span {
+        t_ms: f64,
+        kind: SpanKind,
+        /// Request id (or epoch index for [`SpanKind::Epoch`]).
+        req: u64,
+        /// Originating device (-1 = n/a).
+        device: i64,
+        /// DES compute-node index the span concerns (-1 = n/a).
+        node: i64,
+        /// Model variant in force (-1 = n/a).
+        model: i64,
+        /// User-visible response time; NaN until the terminal span.
+        response_ms: f64,
+    },
+    Gauge {
+        t_ms: f64,
+        node: usize,
+        /// In service + waiting at the node's FIFO.
+        backlog: usize,
+        /// Admitted but not yet arrived at the node's queue.
+        enroute: usize,
+        /// Backlog over parallel servers, clamped to [0, 1].
+        utilization: f64,
+    },
+}
+
+/// Where flushed records go. Implementations must not reorder or drop
+/// lines — byte-identity of recorder-on runs is part of the telemetry
+/// contract the property suite pins.
+pub trait Sink: Send {
+    fn write_line(&mut self, line: &str);
+    fn flush(&mut self);
+}
+
+/// Buffered file sink (JSONL/CSV file on disk).
+pub struct FileSink {
+    w: std::io::BufWriter<std::fs::File>,
+}
+
+impl FileSink {
+    /// Create (truncate) `path`, creating parent directories as needed.
+    pub fn create(path: &str) -> std::io::Result<FileSink> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        Ok(FileSink { w: std::io::BufWriter::new(std::fs::File::create(path)?) })
+    }
+}
+
+impl Sink for FileSink {
+    fn write_line(&mut self, line: &str) {
+        let _ = writeln!(self.w, "{line}");
+    }
+
+    fn flush(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// In-memory sink: clone the handle before boxing it into a recorder,
+/// then read [`MemSink::contents`] after the run — what the byte-identity
+/// tests compare.
+#[derive(Clone, Default)]
+pub struct MemSink {
+    buf: Arc<Mutex<String>>,
+}
+
+impl MemSink {
+    pub fn new() -> MemSink {
+        MemSink::default()
+    }
+
+    /// Everything written so far (one line per record).
+    pub fn contents(&self) -> String {
+        self.buf.lock().unwrap().clone()
+    }
+}
+
+impl Sink for MemSink {
+    fn write_line(&mut self, line: &str) {
+        let mut b = self.buf.lock().unwrap();
+        b.push_str(line);
+        b.push('\n');
+    }
+
+    fn flush(&mut self) {}
+}
+
+/// Output format of the flight recorder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    /// One compact JSON object per line (keys sorted — deterministic).
+    Jsonl,
+    /// One flat row per record under [`CSV_HEADER`].
+    Csv,
+}
+
+impl Format {
+    pub fn parse(s: &str) -> Result<Format, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "jsonl" | "json" => Ok(Format::Jsonl),
+            "csv" => Ok(Format::Csv),
+            other => Err(format!("unknown telemetry format '{other}' (want jsonl|csv)")),
+        }
+    }
+
+    pub fn extension(&self) -> &'static str {
+        match self {
+            Format::Jsonl => "jsonl",
+            Format::Csv => "csv",
+        }
+    }
+}
+
+/// Column order of CSV telemetry (span fields first, gauge fields last;
+/// cells that do not apply to a record stay empty).
+pub const CSV_HEADER: &str =
+    "t_ms,type,kind,req,device,node,model,response_ms,backlog,enroute,utilization";
+
+/// Bounded-buffer flight recorder: records accumulate in memory and
+/// drain to the sink whenever the buffer fills (and on [`Recorder::flush`]),
+/// so a long run streams incrementally instead of holding every span.
+pub struct Recorder {
+    ring: Vec<Record>,
+    cap: usize,
+    format: Format,
+    sink: Box<dyn Sink>,
+    /// Records pushed over the recorder's lifetime (drained or not).
+    total: u64,
+}
+
+impl Recorder {
+    /// `cap` bounds the in-memory buffer (min 1). A CSV recorder writes
+    /// its header immediately, so even an empty run leaves a parsable
+    /// artifact.
+    pub fn new(cap: usize, format: Format, mut sink: Box<dyn Sink>) -> Recorder {
+        if format == Format::Csv {
+            sink.write_line(CSV_HEADER);
+        }
+        Recorder { ring: Vec::with_capacity(cap.max(1)), cap: cap.max(1), format, sink, total: 0 }
+    }
+
+    /// Recorder writing to a freshly created file at `path`.
+    pub fn to_file(cap: usize, format: Format, path: &str) -> std::io::Result<Recorder> {
+        Ok(Recorder::new(cap, format, Box::new(FileSink::create(path)?)))
+    }
+
+    /// Build from a `[telemetry]` config: `Ok(None)` when disabled.
+    /// `path` falls back to `default_path` when the config leaves it
+    /// empty.
+    pub fn from_config(
+        cfg: &TelemetryConfig,
+        default_path: &str,
+    ) -> Result<Option<Recorder>, String> {
+        if !cfg.enabled {
+            return Ok(None);
+        }
+        let format = Format::parse(&cfg.format)?;
+        let path = if cfg.path.is_empty() { default_path.to_string() } else { cfg.path.clone() };
+        Recorder::to_file(cfg.capacity, format, &path)
+            .map(Some)
+            .map_err(|e| format!("telemetry path '{path}': {e}"))
+    }
+
+    pub fn format(&self) -> Format {
+        self.format
+    }
+
+    /// Records pushed so far (including already-drained ones).
+    pub fn total_records(&self) -> u64 {
+        self.total
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &mut self,
+        t_ms: f64,
+        kind: SpanKind,
+        req: u64,
+        device: i64,
+        node: i64,
+        model: i64,
+        response_ms: f64,
+    ) {
+        self.push(Record::Span { t_ms, kind, req, device, node, model, response_ms });
+    }
+
+    pub fn gauge(&mut self, t_ms: f64, node: usize, backlog: usize, enroute: usize, utilization: f64) {
+        self.push(Record::Gauge { t_ms, node, backlog, enroute, utilization });
+    }
+
+    fn push(&mut self, rec: Record) {
+        if self.ring.len() == self.cap {
+            self.drain();
+        }
+        self.ring.push(rec);
+        self.total += 1;
+    }
+
+    fn drain(&mut self) {
+        for rec in &self.ring {
+            self.sink.write_line(&format_record(rec, self.format));
+        }
+        self.ring.clear();
+    }
+
+    /// Drain the buffer and flush the sink. Call once after the run (the
+    /// orchestrator does this before returning its report).
+    pub fn flush(&mut self) {
+        self.drain();
+        self.sink.flush();
+    }
+}
+
+fn format_record(rec: &Record, format: Format) -> String {
+    match format {
+        Format::Jsonl => jsonl_line(rec),
+        Format::Csv => csv_line(rec),
+    }
+}
+
+fn jsonl_line(rec: &Record) -> String {
+    let j = match *rec {
+        Record::Span { t_ms, kind, req, device, node, model, response_ms } => Json::obj()
+            .set("type", "span")
+            .set("kind", kind.label())
+            .set("t_ms", t_ms)
+            .set("req", req as i64)
+            .set("device", device)
+            .set("node", node)
+            .set("model", model)
+            // NaN (no response yet) serializes as null
+            .set("response_ms", response_ms),
+        Record::Gauge { t_ms, node, backlog, enroute, utilization } => Json::obj()
+            .set("type", "gauge")
+            .set("t_ms", t_ms)
+            .set("node", node as i64)
+            .set("backlog", backlog)
+            .set("enroute", enroute)
+            .set("utilization", utilization),
+    };
+    j.to_string_compact()
+}
+
+fn csv_line(rec: &Record) -> String {
+    let f = |v: f64| if v.is_finite() { format!("{v}") } else { String::new() };
+    match *rec {
+        Record::Span { t_ms, kind, req, device, node, model, response_ms } => {
+            let id = |v: i64| if v < 0 { String::new() } else { v.to_string() };
+            format!(
+                "{},span,{},{},{},{},{},{},,,",
+                f(t_ms),
+                kind.label(),
+                req,
+                id(device),
+                id(node),
+                id(model),
+                f(response_ms),
+            )
+        }
+        Record::Gauge { t_ms, node, backlog, enroute, utilization } => format!(
+            "{},gauge,,,,{node},,,{backlog},{enroute},{}",
+            f(t_ms),
+            f(utilization),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem_recorder(cap: usize, format: Format) -> (Recorder, MemSink) {
+        let sink = MemSink::new();
+        (Recorder::new(cap, format, Box::new(sink.clone())), sink)
+    }
+
+    #[test]
+    fn jsonl_records_reparse_with_null_for_missing_values() {
+        let (mut rec, sink) = mem_recorder(8, Format::Jsonl);
+        rec.span(12.5, SpanKind::Admit, 3, 1, 0, 7, f64::NAN);
+        rec.span(99.0, SpanKind::Complete, 3, 1, 0, 7, 86.5);
+        rec.gauge(100.0, 2, 4, 1, 0.75);
+        rec.flush();
+        let text = sink.contents();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let admit = Json::parse(lines[0]).unwrap();
+        assert_eq!(admit.field("kind").unwrap().as_str(), Some("admit"));
+        assert_eq!(admit.field("response_ms").unwrap().as_f64(), None, "NaN -> null");
+        let complete = Json::parse(lines[1]).unwrap();
+        assert_eq!(complete.field("response_ms").unwrap().as_f64(), Some(86.5));
+        let gauge = Json::parse(lines[2]).unwrap();
+        assert_eq!(gauge.field("type").unwrap().as_str(), Some("gauge"));
+        assert_eq!(gauge.field("backlog").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn csv_rows_are_header_width_with_empty_na_cells() {
+        let (mut rec, sink) = mem_recorder(8, Format::Csv);
+        rec.span(0.0, SpanKind::Shed, 9, 2, -1, -1, f64::NAN);
+        rec.gauge(50.0, 1, 3, 0, 1.0);
+        rec.flush();
+        let text = sink.contents();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], CSV_HEADER);
+        let width = CSV_HEADER.split(',').count();
+        for l in &lines[1..] {
+            assert_eq!(l.split(',').count(), width, "{l}");
+        }
+        assert!(lines[1].contains(",shed,9,2,,,"), "{}", lines[1]);
+        assert!(lines[2].starts_with("50,gauge"), "{}", lines[2]);
+    }
+
+    #[test]
+    fn bounded_buffer_drains_incrementally_in_order() {
+        let (mut rec, sink) = mem_recorder(2, Format::Jsonl);
+        for i in 0..5u64 {
+            rec.span(i as f64, SpanKind::Admit, i, 0, 0, 0, f64::NAN);
+        }
+        // capacity 2: at least one drain already happened mid-run
+        assert!(!sink.contents().is_empty(), "buffer must stream before flush");
+        rec.flush();
+        assert_eq!(rec.total_records(), 5);
+        let text = sink.contents();
+        let reqs: Vec<u64> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap().field("req").unwrap().as_usize().unwrap() as u64)
+            .collect();
+        assert_eq!(reqs, vec![0, 1, 2, 3, 4], "drains must preserve order");
+    }
+
+    #[test]
+    fn format_parses_and_from_config_gates_on_enabled() {
+        assert_eq!(Format::parse("jsonl").unwrap(), Format::Jsonl);
+        assert_eq!(Format::parse("CSV").unwrap(), Format::Csv);
+        assert!(Format::parse("xml").is_err());
+        let off = TelemetryConfig::default();
+        assert!(Recorder::from_config(&off, "unused").unwrap().is_none());
+    }
+
+    #[test]
+    fn file_sink_roundtrips_jsonl() {
+        let dir = std::env::temp_dir().join(format!("eeco_telemetry_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("trace.jsonl");
+        let mut rec = Recorder::to_file(4, Format::Jsonl, path.to_str().unwrap()).unwrap();
+        rec.span(1.0, SpanKind::Epoch, 0, -1, -1, -1, f64::NAN);
+        rec.flush();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(body.trim()).unwrap();
+        assert_eq!(j.field("kind").unwrap().as_str(), Some("epoch"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

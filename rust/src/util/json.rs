@@ -100,6 +100,14 @@ impl Json {
         out
     }
 
+    /// Single-line rendering (no indentation or newlines) — what the
+    /// telemetry flight recorder emits as JSONL, one record per line.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |o: &mut String, n: usize| {
             if pretty {
@@ -113,7 +121,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal; writing them
+                    // verbatim produces output our own parser rejects
+                    // (empty-sample LatencySummary fields are NaN).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -430,6 +443,30 @@ mod tests {
         assert_eq!(j.get("c").unwrap().as_arr().unwrap().len(), 2);
         assert_eq!(j.field("b").unwrap().as_str(), Some("x"));
         assert!(j.field("nope").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null_and_reparse() {
+        // regression: NaN/inf used to be written verbatim, which this
+        // crate's own parser rejects
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = Json::obj().set("v", v).set("arr", vec![v, 1.0]);
+            let s = j.to_string_pretty();
+            assert!(!s.contains("NaN") && !s.contains("inf"), "{s}");
+            let back = Json::parse(&s).expect("non-finite output must reparse");
+            assert_eq!(back.get("v"), Some(&Json::Null));
+            // null reads back as "no value", not a number
+            assert_eq!(back.get("v").unwrap().as_f64(), None);
+            assert_eq!(back.get("arr").unwrap().as_arr().unwrap()[1], Json::Num(1.0));
+        }
+    }
+
+    #[test]
+    fn compact_writer_is_single_line_and_reparses() {
+        let j = Json::obj().set("a", 1usize).set("b", vec![1i64, 2]).set("c", "x");
+        let s = j.to_string_compact();
+        assert!(!s.contains('\n'), "{s}");
+        assert_eq!(Json::parse(&s).unwrap(), j);
     }
 
     #[test]

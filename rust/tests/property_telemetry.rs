@@ -1,0 +1,326 @@
+//! Property tests of the flight recorder's transparency contract: an
+//! attached recorder draws zero extra RNG values and changes no float
+//! path, so a recorder-on run must be bitwise identical to a recorder-off
+//! run — at the DES-core level and through the orchestrator's metrics —
+//! while the trace it emits is itself deterministic (byte-identical
+//! across reruns) and conserves the admission outcomes.
+
+use eeco::agent::baseline::FixedAgent;
+use eeco::config::AdmissionConfig;
+use eeco::monitor::TopoState;
+use eeco::prelude::*;
+use eeco::sim::admission::{stamp_deadlines, AdmissionPolicy, AdmitAll, DeadlineShed};
+use eeco::sim::arrivals::schedule;
+use eeco::sim::scenarios;
+use eeco::sim::{des, Env, Format, MemSink, Recorder, ResponseModel};
+use eeco::orchestrator::{ControlCfg, Orchestrator};
+use eeco::util::json::Json;
+use eeco::util::prop::forall;
+use eeco::util::rng::Rng;
+
+fn rand_decision(rng: &mut Rng, users: usize) -> Decision {
+    Decision((0..users).map(|_| Action::from_index(rng.below(ACTIONS_PER_DEVICE))).collect())
+}
+
+fn model_for(users: usize) -> ResponseModel {
+    ResponseModel::new(eeco::network::Network::new(
+        Scenario::exp_a(users),
+        Calibration::default(),
+    ))
+}
+
+/// Run one policed DES trace, optionally with a recorder attached, and
+/// return (outcome, emitted telemetry text).
+#[allow(clippy::too_many_arguments)]
+fn run_policed(
+    users: usize,
+    decision: &Decision,
+    trace: &[eeco::sim::Request],
+    horizon: f64,
+    period: f64,
+    shed: bool,
+    seed: u64,
+    record: Option<usize>, // Some(ring capacity) attaches a recorder
+) -> (des::DesOutcome, String) {
+    let model = model_for(users);
+    let state = TopoState::idle(&model.net.topo);
+    let mut core = des::DesCore::new();
+    core.install(&model, &state);
+    let sink = MemSink::new();
+    if let Some(cap) = record {
+        core.set_recorder(Some(Recorder::new(cap, Format::Jsonl, Box::new(sink.clone()))));
+    }
+    let mut policy: Box<dyn AdmissionPolicy> =
+        if shed { Box::new(DeadlineShed) } else { Box::new(AdmitAll) };
+    let mut out = des::DesOutcome::default();
+    core.run_admitted(decision, trace, horizon, period, policy.as_mut(), seed, &mut out);
+    if let Some(mut rec) = core.take_recorder() {
+        rec.flush();
+    }
+    (out, sink.contents())
+}
+
+/// An attached recorder must not change a single bit of the engine's
+/// outcome — same departures, same response times, same makespan — for
+/// random decisions, traces, policies, ring capacities and seeds.
+#[test]
+fn prop_recorder_is_bitwise_transparent_to_the_des_core() {
+    forall(
+        25,
+        0x7E1E,
+        |rng| {
+            let users = rng.range(1, 6);
+            (
+                users,
+                rand_decision(rng, users),
+                rng.range_f64(0.5, 5.0), // offered rate
+                rng.next_u64(),
+                rng.range_f64(500.0, 3000.0), // control period
+                rng.bool(0.5),                // DeadlineShed vs AdmitAll
+                rng.range(1, 64),             // ring capacity
+            )
+        },
+        |(users, decision, rate, seed, period, shed, cap)| {
+            let users = *users;
+            let horizon = 8_000.0;
+            let mut trace = schedule(
+                ArrivalProcess::Poisson { rate_per_s: *rate },
+                users,
+                horizon,
+                *seed,
+            );
+            {
+                let model = model_for(users);
+                let state = TopoState::idle(&model.net.topo);
+                let mut core = des::DesCore::new();
+                core.install(&model, &state);
+                stamp_deadlines(&mut trace, &core, 0.0, 2.5);
+            }
+            let (plain, none) = run_policed(
+                users, decision, &trace, horizon, *period, *shed, *seed ^ 9, None,
+            );
+            if !none.is_empty() {
+                return Err("recorder-off run must emit nothing".into());
+            }
+            let (taped, tape) = run_policed(
+                users, decision, &trace, horizon, *period, *shed, *seed ^ 9, Some(*cap),
+            );
+            if plain.completed.len() != taped.completed.len() {
+                return Err(format!(
+                    "{} completed vs {} with recorder",
+                    plain.completed.len(),
+                    taped.completed.len()
+                ));
+            }
+            for (a, b) in plain.completed.iter().zip(&taped.completed) {
+                if a.id != b.id || a.response_ms.to_bits() != b.response_ms.to_bits() {
+                    return Err(format!("req {} diverged under the recorder", a.id));
+                }
+            }
+            if plain.makespan_ms.to_bits() != taped.makespan_ms.to_bits() {
+                return Err("makespan diverged under the recorder".into());
+            }
+            if (plain.shed, plain.deferrals, plain.degraded)
+                != (taped.shed, taped.deferrals, taped.degraded)
+            {
+                return Err("admission counters diverged under the recorder".into());
+            }
+            if !trace.is_empty() && tape.is_empty() {
+                return Err("recorder-on run emitted no trace".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Two recorder-on runs of the same inputs emit byte-identical traces:
+/// every record is formatted from deterministic state only.
+#[test]
+fn prop_recorder_reruns_are_byte_identical() {
+    forall(
+        15,
+        0x7E1F,
+        |rng| {
+            let users = rng.range(1, 6);
+            (users, rand_decision(rng, users), rng.next_u64(), rng.range(1, 32))
+        },
+        |(users, decision, seed, cap)| {
+            let users = *users;
+            let horizon = 6_000.0;
+            let mut trace = schedule(
+                ArrivalProcess::Poisson { rate_per_s: 3.0 },
+                users,
+                horizon,
+                *seed,
+            );
+            {
+                let model = model_for(users);
+                let state = TopoState::idle(&model.net.topo);
+                let mut core = des::DesCore::new();
+                core.install(&model, &state);
+                stamp_deadlines(&mut trace, &core, 0.0, 2.0);
+            }
+            let run = |cap: usize| {
+                run_policed(users, decision, &trace, horizon, 1_000.0, true, *seed, Some(cap)).1
+            };
+            let a = run(*cap);
+            if a != run(*cap) {
+                return Err("same capacity rerun is not byte-identical".into());
+            }
+            // ring capacity only changes *when* lines drain, never what
+            // they say
+            if a != run(cap + 17) {
+                return Err("trace bytes depend on ring capacity".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The trace conserves the admission outcomes: one admit span per request
+/// that entered, one complete span per departure, shed spans matching the
+/// shed counter — and every line re-parses as JSON.
+#[test]
+fn prop_spans_conserve_admission_outcomes() {
+    forall(
+        20,
+        0x7E20,
+        |rng| {
+            let users = rng.range(1, 6);
+            (
+                users,
+                rand_decision(rng, users),
+                rng.range_f64(2.0, 8.0), // saturating: sheds happen
+                rng.next_u64(),
+            )
+        },
+        |(users, decision, rate, seed)| {
+            let users = *users;
+            let horizon = 8_000.0;
+            let mut trace = schedule(
+                ArrivalProcess::Poisson { rate_per_s: *rate },
+                users,
+                horizon,
+                *seed,
+            );
+            {
+                let model = model_for(users);
+                let state = TopoState::idle(&model.net.topo);
+                let mut core = des::DesCore::new();
+                core.install(&model, &state);
+                stamp_deadlines(&mut trace, &core, 0.0, 1.5);
+            }
+            let (out, tape) = run_policed(
+                users, decision, &trace, horizon, 1_000.0, true, *seed ^ 5, Some(16),
+            );
+            let mut admits = 0usize;
+            let mut sheds = 0usize;
+            let mut starts = 0usize;
+            let mut completes = 0usize;
+            for line in tape.lines() {
+                let j = Json::parse(line).map_err(|e| format!("unparsable line: {e}"))?;
+                if j.field("type")?.as_str() != Some("span") {
+                    return Err("core-level trace must contain only spans".into());
+                }
+                match j.field("kind")?.as_str() {
+                    Some("admit") => admits += 1,
+                    Some("shed") => sheds += 1,
+                    Some("service_start") => starts += 1,
+                    Some("complete") => {
+                        completes += 1;
+                        if j.field("response_ms")?.as_f64().is_none() {
+                            return Err("complete span without a response time".into());
+                        }
+                    }
+                    other => return Err(format!("unexpected span kind {other:?}")),
+                }
+            }
+            if sheds != out.shed {
+                return Err(format!("{sheds} shed spans vs counter {}", out.shed));
+            }
+            if admits + sheds != trace.len() {
+                return Err(format!(
+                    "{admits} admits + {sheds} sheds != {} offered",
+                    trace.len()
+                ));
+            }
+            if completes != out.completed.len() {
+                return Err(format!(
+                    "{completes} complete spans vs {} departures",
+                    out.completed.len()
+                ));
+            }
+            // in-flight at horizon: started but not completed, admitted
+            // but not started
+            if starts < completes || starts > admits {
+                return Err(format!("{starts} service starts vs [{completes}, {admits}]"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Through the orchestrator (control ticks, drift, gauges, epoch marks):
+/// recorder-on metrics are bit-exact against recorder-off, and the trace
+/// carries the control-plane records the core alone never emits.
+#[test]
+fn orchestrator_metrics_are_bit_exact_with_recorder_attached() {
+    let users = 4;
+    let seed = 0xF1EE7;
+    let horizon = 10_000.0;
+    let scn = scenarios::by_name("flash_crowd", horizon).unwrap();
+    let admission = AdmissionConfig {
+        policy: "deadline_shed".into(),
+        explicit: true,
+        ..AdmissionConfig::default()
+    };
+    let ctl = ControlCfg { period_ms: horizon / 8.0, online_learning: false };
+    let run = |sink: Option<&MemSink>| {
+        let env = Env::new(Scenario::exp_a(users), Calibration::default(), AccuracyConstraint::Max, seed);
+        let mut orch = Orchestrator::new(env, Box::new(FixedAgent::new(Tier::Edge(0), users)));
+        orch.env.freeze();
+        orch.env.reset_load();
+        if let Some(s) = sink {
+            orch.recorder = Some(Recorder::new(8, Format::Jsonl, Box::new(s.clone())));
+        }
+        orch.evaluate_admission(scn.process, horizon, seed, &ctl, &scn.drift, &admission)
+    };
+    let plain = run(None).metrics;
+    let sink = MemSink::new();
+    let taped = run(Some(&sink)).metrics;
+
+    assert_eq!(plain.requests, taped.requests);
+    assert_eq!(plain.shed, taped.shed);
+    assert_eq!(plain.deadline_misses, taped.deadline_misses);
+    assert_eq!(plain.peak_backlog, taped.peak_backlog);
+    for (what, a, b) in [
+        ("goodput", plain.goodput_rps, taped.goodput_rps),
+        ("throughput", plain.throughput_rps, taped.throughput_rps),
+        ("p50", plain.response.p50_ms, taped.response.p50_ms),
+        ("p95", plain.response.p95_ms, taped.response.p95_ms),
+        ("p99", plain.response.p99_ms, taped.response.p99_ms),
+        ("makespan", plain.makespan_ms, taped.makespan_ms),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
+    }
+
+    let (mut gauges, mut epochs) = (0usize, 0usize);
+    for line in sink.contents().lines() {
+        let j = Json::parse(line).unwrap();
+        match j.field("type").unwrap().as_str() {
+            Some("gauge") => {
+                gauges += 1;
+                let u = j.field("utilization").unwrap().as_f64().unwrap();
+                assert!((0.0..=1.0).contains(&u), "utilization {u} out of [0,1]");
+            }
+            Some("span") => {
+                if j.field("kind").unwrap().as_str() == Some("epoch") {
+                    epochs += 1;
+                }
+            }
+            other => panic!("unknown record type {other:?}"),
+        }
+    }
+    assert!(gauges > 0, "control ticks must sample gauges");
+    assert!(epochs > 0, "control ticks must mark epochs");
+}
