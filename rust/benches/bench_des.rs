@@ -100,6 +100,75 @@ fn main() {
         out.completed.len()
     });
 
+    // Sharded-engine scale series: 2000 users x 1 req/s x 500 s ~ 1M
+    // requests per iteration, streamed (never materialized) through
+    // `ShardedDes` at increasing shard counts on an 8-edge topology —
+    // the events/sec/shard budget the `scale` experiment reports in
+    // virtual time, measured here in wall time. `open_loop_1m_requests_
+    // sharded` is the headline all-shards row; the `_Nx` series keeps
+    // the scaling curve visible across PRs.
+    let shard_users = 2_000;
+    let shard_edges = 8;
+    let shard_model = ResponseModel::new(eeco::network::Network::with_edges(
+        Scenario::exp_a(shard_users),
+        Calibration::default(),
+        shard_edges,
+    ));
+    let shard_state = eeco::monitor::TopoState::idle(&shard_model.net.topo);
+    // Domain-local mix (the sharded engine's contract): 1% cloud, 1%
+    // home edge, the rest on-device, everyone on the cheapest model.
+    let shard_decision = Decision(
+        (0..shard_users)
+            .map(|d| Action {
+                placement: match d % 100 {
+                    0 => Tier::Cloud,
+                    1 => Tier::Edge(d % shard_edges),
+                    _ => Tier::Local,
+                },
+                model: ModelId(3),
+            })
+            .collect(),
+    );
+    let shard_pool = eeco::util::pool::ThreadPool::new(
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(shard_edges),
+        "bench-shard",
+    );
+    for shards in [1usize, 2, 4] {
+        let name = format!("open_loop_1m_requests_sharded_{shards}x");
+        b.run(&name, || {
+            eeco::sim::run_sharded_open_loop(
+                &shard_model,
+                &shard_state,
+                &shard_decision,
+                ArrivalProcess::Poisson { rate_per_s: 1.0 },
+                500_000.0,
+                9,
+                10,
+                &eeco::sim::DriftSchedule::none(),
+                eeco::sim::ShardPlan { shards, window_ms: 0.0 },
+                if shards > 1 { Some(&shard_pool) } else { None },
+            )
+            .summary
+            .completed
+        });
+    }
+    b.run("open_loop_1m_requests_sharded", || {
+        eeco::sim::run_sharded_open_loop(
+            &shard_model,
+            &shard_state,
+            &shard_decision,
+            ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            500_000.0,
+            9,
+            10,
+            &eeco::sim::DriftSchedule::none(),
+            eeco::sim::ShardPlan { shards: shard_edges, window_ms: 0.0 },
+            Some(&shard_pool),
+        )
+        .summary
+        .completed
+    });
+
     // Admission-path overhead probe: a 50-user trace well past saturation
     // through the deadline-shed ingress (per-arrival predicted-completion
     // check + shed accounting) at a 5 s control period. Compare against

@@ -228,6 +228,9 @@ pub struct TelemetryConfig {
     pub format: String,
     /// Output file; empty = a driver-chosen default under `results_dir`.
     pub path: String,
+    /// Gauge sampling: "tick" (per control tick, the default) | "event"
+    /// (additionally at every backlog-changing event).
+    pub gauges: String,
 }
 
 impl Default for TelemetryConfig {
@@ -237,6 +240,7 @@ impl Default for TelemetryConfig {
             capacity: 4096,
             format: "jsonl".into(),
             path: String::new(),
+            gauges: "tick".into(),
         }
     }
 }
@@ -246,7 +250,8 @@ impl TelemetryConfig {
         if self.capacity == 0 {
             return Err("telemetry.capacity must be >= 1".into());
         }
-        crate::sim::telemetry::Format::parse(&self.format).map(|_| ())
+        crate::sim::telemetry::Format::parse(&self.format)?;
+        crate::sim::telemetry::GaugeMode::parse(&self.gauges).map(|_| ())
     }
 }
 
@@ -321,6 +326,52 @@ impl FleetConfig {
     }
 }
 
+/// `[sharding]` section: how the sharded DES engine
+/// (`sim::shard::ShardedDes`) partitions the topology into edge-domain
+/// shards, plus the `--shards` / `--shard-window` CLI overrides.
+/// `shards = 1` (the default) is the serial baseline the bitwise
+/// property pins every parallel run against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardingConfig {
+    /// Edge-domain shard count. Must be in 1..=num_edges at run time
+    /// (the engine rejects anything else loudly).
+    pub shards: usize,
+    /// Conservative synchronization window, ms of virtual time.
+    /// 0 = auto: the minimum cloud path overhead over all devices.
+    pub window_ms: f64,
+    /// True when the user set either key ([sharding] / --shards /
+    /// --shard-window) — lets the scale sweep tell an explicit
+    /// `--shards 1` apart from the unconfigured default (which it
+    /// replaces with its own shard range).
+    pub explicit: bool,
+}
+
+impl Default for ShardingConfig {
+    fn default() -> Self {
+        ShardingConfig { shards: 1, window_ms: 0.0, explicit: false }
+    }
+}
+
+impl ShardingConfig {
+    /// The engine-level plan this config selects.
+    pub fn plan(&self) -> crate::sim::ShardPlan {
+        crate::sim::ShardPlan { shards: self.shards, window_ms: self.window_ms }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.shards < 1 {
+            return Err(format!("sharding.shards must be >= 1, got {}", self.shards));
+        }
+        if !(self.window_ms.is_finite() && self.window_ms >= 0.0) {
+            return Err(format!(
+                "sharding.window_ms must be finite and >= 0 (0 = auto), got {}",
+                self.window_ms
+            ));
+        }
+        Ok(())
+    }
+}
+
 /// `[topology]` section: how many edge nodes the end-edge-cloud network
 /// shards over, parsed from `edges = 2` or a sweep range `edges = "1..4"`
 /// (inclusive; `..=` also accepted) plus the `--edges` CLI override.
@@ -383,6 +434,7 @@ pub struct Config {
     pub admission: AdmissionConfig,
     pub telemetry: TelemetryConfig,
     pub fleet: FleetConfig,
+    pub sharding: ShardingConfig,
     pub artifacts_dir: String,
     pub results_dir: String,
 }
@@ -407,6 +459,7 @@ impl Default for Config {
             admission: AdmissionConfig::default(),
             telemetry: TelemetryConfig::default(),
             fleet: FleetConfig::default(),
+            sharding: ShardingConfig::default(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -537,10 +590,12 @@ impl Config {
             self.admission.explicit = true;
         }
         self.admission.validate()?;
-        // [telemetry] / [fleet]: same strict style — unknown keys and
-        // wrong value types are load-time errors, never silent defaults.
-        const TELEMETRY_KEYS: [&str; 4] = ["enabled", "capacity", "format", "path"];
+        // [telemetry] / [fleet] / [sharding]: same strict style — unknown
+        // keys and wrong value types are load-time errors, never silent
+        // defaults.
+        const TELEMETRY_KEYS: [&str; 5] = ["enabled", "capacity", "format", "path", "gauges"];
         const FLEET_KEYS: [&str; 4] = ["scenarios", "policies", "horizon_ms", "fast"];
+        const SHARDING_KEYS: [&str; 2] = ["shards", "window_ms"];
         for key in doc.entries.keys() {
             if let Some(k) = key.strip_prefix("telemetry.") {
                 if !TELEMETRY_KEYS.contains(&k) {
@@ -555,6 +610,14 @@ impl Config {
                     return Err(format!(
                         "unknown [fleet] key '{k}' (known: {})",
                         FLEET_KEYS.join(", ")
+                    ));
+                }
+            }
+            if let Some(k) = key.strip_prefix("sharding.") {
+                if !SHARDING_KEYS.contains(&k) {
+                    return Err(format!(
+                        "unknown [sharding] key '{k}' (known: {})",
+                        SHARDING_KEYS.join(", ")
                     ));
                 }
             }
@@ -577,6 +640,12 @@ impl Config {
             self.telemetry.format = v
                 .as_str()
                 .ok_or_else(|| "telemetry.format must be a string (jsonl|csv)".to_string())?
+                .to_string();
+        }
+        if let Some(v) = doc.get("telemetry.gauges") {
+            self.telemetry.gauges = v
+                .as_str()
+                .ok_or_else(|| "telemetry.gauges must be a string (tick|event)".to_string())?
                 .to_string();
         }
         if let Some(v) = doc.get("telemetry.path") {
@@ -610,6 +679,24 @@ impl Config {
                 .ok_or_else(|| "fleet.fast must be a bare boolean (true|false)".to_string())?;
         }
         self.fleet.validate()?;
+        if let Some(v) = doc.get("sharding.shards") {
+            let s = v
+                .as_i64()
+                .ok_or_else(|| "sharding.shards must be an integer".to_string())?;
+            if s < 1 {
+                return Err(format!("sharding.shards must be >= 1, got {s}"));
+            }
+            self.sharding.shards = s as usize;
+            self.sharding.explicit = true;
+        }
+        if let Some(v) = doc.get("sharding.window_ms") {
+            let w = v
+                .as_f64()
+                .ok_or_else(|| "sharding.window_ms must be a number (ms; 0 = auto)".to_string())?;
+            self.sharding.window_ms = w;
+            self.sharding.explicit = true;
+        }
+        self.sharding.validate()?;
         Ok(())
     }
 
@@ -689,6 +776,9 @@ impl Config {
         if let Some(f) = args.get("telemetry-format") {
             self.telemetry.format = f.to_string();
         }
+        if let Some(g) = args.get("telemetry-gauges") {
+            self.telemetry.gauges = g.to_string();
+        }
         self.telemetry.validate()?;
         if let Some(s) = args.get("fleet-scenarios") {
             self.fleet.scenarios = s.to_string();
@@ -700,6 +790,20 @@ impl Config {
             self.fleet.fast = true;
         }
         self.fleet.validate()?;
+        if let Some(v) = args.get("shards") {
+            let s: usize =
+                v.parse().map_err(|_| format!("bad --shards '{v}' (want a count >= 1)"))?;
+            self.sharding.shards = s;
+            self.sharding.explicit = true;
+        }
+        if let Some(v) = args.get("shard-window") {
+            let w: f64 = v
+                .parse()
+                .map_err(|_| format!("bad --shard-window '{v}' (want ms; 0 = auto)"))?;
+            self.sharding.window_ms = w;
+            self.sharding.explicit = true;
+        }
+        self.sharding.validate()?;
         Ok(())
     }
 }
@@ -964,7 +1068,7 @@ mod tests {
         assert!(d.telemetry.validate().is_ok());
 
         let doc = Doc::parse(
-            "[telemetry]\nenabled = true\ncapacity = 128\nformat = \"csv\"\npath = \"/tmp/t.csv\"\n",
+            "[telemetry]\nenabled = true\ncapacity = 128\nformat = \"csv\"\npath = \"/tmp/t.csv\"\ngauges = \"event\"\n",
         )
         .unwrap();
         let mut c = Config::default();
@@ -973,6 +1077,11 @@ mod tests {
         assert_eq!(c.telemetry.capacity, 128);
         assert_eq!(c.telemetry.format, "csv");
         assert_eq!(c.telemetry.path, "/tmp/t.csv");
+        assert_eq!(c.telemetry.gauges, "event");
+
+        // gauges is validated like format: unknown modes rejected
+        let bad = Doc::parse("[telemetry]\ngauges = \"always\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
 
         // unknown keys, wrong types and bad knobs rejected at load time
         let bad = Doc::parse("[telemetry]\nenabld = true\n").unwrap();
@@ -1001,6 +1110,48 @@ mod tests {
         assert_eq!(Config::load(&args).unwrap().telemetry.format, "csv");
         let bad =
             Args::parse(["--telemetry-format", "xml"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+    }
+
+    #[test]
+    fn sharding_section_parses_strictly() {
+        // defaults: single shard (serial baseline), auto window, implicit
+        let d = Config::default();
+        assert_eq!(d.sharding.shards, 1);
+        assert_eq!(d.sharding.window_ms, 0.0);
+        assert!(!d.sharding.explicit);
+        assert!(d.sharding.validate().is_ok());
+        assert_eq!(d.sharding.plan(), crate::sim::ShardPlan::default());
+
+        let doc = Doc::parse("[sharding]\nshards = 4\nwindow_ms = 250\n").unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.sharding.shards, 4);
+        assert_eq!(c.sharding.window_ms, 250.0);
+        assert!(c.sharding.explicit);
+
+        // unknown keys, wrong types and bad knobs rejected at load time
+        let bad = Doc::parse("[sharding]\nshardz = 2\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[sharding]\nshards = \"two\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[sharding]\nshards = 0\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[sharding]\nwindow_ms = -5\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn sharding_cli_overrides() {
+        let args =
+            Args::parse(["--shards", "3", "--shard-window", "100"].iter().map(|s| s.to_string()));
+        let c = Config::load(&args).unwrap();
+        assert_eq!(c.sharding.shards, 3);
+        assert_eq!(c.sharding.window_ms, 100.0);
+        assert!(c.sharding.explicit);
+        let bad = Args::parse(["--shards", "zero"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(["--shards", "0"].iter().map(|s| s.to_string()));
         assert!(Config::load(&bad).is_err());
     }
 

@@ -8,6 +8,7 @@ pub mod figures;
 pub mod fleet;
 pub mod overhead;
 pub mod overload;
+pub mod scale;
 pub mod tables;
 pub mod traffic;
 pub mod training;
@@ -121,7 +122,7 @@ impl ExpCtx {
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig1c", "fig5", "table8", "table9", "table10", "fig6", "fig7",
     "table11", "fig8", "table12", "prediction", "traffic_sweep", "multi_edge", "drift",
-    "overload", "fleet",
+    "overload", "fleet", "scale",
 ];
 
 /// Dispatch an experiment by id.
@@ -145,6 +146,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "drift" => drift::drift(ctx),
         "overload" => overload::overload(ctx),
         "fleet" => fleet::fleet(ctx),
+        "scale" => scale::scale(ctx),
         other => Err(anyhow!("unknown experiment '{other}' (known: {ALL:?})")),
     }
 }
@@ -176,8 +178,8 @@ mod tests {
         let ctx = ExpCtx::new(Config::default());
         assert!(run("nope", &ctx).is_err());
         // 13 paper experiments + traffic_sweep + multi_edge + drift +
-        // overload + fleet
-        assert_eq!(ALL.len(), 18);
+        // overload + fleet + scale
+        assert_eq!(ALL.len(), 19);
     }
 
     #[test]

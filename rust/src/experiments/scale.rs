@@ -1,0 +1,336 @@
+//! `scale`: the sharded-DES scaling sweep — shard counts x request
+//! volumes played through [`crate::sim::ShardedDes`] with streaming
+//! arrivals. Each row reports virtual-time throughput, wall-clock
+//! events/sec, and `peak_rss_proxy` (peak live flights + pending events
+//! across shards — the measured bounded-memory column: it tracks the
+//! live set, not the trace length). Every volume runs a single-shard
+//! serial baseline first and every sharded run is checked against its
+//! digest (`serial_match`); any mismatch fails the experiment, which is
+//! what the CI `scale-smoke` job gates on.
+//!
+//! The workload is the engine's target regime: a large device
+//! population (10k users in the full sweep, 1M+ offered requests at the
+//! top volume) running the cheapest model mostly on-device, with a thin
+//! slice of home-edge and cloud offloading so the uplink coupling and
+//! the cloud loop both stay exercised without saturating either.
+//! `--fast` / `EECO_FAST` shrinks it to a CI smoke slice (hundreds of
+//! users, shards 1..=4 on a 4-edge topology) that still proves the
+//! bitwise property.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Scenario;
+use crate::metrics::{render_table, save_json, Csv};
+use crate::monitor::TopoState;
+use crate::network::Network;
+use crate::sim::{
+    run_sharded_open_loop, ArrivalProcess, DriftSchedule, ResponseModel, ShardPlan,
+};
+use crate::types::{Action, Decision, ModelId, Placement};
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+
+use super::ExpCtx;
+
+/// Per-user Poisson rate. One request per user-second keeps every tier
+/// far from saturation at the d3 service times (~32 ms on-device), so
+/// the live set — and with it `peak_rss_proxy` — stays small no matter
+/// how long the trace runs.
+const RATE_PER_S: f64 = 1.0;
+
+/// Domain-local placement mix: 1% cloud, 1% home edge, 98% on-device,
+/// everyone on the cheapest model (d3). The offload slices keep the
+/// cloud loop and the per-edge uplinks busy enough to matter while the
+/// aggregate stays stable at any population size.
+fn scale_decision(users: usize, edges: usize) -> Decision {
+    Decision(
+        (0..users)
+            .map(|d| Action {
+                placement: match d % 100 {
+                    0 => Placement::Cloud,
+                    1 => Placement::Edge(d % edges),
+                    _ => Placement::Local,
+                },
+                model: ModelId(3),
+            })
+            .collect(),
+    )
+}
+
+struct Row {
+    target: u64,
+    shards: usize,
+    windows: u64,
+    window_ms: f64,
+    offered: u64,
+    completed: u64,
+    throughput_rps: f64,
+    mean_ms: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    peak_rss_proxy: u64,
+    events: u64,
+    events_per_s: f64,
+    wall_ms: f64,
+    serial_match: bool,
+}
+
+pub fn scale(ctx: &ExpCtx) -> Result<()> {
+    let fast = ctx.cfg.fleet.fast || std::env::var("EECO_FAST").is_ok();
+    // The full sweep is the acceptance workload (10k users, 1M+ requests
+    // at the top volume); the smoke slice proves the same properties in
+    // seconds.
+    let (users, edges, volumes, mut shard_counts): (usize, usize, Vec<u64>, Vec<usize>) =
+        if fast {
+            (200, 4, vec![3_000], vec![1, 2, 3, 4])
+        } else {
+            (10_000, 8, vec![100_000, 1_000_000], vec![1, 2, 4, 8])
+        };
+    if ctx.cfg.sharding.explicit {
+        // `--shards N` / `[sharding] shards` narrows the sweep to that
+        // count (the serial baseline is re-added below as the witness).
+        shard_counts = vec![ctx.cfg.sharding.shards.min(edges)];
+    }
+    if shard_counts[0] != 1 {
+        shard_counts.insert(0, 1);
+    }
+    let window_ms = if ctx.cfg.sharding.explicit { ctx.cfg.sharding.window_ms } else { 0.0 };
+    let seed = ctx.cfg.seed;
+
+    println!(
+        "\n== scale: {users} users / {edges} edges, {} volume(s) x shards {shard_counts:?}, \
+         {RATE_PER_S} req/s/user ==",
+        volumes.len()
+    );
+
+    let net = Network::with_edges(Scenario::exp_a(users), ctx.cfg.calibration.clone(), edges);
+    let state = TopoState::idle(&net.topo);
+    let model = ResponseModel::new(net);
+    let decision = scale_decision(users, edges);
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(shard_counts.iter().copied().max().unwrap_or(1));
+    let pool = ThreadPool::new(workers.max(1), "scale");
+
+    let mut rows: Vec<Row> = Vec::new();
+    let mut all_match = true;
+    for &target in &volumes {
+        // Horizon sized for the target volume with 1% headroom so the
+        // Poisson draw lands at or above it; nothing is materialized, so
+        // the horizon costs live-set memory only.
+        let horizon_ms = target as f64 / (users as f64 * RATE_PER_S) * 1000.0 * 1.01;
+        let mut serial_digest = 0u64;
+        for &shards in &shard_counts {
+            let plan = ShardPlan { shards, window_ms };
+            let wall = Instant::now();
+            let out = run_sharded_open_loop(
+                &model,
+                &state,
+                &decision,
+                ArrivalProcess::Poisson { rate_per_s: RATE_PER_S },
+                horizon_ms,
+                seed,
+                seed ^ 0x5EED_DE5,
+                &DriftSchedule::none(),
+                plan,
+                if shards > 1 { Some(&pool) } else { None },
+            );
+            let wall_ms = wall.elapsed().as_secs_f64() * 1000.0;
+            if shards == 1 {
+                serial_digest = out.summary.digest;
+            }
+            let serial_match = out.summary.digest == serial_digest;
+            all_match &= serial_match;
+            if !out.conservation_ok {
+                return Err(anyhow!(
+                    "scale: conservation violated at volume {target}, {shards} shard(s)"
+                ));
+            }
+            rows.push(Row {
+                target,
+                shards,
+                windows: out.windows,
+                window_ms: out.window_ms,
+                offered: out.offered,
+                completed: out.summary.completed,
+                throughput_rps: out.throughput_per_s(),
+                mean_ms: out.summary.mean_response_ms(),
+                p50_ms: out.summary.approx_percentile_ms(0.50),
+                p99_ms: out.summary.approx_percentile_ms(0.99),
+                peak_rss_proxy: out.peak_rss_proxy,
+                events: out.events,
+                events_per_s: if wall_ms > 0.0 {
+                    out.events as f64 / (wall_ms / 1000.0)
+                } else {
+                    0.0
+                },
+                wall_ms,
+                serial_match,
+            });
+        }
+    }
+
+    let mut csv = Csv::new(&[
+        "volume",
+        "shards",
+        "windows",
+        "window_ms",
+        "offered",
+        "completed",
+        "throughput_rps",
+        "mean_ms",
+        "p50_ms",
+        "p99_ms",
+        "peak_rss_proxy",
+        "events",
+        "events_per_s",
+        "wall_ms",
+        "serial_match",
+    ]);
+    let mut table = Vec::new();
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        csv.row(&[
+            r.target.to_string(),
+            r.shards.to_string(),
+            r.windows.to_string(),
+            format!("{:.3}", r.window_ms),
+            r.offered.to_string(),
+            r.completed.to_string(),
+            format!("{:.2}", r.throughput_rps),
+            format!("{:.2}", r.mean_ms),
+            format!("{:.1}", r.p50_ms),
+            format!("{:.1}", r.p99_ms),
+            r.peak_rss_proxy.to_string(),
+            r.events.to_string(),
+            format!("{:.0}", r.events_per_s),
+            format!("{:.1}", r.wall_ms),
+            r.serial_match.to_string(),
+        ]);
+        table.push(vec![
+            r.target.to_string(),
+            r.shards.to_string(),
+            r.offered.to_string(),
+            format!("{:.1}", r.mean_ms),
+            r.peak_rss_proxy.to_string(),
+            format!("{:.2}M", r.events_per_s / 1e6),
+            format!("{:.0}", r.wall_ms),
+            r.serial_match.to_string(),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .set("volume", r.target as i64)
+                .set("shards", r.shards)
+                .set("windows", r.windows as i64)
+                .set("window_ms", r.window_ms)
+                .set("offered", r.offered as i64)
+                .set("completed", r.completed as i64)
+                .set("throughput_rps", r.throughput_rps)
+                .set("mean_ms", r.mean_ms)
+                .set("p50_ms", r.p50_ms)
+                .set("p99_ms", r.p99_ms)
+                .set("peak_rss_proxy", r.peak_rss_proxy as i64)
+                .set("events", r.events as i64)
+                .set("events_per_s", r.events_per_s)
+                .set("wall_ms", r.wall_ms)
+                .set("serial_match", r.serial_match),
+        );
+    }
+    print!(
+        "{}",
+        render_table(
+            &["volume", "shards", "offered", "mean_ms", "peak_rss", "ev/s", "wall_ms", "ok"],
+            &table
+        )
+    );
+    if let Some(top) = rows.iter().max_by_key(|r| (r.target, r.shards as u64)) {
+        println!(
+            "top volume: {} offered across {} shard(s), peak_rss_proxy {} \
+             ({:.4}% of the trace)",
+            top.offered,
+            top.shards,
+            top.peak_rss_proxy,
+            100.0 * top.peak_rss_proxy as f64 / top.offered.max(1) as f64
+        );
+    }
+
+    csv.save(&ctx.cfg.results_dir, "scale")?;
+    let report = Json::obj()
+        .set("users", users)
+        .set("edges", edges)
+        .set("rate_per_s", RATE_PER_S)
+        .set("seed", seed as i64)
+        .set("all_match", all_match)
+        .set("rows", Json::Arr(json_rows));
+    save_json(&ctx.cfg.results_dir, "scale", &report)?;
+
+    if !all_match {
+        return Err(anyhow!("scale: sharded digest diverged from the serial baseline"));
+    }
+    println!("shard==serial self-check passed for shards {shard_counts:?}");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::experiments::ExpCtx;
+
+    #[test]
+    fn scale_fast_slice_sweeps_shards_and_self_checks() {
+        let dir = std::env::temp_dir().join(format!("eeco_scale_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg =
+            Config { results_dir: dir.to_str().unwrap().into(), ..Default::default() };
+        cfg.fleet.fast = true; // the smoke slice
+        let ctx = ExpCtx::new(cfg);
+        scale(&ctx).unwrap();
+
+        // fast slice: 1 volume x shards {1,2,3,4}, self-check column true
+        let body =
+            std::fs::read_to_string(format!("{}/scale.csv", ctx.cfg.results_dir)).unwrap();
+        assert_eq!(body.lines().count(), 1 + 4, "{body}");
+        for line in body.lines().skip(1) {
+            assert!(line.ends_with(",true"), "serial_match must hold: {line}");
+        }
+
+        let json =
+            std::fs::read_to_string(format!("{}/scale.json", ctx.cfg.results_dir)).unwrap();
+        let j = Json::parse(&json).unwrap();
+        assert_eq!(j.field("all_match").unwrap().as_bool(), Some(true));
+        match j.field("rows").unwrap() {
+            Json::Arr(v) => {
+                assert_eq!(v.len(), 4);
+                for row in v {
+                    // bounded memory is a measured column, never zero
+                    let peak = row.field("peak_rss_proxy").unwrap().as_f64().unwrap();
+                    assert!(peak > 0.0);
+                }
+            }
+            other => panic!("rows must be an array, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn explicit_shard_config_narrows_the_sweep() {
+        let dir = std::env::temp_dir().join(format!("eeco_scale_n_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg =
+            Config { results_dir: dir.to_str().unwrap().into(), ..Default::default() };
+        cfg.fleet.fast = true;
+        cfg.sharding.shards = 3;
+        cfg.sharding.explicit = true;
+        let ctx = ExpCtx::new(cfg);
+        scale(&ctx).unwrap();
+        // serial witness + the requested count
+        let body =
+            std::fs::read_to_string(format!("{}/scale.csv", ctx.cfg.results_dir)).unwrap();
+        assert_eq!(body.lines().count(), 1 + 2, "{body}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

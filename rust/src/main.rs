@@ -140,15 +140,34 @@ OPTIONS (fleet):  --fleet-scenarios a,b|all  --fleet-policies a,b|all
                   comparative report (results/fleet.csv + fleet.json)
                   --fast   smoke slice (2 scenarios x 2 policies, short
                   horizon; EECO_FAST=1 does the same)
+OPTIONS (sharding): --shards N   partition the open-loop DES by edge
+                  domain: N independent event loops (device + home-edge
+                  traffic never crosses shards; the cloud uplink is the
+                  only coupling), arrivals streamed per conservative
+                  sync window instead of materialized — bitwise
+                  identical to the serial engine for any N
+                  --shard-window MS   override the sync window (default
+                  0 = the memoized service tables' minimum cloud path
+                  overhead, the conservative bound)
+                  ([sharding] shards/window_ms in TOML; `experiment
+                  scale` sweeps shard counts x request volumes into
+                  results/scale.csv + scale.json with a gating
+                  shard==serial digest self-check — --fast / EECO_FAST=1
+                  runs the CI smoke slice)
 OPTIONS (telemetry): --telemetry PATH  attach the flight recorder and
                   write per-request trace spans (arrival, admission
                   verdict, service start, completion) + per-tick gauges
                   (backlog, en-route, utilization) to PATH; off by
                   default and bitwise-transparent to every metric
                   --telemetry-format jsonl|csv   trace encoding
-                  ([telemetry] enabled/capacity/format/path in TOML;
-                  `experiment fleet` writes one trace per matrix cell
-                  under results/fleet_telemetry/)",
+                  --telemetry-gauges tick|event   gauge sampling: per
+                  control tick (default) or additionally at every
+                  backlog-changing event (full queue trajectories; both
+                  bitwise-transparent, sink failures degrade to a
+                  dropped_records count instead of panicking)
+                  ([telemetry] enabled/capacity/format/path/gauges in
+                  TOML; `experiment fleet` writes one trace per matrix
+                  cell under results/fleet_telemetry/)",
         ids = experiments::ALL.join(",")
     );
 }

@@ -15,6 +15,8 @@
 //! trace is a pure function of (process, users, horizon, seed) — the
 //! bit-exact determinism the property suite pins down.
 
+use std::collections::BinaryHeap;
+
 use crate::sim::drift::DriftSchedule;
 use crate::sim::workload::Request;
 use crate::util::rng::Rng;
@@ -167,6 +169,191 @@ impl DeviceStream {
     }
 }
 
+/// One pending head-of-stream arrival in the [`ArrivalStream`] merge heap.
+/// Ordering is inverted (earliest time, then lowest device, pops first) so
+/// `BinaryHeap`'s max-heap behaves as a min-heap — the same
+/// `(t, device)` key `schedule_with_drift` sorts by, which is what makes
+/// the streamed order identical to the materialized one.
+struct NextArrival {
+    t_ms: f64,
+    device: usize,
+    slot: usize,
+}
+
+impl PartialEq for NextArrival {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for NextArrival {}
+impl PartialOrd for NextArrival {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for NextArrival {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .t_ms
+            .total_cmp(&self.t_ms)
+            .then_with(|| other.device.cmp(&self.device))
+    }
+}
+
+/// How an [`ArrivalStream`] assigns request ids.
+///
+/// * `Sequential` — ids count up in merged trace order, exactly like
+///   [`schedule_with_drift`] (which is this stream, collected). Only
+///   canonical when the stream owns the *whole* device population.
+/// * `DeviceTagged` — id = `(per-device sequence << 32) | device`:
+///   unique across the population and computable by any shard that owns
+///   the device, independent of what other shards emit. This is what
+///   keeps sharded traces identical no matter how devices are
+///   partitioned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IdMode {
+    Sequential,
+    DeviceTagged,
+}
+
+/// Lazily merged arrival trace: a k-way one-ahead merge over per-device
+/// [`DeviceStream`]s, yielding [`Request`]s in `(arrival_ms, device)`
+/// order without ever materializing the schedule. Memory is O(devices),
+/// independent of the horizon or request volume — the streaming half of
+/// the sharded-DES subsystem.
+///
+/// Determinism contract: the base RNG is forked once per device of the
+/// *full* population in device order (owned or not), so every device's
+/// draw stream — and therefore the merged trace — is a pure function of
+/// (process, users, horizon, seed, drift), bit-identical across any
+/// shard partition and to the collected [`schedule_with_drift`] wrapper.
+pub struct ArrivalStream {
+    /// Owned devices only: (device index, its generator).
+    streams: Vec<(usize, DeviceStream)>,
+    /// Per-slot count of requests already emitted (DeviceTagged ids).
+    emitted: Vec<u64>,
+    heap: BinaryHeap<NextArrival>,
+    drift: DriftSchedule,
+    horizon_ms: f64,
+    id_mode: IdMode,
+    next_seq: u64,
+}
+
+impl ArrivalStream {
+    /// Stream the full population with sequential (trace-order) ids —
+    /// the lazy equivalent of [`schedule_with_drift`].
+    pub fn new(
+        process: ArrivalProcess,
+        users: usize,
+        horizon_ms: f64,
+        seed: u64,
+        drift: &DriftSchedule,
+    ) -> ArrivalStream {
+        ArrivalStream::with_filter(
+            process,
+            users,
+            horizon_ms,
+            seed,
+            drift,
+            IdMode::Sequential,
+            |_| true,
+        )
+    }
+
+    /// Stream only the devices `keep` accepts, with partition-invariant
+    /// [`IdMode::DeviceTagged`] ids — the per-shard arrival source. The
+    /// base RNG still forks once per device of the full population, in
+    /// order, so owned devices see exactly the draws they would in any
+    /// other partition (including the unsharded one).
+    pub fn with_filter(
+        process: ArrivalProcess,
+        users: usize,
+        horizon_ms: f64,
+        seed: u64,
+        drift: &DriftSchedule,
+        id_mode: IdMode,
+        keep: impl Fn(usize) -> bool,
+    ) -> ArrivalStream {
+        assert!(users > 0, "schedule for zero devices");
+        assert!(horizon_ms > 0.0, "empty horizon");
+        assert!(process.is_valid(), "non-positive arrival knobs: {process:?}");
+        let mut base = Rng::new(seed);
+        let mut streams = Vec::new();
+        let mut heap = BinaryHeap::new();
+        for device in 0..users {
+            let fork = base.fork();
+            if !keep(device) {
+                continue;
+            }
+            let mut stream = DeviceStream::new(process, fork);
+            let t_ms = stream.next(drift);
+            let slot = streams.len();
+            streams.push((device, stream));
+            if t_ms < horizon_ms {
+                heap.push(NextArrival { t_ms, device, slot });
+            }
+        }
+        let emitted = vec![0; streams.len()];
+        ArrivalStream {
+            streams,
+            emitted,
+            heap,
+            drift: drift.clone(),
+            horizon_ms,
+            id_mode,
+            next_seq: 0,
+        }
+    }
+
+    /// Arrival time of the next pending request, if any.
+    pub fn peek_ms(&self) -> Option<f64> {
+        self.heap.peek().map(|n| n.t_ms)
+    }
+
+    /// Pop the next request only if it arrives strictly before
+    /// `limit_ms` — the windowed pull the sharded engine drains each
+    /// synchronization window with.
+    pub fn next_before(&mut self, limit_ms: f64) -> Option<Request> {
+        if self.peek_ms()? < limit_ms {
+            self.pop()
+        } else {
+            None
+        }
+    }
+
+    fn pop(&mut self) -> Option<Request> {
+        let head = self.heap.pop()?;
+        let NextArrival { t_ms, device, slot } = head;
+        // One-ahead refill: draw this device's next arrival now so the
+        // heap always holds each live device's head of stream.
+        let refill = self.streams[slot].1.next(&self.drift);
+        if refill < self.horizon_ms {
+            self.heap.push(NextArrival { t_ms: refill, device, slot });
+        }
+        let id = match self.id_mode {
+            IdMode::Sequential => {
+                let id = self.next_seq;
+                self.next_seq += 1;
+                id
+            }
+            IdMode::DeviceTagged => {
+                let k = self.emitted[slot];
+                self.emitted[slot] = k + 1;
+                (k << 32) | device as u64
+            }
+        };
+        Some(Request::at(id, device, t_ms))
+    }
+}
+
+impl Iterator for ArrivalStream {
+    type Item = Request;
+
+    fn next(&mut self) -> Option<Request> {
+        self.pop()
+    }
+}
+
 /// Expand an arrival process into the merged, time-ordered request trace
 /// for `users` devices over `[0, horizon_ms)`. Request ids are assigned in
 /// trace order (ties broken by device index) so the trace is canonical.
@@ -192,29 +379,10 @@ pub fn schedule_with_drift(
     seed: u64,
     drift: &DriftSchedule,
 ) -> Vec<Request> {
-    assert!(users > 0, "schedule for zero devices");
-    assert!(horizon_ms > 0.0, "empty horizon");
-    assert!(process.is_valid(), "non-positive arrival knobs: {process:?}");
-    let mut base = Rng::new(seed);
-    let mut raw: Vec<(f64, usize)> = Vec::new();
-    for device in 0..users {
-        let mut stream = DeviceStream::new(process, base.fork());
-        loop {
-            let t = stream.next(drift);
-            if t >= horizon_ms {
-                break;
-            }
-            raw.push((t, device));
-        }
-    }
-    raw.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     // Deadlines start at +inf (no deadline): admission control stamps them
     // afterwards (`sim::workload::stamp_fixed_deadlines` or the
     // SLO-multiplier path in `sim::admission::stamp_deadlines`).
-    raw.into_iter()
-        .enumerate()
-        .map(|(id, (arrival_ms, device))| Request::at(id as u64, device, arrival_ms))
-        .collect()
+    ArrivalStream::new(process, users, horizon_ms, seed, drift).collect()
 }
 
 #[cfg(test)]
@@ -346,6 +514,141 @@ mod tests {
         let times = |v: &[Request]| v.iter().map(|r| r.arrival_ms.to_bits()).collect::<Vec<_>>();
         assert_eq!(times(&a), times(&b), "same seed + schedule must be bit-exact");
         assert_ne!(times(&a), times(&c), "seed must matter under drift");
+    }
+
+    /// The pre-streaming reference algorithm: materialize every device's
+    /// draws, then sort by (t, device). `ArrivalStream` (and therefore
+    /// `schedule_with_drift`, its collected wrapper) must reproduce it
+    /// bit-exactly — this is the satellite pin that keeps the lazy merge
+    /// honest against the original semantics.
+    fn materialized_reference(
+        process: ArrivalProcess,
+        users: usize,
+        horizon_ms: f64,
+        seed: u64,
+        drift: &DriftSchedule,
+    ) -> Vec<Request> {
+        let mut base = Rng::new(seed);
+        let mut raw: Vec<(f64, usize)> = Vec::new();
+        for device in 0..users {
+            let mut stream = DeviceStream::new(process, base.fork());
+            loop {
+                let t = stream.next(drift);
+                if t >= horizon_ms {
+                    break;
+                }
+                raw.push((t, device));
+            }
+        }
+        raw.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        raw.into_iter()
+            .enumerate()
+            .map(|(id, (arrival_ms, device))| Request::at(id as u64, device, arrival_ms))
+            .collect()
+    }
+
+    #[test]
+    fn stream_matches_materialized_reference_bit_exactly() {
+        let drift = DriftSchedule::parse("2000:rate=3,net=weak;6000:rate=1").unwrap();
+        for p in [
+            ArrivalProcess::Poisson { rate_per_s: 8.0 },
+            ArrivalProcess::SyncRounds { period_ms: 350.0 },
+            ArrivalProcess::Mmpp {
+                calm_rate_per_s: 2.0,
+                burst_rate_per_s: 20.0,
+                mean_phase_ms: 700.0,
+            },
+        ] {
+            for sched in [DriftSchedule::none(), drift.clone()] {
+                let want = materialized_reference(p, 6, 10_000.0, 13, &sched);
+                let got = schedule_with_drift(p, 6, 10_000.0, 13, &sched);
+                assert_eq!(want.len(), got.len(), "{p:?}");
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.arrival_ms.to_bits(), b.arrival_ms.to_bits(), "{p:?}");
+                    assert_eq!((a.id, a.device), (b.id, b.device), "{p:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stream_windowed_pull_equals_full_drain() {
+        // next_before over successive windows must yield exactly the full
+        // iterator drain — the access pattern the sharded engine uses.
+        let p = ArrivalProcess::Poisson { rate_per_s: 20.0 };
+        let drift = DriftSchedule::none();
+        let full: Vec<Request> =
+            ArrivalStream::new(p, 4, 5_000.0, 17, &drift).collect();
+        let mut windowed = ArrivalStream::new(p, 4, 5_000.0, 17, &drift);
+        let mut got = Vec::new();
+        let mut t = 0.0;
+        while t < 5_000.0 {
+            let end = t + 400.0;
+            while let Some(r) = windowed.next_before(end) {
+                got.push(r);
+            }
+            t = end;
+        }
+        assert_eq!(full.len(), got.len());
+        for (a, b) in full.iter().zip(&got) {
+            assert_eq!(a.arrival_ms.to_bits(), b.arrival_ms.to_bits());
+            assert_eq!((a.id, a.device), (b.id, b.device));
+        }
+    }
+
+    #[test]
+    fn device_tagged_ids_are_partition_invariant() {
+        // Splitting the population across filtered streams must yield the
+        // same per-request (id, device, time) triples as the unsplit
+        // DeviceTagged stream — the invariant that makes sharded traces
+        // independent of the shard count.
+        let p = ArrivalProcess::Mmpp {
+            calm_rate_per_s: 3.0,
+            burst_rate_per_s: 15.0,
+            mean_phase_ms: 400.0,
+        };
+        let drift = DriftSchedule::parse("1500:rate=2").unwrap();
+        let whole: Vec<Request> = ArrivalStream::with_filter(
+            p,
+            6,
+            4_000.0,
+            23,
+            &drift,
+            IdMode::DeviceTagged,
+            |_| true,
+        )
+        .collect();
+        for shards in 2..=3usize {
+            let mut merged: Vec<Request> = Vec::new();
+            for s in 0..shards {
+                merged.extend(ArrivalStream::with_filter(
+                    p,
+                    6,
+                    4_000.0,
+                    23,
+                    &drift,
+                    IdMode::DeviceTagged,
+                    |d| d % shards == s,
+                ));
+            }
+            merged.sort_by(|a, b| {
+                a.arrival_ms.total_cmp(&b.arrival_ms).then(a.device.cmp(&b.device))
+            });
+            assert_eq!(whole.len(), merged.len(), "{shards} shards");
+            for (a, b) in whole.iter().zip(&merged) {
+                assert_eq!(a.arrival_ms.to_bits(), b.arrival_ms.to_bits());
+                assert_eq!((a.id, a.device), (b.id, b.device));
+            }
+        }
+        // DeviceTagged ids encode (sequence << 32) | device, so they are
+        // unique without any cross-shard coordination.
+        let mut ids: Vec<u64> = whole.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), whole.len(), "tagged ids must be unique");
+        for r in &whole {
+            assert_eq!((r.id & 0xFFFF_FFFF) as usize, r.device);
+        }
     }
 
     #[test]

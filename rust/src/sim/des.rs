@@ -55,7 +55,7 @@ use std::collections::VecDeque;
 use crate::monitor::StateView;
 use crate::sim::admission::{AdmissionPolicy, AdmitQuery, AdmitVerdict};
 use crate::sim::latency::{ResponseModel, RoundCtx};
-use crate::sim::telemetry::{Recorder, SpanKind};
+use crate::sim::telemetry::{GaugeMode, Recorder, SpanKind};
 use crate::sim::workload::Request;
 use crate::types::{Action, Decision, ModelId, Placement, NUM_MODELS};
 use crate::util::rng::Rng;
@@ -807,6 +807,10 @@ impl DesCore {
 
     /// Account a backlog change of compute node `node` at time `t`:
     /// integrate the old level over the elapsed interval, then shift.
+    /// With an event-granularity recorder ([`GaugeMode::Event`]) this is
+    /// also the gauge emission point: one sample of the affected node per
+    /// backlog change, copied from the counters just updated — no RNG, no
+    /// float-path change, so the mode stays bitwise-transparent.
     fn backlog_shift(&mut self, node: usize, t: f64, delta: i32) {
         self.bl_area[node] += self.bl_cur[node] as f64 * (t - self.bl_mark[node]);
         self.bl_mark[node] = t;
@@ -814,6 +818,14 @@ impl DesCore {
         self.bl_cur[node] = cur;
         if cur > self.bl_max[node] {
             self.bl_max[node] = cur;
+        }
+        if matches!(self.recorder.as_ref(), Some(r) if r.gauge_mode() == GaugeMode::Event) {
+            let backlog = cur as usize;
+            let enroute = self.enroute_count(node);
+            let utilization = (backlog as f64 / self.nodes[node].servers as f64).min(1.0);
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.gauge(t, node, backlog, enroute, utilization);
+            }
         }
     }
 

@@ -6,8 +6,10 @@
 //! changes mid-trace), named fleet scenarios composing the three, the
 //! synchronous-round RL environment (a thin adapter over the DES core),
 //! flight-recorder telemetry (per-request trace spans + periodic gauges,
-//! off by default and bitwise-transparent), and workload generators for
-//! the measured-mode serving path.
+//! off by default and bitwise-transparent), the sharded DES engine
+//! (per-edge-domain event loops + streaming arrivals, bitwise identical
+//! to serial for any shard count), and workload generators for the
+//! measured-mode serving path.
 
 pub mod admission;
 pub mod arrivals;
@@ -16,17 +18,21 @@ pub mod drift;
 pub mod env;
 pub mod latency;
 pub mod scenarios;
+pub mod shard;
 pub mod telemetry;
 pub mod workload;
 
 pub use admission::{
     AdmissionPolicy, AdmitAll, AdmitQuery, AdmitVerdict, DeadlineShed, Defer, Degrade,
 };
-pub use arrivals::ArrivalProcess;
+pub use arrivals::{ArrivalProcess, ArrivalStream, IdMode};
 pub use des::{BacklogStats, CompletedRequest, DesCore, DesOutcome, SyncScratch};
 pub use drift::{DriftSchedule, DriftSegment};
 pub use env::{Dynamics, Env, StepOutcome};
 pub use latency::{ResponseModel, RoundCtx};
 pub use scenarios::{FleetScenario, FLEET_SCENARIOS};
-pub use telemetry::{FileSink, Format, MemSink, Record, Recorder, Sink, SpanKind};
+pub use shard::{
+    run_sharded_open_loop, ShardPlan, ShardedDes, ShardedOutcome, StreamSummary,
+};
+pub use telemetry::{FileSink, Format, GaugeMode, MemSink, Record, Recorder, Sink, SpanKind};
 pub use workload::{Arrival, Request, WorkloadGen};

@@ -1,0 +1,1360 @@
+//! Sharded discrete-event engine: per-edge-domain event loops coupled
+//! only through the shared cloud uplink, fed by streaming arrivals.
+//!
+//! # Why sharding by edge domain is exact
+//!
+//! The DES layout routes every request over at most three nodes: its own
+//! device, its *home edge* (`Topology::home_edge`), and the cloud. Device
+//! and edge traffic never leaves the home-edge domain — the only
+//! cross-domain coupling is the cloud's vCPU queue. Crucially that
+//! coupling is **feed-forward**: a cloud-bound request pays its full path
+//! overhead *before* its home edge's ingress link (see
+//! `DesCore::admit_request`), rides the link, and only then joins the
+//! cloud queue; nothing the cloud does feeds back into any domain. So the
+//! simulation factors exactly into independent per-domain event loops
+//! plus one downstream cloud loop consuming their emissions.
+//!
+//! [`ShardedDes`] exploits that factorization. The [`crate::types::Topology`]
+//! is partitioned into `shards` groups of edge domains (edge `e` lives in
+//! shard `e % shards`, along with every device homed on it). Each shard
+//! simulator owns its devices' and edges' queues, a local event heap,
+//! a slab-allocated in-flight arena, and a lazy
+//! [`ArrivalStream`] restricted to its devices — memory is bounded by the
+//! *live* population, never the trace length. Shards advance in
+//! conservative time windows at `[control]`-style tick boundaries: all
+//! shards run to the window end (on
+//! [`crate::util::pool::ThreadPool::map_indexed`] when a pool is given),
+//! their cloud-bound departures are merged in canonical
+//! `(join time, request id)` order, and the cloud loop consumes the batch
+//! up to the same boundary. Because every cloud join carries at least the
+//! minimum cloud path overhead of delay — the memoized service tables'
+//! `d_min`, which is the default window — a batch can never land in the
+//! cloud's past: no shard can violate another's history, for *any*
+//! window size (the coupling is one-way; `d_min` is simply the bound that
+//! makes the invariant obvious and keeps sync overhead negligible).
+//!
+//! # Determinism contract
+//!
+//! The composed trace is a pure function of
+//! (model, state, decision, process, horizon, seeds, drift) —
+//! *independent of the shard count, the window size, and whether a thread
+//! pool is used*. Three mechanisms make that hold bitwise:
+//!
+//! * arrival ids are [`IdMode::DeviceTagged`] (`seq << 32 | device`), so
+//!   any shard computes the same ids for its devices as the unsharded
+//!   stream would;
+//! * service noise is keyed on the request id (one counter-based draw per
+//!   request) instead of a shared RNG sequence, so draws cannot depend on
+//!   event interleaving across domains;
+//! * every tie in virtual time breaks on `(prio, id-or-creation-seq)`
+//!   exactly like the core DES, and the cloud consumes its batches in the
+//!   canonical merged order.
+//!
+//! The property suite pins N-shard parallel == single-shard serial via
+//! [`StreamSummary::digest`], an order-insensitive XOR of per-request
+//! hashes over the exact departure bits.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::monitor::StateView;
+use crate::sim::arrivals::{ArrivalProcess, ArrivalStream, IdMode};
+use crate::sim::des::BacklogStats;
+use crate::sim::drift::DriftSchedule;
+use crate::sim::latency::ResponseModel;
+use crate::sim::workload::Request;
+use crate::types::{Decision, Placement};
+use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
+
+/// 64-bit finalizer (murmur3's constants): avalanche a word so the XOR
+/// accumulation in [`StreamSummary::digest`] is sensitive to every bit.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51_AFD7_ED55_8CCD);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xC4CE_B9FE_1A85_EC53);
+    x ^= x >> 33;
+    x
+}
+
+/// Multiplicative log-normal service noise for one request, keyed on its
+/// id: one deterministic draw per request, independent of which shard
+/// services it or in what order events interleave. With `sigma == 0`
+/// this is exactly 1 (no draw), matching the core DES's quiet path.
+fn noise_mult(sigma: f64, noise_seed: u64, id: u64) -> f64 {
+    if sigma > 0.0 {
+        let mut rng = Rng::new(noise_seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        (sigma * rng.normal()).exp()
+    } else {
+        1.0
+    }
+}
+
+/// Log2 histogram bucket for a response time in ms (bucket `b` holds
+/// responses in `[2^(b-1), 2^b)`; sub-millisecond responses land in 0).
+fn bucket(ms: f64) -> usize {
+    (64 - (ms.max(0.0) as u64).leading_zeros() as usize).min(63)
+}
+
+/// Streaming per-request statistics: everything the scale path reports
+/// is O(1) state — counts, sum/max, a log2 response histogram, and an
+/// order-insensitive digest — so outcomes stay bounded no matter how many
+/// requests flow through. The digest XORs an avalanched hash of each
+/// request's exact `(id, device, depart, response)` bits; two runs agree
+/// on it iff they completed the same requests at the same times, which is
+/// the bitwise witness the shard==serial property pins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSummary {
+    /// Requests completed.
+    pub completed: u64,
+    /// Sum of response times, ms. The one field that is *not*
+    /// partition-invariant bitwise (f64 addition order differs across
+    /// shard counts); compare with a tolerance, or use the digest.
+    pub sum_response_ms: f64,
+    /// Largest response time, ms (max is order-insensitive: exact).
+    pub max_response_ms: f64,
+    /// Log2 histogram of response times (bucket b: `[2^(b-1), 2^b)` ms).
+    pub hist: [u64; 64],
+    /// XOR of per-request avalanched hashes — the bitwise witness.
+    pub digest: u64,
+}
+
+impl Default for StreamSummary {
+    fn default() -> StreamSummary {
+        StreamSummary {
+            completed: 0,
+            sum_response_ms: 0.0,
+            max_response_ms: 0.0,
+            hist: [0; 64],
+            digest: 0,
+        }
+    }
+}
+
+impl StreamSummary {
+    fn record(&mut self, id: u64, device: usize, depart_ms: f64, response_ms: f64) {
+        self.completed += 1;
+        self.sum_response_ms += response_ms;
+        if response_ms > self.max_response_ms {
+            self.max_response_ms = response_ms;
+        }
+        self.hist[bucket(response_ms)] += 1;
+        self.digest ^= mix64(
+            id ^ mix64(device as u64 ^ mix64(depart_ms.to_bits() ^ mix64(response_ms.to_bits()))),
+        );
+    }
+
+    /// Fold another summary in (shard merge; XOR/sum/max all commute).
+    pub fn merge(&mut self, other: &StreamSummary) {
+        self.completed += other.completed;
+        self.sum_response_ms += other.sum_response_ms;
+        if other.max_response_ms > self.max_response_ms {
+            self.max_response_ms = other.max_response_ms;
+        }
+        for (a, b) in self.hist.iter_mut().zip(other.hist.iter()) {
+            *a += *b;
+        }
+        self.digest ^= other.digest;
+    }
+
+    pub fn mean_response_ms(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.sum_response_ms / self.completed as f64
+        }
+    }
+
+    /// Upper bound of the histogram bucket containing quantile `q` —
+    /// a coarse (power-of-two) percentile that needs no per-request
+    /// storage. Good enough for the scale report's p50/p99 columns.
+    pub fn approx_percentile_ms(&self, q: f64) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.completed as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, n) in self.hist.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return if b == 0 { 0.0 } else { (1u64 << b) as f64 };
+            }
+        }
+        self.max_response_ms
+    }
+}
+
+/// How to partition and synchronize a [`ShardedDes`] run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardPlan {
+    /// Number of edge-domain shards (1..=num_edges).
+    pub shards: usize,
+    /// Synchronization window, ms. `0.0` selects the conservative
+    /// default: the minimum cloud path overhead over all devices (the
+    /// shortest delay any cloud-bound emission can carry).
+    pub window_ms: f64,
+}
+
+impl Default for ShardPlan {
+    fn default() -> ShardPlan {
+        ShardPlan { shards: 1, window_ms: 0.0 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Local event machinery (mirrors sim::des bit-for-bit; the core's types are
+// private and index a global layout, so the shard engine carries its own
+// copies over shard-local node indices).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Ev {
+    /// Request reaches a node's queue (link pseudo-node or compute).
+    Join { node: usize, flight: usize },
+    /// One hold on an ingress link expires.
+    LinkFree { link: usize },
+    /// Compute service finishes for `flight` on `node`.
+    Finish { node: usize, flight: usize },
+}
+
+#[derive(Clone, Copy)]
+struct Event {
+    time: f64,
+    /// Tie class: 0 = arrival joins (seq = request id, a property of the
+    /// trace alone), 1 = simulator-generated (seq = creation counter).
+    /// Same comparator as the core DES, so per-node pop order at equal
+    /// times is partition-invariant.
+    prio: u8,
+    seq: u64,
+    kind: Ev,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.prio == other.prio && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.prio.cmp(&self.prio))
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+fn push_event(heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, kind: Ev) {
+    *seq += 1;
+    heap.push(Event { time, prio: 1, seq: *seq, kind });
+}
+
+/// Multi-server FIFO queue over flight-slab indices.
+struct ServerQueue {
+    servers: usize,
+    busy: usize,
+    waiting: VecDeque<usize>,
+}
+
+impl ServerQueue {
+    fn new(servers: usize) -> ServerQueue {
+        assert!(servers > 0, "node with zero servers");
+        ServerQueue { servers, busy: 0, waiting: VecDeque::new() }
+    }
+}
+
+/// Slab-resident in-flight request. `svc_ms` is fully resolved at
+/// admission (frozen decision × id-keyed noise), so the event loop is
+/// pure index arithmetic.
+#[derive(Clone, Copy)]
+struct Flight {
+    id: u64,
+    device: usize,
+    arrival_ms: f64,
+    svc_ms: f64,
+}
+
+/// Slab allocator for [`Flight`]s: slots are recycled on completion, so
+/// memory tracks the *live* population, not the trace length.
+#[derive(Default)]
+struct FlightSlab {
+    slots: Vec<Flight>,
+    free: Vec<usize>,
+    live: usize,
+}
+
+impl FlightSlab {
+    fn alloc(&mut self, f: Flight) -> usize {
+        self.live += 1;
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i] = f;
+                i
+            }
+            None => {
+                self.slots.push(f);
+                self.slots.len() - 1
+            }
+        }
+    }
+
+    fn release(&mut self, i: usize) {
+        self.live -= 1;
+        self.free.push(i);
+    }
+}
+
+/// Where a device's (frozen) action executes.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Route {
+    Device,
+    Edge,
+    Cloud,
+}
+
+/// One cloud-bound departure crossing the shard boundary: everything the
+/// cloud loop needs to finish the request's lifecycle.
+struct CloudArrival {
+    /// When the home edge's link forwarded the upload (= cloud join time).
+    join_ms: f64,
+    id: u64,
+    device: usize,
+    arrival_ms: f64,
+    /// Resolved cloud service time (table × id-keyed noise).
+    svc_ms: f64,
+}
+
+/// One edge-domain group's event loop: its devices' and edges' compute
+/// queues, their ingress links, a local heap, and a lazy arrival stream.
+struct ShardSim {
+    /// Owned devices, ascending global id (binary-searched on admit).
+    devices: Vec<usize>,
+    /// Per owned device (parallel to `devices`): frozen route, resolved
+    /// base service time, path overhead, and local home-edge index.
+    route: Vec<Route>,
+    svc_base: Vec<f64>,
+    path_ms: Vec<f64>,
+    edge_local: Vec<usize>,
+    /// Compute queues: owned devices, then owned edges.
+    nodes: Vec<ServerQueue>,
+    /// One serializing ingress link per owned edge.
+    links: Vec<ServerQueue>,
+    link_queue_ms: f64,
+    sigma: f64,
+    noise_seed: u64,
+    stream: ArrivalStream,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    slab: FlightSlab,
+    /// Cloud-bound departures of the current window (drained on merge).
+    outbox: Vec<CloudArrival>,
+    summary: StreamSummary,
+    offered: u64,
+    events: u64,
+    makespan_ms: f64,
+    /// Peak of live flights + pending events — the shard's memory proxy.
+    peak_queue: usize,
+    // Per-node backlog accounting (device + edge compute nodes).
+    bl_cur: Vec<u32>,
+    bl_max: Vec<u32>,
+    bl_area: Vec<f64>,
+    bl_mark: Vec<f64>,
+}
+
+impl ShardSim {
+    fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    fn note_peak(&mut self) {
+        let q = self.slab.live + self.heap.len();
+        if q > self.peak_queue {
+            self.peak_queue = q;
+        }
+    }
+
+    fn backlog_shift(&mut self, node: usize, t: f64, delta: i32) {
+        self.bl_area[node] += self.bl_cur[node] as f64 * (t - self.bl_mark[node]);
+        self.bl_mark[node] = t;
+        let cur = (self.bl_cur[node] as i64 + delta as i64) as u32;
+        self.bl_cur[node] = cur;
+        if cur > self.bl_max[node] {
+            self.bl_max[node] = cur;
+        }
+    }
+
+    fn admit(&mut self, r: &Request) {
+        let li = self
+            .devices
+            .binary_search(&r.device)
+            .expect("arrival stream yielded a device this shard does not own");
+        self.offered += 1;
+        let svc = self.svc_base[li] * noise_mult(self.sigma, self.noise_seed, r.id);
+        let flight = self.slab.alloc(Flight {
+            id: r.id,
+            device: r.device,
+            arrival_ms: r.arrival_ms,
+            svc_ms: svc,
+        });
+        // Path overhead precedes the ingress link, exactly like the core
+        // DES admit: the join lands either on the device's own compute
+        // queue (local execution) or on the home edge's link pseudo-node.
+        let node = match self.route[li] {
+            Route::Device => li,
+            Route::Edge | Route::Cloud => self.n_devices() + self.links.len() + self.edge_local[li],
+        };
+        self.heap.push(Event {
+            time: r.arrival_ms + self.path_ms[li],
+            prio: 0,
+            seq: r.id,
+            kind: Ev::Join { node, flight },
+        });
+        self.note_peak();
+    }
+
+    /// Forward a flight that just seized its ingress link: edge-bound
+    /// requests join the edge compute queue; cloud-bound ones leave the
+    /// shard through the outbox (their slot is recycled — the cloud loop
+    /// owns the rest of the lifecycle).
+    fn forward(&mut self, flight: usize, t: f64) {
+        let f = self.slab.slots[flight];
+        let li = self
+            .devices
+            .binary_search(&f.device)
+            .expect("in-flight device must be owned");
+        match self.route[li] {
+            Route::Device => unreachable!("local execution never rides a link"),
+            Route::Edge => {
+                let node = self.n_devices() + self.edge_local[li];
+                push_event(&mut self.heap, &mut self.seq, t, Ev::Join { node, flight });
+            }
+            Route::Cloud => {
+                self.outbox.push(CloudArrival {
+                    join_ms: t,
+                    id: f.id,
+                    device: f.device,
+                    arrival_ms: f.arrival_ms,
+                    svc_ms: f.svc_ms,
+                });
+                self.slab.release(flight);
+            }
+        }
+    }
+
+    /// Admit every arrival strictly before `end`, then process events up
+    /// to and including `end` (pass infinity to drain). Mirrors the core
+    /// DES slicing convention: arrivals before a tick are admitted before
+    /// the clock advances to it.
+    fn run_window(&mut self, end: f64) {
+        while let Some(r) = self.stream.next_before(end) {
+            self.admit(&r);
+        }
+        let link_base = self.n_devices() + self.links.len();
+        while let Some(&ev) = self.heap.peek() {
+            if ev.time > end {
+                break;
+            }
+            self.heap.pop();
+            self.events += 1;
+            if ev.time > self.makespan_ms {
+                self.makespan_ms = ev.time;
+            }
+            match ev.kind {
+                Ev::Join { node, flight } if node >= link_base => {
+                    let link_id = node - link_base;
+                    let link = &mut self.links[link_id];
+                    if link.busy < link.servers {
+                        link.busy += 1;
+                        push_event(
+                            &mut self.heap,
+                            &mut self.seq,
+                            ev.time + self.link_queue_ms,
+                            Ev::LinkFree { link: link_id },
+                        );
+                        self.forward(flight, ev.time);
+                    } else {
+                        link.waiting.push_back(flight);
+                    }
+                }
+                Ev::LinkFree { link: link_id } => {
+                    let link = &mut self.links[link_id];
+                    link.busy -= 1;
+                    if let Some(flight) = link.waiting.pop_front() {
+                        link.busy += 1;
+                        push_event(
+                            &mut self.heap,
+                            &mut self.seq,
+                            ev.time + self.link_queue_ms,
+                            Ev::LinkFree { link: link_id },
+                        );
+                        self.forward(flight, ev.time);
+                    }
+                }
+                Ev::Join { node, flight } => {
+                    self.backlog_shift(node, ev.time, 1);
+                    let q = &mut self.nodes[node];
+                    if q.busy < q.servers {
+                        q.busy += 1;
+                        let svc = self.slab.slots[flight].svc_ms;
+                        push_event(
+                            &mut self.heap,
+                            &mut self.seq,
+                            ev.time + svc,
+                            Ev::Finish { node, flight },
+                        );
+                    } else {
+                        q.waiting.push_back(flight);
+                    }
+                }
+                Ev::Finish { node, flight } => {
+                    self.backlog_shift(node, ev.time, -1);
+                    let f = self.slab.slots[flight];
+                    self.summary.record(f.id, f.device, ev.time, ev.time - f.arrival_ms);
+                    self.slab.release(flight);
+                    let q = &mut self.nodes[node];
+                    q.busy -= 1;
+                    if let Some(next) = q.waiting.pop_front() {
+                        q.busy += 1;
+                        let svc = self.slab.slots[next].svc_ms;
+                        push_event(
+                            &mut self.heap,
+                            &mut self.seq,
+                            ev.time + svc,
+                            Ev::Finish { node, flight: next },
+                        );
+                    }
+                }
+            }
+            self.note_peak();
+        }
+    }
+
+    /// (max, integrated area) of one local compute node's backlog. After
+    /// the final drain every level is back to zero, so the area is
+    /// complete; the caller divides by the global makespan.
+    fn backlog_of(&self, node: usize) -> (usize, f64) {
+        (self.bl_max[node] as usize, self.bl_area[node])
+    }
+}
+
+/// The downstream cloud event loop: one multi-server vCPU queue consuming
+/// the shards' merged outboxes. No links (the uplink hold happens inside
+/// the owning shard) and no arrivals of its own.
+struct CloudSim {
+    queue: ServerQueue,
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    slab: FlightSlab,
+    summary: StreamSummary,
+    events: u64,
+    makespan_ms: f64,
+    peak_queue: usize,
+    /// Everything up to here is settled; batches must arrive after it.
+    done_ms: f64,
+    bl_cur: u32,
+    bl_max: u32,
+    bl_area: f64,
+    bl_mark: f64,
+}
+
+impl CloudSim {
+    fn new(vcpus: usize) -> CloudSim {
+        CloudSim {
+            queue: ServerQueue::new(vcpus),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            slab: FlightSlab::default(),
+            summary: StreamSummary::default(),
+            events: 0,
+            makespan_ms: 0.0,
+            peak_queue: 0,
+            done_ms: f64::NEG_INFINITY,
+            bl_cur: 0,
+            bl_max: 0,
+            bl_area: 0.0,
+            bl_mark: 0.0,
+        }
+    }
+
+    /// Enqueue one window's merged departures. The batch must already be
+    /// in canonical `(join_ms, id)` order — the conservative-window
+    /// invariant guarantees every join is strictly after `done_ms`, so no
+    /// shard can rewrite the cloud's past.
+    fn push_arrivals(&mut self, batch: Vec<CloudArrival>) {
+        for a in batch {
+            debug_assert!(
+                a.join_ms > self.done_ms,
+                "cloud join at {} behind settled time {}",
+                a.join_ms,
+                self.done_ms
+            );
+            let flight = self.slab.alloc(Flight {
+                id: a.id,
+                device: a.device,
+                arrival_ms: a.arrival_ms,
+                svc_ms: a.svc_ms,
+            });
+            self.heap.push(Event {
+                time: a.join_ms,
+                prio: 0,
+                seq: a.id,
+                kind: Ev::Join { node: 0, flight },
+            });
+        }
+        let q = self.slab.live + self.heap.len();
+        if q > self.peak_queue {
+            self.peak_queue = q;
+        }
+    }
+
+    fn backlog_shift(&mut self, t: f64, delta: i32) {
+        self.bl_area += self.bl_cur as f64 * (t - self.bl_mark);
+        self.bl_mark = t;
+        let cur = (self.bl_cur as i64 + delta as i64) as u32;
+        self.bl_cur = cur;
+        if cur > self.bl_max {
+            self.bl_max = cur;
+        }
+    }
+
+    fn run_until(&mut self, end: f64) {
+        while let Some(&ev) = self.heap.peek() {
+            if ev.time > end {
+                break;
+            }
+            self.heap.pop();
+            self.events += 1;
+            if ev.time > self.makespan_ms {
+                self.makespan_ms = ev.time;
+            }
+            match ev.kind {
+                Ev::Join { flight, .. } => {
+                    self.backlog_shift(ev.time, 1);
+                    let q = &mut self.queue;
+                    if q.busy < q.servers {
+                        q.busy += 1;
+                        let svc = self.slab.slots[flight].svc_ms;
+                        push_event(
+                            &mut self.heap,
+                            &mut self.seq,
+                            ev.time + svc,
+                            Ev::Finish { node: 0, flight },
+                        );
+                    } else {
+                        q.waiting.push_back(flight);
+                    }
+                }
+                Ev::Finish { flight, .. } => {
+                    self.backlog_shift(ev.time, -1);
+                    let f = self.slab.slots[flight];
+                    self.summary.record(f.id, f.device, ev.time, ev.time - f.arrival_ms);
+                    self.slab.release(flight);
+                    let q = &mut self.queue;
+                    q.busy -= 1;
+                    if let Some(next) = q.waiting.pop_front() {
+                        q.busy += 1;
+                        let svc = self.slab.slots[next].svc_ms;
+                        push_event(
+                            &mut self.heap,
+                            &mut self.seq,
+                            ev.time + svc,
+                            Ev::Finish { node: 0, flight: next },
+                        );
+                    }
+                }
+                Ev::LinkFree { .. } => unreachable!("the cloud loop has no links"),
+            }
+        }
+        if end.is_finite() {
+            self.done_ms = end;
+        }
+    }
+}
+
+/// Merged result of a sharded run. Per-request records are never
+/// materialized — statistics stream through [`StreamSummary`] — so the
+/// outcome is O(nodes), independent of the request volume.
+#[derive(Debug, Clone)]
+pub struct ShardedOutcome {
+    /// Merged per-request statistics (all shards + cloud).
+    pub summary: StreamSummary,
+    /// Latest event time across every loop.
+    pub makespan_ms: f64,
+    pub horizon_ms: f64,
+    /// Requests admitted from the arrival streams.
+    pub offered: u64,
+    pub shards: usize,
+    /// Synchronization windows executed (including the final drain).
+    pub windows: u64,
+    /// Effective window, ms (the conservative `d_min` default when the
+    /// plan left it at 0).
+    pub window_ms: f64,
+    /// Events processed across every loop.
+    pub events: u64,
+    /// Events processed per shard (cloud excluded), for the
+    /// events/sec/shard bench series.
+    pub per_shard_events: Vec<u64>,
+    /// Peak of (live flights + pending events) summed across shards and
+    /// the cloud — the measured bounded-memory proxy the scale report
+    /// surfaces as a column.
+    pub peak_rss_proxy: u64,
+    /// Every window satisfied offered == completed + live (and the final
+    /// drain completed everything).
+    pub conservation_ok: bool,
+    /// Per-edge compute backlog, global edge order.
+    pub edge_backlog: Vec<BacklogStats>,
+    /// Cloud compute backlog.
+    pub cloud_backlog: BacklogStats,
+    /// Largest backlog any device node ever held.
+    pub peak_device_backlog: usize,
+}
+
+impl ShardedOutcome {
+    /// Completed requests per wall second of virtual time.
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.makespan_ms <= 0.0 {
+            0.0
+        } else {
+            self.summary.completed as f64 / (self.makespan_ms / 1000.0)
+        }
+    }
+}
+
+/// The sharded engine: built once per run (arrival streams are
+/// single-use), consumed by [`ShardedDes::run`].
+pub struct ShardedDes {
+    sims: Vec<ShardSim>,
+    cloud: CloudSim,
+    horizon_ms: f64,
+    window_ms: f64,
+    shards: usize,
+    num_edges: usize,
+}
+
+impl ShardedDes {
+    /// Partition `model`'s topology into `plan.shards` edge-domain groups
+    /// under the frozen `decision`, with per-shard lazy arrival streams.
+    ///
+    /// Panics if the decision is not domain-local (every `Edge(j)`
+    /// placement must target the device's home edge — cross-domain edge
+    /// offloading would couple shards through more than the cloud), if
+    /// `drift` carries link-cond overrides (the sharded path freezes the
+    /// decision, so only rate drift applies), or if `plan.shards` is
+    /// outside `1..=num_edges`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new<S: StateView>(
+        model: &ResponseModel,
+        state: &S,
+        decision: &Decision,
+        process: ArrivalProcess,
+        horizon_ms: f64,
+        arrival_seed: u64,
+        noise_seed: u64,
+        drift: &DriftSchedule,
+        plan: ShardPlan,
+    ) -> ShardedDes {
+        let topo = &model.net.topo;
+        let users = topo.users();
+        let num_edges = topo.num_edges();
+        assert!(users > 0, "topology with zero devices");
+        assert!(users <= u32::MAX as usize, "device-tagged ids pack the device into 32 bits");
+        assert_eq!(decision.n_users(), users, "decision arity vs users");
+        assert_eq!(state.users(), users, "state arity vs users");
+        assert_eq!(state.num_edges(), num_edges, "topology edges vs state");
+        assert!(horizon_ms > 0.0, "empty horizon");
+        let shards = plan.shards;
+        assert!(
+            (1..=num_edges).contains(&shards),
+            "shards must be in 1..={num_edges} (one edge domain is the finest grain), got {shards}"
+        );
+        assert!(
+            drift
+                .segments()
+                .iter()
+                .all(|s| s.device_cond.is_none() && s.edge_cond.is_none()),
+            "sharded path supports rate drift only (cond overrides need the control plane)"
+        );
+        for (d, a) in decision.0.iter().enumerate() {
+            if let Placement::Edge(j) = a.placement {
+                assert_eq!(
+                    j,
+                    topo.home_edge(d),
+                    "sharded path requires domain-local placements (device {d} offloads to \
+                     edge {j}, home {})",
+                    topo.home_edge(d)
+                );
+            }
+        }
+
+        let cal = &model.net.cal;
+        let mut d_min = f64::INFINITY;
+        let mut sims = Vec::with_capacity(shards);
+        for sid in 0..shards {
+            // Owned edges: global e with e % shards == sid, ascending, so
+            // local index = position in that sequence.
+            let owned_edges: Vec<usize> = (sid..num_edges).step_by(shards).collect();
+            let mut devices = Vec::new();
+            let mut route = Vec::new();
+            let mut svc_base = Vec::new();
+            let mut path_ms = Vec::new();
+            let mut edge_local = Vec::new();
+            for d in 0..users {
+                let home = topo.home_edge(d);
+                if home % shards != sid {
+                    continue;
+                }
+                let a = decision.0[d];
+                devices.push(d);
+                route.push(match a.placement {
+                    Placement::Local => Route::Device,
+                    Placement::Edge(_) => Route::Edge,
+                    Placement::Cloud => Route::Cloud,
+                });
+                svc_base.push(model.single_stream_service_ms(d, a.model, a.placement, state));
+                path_ms.push(model.path_overhead_ms(d, a.placement, state));
+                edge_local.push(home / shards);
+                let cloud_path = model.path_overhead_ms(d, Placement::Cloud, state);
+                if cloud_path < d_min {
+                    d_min = cloud_path;
+                }
+            }
+            let mut nodes: Vec<ServerQueue> =
+                devices.iter().map(|&d| ServerQueue::new(topo.devices[d].vcpus)).collect();
+            for &e in &owned_edges {
+                nodes.push(ServerQueue::new(topo.edges[e].vcpus));
+            }
+            let links: Vec<ServerQueue> =
+                owned_edges.iter().map(|_| ServerQueue::new(1)).collect();
+            let n_nodes = nodes.len();
+            let stream = ArrivalStream::with_filter(
+                process,
+                users,
+                horizon_ms,
+                arrival_seed,
+                drift,
+                IdMode::DeviceTagged,
+                move |d| (d % num_edges) % shards == sid,
+            );
+            sims.push(ShardSim {
+                devices,
+                route,
+                svc_base,
+                path_ms,
+                edge_local,
+                nodes,
+                links,
+                link_queue_ms: cal.link_queue_ms,
+                sigma: cal.noise_sigma,
+                noise_seed,
+                stream,
+                heap: BinaryHeap::new(),
+                seq: 0,
+                slab: FlightSlab::default(),
+                outbox: Vec::new(),
+                summary: StreamSummary::default(),
+                offered: 0,
+                events: 0,
+                makespan_ms: 0.0,
+                peak_queue: 0,
+                bl_cur: vec![0; n_nodes],
+                bl_max: vec![0; n_nodes],
+                bl_area: vec![0.0; n_nodes],
+                bl_mark: vec![0.0; n_nodes],
+            });
+        }
+
+        let window_ms = if plan.window_ms > 0.0 {
+            plan.window_ms
+        } else {
+            // Conservative default: no cloud-bound emission can carry
+            // less delay than the cheapest cloud path, so a window of
+            // d_min keeps every batch strictly ahead of the cloud's
+            // settled time with the fewest synchronization barriers.
+            d_min.max(1e-3)
+        };
+
+        ShardedDes {
+            sims,
+            cloud: CloudSim::new(topo.cloud.vcpus),
+            horizon_ms,
+            window_ms,
+            shards,
+            num_edges,
+        }
+    }
+
+    /// Execute the run: advance every shard window by window (on `pool`
+    /// when given and more than one shard exists, serially otherwise),
+    /// merging cloud-bound departures in canonical order between windows,
+    /// then drain. The outcome is bitwise independent of the shard
+    /// count, the window size, and the pool — the property suite pins
+    /// all three.
+    pub fn run(mut self, pool: Option<&ThreadPool>) -> ShardedOutcome {
+        let horizon = self.horizon_ms;
+        let w = self.window_ms;
+        let mut sims = std::mem::take(&mut self.sims);
+        let mut t = 0.0;
+        let mut windows = 0u64;
+        let mut conservation_ok = true;
+        let mut batch: Vec<CloudArrival> = Vec::new();
+        loop {
+            let last = t >= horizon;
+            let end = if last { f64::INFINITY } else { (t + w).min(horizon) };
+            sims = match pool {
+                Some(p) if sims.len() > 1 => p.map_indexed(sims, move |_, mut sim| {
+                    sim.run_window(end);
+                    sim
+                }),
+                _ => sims
+                    .into_iter()
+                    .map(|mut sim| {
+                        sim.run_window(end);
+                        sim
+                    })
+                    .collect(),
+            };
+            batch.clear();
+            for sim in &mut sims {
+                batch.append(&mut sim.outbox);
+            }
+            // Canonical merge order: join time, then request id. Ids are
+            // device-tagged, so this order is a property of the trace —
+            // identical however the domains were grouped into shards.
+            batch.sort_by(|a, b| a.join_ms.total_cmp(&b.join_ms).then_with(|| a.id.cmp(&b.id)));
+            self.cloud.push_arrivals(std::mem::take(&mut batch));
+            self.cloud.run_until(end);
+            windows += 1;
+            let offered: u64 = sims.iter().map(|s| s.offered).sum();
+            let done: u64 = sims.iter().map(|s| s.summary.completed).sum::<u64>()
+                + self.cloud.summary.completed;
+            let live: u64 =
+                sims.iter().map(|s| s.slab.live as u64).sum::<u64>() + self.cloud.slab.live as u64;
+            if offered != done + live {
+                conservation_ok = false;
+            }
+            if last {
+                break;
+            }
+            t = end;
+        }
+
+        let mut summary = self.cloud.summary.clone();
+        for sim in &sims {
+            summary.merge(&sim.summary);
+        }
+        let makespan_ms = sims
+            .iter()
+            .map(|s| s.makespan_ms)
+            .fold(self.cloud.makespan_ms, f64::max);
+        let offered: u64 = sims.iter().map(|s| s.offered).sum();
+        conservation_ok = conservation_ok && summary.completed == offered;
+        let per_shard_events: Vec<u64> = sims.iter().map(|s| s.events).collect();
+        let events = per_shard_events.iter().sum::<u64>() + self.cloud.events;
+        let peak_rss_proxy = sims.iter().map(|s| s.peak_queue as u64).sum::<u64>()
+            + self.cloud.peak_queue as u64;
+
+        let stats = |max: usize, area: f64| BacklogStats {
+            max,
+            mean: if makespan_ms > 0.0 { area / makespan_ms } else { 0.0 },
+        };
+        let mut edge_backlog = Vec::with_capacity(self.num_edges);
+        for e in 0..self.num_edges {
+            let sim = &sims[e % self.shards];
+            let (max, area) = sim.backlog_of(sim.n_devices() + e / self.shards);
+            edge_backlog.push(stats(max, area));
+        }
+        let cloud_backlog = stats(self.cloud.bl_max as usize, self.cloud.bl_area);
+        let peak_device_backlog = sims
+            .iter()
+            .map(|s| (0..s.n_devices()).map(|n| s.bl_max[n] as usize).max().unwrap_or(0))
+            .max()
+            .unwrap_or(0);
+
+        ShardedOutcome {
+            summary,
+            makespan_ms,
+            horizon_ms: horizon,
+            offered,
+            shards: self.shards,
+            windows,
+            window_ms: w,
+            events,
+            per_shard_events,
+            peak_rss_proxy,
+            conservation_ok,
+            edge_backlog,
+            cloud_backlog,
+            peak_device_backlog,
+        }
+    }
+}
+
+/// One-call sharded open-loop evaluation: build a [`ShardedDes`] under
+/// the frozen `decision` and run it to completion.
+#[allow(clippy::too_many_arguments)]
+pub fn run_sharded_open_loop<S: StateView>(
+    model: &ResponseModel,
+    state: &S,
+    decision: &Decision,
+    process: ArrivalProcess,
+    horizon_ms: f64,
+    arrival_seed: u64,
+    noise_seed: u64,
+    drift: &DriftSchedule,
+    plan: ShardPlan,
+    pool: Option<&ThreadPool>,
+) -> ShardedOutcome {
+    ShardedDes::new(
+        model,
+        state,
+        decision,
+        process,
+        horizon_ms,
+        arrival_seed,
+        noise_seed,
+        drift,
+        plan,
+    )
+    .run(pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{Calibration, Scenario};
+    use crate::monitor::TopoState;
+    use crate::network::Network;
+    use crate::sim::arrivals;
+    use crate::sim::des::run_open_loop;
+    use crate::types::{Action, ModelId};
+
+    fn setup(users: usize, edges: usize, sigma: f64) -> (ResponseModel, TopoState) {
+        let cal = Calibration { noise_sigma: sigma, ..Calibration::default() };
+        let net = Network::with_edges(Scenario::exp_a(users), cal, edges);
+        let state = TopoState::idle(&net.topo);
+        (ResponseModel::new(net), state)
+    }
+
+    /// Domain-local mixed decision: devices rotate Local / home-Edge /
+    /// Cloud with alternating models.
+    fn mixed(users: usize, edges: usize) -> Decision {
+        Decision(
+            (0..users)
+                .map(|d| Action {
+                    placement: match d % 3 {
+                        0 => Placement::Local,
+                        1 => Placement::Edge(d % edges),
+                        _ => Placement::Cloud,
+                    },
+                    model: ModelId((d % 2) as u8),
+                })
+                .collect(),
+        )
+    }
+
+    fn run_with(
+        model: &ResponseModel,
+        state: &TopoState,
+        decision: &Decision,
+        drift: &DriftSchedule,
+        plan: ShardPlan,
+        pool: Option<&ThreadPool>,
+    ) -> ShardedOutcome {
+        run_sharded_open_loop(
+            model,
+            state,
+            decision,
+            ArrivalProcess::Poisson { rate_per_s: 20.0 },
+            10_000.0,
+            13,
+            99,
+            drift,
+            plan,
+            pool,
+        )
+    }
+
+    #[test]
+    fn shard_parallel_is_bitwise_identical_to_single_shard_serial() {
+        let (model, state) = setup(8, 4, 0.02);
+        let decision = mixed(8, 4);
+        let drift = DriftSchedule::parse("3000:rate=2").unwrap();
+        let base = run_with(
+            &model,
+            &state,
+            &decision,
+            &drift,
+            ShardPlan { shards: 1, window_ms: 0.0 },
+            None,
+        );
+        assert!(base.conservation_ok, "serial baseline must conserve requests");
+        assert!(base.summary.completed > 500, "workload too small to be meaningful");
+        assert_eq!(base.summary.completed, base.offered, "final drain completes everything");
+
+        let pool = ThreadPool::new(3, "shard-test");
+        for shards in 1..=4usize {
+            let got = run_with(
+                &model,
+                &state,
+                &decision,
+                &drift,
+                ShardPlan { shards, window_ms: 0.0 },
+                Some(&pool),
+            );
+            assert!(got.conservation_ok, "{shards} shards");
+            assert_eq!(got.offered, base.offered, "{shards} shards");
+            assert_eq!(got.summary.completed, base.summary.completed, "{shards} shards");
+            assert_eq!(got.summary.digest, base.summary.digest, "{shards} shards: digest");
+            assert_eq!(got.summary.hist, base.summary.hist, "{shards} shards: histogram");
+            assert_eq!(
+                got.summary.max_response_ms.to_bits(),
+                base.summary.max_response_ms.to_bits(),
+                "{shards} shards: max response"
+            );
+            assert_eq!(
+                got.makespan_ms.to_bits(),
+                base.makespan_ms.to_bits(),
+                "{shards} shards: makespan"
+            );
+            // Per-node event histories are partition-invariant, so edge
+            // and cloud backlog statistics are exact, not approximate.
+            assert_eq!(got.edge_backlog.len(), base.edge_backlog.len());
+            for (e, (a, b)) in got.edge_backlog.iter().zip(&base.edge_backlog).enumerate() {
+                assert_eq!(a.max, b.max, "{shards} shards: edge {e} backlog max");
+                assert_eq!(
+                    a.mean.to_bits(),
+                    b.mean.to_bits(),
+                    "{shards} shards: edge {e} backlog mean"
+                );
+            }
+            assert_eq!(got.cloud_backlog.max, base.cloud_backlog.max, "{shards} shards");
+            assert_eq!(got.peak_device_backlog, base.peak_device_backlog, "{shards} shards");
+            // The response-time sum is the one order-sensitive f64 fold.
+            let rel = (got.summary.sum_response_ms - base.summary.sum_response_ms).abs()
+                / base.summary.sum_response_ms;
+            assert!(rel < 1e-9, "{shards} shards: sum drift {rel}");
+        }
+    }
+
+    #[test]
+    fn window_size_does_not_change_the_trace() {
+        let (model, state) = setup(8, 4, 0.02);
+        let decision = mixed(8, 4);
+        let drift = DriftSchedule::none();
+        let auto = run_with(
+            &model,
+            &state,
+            &decision,
+            &drift,
+            ShardPlan { shards: 2, window_ms: 0.0 },
+            None,
+        );
+        assert!(auto.window_ms > 0.0, "auto window resolves to d_min");
+        for window_ms in [250.0, 2_000.0] {
+            let got = run_with(
+                &model,
+                &state,
+                &decision,
+                &drift,
+                ShardPlan { shards: 2, window_ms },
+                None,
+            );
+            assert_eq!(got.summary.digest, auto.summary.digest, "window {window_ms}");
+            assert_eq!(got.summary.completed, auto.summary.completed, "window {window_ms}");
+            assert!(got.windows != auto.windows, "window {window_ms} should change sync count");
+        }
+    }
+
+    #[test]
+    fn quiet_sharded_run_matches_the_core_des() {
+        // With sigma = 0 every per-request quantity is the same
+        // arithmetic in both engines (identical tables, path overheads,
+        // link holds), so counts and extremes must agree exactly even
+        // though ids and event interleaving differ.
+        let (model, state) = setup(6, 2, 0.0);
+        let decision = mixed(6, 2);
+        let process = ArrivalProcess::Poisson { rate_per_s: 15.0 };
+        let horizon = 8_000.0;
+        let trace = arrivals::schedule(process, 6, horizon, 13);
+        let core = run_open_loop(&model, &state, &decision, &trace, horizon, 99);
+        let sharded = run_sharded_open_loop(
+            &model,
+            &state,
+            &decision,
+            process,
+            horizon,
+            13,
+            99,
+            &DriftSchedule::none(),
+            ShardPlan { shards: 2, window_ms: 0.0 },
+            None,
+        );
+        assert_eq!(sharded.offered, trace.len() as u64);
+        assert_eq!(sharded.summary.completed, core.completed.len() as u64);
+        let core_sum: f64 = core.completed.iter().map(|c| c.response_ms).sum();
+        let rel = (sharded.summary.sum_response_ms - core_sum).abs() / core_sum;
+        assert!(rel < 1e-6, "sum mismatch: {rel}");
+        let core_max = core.completed.iter().map(|c| c.response_ms).fold(0.0, f64::max);
+        assert_eq!(
+            sharded.summary.max_response_ms.to_bits(),
+            core_max.to_bits(),
+            "identical arithmetic must give the identical max"
+        );
+        assert_eq!(sharded.makespan_ms.to_bits(), core.makespan_ms.to_bits());
+    }
+
+    #[test]
+    fn conservation_holds_across_shard_boundaries() {
+        let (model, state) = setup(9, 3, 0.02);
+        // All-cloud decision: every request crosses a shard boundary.
+        let decision = Decision(
+            (0..9)
+                .map(|_| Action { placement: Placement::Cloud, model: ModelId(0) })
+                .collect(),
+        );
+        let out = run_sharded_open_loop(
+            &model,
+            &state,
+            &decision,
+            ArrivalProcess::Mmpp {
+                calm_rate_per_s: 5.0,
+                burst_rate_per_s: 40.0,
+                mean_phase_ms: 500.0,
+            },
+            6_000.0,
+            7,
+            11,
+            &DriftSchedule::none(),
+            ShardPlan { shards: 3, window_ms: 0.0 },
+            None,
+        );
+        assert!(out.conservation_ok, "offered == completed + live at every window");
+        assert_eq!(out.summary.completed, out.offered, "drain leaves nothing live");
+        assert!(out.peak_rss_proxy > 0);
+    }
+
+    #[test]
+    fn summary_percentiles_and_merge_are_sane() {
+        let mut a = StreamSummary::default();
+        let mut b = StreamSummary::default();
+        for i in 0..100u64 {
+            a.record(i, 0, 1_000.0 + i as f64, i as f64);
+        }
+        b.record(200, 1, 2_000.0, 700.0);
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.completed, 101);
+        assert_eq!(merged.max_response_ms, 700.0);
+        assert_eq!(merged.digest, a.digest ^ b.digest);
+        assert!(merged.mean_response_ms() > 0.0);
+        let p50 = merged.approx_percentile_ms(0.5);
+        let p99 = merged.approx_percentile_ms(0.99);
+        assert!(p50 >= 32.0 && p50 <= 64.0, "p50 bucket bound {p50}");
+        assert!(p99 >= 64.0 && p99 <= 128.0, "p99 bucket bound {p99}");
+        assert_eq!(StreamSummary::default().approx_percentile_ms(0.5), 0.0);
+    }
+
+    #[test]
+    fn streaming_keeps_memory_bounded_by_live_set() {
+        // A *stable* all-cloud system (aggregate ~8 req/s against ~12/s
+        // of cloud capacity) over a long horizon: thousands of requests
+        // flow through, but the live set (slab + heap) must stay orders
+        // of magnitude below the trace length — the bounded-memory claim.
+        let users = 40;
+        let (model, state) = setup(users, 4, 0.02);
+        let decision = Decision(
+            (0..users)
+                .map(|_| Action { placement: Placement::Cloud, model: ModelId(0) })
+                .collect(),
+        );
+        let out = run_sharded_open_loop(
+            &model,
+            &state,
+            &decision,
+            ArrivalProcess::Poisson { rate_per_s: 0.2 },
+            400_000.0,
+            3,
+            5,
+            &DriftSchedule::none(),
+            ShardPlan { shards: 4, window_ms: 0.0 },
+            None,
+        );
+        assert!(out.offered > 2_500, "offered {}", out.offered);
+        assert!(
+            out.peak_rss_proxy < out.offered / 10,
+            "peak live {} vs offered {}",
+            out.peak_rss_proxy,
+            out.offered
+        );
+        assert!(out.conservation_ok);
+    }
+
+    #[test]
+    #[should_panic(expected = "domain-local placements")]
+    fn cross_domain_edge_offload_is_rejected() {
+        let (model, state) = setup(4, 2, 0.0);
+        // Device 0's home edge is 0; Edge(1) couples two domains.
+        let decision = Decision(
+            (0..4)
+                .map(|_| Action { placement: Placement::Edge(1), model: ModelId(0) })
+                .collect(),
+        );
+        run_sharded_open_loop(
+            &model,
+            &state,
+            &decision,
+            ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            1_000.0,
+            1,
+            1,
+            &DriftSchedule::none(),
+            ShardPlan { shards: 2, window_ms: 0.0 },
+            None,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "shards must be in")]
+    fn more_shards_than_edges_is_rejected() {
+        let (model, state) = setup(4, 2, 0.0);
+        let decision = mixed(4, 2);
+        run_sharded_open_loop(
+            &model,
+            &state,
+            &decision,
+            ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            1_000.0,
+            1,
+            1,
+            &DriftSchedule::none(),
+            ShardPlan { shards: 3, window_ms: 0.0 },
+            None,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "rate drift only")]
+    fn cond_drift_is_rejected_on_the_sharded_path() {
+        let (model, state) = setup(4, 2, 0.0);
+        let decision = mixed(4, 2);
+        let drift = DriftSchedule::parse("1000:rate=2,net=weak").unwrap();
+        run_sharded_open_loop(
+            &model,
+            &state,
+            &decision,
+            ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            2_000.0,
+            1,
+            1,
+            &drift,
+            ShardPlan { shards: 1, window_ms: 0.0 },
+            None,
+        );
+    }
+}

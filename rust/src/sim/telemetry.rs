@@ -18,9 +18,19 @@
 //! `degrade`, `service_start` (a vCPU picked it up), and the terminal
 //! `complete` (with the user-visible response time). The control plane
 //! adds `epoch` spans at its decision boundaries. Gauges sample per-node
-//! backlog, en-route count and utilization at control ticks. Numeric ids
+//! backlog, en-route count and utilization — at control ticks by default
+//! ([`GaugeMode::Tick`]), or at every backlog-changing event when
+//! `[telemetry] gauges = "event"` ([`GaugeMode::Event`]). Numeric ids
 //! that do not apply to a record are `-1`; float fields that do not apply
 //! are NaN, which serializes as `null` (JSONL) or an empty cell (CSV).
+//!
+//! # Failure policy
+//!
+//! A sink failure mid-simulation (disk full, poisoned lock) must not
+//! panic the run: [`Sink::write_line`] reports success, failed lines are
+//! counted in [`Recorder::dropped_records`], and the simulation's
+//! metrics are unaffected either way (telemetry is observability, never
+//! control flow).
 
 use std::io::Write as _;
 use std::sync::{Arc, Mutex};
@@ -92,12 +102,16 @@ pub enum Record {
     },
 }
 
-/// Where flushed records go. Implementations must not reorder or drop
-/// lines — byte-identity of recorder-on runs is part of the telemetry
-/// contract the property suite pins.
+/// Where flushed records go. Implementations must not reorder lines —
+/// byte-identity of recorder-on runs is part of the telemetry contract
+/// the property suite pins — and must not panic on I/O trouble: a
+/// failed write returns `false` and the recorder counts the line in
+/// [`Recorder::dropped_records`] instead of taking the simulation down.
 pub trait Sink: Send {
-    fn write_line(&mut self, line: &str);
-    fn flush(&mut self);
+    /// Write one line; `false` = the line was lost (counted, not fatal).
+    fn write_line(&mut self, line: &str) -> bool;
+    /// Flush buffered lines; `false` = some buffered output may be lost.
+    fn flush(&mut self) -> bool;
 }
 
 /// Buffered file sink (JSONL/CSV file on disk).
@@ -118,12 +132,12 @@ impl FileSink {
 }
 
 impl Sink for FileSink {
-    fn write_line(&mut self, line: &str) {
-        let _ = writeln!(self.w, "{line}");
+    fn write_line(&mut self, line: &str) -> bool {
+        writeln!(self.w, "{line}").is_ok()
     }
 
-    fn flush(&mut self) {
-        let _ = self.w.flush();
+    fn flush(&mut self) -> bool {
+        self.w.flush().is_ok()
     }
 }
 
@@ -140,20 +154,55 @@ impl MemSink {
         MemSink::default()
     }
 
-    /// Everything written so far (one line per record).
+    /// Everything written so far (one line per record). A lock poisoned
+    /// by a panicking writer thread is recovered, not propagated — the
+    /// buffer only ever holds complete lines.
     pub fn contents(&self) -> String {
-        self.buf.lock().unwrap().clone()
+        self.buf.lock().unwrap_or_else(|p| p.into_inner()).clone()
     }
 }
 
 impl Sink for MemSink {
-    fn write_line(&mut self, line: &str) {
-        let mut b = self.buf.lock().unwrap();
+    fn write_line(&mut self, line: &str) -> bool {
+        // A poisoned lock means some other holder panicked, not that the
+        // String is torn (push_str leaves it valid); recover and keep
+        // recording rather than poisoning the whole simulation.
+        let mut b = self.buf.lock().unwrap_or_else(|p| p.into_inner());
         b.push_str(line);
         b.push('\n');
+        true
     }
 
-    fn flush(&mut self) {}
+    fn flush(&mut self) -> bool {
+        true
+    }
+}
+
+/// When node gauges are sampled. The default ([`GaugeMode::Tick`])
+/// samples every node at control ticks; [`GaugeMode::Event`] emits a
+/// gauge for the affected node at every backlog-changing event (Join /
+/// Finish), trading trace volume for full queue-trajectory resolution.
+/// Either way gauges copy already-computed scalars — no RNG draws, no
+/// float-path changes — so the mode is bitwise-transparent to every
+/// simulation metric (the property suite pins this).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GaugeMode {
+    /// Sample all nodes at control ticks (the pre-existing behavior).
+    #[default]
+    Tick,
+    /// Additionally emit the affected node's gauge at each event that
+    /// shifts a compute backlog.
+    Event,
+}
+
+impl GaugeMode {
+    pub fn parse(s: &str) -> Result<GaugeMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "tick" => Ok(GaugeMode::Tick),
+            "event" => Ok(GaugeMode::Event),
+            other => Err(format!("unknown telemetry gauges mode '{other}' (want tick|event)")),
+        }
+    }
 }
 
 /// Output format of the flight recorder.
@@ -197,6 +246,9 @@ pub struct Recorder {
     sink: Box<dyn Sink>,
     /// Records pushed over the recorder's lifetime (drained or not).
     total: u64,
+    /// Lines the sink refused (I/O error); the run keeps going.
+    dropped: u64,
+    gauges: GaugeMode,
 }
 
 impl Recorder {
@@ -204,10 +256,19 @@ impl Recorder {
     /// its header immediately, so even an empty run leaves a parsable
     /// artifact.
     pub fn new(cap: usize, format: Format, mut sink: Box<dyn Sink>) -> Recorder {
-        if format == Format::Csv {
-            sink.write_line(CSV_HEADER);
+        let mut dropped = 0;
+        if format == Format::Csv && !sink.write_line(CSV_HEADER) {
+            dropped += 1;
         }
-        Recorder { ring: Vec::with_capacity(cap.max(1)), cap: cap.max(1), format, sink, total: 0 }
+        Recorder {
+            ring: Vec::with_capacity(cap.max(1)),
+            cap: cap.max(1),
+            format,
+            sink,
+            total: 0,
+            dropped,
+            gauges: GaugeMode::Tick,
+        }
     }
 
     /// Recorder writing to a freshly created file at `path`.
@@ -226,19 +287,38 @@ impl Recorder {
             return Ok(None);
         }
         let format = Format::parse(&cfg.format)?;
+        let gauges = GaugeMode::parse(&cfg.gauges)?;
         let path = if cfg.path.is_empty() { default_path.to_string() } else { cfg.path.clone() };
         Recorder::to_file(cfg.capacity, format, &path)
-            .map(Some)
+            .map(|r| Some(r.with_gauges(gauges)))
             .map_err(|e| format!("telemetry path '{path}': {e}"))
+    }
+
+    /// Set the gauge sampling mode (builder-style; default
+    /// [`GaugeMode::Tick`]).
+    pub fn with_gauges(mut self, gauges: GaugeMode) -> Recorder {
+        self.gauges = gauges;
+        self
     }
 
     pub fn format(&self) -> Format {
         self.format
     }
 
+    pub fn gauge_mode(&self) -> GaugeMode {
+        self.gauges
+    }
+
     /// Records pushed so far (including already-drained ones).
     pub fn total_records(&self) -> u64 {
         self.total
+    }
+
+    /// Lines the sink failed to accept (I/O error, full disk). Non-zero
+    /// means the trace on disk is incomplete; the simulation itself was
+    /// unaffected.
+    pub fn dropped_records(&self) -> u64 {
+        self.dropped
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -269,16 +349,20 @@ impl Recorder {
 
     fn drain(&mut self) {
         for rec in &self.ring {
-            self.sink.write_line(&format_record(rec, self.format));
+            if !self.sink.write_line(&format_record(rec, self.format)) {
+                self.dropped += 1;
+            }
         }
         self.ring.clear();
     }
 
     /// Drain the buffer and flush the sink. Call once after the run (the
-    /// orchestrator does this before returning its report).
+    /// orchestrator does this before returning its report). A failing
+    /// flush is counted against nothing — the per-line drops already
+    /// were — and never panics.
     pub fn flush(&mut self) {
         self.drain();
-        self.sink.flush();
+        let _ = self.sink.flush();
     }
 }
 
@@ -407,6 +491,66 @@ mod tests {
         assert!(Format::parse("xml").is_err());
         let off = TelemetryConfig::default();
         assert!(Recorder::from_config(&off, "unused").unwrap().is_none());
+    }
+
+    /// Sink that refuses every line after the first `accept` — the
+    /// disk-full / broken-pipe stand-in.
+    struct FailingSink {
+        accept: usize,
+        written: usize,
+    }
+
+    impl Sink for FailingSink {
+        fn write_line(&mut self, _line: &str) -> bool {
+            if self.written < self.accept {
+                self.written += 1;
+                true
+            } else {
+                false
+            }
+        }
+
+        fn flush(&mut self) -> bool {
+            false
+        }
+    }
+
+    #[test]
+    fn failing_sink_counts_drops_instead_of_panicking() {
+        let mut rec =
+            Recorder::new(2, Format::Jsonl, Box::new(FailingSink { accept: 3, written: 0 }));
+        for i in 0..10u64 {
+            rec.span(i as f64, SpanKind::Admit, i, 0, 0, 0, f64::NAN);
+        }
+        rec.flush(); // failing flush must also be non-fatal
+        assert_eq!(rec.total_records(), 10);
+        assert_eq!(rec.dropped_records(), 7, "3 accepted, the rest counted as dropped");
+    }
+
+    #[test]
+    fn mem_sink_survives_a_poisoned_lock() {
+        let sink = MemSink::new();
+        let mut writer = sink.clone();
+        assert!(writer.write_line("before"));
+        // Poison the mutex the way a real run would: a panicking holder.
+        let holder = sink.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = holder.buf.lock().unwrap();
+            panic!("poison the telemetry lock");
+        })
+        .join();
+        assert!(writer.write_line("after"), "poisoned lock must not kill the recorder");
+        assert_eq!(sink.contents(), "before\nafter\n");
+    }
+
+    #[test]
+    fn gauge_mode_parses_and_defaults_to_tick() {
+        assert_eq!(GaugeMode::parse("tick").unwrap(), GaugeMode::Tick);
+        assert_eq!(GaugeMode::parse("EVENT").unwrap(), GaugeMode::Event);
+        assert!(GaugeMode::parse("always").is_err());
+        let (rec, _) = mem_recorder(4, Format::Jsonl);
+        assert_eq!(rec.gauge_mode(), GaugeMode::Tick);
+        assert_eq!(rec.with_gauges(GaugeMode::Event).gauge_mode(), GaugeMode::Event);
     }
 
     #[test]

@@ -12,7 +12,7 @@ use eeco::prelude::*;
 use eeco::sim::admission::{stamp_deadlines, AdmissionPolicy, AdmitAll, DeadlineShed};
 use eeco::sim::arrivals::schedule;
 use eeco::sim::scenarios;
-use eeco::sim::{des, Env, Format, MemSink, Recorder, ResponseModel};
+use eeco::sim::{des, Env, Format, GaugeMode, MemSink, Recorder, ResponseModel};
 use eeco::orchestrator::{ControlCfg, Orchestrator};
 use eeco::util::json::Json;
 use eeco::util::prop::forall;
@@ -257,6 +257,73 @@ fn prop_spans_conserve_admission_outcomes() {
             }
             Ok(())
         },
+    );
+}
+
+/// `[telemetry] gauges = "event"` samples the affected node at every
+/// backlog-changing event — strictly more trace volume — while staying
+/// bitwise transparent: the engine's outcome must match the recorder-off
+/// run exactly, and every extra gauge must re-parse with sane fields.
+#[test]
+fn event_gauges_are_bitwise_transparent_and_sample_every_backlog_shift() {
+    let users = 4;
+    let seed = 0x6A06E;
+    let horizon = 6_000.0;
+    let decision = Decision(
+        (0..users).map(|d| Action::from_index(d % ACTIONS_PER_DEVICE)).collect(),
+    );
+    let mut trace =
+        schedule(ArrivalProcess::Poisson { rate_per_s: 3.0 }, users, horizon, seed);
+    {
+        let model = model_for(users);
+        let state = TopoState::idle(&model.net.topo);
+        let mut core = des::DesCore::new();
+        core.install(&model, &state);
+        stamp_deadlines(&mut trace, &core, 0.0, 2.5);
+    }
+    let (plain, none) =
+        run_policed(users, &decision, &trace, horizon, 1_000.0, false, seed, None);
+    assert!(none.is_empty());
+
+    // Same run, recorder in event-gauge mode.
+    let model = model_for(users);
+    let state = TopoState::idle(&model.net.topo);
+    let mut core = des::DesCore::new();
+    core.install(&model, &state);
+    let sink = MemSink::new();
+    core.set_recorder(Some(
+        Recorder::new(16, Format::Jsonl, Box::new(sink.clone())).with_gauges(GaugeMode::Event),
+    ));
+    let mut policy = AdmitAll;
+    let mut taped = des::DesOutcome::default();
+    core.run_admitted(&decision, &trace, horizon, 1_000.0, &mut policy, seed, &mut taped);
+    let mut rec = core.take_recorder().unwrap();
+    rec.flush();
+    assert_eq!(rec.dropped_records(), 0, "MemSink never drops");
+
+    assert_eq!(plain.completed.len(), taped.completed.len());
+    for (a, b) in plain.completed.iter().zip(&taped.completed) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.response_ms.to_bits(), b.response_ms.to_bits(), "req {}", a.id);
+    }
+    assert_eq!(plain.makespan_ms.to_bits(), taped.makespan_ms.to_bits());
+
+    // Every join and every finish shifts a compute backlog, so event mode
+    // emits at least two gauges per completed request.
+    let mut gauges = 0usize;
+    for line in sink.contents().lines() {
+        let j = Json::parse(line).unwrap();
+        if j.field("type").unwrap().as_str() == Some("gauge") {
+            gauges += 1;
+            let u = j.field("utilization").unwrap().as_f64().unwrap();
+            assert!((0.0..=1.0).contains(&u), "utilization {u} out of [0,1]");
+            assert!(j.field("backlog").unwrap().as_usize().is_some());
+        }
+    }
+    assert!(
+        gauges >= 2 * taped.completed.len(),
+        "{gauges} event gauges for {} completions",
+        taped.completed.len()
     );
 }
 
