@@ -210,6 +210,95 @@ impl DriftConfig {
     }
 }
 
+/// `[faults]` section: the piecewise fault-injection timeline played over
+/// the evaluation horizon, as a `sim::faults::FaultSchedule` spec string
+/// (see its `parse` docs; e.g.
+/// `"20000:edge0=down;45000:edge0=up;30000:net=flap(500,0.3)"`), plus the
+/// `--faults` CLI override. Empty = nothing ever fails, bit-identical to
+/// the fault-free engine.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultsConfig {
+    pub spec: String,
+}
+
+impl FaultsConfig {
+    pub fn schedule(&self) -> Result<crate::sim::FaultSchedule, String> {
+        crate::sim::FaultSchedule::parse(&self.spec)
+    }
+
+    /// True when a non-empty fault timeline is configured.
+    pub fn active(&self) -> bool {
+        !self.spec.trim().is_empty()
+    }
+}
+
+/// `[retry]` section: the failure-aware request lifecycle — per-attempt
+/// timeout and what the engine does when an attempt errors out (fault or
+/// timeout), plus the `--retry` CLI override. The default (`policy =
+/// "none"`, `timeout_ms = 0`) leaves every attempt terminal on failure
+/// and never times anything out.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryConfig {
+    /// "none" | "backoff" (same placement) | "failover" (next-best
+    /// healthy placement).
+    pub policy: String,
+    /// Max re-admissions per request (ignored by "none").
+    pub budget: usize,
+    /// Per-attempt timeout in ms measured from (re)admission; 0 = never
+    /// time out (attempts only fail on node/link faults).
+    pub timeout_ms: f64,
+    /// Base backoff delay in ms: retry k waits
+    /// `backoff_ms * 2^(k-1) * (0.5 + jitter)` with jitter from the
+    /// seeded fault RNG.
+    pub backoff_ms: f64,
+    /// True when the user configured the section ([retry] / --retry).
+    pub explicit: bool,
+}
+
+impl Default for RetryConfig {
+    fn default() -> Self {
+        RetryConfig {
+            policy: "none".into(),
+            budget: 3,
+            timeout_ms: 0.0,
+            backoff_ms: 250.0,
+            explicit: false,
+        }
+    }
+}
+
+/// The retry policies `[retry] policy` / `--retry` accept.
+pub const RETRY_POLICIES: [&str; 3] = ["none", "backoff", "failover"];
+
+impl RetryConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        self.build().map(|_| ())?;
+        if !(self.timeout_ms.is_finite() && self.timeout_ms >= 0.0) {
+            return Err(format!(
+                "retry.timeout_ms must be finite and >= 0 (0 = no timeout), got {}",
+                self.timeout_ms
+            ));
+        }
+        Ok(())
+    }
+
+    /// Build the typed `sim::faults` retry policy.
+    pub fn build(&self) -> Result<crate::sim::RetryPolicy, String> {
+        crate::sim::RetryPolicy::parse(&self.policy, self.budget as u32, self.backoff_ms)
+    }
+
+    /// Assemble the full fault plan the DES consumes from this section
+    /// plus the `[faults]` timeline.
+    pub fn plan(&self, faults: &FaultsConfig) -> Result<crate::sim::FaultPlan, String> {
+        self.validate()?;
+        Ok(crate::sim::FaultPlan {
+            schedule: faults.schedule()?,
+            retry: self.build()?,
+            timeout_ms: self.timeout_ms,
+        })
+    }
+}
+
 /// `[telemetry]` section: the DES flight recorder (per-request trace
 /// spans + periodic gauges streamed as JSONL/CSV), plus the
 /// `--telemetry PATH` / `--telemetry-format` CLI overrides. Off by
@@ -432,6 +521,8 @@ pub struct Config {
     pub control: ControlConfig,
     pub drift: DriftConfig,
     pub admission: AdmissionConfig,
+    pub faults: FaultsConfig,
+    pub retry: RetryConfig,
     pub telemetry: TelemetryConfig,
     pub fleet: FleetConfig,
     pub sharding: ShardingConfig,
@@ -457,6 +548,8 @@ impl Default for Config {
             control: ControlConfig::default(),
             drift: DriftConfig::default(),
             admission: AdmissionConfig::default(),
+            faults: FaultsConfig::default(),
+            retry: RetryConfig::default(),
             telemetry: TelemetryConfig::default(),
             fleet: FleetConfig::default(),
             sharding: ShardingConfig::default(),
@@ -590,6 +683,64 @@ impl Config {
             self.admission.explicit = true;
         }
         self.admission.validate()?;
+        // [faults] / [retry]: same strict style.
+        const FAULTS_KEYS: [&str; 1] = ["spec"];
+        const RETRY_KEYS: [&str; 4] = ["policy", "budget", "timeout_ms", "backoff_ms"];
+        for key in doc.entries.keys() {
+            if let Some(k) = key.strip_prefix("faults.") {
+                if !FAULTS_KEYS.contains(&k) {
+                    return Err(format!(
+                        "unknown [faults] key '{k}' (known: {})",
+                        FAULTS_KEYS.join(", ")
+                    ));
+                }
+            }
+            if let Some(k) = key.strip_prefix("retry.") {
+                if !RETRY_KEYS.contains(&k) {
+                    return Err(format!(
+                        "unknown [retry] key '{k}' (known: {})",
+                        RETRY_KEYS.join(", ")
+                    ));
+                }
+            }
+        }
+        if let Some(v) = doc.get("faults.spec") {
+            self.faults.spec = v
+                .as_str()
+                .ok_or_else(|| "faults.spec must be a string".to_string())?
+                .to_string();
+        }
+        self.faults.schedule().map(|_| ())?;
+        if let Some(v) = doc.get("retry.policy") {
+            self.retry.policy = v
+                .as_str()
+                .ok_or_else(|| "retry.policy must be a string (none|backoff|failover)".to_string())?
+                .to_string();
+            self.retry.explicit = true;
+        }
+        if let Some(v) = doc.get("retry.budget") {
+            let b = v.as_i64().ok_or_else(|| "retry.budget must be an integer".to_string())?;
+            if b < 1 {
+                return Err(format!("retry.budget must be >= 1, got {b}"));
+            }
+            self.retry.budget = b as usize;
+            self.retry.explicit = true;
+        }
+        if let Some(v) = doc.get("retry.timeout_ms") {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| "retry.timeout_ms must be a number (ms; 0 = off)".to_string())?;
+            self.retry.timeout_ms = x;
+            self.retry.explicit = true;
+        }
+        if let Some(v) = doc.get("retry.backoff_ms") {
+            let x = v
+                .as_f64()
+                .ok_or_else(|| "retry.backoff_ms must be a number (ms)".to_string())?;
+            self.retry.backoff_ms = x;
+            self.retry.explicit = true;
+        }
+        self.retry.validate()?;
         // [telemetry] / [fleet] / [sharding]: same strict style — unknown
         // keys and wrong value types are load-time errors, never silent
         // defaults.
@@ -766,6 +917,21 @@ impl Config {
             self.admission.explicit = true;
         }
         self.admission.validate()?;
+        if let Some(spec) = args.get("faults") {
+            self.faults.spec = spec.to_string();
+        }
+        self.faults.schedule().map(|_| ())?;
+        if let Some(p) = args.get("retry") {
+            self.retry.policy = p.to_string();
+            self.retry.explicit = true;
+        }
+        if let Some(v) = args.get("retry-timeout") {
+            self.retry.timeout_ms = v
+                .parse()
+                .map_err(|_| format!("bad --retry-timeout '{v}' (want ms; 0 = off)"))?;
+            self.retry.explicit = true;
+        }
+        self.retry.validate()?;
         if let Some(p) = args.get("telemetry") {
             if p.is_empty() {
                 return Err("--telemetry needs an output path".into());
@@ -1056,6 +1222,67 @@ mod tests {
         let bad = Args::parse(["--slo", "0.5"].iter().map(|s| s.to_string()));
         assert!(Config::load(&bad).is_err());
         let bad = Args::parse(["--slo", "many"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+    }
+
+    #[test]
+    fn faults_and_retry_sections_parse_strictly() {
+        // defaults: no faults, no retries, no timeout — identity plan
+        let d = Config::default();
+        assert!(!d.faults.active());
+        assert!(!d.retry.explicit);
+        assert!(d.retry.plan(&d.faults).unwrap().is_identity());
+
+        let doc = Doc::parse(
+            "[faults]\nspec = \"20000:edge0=down;45000:edge0=up\"\n\n\
+             [retry]\npolicy = \"failover\"\nbudget = 2\ntimeout_ms = 1500\nbackoff_ms = 100\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert!(c.faults.active());
+        assert_eq!(c.faults.schedule().unwrap().events().len(), 2);
+        assert!(c.retry.explicit);
+        let plan = c.retry.plan(&c.faults).unwrap();
+        assert!(!plan.is_identity());
+        assert_eq!(
+            plan.retry,
+            crate::sim::RetryPolicy::Failover { budget: 2, base_ms: 100.0 }
+        );
+        assert_eq!(plan.timeout_ms, 1500.0);
+
+        // unknown keys, bad specs, bad knobs rejected at load time
+        let bad = Doc::parse("[faults]\nspek = \"x\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[faults]\nspec = \"20000:edge0=sideways\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[retry]\npolicy = \"pray\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[retry]\nbudget = 0\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[retry]\ntimeout_ms = -1\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[retry]\nbackoff_ms = -5\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn faults_and_retry_cli_overrides() {
+        let args = Args::parse(
+            ["--faults", "5000:net=flap(500,0.3)", "--retry", "backoff", "--retry-timeout", "800"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::load(&args).unwrap();
+        assert!(c.faults.active());
+        assert_eq!(c.retry.policy, "backoff");
+        assert_eq!(c.retry.timeout_ms, 800.0);
+        assert!(c.retry.explicit);
+        let bad = Args::parse(["--faults", "x:net=down"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(["--retry", "hope"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(["--retry-timeout", "soon"].iter().map(|s| s.to_string()));
         assert!(Config::load(&bad).is_err());
     }
 

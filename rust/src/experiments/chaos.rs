@@ -1,0 +1,396 @@
+//! `chaos`: the fault-injection matrix — fault intensity x retry policy
+//! over the `edge_outage` traffic shape (`sim::scenarios::edge_outage`),
+//! all traffic pinned to edge 0 so the injected outages actually bite.
+//!
+//! Intensities: `none` (healthy), `brief` (edge 0 down for the middle
+//! tenth of the horizon), `outage` (the canonical 0.3h..0.7h hard
+//! outage), `flap` (periodic up/down through the middle 60%). Policies:
+//! `none` (attempts die on first failure), `backoff` (re-try the same
+//! placement after jittered exponential delay), `failover` (re-place
+//! onto the cheapest healthy alternative). Every cell runs a 1.5s
+//! per-attempt timeout so stalled work is reclaimed.
+//!
+//! Besides the matrix, the driver runs one *healthy anchor* pair: the
+//! same spec through the pre-existing fault-free entry point
+//! (`evaluate_admission`) and through `evaluate_chaos` with the identity
+//! `FaultPlan`. Their metric digests must match bit-for-bit — the
+//! experiment-level proof that an empty fault plan leaves the engine on
+//! its original path (`anchor_match` in `chaos.json`; CI greps for it).
+//!
+//! Outputs: a stdout table, `results/chaos.csv`, `results/chaos.json`.
+//! The driver also asserts the headline robustness claim: under the
+//! hard outage, failover completes strictly more goodput than giving up.
+
+use anyhow::{anyhow, Result};
+
+use crate::agent::baseline::FixedAgent;
+use crate::config::Scenario;
+use crate::metrics::{render_table, save_json, Csv, TrafficMetrics};
+use crate::orchestrator::{AdmissionCfg, ControlCfg, Orchestrator};
+use crate::sim::faults::FaultEvent;
+use crate::sim::scenarios;
+use crate::sim::{DriftSchedule, Env, FaultPlan, FaultSchedule, FaultState, FaultTarget, RetryPolicy};
+use crate::types::{AccuracyConstraint, Tier};
+use crate::util::json::Json;
+use crate::util::pool::ThreadPool;
+
+use super::ExpCtx;
+
+/// Fault-intensity axis, in report order.
+const INTENSITIES: [&str; 4] = ["none", "brief", "outage", "flap"];
+/// Retry-policy axis, in report order.
+const POLICIES: [&str; 3] = ["none", "backoff", "failover"];
+/// Per-attempt timeout shared by every matrix cell.
+const TIMEOUT_MS: f64 = 1_500.0;
+
+/// One matrix cell's spec.
+struct Cell {
+    intensity: &'static str,
+    policy: &'static str,
+}
+
+/// One finished cell, in report-column order.
+struct Row {
+    intensity: &'static str,
+    policy: &'static str,
+    requests: usize,
+    failed: usize,
+    timed_out: usize,
+    retries: usize,
+    failovers: usize,
+    shed: usize,
+    goodput_rps: f64,
+    availability: f64,
+    p95_ms: f64,
+}
+
+/// Fault schedule for a named intensity, shaped to the horizon.
+fn schedule_for(intensity: &str, h: f64) -> FaultSchedule {
+    let ev = |start_ms: f64, state: FaultState| FaultEvent {
+        start_ms,
+        target: FaultTarget::Edge(0),
+        state,
+    };
+    match intensity {
+        "none" => FaultSchedule::none(),
+        "brief" => {
+            FaultSchedule::new(vec![ev(0.45 * h, FaultState::Down), ev(0.55 * h, FaultState::Up)])
+                .unwrap()
+        }
+        "outage" => scenarios::edge_outage(h).1,
+        "flap" => FaultSchedule::new(vec![
+            ev(0.2 * h, FaultState::Flap { period_ms: (h / 20.0).max(200.0), duty: 0.5 }),
+            ev(0.8 * h, FaultState::Up),
+        ])
+        .unwrap(),
+        other => unreachable!("unknown intensity '{other}'"),
+    }
+}
+
+/// Retry policy for a named policy label.
+fn policy_for(policy: &str) -> RetryPolicy {
+    match policy {
+        "none" => RetryPolicy::None,
+        "backoff" => RetryPolicy::Backoff { budget: 3, base_ms: 100.0 },
+        "failover" => RetryPolicy::Failover { budget: 3, base_ms: 100.0 },
+        other => unreachable!("unknown policy '{other}'"),
+    }
+}
+
+/// FNV-1a over the bit patterns of a run's traffic metrics: two runs on
+/// the same code path produce the same digest, and any float divergence
+/// anywhere in the engine shows up here.
+fn metrics_digest(m: &TrafficMetrics) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut fold = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    fold(m.requests as u64);
+    fold(m.shed as u64);
+    fold(m.failed as u64);
+    fold(m.timed_out as u64);
+    fold(m.retries as u64);
+    fold(m.failovers as u64);
+    fold(m.deadline_misses as u64);
+    fold(m.peak_backlog as u64);
+    fold(m.goodput_rps.to_bits());
+    fold(m.throughput_rps.to_bits());
+    fold(m.response.p50_ms.to_bits());
+    fold(m.response.p95_ms.to_bits());
+    fold(m.response.p99_ms.to_bits());
+    fold(m.makespan_ms.to_bits());
+    fold(m.availability.to_bits());
+    h
+}
+
+pub fn chaos(ctx: &ExpCtx) -> Result<()> {
+    let users = 5;
+    // same smoke switch as the fleet driver: `[fleet] fast` or EECO_FAST
+    let fast = ctx.cfg.fleet.fast || std::env::var("EECO_FAST").is_ok();
+    let horizon = if fast { 8_000.0 } else { 40_000.0 };
+    let seed = ctx.cfg.seed;
+    let (scn, _) = scenarios::edge_outage(horizon);
+    println!(
+        "\n== chaos: {} intensity(ies) x {} retry policy(ies), {users} users pinned to \
+         edge 0, horizon {horizon:.0} ms, timeout {TIMEOUT_MS:.0} ms ==",
+        INTENSITIES.len(),
+        POLICIES.len()
+    );
+
+    let cells: Vec<Cell> = INTENSITIES
+        .iter()
+        .flat_map(|&intensity| POLICIES.iter().map(move |&policy| Cell { intensity, policy }))
+        .collect();
+
+    let calibration = ctx.cfg.calibration.clone();
+    let process = scn.process;
+    // ~10 control ticks, no learning: the matrix isolates the request
+    // lifecycle (timeout / retry / failover), not the policy loop.
+    let ctl = ControlCfg { period_ms: horizon / 10.0, online_learning: false };
+    let run_cell = {
+        let calibration = calibration.clone();
+        let ctl = ctl.clone();
+        move |_i: usize, cell: Cell| -> Row {
+            let env = Env::new(
+                Scenario::exp_a(users),
+                calibration.clone(),
+                AccuracyConstraint::Max,
+                seed,
+            );
+            let mut orch = Orchestrator::new(env, Box::new(FixedAgent::new(Tier::Edge(0), users)));
+            orch.env.freeze();
+            orch.env.reset_load();
+            let plan = FaultPlan {
+                schedule: schedule_for(cell.intensity, horizon),
+                retry: policy_for(cell.policy),
+                timeout_ms: TIMEOUT_MS,
+            };
+            let rep = orch.evaluate_chaos(
+                process,
+                horizon,
+                seed,
+                &ctl,
+                &DriftSchedule::none(),
+                &AdmissionCfg::default(),
+                &plan,
+            );
+            let m = rep.metrics;
+            Row {
+                intensity: cell.intensity,
+                policy: cell.policy,
+                requests: m.requests,
+                failed: m.failed,
+                timed_out: m.timed_out,
+                retries: m.retries,
+                failovers: m.failovers,
+                shed: m.shed,
+                goodput_rps: m.goodput_rps,
+                availability: m.availability,
+                p95_ms: m.response.p95_ms,
+            }
+        }
+    };
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(cells.len().max(1));
+    let pool = ThreadPool::new(workers, "chaos");
+    let rows = pool.map_indexed(cells, run_cell);
+
+    // Healthy anchor: identity plan through the chaos entry point must be
+    // bit-identical to the pre-existing fault-free entry point.
+    let anchor = {
+        let mut run = |chaos_path: bool| -> u64 {
+            let env = Env::new(
+                Scenario::exp_a(users),
+                calibration.clone(),
+                AccuracyConstraint::Max,
+                seed,
+            );
+            let mut orch = Orchestrator::new(env, Box::new(FixedAgent::new(Tier::Edge(0), users)));
+            orch.env.freeze();
+            orch.env.reset_load();
+            let rep = if chaos_path {
+                orch.evaluate_chaos(
+                    process,
+                    horizon,
+                    seed,
+                    &ctl,
+                    &DriftSchedule::none(),
+                    &AdmissionCfg::default(),
+                    &FaultPlan::none(),
+                )
+            } else {
+                orch.evaluate_admission(
+                    process,
+                    horizon,
+                    seed,
+                    &ctl,
+                    &DriftSchedule::none(),
+                    &AdmissionCfg::default(),
+                )
+            };
+            metrics_digest(&rep.metrics)
+        };
+        let healthy = run(false);
+        let identity = run(true);
+        (healthy, identity)
+    };
+    let anchor_match = anchor.0 == anchor.1;
+
+    let mut csv = Csv::new(&[
+        "intensity",
+        "policy",
+        "requests",
+        "failed",
+        "timed_out",
+        "retries",
+        "failovers",
+        "shed",
+        "goodput_rps",
+        "availability",
+        "p95_ms",
+    ]);
+    let mut table = Vec::new();
+    let mut json_rows = Vec::new();
+    for r in &rows {
+        csv.row(&[
+            r.intensity.to_string(),
+            r.policy.to_string(),
+            r.requests.to_string(),
+            r.failed.to_string(),
+            r.timed_out.to_string(),
+            r.retries.to_string(),
+            r.failovers.to_string(),
+            r.shed.to_string(),
+            format!("{:.3}", r.goodput_rps),
+            format!("{:.4}", r.availability),
+            format!("{:.1}", r.p95_ms),
+        ]);
+        table.push(vec![
+            r.intensity.to_string(),
+            r.policy.to_string(),
+            r.requests.to_string(),
+            r.failed.to_string(),
+            r.timed_out.to_string(),
+            r.retries.to_string(),
+            r.failovers.to_string(),
+            format!("{:.2}", r.goodput_rps),
+            format!("{:.3}", r.availability),
+        ]);
+        json_rows.push(
+            Json::obj()
+                .set("intensity", r.intensity)
+                .set("policy", r.policy)
+                .set("requests", r.requests)
+                .set("failed", r.failed)
+                .set("timed_out", r.timed_out)
+                .set("retries", r.retries)
+                .set("failovers", r.failovers)
+                .set("shed", r.shed)
+                .set("goodput_rps", r.goodput_rps)
+                .set("availability", r.availability)
+                .set("p95_ms", r.p95_ms),
+        );
+    }
+    print!(
+        "{}",
+        render_table(
+            &["intensity", "policy", "reqs", "failed", "timeout", "retries", "failover",
+              "goodput", "avail"],
+            &table
+        )
+    );
+    println!(
+        "healthy anchor: fault-free path {:#018x}, identity-plan path {:#018x} ({})",
+        anchor.0,
+        anchor.1,
+        if anchor_match { "match" } else { "MISMATCH" }
+    );
+
+    // The headline robustness claim, enforced at run time: under a hard
+    // outage, failing over must strictly beat giving up.
+    let goodput = |intensity: &str, policy: &str| {
+        rows.iter()
+            .find(|r| r.intensity == intensity && r.policy == policy)
+            .map(|r| r.goodput_rps)
+            .expect("the matrix covers every (intensity, policy)")
+    };
+    let (abandoned, rescued) = (goodput("outage", "none"), goodput("outage", "failover"));
+    println!("outage goodput: none {abandoned:.3} rps, failover {rescued:.3} rps");
+    if rescued <= abandoned {
+        return Err(anyhow!(
+            "failover must strictly beat retry-none under the hard outage \
+             (got {rescued:.3} vs {abandoned:.3} rps)"
+        ));
+    }
+    if !anchor_match {
+        return Err(anyhow!(
+            "identity fault plan diverged from the fault-free engine path"
+        ));
+    }
+
+    csv.save(&ctx.cfg.results_dir, "chaos")?;
+    let report = Json::obj()
+        .set("users", users)
+        .set("horizon_ms", horizon)
+        .set("seed", seed as i64)
+        .set("timeout_ms", TIMEOUT_MS)
+        .set("anchor_match", anchor_match)
+        .set("rows", Json::Arr(json_rows));
+    save_json(&ctx.cfg.results_dir, "chaos", &report)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::experiments::ExpCtx;
+
+    #[test]
+    fn chaos_matrix_reports_and_failover_beats_abandonment() {
+        let dir = std::env::temp_dir().join(format!("eeco_chaos_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = Config {
+            results_dir: dir.to_str().unwrap().into(),
+            ..Default::default()
+        };
+        cfg.fleet.fast = true;
+        let ctx = ExpCtx::new(cfg);
+        // the driver itself asserts failover > none under the outage and
+        // the healthy-anchor digest match; an Err here is the regression
+        chaos(&ctx).unwrap();
+
+        let body =
+            std::fs::read_to_string(format!("{}/chaos.csv", ctx.cfg.results_dir)).unwrap();
+        assert_eq!(body.lines().count(), 1 + INTENSITIES.len() * POLICIES.len(), "{body}");
+
+        let json =
+            std::fs::read_to_string(format!("{}/chaos.json", ctx.cfg.results_dir)).unwrap();
+        let j = Json::parse(&json).unwrap();
+        assert_eq!(j.field("anchor_match").unwrap(), &Json::Bool(true));
+        match j.field("rows").unwrap() {
+            Json::Arr(v) => {
+                assert_eq!(v.len(), INTENSITIES.len() * POLICIES.len());
+                let cell = |intensity: &str, policy: &str| {
+                    v.iter()
+                        .find(|r| {
+                            r.field("intensity").unwrap().as_str() == Some(intensity)
+                                && r.field("policy").unwrap().as_str() == Some(policy)
+                        })
+                        .unwrap()
+                        .clone()
+                };
+                // healthy cells never fail; outage cells without retries do
+                let healthy = cell("none", "none");
+                assert_eq!(healthy.field("failed").unwrap(), &Json::Num(0.0));
+                let outage = cell("outage", "none");
+                assert!(outage.field("failed").unwrap().as_f64().unwrap() > 0.0);
+            }
+            other => panic!("rows must be an array, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -140,15 +140,20 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
     // frozen anchor: single epoch over the same drifted trace (the
     // orchestrator's construction-time agent is still untouched here).
     // Every row honors the configured [admission] ingress (inactive by
-    // default — bit-identical to the pre-admission experiment).
+    // default — bit-identical to the pre-admission experiment) and the
+    // configured [faults]/[retry] plan, so a drift scenario can be
+    // replayed under injected outages with timeouts and failover
+    // (identity plan by default — the fault-free engine path).
     let admission = ctx.cfg.admission.clone();
-    let frozen = orch.evaluate_admission(
+    let plan = ctx.cfg.retry.plan(&ctx.cfg.faults).map_err(|e| anyhow!(e))?;
+    let frozen = orch.evaluate_chaos(
         process,
         horizon,
         seed,
         &ControlCfg { period_ms: f64::INFINITY, online_learning: false },
         &schedule,
         &admission,
+        &plan,
     );
     rows.push(Row { policy: "frozen".into(), period_ms: horizon, report: frozen });
 
@@ -159,13 +164,14 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
     let online_label = if learn { "online" } else { "online-norelearn" };
     for &period in &periods {
         orch.agent = fresh_agent();
-        let rep = orch.evaluate_admission(
+        let rep = orch.evaluate_chaos(
             process,
             horizon,
             seed,
             &ControlCfg { period_ms: period, online_learning: learn },
             &schedule,
             &admission,
+            &plan,
         );
         rows.push(Row { policy: online_label.into(), period_ms: period, report: rep });
     }
@@ -204,6 +210,7 @@ pub fn drift(ctx: &ExpCtx) -> Result<()> {
             false,
             &schedule,
             &admission,
+            &plan,
             &mut decide,
         );
         if declined {

@@ -3,6 +3,7 @@
 //! `results/<id>.csv` (+ JSON where useful); `examples/paper_experiments`
 //! runs all of them for EXPERIMENTS.md.
 
+pub mod chaos;
 pub mod drift;
 pub mod figures;
 pub mod fleet;
@@ -122,7 +123,7 @@ impl ExpCtx {
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig1c", "fig5", "table8", "table9", "table10", "fig6", "fig7",
     "table11", "fig8", "table12", "prediction", "traffic_sweep", "multi_edge", "drift",
-    "overload", "fleet", "scale",
+    "overload", "fleet", "scale", "chaos",
 ];
 
 /// Dispatch an experiment by id.
@@ -147,6 +148,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "overload" => overload::overload(ctx),
         "fleet" => fleet::fleet(ctx),
         "scale" => scale::scale(ctx),
+        "chaos" => chaos::chaos(ctx),
         other => Err(anyhow!("unknown experiment '{other}' (known: {ALL:?})")),
     }
 }
@@ -178,8 +180,8 @@ mod tests {
         let ctx = ExpCtx::new(Config::default());
         assert!(run("nope", &ctx).is_err());
         // 13 paper experiments + traffic_sweep + multi_edge + drift +
-        // overload + fleet + scale
-        assert_eq!(ALL.len(), 19);
+        // overload + fleet + scale + chaos
+        assert_eq!(ALL.len(), 20);
     }
 
     #[test]

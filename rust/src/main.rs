@@ -68,6 +68,24 @@ fn run(args: &Args) -> Result<()> {
             ));
         }
     }
+    // [faults]/[retry] follow the same fail-safe stance: honored by
+    // `experiment drift` only (the chaos matrix builds its own fault
+    // plans and ignores the sections), rejected anywhere they would be
+    // silently dropped.
+    if cfg.faults.active() || cfg.retry.explicit || cfg.retry.timeout_ms > 0.0 {
+        let exp = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+        let honored = cmd == "experiment" && exp == "drift";
+        if !honored {
+            let target =
+                if cmd == "experiment" { format!("experiment {exp}") } else { cmd.to_string() };
+            return Err(anyhow!(
+                "--faults / --retry / --retry-timeout ([faults]/[retry]) are honored by \
+                 `experiment drift` only; `experiment chaos` sweeps its own fault matrix and \
+                 `{target}` would silently run fault-free — drop the flags or run `experiment \
+                 drift`"
+            ));
+        }
+    }
     match cmd {
         "experiment" => cmd_experiment(args, cfg),
         "train" => cmd_train(args, cfg),
@@ -140,6 +158,29 @@ OPTIONS (fleet):  --fleet-scenarios a,b|all  --fleet-policies a,b|all
                   comparative report (results/fleet.csv + fleet.json)
                   --fast   smoke slice (2 scenarios x 2 policies, short
                   horizon; EECO_FAST=1 does the same)
+OPTIONS (faults): --faults \"T:edge0=down;T2:edge0=up;...\"   piecewise
+                  fault-injection schedule over the horizon (targets
+                  edgeK|cloud|net, states up|down|flap(period_ms,duty));
+                  `experiment drift` replays its drifted trace under the
+                  schedule (rejected elsewhere — other commands would
+                  silently run fault-free). A failed node drains its
+                  queue, arrivals to it error out, and the control plane
+                  re-routes around the outage via the live down mask;
+                  failures are priced like shed load in the online reward
+                  --retry none|backoff|failover   what a failed attempt
+                  does next: give up (terminal failure), re-try the same
+                  placement after a jittered exponential delay, or
+                  re-place onto the cheapest healthy alternative
+                  ([retry] budget caps attempts per request, default 3)
+                  --retry-timeout MS   per-attempt timeout (0 = off);
+                  timed-out attempts are evicted from wherever they
+                  queue and recycled through the retry policy
+                  ([faults] spec; [retry] policy/budget/timeout_ms/
+                  backoff_ms in TOML; empty spec + timeout 0 = identity,
+                  bit-identical to the fault-free engine; `experiment
+                  chaos` sweeps fault intensity x retry policy into
+                  results/chaos.csv + chaos.json with a gating
+                  healthy-anchor digest self-check)
 OPTIONS (sharding): --shards N   partition the open-loop DES by edge
                   domain: N independent event loops (device + home-edge
                   traffic never crosses shards; the cloud uplink is the

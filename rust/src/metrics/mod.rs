@@ -146,6 +146,18 @@ pub struct TrafficMetrics {
     /// `requests = on-time + late` always holds).
     pub response_on_time: Option<LatencySummary>,
     pub response_late: Option<LatencySummary>,
+    /// Admitted requests that failed terminally under a fault plan
+    /// (timeout/outage with retry budget exhausted); 0 without faults.
+    pub failed: usize,
+    /// Per-attempt timeouts observed (an eviction, not necessarily
+    /// terminal — a retried attempt counts here and in `retries`).
+    pub timed_out: usize,
+    /// Re-admissions performed by the retry policy (failovers included).
+    pub retries: usize,
+    /// Retries that switched to a different healthy placement.
+    pub failovers: usize,
+    /// completed / (completed + failed); 1.0 when nothing resolved.
+    pub availability: f64,
 }
 
 impl TrafficMetrics {
@@ -182,6 +194,11 @@ impl TrafficMetrics {
             goodput_rps: outcome.goodput_rps(),
             response_on_time: summarize(&on_time),
             response_late: summarize(&late),
+            failed: outcome.failed,
+            timed_out: outcome.timed_out,
+            retries: outcome.retries,
+            failovers: outcome.failovers,
+            availability: outcome.availability(),
         }
     }
 
@@ -198,6 +215,11 @@ impl TrafficMetrics {
             .set("deferrals", self.deferrals)
             .set("degraded", self.degraded)
             .set("deadline_misses", self.deadline_misses)
+            .set("failed", self.failed)
+            .set("timed_out", self.timed_out)
+            .set("retries", self.retries)
+            .set("failovers", self.failovers)
+            .set("availability", self.availability)
             .set("response", self.response.to_json())
             .set("queueing", self.queueing.to_json());
         if let Some(s) = &self.response_on_time {
@@ -254,6 +276,10 @@ pub struct EpochRecord {
     pub degraded: usize,
     /// Epoch completions that blew their deadline.
     pub deadline_misses: usize,
+    /// Terminal failures during the epoch (priced like shed arrivals in
+    /// the reward — the learner must feel an outage, not just observe a
+    /// thinner completion stream).
+    pub failed: usize,
 }
 
 /// Outcome of one online (control-plane) evaluation:
@@ -476,6 +502,7 @@ mod tests {
             deferrals: 0,
             degraded: 0,
             deadline_misses: 0,
+            failed: 0,
         };
         let metrics = TrafficMetrics::from_outcome(&dec(0), &outcome);
         let report = OnlineReport {

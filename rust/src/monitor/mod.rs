@@ -150,6 +150,32 @@ pub fn overlay_live_load(base: &TopoState, load: &[f64]) -> TopoState {
     s
 }
 
+/// Force down nodes to look saturated in the live observation: `down` is
+/// per-compute-node health in DES node order (each end device, then each
+/// edge, then the cloud — [`crate::sim::DesCore::node_down_mask`]); a
+/// down node's CPU is pinned to 1.0, the top Table 3 level, so the
+/// encoded state shifts and a value-based policy prices the outage like
+/// a saturated queue and routes around it. An all-healthy mask is a
+/// strict no-op (what keeps fault-free runs bitwise-pinned).
+pub fn mask_down_nodes(state: &mut TopoState, down: &[bool]) {
+    let users = state.devices.len();
+    let edges = state.edges.len();
+    assert_eq!(down.len(), users + edges + 1, "down mask vs node layout");
+    for (i, d) in state.devices.iter_mut().enumerate() {
+        if down[i] {
+            d.cpu = 1.0;
+        }
+    }
+    for (k, e) in state.edges.iter_mut().enumerate() {
+        if down[users + k] {
+            e.cpu = 1.0;
+        }
+    }
+    if down[users + edges] {
+        state.cloud.cpu = 1.0;
+    }
+}
+
 // --- Table 3 discretization -------------------------------------------------
 
 /// Edge/cloud CPU levels ("Nine discrete levels").
@@ -338,6 +364,37 @@ mod tests {
         assert_eq!(hot.cloud.cpu, 0.25);
         assert_eq!(hot.devices[0].mem, base.devices[0].mem);
         assert_ne!(encode(&hot).key, encode(&base).key);
+    }
+
+    #[test]
+    fn down_mask_saturates_only_down_nodes() {
+        let topo = Topology::uniform(&[R, R, R], W, 1, [1, 2, 4]);
+        let base = TopoState::idle(&topo);
+        // all-healthy mask: bitwise no-op
+        let mut s = base.clone();
+        mask_down_nodes(&mut s, &[false; 5]);
+        assert_eq!(s, base);
+        assert_eq!(encode(&s), encode(&base));
+        // edge down: its CPU pins to the top level, nothing else moves
+        let mut s = base.clone();
+        mask_down_nodes(&mut s, &[false, false, false, true, false]);
+        assert_eq!(s.edges[0].cpu, 1.0);
+        assert_eq!(cpu_level_ec(s.edges[0].cpu), CPU_LEVELS_EC - 1);
+        assert_eq!(s.devices, base.devices);
+        assert_eq!(s.cloud, base.cloud);
+        assert_ne!(encode(&s).key, encode(&base).key);
+        // cloud down
+        let mut s = base.clone();
+        mask_down_nodes(&mut s, &[false, false, false, false, true]);
+        assert_eq!(s.cloud.cpu, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "down mask vs node layout")]
+    fn down_mask_rejects_wrong_arity() {
+        let topo = Topology::uniform(&[R, R], R, 1, [1, 2, 4]);
+        let mut base = TopoState::idle(&topo);
+        mask_down_nodes(&mut base, &[false; 3]);
     }
 
     #[test]

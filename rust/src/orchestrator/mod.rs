@@ -38,7 +38,8 @@ use crate::sim::drift::{DriftSchedule, DriftSegment};
 use crate::sim::telemetry::Recorder;
 use crate::sim::workload::Request;
 use crate::sim::{
-    arrivals, run_sharded_open_loop, ArrivalProcess, Env, ShardPlan, ShardedOutcome,
+    arrivals, run_sharded_open_loop, ArrivalProcess, Env, FaultPlan, FaultSchedule, ShardPlan,
+    ShardedOutcome,
 };
 use crate::types::Decision;
 use crate::util::pool::ThreadPool;
@@ -270,15 +271,26 @@ impl Orchestrator {
     /// for a fixed `seed` (same `^ 0x5EED_DE5` noise-stream convention
     /// as the online path) and bitwise independent of shard count,
     /// window size, and worker pool.
+    /// Fault injection is likewise a single-core-control-plane feature:
+    /// the sharded engine has no timeout/retry lifecycle, so a non-empty
+    /// `[faults]` schedule is rejected loudly instead of silently ignored.
+    #[allow(clippy::too_many_arguments)]
     pub fn evaluate_sharded(
         &mut self,
         process: ArrivalProcess,
         horizon_ms: f64,
         seed: u64,
         drift: &DriftSchedule,
+        faults: &FaultSchedule,
         plan: ShardPlan,
         pool: Option<&crate::util::pool::ThreadPool>,
     ) -> ShardedOutcome {
+        assert!(
+            faults.is_identity(),
+            "the sharded engine does not support fault injection; \
+             [faults] requires the single-core control plane (evaluate_online / \
+             evaluate_chaos)"
+        );
         self.env.reset_load();
         let enc = self.env.encoded();
         let decision = self.agent.decide(&enc, false);
@@ -349,6 +361,40 @@ impl Orchestrator {
             ctl.online_learning,
             drift,
             admission,
+            &FaultPlan::none(),
+            &mut |_| None,
+        )
+    }
+
+    /// [`Orchestrator::evaluate_admission`] under a fault plan: the DES
+    /// injects the plan's node/link outages at their virtual-time
+    /// boundaries, evicts attempts that exceed the per-attempt timeout,
+    /// and re-admits per the retry policy — while the control plane
+    /// observes the node-health mask ([`monitor::mask_down_nodes`]) so
+    /// the agent re-routes around outages, and `learn()` prices each
+    /// terminal failure like a shed arrival. With the empty plan this
+    /// *is* `evaluate_admission`, byte for byte.
+    #[allow(clippy::too_many_arguments)]
+    pub fn evaluate_chaos(
+        &mut self,
+        process: ArrivalProcess,
+        horizon_ms: f64,
+        seed: u64,
+        ctl: &ControlCfg,
+        drift: &DriftSchedule,
+        admission: &AdmissionCfg,
+        faults: &FaultPlan,
+    ) -> OnlineReport {
+        self.run_online(
+            process,
+            horizon_ms,
+            seed,
+            ctl.period_ms,
+            false,
+            ctl.online_learning,
+            drift,
+            admission,
+            faults,
             &mut |_| None,
         )
     }
@@ -374,6 +420,7 @@ impl Orchestrator {
             true,
             drift,
             &AdmissionCfg::default(),
+            &FaultPlan::none(),
             &mut |_| None,
         )
     }
@@ -393,6 +440,7 @@ impl Orchestrator {
         learn: bool,
         drift: &DriftSchedule,
         admission: &AdmissionCfg,
+        faults: &FaultPlan,
         decide: &mut dyn FnMut(&TopoState) -> Option<Decision>,
     ) -> OnlineReport {
         let users = self.env.users();
@@ -409,6 +457,7 @@ impl Orchestrator {
         let mut phys = self.env.state.clone();
         seg.apply_conds(&mut phys);
         core.install(&self.env.model, &phys);
+        core.set_fault_plan(faults);
         // Policed ingress only when the user configured [admission]: the
         // default path must stay bitwise the pre-admission engine, and an
         // invalid config never reaches here (Config::load validates).
@@ -460,7 +509,8 @@ impl Orchestrator {
                 Some(d) => d,
                 None => self.agent.decide(&enc, explore),
             };
-            let (shed0, defer0, degrade0) = (out.shed, out.deferrals, out.degraded);
+            let (shed0, defer0, degrade0, failed0) =
+                (out.shed, out.deferrals, out.degraded, out.failed);
             // Requests deferred at an earlier tick are re-presented now,
             // under this epoch's decision and against the live backlog.
             if let Some(pol) = policy.as_mut() {
@@ -544,6 +594,11 @@ impl Orchestrator {
             let summary = LatencySummary::of(&responses);
             let epoch_shed = out.shed - shed0;
             let epoch_degraded = out.degraded - degrade0;
+            let epoch_failed = out.failed - failed0;
+            // Shed and terminally-failed requests are priced identically:
+            // either way a user got nothing, so learn() charges one
+            // worst-case (`penalty_ms`) response per lost request.
+            let epoch_lost = epoch_shed + epoch_failed;
             // Accuracy for Eq. 4: nominal until the ingress has overridden
             // any model this run — from then on the *realized* mean over
             // the epoch's served models, so a Degrade ingress is graded on
@@ -563,18 +618,18 @@ impl Orchestrator {
             } else {
                 self.env.accuracy_of(&decision)
             };
-            let reward = if responses.is_empty() && epoch_shed == 0 {
+            let reward = if responses.is_empty() && epoch_lost == 0 {
                 0.0
             } else {
-                let mean_ms = if epoch_shed == 0 {
+                let mean_ms = if epoch_lost == 0 {
                     summary.mean_ms
                 } else {
-                    (responses.iter().sum::<f64>() + epoch_shed as f64 * self.env.penalty_ms())
-                        / (responses.len() + epoch_shed) as f64
+                    (responses.iter().sum::<f64>() + epoch_lost as f64 * self.env.penalty_ms())
+                        / (responses.len() + epoch_lost) as f64
                 };
                 self.env.reward(mean_ms, accuracy)
             };
-            pending = if responses.is_empty() && epoch_shed == 0 {
+            pending = if responses.is_empty() && epoch_lost == 0 {
                 None
             } else {
                 Some((enc, decision.clone(), reward))
@@ -595,6 +650,7 @@ impl Orchestrator {
                     .iter()
                     .filter(|c| !c.on_time())
                     .count(),
+                failed: epoch_failed,
             });
             core.record_epoch(t_end, epoch);
             epoch += 1;
@@ -626,11 +682,17 @@ impl Orchestrator {
 
     /// The control plane's mid-trace observation: the physics state (background
     /// load + drift conds) with each compute node's live queue-derived
-    /// utilization max-merged in.
+    /// utilization max-merged in — and, under an active fault plan, down
+    /// nodes pinned to the top CPU level so the policy routes around
+    /// them (a no-op without faults, keeping fault-free runs bitwise).
     fn observe_live(&self, core: &DesCore, phys: &TopoState) -> TopoState {
         let load: Vec<f64> =
             (0..core.num_compute_nodes()).map(|i| core.utilization(i)).collect();
-        monitor::overlay_live_load(phys, &load)
+        let mut obs = monitor::overlay_live_load(phys, &load);
+        if core.faults_active() {
+            monitor::mask_down_nodes(&mut obs, core.node_down_mask());
+        }
+        obs
     }
 
     /// The representative greedy decision at the idle system state —
@@ -740,6 +802,7 @@ mod tests {
                 6_000.0,
                 17,
                 &DriftSchedule::none(),
+                &FaultSchedule::none(),
                 ShardPlan { shards, window_ms: 0.0 },
                 None,
             )
@@ -753,6 +816,85 @@ mod tests {
         let b = run(1);
         assert_eq!(a.summary.digest, b.summary.digest);
         assert_eq!(a.makespan_ms.to_bits(), b.makespan_ms.to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "single-core control plane")]
+    fn evaluate_sharded_rejects_fault_schedules() {
+        let users = 2;
+        let mut o = Orchestrator::new(
+            env(users, AccuracyConstraint::Max),
+            Box::new(FixedAgent::new(Tier::Local, users)),
+        );
+        let faults = FaultSchedule::parse("1000:edge0=down").unwrap();
+        let _ = o.evaluate_sharded(
+            ArrivalProcess::Poisson { rate_per_s: 1.0 },
+            2_000.0,
+            7,
+            &DriftSchedule::none(),
+            &faults,
+            ShardPlan { shards: 1, window_ms: 0.0 },
+            None,
+        );
+    }
+
+    #[test]
+    fn online_faults_reroute_and_price_failures() {
+        // edge0 dies mid-trace and never recovers. A failover policy with
+        // per-attempt timeouts must rescue strictly more requests than
+        // retry-none, and the report's failure taxonomy must be coherent.
+        let users = 3;
+        let process = crate::sim::ArrivalProcess::Poisson { rate_per_s: 1.0 };
+        let ctl = ControlCfg { period_ms: 2_500.0, online_learning: false };
+        let run = |plan: &FaultPlan| {
+            let mut o = Orchestrator::new(
+                env(users, AccuracyConstraint::Max),
+                Box::new(FixedAgent::new(Tier::Edge(0), users)),
+            );
+            o.env.freeze();
+            o.evaluate_chaos(
+                process,
+                20_000.0,
+                21,
+                &ctl,
+                &crate::sim::DriftSchedule::none(),
+                &AdmissionCfg::default(),
+                plan,
+            )
+        };
+        // empty plan reproduces evaluate_admission byte for byte
+        let healthy = run(&FaultPlan::none());
+        assert_eq!(healthy.metrics.failed, 0);
+        assert_eq!(healthy.metrics.retries, 0);
+        assert_eq!(healthy.metrics.availability, 1.0);
+
+        let schedule = FaultSchedule::parse("5000:edge0=down").unwrap();
+        let none_plan = FaultPlan {
+            schedule: schedule.clone(),
+            retry: crate::sim::RetryPolicy::None,
+            timeout_ms: 1_500.0,
+        };
+        let failover_plan = FaultPlan {
+            schedule,
+            retry: crate::sim::RetryPolicy::Failover { budget: 3, base_ms: 50.0 },
+            timeout_ms: 1_500.0,
+        };
+        let abandoned = run(&none_plan);
+        let rescued = run(&failover_plan);
+        assert!(abandoned.metrics.failed > 0, "outage must kill unprotected work");
+        assert_eq!(abandoned.metrics.retries, 0);
+        assert!(abandoned.metrics.availability < 1.0);
+        assert!(rescued.metrics.retries > 0);
+        assert!(rescued.metrics.failovers > 0, "re-admissions must re-route");
+        assert!(
+            rescued.metrics.requests > abandoned.metrics.requests,
+            "failover must complete more: {} !> {}",
+            rescued.metrics.requests,
+            abandoned.metrics.requests
+        );
+        // epoch records carry the failures the reward priced
+        let failed_in_epochs: usize = abandoned.epochs.iter().map(|e| e.failed).sum();
+        assert_eq!(failed_in_epochs, abandoned.metrics.failed);
     }
 
     #[test]

@@ -192,9 +192,11 @@ impl AdmissionPolicy for Defer {
 /// tried in *descending top-5 accuracy* (catalog index order is monotone
 /// in neither speed nor accuracy across the fp32/int8 precision bands),
 /// so the pick loses the least accuracy that still meets the deadline.
-/// When nothing meets it, the predicted-fastest variant runs anyway
-/// (serve *something* fast rather than enqueueing the dearest model into
-/// a hopeless backlog).
+/// When nothing meets it but the fastest variant would have (the
+/// prediction is probe-time-optimistic), that variant runs anyway;
+/// when even the fastest variant predictedly misses, the request is
+/// shed — admitting it would enqueue doomed work that congests the node
+/// for requests that still have a chance.
 pub struct Degrade;
 
 /// Model indices in descending top-5 accuracy (d0 89.9, d4 88.9, d1 88.2,
@@ -222,11 +224,15 @@ impl AdmissionPolicy for Degrade {
                 return AdmitVerdict::Degrade(cand);
             }
         }
-        // Nothing meets the deadline: serve the fastest variant anyway.
         // d7 (minimal MMACs x int8 factor) is the service-time minimum at
-        // any placement, so it is the static answer.
+        // any placement, so it is the static last resort. If even it
+        // predictedly misses, the request is doomed: shed it instead of
+        // queueing dead weight behind admissible work.
         let fastest =
             Action { placement: q.action.placement, model: ModelId((NUM_MODELS - 1) as u8) };
+        if q.misses_deadline(fastest) {
+            return AdmitVerdict::Shed;
+        }
         if fastest.model == q.action.model {
             AdmitVerdict::Admit
         } else {
@@ -350,10 +356,25 @@ mod tests {
         assert_eq!(defer.decide(&q), AdmitVerdict::Defer);
         assert_eq!(defer.decide(&q), AdmitVerdict::Admit, "budget exhausted");
 
-        // hopeless deadline: degrade still serves the cheapest variant
+        // hopeless deadline: even d7 predictedly misses, so degrade sheds
+        // instead of admitting doomed work
         let mut hopeless = Request::at(2, 0, 0.0);
         hopeless.deadline_ms = 0.5;
         let q = AdmitQuery::new(&core, &hopeless, action, 0.0);
+        assert_eq!(Degrade.decide(&q), AdmitVerdict::Shed);
+    }
+
+    #[test]
+    fn degrade_falls_through_to_shed_only_when_every_variant_misses() {
+        let (model, state, core) = installed_core(1);
+        let action = Action { placement: Tier::Local, model: ModelId(0) };
+        let d7_local = model.net.path_overhead_ms(0, Tier::Local)
+            + model.single_stream_service_ms(0, ModelId(7), Tier::Local, &state);
+
+        // deadline just above the fastest variant: degrade to d7, not shed
+        let mut barely = Request::at(0, 0, 0.0);
+        barely.deadline_ms = d7_local * 1.01;
+        let q = AdmitQuery::new(&core, &barely, action, 0.0);
         assert_eq!(
             Degrade.decide(&q),
             AdmitVerdict::Degrade(Action {
@@ -361,6 +382,22 @@ mod tests {
                 model: ModelId((NUM_MODELS - 1) as u8)
             })
         );
+
+        // deadline just below it: nothing can serve in time -> shed
+        let mut doomed = Request::at(1, 0, 0.0);
+        doomed.deadline_ms = d7_local * 0.99;
+        let q = AdmitQuery::new(&core, &doomed, action, 0.0);
+        assert!(q.misses_deadline(Action {
+            placement: Placement::Local,
+            model: ModelId((NUM_MODELS - 1) as u8)
+        }));
+        assert_eq!(Degrade.decide(&q), AdmitVerdict::Shed);
+
+        // the shed answer also holds when the decision already runs d7
+        // (previously this admitted doomed work)
+        let d7_action = Action { placement: Tier::Local, model: ModelId(7) };
+        let q = AdmitQuery::new(&core, &doomed, d7_action, 0.0);
+        assert_eq!(Degrade.decide(&q), AdmitVerdict::Shed);
     }
 
     #[test]

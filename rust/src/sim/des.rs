@@ -54,6 +54,7 @@ use std::collections::VecDeque;
 
 use crate::monitor::StateView;
 use crate::sim::admission::{AdmissionPolicy, AdmitQuery, AdmitVerdict};
+use crate::sim::faults::{FaultPlan, FaultTarget, RetryPolicy};
 use crate::sim::latency::{ResponseModel, RoundCtx};
 use crate::sim::telemetry::{GaugeMode, Recorder, SpanKind};
 use crate::sim::workload::Request;
@@ -131,6 +132,19 @@ pub struct DesOutcome {
     pub deferrals: usize,
     /// Requests admitted with a degraded (cheaper) model variant.
     pub degraded: usize,
+    /// Requests that terminally failed: an attempt errored out (node or
+    /// link outage, or per-attempt timeout) with no retry budget left, or
+    /// failover found no healthy placement. The online reward prices these
+    /// like shed work; `completed + shed + failed` = offered arrivals once
+    /// nothing is deferred or in flight.
+    pub failed: usize,
+    /// Per-attempt timeouts fired (each ends in a retry or a terminal
+    /// failure; one request can time out several times).
+    pub timed_out: usize,
+    /// Retry re-admissions, backoff and failover alike.
+    pub retries: usize,
+    /// Retries that switched placement away from an unhealthy target.
+    pub failovers: usize,
 }
 
 impl DesOutcome {
@@ -196,6 +210,28 @@ impl DesOutcome {
         }
         self.on_time_count() as f64 / (denom_ms / 1000.0)
     }
+
+    /// Fraction of resolved requests that completed:
+    /// `completed / (completed + failed)` (1.0 when nothing failed —
+    /// including every fault-free run). Shed requests are an admission
+    /// verdict, not a failure, and do not count against availability.
+    pub fn availability(&self) -> f64 {
+        let resolved = self.completed.len() + self.failed;
+        if resolved == 0 {
+            return 1.0;
+        }
+        self.completed.len() as f64 / resolved as f64
+    }
+
+    /// Terminal failures per second of virtual time, horizon-normalized
+    /// like [`DesOutcome::goodput_rps`] — the lost-work rate under faults.
+    pub fn failed_rps(&self) -> f64 {
+        let denom_ms = if self.horizon_ms > 0.0 { self.horizon_ms } else { self.makespan_ms };
+        if denom_ms <= 0.0 {
+            return 0.0;
+        }
+        self.failed as f64 / (denom_ms / 1000.0)
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -207,6 +243,10 @@ enum EventKind {
     LinkFree { link: usize },
     /// Compute service finishes for `req` on `node`.
     Finish { node: usize, req: usize },
+    /// `req`'s current attempt hits its per-attempt timeout. Only pushed
+    /// under a fault plan with `timeout_ms > 0` — never on the
+    /// bit-transparent identity path.
+    Timeout { req: usize },
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -224,6 +264,13 @@ struct Event {
     /// order, which is id order.
     prio: u8,
     seq: u64,
+    /// Staleness stamp, *not* part of the ordering: the owning flight's
+    /// attempt generation (Join/Finish/Timeout) or the link's failure
+    /// generation (LinkFree) at push time. When a failure or timeout ends
+    /// an attempt it bumps the live generation, so events the dead attempt
+    /// left in the heap pop as no-ops — the heap needs no removal support.
+    /// Always 0 on the fault-free path.
+    gen: u32,
     kind: EventKind,
 }
 
@@ -266,6 +313,27 @@ impl ServerQueue {
     }
 }
 
+/// Where a live request currently sits — the location a fault boundary or
+/// timeout must evict it from, with the counters that location holds.
+/// Transitions mirror the event arms.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    /// En route to its ingress link (`enroute` + `enroute_link` counted).
+    ToLink,
+    /// Waiting in the ingress link's FIFO (`enroute` still counted).
+    LinkQueue,
+    /// En route to its compute node (`enroute` counted).
+    ToNode,
+    /// Waiting in the compute node's FIFO (backlog counted).
+    NodeQueue,
+    /// Holding a vCPU (backlog + node `busy` counted).
+    InService,
+    /// Departed successfully.
+    Done,
+    /// Terminally failed.
+    Failed,
+}
+
 /// Per-request in-flight bookkeeping.
 struct InFlight {
     id: u64,
@@ -279,6 +347,13 @@ struct InFlight {
     compute_enq_ms: f64,
     queue_ms: f64,
     service_ms: f64,
+    /// Attempt generation: bumped whenever an attempt ends (completion,
+    /// failure, timeout), invalidating heap events of the old attempt.
+    gen: u32,
+    /// Current lifecycle location (see [`Phase`]).
+    phase: Phase,
+    /// Retry re-admissions consumed so far.
+    retries: u32,
 }
 
 /// Compute-node index for (device, placement) in the DES layout: each end
@@ -315,10 +390,11 @@ fn slot_place(slot: usize, num_edges: usize) -> Placement {
     }
 }
 
-/// Push a simulator-generated event (tie class 1, creation order).
-fn push_event(heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, kind: EventKind) {
+/// Push a simulator-generated event (tie class 1, creation order). `gen`
+/// is the staleness stamp (see [`Event::gen`]); 0 on the fault-free path.
+fn push_event(heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, gen: u32, kind: EventKind) {
     *seq += 1;
-    heap.push(Event { time, prio: 1, seq: *seq, kind });
+    heap.push(Event { time, prio: 1, seq: *seq, gen, kind });
 }
 
 /// Reusable open-loop DES engine: memoized service tables plus the scratch
@@ -376,6 +452,25 @@ pub struct DesCore {
     /// admission predictor can price the uplink serialization a batch of
     /// simultaneous offloads will suffer.
     enroute_link: Vec<u32>,
+    /// Installed fault plan (identity by default — bit-transparent).
+    plan: FaultPlan,
+    /// Per-compute-node down mask of the current run (devices never
+    /// fault; only edge and cloud entries can flip).
+    node_down: Vec<bool>,
+    /// Per-ingress-link down mask of the current run.
+    link_down: Vec<bool>,
+    /// Per-link failure generation: bumped on each down transition so the
+    /// LinkFree events of the zeroed holds pop as no-ops.
+    link_gen: Vec<u32>,
+    /// Next virtual time the fault plan can change any health state
+    /// (infinity under the identity plan). Advanced lazily between events
+    /// — an endless flap never materializes more than one boundary.
+    fault_next_ms: f64,
+    /// Dedicated retry-jitter stream — never the service-noise stream, so
+    /// the identity plan draws zero extra values from `rng`.
+    fault_rng: Rng,
+    /// Scratch buffer for collecting fault victims (borrow-friendly).
+    fault_scratch: Vec<usize>,
     /// Record per-event virtual times into `DesOutcome::event_times`
     /// (monotonicity witness). Off by default: it is test-only
     /// instrumentation that costs a push per event on the hot path.
@@ -416,6 +511,13 @@ impl DesCore {
             bl_mark: Vec::new(),
             enroute: Vec::new(),
             enroute_link: Vec::new(),
+            plan: FaultPlan::none(),
+            node_down: Vec::new(),
+            link_down: Vec::new(),
+            link_gen: Vec::new(),
+            fault_next_ms: f64::INFINITY,
+            fault_rng: Rng::new(0),
+            fault_scratch: Vec::new(),
             collect_event_times: false,
             recorder: None,
         }
@@ -521,6 +623,67 @@ impl DesCore {
         self.path[device * self.num_places + place_slot(p, self.num_edges)]
     }
 
+    /// Install a fault plan for subsequent runs. [`FaultPlan::none`] — the
+    /// default — keeps the engine on its bit-transparent fault-free path;
+    /// edge targets must exist in the installed topology.
+    pub fn set_fault_plan(&mut self, plan: &FaultPlan) {
+        assert!(self.users > 0, "DesCore::install must precede set_fault_plan");
+        if let Some(k) = plan.schedule.max_edge_index() {
+            assert!(
+                k < self.num_edges,
+                "fault target edge{k} outside installed topology ({} edges)",
+                self.num_edges
+            );
+        }
+        self.plan = plan.clone();
+    }
+
+    /// Is a non-identity fault plan installed?
+    pub fn faults_active(&self) -> bool {
+        !self.plan.is_identity()
+    }
+
+    /// Per-compute-node down mask of the current run (DES node order:
+    /// devices, edges, cloud). All-false under the identity plan; the
+    /// control plane overlays it onto the live encoding so policies can
+    /// route around outages.
+    pub fn node_down_mask(&self) -> &[bool] {
+        &self.node_down
+    }
+
+    /// Requests admitted but not yet resolved (neither departed nor
+    /// terminally failed) — the in-flight term of the conservation
+    /// invariant `offered == completed + shed + failed + in-flight`.
+    pub fn live_count(&self) -> usize {
+        self.flights
+            .iter()
+            .filter(|f| !matches!(f.phase, Phase::Done | Phase::Failed))
+            .count()
+    }
+
+    /// The fault target a compute node maps to (devices never fault).
+    fn fault_target_of_node(&self, node: usize) -> Option<FaultTarget> {
+        if node < self.users {
+            None
+        } else if node < self.users + self.num_edges {
+            Some(FaultTarget::Edge(node - self.users))
+        } else {
+            Some(FaultTarget::Cloud)
+        }
+    }
+
+    /// Are a placement's compute node and ingress link (if any) both up?
+    fn placement_healthy(&self, device: usize, p: Placement) -> bool {
+        let node = compute_node_index(self.users, self.num_edges, device, p);
+        if self.node_down[node] {
+            return false;
+        }
+        match self.ingress[device * self.num_places + place_slot(p, self.num_edges)] {
+            0 => true,
+            link_plus_1 => !self.link_down[link_plus_1 - 1],
+        }
+    }
+
     /// Run one open-loop trace into `out`, reusing every buffer.
     ///
     /// Same contract as [`run_open_loop`] (which delegates here): the
@@ -621,6 +784,27 @@ impl DesCore {
         self.enroute.resize(n, 0);
         self.enroute_link.clear();
         self.enroute_link.resize(self.links.len(), 0);
+        self.node_down.clear();
+        self.node_down.resize(n, false);
+        self.link_down.clear();
+        self.link_down.resize(self.links.len(), false);
+        self.link_gen.clear();
+        self.link_gen.resize(self.links.len(), 0);
+        self.fault_rng = Rng::new(noise_seed ^ 0xFA17_FA17);
+        if self.plan.schedule.is_identity() {
+            self.fault_next_ms = f64::INFINITY;
+        } else {
+            for node in self.users..n {
+                if let Some(target) = self.fault_target_of_node(node) {
+                    self.node_down[node] = self.plan.schedule.down_at(target, 0.0);
+                }
+            }
+            let net_down = self.plan.schedule.down_at(FaultTarget::Net, 0.0);
+            for l in self.link_down.iter_mut() {
+                *l = net_down;
+            }
+            self.fault_next_ms = self.plan.schedule.next_transition_after(0.0);
+        }
         out.completed.clear();
         out.event_times.clear();
         out.node_backlog.clear();
@@ -629,6 +813,10 @@ impl DesCore {
         out.shed = 0;
         out.deferrals = 0;
         out.degraded = 0;
+        out.failed = 0;
+        out.timed_out = 0;
+        out.retries = 0;
+        out.failovers = 0;
     }
 
     /// Admit a time-ordered batch of arrivals, each routed by `decision`
@@ -759,6 +947,7 @@ impl DesCore {
         let pslot = place_slot(action.placement, num_edges);
         let path_ms = self.path[r.device * num_places + pslot];
         let idx = self.flights.len();
+        let link_plus_1 = self.ingress[r.device * num_places + pslot];
         self.flights.push(InFlight {
             id: r.id,
             device: r.device,
@@ -771,9 +960,12 @@ impl DesCore {
             compute_enq_ms: 0.0,
             queue_ms: 0.0,
             service_ms: 0.0,
+            gen: 0,
+            phase: if link_plus_1 == 0 { Phase::ToNode } else { Phase::ToLink },
+            retries: 0,
         });
         self.enroute[compute_node_index(self.users, num_edges, r.device, action.placement)] += 1;
-        let target = match self.ingress[r.device * num_places + pslot] {
+        let target = match link_plus_1 {
             0 => r.device, // local execution: the device's own node
             link_plus_1 => {
                 self.enroute_link[link_plus_1 - 1] += 1;
@@ -789,8 +981,18 @@ impl DesCore {
             time: r.arrival_ms.max(floor_ms) + path_ms,
             prio: 0,
             seq: r.id,
+            gen: 0,
             kind: EventKind::Join { node: target, req: idx },
         });
+        if self.plan.timeout_ms > 0.0 {
+            push_event(
+                &mut self.heap,
+                &mut self.seq,
+                r.arrival_ms.max(floor_ms) + self.plan.timeout_ms,
+                0,
+                EventKind::Timeout { req: idx },
+            );
+        }
         if let Some(rec) = self.recorder.as_mut() {
             let node = compute_node_index(self.users, num_edges, r.device, action.placement);
             rec.span(
@@ -858,13 +1060,39 @@ impl DesCore {
             |device: usize, p: Placement| compute_node_index(users, num_edges, device, p);
         let sigma = self.sigma;
 
-        while let Some(&ev) = self.heap.peek() {
-            let past_limit =
-                if INCLUSIVE { ev.time > limit_ms } else { ev.time >= limit_ms };
-            if past_limit {
-                break;
+        loop {
+            // Fault boundaries interleave lazily with the heap: apply every
+            // boundary not after the next event — or, with the heap empty,
+            // up to a *finite* bound, so the control plane observes current
+            // health masks at its ticks while an infinite drain skips them
+            // (an endless flap would otherwise never let the run end; with
+            // nothing left in flight the boundaries are unobservable).
+            // One boundary per iteration, then re-peek: a failover retry
+            // pushed at the boundary may pop before the old minimum.
+            let next_time = self.heap.peek().map(|e| e.time);
+            let fault_due = {
+                let b = self.fault_next_ms;
+                let within = if INCLUSIVE { b <= limit_ms } else { b < limit_ms };
+                within
+                    && match next_time {
+                        Some(t) => b <= t,
+                        None => limit_ms.is_finite(),
+                    }
+            };
+            if fault_due {
+                self.apply_next_fault(out);
+                continue;
             }
-            self.heap.pop();
+            let ev = match next_time {
+                Some(t) => {
+                    let past_limit = if INCLUSIVE { t > limit_ms } else { t >= limit_ms };
+                    if past_limit {
+                        break;
+                    }
+                    self.heap.pop().unwrap()
+                }
+                None => break,
+            };
             debug_assert!(ev.time >= out.makespan_ms, "event time went backwards");
             out.makespan_ms = out.makespan_ms.max(ev.time);
             if self.collect_event_times {
@@ -872,9 +1100,22 @@ impl DesCore {
             }
             match ev.kind {
                 EventKind::Join { node, req } if node >= ingress_base => {
+                    if ev.gen != self.flights[req].gen {
+                        continue; // stale: the attempt ended while en route
+                    }
                     let link_id = node - ingress_base;
                     // the upload reached its link: committed -> queued
                     self.enroute_link[link_id] -= 1;
+                    if self.link_down[link_id] {
+                        // arriving at a dead uplink errors the attempt out
+                        let (device, placement) = {
+                            let f = &self.flights[req];
+                            (f.device, f.action.placement)
+                        };
+                        self.enroute[compute_node(device, placement)] -= 1;
+                        self.attempt_failed(req, ev.time, out);
+                        continue;
+                    }
                     self.flights[req].link_enq_ms = ev.time;
                     let link = &mut self.links[link_id];
                     if link.busy < link.servers {
@@ -885,24 +1126,31 @@ impl DesCore {
                             &mut self.heap,
                             &mut self.seq,
                             ev.time + self.link_queue_ms,
+                            self.link_gen[link_id],
                             EventKind::LinkFree { link: link_id },
                         );
-                        let (device, placement) = {
-                            let f = &self.flights[req];
-                            (f.device, f.action.placement)
+                        let (device, placement, fgen) = {
+                            let f = &mut self.flights[req];
+                            f.phase = Phase::ToNode;
+                            (f.device, f.action.placement, f.gen)
                         };
                         let target = compute_node(device, placement);
                         push_event(
                             &mut self.heap,
                             &mut self.seq,
                             ev.time,
+                            fgen,
                             EventKind::Join { node: target, req },
                         );
                     } else {
+                        self.flights[req].phase = Phase::LinkQueue;
                         link.waiting.push_back(req);
                     }
                 }
                 EventKind::LinkFree { link: link_id } => {
+                    if ev.gen != self.link_gen[link_id] {
+                        continue; // stale: the link went down and zeroed its holds
+                    }
                     let link = &mut self.links[link_id];
                     link.busy -= 1;
                     if let Some(req) = link.waiting.pop_front() {
@@ -912,22 +1160,35 @@ impl DesCore {
                             &mut self.heap,
                             &mut self.seq,
                             ev.time + self.link_queue_ms,
+                            self.link_gen[link_id],
                             EventKind::LinkFree { link: link_id },
                         );
-                        let (device, placement) = {
-                            let f = &self.flights[req];
-                            (f.device, f.action.placement)
+                        let (device, placement, fgen) = {
+                            let f = &mut self.flights[req];
+                            f.phase = Phase::ToNode;
+                            (f.device, f.action.placement, f.gen)
                         };
                         let target = compute_node(device, placement);
                         push_event(
                             &mut self.heap,
                             &mut self.seq,
                             ev.time,
+                            fgen,
                             EventKind::Join { node: target, req },
                         );
                     }
                 }
                 EventKind::Join { node, req } => {
+                    if ev.gen != self.flights[req].gen {
+                        continue; // stale: the attempt ended while en route
+                    }
+                    if self.node_down[node] {
+                        // arriving at a dead compute node errors the
+                        // attempt out (the link hold, if any, was spent)
+                        self.enroute[node] -= 1;
+                        self.attempt_failed(req, ev.time, out);
+                        continue;
+                    }
                     self.backlog_shift(node, ev.time, 1);
                     // the admitted request reached its compute queue: it is
                     // now part of the backlog, not the en-route count
@@ -947,10 +1208,12 @@ impl DesCore {
                             svc *= (sigma * self.rng.normal()).exp();
                         }
                         self.flights[req].service_ms = svc;
+                        self.flights[req].phase = Phase::InService;
                         push_event(
                             &mut self.heap,
                             &mut self.seq,
                             ev.time + svc,
+                            self.flights[req].gen,
                             EventKind::Finish { node, req },
                         );
                         if let Some(rec) = self.recorder.as_mut() {
@@ -965,13 +1228,20 @@ impl DesCore {
                             );
                         }
                     } else {
+                        self.flights[req].phase = Phase::NodeQueue;
                         q.waiting.push_back(req);
                     }
                 }
                 EventKind::Finish { node, req } => {
+                    if ev.gen != self.flights[req].gen {
+                        continue; // stale: the attempt was failed or timed out
+                    }
                     self.backlog_shift(node, ev.time, -1);
                     {
                         let f = &mut self.flights[req];
+                        // ending the attempt invalidates its pending Timeout
+                        f.gen = f.gen.wrapping_add(1);
+                        f.phase = Phase::Done;
                         f.queue_ms = ev.time - f.compute_enq_ms - f.service_ms;
                         out.completed.push(CompletedRequest {
                             id: f.id,
@@ -1004,41 +1274,343 @@ impl DesCore {
                             );
                         }
                     }
-                    let q = &mut self.nodes[node];
-                    q.busy -= 1;
-                    if let Some(next) = q.waiting.pop_front() {
-                        q.busy += 1;
-                        let (device, action) = {
-                            let f = &self.flights[next];
-                            (f.device, f.action)
-                        };
-                        let mut svc = self.svc[(device * NUM_MODELS + action.model.index())
-                            * num_places
-                            + place_slot(action.placement, num_edges)];
-                        if sigma > 0.0 {
-                            svc *= (sigma * self.rng.normal()).exp();
-                        }
-                        self.flights[next].service_ms = svc;
-                        push_event(
-                            &mut self.heap,
-                            &mut self.seq,
-                            ev.time + svc,
-                            EventKind::Finish { node, req: next },
-                        );
-                        if let Some(rec) = self.recorder.as_mut() {
-                            rec.span(
-                                ev.time,
-                                SpanKind::ServiceStart,
-                                self.flights[next].id,
-                                device as i64,
-                                node as i64,
-                                action.model.index() as i64,
-                                f64::NAN,
-                            );
-                        }
+                    self.nodes[node].busy -= 1;
+                    self.start_next_waiting(node, ev.time);
+                }
+                EventKind::Timeout { req } => {
+                    if ev.gen != self.flights[req].gen {
+                        continue; // the attempt already resolved
                     }
+                    self.evict_for_timeout(req, ev.time, out);
                 }
             }
+        }
+    }
+
+    /// Seize a freed vCPU for the node's next waiting request, if any:
+    /// draw its service noise, schedule its Finish, record ServiceStart.
+    /// Shared by the Finish arm and the timeout-eviction path so the
+    /// noise-draw order cannot fork between them.
+    fn start_next_waiting(&mut self, node: usize, t: f64) {
+        let num_edges = self.num_edges;
+        let num_places = self.num_places;
+        let sigma = self.sigma;
+        let q = &mut self.nodes[node];
+        if let Some(next) = q.waiting.pop_front() {
+            q.busy += 1;
+            let (device, action) = {
+                let f = &self.flights[next];
+                (f.device, f.action)
+            };
+            let mut svc = self.svc[(device * NUM_MODELS + action.model.index()) * num_places
+                + place_slot(action.placement, num_edges)];
+            if sigma > 0.0 {
+                svc *= (sigma * self.rng.normal()).exp();
+            }
+            self.flights[next].service_ms = svc;
+            self.flights[next].phase = Phase::InService;
+            push_event(
+                &mut self.heap,
+                &mut self.seq,
+                t + svc,
+                self.flights[next].gen,
+                EventKind::Finish { node, req: next },
+            );
+            if let Some(rec) = self.recorder.as_mut() {
+                rec.span(
+                    t,
+                    SpanKind::ServiceStart,
+                    self.flights[next].id,
+                    device as i64,
+                    node as i64,
+                    action.model.index() as i64,
+                    f64::NAN,
+                );
+            }
+        }
+    }
+
+    /// Apply exactly one pending fault boundary: recompute every target's
+    /// health at `fault_next_ms`, fail work on newly-down nodes/links, and
+    /// advance to the next boundary. Never called under the identity plan
+    /// (`fault_next_ms` stays infinite).
+    fn apply_next_fault(&mut self, out: &mut DesOutcome) {
+        let t = self.fault_next_ms;
+        for node in self.users..self.nodes.len() {
+            let target = self
+                .fault_target_of_node(node)
+                .expect("edge/cloud nodes map to fault targets");
+            let down = self.plan.schedule.down_at(target, t);
+            if down != self.node_down[node] {
+                self.node_down[node] = down;
+                if down {
+                    self.fail_node(node, t, out);
+                }
+            }
+        }
+        let net_down = self.plan.schedule.down_at(FaultTarget::Net, t);
+        for link in 0..self.links.len() {
+            if net_down != self.link_down[link] {
+                self.link_down[link] = net_down;
+                if net_down {
+                    self.fail_link(link, t, out);
+                }
+            }
+        }
+        self.fault_next_ms = self.plan.schedule.next_transition_after(t);
+    }
+
+    /// A compute node went dark at `t`: every request waiting or in
+    /// service there errors out (their pending Finish events go stale via
+    /// the generation bump) and the node empties. Requests en route to it
+    /// error out on arrival instead.
+    fn fail_node(&mut self, node: usize, t: f64, out: &mut DesOutcome) {
+        let mut victims = std::mem::take(&mut self.fault_scratch);
+        victims.clear();
+        victims.extend(self.nodes[node].waiting.drain(..));
+        for (req, f) in self.flights.iter().enumerate() {
+            if f.phase == Phase::InService
+                && compute_node_index(self.users, self.num_edges, f.device, f.action.placement)
+                    == node
+            {
+                victims.push(req);
+            }
+        }
+        self.nodes[node].busy = 0;
+        for &req in &victims {
+            self.backlog_shift(node, t, -1);
+            self.attempt_failed(req, t, out);
+        }
+        self.fault_scratch = victims;
+    }
+
+    /// An ingress link went dark at `t`: in-progress holds are zeroed
+    /// (their LinkFree events go stale via the link-generation bump) and
+    /// queued uploads error out. Requests already forwarded past the link
+    /// proceed; ones still en route to it error out on arrival.
+    fn fail_link(&mut self, link: usize, t: f64, out: &mut DesOutcome) {
+        self.link_gen[link] += 1;
+        let mut victims = std::mem::take(&mut self.fault_scratch);
+        victims.clear();
+        victims.extend(self.links[link].waiting.drain(..));
+        self.links[link].busy = 0;
+        for &req in &victims {
+            let (device, placement) = {
+                let f = &self.flights[req];
+                (f.device, f.action.placement)
+            };
+            self.enroute[compute_node_index(self.users, self.num_edges, device, placement)] -= 1;
+            self.attempt_failed(req, t, out);
+        }
+        self.fault_scratch = victims;
+    }
+
+    /// A live attempt of `req` hit its per-attempt timeout: pull it out of
+    /// wherever it sits (undoing that location's accounting), count the
+    /// timeout, and hand it to the retry policy.
+    fn evict_for_timeout(&mut self, req: usize, t: f64, out: &mut DesOutcome) {
+        let (device, placement) = {
+            let f = &self.flights[req];
+            (f.device, f.action.placement)
+        };
+        let node = compute_node_index(self.users, self.num_edges, device, placement);
+        let link = self.ingress_link(device, placement);
+        match self.flights[req].phase {
+            Phase::ToLink => {
+                self.enroute_link[link.expect("ToLink implies an ingress link")] -= 1;
+                self.enroute[node] -= 1;
+            }
+            Phase::ToNode => {
+                self.enroute[node] -= 1;
+            }
+            Phase::LinkQueue => {
+                let l = link.expect("LinkQueue implies an ingress link");
+                let w = &mut self.links[l].waiting;
+                let pos =
+                    w.iter().position(|&x| x == req).expect("queued flight in link FIFO");
+                w.remove(pos);
+                self.enroute[node] -= 1;
+            }
+            Phase::NodeQueue => {
+                let w = &mut self.nodes[node].waiting;
+                let pos =
+                    w.iter().position(|&x| x == req).expect("queued flight in node FIFO");
+                w.remove(pos);
+                self.backlog_shift(node, t, -1);
+            }
+            Phase::InService => {
+                self.backlog_shift(node, t, -1);
+                self.nodes[node].busy -= 1;
+                self.start_next_waiting(node, t);
+            }
+            Phase::Done | Phase::Failed => unreachable!("stale timeouts are filtered by gen"),
+        }
+        out.timed_out += 1;
+        if let Some(rec) = self.recorder.as_mut() {
+            let f = &self.flights[req];
+            rec.span(
+                t,
+                SpanKind::Timeout,
+                f.id,
+                f.device as i64,
+                node as i64,
+                f.action.model.index() as i64,
+                f64::NAN,
+            );
+        }
+        self.attempt_failed(req, t, out);
+    }
+
+    /// One attempt of `req` just errored out at `t` (already removed from
+    /// wherever it sat): bump the generation so the old attempt's events
+    /// pop stale, then let the retry policy decide — re-admit after
+    /// jittered backoff (same placement, or the best healthy one under
+    /// failover) or fail terminally.
+    fn attempt_failed(&mut self, req: usize, t: f64, out: &mut DesOutcome) {
+        out.makespan_ms = out.makespan_ms.max(t);
+        self.flights[req].gen = self.flights[req].gen.wrapping_add(1);
+        let used = self.flights[req].retries;
+        let policy = self.plan.retry;
+        if used >= policy.budget() {
+            self.fail_terminally(req, t, out);
+            return;
+        }
+        // Jitter comes from the dedicated fault stream — drawn before the
+        // failover probe so delay sequences depend only on (seed, attempt).
+        let jitter = self.fault_rng.f64();
+        let delay = policy.backoff_delay_ms(used + 1, jitter);
+        let mut failover = false;
+        if matches!(policy, RetryPolicy::Failover { .. }) {
+            match self.best_healthy_placement(req) {
+                Some(p) => {
+                    failover = p != self.flights[req].action.placement;
+                    self.flights[req].action.placement = p;
+                }
+                None => {
+                    self.fail_terminally(req, t, out);
+                    return;
+                }
+            }
+        }
+        self.flights[req].retries = used + 1;
+        out.retries += 1;
+        if failover {
+            out.failovers += 1;
+        }
+        if let Some(rec) = self.recorder.as_mut() {
+            let f = &self.flights[req];
+            let node =
+                compute_node_index(self.users, self.num_edges, f.device, f.action.placement);
+            rec.span(
+                t,
+                if failover { SpanKind::Failover } else { SpanKind::Retry },
+                f.id,
+                f.device as i64,
+                node as i64,
+                f.action.model.index() as i64,
+                f64::NAN,
+            );
+        }
+        self.readmit(req, t + delay);
+    }
+
+    /// Terminal failure: count it, mark the flight, record the span.
+    fn fail_terminally(&mut self, req: usize, t: f64, out: &mut DesOutcome) {
+        out.failed += 1;
+        self.flights[req].phase = Phase::Failed;
+        if let Some(rec) = self.recorder.as_mut() {
+            let f = &self.flights[req];
+            let node =
+                compute_node_index(self.users, self.num_edges, f.device, f.action.placement);
+            rec.span(
+                t,
+                SpanKind::Fail,
+                f.id,
+                f.device as i64,
+                node as i64,
+                f.action.model.index() as i64,
+                t - f.arrival_ms,
+            );
+        }
+    }
+
+    /// The fastest (path + unloaded service, by the memoized tables)
+    /// placement for `req`'s device and model whose compute node and
+    /// ingress link are both currently healthy — preferring a placement
+    /// *different* from the current one, keeping the current one only
+    /// when it is the lone healthy option, `None` when nothing is up.
+    fn best_healthy_placement(&self, req: usize) -> Option<Placement> {
+        let (device, action) = {
+            let f = &self.flights[req];
+            (f.device, f.action)
+        };
+        let mut best: Option<(f64, Placement)> = None;
+        for slot in 0..self.num_places {
+            let p = slot_place(slot, self.num_edges);
+            if p == action.placement || !self.placement_healthy(device, p) {
+                continue;
+            }
+            let score = self.path[device * self.num_places + slot]
+                + self.svc
+                    [(device * NUM_MODELS + action.model.index()) * self.num_places + slot];
+            if best.map_or(true, |(s, _)| score < s) {
+                best = Some((score, p));
+            }
+        }
+        match best {
+            Some((_, p)) => Some(p),
+            None if self.placement_healthy(device, action.placement) => Some(action.placement),
+            None => None,
+        }
+    }
+
+    /// Re-admit a retry at `start_ms`: reset the per-attempt fields and
+    /// launch the (possibly re-placed) attempt exactly like a fresh
+    /// admission — en-route counters, path delay, a fresh per-attempt
+    /// timeout — under the flight's bumped generation.
+    fn readmit(&mut self, req: usize, start_ms: f64) {
+        let num_places = self.num_places;
+        let ingress_base = self.users + self.num_edges + 1;
+        let (device, placement, gen) = {
+            let f = &self.flights[req];
+            (f.device, f.action.placement, f.gen)
+        };
+        let pslot = place_slot(placement, self.num_edges);
+        let path_ms = self.path[device * num_places + pslot];
+        let link_plus_1 = self.ingress[device * num_places + pslot];
+        {
+            let f = &mut self.flights[req];
+            f.path_ms = path_ms;
+            f.link_enq_ms = 0.0;
+            f.link_wait_ms = 0.0;
+            f.compute_enq_ms = 0.0;
+            f.queue_ms = 0.0;
+            f.service_ms = 0.0;
+            f.phase = if link_plus_1 == 0 { Phase::ToNode } else { Phase::ToLink };
+        }
+        self.enroute[compute_node_index(self.users, self.num_edges, device, placement)] += 1;
+        let target = match link_plus_1 {
+            0 => device,
+            link_plus_1 => {
+                self.enroute_link[link_plus_1 - 1] += 1;
+                ingress_base + (link_plus_1 - 1)
+            }
+        };
+        push_event(
+            &mut self.heap,
+            &mut self.seq,
+            start_ms + path_ms,
+            gen,
+            EventKind::Join { node: target, req },
+        );
+        if self.plan.timeout_ms > 0.0 {
+            push_event(
+                &mut self.heap,
+                &mut self.seq,
+                start_ms + self.plan.timeout_ms,
+                gen,
+                EventKind::Timeout { req },
+            );
         }
     }
 
@@ -1368,6 +1940,7 @@ pub fn sync_round_responses_into<S: StateView>(
             time: 0.0,
             prio: 0,
             seq: device as u64,
+            gen: 0,
             kind: EventKind::Join { node: device, req: device },
         });
     }
@@ -1388,6 +1961,7 @@ pub fn sync_round_responses_into<S: StateView>(
                     time: ev.time + svc,
                     prio: 0,
                     seq,
+                    gen: 0,
                     kind: EventKind::Finish { node: device, req: device },
                 });
             }
@@ -1395,6 +1969,7 @@ pub fn sync_round_responses_into<S: StateView>(
                 out[device] = ev.time;
             }
             EventKind::LinkFree { .. } => unreachable!("no link events in a synchronous round"),
+            EventKind::Timeout { .. } => unreachable!("no timeouts in a synchronous round"),
         }
     }
 }

@@ -1,0 +1,470 @@
+//! Fault injection over virtual time: the failure scenario generator for
+//! *robust* online orchestration.
+//!
+//! The drift layer ([`crate::sim::drift`]) scripts how the world slows
+//! down; this module scripts how it **breaks**. A [`FaultSchedule`] is a
+//! sorted timeline of [`FaultEvent`]s, each flipping one target — an edge
+//! compute node, the cloud node, or the ingress network — between `up`,
+//! `down`, and a periodic `flap(period_ms, duty)` regime. The DES core
+//! applies the timeline as virtual-time boundaries: work in service or
+//! waiting on a failing node/link errors out at the boundary, work
+//! en-route errors out on arrival, and a configured [`RetryPolicy`]
+//! decides whether the request dies, retries in place with jittered
+//! exponential backoff, or fails over to the next-best healthy placement.
+//!
+//! The identity schedule ([`FaultSchedule::none`]) is bit-transparent:
+//! the engine draws zero extra RNG values and produces byte-identical
+//! outcomes to the fault-free engine (the property suite pins this).
+//! Retry jitter, when it happens, comes from a *dedicated* seeded RNG
+//! stream — never the service-noise stream — so fault runs are
+//! deterministic and reproducible from (seed, schedule) alone.
+
+/// What a fault event targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultTarget {
+    /// Edge compute node `k` (0-based, DES node `users + k`).
+    Edge(usize),
+    /// The cloud compute node.
+    Cloud,
+    /// The ingress network: every shared uplink at once.
+    Net,
+}
+
+/// The regime a target enters at a fault event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultState {
+    /// Healthy (the recovery transition).
+    Up,
+    /// Hard outage until the target's next event.
+    Down,
+    /// Periodic outage: down for `duty * period_ms` at the start of each
+    /// period, up for the rest, repeating until the next event.
+    Flap { period_ms: f64, duty: f64 },
+}
+
+/// One scheduled transition: `target` enters `state` at `start_ms`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    pub start_ms: f64,
+    pub target: FaultTarget,
+    pub state: FaultState,
+}
+
+/// Sorted timeline of fault transitions. Every target is `Up` before its
+/// first event; an empty schedule is the identity (nothing ever fails).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultSchedule {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultSchedule {
+    /// The identity schedule: nothing ever fails. Every fault-aware path
+    /// is bit-identical to its fault-free counterpart under it.
+    pub fn none() -> FaultSchedule {
+        FaultSchedule { events: Vec::new() }
+    }
+
+    /// Build from explicit events (starts finite and >= 0, flap params
+    /// valid). Events are sorted by start time (stable, so same-time
+    /// events keep spec order and the later one wins for a shared target).
+    pub fn new(mut events: Vec<FaultEvent>) -> Result<FaultSchedule, String> {
+        for e in &events {
+            if !(e.start_ms.is_finite() && e.start_ms >= 0.0) {
+                return Err(format!("fault event start {} must be finite and >= 0", e.start_ms));
+            }
+            if let FaultState::Flap { period_ms, duty } = e.state {
+                if !(period_ms.is_finite() && period_ms > 0.0) {
+                    return Err(format!("flap period {period_ms} must be finite and > 0"));
+                }
+                if !(duty > 0.0 && duty < 1.0) {
+                    return Err(format!("flap duty {duty} must be inside (0, 1)"));
+                }
+            }
+        }
+        events.sort_by(|a, b| a.start_ms.total_cmp(&b.start_ms));
+        Ok(FaultSchedule { events })
+    }
+
+    /// Parse a compact spec: segments separated by `;`, each
+    /// `START_MS:target=state[,target=state...]` with targets
+    ///
+    /// - `edgeK` — edge compute node K (`edge0`, `edge1`, ...),
+    /// - `cloud` — the cloud compute node,
+    /// - `net`   — every shared ingress uplink at once,
+    ///
+    /// and states `down`, `up`, or `flap(PERIOD_MS,DUTY)` (down for
+    /// `DUTY` of each period). Segment start times must be strictly
+    /// increasing; an empty spec parses to [`FaultSchedule::none`].
+    ///
+    /// Example: `"20000:edge0=down;30000:net=flap(500,0.3);45000:edge0=up"`
+    /// — edge 0 dark from t = 20 s to 45 s, with the network flapping
+    /// (150 ms outage every 500 ms) from t = 30 s on.
+    pub fn parse(spec: &str) -> Result<FaultSchedule, String> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(FaultSchedule::none());
+        }
+        let mut events: Vec<FaultEvent> = Vec::new();
+        let mut prev_start = f64::NEG_INFINITY;
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (start_s, opts) = part
+                .split_once(':')
+                .ok_or_else(|| format!("bad fault segment '{part}' (want START_MS:target=state)"))?;
+            let start_ms: f64 = start_s
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad fault segment start '{start_s}' (want ms)"))?;
+            if start_ms <= prev_start {
+                return Err(format!(
+                    "fault segments must start at strictly increasing times ({prev_start} then {start_ms})"
+                ));
+            }
+            prev_start = start_ms;
+            // Splitting on ',' naively would break flap(p,d): split
+            // assignments at commas outside parentheses instead.
+            for assign in split_assignments(opts) {
+                let assign = assign.trim();
+                if assign.is_empty() {
+                    continue;
+                }
+                let (k, v) = assign
+                    .split_once('=')
+                    .ok_or_else(|| format!("bad fault option '{assign}' (want target=state)"))?;
+                let target = parse_target(k.trim())?;
+                let state = parse_state(v.trim())?;
+                events.push(FaultEvent { start_ms, target, state });
+            }
+        }
+        FaultSchedule::new(events)
+    }
+
+    /// All events in start-time order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// True when nothing ever fails: the engine must then be bitwise
+    /// identical to the fault-free path (zero extra RNG draws).
+    pub fn is_identity(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Largest edge index any event targets (for topology validation);
+    /// None when no event targets an edge.
+    pub fn max_edge_index(&self) -> Option<usize> {
+        self.events
+            .iter()
+            .filter_map(|e| match e.target {
+                FaultTarget::Edge(k) => Some(k),
+                _ => None,
+            })
+            .max()
+    }
+
+    /// The regime `target` is in at virtual time `t_ms` (Up before its
+    /// first event).
+    fn state_at(&self, target: FaultTarget, t_ms: f64) -> (FaultState, f64) {
+        let mut cur = (FaultState::Up, 0.0);
+        for e in &self.events {
+            if e.target == target && e.start_ms <= t_ms {
+                cur = (e.state, e.start_ms);
+            }
+        }
+        cur
+    }
+
+    /// Is `target` down at virtual time `t_ms`?
+    pub fn down_at(&self, target: FaultTarget, t_ms: f64) -> bool {
+        match self.state_at(target, t_ms) {
+            (FaultState::Up, _) => false,
+            (FaultState::Down, _) => true,
+            (FaultState::Flap { period_ms, duty }, start) => {
+                let q = (t_ms - start).rem_euclid(period_ms);
+                q < duty * period_ms
+            }
+        }
+    }
+
+    /// The next virtual time strictly after `t_ms` at which *any* target's
+    /// up/down status can change (infinity when none): scheduled event
+    /// starts plus the in-force flap regimes' cycle boundaries. The DES
+    /// advances its health masks lazily at these boundaries, so an
+    /// infinite flap never materializes more than one boundary at a time.
+    pub fn next_transition_after(&self, t_ms: f64) -> f64 {
+        let mut next = f64::INFINITY;
+        for e in &self.events {
+            if e.start_ms > t_ms {
+                next = next.min(e.start_ms);
+            }
+        }
+        // Flap regimes in force generate boundaries between events.
+        let mut targets: Vec<FaultTarget> = Vec::new();
+        for e in &self.events {
+            if !targets.contains(&e.target) {
+                targets.push(e.target);
+            }
+        }
+        for target in targets {
+            if let (FaultState::Flap { period_ms, duty }, start) = self.state_at(target, t_ms) {
+                let p = t_ms - start;
+                let k = (p / period_ms).floor();
+                let q = p - k * period_ms;
+                let down_len = duty * period_ms;
+                let boundary = if q < down_len {
+                    start + k * period_ms + down_len
+                } else {
+                    start + (k + 1.0) * period_ms
+                };
+                if boundary > t_ms {
+                    next = next.min(boundary);
+                }
+            }
+        }
+        next
+    }
+}
+
+/// Split `"a=x,b=flap(1,0.5),c=y"` into assignments without breaking the
+/// commas inside `flap(...)`.
+fn split_assignments(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '(' => depth += 1,
+            ')' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn parse_target(k: &str) -> Result<FaultTarget, String> {
+    let k_lower = k.to_ascii_lowercase();
+    if let Some(idx) = k_lower.strip_prefix("edge") {
+        let idx: usize = idx
+            .parse()
+            .map_err(|_| format!("bad fault target '{k}' (want edgeK|cloud|net)"))?;
+        return Ok(FaultTarget::Edge(idx));
+    }
+    match k_lower.as_str() {
+        "cloud" => Ok(FaultTarget::Cloud),
+        "net" => Ok(FaultTarget::Net),
+        _ => Err(format!("unknown fault target '{k}' (want edgeK|cloud|net)")),
+    }
+}
+
+fn parse_state(v: &str) -> Result<FaultState, String> {
+    let v_lower = v.to_ascii_lowercase();
+    match v_lower.as_str() {
+        "up" => return Ok(FaultState::Up),
+        "down" => return Ok(FaultState::Down),
+        _ => {}
+    }
+    if let Some(args) = v_lower.strip_prefix("flap(").and_then(|r| r.strip_suffix(')')) {
+        let (p, d) = args
+            .split_once(',')
+            .ok_or_else(|| format!("bad flap spec '{v}' (want flap(PERIOD_MS,DUTY))"))?;
+        let period_ms: f64 =
+            p.trim().parse().map_err(|_| format!("bad flap period '{p}'"))?;
+        let duty: f64 = d.trim().parse().map_err(|_| format!("bad flap duty '{d}'"))?;
+        return Ok(FaultState::Flap { period_ms, duty });
+    }
+    Err(format!("unknown fault state '{v}' (want down|up|flap(PERIOD_MS,DUTY))"))
+}
+
+/// What the engine does when a request's attempt errors out (node/link
+/// failure or per-attempt timeout).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RetryPolicy {
+    /// Terminal: a failed attempt fails the request.
+    None,
+    /// Re-admit on the *same* placement after jittered exponential
+    /// backoff, up to `budget` retries.
+    Backoff { budget: u32, base_ms: f64 },
+    /// Re-admit on the next-best *healthy* placement (by memoized
+    /// path + service time) after the same backoff, up to `budget`
+    /// retries; dies when no healthy placement exists.
+    Failover { budget: u32, base_ms: f64 },
+}
+
+impl RetryPolicy {
+    /// Parse the `[retry] policy` knob with its companion parameters.
+    pub fn parse(policy: &str, budget: u32, base_ms: f64) -> Result<RetryPolicy, String> {
+        if !(base_ms.is_finite() && base_ms >= 0.0) {
+            return Err(format!("retry backoff_ms {base_ms} must be finite and >= 0"));
+        }
+        match policy.to_ascii_lowercase().as_str() {
+            "none" => Ok(RetryPolicy::None),
+            "backoff" => Ok(RetryPolicy::Backoff { budget, base_ms }),
+            "failover" => Ok(RetryPolicy::Failover { budget, base_ms }),
+            other => Err(format!("unknown retry policy '{other}' (want none|backoff|failover)")),
+        }
+    }
+
+    /// Retry attempts allowed after the first (0 for [`RetryPolicy::None`]).
+    pub fn budget(&self) -> u32 {
+        match self {
+            RetryPolicy::None => 0,
+            RetryPolicy::Backoff { budget, .. } | RetryPolicy::Failover { budget, .. } => *budget,
+        }
+    }
+
+    /// Backoff delay before retry number `retry` (1-based), with
+    /// `jitter01` drawn in [0, 1) from the dedicated fault RNG:
+    /// `base * 2^(retry-1) * (0.5 + jitter01)`.
+    pub fn backoff_delay_ms(&self, retry: u32, jitter01: f64) -> f64 {
+        match self {
+            RetryPolicy::None => 0.0,
+            RetryPolicy::Backoff { base_ms, .. } | RetryPolicy::Failover { base_ms, .. } => {
+                base_ms * 2f64.powi(retry.saturating_sub(1) as i32) * (0.5 + jitter01)
+            }
+        }
+    }
+}
+
+/// Everything the DES needs to run a fault scenario: the outage timeline,
+/// the retry policy, and the per-attempt timeout (0 = attempts never time
+/// out). The identity plan is the engine default and bit-transparent.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    pub schedule: FaultSchedule,
+    pub retry: RetryPolicy,
+    /// Per-attempt timeout in ms measured from the attempt's (re)admission;
+    /// 0 disables timeouts.
+    pub timeout_ms: f64,
+}
+
+impl FaultPlan {
+    /// No faults, no timeouts: the engine must be bitwise the fault-free
+    /// path under this plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan { schedule: FaultSchedule::none(), retry: RetryPolicy::None, timeout_ms: 0.0 }
+    }
+
+    /// True when the plan cannot affect the engine at all.
+    pub fn is_identity(&self) -> bool {
+        self.schedule.is_identity() && self.timeout_ms == 0.0
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_schedule_is_transparent() {
+        let f = FaultSchedule::none();
+        assert!(f.is_identity());
+        assert!(!f.down_at(FaultTarget::Edge(0), 1e9));
+        assert_eq!(f.next_transition_after(0.0), f64::INFINITY);
+        assert_eq!(FaultSchedule::parse("").unwrap(), f);
+        assert!(FaultPlan::none().is_identity());
+        assert!(!FaultPlan { timeout_ms: 100.0, ..FaultPlan::none() }.is_identity());
+    }
+
+    #[test]
+    fn parse_spec_roundtrips_outage_windows() {
+        let f = FaultSchedule::parse("20000:edge0=down;45000:edge0=up").unwrap();
+        assert!(!f.is_identity());
+        assert_eq!(f.events().len(), 2);
+        assert!(!f.down_at(FaultTarget::Edge(0), 19_999.0));
+        assert!(f.down_at(FaultTarget::Edge(0), 20_000.0));
+        assert!(f.down_at(FaultTarget::Edge(0), 44_999.0));
+        assert!(!f.down_at(FaultTarget::Edge(0), 45_000.0));
+        assert!(!f.down_at(FaultTarget::Cloud, 30_000.0), "untargeted stays up");
+        assert_eq!(f.next_transition_after(0.0), 20_000.0);
+        assert_eq!(f.next_transition_after(20_000.0), 45_000.0);
+        assert_eq!(f.next_transition_after(45_000.0), f64::INFINITY);
+        assert_eq!(f.max_edge_index(), Some(0));
+    }
+
+    #[test]
+    fn flap_cycles_down_then_up_each_period() {
+        let f = FaultSchedule::parse("1000:net=flap(500,0.3)").unwrap();
+        let net = FaultTarget::Net;
+        assert!(!f.down_at(net, 999.0));
+        // each 500 ms cycle: down for 150 ms, up for 350 ms
+        assert!(f.down_at(net, 1_000.0));
+        assert!(f.down_at(net, 1_149.0));
+        assert!(!f.down_at(net, 1_151.0));
+        assert!(!f.down_at(net, 1_499.0));
+        assert!(f.down_at(net, 1_501.0));
+        // boundaries materialize one at a time
+        assert_eq!(f.next_transition_after(0.0), 1_000.0);
+        assert_eq!(f.next_transition_after(1_000.0), 1_150.0);
+        assert_eq!(f.next_transition_after(1_150.0), 1_500.0);
+        assert_eq!(f.next_transition_after(1_500.0), 1_650.0);
+        assert_eq!(f.max_edge_index(), None);
+    }
+
+    #[test]
+    fn flap_ends_at_the_targets_next_event() {
+        let f = FaultSchedule::parse("0:cloud=flap(200,0.5);500:cloud=up").unwrap();
+        assert!(f.down_at(FaultTarget::Cloud, 50.0));
+        assert!(!f.down_at(FaultTarget::Cloud, 150.0));
+        assert!(f.down_at(FaultTarget::Cloud, 450.0));
+        assert!(!f.down_at(FaultTarget::Cloud, 600.0), "up event stops the flap");
+        // 400 (down), 500 (the up event); the 500 flap boundary coincides
+        assert_eq!(f.next_transition_after(350.0), 400.0);
+        assert_eq!(f.next_transition_after(400.0), 500.0);
+        assert_eq!(f.next_transition_after(500.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn multi_target_segments_share_a_start() {
+        let f = FaultSchedule::parse("1000:edge0=down,edge1=down,net=flap(100,0.5)").unwrap();
+        assert_eq!(f.events().len(), 3);
+        assert!(f.down_at(FaultTarget::Edge(0), 1_500.0));
+        assert!(f.down_at(FaultTarget::Edge(1), 1_500.0));
+        assert_eq!(f.max_edge_index(), Some(1));
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultSchedule::parse("abc").is_err());
+        assert!(FaultSchedule::parse("1000:edge0").is_err());
+        assert!(FaultSchedule::parse("1000:edgeX=down").is_err());
+        assert!(FaultSchedule::parse("1000:router=down").is_err());
+        assert!(FaultSchedule::parse("1000:edge0=sideways").is_err());
+        assert!(FaultSchedule::parse("1000:net=flap(500)").is_err());
+        assert!(FaultSchedule::parse("1000:net=flap(0,0.3)").is_err());
+        assert!(FaultSchedule::parse("1000:net=flap(500,0)").is_err());
+        assert!(FaultSchedule::parse("1000:net=flap(500,1)").is_err());
+        assert!(FaultSchedule::parse("2000:edge0=down;1000:edge0=up").is_err());
+        assert!(FaultSchedule::parse("-5:edge0=down").is_err());
+    }
+
+    #[test]
+    fn retry_policy_parses_and_backs_off_exponentially() {
+        assert_eq!(RetryPolicy::parse("none", 3, 100.0).unwrap(), RetryPolicy::None);
+        let b = RetryPolicy::parse("backoff", 3, 100.0).unwrap();
+        assert_eq!(b, RetryPolicy::Backoff { budget: 3, base_ms: 100.0 });
+        assert_eq!(b.budget(), 3);
+        let f = RetryPolicy::parse("FAILOVER", 2, 50.0).unwrap();
+        assert_eq!(f.budget(), 2);
+        assert!(RetryPolicy::parse("always", 1, 1.0).is_err());
+        assert!(RetryPolicy::parse("backoff", 1, f64::NAN).is_err());
+        // deterministic given the jitter draw; doubles per retry
+        assert_eq!(b.backoff_delay_ms(1, 0.5), 100.0);
+        assert_eq!(b.backoff_delay_ms(2, 0.5), 200.0);
+        assert_eq!(b.backoff_delay_ms(3, 0.0), 200.0);
+        assert_eq!(RetryPolicy::None.backoff_delay_ms(1, 0.5), 0.0);
+    }
+}

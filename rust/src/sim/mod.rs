@@ -16,6 +16,7 @@ pub mod arrivals;
 pub mod des;
 pub mod drift;
 pub mod env;
+pub mod faults;
 pub mod latency;
 pub mod scenarios;
 pub mod shard;
@@ -29,6 +30,7 @@ pub use arrivals::{ArrivalProcess, ArrivalStream, IdMode};
 pub use des::{BacklogStats, CompletedRequest, DesCore, DesOutcome, SyncScratch};
 pub use drift::{DriftSchedule, DriftSegment};
 pub use env::{Dynamics, Env, StepOutcome};
+pub use faults::{FaultPlan, FaultSchedule, FaultState, FaultTarget, RetryPolicy};
 pub use latency::{ResponseModel, RoundCtx};
 pub use scenarios::{FleetScenario, FLEET_SCENARIOS};
 pub use shard::{

@@ -21,6 +21,7 @@
 
 use crate::sim::arrivals::ArrivalProcess;
 use crate::sim::drift::{DriftSchedule, DriftSegment};
+use crate::sim::faults::{FaultEvent, FaultSchedule, FaultState, FaultTarget};
 use crate::types::NetCond;
 
 /// One named scenario: what arrives, and how the world drifts while it
@@ -118,6 +119,42 @@ pub fn all(horizon_ms: f64) -> Vec<FleetScenario> {
     FLEET_SCENARIOS.iter().map(|n| by_name(n, horizon_ms).unwrap()).collect()
 }
 
+/// The canonical chaos regime for `eeco experiment chaos`: steady
+/// Poisson load while edge 0 is hard-down for the middle 40% of the
+/// horizon (0.3h..0.7h), then recovers. Faults are deliberately not a
+/// `FleetScenario` field — the fleet sweep stays fault-free and
+/// [`FLEET_SCENARIOS`] is unchanged — so this returns the schedule
+/// alongside the traffic shape for the chaos driver to wire into a
+/// [`crate::sim::FaultPlan`].
+pub fn edge_outage(horizon_ms: f64) -> (FleetScenario, FaultSchedule) {
+    assert!(
+        horizon_ms.is_finite() && horizon_ms > 0.0,
+        "edge_outage horizon must be positive"
+    );
+    let h = horizon_ms;
+    let scenario = FleetScenario {
+        name: "edge_outage",
+        process: ArrivalProcess::Poisson { rate_per_s: 1.5 },
+        drift: DriftSchedule::none(),
+    };
+    // new() cannot fail: two events on one target at strictly
+    // increasing positive times.
+    let faults = FaultSchedule::new(vec![
+        FaultEvent {
+            start_ms: 0.3 * h,
+            target: FaultTarget::Edge(0),
+            state: FaultState::Down,
+        },
+        FaultEvent {
+            start_ms: 0.7 * h,
+            target: FaultTarget::Edge(0),
+            state: FaultState::Up,
+        },
+    ])
+    .unwrap();
+    (scenario, faults)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,6 +199,22 @@ mod tests {
         assert_eq!(s.drift.rate_mult_at(1.5 * h / 6.0), 0.5);
         assert_eq!(s.drift.rate_mult_at(2.5 * h / 6.0), 2.5);
         assert_eq!(s.drift.rate_mult_at(5.5 * h / 6.0), 0.5);
+    }
+
+    #[test]
+    fn edge_outage_downs_edge0_for_the_middle_of_the_horizon() {
+        let (s, faults) = edge_outage(10_000.0);
+        assert_eq!(s.name, "edge_outage");
+        assert!(s.process.is_valid());
+        assert!(s.drift.is_identity(), "outage scenario drifts only via faults");
+        assert!(!faults.is_identity());
+        assert!(!faults.down_at(FaultTarget::Edge(0), 1_000.0));
+        assert!(faults.down_at(FaultTarget::Edge(0), 5_000.0));
+        assert!(!faults.down_at(FaultTarget::Edge(0), 8_000.0));
+        assert!(!faults.down_at(FaultTarget::Cloud, 5_000.0), "only edge 0 fails");
+        // not part of the fleet library: the fleet sweep stays fault-free
+        assert!(by_name("edge_outage", 10_000.0).is_none());
+        assert_eq!(FLEET_SCENARIOS.len(), 5);
     }
 
     #[test]

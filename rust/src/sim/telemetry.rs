@@ -16,8 +16,12 @@
 //! Spans trace one request's lifecycle: `admit` (enqueued at its
 //! effective arrival), the admission verdicts `shed` / `defer` /
 //! `degrade`, `service_start` (a vCPU picked it up), and the terminal
-//! `complete` (with the user-visible response time). The control plane
-//! adds `epoch` spans at its decision boundaries. Gauges sample per-node
+//! `complete` (with the user-visible response time). Under a fault plan
+//! the failure lifecycle adds `timeout` (per-attempt deadline hit),
+//! `retry` / `failover` (re-admission, same or re-routed placement) and
+//! the terminal `fail` (budget exhausted, time-to-failure in
+//! `response_ms`). The control plane adds `epoch` spans at its decision
+//! boundaries. Gauges sample per-node
 //! backlog, en-route count and utilization — at control ticks by default
 //! ([`GaugeMode::Tick`]), or at every backlog-changing event when
 //! `[telemetry] gauges = "event"` ([`GaugeMode::Event`]). Numeric ids
@@ -57,6 +61,16 @@ pub enum SpanKind {
     Complete,
     /// Control-plane epoch boundary (`req` = epoch index).
     Epoch,
+    /// One attempt hit its per-attempt timeout and was evicted.
+    Timeout,
+    /// A failed attempt is being re-admitted at the same placement.
+    Retry,
+    /// A failed attempt is being re-admitted at a different (healthy)
+    /// placement.
+    Failover,
+    /// Retry budget exhausted (or no healthy placement); terminal for
+    /// admitted requests, with the time-to-failure in `response_ms`.
+    Fail,
 }
 
 impl SpanKind {
@@ -69,6 +83,10 @@ impl SpanKind {
             SpanKind::ServiceStart => "service_start",
             SpanKind::Complete => "complete",
             SpanKind::Epoch => "epoch",
+            SpanKind::Timeout => "timeout",
+            SpanKind::Retry => "retry",
+            SpanKind::Failover => "failover",
+            SpanKind::Fail => "fail",
         }
     }
 }

@@ -7,7 +7,10 @@
 use eeco::monitor::{NodeState, SystemState};
 use eeco::prelude::*;
 use eeco::sim::arrivals::{schedule, ArrivalProcess};
-use eeco::sim::{des, ResponseModel};
+use eeco::sim::faults::FaultEvent;
+use eeco::sim::{
+    des, FaultPlan, FaultSchedule, FaultState, FaultTarget, ResponseModel, RetryPolicy,
+};
 use eeco::util::prop::forall;
 use eeco::util::rng::Rng;
 
@@ -346,6 +349,181 @@ fn prop_des_core_reuse_bit_identical_to_fresh_runs() {
             check(&out, &fresh2, "second run")?;
             core.run_open_loop_into(&decision, &t1, horizon, seed, &mut out);
             check(&out, &fresh1, "replay after reuse")?;
+            Ok(())
+        },
+    );
+}
+
+// --- Fault injection properties (the failure-aware lifecycle must keep
+// --- the fault-free engine bit-exact and never lose a request) ----------
+
+fn rand_fault_schedule(rng: &mut Rng, edges: usize, horizon: f64) -> FaultSchedule {
+    let n = rng.range(1, 5);
+    let mut t = rng.range_f64(100.0, horizon / 4.0);
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        let target = match rng.below(3) {
+            0 => FaultTarget::Edge(rng.below(edges)),
+            1 => FaultTarget::Cloud,
+            _ => FaultTarget::Net,
+        };
+        let state = match rng.below(3) {
+            0 => FaultState::Down,
+            1 => FaultState::Up,
+            _ => FaultState::Flap {
+                period_ms: rng.range_f64(200.0, 1_000.0),
+                duty: rng.range_f64(0.1, 0.9),
+            },
+        };
+        events.push(FaultEvent { start_ms: t, target, state });
+        t += rng.range_f64(200.0, horizon / 3.0);
+    }
+    FaultSchedule::new(events).expect("strictly increasing times")
+}
+
+fn rand_retry(rng: &mut Rng) -> RetryPolicy {
+    match rng.below(3) {
+        0 => RetryPolicy::None,
+        1 => RetryPolicy::Backoff {
+            budget: rng.range(1, 4) as u32,
+            base_ms: rng.range_f64(20.0, 200.0),
+        },
+        _ => RetryPolicy::Failover {
+            budget: rng.range(1, 4) as u32,
+            base_ms: rng.range_f64(20.0, 200.0),
+        },
+    }
+}
+
+#[test]
+fn prop_empty_fault_plan_is_bitwise_identity() {
+    // Installing the identity FaultPlan must leave the engine on its
+    // original code path: same completions bit-for-bit, same makespan,
+    // zero failure-lifecycle counters, no extra RNG draws.
+    forall(
+        25,
+        0xF1,
+        |rng| (rng.range(1, 8), rng.range(1, 4), rng.next_u64()),
+        |&(users, edges, seed)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let state = eeco::monitor::TopoState::idle(&model.net.topo);
+            let horizon = 4000.0;
+            let process = rand_process(&mut drng);
+            let trace = schedule(process, users, horizon, seed);
+
+            let mut plain = des::DesCore::new();
+            plain.install(&model, &state);
+            let mut a = des::DesOutcome::default();
+            plain.run_open_loop_into(&decision, &trace, horizon, seed, &mut a);
+
+            let mut faulty = des::DesCore::new();
+            faulty.install(&model, &state);
+            faulty.set_fault_plan(&FaultPlan::none());
+            if faulty.faults_active() {
+                return Err("identity plan reported active".into());
+            }
+            let mut b = des::DesOutcome::default();
+            faulty.run_open_loop_into(&decision, &trace, horizon, seed, &mut b);
+
+            if a.completed.len() != b.completed.len() {
+                return Err("completion count diverged under identity plan".into());
+            }
+            for (x, y) in a.completed.iter().zip(&b.completed) {
+                if x.id != y.id
+                    || x.response_ms.to_bits() != y.response_ms.to_bits()
+                    || x.depart_ms.to_bits() != y.depart_ms.to_bits()
+                {
+                    return Err(format!("req {} diverged under identity plan", x.id));
+                }
+            }
+            if a.makespan_ms.to_bits() != b.makespan_ms.to_bits() {
+                return Err("makespan diverged under identity plan".into());
+            }
+            if b.failed != 0 || b.timed_out != 0 || b.retries != 0 || b.failovers != 0 {
+                return Err("identity plan produced failure-lifecycle events".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_faulty_runs_conserve_requests_and_stay_deterministic() {
+    // Under arbitrary outage schedules, timeouts and retry policies:
+    // every offered request ends exactly once (completed or terminally
+    // failed, never both, nothing still in flight), retries never
+    // double-count an id, and the whole lifecycle replays byte-identical
+    // from the same seed — no wall-clock anywhere.
+    forall(
+        25,
+        0xF2,
+        |rng| (rng.range(1, 8), rng.range(1, 4), rng.next_u64()),
+        |&(users, edges, seed)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let state = eeco::monitor::TopoState::idle(&model.net.topo);
+            let horizon = 5000.0;
+            let trace =
+                schedule(ArrivalProcess::Poisson { rate_per_s: 2.0 }, users, horizon, seed);
+            let plan = FaultPlan {
+                schedule: rand_fault_schedule(&mut drng, edges, horizon),
+                retry: rand_retry(&mut drng),
+                timeout_ms: if drng.bool(0.5) { drng.range_f64(200.0, 1_500.0) } else { 0.0 },
+            };
+
+            let run = |out: &mut des::DesOutcome| -> Result<usize, String> {
+                let mut core = des::DesCore::new();
+                core.install(&model, &state);
+                core.set_fault_plan(&plan);
+                core.run_open_loop_into(&decision, &trace, horizon, seed, out);
+                Ok(core.live_count())
+            };
+            let mut a = des::DesOutcome::default();
+            let live = run(&mut a)?;
+
+            // conservation: offered == completed + failed, nothing in flight
+            if live != 0 {
+                return Err(format!("{live} requests still in flight after drain"));
+            }
+            if a.completed.len() + a.failed != trace.len() {
+                return Err(format!(
+                    "{} offered != {} completed + {} failed",
+                    trace.len(),
+                    a.completed.len(),
+                    a.failed
+                ));
+            }
+            // retries never duplicate a completion
+            let mut ids: Vec<u64> = a.completed.iter().map(|c| c.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            if ids.len() != a.completed.len() {
+                return Err("a request completed more than once".into());
+            }
+            if a.failovers > a.retries {
+                return Err("failovers exceeded total retries".into());
+            }
+
+            // determinism: byte-identical replay, counters included
+            let mut b = des::DesOutcome::default();
+            run(&mut b)?;
+            if a.completed.len() != b.completed.len()
+                || a.failed != b.failed
+                || a.timed_out != b.timed_out
+                || a.retries != b.retries
+                || a.failovers != b.failovers
+                || a.makespan_ms.to_bits() != b.makespan_ms.to_bits()
+            {
+                return Err("fault run diverged between identical replays".into());
+            }
+            for (x, y) in a.completed.iter().zip(&b.completed) {
+                if x.id != y.id || x.response_ms.to_bits() != y.response_ms.to_bits() {
+                    return Err(format!("req {} diverged between replays", x.id));
+                }
+            }
             Ok(())
         },
     );

@@ -260,6 +260,120 @@ fn prop_spans_conserve_admission_outcomes() {
     );
 }
 
+/// Under fault injection the trace's failure-lifecycle spans conserve
+/// the engine's counters exactly: one `fail` span per terminal failure,
+/// one `timeout` span per eviction, one `retry`/`failover` span per
+/// re-admission (`failover` iff the placement switched) — and the
+/// offered work still balances: every admitted request ends as exactly
+/// one completion or one terminal failure once the heap drains.
+#[test]
+fn prop_fault_spans_conserve_failure_counters() {
+    use eeco::sim::{FaultPlan, FaultSchedule, RetryPolicy};
+
+    forall(
+        15,
+        0x7E21,
+        |rng| {
+            let users = rng.range(1, 6);
+            (
+                users,
+                rand_decision(rng, users),
+                rng.next_u64(),
+                rng.below(3), // retry policy
+                rng.bool(0.5), // timeout armed?
+            )
+        },
+        |&(users, ref decision, seed, policy, timed)| {
+            let horizon = 6_000.0;
+            let trace = schedule(
+                ArrivalProcess::Poisson { rate_per_s: 2.5 },
+                users,
+                horizon,
+                seed,
+            );
+            let model = model_for(users);
+            let state = TopoState::idle(&model.net.topo);
+            let mut core = des::DesCore::new();
+            core.install(&model, &state);
+            // the whole ingress fabric flaps through the middle of the
+            // horizon, so offloaded placements keep hitting dead links
+            let plan = FaultPlan {
+                schedule: FaultSchedule::parse("1500:net=flap(400,0.5);4500:net=up")
+                    .map_err(|e| e.to_string())?,
+                retry: match policy {
+                    0 => RetryPolicy::None,
+                    1 => RetryPolicy::Backoff { budget: 2, base_ms: 50.0 },
+                    _ => RetryPolicy::Failover { budget: 2, base_ms: 50.0 },
+                },
+                timeout_ms: if timed { 1_200.0 } else { 0.0 },
+            };
+            core.set_fault_plan(&plan);
+            let sink = MemSink::new();
+            core.set_recorder(Some(Recorder::new(
+                16,
+                Format::Jsonl,
+                Box::new(sink.clone()),
+            )));
+            let mut policy = AdmitAll;
+            let mut out = des::DesOutcome::default();
+            core.run_admitted(decision, &trace, horizon, 1_000.0, &mut policy, seed, &mut out);
+            if core.live_count() != 0 {
+                return Err(format!("{} requests still in flight", core.live_count()));
+            }
+            let mut rec = core.take_recorder().unwrap();
+            rec.flush();
+
+            let (mut admits, mut completes, mut fails) = (0usize, 0usize, 0usize);
+            let (mut timeouts, mut retries, mut failovers) = (0usize, 0usize, 0usize);
+            for line in sink.contents().lines() {
+                let j = Json::parse(line).map_err(|e| format!("unparsable line: {e}"))?;
+                match j.field("kind")?.as_str() {
+                    Some("admit") => admits += 1,
+                    Some("service_start") => {}
+                    Some("complete") => completes += 1,
+                    Some("fail") => {
+                        fails += 1;
+                        // the fail span carries the time-to-failure
+                        if j.field("response_ms")?.as_f64().is_none() {
+                            return Err("fail span without a time-to-failure".into());
+                        }
+                    }
+                    Some("timeout") => timeouts += 1,
+                    Some("retry") => retries += 1,
+                    Some("failover") => failovers += 1,
+                    other => return Err(format!("unexpected span kind {other:?}")),
+                }
+            }
+            if admits != trace.len() {
+                return Err(format!("{admits} admits vs {} offered", trace.len()));
+            }
+            if completes != out.completed.len() || fails != out.failed {
+                return Err(format!(
+                    "spans ({completes} complete, {fails} fail) vs counters ({}, {})",
+                    out.completed.len(),
+                    out.failed
+                ));
+            }
+            if completes + fails != trace.len() {
+                return Err(format!(
+                    "{completes} completions + {fails} failures != {} offered",
+                    trace.len()
+                ));
+            }
+            if timeouts != out.timed_out {
+                return Err(format!("{timeouts} timeout spans vs counter {}", out.timed_out));
+            }
+            if retries + failovers != out.retries || failovers != out.failovers {
+                return Err(format!(
+                    "retry spans ({retries} + {failovers}) vs counters ({}, {})",
+                    out.retries, out.failovers
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// `[telemetry] gauges = "event"` samples the affected node at every
 /// backlog-changing event — strictly more trace volume — while staying
 /// bitwise transparent: the engine's outcome must match the recorder-off
