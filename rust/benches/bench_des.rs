@@ -145,7 +145,7 @@ fn main() {
                 9,
                 10,
                 &eeco::sim::DriftSchedule::none(),
-                eeco::sim::ShardPlan { shards, window_ms: 0.0 },
+                eeco::sim::ShardPlan { shards, ..Default::default() },
                 if shards > 1 { Some(&shard_pool) } else { None },
             )
             .summary
@@ -162,12 +162,37 @@ fn main() {
             9,
             10,
             &eeco::sim::DriftSchedule::none(),
-            eeco::sim::ShardPlan { shards: shard_edges, window_ms: 0.0 },
+            eeco::sim::ShardPlan { shards: shard_edges, ..Default::default() },
             Some(&shard_pool),
         )
         .summary
         .completed
     });
+
+    // Scheduler comparison at the 1M-request volume: the same serial
+    // workload through the BinaryHeap reference and the timing wheel.
+    // Outcomes are property-pinned bitwise identical, so the only
+    // difference is queue cost — the BENCH_des.json pair the `[perf]`
+    // scheduler decision is judged on.
+    for sched in [eeco::sim::SchedulerKind::Heap, eeco::sim::SchedulerKind::Wheel] {
+        let name = format!("open_loop_1m_requests_{}", sched.label());
+        b.run(&name, || {
+            eeco::sim::run_sharded_open_loop(
+                &shard_model,
+                &shard_state,
+                &shard_decision,
+                ArrivalProcess::Poisson { rate_per_s: 1.0 },
+                500_000.0,
+                9,
+                10,
+                &eeco::sim::DriftSchedule::none(),
+                eeco::sim::ShardPlan { shards: 1, window_ms: 0.0, sched },
+                None,
+            )
+            .summary
+            .completed
+        });
+    }
 
     // Admission-path overhead probe: a 50-user trace well past saturation
     // through the deadline-shed ingress (per-arrival predicted-completion

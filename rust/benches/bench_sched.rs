@@ -1,0 +1,104 @@
+//! Raw event-queue microbench: push/pop throughput of the two `[perf]`
+//! scheduler implementations (`BinaryHeap` reference vs hierarchical
+//! timing wheel) on synthetic event streams, isolated from the DES
+//! engines. Two access patterns bound the design space: `hold` pushes
+//! the whole horizon up front then drains (worst case for the heap's
+//! O(log n) at full depth), `churn` interleaves push/pop at a small
+//! steady-state depth (the DES regime — every pop schedules a successor
+//! slightly in the future). 10^6 events per iteration in both.
+
+use std::cmp::Ordering;
+
+use eeco::sim::{EventQueue, SchedEvent, SchedulerKind};
+use eeco::util::bench::Bench;
+use eeco::util::rng::Rng;
+
+/// Minimal schedulable event: the DES comparator (inverted for the
+/// max-heap, seq tiebreak) over a bare (time, seq) pair.
+#[derive(Debug, Clone, Copy)]
+struct Ev {
+    time: f64,
+    seq: u64,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.time.total_cmp(&self.time).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl SchedEvent for Ev {
+    fn time_ms(&self) -> f64 {
+        self.time
+    }
+}
+
+const N: usize = 1_000_000;
+
+fn main() {
+    let mut b = Bench::new("sched");
+
+    // One fixed event stream for every cell: uniform times over a 500 s
+    // horizon, pushed in arrival order.
+    let mut rng = Rng::new(0x5C4ED);
+    let stream: Vec<Ev> =
+        (0..N).map(|i| Ev { time: rng.range_f64(0.0, 500_000.0), seq: i as u64 }).collect();
+
+    for kind in [SchedulerKind::Heap, SchedulerKind::Wheel] {
+        let mut q = EventQueue::new(kind);
+
+        // Hold-then-drain: the queue reaches depth N before the first pop.
+        let name = format!("push_pop_1m_hold_{}", kind.label());
+        b.run(&name, || {
+            q.clear();
+            for ev in &stream {
+                q.push(*ev);
+            }
+            let mut popped = 0usize;
+            let mut last = f64::NEG_INFINITY;
+            while let Some(ev) = q.pop() {
+                assert!(ev.time >= last, "pop order regressed");
+                last = ev.time;
+                popped += 1;
+            }
+            popped
+        });
+
+        // Steady-state churn: depth ~1k, every pop schedules a successor
+        // a short jittered delay ahead — the DES engines' access pattern.
+        let name = format!("push_pop_1m_churn_{}", kind.label());
+        b.run(&name, || {
+            q.clear();
+            let mut seq = 0u64;
+            for ev in stream.iter().take(1_000) {
+                q.push(*ev);
+                seq += 1;
+            }
+            let mut jit = Rng::new(0xC0FFEE);
+            let mut popped = 0usize;
+            while popped < N {
+                let ev = q.pop().expect("queue drained early");
+                popped += 1;
+                if popped + q.len() < N {
+                    q.push(Ev { time: ev.time + jit.range_f64(0.1, 50.0), seq });
+                    seq += 1;
+                }
+            }
+            popped
+        });
+    }
+
+    b.save();
+}

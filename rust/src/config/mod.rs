@@ -442,9 +442,15 @@ impl Default for ShardingConfig {
 }
 
 impl ShardingConfig {
-    /// The engine-level plan this config selects.
+    /// The engine-level plan this config selects. The event-queue
+    /// scheduler lives in `[perf]`, not here — callers that honour
+    /// `perf.scheduler` set the plan's `sched` field themselves.
     pub fn plan(&self) -> crate::sim::ShardPlan {
-        crate::sim::ShardPlan { shards: self.shards, window_ms: self.window_ms }
+        crate::sim::ShardPlan {
+            shards: self.shards,
+            window_ms: self.window_ms,
+            sched: crate::sim::SchedulerKind::Heap,
+        }
     }
 
     pub fn validate(&self) -> Result<(), String> {
@@ -459,6 +465,28 @@ impl ShardingConfig {
         }
         Ok(())
     }
+}
+
+/// `[perf]` section: event-queue scheduler selection for every DES
+/// engine (serial core, sharded shards, cloud stage and arrival merge),
+/// plus the `--scheduler` CLI override. `heap` (the default) is the
+/// `BinaryHeap` reference; `wheel` is the hierarchical timing wheel with
+/// O(1) amortized scheduling, property-pinned bitwise identical to the
+/// heap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PerfConfig {
+    pub scheduler: crate::sim::SchedulerKind,
+}
+
+/// `[metrics]` section: bounded-memory latency summaries. When a run
+/// completes more than `approx_threshold` requests, `TrafficMetrics`
+/// percentiles are answered from a 64-bucket log2 histogram (O(1)
+/// memory, percentile error <= 2x for latencies >= 1 ms) instead of
+/// sorting a `Vec<f64>` of every response. `0` (the default) keeps the
+/// exact path for every run size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MetricsConfig {
+    pub approx_threshold: usize,
 }
 
 /// `[topology]` section: how many edge nodes the end-edge-cloud network
@@ -526,6 +554,8 @@ pub struct Config {
     pub telemetry: TelemetryConfig,
     pub fleet: FleetConfig,
     pub sharding: ShardingConfig,
+    pub perf: PerfConfig,
+    pub metrics: MetricsConfig,
     pub artifacts_dir: String,
     pub results_dir: String,
 }
@@ -553,6 +583,8 @@ impl Default for Config {
             telemetry: TelemetryConfig::default(),
             fleet: FleetConfig::default(),
             sharding: ShardingConfig::default(),
+            perf: PerfConfig::default(),
+            metrics: MetricsConfig::default(),
             artifacts_dir: "artifacts".into(),
             results_dir: "results".into(),
         }
@@ -747,6 +779,8 @@ impl Config {
         const TELEMETRY_KEYS: [&str; 5] = ["enabled", "capacity", "format", "path", "gauges"];
         const FLEET_KEYS: [&str; 4] = ["scenarios", "policies", "horizon_ms", "fast"];
         const SHARDING_KEYS: [&str; 2] = ["shards", "window_ms"];
+        const PERF_KEYS: [&str; 1] = ["scheduler"];
+        const METRICS_KEYS: [&str; 1] = ["approx_threshold"];
         for key in doc.entries.keys() {
             if let Some(k) = key.strip_prefix("telemetry.") {
                 if !TELEMETRY_KEYS.contains(&k) {
@@ -769,6 +803,22 @@ impl Config {
                     return Err(format!(
                         "unknown [sharding] key '{k}' (known: {})",
                         SHARDING_KEYS.join(", ")
+                    ));
+                }
+            }
+            if let Some(k) = key.strip_prefix("perf.") {
+                if !PERF_KEYS.contains(&k) {
+                    return Err(format!(
+                        "unknown [perf] key '{k}' (known: {})",
+                        PERF_KEYS.join(", ")
+                    ));
+                }
+            }
+            if let Some(k) = key.strip_prefix("metrics.") {
+                if !METRICS_KEYS.contains(&k) {
+                    return Err(format!(
+                        "unknown [metrics] key '{k}' (known: {})",
+                        METRICS_KEYS.join(", ")
                     ));
                 }
             }
@@ -848,6 +898,22 @@ impl Config {
             self.sharding.explicit = true;
         }
         self.sharding.validate()?;
+        if let Some(v) = doc.get("perf.scheduler") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| "perf.scheduler must be a string (heap|wheel)".to_string())?;
+            self.perf.scheduler = crate::sim::SchedulerKind::by_name(s)
+                .ok_or_else(|| format!("unknown perf.scheduler '{s}' (want heap|wheel)"))?;
+        }
+        if let Some(v) = doc.get("metrics.approx_threshold") {
+            let t = v.as_i64().ok_or_else(|| {
+                "metrics.approx_threshold must be an integer (0 = always exact)".to_string()
+            })?;
+            if t < 0 {
+                return Err(format!("metrics.approx_threshold must be >= 0, got {t}"));
+            }
+            self.metrics.approx_threshold = t as usize;
+        }
         Ok(())
     }
 
@@ -970,6 +1036,16 @@ impl Config {
             self.sharding.explicit = true;
         }
         self.sharding.validate()?;
+        if let Some(v) = args.get("scheduler") {
+            self.perf.scheduler = crate::sim::SchedulerKind::by_name(v)
+                .ok_or_else(|| format!("bad --scheduler '{v}' (want heap|wheel)"))?;
+        }
+        if let Some(v) = args.get("approx-threshold") {
+            let t: usize = v.parse().map_err(|_| {
+                format!("bad --approx-threshold '{v}' (want a request count; 0 = always exact)")
+            })?;
+            self.metrics.approx_threshold = t;
+        }
         Ok(())
     }
 }
@@ -1380,6 +1456,50 @@ mod tests {
         assert!(Config::load(&bad).is_err());
         let bad = Args::parse(["--shards", "0"].iter().map(|s| s.to_string()));
         assert!(Config::load(&bad).is_err());
+    }
+
+    #[test]
+    fn perf_and_metrics_sections_parse_strictly() {
+        use crate::sim::SchedulerKind;
+        // defaults: heap scheduler (the reference), exact metrics
+        let d = Config::default();
+        assert_eq!(d.perf.scheduler, SchedulerKind::Heap);
+        assert_eq!(d.metrics.approx_threshold, 0);
+
+        let doc =
+            Doc::parse("[perf]\nscheduler = \"wheel\"\n[metrics]\napprox_threshold = 100000\n")
+                .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.perf.scheduler, SchedulerKind::Wheel);
+        assert_eq!(c.metrics.approx_threshold, 100_000);
+
+        // unknown keys, wrong types and bad values rejected at load time
+        let bad = Doc::parse("[perf]\nschedular = \"heap\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[perf]\nscheduler = \"fifo\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[perf]\nscheduler = 3\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[metrics]\napprox_threshold = -1\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[metrics]\nthreshold = 5\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+    }
+
+    #[test]
+    fn scheduler_cli_override() {
+        use crate::sim::SchedulerKind;
+        let args = Args::parse(["--scheduler", "wheel"].iter().map(|s| s.to_string()));
+        let c = Config::load(&args).unwrap();
+        assert_eq!(c.perf.scheduler, SchedulerKind::Wheel);
+        // case-insensitive, like every other name-valued knob
+        let args = Args::parse(["--scheduler", "Heap"].iter().map(|s| s.to_string()));
+        assert_eq!(Config::load(&args).unwrap().perf.scheduler, SchedulerKind::Heap);
+        let bad = Args::parse(["--scheduler", "fifo"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let args = Args::parse(["--approx-threshold", "5000"].iter().map(|s| s.to_string()));
+        assert_eq!(Config::load(&args).unwrap().metrics.approx_threshold, 5000);
     }
 
     #[test]

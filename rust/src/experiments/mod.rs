@@ -106,6 +106,7 @@ impl ExpCtx {
         let env = self.env(scenario, constraint, seed);
         let agent = self.make_agent(algo, users, seed.wrapping_add(1))?;
         let mut orch = Orchestrator::new(env, agent);
+        self.apply_perf(&mut orch);
         let _ = orch.train_full(steps, steps.max(1));
         Ok(orch)
     }
@@ -114,7 +115,15 @@ impl ExpCtx {
     pub fn fixed(&self, scenario: Scenario, tier: Tier, seed: u64) -> Orchestrator {
         let users = scenario.users();
         let env = self.env(scenario, AccuracyConstraint::Max, seed);
-        Orchestrator::new(env, Box::new(FixedAgent::new(tier, users)))
+        let mut orch = Orchestrator::new(env, Box::new(FixedAgent::new(tier, users)));
+        self.apply_perf(&mut orch);
+        orch
+    }
+
+    /// Thread the `[perf]` / `[metrics]` knobs into an orchestrator.
+    fn apply_perf(&self, orch: &mut Orchestrator) {
+        orch.scheduler = self.cfg.perf.scheduler;
+        orch.metrics_approx_threshold = self.cfg.metrics.approx_threshold;
     }
 }
 

@@ -6,7 +6,13 @@
 //! live set, not the trace length). Every volume runs a single-shard
 //! serial baseline first and every sharded run is checked against its
 //! digest (`serial_match`); any mismatch fails the experiment, which is
-//! what the CI `scale-smoke` job gates on.
+//! what the CI `scale-smoke` job gates on. The serial baseline runs
+//! under BOTH event-queue schedulers (`[perf] scheduler`: binary heap
+//! and timing wheel), so every volume also carries a heap==wheel
+//! bitwise cross-check, and each cell reports the queue's perf counters
+//! (events scheduled/fired, queue ops, peak depth); at the 1M-request
+//! volume the wheel's measured queue-op count must be strictly below
+//! the heap's modelled O(log n) cost or the experiment fails.
 //!
 //! The workload is the engine's target regime: a large device
 //! population (10k users in the full sweep, 1M+ offered requests at the
@@ -26,7 +32,8 @@ use crate::metrics::{render_table, save_json, Csv};
 use crate::monitor::TopoState;
 use crate::network::Network;
 use crate::sim::{
-    run_sharded_open_loop, ArrivalProcess, DriftSchedule, ResponseModel, ShardPlan,
+    run_sharded_open_loop, ArrivalProcess, DriftSchedule, ResponseModel, SchedulerKind,
+    ShardPlan,
 };
 use crate::types::{Action, Decision, ModelId, Placement};
 use crate::util::json::Json;
@@ -62,6 +69,7 @@ fn scale_decision(users: usize, edges: usize) -> Decision {
 struct Row {
     target: u64,
     shards: usize,
+    sched: SchedulerKind,
     windows: u64,
     window_ms: f64,
     offered: u64,
@@ -73,6 +81,10 @@ struct Row {
     peak_rss_proxy: u64,
     events: u64,
     events_per_s: f64,
+    scheduled: u64,
+    fired: u64,
+    queue_ops: u64,
+    peak_depth: u64,
     wall_ms: f64,
     serial_match: bool,
 }
@@ -98,11 +110,16 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
     }
     let window_ms = if ctx.cfg.sharding.explicit { ctx.cfg.sharding.window_ms } else { 0.0 };
     let seed = ctx.cfg.seed;
+    // `[perf] scheduler` / `--scheduler` drives the sharded sweep cells;
+    // the serial baseline always runs under BOTH schedulers so every
+    // volume carries a heap==wheel bitwise cross-check.
+    let sched = ctx.cfg.perf.scheduler;
 
     println!(
         "\n== scale: {users} users / {edges} edges, {} volume(s) x shards {shard_counts:?}, \
-         {RATE_PER_S} req/s/user ==",
-        volumes.len()
+         {RATE_PER_S} req/s/user, scheduler {} ==",
+        volumes.len(),
+        sched.label()
     );
 
     let net = Network::with_edges(Scenario::exp_a(users), ctx.cfg.calibration.clone(), edges);
@@ -123,8 +140,18 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
         // the horizon costs live-set memory only.
         let horizon_ms = target as f64 / (users as f64 * RATE_PER_S) * 1000.0 * 1.01;
         let mut serial_digest = 0u64;
-        for &shards in &shard_counts {
-            let plan = ShardPlan { shards, window_ms };
+        // Serial queue-op counts per scheduler (heap, wheel): the wheel's
+        // O(1) scheduling must beat the heap's O(log n) at scale, and the
+        // acceptance gate below enforces it at the 1M-request volume.
+        let mut serial_ops = [0u64; 2];
+        // Cells: shards=1 under both schedulers (the heap run is the
+        // digest witness, the wheel run the bitwise cross-check), then
+        // the shard sweep under the configured scheduler.
+        let mut cells: Vec<(usize, SchedulerKind)> =
+            vec![(1, SchedulerKind::Heap), (1, SchedulerKind::Wheel)];
+        cells.extend(shard_counts.iter().filter(|&&s| s != 1).map(|&s| (s, sched)));
+        for (shards, cell_sched) in cells {
+            let plan = ShardPlan { shards, window_ms, sched: cell_sched };
             let wall = Instant::now();
             let out = run_sharded_open_loop(
                 &model,
@@ -140,7 +167,13 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
             );
             let wall_ms = wall.elapsed().as_secs_f64() * 1000.0;
             if shards == 1 {
-                serial_digest = out.summary.digest;
+                if cell_sched == SchedulerKind::Heap {
+                    serial_digest = out.summary.digest;
+                }
+                serial_ops[match cell_sched {
+                    SchedulerKind::Heap => 0,
+                    SchedulerKind::Wheel => 1,
+                }] = out.perf.queue_ops;
             }
             let serial_match = out.summary.digest == serial_digest;
             all_match &= serial_match;
@@ -152,6 +185,7 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
             rows.push(Row {
                 target,
                 shards,
+                sched: cell_sched,
                 windows: out.windows,
                 window_ms: out.window_ms,
                 offered: out.offered,
@@ -167,15 +201,30 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
                 } else {
                     0.0
                 },
+                scheduled: out.perf.scheduled,
+                fired: out.perf.fired,
+                queue_ops: out.perf.queue_ops,
+                peak_depth: out.perf.peak_depth,
                 wall_ms,
                 serial_match,
             });
+        }
+        // The perf acceptance gate: at the 1M-request volume the wheel's
+        // measured queue-op count must be strictly below the heap's
+        // modelled O(log n) cost on the identical event sequence.
+        if target >= 1_000_000 && serial_ops[1] >= serial_ops[0] {
+            return Err(anyhow!(
+                "scale: wheel queue-op count {} not below heap's {} at volume {target}",
+                serial_ops[1],
+                serial_ops[0]
+            ));
         }
     }
 
     let mut csv = Csv::new(&[
         "volume",
         "shards",
+        "scheduler",
         "windows",
         "window_ms",
         "offered",
@@ -187,6 +236,10 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
         "peak_rss_proxy",
         "events",
         "events_per_s",
+        "scheduled",
+        "fired",
+        "queue_ops",
+        "peak_depth",
         "wall_ms",
         "serial_match",
     ]);
@@ -196,6 +249,7 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
         csv.row(&[
             r.target.to_string(),
             r.shards.to_string(),
+            r.sched.label().to_string(),
             r.windows.to_string(),
             format!("{:.3}", r.window_ms),
             r.offered.to_string(),
@@ -207,16 +261,22 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
             r.peak_rss_proxy.to_string(),
             r.events.to_string(),
             format!("{:.0}", r.events_per_s),
+            r.scheduled.to_string(),
+            r.fired.to_string(),
+            r.queue_ops.to_string(),
+            r.peak_depth.to_string(),
             format!("{:.1}", r.wall_ms),
             r.serial_match.to_string(),
         ]);
         table.push(vec![
             r.target.to_string(),
             r.shards.to_string(),
+            r.sched.label().to_string(),
             r.offered.to_string(),
             format!("{:.1}", r.mean_ms),
             r.peak_rss_proxy.to_string(),
             format!("{:.2}M", r.events_per_s / 1e6),
+            r.queue_ops.to_string(),
             format!("{:.0}", r.wall_ms),
             r.serial_match.to_string(),
         ]);
@@ -224,6 +284,7 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
             Json::obj()
                 .set("volume", r.target as i64)
                 .set("shards", r.shards)
+                .set("scheduler", r.sched.label())
                 .set("windows", r.windows as i64)
                 .set("window_ms", r.window_ms)
                 .set("offered", r.offered as i64)
@@ -235,6 +296,10 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
                 .set("peak_rss_proxy", r.peak_rss_proxy as i64)
                 .set("events", r.events as i64)
                 .set("events_per_s", r.events_per_s)
+                .set("scheduled", r.scheduled as i64)
+                .set("fired", r.fired as i64)
+                .set("queue_ops", r.queue_ops as i64)
+                .set("peak_depth", r.peak_depth as i64)
                 .set("wall_ms", r.wall_ms)
                 .set("serial_match", r.serial_match),
         );
@@ -242,7 +307,10 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
     print!(
         "{}",
         render_table(
-            &["volume", "shards", "offered", "mean_ms", "peak_rss", "ev/s", "wall_ms", "ok"],
+            &[
+                "volume", "shards", "sched", "offered", "mean_ms", "peak_rss", "ev/s",
+                "qops", "wall_ms", "ok"
+            ],
             &table
         )
     );
@@ -270,7 +338,9 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
     if !all_match {
         return Err(anyhow!("scale: sharded digest diverged from the serial baseline"));
     }
-    println!("shard==serial self-check passed for shards {shard_counts:?}");
+    println!(
+        "shard==serial and wheel==heap self-checks passed for shards {shard_counts:?}"
+    );
     Ok(())
 }
 
@@ -290,10 +360,11 @@ mod tests {
         let ctx = ExpCtx::new(cfg);
         scale(&ctx).unwrap();
 
-        // fast slice: 1 volume x shards {1,2,3,4}, self-check column true
+        // fast slice: 1 volume x (serial heap + serial wheel cross-check
+        // + shards {2,3,4}), self-check column true on every row
         let body =
             std::fs::read_to_string(format!("{}/scale.csv", ctx.cfg.results_dir)).unwrap();
-        assert_eq!(body.lines().count(), 1 + 4, "{body}");
+        assert_eq!(body.lines().count(), 1 + 5, "{body}");
         for line in body.lines().skip(1) {
             assert!(line.ends_with(",true"), "serial_match must hold: {line}");
         }
@@ -304,12 +375,21 @@ mod tests {
         assert_eq!(j.field("all_match").unwrap().as_bool(), Some(true));
         match j.field("rows").unwrap() {
             Json::Arr(v) => {
-                assert_eq!(v.len(), 4);
+                assert_eq!(v.len(), 5);
+                let mut scheds = Vec::new();
                 for row in v {
                     // bounded memory is a measured column, never zero
                     let peak = row.field("peak_rss_proxy").unwrap().as_f64().unwrap();
                     assert!(peak > 0.0);
+                    // queue-op counters are measured per cell, never zero
+                    let qops = row.field("queue_ops").unwrap().as_f64().unwrap();
+                    assert!(qops > 0.0);
+                    let sched = row.field("scheduler").unwrap().as_str().unwrap();
+                    scheds.push(sched.to_string());
                 }
+                // the serial baseline ran under both schedulers
+                assert_eq!(scheds[0], "heap");
+                assert_eq!(scheds[1], "wheel");
             }
             other => panic!("rows must be an array, got {other:?}"),
         }
@@ -327,10 +407,10 @@ mod tests {
         cfg.sharding.explicit = true;
         let ctx = ExpCtx::new(cfg);
         scale(&ctx).unwrap();
-        // serial witness + the requested count
+        // serial witness under both schedulers + the requested count
         let body =
             std::fs::read_to_string(format!("{}/scale.csv", ctx.cfg.results_dir)).unwrap();
-        assert_eq!(body.lines().count(), 1 + 2, "{body}");
+        assert_eq!(body.lines().count(), 1 + 3, "{body}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -195,6 +195,21 @@ OPTIONS (sharding): --shards N   partition the open-loop DES by edge
                   results/scale.csv + scale.json with a gating
                   shard==serial digest self-check — --fast / EECO_FAST=1
                   runs the CI smoke slice)
+OPTIONS (perf):   --scheduler heap|wheel   event-queue implementation
+                  behind every DES engine (serial core, each shard, the
+                  cloud stage and the arrival merge): `heap` (default)
+                  is the BinaryHeap reference, `wheel` a hierarchical
+                  timing wheel with O(1) amortized scheduling —
+                  property-pinned bitwise identical to the heap, so the
+                  only difference is queue-op cost ([perf] scheduler in
+                  TOML; `experiment scale` reports events/sec plus
+                  scheduled/fired/queue-op/peak-depth counters per cell)
+                  --approx-threshold N   bounded-memory latency
+                  summaries: runs completing more than N requests
+                  answer TrafficMetrics percentiles from a 64-bucket
+                  log2 histogram (error <= 2x for >= 1 ms) instead of
+                  sorting every response; 0 (default) = always exact
+                  ([metrics] approx_threshold in TOML)
 OPTIONS (telemetry): --telemetry PATH  attach the flight recorder and
                   write per-request trace spans (arrival, admission
                   verdict, service start, completion) + per-tick gauges

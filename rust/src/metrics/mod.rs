@@ -104,6 +104,69 @@ impl LatencySummary {
     }
 }
 
+/// Log2 histogram bucket for a latency in ms: bucket `b` holds values in
+/// `[2^(b-1), 2^b)`, sub-millisecond values land in 0 (the same buckets
+/// the sharded engine's `StreamSummary` uses).
+fn log2_bucket(ms: f64) -> usize {
+    (64 - (ms.max(0.0) as u64).leading_zeros() as usize).min(63)
+}
+
+/// Streaming latency summarizer with O(1) memory: exact count/sum/max,
+/// percentiles answered from a 64-bucket log2 histogram. The
+/// bounded-memory half of [`TrafficMetrics::from_outcome_with`] — a
+/// reported percentile is the upper bound of its bucket, i.e. at most 2x
+/// the true value for latencies >= 1 ms (sub-millisecond values report
+/// as 0), while count, mean and max stay exact.
+#[derive(Debug, Clone)]
+struct ApproxLatency {
+    count: usize,
+    sum_ms: f64,
+    max_ms: f64,
+    hist: [u64; 64],
+}
+
+impl ApproxLatency {
+    fn new() -> ApproxLatency {
+        ApproxLatency { count: 0, sum_ms: 0.0, max_ms: f64::NEG_INFINITY, hist: [0; 64] }
+    }
+
+    fn push(&mut self, ms: f64) {
+        self.count += 1;
+        self.sum_ms += ms;
+        if ms > self.max_ms {
+            self.max_ms = ms;
+        }
+        self.hist[log2_bucket(ms)] += 1;
+    }
+
+    /// Upper bound of the histogram bucket containing quantile `q` (0..1).
+    fn pct(&self, q: f64) -> f64 {
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (b, n) in self.hist.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return if b == 0 { 0.0 } else { (1u64 << b) as f64 };
+            }
+        }
+        self.max_ms
+    }
+
+    fn summary(&self) -> LatencySummary {
+        if self.count == 0 {
+            return LatencySummary::of(&[]);
+        }
+        LatencySummary {
+            count: self.count,
+            mean_ms: self.sum_ms / self.count as f64,
+            p50_ms: self.pct(0.50),
+            p95_ms: self.pct(0.95),
+            p99_ms: self.pct(0.99),
+            max_ms: self.max_ms,
+        }
+    }
+}
+
 /// Metrics of one open-loop (asynchronous-arrival) evaluation: response
 /// percentiles, queueing decomposition, throughput and queue-depth
 /// observability, plus the policy that served the trace. Produced by
@@ -161,27 +224,74 @@ pub struct TrafficMetrics {
 }
 
 impl TrafficMetrics {
+    /// Exact-percentile summary (the historical path — materializes one
+    /// `Vec<f64>` per latency class). Equivalent to
+    /// [`TrafficMetrics::from_outcome_with`] with threshold 0.
     pub fn from_outcome(
         decision: &Decision,
         outcome: &crate::sim::des::DesOutcome,
     ) -> TrafficMetrics {
-        let waits: Vec<f64> =
-            outcome.completed.iter().map(|c| c.link_wait_ms + c.queue_ms).collect();
-        let mut on_time = Vec::new();
-        let mut late = Vec::new();
-        for c in &outcome.completed {
-            if c.on_time() {
-                on_time.push(c.response_ms);
-            } else {
-                late.push(c.response_ms);
+        TrafficMetrics::from_outcome_with(decision, outcome, 0)
+    }
+
+    /// [`TrafficMetrics::from_outcome`] with a bounded-memory switch:
+    /// when `approx_threshold > 0` and more than that many requests
+    /// completed, percentiles stream through a 64-bucket log2 histogram
+    /// ([`ApproxLatency`]) instead of collecting every latency into a
+    /// `Vec<f64>`. On the approximate path a percentile is its bucket's
+    /// upper bound — at most 2x the true value for latencies >= 1 ms —
+    /// while count, mean and max stay exact. With threshold 0 (the
+    /// default everywhere) or a completion count at/below the threshold,
+    /// the exact path runs unchanged and bit-identical to the historical
+    /// `from_outcome` (the test suite pins this).
+    pub fn from_outcome_with(
+        decision: &Decision,
+        outcome: &crate::sim::des::DesOutcome,
+        approx_threshold: usize,
+    ) -> TrafficMetrics {
+        let approx = approx_threshold > 0 && outcome.completed.len() > approx_threshold;
+        let (response, queueing, response_on_time, response_late, misses) = if approx {
+            let mut resp = ApproxLatency::new();
+            let mut queue = ApproxLatency::new();
+            let mut on_time = ApproxLatency::new();
+            let mut late = ApproxLatency::new();
+            for c in &outcome.completed {
+                resp.push(c.response_ms);
+                queue.push(c.link_wait_ms + c.queue_ms);
+                if c.on_time() {
+                    on_time.push(c.response_ms);
+                } else {
+                    late.push(c.response_ms);
+                }
             }
-        }
-        let summarize =
-            |v: &Vec<f64>| if v.is_empty() { None } else { Some(LatencySummary::of(v)) };
+            let opt = |a: &ApproxLatency| (a.count > 0).then(|| a.summary());
+            (resp.summary(), queue.summary(), opt(&on_time), opt(&late), late.count)
+        } else {
+            let waits: Vec<f64> =
+                outcome.completed.iter().map(|c| c.link_wait_ms + c.queue_ms).collect();
+            let mut on_time = Vec::new();
+            let mut late = Vec::new();
+            for c in &outcome.completed {
+                if c.on_time() {
+                    on_time.push(c.response_ms);
+                } else {
+                    late.push(c.response_ms);
+                }
+            }
+            let summarize =
+                |v: &Vec<f64>| if v.is_empty() { None } else { Some(LatencySummary::of(v)) };
+            (
+                LatencySummary::of(&outcome.responses_ms()),
+                LatencySummary::of(&waits),
+                summarize(&on_time),
+                summarize(&late),
+                late.len(),
+            )
+        };
         TrafficMetrics {
             decision: decision.clone(),
-            response: LatencySummary::of(&outcome.responses_ms()),
-            queueing: LatencySummary::of(&waits),
+            response,
+            queueing,
             throughput_rps: outcome.throughput_rps(),
             makespan_ms: outcome.makespan_ms,
             requests: outcome.completed.len(),
@@ -190,10 +300,10 @@ impl TrafficMetrics {
             shed: outcome.shed,
             deferrals: outcome.deferrals,
             degraded: outcome.degraded,
-            deadline_misses: late.len(),
+            deadline_misses: misses,
             goodput_rps: outcome.goodput_rps(),
-            response_on_time: summarize(&on_time),
-            response_late: summarize(&late),
+            response_on_time,
+            response_late,
             failed: outcome.failed,
             timed_out: outcome.timed_out,
             retries: outcome.retries,
@@ -576,6 +686,58 @@ mod tests {
         assert_eq!(m.goodput_rps.to_bits(), m.throughput_rps.to_bits());
         assert!(m.response_late.is_none());
         assert_eq!(m.response_on_time.unwrap().count, 1);
+    }
+
+    #[test]
+    fn approx_threshold_keeps_small_runs_exact_and_bounds_large_run_error() {
+        use crate::sim::des::{CompletedRequest, DesOutcome};
+        let act = Action { placement: Tier::Local, model: ModelId(0) };
+        let req = |id: u64, resp: f64, deadline: f64| CompletedRequest {
+            id,
+            device: 0,
+            action: act,
+            arrival_ms: 0.0,
+            path_ms: 1.0,
+            link_wait_ms: 0.5,
+            queue_ms: resp / 10.0,
+            service_ms: resp,
+            depart_ms: resp,
+            response_ms: resp,
+            deadline_ms: deadline,
+        };
+        let outcome = DesOutcome {
+            completed: (1..=100).map(|i| req(i, i as f64, 50.0)).collect(),
+            makespan_ms: 1000.0,
+            ..Default::default()
+        };
+        let dec = Decision(vec![act]);
+        let exact = TrafficMetrics::from_outcome(&dec, &outcome);
+        // threshold 0 and threshold >= count both stay on the exact path,
+        // bit-identical to the historical from_outcome
+        assert_eq!(TrafficMetrics::from_outcome_with(&dec, &outcome, 0), exact);
+        assert_eq!(TrafficMetrics::from_outcome_with(&dec, &outcome, 100), exact);
+
+        // 100 completions over a threshold of 10: the approximate path
+        let approx = TrafficMetrics::from_outcome_with(&dec, &outcome, 10);
+        assert_eq!(approx.requests, exact.requests);
+        assert_eq!(approx.deadline_misses, exact.deadline_misses);
+        assert_eq!(approx.response.count, exact.response.count);
+        // count/mean/max are exact on the histogram path too
+        assert!((approx.response.mean_ms - exact.response.mean_ms).abs() < 1e-9);
+        assert_eq!(approx.response.max_ms.to_bits(), exact.response.max_ms.to_bits());
+        // percentiles are bucket upper bounds: within 2x of the truth
+        // for latencies >= 1 ms (the documented error bound)
+        for (a, e) in [
+            (approx.response.p50_ms, exact.response.p50_ms),
+            (approx.response.p95_ms, exact.response.p95_ms),
+            (approx.response.p99_ms, exact.response.p99_ms),
+        ] {
+            assert!(a >= e / 2.0 && a <= e * 2.0 + 1.0, "approx {a} vs exact {e}");
+        }
+        let on = approx.response_on_time.unwrap();
+        let late = approx.response_late.unwrap();
+        assert_eq!(on.count + late.count, 100);
+        assert_eq!(late.count, 50);
     }
 
     #[test]

@@ -99,11 +99,25 @@ pub struct Orchestrator {
     /// marks). Taken for the duration of the run and put back flushed;
     /// None (the default) records nothing and is bitwise-transparent.
     pub recorder: Option<Recorder>,
+    /// Event-queue implementation the online DES core runs on
+    /// (`[perf] scheduler`). Heap is the reference; the wheel is
+    /// property-pinned bitwise identical, so this only changes cost.
+    pub scheduler: crate::sim::SchedulerKind,
+    /// `[metrics] approx_threshold`: runs completing more than this many
+    /// requests summarize latency through the bounded-memory histogram
+    /// path of [`TrafficMetrics::from_outcome_with`]. 0 = always exact.
+    pub metrics_approx_threshold: usize,
 }
 
 impl Orchestrator {
     pub fn new(env: Env, agent: Box<dyn Agent>) -> Orchestrator {
-        Orchestrator { env, agent, recorder: None }
+        Orchestrator {
+            env,
+            agent,
+            recorder: None,
+            scheduler: crate::sim::SchedulerKind::Heap,
+            metrics_approx_threshold: 0,
+        }
     }
 
     /// One orchestrated round (Fig. 4 steps 1-5): observe state, decide,
@@ -447,7 +461,7 @@ impl Orchestrator {
         let mut trace = arrivals::schedule_with_drift(process, users, horizon_ms, seed, drift);
         let period = if period_ms.is_finite() && period_ms > 0.0 { period_ms } else { horizon_ms };
 
-        let mut core = DesCore::new();
+        let mut core = DesCore::with_scheduler(self.scheduler);
         let mut out = DesOutcome::default();
         // Physics state: the background snapshot under the drift segment's
         // cond overrides. Live queue depths are *observation only* — the
@@ -676,7 +690,8 @@ impl Orchestrator {
         out.horizon_ms = horizon_ms;
         let last_decision =
             epochs.last().map(|e| e.decision.clone()).expect("at least one epoch");
-        let metrics = TrafficMetrics::from_outcome(&last_decision, &out);
+        let metrics =
+            TrafficMetrics::from_outcome_with(&last_decision, &out, self.metrics_approx_threshold);
         OnlineReport { epochs, metrics, outcome: out, learn_steps }
     }
 
@@ -803,7 +818,7 @@ mod tests {
                 17,
                 &DriftSchedule::none(),
                 &FaultSchedule::none(),
-                ShardPlan { shards, window_ms: 0.0 },
+                ShardPlan { shards, ..Default::default() },
                 None,
             )
         };
@@ -833,7 +848,7 @@ mod tests {
             7,
             &DriftSchedule::none(),
             &faults,
-            ShardPlan { shards: 1, window_ms: 0.0 },
+            ShardPlan { shards: 1, ..Default::default() },
             None,
         );
     }

@@ -15,10 +15,10 @@
 //! trace is a pure function of (process, users, horizon, seed) — the
 //! bit-exact determinism the property suite pins down.
 
-use std::collections::BinaryHeap;
-
 use crate::sim::drift::DriftSchedule;
+use crate::sim::sched::{EventQueue, SchedEvent, SchedulerKind};
 use crate::sim::workload::Request;
+use crate::util::perf::PerfCounters;
 use crate::util::rng::Rng;
 
 /// How each end device generates inference requests over virtual time.
@@ -169,15 +169,22 @@ impl DeviceStream {
     }
 }
 
-/// One pending head-of-stream arrival in the [`ArrivalStream`] merge heap.
-/// Ordering is inverted (earliest time, then lowest device, pops first) so
-/// `BinaryHeap`'s max-heap behaves as a min-heap — the same
-/// `(t, device)` key `schedule_with_drift` sorts by, which is what makes
-/// the streamed order identical to the materialized one.
+/// One pending head-of-stream arrival in the [`ArrivalStream`] merge
+/// queue. Ordering is inverted (earliest time, then lowest device, pops
+/// first) so a max-heap behaves as a min-heap — the same `(t, device)`
+/// key `schedule_with_drift` sorts by, which is what makes the streamed
+/// order identical to the materialized one.
+#[derive(Clone, Copy)]
 struct NextArrival {
     t_ms: f64,
     device: usize,
     slot: usize,
+}
+
+impl SchedEvent for NextArrival {
+    fn time_ms(&self) -> f64 {
+        self.t_ms
+    }
 }
 
 impl PartialEq for NextArrival {
@@ -232,7 +239,7 @@ pub struct ArrivalStream {
     streams: Vec<(usize, DeviceStream)>,
     /// Per-slot count of requests already emitted (DeviceTagged ids).
     emitted: Vec<u64>,
-    heap: BinaryHeap<NextArrival>,
+    heap: EventQueue<NextArrival>,
     drift: DriftSchedule,
     horizon_ms: f64,
     id_mode: IdMode,
@@ -274,12 +281,39 @@ impl ArrivalStream {
         id_mode: IdMode,
         keep: impl Fn(usize) -> bool,
     ) -> ArrivalStream {
+        ArrivalStream::with_filter_sched(
+            process,
+            users,
+            horizon_ms,
+            seed,
+            drift,
+            id_mode,
+            keep,
+            SchedulerKind::Heap,
+        )
+    }
+
+    /// [`ArrivalStream::with_filter`] with an explicit event scheduler
+    /// for the merge queue. The yielded trace is bitwise identical for
+    /// either kind; the wheel keeps the per-pop cost flat when thousands
+    /// of devices are live at once.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_filter_sched(
+        process: ArrivalProcess,
+        users: usize,
+        horizon_ms: f64,
+        seed: u64,
+        drift: &DriftSchedule,
+        id_mode: IdMode,
+        keep: impl Fn(usize) -> bool,
+        sched: SchedulerKind,
+    ) -> ArrivalStream {
         assert!(users > 0, "schedule for zero devices");
         assert!(horizon_ms > 0.0, "empty horizon");
         assert!(process.is_valid(), "non-positive arrival knobs: {process:?}");
         let mut base = Rng::new(seed);
         let mut streams = Vec::new();
-        let mut heap = BinaryHeap::new();
+        let mut heap = EventQueue::new(sched);
         for device in 0..users {
             let fork = base.fork();
             if !keep(device) {
@@ -305,9 +339,16 @@ impl ArrivalStream {
         }
     }
 
-    /// Arrival time of the next pending request, if any.
-    pub fn peek_ms(&self) -> Option<f64> {
-        self.heap.peek().map(|n| n.t_ms)
+    /// Arrival time of the next pending request, if any. (`&mut` because
+    /// the wheel scheduler refills its sorted run lazily on peek.)
+    pub fn peek_ms(&mut self) -> Option<f64> {
+        self.heap.peek_time()
+    }
+
+    /// Hot-path counters of the merge queue (see
+    /// [`crate::util::perf::PerfCounters`]).
+    pub fn perf(&self) -> PerfCounters {
+        self.heap.perf()
     }
 
     /// Pop the next request only if it arrives strictly before

@@ -1,7 +1,7 @@
-//! Discrete-event simulation core: a binary-heap event queue over virtual
-//! time driving per-node multi-server FIFO queues, laid out from the
-//! network's [`Topology`](crate::types::Topology) (any number of edge
-//! nodes).
+//! Discrete-event simulation core: a pluggable event queue (binary heap
+//! or timing wheel, see [`crate::sim::sched`]) over virtual time driving
+//! per-node multi-server FIFO queues, laid out from the network's
+//! [`Topology`](crate::types::Topology) (any number of edge nodes).
 //!
 //! # Virtual-clock model
 //!
@@ -56,9 +56,11 @@ use crate::monitor::StateView;
 use crate::sim::admission::{AdmissionPolicy, AdmitQuery, AdmitVerdict};
 use crate::sim::faults::{FaultPlan, FaultTarget, RetryPolicy};
 use crate::sim::latency::{ResponseModel, RoundCtx};
+use crate::sim::sched::{EventQueue, SchedEvent, SchedulerKind};
 use crate::sim::telemetry::{GaugeMode, Recorder, SpanKind};
 use crate::sim::workload::Request;
 use crate::types::{Action, Decision, ModelId, Placement, NUM_MODELS};
+use crate::util::perf::PerfCounters;
 use crate::util::rng::Rng;
 
 /// One finished request with its per-component latency breakdown.
@@ -145,6 +147,10 @@ pub struct DesOutcome {
     pub retries: usize,
     /// Retries that switched placement away from an unhealthy target.
     pub failovers: usize,
+    /// Hot-path counters of the run's event queue (scheduled/fired
+    /// events, queue work, peak depth, arena reuse). Pure observability:
+    /// outcomes are bitwise identical for any counter values.
+    pub perf: PerfCounters,
 }
 
 impl DesOutcome {
@@ -299,6 +305,12 @@ impl PartialOrd for Event {
     }
 }
 
+impl SchedEvent for Event {
+    fn time_ms(&self) -> f64 {
+        self.time
+    }
+}
+
 /// Multi-server FIFO queue.
 struct ServerQueue {
     servers: usize,
@@ -392,7 +404,7 @@ fn slot_place(slot: usize, num_edges: usize) -> Placement {
 
 /// Push a simulator-generated event (tie class 1, creation order). `gen`
 /// is the staleness stamp (see [`Event::gen`]); 0 on the fault-free path.
-fn push_event(heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, gen: u32, kind: EventKind) {
+fn push_event(heap: &mut EventQueue<Event>, seq: &mut u64, time: f64, gen: u32, kind: EventKind) {
     *seq += 1;
     heap.push(Event { time, prio: 1, seq: *seq, gen, kind });
 }
@@ -425,7 +437,7 @@ pub struct DesCore {
     link_queue_ms: f64,
     sigma: f64,
     // --- reusable scratch ---
-    heap: BinaryHeap<Event>,
+    heap: EventQueue<Event>,
     flights: Vec<InFlight>,
     nodes: Vec<ServerQueue>,
     links: Vec<ServerQueue>,
@@ -471,6 +483,9 @@ pub struct DesCore {
     fault_rng: Rng,
     /// Scratch buffer for collecting fault victims (borrow-friendly).
     fault_scratch: Vec<usize>,
+    /// Flight-arena pushes of the current run that landed in retained
+    /// capacity (no fresh allocation) — the `arena_reuse` perf counter.
+    arena_reuse: u64,
     /// Record per-event virtual times into `DesOutcome::event_times`
     /// (monotonicity witness). Off by default: it is test-only
     /// instrumentation that costs a push per event on the hot path.
@@ -488,8 +503,17 @@ impl Default for DesCore {
 }
 
 impl DesCore {
-    /// An empty core; call [`DesCore::install`] before running.
+    /// An empty core; call [`DesCore::install`] before running. Uses the
+    /// reference binary-heap scheduler; see [`DesCore::with_scheduler`].
     pub fn new() -> DesCore {
+        DesCore::with_scheduler(SchedulerKind::Heap)
+    }
+
+    /// An empty core whose event queue uses the given scheduler. Outcomes
+    /// are bitwise identical for either kind (the property suite pins
+    /// this); the wheel trades the heap's O(log n) sifts for O(1)
+    /// amortized calendar work on million-event traces.
+    pub fn with_scheduler(sched: SchedulerKind) -> DesCore {
         DesCore {
             users: 0,
             num_edges: 0,
@@ -499,7 +523,7 @@ impl DesCore {
             ingress: Vec::new(),
             link_queue_ms: 0.0,
             sigma: 0.0,
-            heap: BinaryHeap::new(),
+            heap: EventQueue::new(sched),
             flights: Vec::new(),
             nodes: Vec::new(),
             links: Vec::new(),
@@ -518,9 +542,15 @@ impl DesCore {
             fault_next_ms: f64::INFINITY,
             fault_rng: Rng::new(0),
             fault_scratch: Vec::new(),
+            arena_reuse: 0,
             collect_event_times: false,
             recorder: None,
         }
+    }
+
+    /// Which event scheduler this core runs on.
+    pub fn scheduler(&self) -> SchedulerKind {
+        self.heap.kind()
     }
 
     /// Precompute the service/path tables and node layout for one
@@ -759,7 +789,8 @@ impl DesCore {
     /// [`DesCore::run_until`] per control epoch.
     pub fn begin(&mut self, noise_seed: u64, out: &mut DesOutcome) {
         assert!(self.users > 0, "DesCore::install must precede begin");
-        self.heap.clear();
+        self.heap.clear(); // also resets the queue's perf counters
+        self.arena_reuse = 0;
         self.flights.clear();
         for q in self.nodes.iter_mut() {
             q.busy = 0;
@@ -817,6 +848,7 @@ impl DesCore {
         out.timed_out = 0;
         out.retries = 0;
         out.failovers = 0;
+        out.perf = PerfCounters::default();
     }
 
     /// Admit a time-ordered batch of arrivals, each routed by `decision`
@@ -948,6 +980,10 @@ impl DesCore {
         let path_ms = self.path[r.device * num_places + pslot];
         let idx = self.flights.len();
         let link_plus_1 = self.ingress[r.device * num_places + pslot];
+        if self.flights.len() < self.flights.capacity() {
+            // the push below lands in retained capacity: no allocation
+            self.arena_reuse += 1;
+        }
         self.flights.push(InFlight {
             id: r.id,
             device: r.device,
@@ -1069,7 +1105,7 @@ impl DesCore {
             // nothing left in flight the boundaries are unobservable).
             // One boundary per iteration, then re-peek: a failover retry
             // pushed at the boundary may pop before the old minimum.
-            let next_time = self.heap.peek().map(|e| e.time);
+            let next_time = self.heap.peek_time();
             let fault_due = {
                 let b = self.fault_next_ms;
                 let within = if INCLUSIVE { b <= limit_ms } else { b < limit_ms };
@@ -1627,6 +1663,8 @@ impl DesCore {
             let mean = if t > 0.0 { area / t } else { 0.0 };
             out.node_backlog.push(BacklogStats { max: self.bl_max[i] as usize, mean });
         }
+        out.perf = self.heap.perf();
+        out.perf.arena_reuse = self.arena_reuse;
     }
 
     /// Number of compute nodes in the installed layout (each end device,

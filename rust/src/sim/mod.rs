@@ -19,6 +19,7 @@ pub mod env;
 pub mod faults;
 pub mod latency;
 pub mod scenarios;
+pub mod sched;
 pub mod shard;
 pub mod telemetry;
 pub mod workload;
@@ -33,6 +34,7 @@ pub use env::{Dynamics, Env, StepOutcome};
 pub use faults::{FaultPlan, FaultSchedule, FaultState, FaultTarget, RetryPolicy};
 pub use latency::{ResponseModel, RoundCtx};
 pub use scenarios::{FleetScenario, FLEET_SCENARIOS};
+pub use sched::{EventQueue, SchedEvent, SchedulerKind};
 pub use shard::{
     run_sharded_open_loop, ShardPlan, ShardedDes, ShardedOutcome, StreamSummary,
 };

@@ -1,0 +1,532 @@
+//! Pluggable event schedulers for the DES hot loops.
+//!
+//! Every event loop in the crate ([`crate::sim::DesCore`], each
+//! [`crate::sim::ShardedDes`] shard, its cloud loop, and
+//! [`crate::sim::ArrivalStream`]'s k-way merge) drains a priority queue
+//! whose ordering is a *total* order — `(time, tie-class, sequence)` with
+//! no two distinct live events comparing equal. That totality is what
+//! makes the scheduler swappable: any correct priority queue pops the
+//! exact same sequence, so the trace, every RNG draw, and every digest
+//! are bitwise identical whichever implementation runs underneath (the
+//! `property_sched` suite pins this).
+//!
+//! [`EventQueue`] offers two implementations behind one API:
+//!
+//! * [`SchedulerKind::Heap`] — the original `std::collections::BinaryHeap`
+//!   (O(log n) push/pop), the reference path and the default.
+//! * [`SchedulerKind::Wheel`] — a calendar/ladder queue: a 1024-bucket
+//!   timing wheel over a lazily re-based time span, with a sorted
+//!   "bottom" run that pops from its tail. Pushes are O(1) appends for
+//!   events ahead of the cursor; only the bucket currently draining pays
+//!   a sort, and an occupancy bitmap makes cursor advancement a handful
+//!   of word scans. Amortized O(1) per event for the DES's
+//!   mostly-monotone schedules.
+//!
+//! The wheel's correctness argument, in three invariants:
+//!
+//! 1. every event in the bottom run is strictly earlier (by time) than
+//!    every event still in `buckets[next..]` — bucket index is
+//!    `floor((t - base)/width)`, so bottom events (index `< next`) have
+//!    `t < base + next*width` and calendar events (index `>= next`) have
+//!    `t >= base + next*width`;
+//! 2. every overflow event is at least `base + NB*width`, i.e. no earlier
+//!    than any calendar event, so rebasing only when the calendar is
+//!    exhausted never reorders;
+//! 3. within the bottom run events are fully sorted by the event's own
+//!    `Ord` (ties included), and equal-time events always share a bucket
+//!    (same index function), so the pop sequence equals the heap's.
+
+use std::collections::BinaryHeap;
+
+use crate::util::perf::{log2ish, PerfCounters};
+
+/// An event the scheduler can order. `Ord` must be the inverted DES
+/// comparator (*greater = earlier*, so `BinaryHeap`'s max pops first),
+/// and `time_ms` the virtual time that comparator leads with — the wheel
+/// buckets by time and breaks intra-bucket ties with the full `Ord`.
+pub trait SchedEvent: Copy + Ord {
+    fn time_ms(&self) -> f64;
+}
+
+/// Which queue implementation an engine runs on. Strictly observational:
+/// both kinds produce bitwise-identical traces (see module docs); the
+/// heap stays selectable so any wheel regression is one flag away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerKind {
+    #[default]
+    Heap,
+    Wheel,
+}
+
+impl SchedulerKind {
+    /// Parse the `[perf] scheduler` / `--scheduler` value.
+    pub fn by_name(name: &str) -> Option<SchedulerKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "heap" => Some(SchedulerKind::Heap),
+            "wheel" => Some(SchedulerKind::Wheel),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SchedulerKind::Heap => "heap",
+            SchedulerKind::Wheel => "wheel",
+        }
+    }
+}
+
+/// Calendar buckets per rebase span (power of two for the bitmap words).
+const NB: usize = 1024;
+const WORDS: usize = NB / 64;
+
+/// The timing-wheel implementation. See the module docs for the
+/// invariants; `bottom` is kept ascending by `Ord` (inverted comparator:
+/// the *last* element is the earliest event), so `Vec::pop` is the
+/// extract-min.
+#[derive(Clone)]
+struct Wheel<T> {
+    bottom: Vec<T>,
+    buckets: Vec<Vec<T>>,
+    /// Occupancy bitmap over `buckets` (bit b of word w = bucket 64w+b).
+    occupied: [u64; WORDS],
+    /// Events past the calendar span at push time; redistributed by the
+    /// next rebase. Always no earlier than any calendar event.
+    overflow: Vec<T>,
+    base_ms: f64,
+    width_ms: f64,
+    /// Cursor: buckets `< next` are drained (their stragglers go to the
+    /// bottom run); `NB` means the calendar is exhausted.
+    next: usize,
+    len: usize,
+}
+
+impl<T: SchedEvent> Wheel<T> {
+    fn new() -> Wheel<T> {
+        Wheel {
+            bottom: Vec::new(),
+            buckets: (0..NB).map(|_| Vec::new()).collect(),
+            occupied: [0; WORDS],
+            overflow: Vec::new(),
+            // -inf base sends every finite push to the overflow, so the
+            // first pop rebases over whatever accumulated — the calendar
+            // lazily fits itself to the workload's actual time span.
+            base_ms: f64::NEG_INFINITY,
+            width_ms: 1.0,
+            next: NB,
+            len: 0,
+        }
+    }
+
+    /// Bucket index of time `t`. Rust float→int casts saturate: +inf /
+    /// past-the-calendar times land at `usize::MAX` (overflow), negative
+    /// offsets at 0 (bottom or bucket 0) — both order-safe.
+    fn index_of(&self, t: f64) -> usize {
+        ((t - self.base_ms) / self.width_ms) as usize
+    }
+
+    fn push(&mut self, ev: T, perf: &mut PerfCounters) {
+        self.len += 1;
+        let idx = self.index_of(ev.time_ms());
+        if idx < self.next {
+            // Behind the cursor: join the sorted bottom run in place.
+            let at = self.bottom.partition_point(|e| e < &ev);
+            self.bottom.insert(at, ev);
+            perf.queue_ops += 1 + log2ish(self.bottom.len());
+        } else if idx < NB {
+            self.buckets[idx].push(ev);
+            self.occupied[idx / 64] |= 1u64 << (idx % 64);
+            perf.queue_ops += 1;
+        } else {
+            self.overflow.push(ev);
+            perf.queue_ops += 1;
+        }
+    }
+
+    fn pop(&mut self, perf: &mut PerfCounters) -> Option<T> {
+        if self.bottom.is_empty() {
+            self.refill(perf);
+        }
+        let ev = self.bottom.pop()?;
+        self.len -= 1;
+        perf.queue_ops += 1;
+        Some(ev)
+    }
+
+    /// `&mut`: surfacing the earliest event may advance the cursor.
+    /// Refilling never changes the pop sequence, only when work happens.
+    fn peek(&mut self, perf: &mut PerfCounters) -> Option<&T> {
+        if self.bottom.is_empty() {
+            self.refill(perf);
+        }
+        self.bottom.last()
+    }
+
+    /// First occupied bucket at or after the cursor, via the bitmap
+    /// (one queue-op per word examined — the actual work done).
+    fn next_occupied(&self, perf: &mut PerfCounters) -> Option<usize> {
+        if self.next >= NB {
+            return None;
+        }
+        let mut w = self.next / 64;
+        let mut word = self.occupied[w] & (!0u64 << (self.next % 64));
+        loop {
+            perf.queue_ops += 1;
+            if word != 0 {
+                return Some(w * 64 + word.trailing_zeros() as usize);
+            }
+            w += 1;
+            if w >= WORDS {
+                return None;
+            }
+            word = self.occupied[w];
+        }
+    }
+
+    /// Move the next non-empty bucket into the bottom run (sorted), or
+    /// rebase the calendar onto the overflow when the span is exhausted.
+    fn refill(&mut self, perf: &mut PerfCounters) {
+        debug_assert!(self.bottom.is_empty());
+        loop {
+            match self.next_occupied(perf) {
+                Some(i) => {
+                    std::mem::swap(&mut self.bottom, &mut self.buckets[i]);
+                    self.occupied[i / 64] &= !(1u64 << (i % 64));
+                    self.next = i + 1;
+                    // Full-comparator sort: ascending by the inverted Ord
+                    // puts the earliest event last, where Vec::pop is.
+                    self.bottom.sort_unstable();
+                    let m = self.bottom.len() as u64;
+                    perf.queue_ops += m * (1 + log2ish(self.bottom.len()));
+                    return;
+                }
+                None => {
+                    self.next = NB;
+                    if self.overflow.is_empty() {
+                        return;
+                    }
+                    self.rebase(perf);
+                }
+            }
+        }
+    }
+
+    /// Re-fit the calendar to the overflow's time span and redistribute.
+    /// Called only with an empty bottom and an exhausted calendar, and
+    /// overflow events are never earlier than anything already popped or
+    /// pending (invariant 2), so ordering is preserved.
+    fn rebase(&mut self, perf: &mut PerfCounters) {
+        let mut lo = f64::INFINITY;
+        let mut hi = f64::NEG_INFINITY;
+        for ev in &self.overflow {
+            let t = ev.time_ms();
+            if t < lo {
+                lo = t;
+            }
+            if t > hi {
+                hi = t;
+            }
+        }
+        let span = hi - lo;
+        self.base_ms = lo;
+        // NB-1 divisions so the maximum maps to index NB-1; a
+        // single-instant batch takes any positive width.
+        self.width_ms = if span > 0.0 { span / (NB - 1) as f64 } else { 1.0 };
+        self.next = 0;
+        perf.queue_ops += 2 * self.overflow.len() as u64;
+        for ev in std::mem::take(&mut self.overflow) {
+            let idx = self.index_of(ev.time_ms()).min(NB - 1);
+            self.buckets[idx].push(ev);
+            self.occupied[idx / 64] |= 1u64 << (idx % 64);
+        }
+    }
+
+    fn clear(&mut self) {
+        self.bottom.clear();
+        for w in 0..WORDS {
+            let mut word = self.occupied[w];
+            while word != 0 {
+                let b = word.trailing_zeros() as usize;
+                self.buckets[w * 64 + b].clear();
+                word &= word - 1;
+            }
+        }
+        self.occupied = [0; WORDS];
+        self.overflow.clear();
+        self.base_ms = f64::NEG_INFINITY;
+        self.width_ms = 1.0;
+        self.next = NB;
+        self.len = 0;
+    }
+}
+
+#[derive(Clone)]
+enum Imp<T> {
+    Heap(BinaryHeap<T>),
+    Wheel(Wheel<T>),
+}
+
+/// The engines' event queue: one API, two interchangeable scheduler
+/// implementations, with [`PerfCounters`] maintained on the hot path.
+/// Counters are observability only — they never influence ordering.
+#[derive(Clone)]
+pub struct EventQueue<T: SchedEvent> {
+    imp: Imp<T>,
+    perf: PerfCounters,
+}
+
+impl<T: SchedEvent> EventQueue<T> {
+    pub fn new(kind: SchedulerKind) -> EventQueue<T> {
+        let imp = match kind {
+            SchedulerKind::Heap => Imp::Heap(BinaryHeap::new()),
+            SchedulerKind::Wheel => Imp::Wheel(Wheel::new()),
+        };
+        EventQueue { imp, perf: PerfCounters::default() }
+    }
+
+    pub fn kind(&self) -> SchedulerKind {
+        match &self.imp {
+            Imp::Heap(_) => SchedulerKind::Heap,
+            Imp::Wheel(_) => SchedulerKind::Wheel,
+        }
+    }
+
+    pub fn push(&mut self, ev: T) {
+        match &mut self.imp {
+            Imp::Heap(h) => {
+                // Modelled sift-up cost; see util::perf docs.
+                self.perf.queue_ops += 1 + log2ish(h.len());
+                h.push(ev);
+            }
+            Imp::Wheel(w) => w.push(ev, &mut self.perf),
+        }
+        self.perf.scheduled += 1;
+        let depth = self.len() as u64;
+        if depth > self.perf.peak_depth {
+            self.perf.peak_depth = depth;
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<T> {
+        let ev = match &mut self.imp {
+            Imp::Heap(h) => {
+                // Modelled sift-down cost (two comparisons per level).
+                self.perf.queue_ops += 1 + 2 * log2ish(h.len());
+                h.pop()
+            }
+            Imp::Wheel(w) => w.pop(&mut self.perf),
+        };
+        if ev.is_some() {
+            self.perf.fired += 1;
+        }
+        ev
+    }
+
+    /// `&mut self` because the wheel may advance its cursor to surface
+    /// the earliest event; the pop sequence is unaffected.
+    pub fn peek(&mut self) -> Option<&T> {
+        match &mut self.imp {
+            Imp::Heap(h) => h.peek(),
+            Imp::Wheel(w) => w.peek(&mut self.perf),
+        }
+    }
+
+    /// Virtual time of the earliest pending event.
+    pub fn peek_time(&mut self) -> Option<f64> {
+        self.peek().map(|e| e.time_ms())
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.imp {
+            Imp::Heap(h) => h.len(),
+            Imp::Wheel(w) => w.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop all pending events and reset the counters (a fresh run).
+    pub fn clear(&mut self) {
+        match &mut self.imp {
+            Imp::Heap(h) => h.clear(),
+            Imp::Wheel(w) => w.clear(),
+        }
+        self.perf = PerfCounters::default();
+    }
+
+    /// Counters accumulated since construction or the last `clear`.
+    pub fn perf(&self) -> PerfCounters {
+        self.perf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// A DES-shaped event: inverted `(time, prio, seq)` comparator,
+    /// mirroring `sim::des::Event` exactly.
+    #[derive(Debug, Clone, Copy)]
+    struct Ev {
+        time: f64,
+        prio: u8,
+        seq: u64,
+    }
+
+    impl PartialEq for Ev {
+        fn eq(&self, other: &Self) -> bool {
+            self.time == other.time && self.prio == other.prio && self.seq == other.seq
+        }
+    }
+    impl Eq for Ev {}
+    impl Ord for Ev {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            other
+                .time
+                .total_cmp(&self.time)
+                .then_with(|| other.prio.cmp(&self.prio))
+                .then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+    impl PartialOrd for Ev {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl SchedEvent for Ev {
+        fn time_ms(&self) -> f64 {
+            self.time
+        }
+    }
+
+    /// Drive both queues through an identical randomized push/pop script
+    /// (bursty pushes, exact ties, both tie classes, DES-style follow-up
+    /// pushes at popped times) and require the identical pop sequence.
+    #[test]
+    fn wheel_pops_exactly_like_the_heap() {
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(0xC0FFEE ^ seed);
+            let mut heap = EventQueue::<Ev>::new(SchedulerKind::Heap);
+            let mut wheel = EventQueue::<Ev>::new(SchedulerKind::Wheel);
+            let mut seq = 0u64;
+            let mut clock = 0.0f64;
+            let mut popped = 0usize;
+            let mk = |rng: &mut Rng, seq: &mut u64, at: f64| {
+                *seq += 1;
+                Ev {
+                    // cluster times to force exact-time ties
+                    time: at + (rng.below(400) as f64) * 0.25,
+                    prio: (rng.below(2)) as u8,
+                    seq: *seq,
+                }
+            };
+            // initial burst (the "admit the whole trace" shape)
+            for _ in 0..300 {
+                let ev = mk(&mut rng, &mut seq, 0.0);
+                heap.push(ev);
+                wheel.push(ev);
+            }
+            for _ in 0..4_000 {
+                if rng.bool(0.55) && !heap.is_empty() {
+                    assert_eq!(heap.peek_time(), wheel.peek_time());
+                    let a = heap.pop().unwrap();
+                    let b = wheel.pop().unwrap();
+                    assert_eq!(a, b, "seed {seed}: pop #{popped} diverged");
+                    assert!(a.time >= clock, "time went backwards");
+                    clock = a.time;
+                    popped += 1;
+                    // DES shape: a pop often schedules follow-ups at or
+                    // after the popped time (including exactly at it).
+                    if rng.bool(0.7) {
+                        let ev = mk(&mut rng, &mut seq, clock);
+                        heap.push(ev);
+                        wheel.push(ev);
+                    }
+                } else {
+                    // bursts far ahead exercise overflow + rebase
+                    let base = clock + if rng.bool(0.2) { 5_000.0 } else { 0.0 };
+                    let ev = mk(&mut rng, &mut seq, base);
+                    heap.push(ev);
+                    wheel.push(ev);
+                }
+                assert_eq!(heap.len(), wheel.len());
+            }
+            // full drain must agree to the last event
+            while let Some(a) = heap.pop() {
+                let b = wheel.pop().unwrap();
+                assert_eq!(a, b, "seed {seed}: drain diverged");
+            }
+            assert!(wheel.pop().is_none());
+            assert!(wheel.is_empty());
+        }
+    }
+
+    #[test]
+    fn exact_ties_break_on_prio_then_seq_in_both() {
+        for kind in [SchedulerKind::Heap, SchedulerKind::Wheel] {
+            let mut q = EventQueue::<Ev>::new(kind);
+            // same time, mixed classes, shuffled insertion order
+            q.push(Ev { time: 10.0, prio: 1, seq: 7 });
+            q.push(Ev { time: 10.0, prio: 0, seq: 9 });
+            q.push(Ev { time: 10.0, prio: 1, seq: 3 });
+            q.push(Ev { time: 10.0, prio: 0, seq: 2 });
+            q.push(Ev { time: 5.0, prio: 1, seq: 8 });
+            let order: Vec<(u8, u64)> =
+                std::iter::from_fn(|| q.pop()).map(|e| (e.prio, e.seq)).collect();
+            assert_eq!(
+                order,
+                vec![(1, 8), (0, 2), (0, 9), (1, 3), (1, 7)],
+                "{kind:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn clear_resets_events_and_counters() {
+        let mut q = EventQueue::<Ev>::new(SchedulerKind::Wheel);
+        for i in 0..100 {
+            q.push(Ev { time: i as f64, prio: 1, seq: i });
+        }
+        q.pop();
+        assert!(q.perf().scheduled == 100 && q.perf().fired == 1);
+        assert!(q.perf().peak_depth == 100 && q.perf().queue_ops > 0);
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.perf(), PerfCounters::default());
+        // the queue is reusable after clear
+        q.push(Ev { time: 1.0, prio: 0, seq: 1 });
+        assert_eq!(q.pop().map(|e| e.seq), Some(1));
+    }
+
+    #[test]
+    fn counters_track_scheduled_fired_depth() {
+        for kind in [SchedulerKind::Heap, SchedulerKind::Wheel] {
+            let mut q = EventQueue::<Ev>::new(kind);
+            for i in 0..50 {
+                q.push(Ev { time: (i % 7) as f64, prio: 1, seq: i });
+            }
+            for _ in 0..20 {
+                q.pop();
+            }
+            let p = q.perf();
+            assert_eq!(p.scheduled, 50, "{kind:?}");
+            assert_eq!(p.fired, 20, "{kind:?}");
+            assert_eq!(p.peak_depth, 50, "{kind:?}");
+            assert!(p.queue_ops > 0, "{kind:?}");
+            assert_eq!(q.len(), 30, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        assert_eq!(SchedulerKind::by_name("heap"), Some(SchedulerKind::Heap));
+        assert_eq!(SchedulerKind::by_name("WHEEL"), Some(SchedulerKind::Wheel));
+        assert_eq!(SchedulerKind::by_name("ladder"), None);
+        assert_eq!(SchedulerKind::Heap.label(), "heap");
+        assert_eq!(SchedulerKind::Wheel.label(), "wheel");
+        assert_eq!(SchedulerKind::default(), SchedulerKind::Heap);
+    }
+}

@@ -54,15 +54,17 @@
 //! [`StreamSummary::digest`], an order-insensitive XOR of per-request
 //! hashes over the exact departure bits.
 
-use std::collections::{BinaryHeap, VecDeque};
+use std::collections::VecDeque;
 
 use crate::monitor::StateView;
 use crate::sim::arrivals::{ArrivalProcess, ArrivalStream, IdMode};
 use crate::sim::des::BacklogStats;
 use crate::sim::drift::DriftSchedule;
 use crate::sim::latency::ResponseModel;
+use crate::sim::sched::{EventQueue, SchedEvent, SchedulerKind};
 use crate::sim::workload::Request;
 use crate::types::{Decision, Placement};
+use crate::util::perf::PerfCounters;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 
@@ -193,11 +195,15 @@ pub struct ShardPlan {
     /// default: the minimum cloud path overhead over all devices (the
     /// shortest delay any cloud-bound emission can carry).
     pub window_ms: f64,
+    /// Event scheduler for every shard loop, the cloud loop, and the
+    /// arrival streams. Outcomes are bitwise identical for either kind
+    /// (the property suite pins it).
+    pub sched: SchedulerKind,
 }
 
 impl Default for ShardPlan {
     fn default() -> ShardPlan {
-        ShardPlan { shards: 1, window_ms: 0.0 }
+        ShardPlan { shards: 1, window_ms: 0.0, sched: SchedulerKind::Heap }
     }
 }
 
@@ -250,7 +256,13 @@ impl PartialOrd for Event {
     }
 }
 
-fn push_event(heap: &mut BinaryHeap<Event>, seq: &mut u64, time: f64, kind: Ev) {
+impl SchedEvent for Event {
+    fn time_ms(&self) -> f64 {
+        self.time
+    }
+}
+
+fn push_event(heap: &mut EventQueue<Event>, seq: &mut u64, time: f64, kind: Ev) {
     *seq += 1;
     heap.push(Event { time, prio: 1, seq: *seq, kind });
 }
@@ -287,6 +299,8 @@ struct FlightSlab {
     slots: Vec<Flight>,
     free: Vec<usize>,
     live: usize,
+    /// Slots recycled from the free list — the arena-reuse perf counter.
+    reuse: u64,
 }
 
 impl FlightSlab {
@@ -294,6 +308,7 @@ impl FlightSlab {
         self.live += 1;
         match self.free.pop() {
             Some(i) => {
+                self.reuse += 1;
                 self.slots[i] = f;
                 i
             }
@@ -349,7 +364,7 @@ struct ShardSim {
     sigma: f64,
     noise_seed: u64,
     stream: ArrivalStream,
-    heap: BinaryHeap<Event>,
+    heap: EventQueue<Event>,
     seq: u64,
     slab: FlightSlab,
     /// Cloud-bound departures of the current window (drained on merge).
@@ -548,7 +563,7 @@ impl ShardSim {
 /// the owning shard) and no arrivals of its own.
 struct CloudSim {
     queue: ServerQueue,
-    heap: BinaryHeap<Event>,
+    heap: EventQueue<Event>,
     seq: u64,
     slab: FlightSlab,
     summary: StreamSummary,
@@ -564,10 +579,10 @@ struct CloudSim {
 }
 
 impl CloudSim {
-    fn new(vcpus: usize) -> CloudSim {
+    fn new(vcpus: usize, sched: SchedulerKind) -> CloudSim {
         CloudSim {
             queue: ServerQueue::new(vcpus),
-            heap: BinaryHeap::new(),
+            heap: EventQueue::new(sched),
             seq: 0,
             slab: FlightSlab::default(),
             summary: StreamSummary::default(),
@@ -713,6 +728,10 @@ pub struct ShardedOutcome {
     pub cloud_backlog: BacklogStats,
     /// Largest backlog any device node ever held.
     pub peak_device_backlog: usize,
+    /// Hot-path counters merged over every event queue (shards + cloud +
+    /// arrival streams) with slab-recycle hits as `arena_reuse`. Pure
+    /// observability: outcomes are bitwise identical for any values.
+    pub perf: PerfCounters,
 }
 
 impl ShardedOutcome {
@@ -832,7 +851,7 @@ impl ShardedDes {
             let links: Vec<ServerQueue> =
                 owned_edges.iter().map(|_| ServerQueue::new(1)).collect();
             let n_nodes = nodes.len();
-            let stream = ArrivalStream::with_filter(
+            let stream = ArrivalStream::with_filter_sched(
                 process,
                 users,
                 horizon_ms,
@@ -840,6 +859,7 @@ impl ShardedDes {
                 drift,
                 IdMode::DeviceTagged,
                 move |d| (d % num_edges) % shards == sid,
+                plan.sched,
             );
             sims.push(ShardSim {
                 devices,
@@ -853,7 +873,7 @@ impl ShardedDes {
                 sigma: cal.noise_sigma,
                 noise_seed,
                 stream,
-                heap: BinaryHeap::new(),
+                heap: EventQueue::new(plan.sched),
                 seq: 0,
                 slab: FlightSlab::default(),
                 outbox: Vec::new(),
@@ -881,7 +901,7 @@ impl ShardedDes {
 
         ShardedDes {
             sims,
-            cloud: CloudSim::new(topo.cloud.vcpus),
+            cloud: CloudSim::new(topo.cloud.vcpus, plan.sched),
             horizon_ms,
             window_ms,
             shards,
@@ -969,6 +989,15 @@ impl ShardedDes {
             let (max, area) = sim.backlog_of(sim.n_devices() + e / self.shards);
             edge_backlog.push(stats(max, area));
         }
+        let mut perf = self.cloud.heap.perf();
+        perf.arena_reuse = self.cloud.slab.reuse;
+        for sim in &sims {
+            let mut p = sim.heap.perf();
+            p.merge(&sim.stream.perf());
+            p.arena_reuse = sim.slab.reuse;
+            perf.merge(&p);
+        }
+
         let cloud_backlog = stats(self.cloud.bl_max as usize, self.cloud.bl_area);
         let peak_device_backlog = sims
             .iter()
@@ -991,6 +1020,7 @@ impl ShardedDes {
             edge_backlog,
             cloud_backlog,
             peak_device_backlog,
+            perf,
         }
     }
 }
@@ -1090,7 +1120,7 @@ mod tests {
             &state,
             &decision,
             &drift,
-            ShardPlan { shards: 1, window_ms: 0.0 },
+            ShardPlan { shards: 1, window_ms: 0.0, ..Default::default() },
             None,
         );
         assert!(base.conservation_ok, "serial baseline must conserve requests");
@@ -1104,7 +1134,7 @@ mod tests {
                 &state,
                 &decision,
                 &drift,
-                ShardPlan { shards, window_ms: 0.0 },
+                ShardPlan { shards, window_ms: 0.0, ..Default::default() },
                 Some(&pool),
             );
             assert!(got.conservation_ok, "{shards} shards");
@@ -1152,7 +1182,7 @@ mod tests {
             &state,
             &decision,
             &drift,
-            ShardPlan { shards: 2, window_ms: 0.0 },
+            ShardPlan { shards: 2, window_ms: 0.0, ..Default::default() },
             None,
         );
         assert!(auto.window_ms > 0.0, "auto window resolves to d_min");
@@ -1162,7 +1192,7 @@ mod tests {
                 &state,
                 &decision,
                 &drift,
-                ShardPlan { shards: 2, window_ms },
+                ShardPlan { shards: 2, window_ms, ..Default::default() },
                 None,
             );
             assert_eq!(got.summary.digest, auto.summary.digest, "window {window_ms}");
@@ -1192,7 +1222,7 @@ mod tests {
             13,
             99,
             &DriftSchedule::none(),
-            ShardPlan { shards: 2, window_ms: 0.0 },
+            ShardPlan { shards: 2, window_ms: 0.0, ..Default::default() },
             None,
         );
         assert_eq!(sharded.offered, trace.len() as u64);
@@ -1231,7 +1261,7 @@ mod tests {
             7,
             11,
             &DriftSchedule::none(),
-            ShardPlan { shards: 3, window_ms: 0.0 },
+            ShardPlan { shards: 3, window_ms: 0.0, ..Default::default() },
             None,
         );
         assert!(out.conservation_ok, "offered == completed + live at every window");
@@ -1282,7 +1312,7 @@ mod tests {
             3,
             5,
             &DriftSchedule::none(),
-            ShardPlan { shards: 4, window_ms: 0.0 },
+            ShardPlan { shards: 4, window_ms: 0.0, ..Default::default() },
             None,
         );
         assert!(out.offered > 2_500, "offered {}", out.offered);
@@ -1314,7 +1344,7 @@ mod tests {
             1,
             1,
             &DriftSchedule::none(),
-            ShardPlan { shards: 2, window_ms: 0.0 },
+            ShardPlan { shards: 2, window_ms: 0.0, ..Default::default() },
             None,
         );
     }
@@ -1333,7 +1363,7 @@ mod tests {
             1,
             1,
             &DriftSchedule::none(),
-            ShardPlan { shards: 3, window_ms: 0.0 },
+            ShardPlan { shards: 3, window_ms: 0.0, ..Default::default() },
             None,
         );
     }
@@ -1353,8 +1383,46 @@ mod tests {
             1,
             1,
             &drift,
-            ShardPlan { shards: 1, window_ms: 0.0 },
+            ShardPlan { shards: 1, window_ms: 0.0, ..Default::default() },
             None,
         );
+    }
+
+    #[test]
+    fn wheel_scheduler_is_bitwise_identical_and_counts_queue_work() {
+        let (model, state) = setup(8, 4, 0.02);
+        let decision = mixed(8, 4);
+        let drift = DriftSchedule::parse("3000:rate=2").unwrap();
+        let heap = run_with(
+            &model,
+            &state,
+            &decision,
+            &drift,
+            ShardPlan { shards: 2, window_ms: 0.0, ..Default::default() },
+            None,
+        );
+        let wheel = run_with(
+            &model,
+            &state,
+            &decision,
+            &drift,
+            ShardPlan { shards: 2, window_ms: 0.0, sched: SchedulerKind::Wheel },
+            None,
+        );
+        assert_eq!(wheel.summary.digest, heap.summary.digest);
+        assert_eq!(wheel.summary.completed, heap.summary.completed);
+        assert_eq!(wheel.summary.hist, heap.summary.hist);
+        assert_eq!(wheel.makespan_ms.to_bits(), heap.makespan_ms.to_bits());
+        // same shard count => identical fold order => the sum is bitwise
+        assert_eq!(
+            wheel.summary.sum_response_ms.to_bits(),
+            heap.summary.sum_response_ms.to_bits()
+        );
+        // identical event sequences; only the queue-work model differs
+        assert_eq!(wheel.perf.scheduled, heap.perf.scheduled);
+        assert_eq!(wheel.perf.fired, heap.perf.fired);
+        assert_eq!(wheel.perf.arena_reuse, heap.perf.arena_reuse);
+        assert!(heap.perf.queue_ops > 0 && wheel.perf.queue_ops > 0);
+        assert!(heap.perf.peak_depth > 0 && wheel.perf.peak_depth == heap.perf.peak_depth);
     }
 }

@@ -7,6 +7,7 @@ pub mod cli;
 pub mod json;
 pub mod logsys;
 pub mod minitoml;
+pub mod perf;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,95 @@
+//! Hot-path performance counters for the event engines.
+//!
+//! Every [`crate::sim::EventQueue`] carries a [`PerfCounters`] block that
+//! its push/pop paths update; the engines copy the block into
+//! [`crate::sim::DesOutcome`] / [`crate::sim::ShardedOutcome`] at
+//! finalize, and the `scale` experiment + `BENCH_des` rows surface the
+//! numbers per cell. Counting never feeds back into behavior — runs are
+//! bitwise identical with any counter values — so the block is pure
+//! observability.
+//!
+//! `queue_ops` is the one modelled (not raw-counted) field on the heap
+//! path: `std::collections::BinaryHeap` exposes no comparison hooks, so
+//! heap pushes charge `1 + log2(len)` and pops `1 + 2*log2(len)` — the
+//! textbook sift bounds. The wheel path counts its actual work (bucket
+//! appends, sorted inserts, per-bucket sorts, occupancy-word scans,
+//! rebase passes), which is what makes the heap-vs-wheel op comparison in
+//! `experiment scale` a like-for-like cost statement.
+
+/// Counters for one event-queue lifetime (reset by `EventQueue::clear`).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PerfCounters {
+    /// Events pushed into the queue.
+    pub scheduled: u64,
+    /// Events popped (fired) from the queue.
+    pub fired: u64,
+    /// Queue work performed: modelled sift cost on the heap path, actual
+    /// touched-slot count on the wheel path (see module docs).
+    pub queue_ops: u64,
+    /// Largest number of pending events ever held.
+    pub peak_depth: u64,
+    /// Arena slots recycled instead of freshly allocated (flight slabs /
+    /// in-flight vectors) — threaded in by the owning engine, not the
+    /// queue itself.
+    pub arena_reuse: u64,
+}
+
+impl PerfCounters {
+    /// Fold another block in (shard/cloud/stream merge): sums everywhere,
+    /// max for the depth peak.
+    pub fn merge(&mut self, other: &PerfCounters) {
+        self.scheduled += other.scheduled;
+        self.fired += other.fired;
+        self.queue_ops += other.queue_ops;
+        if other.peak_depth > self.peak_depth {
+            self.peak_depth = other.peak_depth;
+        }
+        self.arena_reuse += other.arena_reuse;
+    }
+}
+
+/// `ceil(log2(n + 1))`-ish integer: 0 for 0, 1 for 1, 2 for 2..=3, …
+/// The sift-cost unit for the modelled heap ops.
+pub fn log2ish(n: usize) -> u64 {
+    (usize::BITS - n.leading_zeros()) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_and_maxes() {
+        let mut a = PerfCounters {
+            scheduled: 10,
+            fired: 9,
+            queue_ops: 40,
+            peak_depth: 5,
+            arena_reuse: 2,
+        };
+        let b = PerfCounters {
+            scheduled: 3,
+            fired: 3,
+            queue_ops: 10,
+            peak_depth: 9,
+            arena_reuse: 1,
+        };
+        a.merge(&b);
+        assert_eq!(a.scheduled, 13);
+        assert_eq!(a.fired, 12);
+        assert_eq!(a.queue_ops, 50);
+        assert_eq!(a.peak_depth, 9);
+        assert_eq!(a.arena_reuse, 3);
+    }
+
+    #[test]
+    fn log2ish_brackets() {
+        assert_eq!(log2ish(0), 0);
+        assert_eq!(log2ish(1), 1);
+        assert_eq!(log2ish(2), 2);
+        assert_eq!(log2ish(3), 2);
+        assert_eq!(log2ish(4), 3);
+        assert_eq!(log2ish(1023), 10);
+        assert_eq!(log2ish(1024), 11);
+    }
+}

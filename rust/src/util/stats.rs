@@ -125,7 +125,10 @@ impl Sample {
 
     pub fn pct(&mut self, p: f64) -> f64 {
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp, not partial_cmp().unwrap(): a single NaN sample
+            // must not panic the whole report (NaNs sort to the top and
+            // only perturb the quantiles they land in).
+            self.xs.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
         percentile(&self.xs, p)
@@ -268,6 +271,21 @@ mod tests {
         assert!((s.pct(50.0) - 50.5).abs() < 1e-9);
         assert_eq!(s.pct(100.0), 100.0);
         assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sample_pct_survives_nan() {
+        // regression: partial_cmp().unwrap() panicked on the first NaN
+        let mut s = Sample::new();
+        for i in 1..=9 {
+            s.push(i as f64);
+        }
+        s.push(f64::NAN);
+        // NaN sorts above every finite value under total_cmp, so low
+        // quantiles are still the finite order statistics.
+        assert_eq!(s.pct(0.0), 1.0);
+        assert!((s.pct(50.0) - 5.5).abs() < 1e-9);
+        assert!(s.pct(100.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,356 @@
+//! Property tests of the event-queue scheduler swap (PR 9): the
+//! hierarchical timing wheel must be BITWISE indistinguishable from the
+//! `BinaryHeap` reference — identical completion streams, digests,
+//! counters and backlog statistics, zero extra RNG draws — across random
+//! workloads, admission policies, fault plans and shard counts. The
+//! wheel preserves the exact `(time, prio, seq)` total order, so any
+//! divergence here is a scheduler bug, never a tolerance issue.
+
+use eeco::monitor::TopoState;
+use eeco::prelude::*;
+use eeco::sim::admission::{stamp_deadlines, AdmissionPolicy, AdmitAll, DeadlineShed, Defer, Degrade};
+use eeco::sim::arrivals::{schedule, ArrivalProcess};
+use eeco::sim::faults::FaultEvent;
+use eeco::sim::{
+    des, run_sharded_open_loop, DriftSchedule, FaultPlan, FaultSchedule, FaultState,
+    FaultTarget, ResponseModel, RetryPolicy, SchedulerKind, ShardPlan,
+};
+use eeco::util::prop::forall;
+use eeco::util::rng::Rng;
+
+fn multi_edge_model(users: usize, edges: usize) -> ResponseModel {
+    ResponseModel::new(eeco::network::Network::with_edges(
+        Scenario::exp_b(users),
+        Calibration::default(),
+        edges,
+    ))
+}
+
+fn rand_decision_for(rng: &mut Rng, topo: &eeco::types::Topology) -> Decision {
+    Decision(
+        (0..topo.users())
+            .map(|_| topo.action_from_index(rng.below(topo.actions_per_device())))
+            .collect(),
+    )
+}
+
+fn rand_process(rng: &mut Rng) -> ArrivalProcess {
+    match rng.below(3) {
+        0 => ArrivalProcess::SyncRounds { period_ms: rng.range_f64(200.0, 2000.0) },
+        1 => ArrivalProcess::Poisson { rate_per_s: rng.range_f64(0.2, 4.0) },
+        _ => ArrivalProcess::Mmpp {
+            calm_rate_per_s: rng.range_f64(0.2, 1.0),
+            burst_rate_per_s: rng.range_f64(2.0, 6.0),
+            mean_phase_ms: rng.range_f64(500.0, 3000.0),
+        },
+    }
+}
+
+fn rand_fault_schedule(rng: &mut Rng, edges: usize, horizon: f64) -> FaultSchedule {
+    let n = rng.range(1, 5);
+    let mut t = rng.range_f64(100.0, horizon / 4.0);
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        let target = match rng.below(3) {
+            0 => FaultTarget::Edge(rng.below(edges)),
+            1 => FaultTarget::Cloud,
+            _ => FaultTarget::Net,
+        };
+        let state = match rng.below(3) {
+            0 => FaultState::Down,
+            1 => FaultState::Up,
+            _ => FaultState::Flap {
+                period_ms: rng.range_f64(200.0, 1_000.0),
+                duty: rng.range_f64(0.1, 0.9),
+            },
+        };
+        events.push(FaultEvent { start_ms: t, target, state });
+        t += rng.range_f64(200.0, horizon / 3.0);
+    }
+    FaultSchedule::new(events).expect("strictly increasing times")
+}
+
+fn rand_retry(rng: &mut Rng) -> RetryPolicy {
+    match rng.below(3) {
+        0 => RetryPolicy::None,
+        1 => RetryPolicy::Backoff {
+            budget: rng.range(1, 4) as u32,
+            base_ms: rng.range_f64(20.0, 200.0),
+        },
+        _ => RetryPolicy::Failover {
+            budget: rng.range(1, 4) as u32,
+            base_ms: rng.range_f64(20.0, 200.0),
+        },
+    }
+}
+
+/// Bitwise comparison of two outcomes: completion stream (order, ids and
+/// every timing component), lifecycle counters and makespan.
+fn check_outcomes(a: &des::DesOutcome, b: &des::DesOutcome) -> Result<(), String> {
+    if a.completed.len() != b.completed.len() {
+        return Err(format!(
+            "completion counts diverged: heap {} vs wheel {}",
+            a.completed.len(),
+            b.completed.len()
+        ));
+    }
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        if x.id != y.id {
+            return Err(format!("departure order diverged: {} vs {}", x.id, y.id));
+        }
+        let pairs = [
+            ("response", x.response_ms, y.response_ms),
+            ("depart", x.depart_ms, y.depart_ms),
+            ("link_wait", x.link_wait_ms, y.link_wait_ms),
+            ("queue", x.queue_ms, y.queue_ms),
+            ("service", x.service_ms, y.service_ms),
+        ];
+        for (what, p, q) in pairs {
+            if p.to_bits() != q.to_bits() {
+                return Err(format!("req {}: {what} {p} != {q}", x.id));
+            }
+        }
+    }
+    if a.makespan_ms.to_bits() != b.makespan_ms.to_bits() {
+        return Err(format!("makespan {} vs {}", a.makespan_ms, b.makespan_ms));
+    }
+    if (a.shed, a.deferrals, a.degraded) != (b.shed, b.deferrals, b.degraded) {
+        return Err("admission counters diverged".into());
+    }
+    if (a.failed, a.timed_out, a.retries, a.failovers)
+        != (b.failed, b.timed_out, b.retries, b.failovers)
+    {
+        return Err("failure-lifecycle counters diverged".into());
+    }
+    for (i, (x, y)) in a.node_backlog.iter().zip(&b.node_backlog).enumerate() {
+        if x.max != y.max || x.mean.to_bits() != y.mean.to_bits() {
+            return Err(format!("node {i} backlog diverged: {x:?} vs {y:?}"));
+        }
+    }
+    Ok(())
+}
+
+/// Open loop, no admission, no faults: wheel == heap bit for bit, and
+/// both queues report identical scheduled/fired counts (same events)
+/// with nonzero queue work.
+#[test]
+fn prop_wheel_is_bitwise_identical_open_loop() {
+    forall(
+        30,
+        0x5C4ED,
+        |rng| (rng.range(1, 8), rng.range(1, 4), rng.next_u64()),
+        |&(users, edges, seed)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let state = TopoState::idle(&model.net.topo);
+            let horizon = 5000.0;
+            let process = rand_process(&mut drng);
+            let trace = schedule(process, users, horizon, seed);
+
+            let run = |sched: SchedulerKind| {
+                let mut core = des::DesCore::with_scheduler(sched);
+                core.install(&model, &state);
+                let mut out = des::DesOutcome::default();
+                core.run_open_loop_into(&decision, &trace, horizon, seed, &mut out);
+                out
+            };
+            let heap = run(SchedulerKind::Heap);
+            let wheel = run(SchedulerKind::Wheel);
+            check_outcomes(&heap, &wheel)?;
+            // same event sequence: identical schedule/fire/depth counters
+            if heap.perf.scheduled != wheel.perf.scheduled
+                || heap.perf.fired != wheel.perf.fired
+                || heap.perf.peak_depth != wheel.perf.peak_depth
+                || heap.perf.arena_reuse != wheel.perf.arena_reuse
+            {
+                return Err(format!(
+                    "perf counters diverged: heap {:?} vs wheel {:?}",
+                    heap.perf, wheel.perf
+                ));
+            }
+            if heap.perf.queue_ops == 0 || wheel.perf.queue_ops == 0 {
+                return Err("queue-op counters must be nonzero".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every admission policy (admit_all, deadline_shed, defer, degrade)
+/// over stamped deadlines and random control periods: verdict-for-verdict
+/// identical under the wheel.
+#[test]
+fn prop_wheel_is_bitwise_identical_under_admission() {
+    forall(
+        30,
+        0x5C4AD,
+        |rng| {
+            (
+                rng.range(1, 7),
+                rng.range(1, 4),
+                rng.next_u64(),
+                rng.below(4),                 // policy
+                rng.range_f64(500.0, 3000.0), // control period
+                rng.range_f64(1.2, 4.0),      // slo multiplier
+            )
+        },
+        |&(users, edges, seed, policy, period, slo)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let state = TopoState::idle(&model.net.topo);
+            let horizon = 6000.0;
+            let trace = schedule(
+                ArrivalProcess::Poisson { rate_per_s: drng.range_f64(1.0, 6.0) },
+                users,
+                horizon,
+                seed,
+            );
+
+            let run = |sched: SchedulerKind| {
+                let mut core = des::DesCore::with_scheduler(sched);
+                core.install(&model, &state);
+                let mut stamped = trace.clone();
+                stamp_deadlines(&mut stamped, &core, 0.0, slo);
+                let mut pol: Box<dyn AdmissionPolicy> = match policy {
+                    0 => Box::new(AdmitAll),
+                    1 => Box::new(DeadlineShed),
+                    2 => Box::new(Defer::new(2)),
+                    _ => Box::new(Degrade),
+                };
+                let mut out = des::DesOutcome::default();
+                core.run_admitted(
+                    &decision,
+                    &stamped,
+                    horizon,
+                    period,
+                    pol.as_mut(),
+                    seed ^ 0xAD,
+                    &mut out,
+                );
+                out
+            };
+            check_outcomes(&run(SchedulerKind::Heap), &run(SchedulerKind::Wheel))
+        },
+    );
+}
+
+/// Arbitrary outage schedules, timeouts and retry policies: the failure
+/// lifecycle (timeout events, retry/backoff re-pushes, failovers) replays
+/// bitwise on the wheel.
+#[test]
+fn prop_wheel_is_bitwise_identical_under_faults() {
+    forall(
+        25,
+        0x5C4F1,
+        |rng| (rng.range(1, 8), rng.range(1, 4), rng.next_u64()),
+        |&(users, edges, seed)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let state = TopoState::idle(&model.net.topo);
+            let horizon = 5000.0;
+            let trace =
+                schedule(ArrivalProcess::Poisson { rate_per_s: 2.0 }, users, horizon, seed);
+            let plan = FaultPlan {
+                schedule: rand_fault_schedule(&mut drng, edges, horizon),
+                retry: rand_retry(&mut drng),
+                timeout_ms: if drng.bool(0.5) { drng.range_f64(200.0, 1_500.0) } else { 0.0 },
+            };
+
+            let run = |sched: SchedulerKind| -> Result<des::DesOutcome, String> {
+                let mut core = des::DesCore::with_scheduler(sched);
+                core.install(&model, &state);
+                core.set_fault_plan(&plan);
+                let mut out = des::DesOutcome::default();
+                core.run_open_loop_into(&decision, &trace, horizon, seed, &mut out);
+                if core.live_count() != 0 {
+                    return Err(format!(
+                        "{} requests in flight after drain ({:?})",
+                        core.live_count(),
+                        sched
+                    ));
+                }
+                Ok(out)
+            };
+            check_outcomes(&run(SchedulerKind::Heap)?, &run(SchedulerKind::Wheel)?)
+        },
+    );
+}
+
+/// The sharded engine with the wheel enabled: every shard count produces
+/// the serial heap baseline's digest (shard==serial and wheel==heap in
+/// one invariant), under random drift schedules.
+#[test]
+fn prop_sharded_wheel_digest_matches_serial_heap() {
+    forall(
+        12,
+        0x5C45D,
+        |rng| {
+            let drift = match rng.below(3) {
+                0 => String::new(),
+                1 => format!("{}:rate={}", rng.range(500, 2000), rng.range(2, 4)),
+                _ => format!(
+                    "{}:rate={},net=weak;{}:rate=1",
+                    rng.range(400, 1000),
+                    rng.range(2, 4),
+                    rng.range(2000, 3000)
+                ),
+            };
+            (rng.range(20, 60), rng.range(2, 5), rng.next_u64(), drift)
+        },
+        |(users, edges, seed, drift)| {
+            let (users, edges, seed) = (*users, *edges, *seed);
+            let model = multi_edge_model(users, edges);
+            let state = TopoState::idle(&model.net.topo);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let drift = DriftSchedule::parse(drift).expect("generated spec parses");
+            let horizon = 3000.0;
+
+            let run = |shards: usize, sched: SchedulerKind| {
+                run_sharded_open_loop(
+                    &model,
+                    &state,
+                    &decision,
+                    ArrivalProcess::Poisson { rate_per_s: 1.5 },
+                    horizon,
+                    seed,
+                    seed ^ 0x5EED_DE5,
+                    &drift,
+                    ShardPlan { shards, window_ms: 0.0, sched },
+                    None,
+                )
+            };
+            let baseline = run(1, SchedulerKind::Heap);
+            if baseline.offered == 0 {
+                return Err("degenerate workload: nothing offered".into());
+            }
+            for shards in 1..=edges.min(4) {
+                let wheel = run(shards, SchedulerKind::Wheel);
+                if wheel.summary.digest != baseline.summary.digest {
+                    return Err(format!(
+                        "digest diverged at {shards} shard(s): {:#x} vs {:#x}",
+                        wheel.summary.digest, baseline.summary.digest
+                    ));
+                }
+                if wheel.summary.completed != baseline.summary.completed
+                    || wheel.summary.hist != baseline.summary.hist
+                {
+                    return Err(format!("summary diverged at {shards} shard(s)"));
+                }
+                if wheel.makespan_ms.to_bits() != baseline.makespan_ms.to_bits() {
+                    return Err(format!("makespan diverged at {shards} shard(s)"));
+                }
+                if !wheel.conservation_ok {
+                    return Err(format!("conservation violated at {shards} shard(s)"));
+                }
+                if wheel.perf.queue_ops == 0 {
+                    return Err("wheel queue-op counter must be nonzero".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
