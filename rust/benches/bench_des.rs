@@ -186,11 +186,51 @@ fn main() {
                 9,
                 10,
                 &eeco::sim::DriftSchedule::none(),
-                eeco::sim::ShardPlan { shards: 1, window_ms: 0.0, sched },
+                eeco::sim::ShardPlan { shards: 1, window_ms: 0.0, sched, ..Default::default() },
                 None,
             )
             .summary
             .completed
+        });
+    }
+
+    // Control-plane fast path: the same frozen 60 s online drift run
+    // (240 control ticks) with the decision memo on vs off — outcomes
+    // are property-pinned bitwise identical, so the pair isolates the
+    // per-tick decide cost the `[perf] decision_cache` default buys back.
+    let ol_users = 10;
+    let ol_drift = eeco::sim::DriftSchedule::parse("20000:rate=2,net=weak;40000:rate=1,net=regular")
+        .expect("static drift spec parses");
+    for (name, cache) in [("online_drift_60s_cache_on", 512usize), ("online_drift_60s_cache_off", 0)]
+    {
+        b.run(name, || {
+            let env = eeco::sim::Env::new(
+                Scenario::exp_a(ol_users),
+                Calibration::default(),
+                AccuracyConstraint::Max,
+                11,
+            );
+            let mut orch = eeco::orchestrator::Orchestrator::new(
+                env,
+                Box::new(eeco::agent::baseline::FixedAgent::new(Tier::Cloud, ol_users)),
+            );
+            orch.decision_cache = cache;
+            orch.env.freeze();
+            orch.env.reset_load();
+            let ctl =
+                eeco::orchestrator::ControlCfg { period_ms: 250.0, online_learning: false };
+            orch.evaluate_chaos(
+                ArrivalProcess::Poisson { rate_per_s: 2.0 },
+                60_000.0,
+                12,
+                &ctl,
+                &ol_drift,
+                &eeco::config::AdmissionConfig::default(),
+                &eeco::sim::FaultPlan::none(),
+            )
+            .outcome
+            .completed
+            .len()
         });
     }
 

@@ -9,7 +9,7 @@
 
 use std::cmp::Ordering;
 
-use eeco::sim::{EventQueue, SchedEvent, SchedulerKind};
+use eeco::sim::{EventQueue, SchedEvent, SchedulerKind, WheelGranularity};
 use eeco::util::bench::Bench;
 use eeco::util::rng::Rng;
 
@@ -99,6 +99,32 @@ fn main() {
             popped
         });
     }
+
+    // Adaptive granularity on the churn regime: the wheel re-fits its
+    // bucket width from the inter-event gap EMA at every rebase instead
+    // of spanning the batch — the `[perf] wheel_granularity = "auto"`
+    // cost row, to be read against `push_pop_1m_churn_wheel` above.
+    let mut q = EventQueue::new(SchedulerKind::Wheel);
+    q.set_granularity(WheelGranularity::Auto);
+    b.run("push_pop_1m_churn_wheel_auto", || {
+        q.clear();
+        let mut seq = 0u64;
+        for ev in stream.iter().take(1_000) {
+            q.push(*ev);
+            seq += 1;
+        }
+        let mut jit = Rng::new(0xC0FFEE);
+        let mut popped = 0usize;
+        while popped < N {
+            let ev = q.pop().expect("queue drained early");
+            popped += 1;
+            if popped + q.len() < N {
+                q.push(Ev { time: ev.time + jit.range_f64(0.1, 50.0), seq });
+                seq += 1;
+            }
+        }
+        popped
+    });
 
     b.save();
 }

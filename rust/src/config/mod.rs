@@ -443,13 +443,15 @@ impl Default for ShardingConfig {
 
 impl ShardingConfig {
     /// The engine-level plan this config selects. The event-queue
-    /// scheduler lives in `[perf]`, not here — callers that honour
-    /// `perf.scheduler` set the plan's `sched` field themselves.
+    /// scheduler and wheel granularity live in `[perf]`, not here —
+    /// callers that honour `perf.scheduler` set the plan's `sched` and
+    /// `gran` fields themselves.
     pub fn plan(&self) -> crate::sim::ShardPlan {
         crate::sim::ShardPlan {
             shards: self.shards,
             window_ms: self.window_ms,
             sched: crate::sim::SchedulerKind::Heap,
+            gran: crate::sim::WheelGranularity::Span,
         }
     }
 
@@ -473,9 +475,63 @@ impl ShardingConfig {
 /// `BinaryHeap` reference; `wheel` is the hierarchical timing wheel with
 /// O(1) amortized scheduling, property-pinned bitwise identical to the
 /// heap.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PerfConfig {
     pub scheduler: crate::sim::SchedulerKind,
+    /// Timing-wheel bucket-width policy (`wheel_granularity = "span" |
+    /// "auto" | <ms>`). `span` (the default) is the original
+    /// fit-the-overflow-span width; `auto` self-tunes from the observed
+    /// inter-event gap EMA at rebase points; a number pins a fixed width
+    /// in ms. All modes are property-pinned bitwise identical to the
+    /// heap — only calendar cost changes. Requires `scheduler = "wheel"`
+    /// when non-default (the heap has no buckets to size).
+    pub wheel_granularity: crate::sim::WheelGranularity,
+    /// Control-plane decision-memo capacity (`decision_cache = "on" |
+    /// "off" | <entries>`): how many (quantized state, down-mask, policy)
+    /// keys the orchestrator memoizes during frozen evaluations. `on` is
+    /// the default capacity; `off` (= 0) disables. Hits are
+    /// property-pinned bitwise identical to cache-off.
+    pub decision_cache: usize,
+}
+
+impl Default for PerfConfig {
+    fn default() -> Self {
+        PerfConfig {
+            scheduler: crate::sim::SchedulerKind::default(),
+            wheel_granularity: crate::sim::WheelGranularity::default(),
+            decision_cache: PerfConfig::DEFAULT_DECISION_CACHE,
+        }
+    }
+}
+
+impl PerfConfig {
+    /// Memo entries `decision_cache = "on"` (the default) selects — a
+    /// few× the distinct quantized states a steady scenario visits.
+    pub const DEFAULT_DECISION_CACHE: usize = 512;
+
+    /// Parse `decision_cache = "on" | "off" | <entries>` in either its
+    /// TOML or CLI spelling.
+    pub fn parse_decision_cache(s: &str) -> Option<usize> {
+        match s.to_ascii_lowercase().as_str() {
+            "on" => Some(PerfConfig::DEFAULT_DECISION_CACHE),
+            "off" => Some(0),
+            other => other.parse::<usize>().ok(),
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.wheel_granularity != crate::sim::WheelGranularity::Span
+            && self.scheduler != crate::sim::SchedulerKind::Wheel
+        {
+            return Err(format!(
+                "perf.wheel_granularity = \"{}\" requires perf.scheduler = \"wheel\" \
+                 (the heap has no buckets to size) — set scheduler = \"wheel\" or drop \
+                 the granularity override",
+                self.wheel_granularity.label()
+            ));
+        }
+        Ok(())
+    }
 }
 
 /// `[metrics]` section: bounded-memory latency summaries. When a run
@@ -779,7 +835,7 @@ impl Config {
         const TELEMETRY_KEYS: [&str; 5] = ["enabled", "capacity", "format", "path", "gauges"];
         const FLEET_KEYS: [&str; 4] = ["scenarios", "policies", "horizon_ms", "fast"];
         const SHARDING_KEYS: [&str; 2] = ["shards", "window_ms"];
-        const PERF_KEYS: [&str; 1] = ["scheduler"];
+        const PERF_KEYS: [&str; 3] = ["scheduler", "wheel_granularity", "decision_cache"];
         const METRICS_KEYS: [&str; 1] = ["approx_threshold"];
         for key in doc.entries.keys() {
             if let Some(k) = key.strip_prefix("telemetry.") {
@@ -905,6 +961,30 @@ impl Config {
             self.perf.scheduler = crate::sim::SchedulerKind::by_name(s)
                 .ok_or_else(|| format!("unknown perf.scheduler '{s}' (want heap|wheel)"))?;
         }
+        if let Some(v) = doc.get("perf.wheel_granularity") {
+            // "span" | "auto" | a positive bucket width in ms — accepted
+            // as either a string or a bare number.
+            let parsed = match (v.as_str(), v.as_f64()) {
+                (Some(s), _) => crate::sim::WheelGranularity::by_name(s),
+                (None, Some(ms)) => crate::sim::WheelGranularity::by_name(&ms.to_string()),
+                (None, None) => None,
+            };
+            self.perf.wheel_granularity = parsed.ok_or_else(|| {
+                "perf.wheel_granularity must be \"span\", \"auto\" or a positive width in ms"
+                    .to_string()
+            })?;
+        }
+        if let Some(v) = doc.get("perf.decision_cache") {
+            let parsed = match (v.as_str(), v.as_i64()) {
+                (Some(s), _) => PerfConfig::parse_decision_cache(s),
+                (None, Some(n)) if n >= 0 => Some(n as usize),
+                _ => None,
+            };
+            self.perf.decision_cache = parsed.ok_or_else(|| {
+                "perf.decision_cache must be \"on\", \"off\" or a capacity >= 0".to_string()
+            })?;
+        }
+        self.perf.validate()?;
         if let Some(v) = doc.get("metrics.approx_threshold") {
             let t = v.as_i64().ok_or_else(|| {
                 "metrics.approx_threshold must be an integer (0 = always exact)".to_string()
@@ -1040,6 +1120,17 @@ impl Config {
             self.perf.scheduler = crate::sim::SchedulerKind::by_name(v)
                 .ok_or_else(|| format!("bad --scheduler '{v}' (want heap|wheel)"))?;
         }
+        if let Some(v) = args.get("wheel-granularity") {
+            self.perf.wheel_granularity =
+                crate::sim::WheelGranularity::by_name(v).ok_or_else(|| {
+                    format!("bad --wheel-granularity '{v}' (want span|auto|<ms>)")
+                })?;
+        }
+        if let Some(v) = args.get("decision-cache") {
+            self.perf.decision_cache = PerfConfig::parse_decision_cache(v)
+                .ok_or_else(|| format!("bad --decision-cache '{v}' (want on|off|<entries>)"))?;
+        }
+        self.perf.validate()?;
         if let Some(v) = args.get("approx-threshold") {
             let t: usize = v.parse().map_err(|_| {
                 format!("bad --approx-threshold '{v}' (want a request count; 0 = always exact)")
@@ -1462,8 +1553,11 @@ mod tests {
     fn perf_and_metrics_sections_parse_strictly() {
         use crate::sim::SchedulerKind;
         // defaults: heap scheduler (the reference), exact metrics
+        use crate::sim::WheelGranularity;
         let d = Config::default();
         assert_eq!(d.perf.scheduler, SchedulerKind::Heap);
+        assert_eq!(d.perf.wheel_granularity, WheelGranularity::Span);
+        assert_eq!(d.perf.decision_cache, PerfConfig::DEFAULT_DECISION_CACHE);
         assert_eq!(d.metrics.approx_threshold, 0);
 
         let doc =
@@ -1474,12 +1568,41 @@ mod tests {
         assert_eq!(c.perf.scheduler, SchedulerKind::Wheel);
         assert_eq!(c.metrics.approx_threshold, 100_000);
 
+        let doc = Doc::parse(
+            "[perf]\nscheduler = \"wheel\"\nwheel_granularity = \"auto\"\ndecision_cache = \"off\"\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.perf.wheel_granularity, WheelGranularity::Auto);
+        assert_eq!(c.perf.decision_cache, 0);
+        let doc = Doc::parse(
+            "[perf]\nscheduler = \"wheel\"\nwheel_granularity = 2.5\ndecision_cache = 64\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.perf.wheel_granularity, WheelGranularity::Fixed(2.5));
+        assert_eq!(c.perf.decision_cache, 64);
+
         // unknown keys, wrong types and bad values rejected at load time
         let bad = Doc::parse("[perf]\nschedular = \"heap\"\n").unwrap();
         assert!(Config::default().apply_toml(&bad).is_err());
         let bad = Doc::parse("[perf]\nscheduler = \"fifo\"\n").unwrap();
         assert!(Config::default().apply_toml(&bad).is_err());
         let bad = Doc::parse("[perf]\nscheduler = 3\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        // non-default granularity without the wheel scheduler is explicit
+        // reject-or-honor, never a silent no-op
+        let bad = Doc::parse("[perf]\nwheel_granularity = \"auto\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[perf]\nwheel_granularity = \"fast\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[perf]\nwheel_granularity = -3\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[perf]\ndecision_cache = \"maybe\"\n").unwrap();
+        assert!(Config::default().apply_toml(&bad).is_err());
+        let bad = Doc::parse("[perf]\ndecision_cache = -1\n").unwrap();
         assert!(Config::default().apply_toml(&bad).is_err());
         let bad = Doc::parse("[metrics]\napprox_threshold = -1\n").unwrap();
         assert!(Config::default().apply_toml(&bad).is_err());
@@ -1500,6 +1623,36 @@ mod tests {
         assert!(Config::load(&bad).is_err());
         let args = Args::parse(["--approx-threshold", "5000"].iter().map(|s| s.to_string()));
         assert_eq!(Config::load(&args).unwrap().metrics.approx_threshold, 5000);
+    }
+
+    #[test]
+    fn fast_path_cli_overrides() {
+        use crate::sim::WheelGranularity;
+        let args = Args::parse(
+            ["--scheduler", "wheel", "--wheel-granularity", "auto", "--decision-cache", "off"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::load(&args).unwrap();
+        assert_eq!(c.perf.wheel_granularity, WheelGranularity::Auto);
+        assert_eq!(c.perf.decision_cache, 0);
+        let args = Args::parse(
+            ["--scheduler", "wheel", "--wheel-granularity", "7.5", "--decision-cache", "on"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = Config::load(&args).unwrap();
+        assert_eq!(c.perf.wheel_granularity, WheelGranularity::Fixed(7.5));
+        assert_eq!(c.perf.decision_cache, PerfConfig::DEFAULT_DECISION_CACHE);
+        // granularity without the wheel is rejected, not silently ignored
+        let bad = Args::parse(["--wheel-granularity", "auto"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(
+            ["--scheduler", "wheel", "--wheel-granularity", "0"].iter().map(|s| s.to_string()),
+        );
+        assert!(Config::load(&bad).is_err());
+        let bad = Args::parse(["--decision-cache", "-2"].iter().map(|s| s.to_string()));
+        assert!(Config::load(&bad).is_err());
     }
 
     #[test]

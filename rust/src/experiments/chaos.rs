@@ -62,6 +62,10 @@ struct Row {
     goodput_rps: f64,
     availability: f64,
     p95_ms: f64,
+    cache_hits: u64,
+    cache_misses: u64,
+    retable_rows: u64,
+    rebases: u64,
 }
 
 /// Fault schedule for a named intensity, shaped to the horizon.
@@ -148,6 +152,10 @@ pub fn chaos(ctx: &ExpCtx) -> Result<()> {
     // ~10 control ticks, no learning: the matrix isolates the request
     // lifecycle (timeout / retry / failover), not the policy loop.
     let ctl = ControlCfg { period_ms: horizon / 10.0, online_learning: false };
+    // Plain copies for the pool closure: `ExpCtx` holds the runtime mutex
+    // and must not move into worker threads.
+    let perf = ctx.cfg.perf;
+    let approx_threshold = ctx.cfg.metrics.approx_threshold;
     let run_cell = {
         let calibration = calibration.clone();
         let ctl = ctl.clone();
@@ -159,6 +167,10 @@ pub fn chaos(ctx: &ExpCtx) -> Result<()> {
                 seed,
             );
             let mut orch = Orchestrator::new(env, Box::new(FixedAgent::new(Tier::Edge(0), users)));
+            orch.scheduler = perf.scheduler;
+            orch.wheel_granularity = perf.wheel_granularity;
+            orch.decision_cache = perf.decision_cache;
+            orch.metrics_approx_threshold = approx_threshold;
             orch.env.freeze();
             orch.env.reset_load();
             let plan = FaultPlan {
@@ -175,6 +187,7 @@ pub fn chaos(ctx: &ExpCtx) -> Result<()> {
                 &AdmissionCfg::default(),
                 &plan,
             );
+            let perf = rep.outcome.perf;
             let m = rep.metrics;
             Row {
                 intensity: cell.intensity,
@@ -188,6 +201,10 @@ pub fn chaos(ctx: &ExpCtx) -> Result<()> {
                 goodput_rps: m.goodput_rps,
                 availability: m.availability,
                 p95_ms: m.response.p95_ms,
+                cache_hits: perf.cache_hits,
+                cache_misses: perf.cache_misses,
+                retable_rows: perf.retable_rows,
+                rebases: perf.rebases,
             }
         }
     };
@@ -209,6 +226,7 @@ pub fn chaos(ctx: &ExpCtx) -> Result<()> {
                 seed,
             );
             let mut orch = Orchestrator::new(env, Box::new(FixedAgent::new(Tier::Edge(0), users)));
+            ctx.apply_perf(&mut orch);
             orch.env.freeze();
             orch.env.reset_load();
             let rep = if chaos_path {
@@ -251,6 +269,10 @@ pub fn chaos(ctx: &ExpCtx) -> Result<()> {
         "goodput_rps",
         "availability",
         "p95_ms",
+        "cache_hits",
+        "cache_misses",
+        "retable_rows",
+        "rebases",
     ]);
     let mut table = Vec::new();
     let mut json_rows = Vec::new();
@@ -267,6 +289,10 @@ pub fn chaos(ctx: &ExpCtx) -> Result<()> {
             format!("{:.3}", r.goodput_rps),
             format!("{:.4}", r.availability),
             format!("{:.1}", r.p95_ms),
+            r.cache_hits.to_string(),
+            r.cache_misses.to_string(),
+            r.retable_rows.to_string(),
+            r.rebases.to_string(),
         ]);
         table.push(vec![
             r.intensity.to_string(),

@@ -108,6 +108,10 @@ pub fn fleet(ctx: &ExpCtx) -> Result<()> {
     } else {
         None
     };
+    // Plain copies for the pool closure: `ExpCtx` holds the runtime mutex
+    // and must not move into worker threads.
+    let perf = ctx.cfg.perf;
+    let approx_threshold = ctx.cfg.metrics.approx_threshold;
     let run_cell = move |_i: usize, cell: Cell| -> Row {
         let scn = scenarios::by_name(&cell.scenario, horizon).expect("scenario name validated");
         let env = Env::new(
@@ -117,6 +121,10 @@ pub fn fleet(ctx: &ExpCtx) -> Result<()> {
             seed,
         );
         let mut orch = Orchestrator::new(env, Box::new(FixedAgent::new(cell.tier, users)));
+        orch.scheduler = perf.scheduler;
+        orch.wheel_granularity = perf.wheel_granularity;
+        orch.decision_cache = perf.decision_cache;
+        orch.metrics_approx_threshold = approx_threshold;
         orch.env.freeze();
         orch.env.reset_load();
         if let Some((cap, format, dir)) = &telemetry {

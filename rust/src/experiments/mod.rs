@@ -121,8 +121,14 @@ impl ExpCtx {
     }
 
     /// Thread the `[perf]` / `[metrics]` knobs into an orchestrator.
-    fn apply_perf(&self, orch: &mut Orchestrator) {
+    /// Every experiment driver that builds an `Orchestrator` goes through
+    /// here (directly or via `trained`/`fixed`), so an explicit
+    /// `--scheduler` / `--wheel-granularity` / `--decision-cache` is
+    /// honored everywhere — never silently dropped.
+    pub(crate) fn apply_perf(&self, orch: &mut Orchestrator) {
         orch.scheduler = self.cfg.perf.scheduler;
+        orch.wheel_granularity = self.cfg.perf.wheel_granularity;
+        orch.decision_cache = self.cfg.perf.decision_cache;
         orch.metrics_approx_threshold = self.cfg.metrics.approx_threshold;
     }
 }
@@ -132,7 +138,7 @@ impl ExpCtx {
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig1c", "fig5", "table8", "table9", "table10", "fig6", "fig7",
     "table11", "fig8", "table12", "prediction", "traffic_sweep", "multi_edge", "drift",
-    "overload", "fleet", "scale", "chaos",
+    "overload", "fleet", "scale", "chaos", "overhead",
 ];
 
 /// Dispatch an experiment by id.
@@ -158,6 +164,7 @@ pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
         "fleet" => fleet::fleet(ctx),
         "scale" => scale::scale(ctx),
         "chaos" => chaos::chaos(ctx),
+        "overhead" => overhead::overhead(ctx),
         other => Err(anyhow!("unknown experiment '{other}' (known: {ALL:?})")),
     }
 }
@@ -189,8 +196,8 @@ mod tests {
         let ctx = ExpCtx::new(Config::default());
         assert!(run("nope", &ctx).is_err());
         // 13 paper experiments + traffic_sweep + multi_edge + drift +
-        // overload + fleet + scale + chaos
-        assert_eq!(ALL.len(), 20);
+        // overload + fleet + scale + chaos + overhead
+        assert_eq!(ALL.len(), 21);
     }
 
     #[test]

@@ -6,15 +6,23 @@
 //!   prediction accuracy" claim), plus agent step latency (paper: QL
 //!   0.6 ms on cloud CPU, DQL 11 ms on an RTX 5000 — ours runs DQL on the
 //!   PJRT CPU).
+//! - `overhead`: the control-plane fast-path gating harness — measured
+//!   decision-cache hit rate, cache transparency, and delta-retable row
+//!   counts, each hard-failed on regression (what the CI `overhead-smoke`
+//!   job runs).
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::config::{Algo, Scenario};
-use crate::metrics::{render_table, Csv};
+use crate::agent::baseline::FixedAgent;
+use crate::config::{AdmissionConfig, Algo, Scenario};
+use crate::metrics::{render_table, save_json, Csv};
 use crate::network::MsgKind;
+use crate::orchestrator::{ControlCfg, Orchestrator};
+use crate::sim::{ArrivalProcess, FaultPlan};
 use crate::types::{AccuracyConstraint, NetCond, Tier};
+use crate::util::json::Json;
 
 use super::{scaled, ExpCtx};
 
@@ -124,4 +132,183 @@ pub fn prediction(ctx: &ExpCtx) -> Result<()> {
     println!("paper: 100% prediction accuracy; QL step 0.6 ms, DQL step 11 ms (RTX 5000)");
     csv.save(&ctx.cfg.results_dir, "prediction")?;
     Ok(())
+}
+
+/// `overhead`: the control-plane fast-path gating harness. Three measured
+/// gates, hard-failed (non-zero exit) when the fast path regresses:
+///
+/// 1. **Decision-cache hit rate** — a frozen policy re-decided every
+///    control tick across the default drift scenario (rate x3 + weak
+///    network at one third of the trace, see
+///    [`super::drift::default_drift`]) must hit the memoized decision
+///    cache on >= 90% of ticks: the steady segments revisit a handful of
+///    quantized observed states, so misses are bounded by the number of
+///    distinct states, not the tick count.
+/// 2. **Cache transparency** — the identical run with the cache disabled
+///    must be bit-for-bit the same (per-request response stream +
+///    makespan); the cache may only skip work, never change it. (The full
+///    randomized matrix lives in `tests/property_cache.rs`; this is the
+///    always-on measured witness.)
+/// 3. **Delta retable** — under a cond-only drift spec that degrades only
+///    the edge->cloud hop, the run's `retable_rows` must be non-zero yet
+///    strictly below the full `users x placements` bill a full
+///    `retable()` would pay at the boundary (local rows don't touch the
+///    edge uplink, so a correct delta skips them).
+pub fn overhead(ctx: &ExpCtx) -> Result<()> {
+    let fast = ctx.cfg.fleet.fast || std::env::var("EECO_FAST").is_ok();
+    let users = 5;
+    let seed = ctx.cfg.seed;
+    let horizon = if fast { 15_000.0 } else { 60_000.0 };
+    // Many ticks, few states: the hit-rate gate leans on tick count
+    // dwarfing the distinct-state count, so the period is horizon/240.
+    let ticks = 240u64;
+    let period = horizon / ticks as f64;
+    let scenario = Scenario::exp_a(users);
+    let schedule = super::drift::default_drift(horizon);
+    // Light offered load on the cloud placement keeps the observed
+    // utilization levels in a small recurring set (devices and edges stay
+    // idle; only the cloud's quantized queue level moves).
+    let process = ArrivalProcess::Poisson { rate_per_s: 0.5 };
+    let ctl = ControlCfg { period_ms: period, online_learning: false };
+    let admission = AdmissionConfig::default();
+    let plan = FaultPlan::none();
+    // The harness *measures* the cache, so `decision_cache = off` falls
+    // back to the default capacity here (every other knob is honored).
+    let cache_cap = if ctx.cfg.perf.decision_cache > 0 {
+        ctx.cfg.perf.decision_cache
+    } else {
+        crate::config::PerfConfig::DEFAULT_DECISION_CACHE
+    };
+    println!(
+        "\n== overhead: fast-path gates, {users} users, {ticks} ticks over {horizon:.0} ms, \
+         cache capacity {cache_cap} =="
+    );
+
+    let run = |cache: usize, drift: &crate::sim::DriftSchedule| {
+        let mut orch = Orchestrator::new(
+            ctx.env(scenario.clone(), AccuracyConstraint::Max, seed),
+            Box::new(FixedAgent::new(Tier::Cloud, users)),
+        );
+        ctx.apply_perf(&mut orch);
+        orch.decision_cache = cache;
+        orch.env.freeze();
+        orch.env.reset_load();
+        orch.evaluate_chaos(process, horizon, seed, &ctl, drift, &admission, &plan)
+    };
+
+    // Gate 1: hit rate on the default drift scenario.
+    let rep_on = run(cache_cap, &schedule);
+    let (hits, misses) = (rep_on.outcome.perf.cache_hits, rep_on.outcome.perf.cache_misses);
+    let hit_rate = hits as f64 / ((hits + misses).max(1)) as f64;
+    let hit_pass = hit_rate >= 0.90;
+
+    // Gate 2: cache-off replay, bit-compared.
+    let rep_off = run(0, &schedule);
+    let transparent = rep_on.outcome.completed.len() == rep_off.outcome.completed.len()
+        && rep_on.outcome.makespan_ms.to_bits() == rep_off.outcome.makespan_ms.to_bits()
+        && rep_on
+            .outcome
+            .completed
+            .iter()
+            .zip(&rep_off.outcome.completed)
+            .all(|(a, b)| a.id == b.id && a.response_ms.to_bits() == b.response_ms.to_bits());
+
+    // Gate 3: delta retable under a cond-only edge degradation.
+    let cond_only = crate::sim::DriftSchedule::parse(&format!("{}:edge=weak", horizon / 3.0))
+        .map_err(|e| anyhow!(e))?;
+    let rep_cond = run(cache_cap, &cond_only);
+    let num_places = (ctx.topology(users).num_edges() + 2) as u64;
+    let full_rows = users as u64 * num_places; // one full retable() bill
+    let boundaries = 1u64; // the single cond change in the spec
+    let delta_rows = rep_cond.outcome.perf.retable_rows;
+    let retable_pass = delta_rows > 0 && delta_rows < boundaries * full_rows;
+
+    let mut csv = Csv::new(&["gate", "measured", "bound", "pass"]);
+    let rows = [
+        ("cache_hit_rate", format!("{hit_rate:.4}"), ">=0.90".to_string(), hit_pass),
+        ("cache_transparency", (transparent as u8).to_string(), "==1".to_string(), transparent),
+        (
+            "retable_delta_rows",
+            delta_rows.to_string(),
+            format!("<{}", boundaries * full_rows),
+            retable_pass,
+        ),
+    ];
+    let mut table = Vec::new();
+    for (gate, measured, bound, pass) in &rows {
+        csv.row(&[gate.to_string(), measured.clone(), bound.clone(), pass.to_string()]);
+        table.push(vec![gate.to_string(), measured.clone(), bound.clone(), pass.to_string()]);
+    }
+    print!("{}", render_table(&["gate", "measured", "bound", "pass"], &table));
+    println!(
+        "cache: {hits} hits / {misses} misses over {ticks} ticks; cond-only boundary \
+         recomputed {delta_rows} of {full_rows} rows"
+    );
+    csv.save(&ctx.cfg.results_dir, "overhead")?;
+    let all_pass = hit_pass && transparent && retable_pass;
+    let report = Json::obj()
+        .set("users", users)
+        .set("horizon_ms", horizon)
+        .set("ticks", ticks as i64)
+        .set("cache_capacity", cache_cap)
+        .set("cache_hits", hits as i64)
+        .set("cache_misses", misses as i64)
+        .set("cache_hit_rate", hit_rate)
+        .set("cache_transparent", transparent)
+        .set("retable_delta_rows", delta_rows as i64)
+        .set("retable_full_rows", full_rows as i64)
+        .set("pass", all_pass);
+    save_json(&ctx.cfg.results_dir, "overhead", &report)?;
+
+    if !hit_pass {
+        return Err(anyhow!(
+            "overhead: cache hit rate {hit_rate:.4} below the 0.90 gate \
+             ({hits} hits / {misses} misses)"
+        ));
+    }
+    if !transparent {
+        return Err(anyhow!("overhead: cache-on run diverged bitwise from cache-off"));
+    }
+    if !retable_pass {
+        return Err(anyhow!(
+            "overhead: retable_delta recomputed {delta_rows} rows; the gate requires \
+             0 < rows < {} (full retable at every cond boundary)",
+            boundaries * full_rows
+        ));
+    }
+    println!("all fast-path gates passed");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::experiments::ExpCtx;
+
+    #[test]
+    fn overhead_gates_pass_and_write_artifacts() {
+        // per-process dir, cleared up front: stale artifacts must not
+        // satisfy the reads below if this run fails to write
+        let dir = std::env::temp_dir().join(format!("eeco_overhead_gate_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut cfg = Config { results_dir: dir.to_str().unwrap().into(), ..Default::default() };
+        cfg.fleet.fast = true; // the CI smoke slice
+        let ctx = ExpCtx::new(cfg);
+        overhead(&ctx).unwrap();
+        let body =
+            std::fs::read_to_string(format!("{}/overhead.csv", ctx.cfg.results_dir)).unwrap();
+        assert_eq!(body.lines().count(), 1 + 3, "{body}");
+        for line in body.lines().skip(1) {
+            assert!(line.ends_with(",true"), "gate failed: {line}");
+        }
+        let json =
+            std::fs::read_to_string(format!("{}/overhead.json", ctx.cfg.results_dir)).unwrap();
+        let j = Json::parse(&json).unwrap();
+        assert_eq!(j.field("pass").unwrap().as_bool(), Some(true));
+        // the hit-rate gate leaves real headroom in the smoke slice too
+        let rate = j.field("cache_hit_rate").unwrap().as_f64().unwrap();
+        assert!(rate >= 0.90, "hit rate {rate}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

@@ -100,6 +100,7 @@ pub fn overload(ctx: &ExpCtx) -> Result<()> {
                 ctx.env(scenario.clone(), AccuracyConstraint::Max, seed),
                 Box::new(FixedAgent::new(Tier::Local, users)),
             );
+            ctx.apply_perf(&mut orch);
             orch.env.freeze();
             orch.env.reset_load();
             let admission =

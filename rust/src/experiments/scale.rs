@@ -85,6 +85,10 @@ struct Row {
     fired: u64,
     queue_ops: u64,
     peak_depth: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    retable_rows: u64,
+    rebases: u64,
     wall_ms: f64,
     serial_match: bool,
 }
@@ -112,8 +116,12 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
     let seed = ctx.cfg.seed;
     // `[perf] scheduler` / `--scheduler` drives the sharded sweep cells;
     // the serial baseline always runs under BOTH schedulers so every
-    // volume carries a heap==wheel bitwise cross-check.
+    // volume carries a heap==wheel bitwise cross-check. The wheel
+    // granularity (`[perf] wheel_granularity`, including `auto`) rides
+    // along on every cell — the heap ignores it, and the bitwise
+    // cross-check below proves it never changes results.
     let sched = ctx.cfg.perf.scheduler;
+    let gran = ctx.cfg.perf.wheel_granularity;
 
     println!(
         "\n== scale: {users} users / {edges} edges, {} volume(s) x shards {shard_counts:?}, \
@@ -151,7 +159,7 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
             vec![(1, SchedulerKind::Heap), (1, SchedulerKind::Wheel)];
         cells.extend(shard_counts.iter().filter(|&&s| s != 1).map(|&s| (s, sched)));
         for (shards, cell_sched) in cells {
-            let plan = ShardPlan { shards, window_ms, sched: cell_sched };
+            let plan = ShardPlan { shards, window_ms, sched: cell_sched, gran };
             let wall = Instant::now();
             let out = run_sharded_open_loop(
                 &model,
@@ -205,6 +213,10 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
                 fired: out.perf.fired,
                 queue_ops: out.perf.queue_ops,
                 peak_depth: out.perf.peak_depth,
+                cache_hits: out.perf.cache_hits,
+                cache_misses: out.perf.cache_misses,
+                retable_rows: out.perf.retable_rows,
+                rebases: out.perf.rebases,
                 wall_ms,
                 serial_match,
             });
@@ -240,6 +252,10 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
         "fired",
         "queue_ops",
         "peak_depth",
+        "cache_hits",
+        "cache_misses",
+        "retable_rows",
+        "rebases",
         "wall_ms",
         "serial_match",
     ]);
@@ -265,6 +281,10 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
             r.fired.to_string(),
             r.queue_ops.to_string(),
             r.peak_depth.to_string(),
+            r.cache_hits.to_string(),
+            r.cache_misses.to_string(),
+            r.retable_rows.to_string(),
+            r.rebases.to_string(),
             format!("{:.1}", r.wall_ms),
             r.serial_match.to_string(),
         ]);
@@ -300,6 +320,10 @@ pub fn scale(ctx: &ExpCtx) -> Result<()> {
                 .set("fired", r.fired as i64)
                 .set("queue_ops", r.queue_ops as i64)
                 .set("peak_depth", r.peak_depth as i64)
+                .set("cache_hits", r.cache_hits as i64)
+                .set("cache_misses", r.cache_misses as i64)
+                .set("retable_rows", r.retable_rows as i64)
+                .set("rebases", r.rebases as i64)
                 .set("wall_ms", r.wall_ms)
                 .set("serial_match", r.serial_match),
         );

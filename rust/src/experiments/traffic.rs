@@ -13,7 +13,9 @@ use crate::config::{Calibration, Scenario};
 use crate::metrics::{render_table, Csv, TrafficMetrics};
 use crate::monitor::TopoState;
 use crate::network::Network;
-use crate::sim::{arrivals, des, ArrivalProcess, Env, ResponseModel};
+use crate::sim::{
+    arrivals, des, ArrivalProcess, Env, ResponseModel, SchedulerKind, WheelGranularity,
+};
 use crate::types::{AccuracyConstraint, Action, Decision, ModelId, Placement, Tier, Topology};
 use crate::util::pool::ThreadPool;
 
@@ -67,17 +69,55 @@ fn sweep_pool(cells: usize) -> Option<ThreadPool> {
     (threads > 1).then(|| ThreadPool::new(threads, "sweep"))
 }
 
+/// Open-loop run under an explicit `[perf]` event-queue choice: the same
+/// contract as [`des::run_open_loop`] / [`Env::open_loop`], with the
+/// queue kind and wheel granularity threaded through. The scheduler
+/// bit-pin guarantees the choice never changes results — only queue-op
+/// counts — so every traffic driver can honor `--scheduler` /
+/// `--wheel-granularity` without forking its acceptance contracts.
+#[allow(clippy::too_many_arguments)]
+fn open_loop_sched(
+    model: &ResponseModel,
+    state: &TopoState,
+    decision: &Decision,
+    trace: &[crate::sim::workload::Request],
+    horizon_ms: f64,
+    noise_seed: u64,
+    sched: SchedulerKind,
+    gran: WheelGranularity,
+) -> des::DesOutcome {
+    let mut core = des::DesCore::with_scheduler(sched);
+    core.set_wheel_granularity(gran);
+    core.collect_event_times = true;
+    core.install(model, state);
+    let mut out = des::DesOutcome::default();
+    core.run_open_loop_into(decision, trace, horizon_ms, noise_seed, &mut out);
+    out
+}
+
 /// One sweep cell: a labeled arrival process scored by an open-loop DES
-/// run of `decision` under `env`'s current background state.
+/// run of `decision` under `env`'s current background state, on the
+/// configured event-queue scheduler.
 fn sweep_cell(
     env: &Env,
     decision: &Decision,
     process: ArrivalProcess,
     horizon_ms: f64,
     seed: u64,
+    sched: SchedulerKind,
+    gran: WheelGranularity,
 ) -> TrafficMetrics {
     let trace = arrivals::schedule(process, env.users(), horizon_ms, seed);
-    let out = env.open_loop(decision, &trace, horizon_ms, seed ^ 0xDE5);
+    let out = open_loop_sched(
+        &env.model,
+        &env.state,
+        decision,
+        &trace,
+        horizon_ms,
+        seed ^ 0xDE5,
+        sched,
+        gran,
+    );
     TrafficMetrics::from_outcome(decision, &out)
 }
 
@@ -86,12 +126,15 @@ fn sweep_cell(
 /// DES run and results land back in input order, so the table is
 /// row-for-row bit-identical to the serial path (the property test pins
 /// this) — only wall-clock changes.
+#[allow(clippy::too_many_arguments)]
 pub fn sweep_cells(
     env: &Arc<Env>,
     decision: &Decision,
     cells: Vec<(String, ArrivalProcess)>,
     horizon_ms: f64,
     seed: u64,
+    sched: SchedulerKind,
+    gran: WheelGranularity,
     pool: Option<&ThreadPool>,
 ) -> Vec<(String, ArrivalProcess, TrafficMetrics)> {
     match pool {
@@ -99,14 +142,14 @@ pub fn sweep_cells(
             let env = Arc::clone(env);
             let decision = decision.clone();
             pool.map_indexed(cells, move |_, (label, process)| {
-                let m = sweep_cell(&env, &decision, process, horizon_ms, seed);
+                let m = sweep_cell(&env, &decision, process, horizon_ms, seed, sched, gran);
                 (label, process, m)
             })
         }
         None => cells
             .into_iter()
             .map(|(label, process)| {
-                let m = sweep_cell(env, decision, process, horizon_ms, seed);
+                let m = sweep_cell(env, decision, process, horizon_ms, seed, sched, gran);
                 (label, process, m)
             })
             .collect(),
@@ -149,8 +192,20 @@ pub fn traffic_sweep(ctx: &ExpCtx) -> Result<()> {
         ));
     }
 
+    // `[perf] scheduler` / `--scheduler` (and the wheel granularity,
+    // including `auto`) are honored per cell — the bit-pin means the rows
+    // are byte-identical across queue implementations.
     let pool = sweep_pool(cells.len());
-    let results = sweep_cells(&env, &decision, cells, horizon_ms, seed, pool.as_ref());
+    let results = sweep_cells(
+        &env,
+        &decision,
+        cells,
+        horizon_ms,
+        seed,
+        ctx.cfg.perf.scheduler,
+        ctx.cfg.perf.wheel_granularity,
+        pool.as_ref(),
+    );
 
     let mut csv = Csv::new(&[
         "process",
@@ -212,6 +267,8 @@ fn multi_edge_cell(
     rate: f64,
     horizon_ms: f64,
     seed: u64,
+    sched: SchedulerKind,
+    gran: WheelGranularity,
 ) -> TrafficMetrics {
     let net = Network::with_edges(scenario.clone(), cal.clone(), edges);
     let model = ResponseModel::new(net);
@@ -223,7 +280,16 @@ fn multi_edge_cell(
         horizon_ms,
         seed,
     );
-    let out = des::run_open_loop(&model, &state, &decision, &trace, horizon_ms, seed ^ 0xED6E);
+    let out = open_loop_sched(
+        &model,
+        &state,
+        &decision,
+        &trace,
+        horizon_ms,
+        seed ^ 0xED6E,
+        sched,
+        gran,
+    );
     TrafficMetrics::from_outcome(&decision, &out)
 }
 
@@ -255,13 +321,22 @@ pub fn multi_edge(ctx: &ExpCtx) -> Result<()> {
     let seed = ctx.cfg.seed;
 
     let edge_counts: Vec<usize> = (lo..=hi).collect();
+    // honor `[perf] scheduler` / `--scheduler` in every cell (Copy types,
+    // so the pooled closure just captures them)
+    let sched = ctx.cfg.perf.scheduler;
+    let gran = ctx.cfg.perf.wheel_granularity;
     let pool = sweep_pool(edge_counts.len());
     let results: Vec<(usize, TrafficMetrics)> = match pool.as_ref() {
         Some(p) => {
             let scen = scenario.clone();
             let cal = ctx.cfg.calibration.clone();
             p.map_indexed(edge_counts, move |_, edges| {
-                (edges, multi_edge_cell(&scen, &cal, edges, users, rate, horizon_ms, seed))
+                (
+                    edges,
+                    multi_edge_cell(
+                        &scen, &cal, edges, users, rate, horizon_ms, seed, sched, gran,
+                    ),
+                )
             })
         }
         None => edge_counts
@@ -277,6 +352,8 @@ pub fn multi_edge(ctx: &ExpCtx) -> Result<()> {
                         rate,
                         horizon_ms,
                         seed,
+                        sched,
+                        gran,
                     ),
                 )
             })
@@ -443,9 +520,11 @@ mod tests {
             ),
             ("d".into(), ArrivalProcess::SyncRounds { period_ms: 700.0 }),
         ];
-        let serial = sweep_cells(&env, &decision, cells.clone(), 3000.0, 9, None);
+        let (sched, gran) = (SchedulerKind::Heap, WheelGranularity::Span);
+        let serial = sweep_cells(&env, &decision, cells.clone(), 3000.0, 9, sched, gran, None);
         let pool = crate::util::pool::ThreadPool::new(4, "t");
-        let parallel = sweep_cells(&env, &decision, cells, 3000.0, 9, Some(&pool));
+        let parallel =
+            sweep_cells(&env, &decision, cells, 3000.0, 9, sched, gran, Some(&pool));
         assert_eq!(serial.len(), parallel.len());
         for ((ls, ps, ms), (lp, pp, mp)) in serial.iter().zip(&parallel) {
             assert_eq!(ls, lp);
@@ -458,13 +537,14 @@ mod tests {
     fn parallel_multi_edge_cells_identical_to_serial() {
         let scenario = Scenario::exp_a(10);
         let cal = crate::config::Calibration::default();
+        let (sched, gran) = (SchedulerKind::Heap, WheelGranularity::Span);
         let serial: Vec<TrafficMetrics> = (1..=3)
-            .map(|edges| multi_edge_cell(&scenario, &cal, edges, 10, 2.0, 2500.0, 3))
+            .map(|edges| multi_edge_cell(&scenario, &cal, edges, 10, 2.0, 2500.0, 3, sched, gran))
             .collect();
         let pool = crate::util::pool::ThreadPool::new(3, "t");
         let (scen, c) = (scenario.clone(), cal.clone());
         let parallel = pool.map_indexed(vec![1usize, 2, 3], move |_, edges| {
-            multi_edge_cell(&scen, &c, edges, 10, 2.0, 2500.0, 3)
+            multi_edge_cell(&scen, &c, edges, 10, 2.0, 2500.0, 3, sched, gran)
         });
         assert_eq!(serial, parallel);
     }

@@ -204,6 +204,23 @@ OPTIONS (perf):   --scheduler heap|wheel   event-queue implementation
                   only difference is queue-op cost ([perf] scheduler in
                   TOML; `experiment scale` reports events/sec plus
                   scheduled/fired/queue-op/peak-depth counters per cell)
+                  --wheel-granularity span|auto|MS   timing-wheel bucket
+                  width: `span` (default) fits each rebase batch's time
+                  span, `auto` self-tunes from an EMA of the observed
+                  inter-event gap at rebase points, a positive MS pins a
+                  fixed width — heap runs ignore it and every mode is
+                  property-pinned bitwise identical to the heap ([perf]
+                  wheel_granularity in TOML)
+                  --decision-cache on|off|N   memoized control-plane
+                  decisions: frozen evaluations cache the agent's (and
+                  drift oracle's) choice per quantized observed state +
+                  node-health mask + admission policy, replaying hits
+                  with zero RNG draws — property-pinned bitwise identical
+                  to off; N sets the LRU capacity (on = 512), and
+                  `experiment overhead` gates the hit rate and cache
+                  transparency ([perf] decision_cache in TOML;
+                  cache-hit/miss, retable-row and wheel-rebase counters
+                  surface in the drift/chaos/scale reports)
                   --approx-threshold N   bounded-memory latency
                   summaries: runs completing more than N requests
                   answer TrafficMetrics percentiles from a 64-bucket

@@ -1,0 +1,230 @@
+//! Control-plane decision memo: a bounded, deterministic LRU.
+//!
+//! The per-tick hot path of [`crate::orchestrator::Orchestrator::run_online`]
+//! is `observe_live → encode → decide`. Once an agent is frozen
+//! (`explore = false`, `learn = false`) its `decide` is a *pure* function
+//! of the quantized [`crate::monitor::EncodedState`] key — the greedy arm
+//! is read straight from the learned tables with **zero RNG draws** — so
+//! memoizing it returns the bit-identical decision the agent would have
+//! recomputed. The same holds for the oracle anchors: `optimal_for` is a
+//! pure sweep over the (continuous) state, so keying on an exact bit-level
+//! fingerprint of that state memoizes it soundly. `tests/property_cache.rs`
+//! pins cache-on == cache-off bitwise across drift × admission × faults.
+//!
+//! The LRU is dependency-free and deterministic: a `HashMap` plus a
+//! logical stamp clock, with an O(capacity) oldest-stamp scan on eviction.
+//! Stamps are assigned in call order, so which entry gets evicted never
+//! depends on hash iteration order — repeat runs evict identically.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Cache key for a memoized per-tick agent decision: the quantized state
+/// key ([`crate::monitor::EncodedState::key`]), the packed node down-mask
+/// the decision closure saw, and the admission-policy id the run was
+/// configured with. Two ticks agreeing on all three are indistinguishable
+/// to a frozen agent, so they must produce the same decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DecisionKey {
+    /// Quantized-state radix key from the monitor encoding.
+    pub state_key: u64,
+    /// Node health bitmask (bit i = node i down) at decision time.
+    pub down_mask: u64,
+    /// Index into [`crate::config::ADMISSION_POLICIES`].
+    pub policy_id: u8,
+}
+
+/// Bounded deterministic LRU memo for pure control-plane functions.
+///
+/// Generic over the key so the same structure serves both the quantized
+/// agent memo ([`DecisionKey`]) and the oracle's exact state-fingerprint
+/// memo (`u64`). `capacity == 0` disables the cache entirely: `get`
+/// always misses and `put` is a no-op, which keeps the off path free of
+/// even bookkeeping.
+#[derive(Debug, Clone)]
+pub struct DecisionCache<K: Eq + Hash + Clone, V: Clone> {
+    map: HashMap<K, (u64, V)>,
+    /// Logical access clock — bumped on every get/put touch.
+    clock: u64,
+    capacity: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> DecisionCache<K, V> {
+    /// A cache holding at most `capacity` entries (0 = disabled).
+    pub fn new(capacity: usize) -> Self {
+        DecisionCache {
+            map: HashMap::with_capacity(capacity.min(4096)),
+            clock: 0,
+            capacity,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Whether the cache can ever store anything.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Look up `key`, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &K) -> Option<V> {
+        if self.capacity == 0 {
+            self.misses += 1;
+            return None;
+        }
+        self.clock += 1;
+        match self.map.get_mut(key) {
+            Some((stamp, v)) => {
+                *stamp = self.clock;
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `key → value`, evicting the least-recently
+    /// touched entry when full. Eviction scans stamps, not hash order, so
+    /// it is deterministic across runs.
+    pub fn put(&mut self, key: K, value: V) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.clock += 1;
+        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
+            if let Some(oldest) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (stamp, _))| *stamp)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+        self.map.insert(key, (self.clock, value));
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Lookups served from the memo since construction (or `reset_stats`).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that fell through to a fresh computation.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Zero the hit/miss counters (entries are kept) — one evaluation's
+    /// counters must not leak into the next run's `DesOutcome`.
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Drop every entry and zero the counters.
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.clock = 0;
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// Pack the per-node down flags into the [`DecisionKey::down_mask`] bit
+/// field (bit i = node i down). Node counts beyond 64 saturate into the
+/// top bit rather than silently aliasing distinct masks.
+pub fn pack_down_mask(down: &[bool]) -> u64 {
+    let mut mask = 0u64;
+    for (i, &d) in down.iter().enumerate() {
+        if d {
+            mask |= 1u64 << i.min(63);
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_returns_identical_value_and_counts() {
+        let mut c: DecisionCache<DecisionKey, Vec<u8>> = DecisionCache::new(8);
+        let k = DecisionKey { state_key: 42, down_mask: 0b10, policy_id: 1 };
+        assert_eq!(c.get(&k), None);
+        c.put(k, vec![3, 1, 4]);
+        assert_eq!(c.get(&k), Some(vec![3, 1, 4]));
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_touched_deterministically() {
+        let mut c: DecisionCache<u64, u64> = DecisionCache::new(2);
+        c.put(1, 10);
+        c.put(2, 20);
+        assert_eq!(c.get(&1), Some(10)); // refresh 1 → 2 is now oldest
+        c.put(3, 30);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&2), None);
+        assert_eq!(c.get(&1), Some(10));
+        assert_eq!(c.get(&3), Some(30));
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c: DecisionCache<u64, u64> = DecisionCache::new(0);
+        assert!(!c.enabled());
+        c.put(1, 10);
+        assert_eq!(c.get(&1), None);
+        assert!(c.is_empty());
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 2);
+    }
+
+    #[test]
+    fn distinct_masks_and_policies_do_not_alias() {
+        let mut c: DecisionCache<DecisionKey, u32> = DecisionCache::new(8);
+        let a = DecisionKey { state_key: 7, down_mask: 0, policy_id: 0 };
+        let b = DecisionKey { state_key: 7, down_mask: 1, policy_id: 0 };
+        let d = DecisionKey { state_key: 7, down_mask: 0, policy_id: 2 };
+        c.put(a, 1);
+        c.put(b, 2);
+        c.put(d, 3);
+        assert_eq!(c.get(&a), Some(1));
+        assert_eq!(c.get(&b), Some(2));
+        assert_eq!(c.get(&d), Some(3));
+    }
+
+    #[test]
+    fn pack_down_mask_sets_bits() {
+        assert_eq!(pack_down_mask(&[]), 0);
+        assert_eq!(pack_down_mask(&[false, true, false, true]), 0b1010);
+    }
+
+    #[test]
+    fn reset_stats_keeps_entries() {
+        let mut c: DecisionCache<u64, u64> = DecisionCache::new(4);
+        c.put(1, 10);
+        let _ = c.get(&1);
+        c.reset_stats();
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 0);
+        assert_eq!(c.get(&1), Some(10));
+    }
+}

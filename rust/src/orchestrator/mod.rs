@@ -25,9 +25,12 @@
 //!   single-epoch corner (control period = horizon), pinned bit-exact
 //!   against the historical frozen-snapshot evaluation.
 
+pub mod cache;
+
 use std::sync::Arc;
 
 use crate::agent::{bruteforce, Agent};
+use crate::orchestrator::cache::{pack_down_mask, DecisionCache, DecisionKey};
 use crate::metrics::{
     EpochRecord, LatencySummary, OnlineReport, RoundRecord, RunMetrics, TrafficMetrics,
 };
@@ -76,7 +79,11 @@ fn sync_drift_tables(
         *seg = now;
         *phys = env.state.clone();
         seg.apply_conds(phys);
-        core.retable(&env.model, phys);
+        // Delta refill: only the (user, placement) rows whose inputs
+        // actually changed are recomputed — bitwise identical to the full
+        // `retable()` (property-pinned), and what keeps a cond-only drift
+        // boundary from paying the whole users x models x placements bill.
+        core.retable_delta(&env.model, phys);
     }
 }
 
@@ -103,6 +110,15 @@ pub struct Orchestrator {
     /// (`[perf] scheduler`). Heap is the reference; the wheel is
     /// property-pinned bitwise identical, so this only changes cost.
     pub scheduler: crate::sim::SchedulerKind,
+    /// Timing-wheel bucket-width policy (`[perf] wheel_granularity`).
+    /// Ignored on the heap; any mode is property-pinned bitwise identical
+    /// to the heap, so this only changes calendar cost.
+    pub wheel_granularity: crate::sim::WheelGranularity,
+    /// Decision-memo capacity (`[perf] decision_cache`), entries; 0
+    /// disables. Only frozen evaluations (`explore = false`, `learn =
+    /// false`) consult the cache — a learning agent's decide is not pure —
+    /// and hits are property-pinned bitwise identical to cache-off.
+    pub decision_cache: usize,
     /// `[metrics] approx_threshold`: runs completing more than this many
     /// requests summarize latency through the bounded-memory histogram
     /// path of [`TrafficMetrics::from_outcome_with`]. 0 = always exact.
@@ -116,6 +132,8 @@ impl Orchestrator {
             agent,
             recorder: None,
             scheduler: crate::sim::SchedulerKind::Heap,
+            wheel_granularity: crate::sim::WheelGranularity::Span,
+            decision_cache: crate::config::PerfConfig::DEFAULT_DECISION_CACHE,
             metrics_approx_threshold: 0,
         }
     }
@@ -462,7 +480,20 @@ impl Orchestrator {
         let period = if period_ms.is_finite() && period_ms > 0.0 { period_ms } else { horizon_ms };
 
         let mut core = DesCore::with_scheduler(self.scheduler);
+        core.set_wheel_granularity(self.wheel_granularity);
         let mut out = DesOutcome::default();
+        // Decision memo: engaged only on frozen evaluations, where the
+        // agent's decide is a pure zero-RNG function of the quantized
+        // encoding (the key fully determines the feature vector) — a hit
+        // replays the bit-identical decision. Exploring or learning runs
+        // force capacity 0: epsilon draws and table updates make decide
+        // impure, so those paths never consult the memo.
+        let mut memo: DecisionCache<DecisionKey, Decision> =
+            DecisionCache::new(if !explore && !learn { self.decision_cache } else { 0 });
+        let policy_id = crate::config::ADMISSION_POLICIES
+            .iter()
+            .position(|&p| p == admission.policy)
+            .unwrap_or(0) as u8;
         // Physics state: the background snapshot under the drift segment's
         // cond overrides. Live queue depths are *observation only* — the
         // DES models congestion as real queueing, so folding it back into
@@ -521,6 +552,25 @@ impl Orchestrator {
             let epsilon = if explore { self.agent.epsilon() } else { 0.0 };
             let decision = match decide(&obs) {
                 Some(d) => d,
+                None if memo.enabled() => {
+                    let key = DecisionKey {
+                        state_key: enc.key,
+                        down_mask: if core.faults_active() {
+                            pack_down_mask(core.node_down_mask())
+                        } else {
+                            0
+                        },
+                        policy_id,
+                    };
+                    match memo.get(&key) {
+                        Some(d) => d,
+                        None => {
+                            let d = self.agent.decide(&enc, explore);
+                            memo.put(key, d.clone());
+                            d
+                        }
+                    }
+                }
                 None => self.agent.decide(&enc, explore),
             };
             let (shed0, defer0, degrade0, failed0) =
@@ -683,6 +733,8 @@ impl Orchestrator {
             }
         }
         core.finalize(&mut out);
+        out.perf.cache_hits = memo.hits();
+        out.perf.cache_misses = memo.misses();
         if let Some(mut rec) = core.take_recorder() {
             rec.flush();
             self.recorder = Some(rec);

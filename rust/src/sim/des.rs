@@ -52,11 +52,11 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::collections::VecDeque;
 
-use crate::monitor::StateView;
+use crate::monitor::{NodeState, StateView};
 use crate::sim::admission::{AdmissionPolicy, AdmitQuery, AdmitVerdict};
 use crate::sim::faults::{FaultPlan, FaultTarget, RetryPolicy};
 use crate::sim::latency::{ResponseModel, RoundCtx};
-use crate::sim::sched::{EventQueue, SchedEvent, SchedulerKind};
+use crate::sim::sched::{EventQueue, SchedEvent, SchedulerKind, WheelGranularity};
 use crate::sim::telemetry::{GaugeMode, Recorder, SpanKind};
 use crate::sim::workload::Request;
 use crate::types::{Action, Decision, ModelId, Placement, NUM_MODELS};
@@ -486,6 +486,14 @@ pub struct DesCore {
     /// Flight-arena pushes of the current run that landed in retained
     /// capacity (no fresh allocation) — the `arena_reuse` perf counter.
     arena_reuse: u64,
+    /// (user, placement) table rows recomputed since [`DesCore::begin`] —
+    /// a full [`DesCore::retable`] charges the whole table, while
+    /// [`DesCore::retable_delta`] charges only the dirty rows.
+    retable_rows: u64,
+    /// Node-state snapshot the current tables were filled from, in DES
+    /// node order (devices, edges, cloud). Lets `retable_delta` diff the
+    /// incoming state bitwise and skip clean rows.
+    snap: Vec<NodeState>,
     /// Record per-event virtual times into `DesOutcome::event_times`
     /// (monotonicity witness). Off by default: it is test-only
     /// instrumentation that costs a push per event on the hot path.
@@ -543,9 +551,19 @@ impl DesCore {
             fault_rng: Rng::new(0),
             fault_scratch: Vec::new(),
             arena_reuse: 0,
+            retable_rows: 0,
+            snap: Vec::new(),
             collect_event_times: false,
             recorder: None,
         }
+    }
+
+    /// Set the timing-wheel bucket-width policy of the underlying event
+    /// queue (no-op on the heap). Pop order — and therefore every outcome
+    /// — is bitwise identical for any granularity (the property suite
+    /// pins auto and fixed widths against the heap).
+    pub fn set_wheel_granularity(&mut self, gran: WheelGranularity) {
+        self.heap.set_granularity(gran);
     }
 
     /// Which event scheduler this core runs on.
@@ -637,6 +655,102 @@ impl DesCore {
         }
         self.link_queue_ms = model.net.cal.link_queue_ms;
         self.sigma = model.net.cal.noise_sigma;
+        self.retable_rows += (users * self.num_places) as u64;
+        self.snapshot_state(state);
+    }
+
+    /// Capture the node states the tables were computed from, in DES node
+    /// order (devices, edges, cloud) — the diff baseline for
+    /// [`DesCore::retable_delta`].
+    fn snapshot_state<S: StateView>(&mut self, state: &S) {
+        self.snap.clear();
+        self.snap.reserve(self.users + self.num_edges + 1);
+        for d in 0..self.users {
+            self.snap.push(*state.device_node(d));
+        }
+        for e in 0..self.num_edges {
+            self.snap.push(*state.edge_node(e));
+        }
+        self.snap.push(*state.cloud_node());
+    }
+
+    /// Like [`DesCore::retable`], but recomputes only the (user,
+    /// placement) rows whose inputs actually changed since the tables were
+    /// last filled — bitwise identical to the full refill (the property
+    /// suite pins this), at a fraction of the work on cond-only or
+    /// single-node drift boundaries.
+    ///
+    /// Dirtiness follows the latency law's true dependencies:
+    /// - a service cell (u, m, p) reads only the *executing* node's
+    ///   cpu/mem ([`ResponseModel::single_stream_service_ms`]), so it is
+    ///   dirty iff that node's load bits changed;
+    /// - a path cell (u, p) reads only device u's cond and u's *home*
+    ///   edge's cond ([`crate::network::Network::path_overhead_ms_with`]),
+    ///   so it is dirty iff either cond changed. Ingress is pure topology
+    ///   and never changes after install.
+    pub fn retable_delta<S: StateView>(&mut self, model: &ResponseModel, state: &S) {
+        assert!(self.users > 0, "DesCore::install must precede retable");
+        assert_eq!(state.users(), self.users, "retable users vs installed topology");
+        assert_eq!(model.net.topo.users(), self.users, "retable topology arity");
+        assert_eq!(model.net.topo.num_edges(), self.num_edges, "retable topology edges");
+        assert_eq!(state.num_edges(), self.num_edges, "retable state edges");
+        let n = self.users + self.num_edges + 1;
+        if self.snap.len() != n
+            || self.link_queue_ms.to_bits() != model.net.cal.link_queue_ms.to_bits()
+            || self.sigma.to_bits() != model.net.cal.noise_sigma.to_bits()
+        {
+            // No usable baseline (or the calibration itself moved): fall
+            // back to the full refill.
+            self.fill_tables(model, state);
+            return;
+        }
+        let node_at = |i: usize| -> &NodeState {
+            if i < self.users {
+                state.device_node(i)
+            } else if i < self.users + self.num_edges {
+                state.edge_node(i - self.users)
+            } else {
+                state.cloud_node()
+            }
+        };
+        let mut load_dirty = vec![false; n];
+        let mut cond_dirty = vec![false; n];
+        for i in 0..n {
+            let old = &self.snap[i];
+            let new = node_at(i);
+            load_dirty[i] =
+                old.cpu.to_bits() != new.cpu.to_bits() || old.mem.to_bits() != new.mem.to_bits();
+            cond_dirty[i] = old.cond != new.cond;
+        }
+
+        let topo = &model.net.topo;
+        let places = topo.placements();
+        let mut rows: u64 = 0;
+        for device in 0..self.users {
+            let home = self.users + topo.home_edge(device);
+            for (slot, &p) in places.iter().enumerate() {
+                let exec = compute_node_index(self.users, self.num_edges, device, p);
+                let svc_dirty = load_dirty[exec];
+                let path_dirty =
+                    cond_dirty[device] || (!matches!(p, Placement::Local) && cond_dirty[home]);
+                if !svc_dirty && !path_dirty {
+                    continue;
+                }
+                rows += 1;
+                if svc_dirty {
+                    for m in 0..NUM_MODELS {
+                        self.svc[(device * NUM_MODELS + m) * self.num_places + slot] = model
+                            .single_stream_service_ms(device, ModelId(m as u8), p, state);
+                    }
+                }
+                if path_dirty {
+                    self.path[device * self.num_places + slot] =
+                        model.path_overhead_ms(device, p, state);
+                }
+            }
+        }
+        self.retable_rows += rows;
+        self.snapshot_state(state);
     }
 
     /// Memoized single-stream service time for (device, model, placement)
@@ -791,6 +905,7 @@ impl DesCore {
         assert!(self.users > 0, "DesCore::install must precede begin");
         self.heap.clear(); // also resets the queue's perf counters
         self.arena_reuse = 0;
+        self.retable_rows = 0;
         self.flights.clear();
         for q in self.nodes.iter_mut() {
             q.busy = 0;
@@ -1665,6 +1780,7 @@ impl DesCore {
         }
         out.perf = self.heap.perf();
         out.perf.arena_reuse = self.arena_reuse;
+        out.perf.retable_rows = self.retable_rows;
     }
 
     /// Number of compute nodes in the installed layout (each end device,

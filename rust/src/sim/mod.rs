@@ -34,7 +34,7 @@ pub use env::{Dynamics, Env, StepOutcome};
 pub use faults::{FaultPlan, FaultSchedule, FaultState, FaultTarget, RetryPolicy};
 pub use latency::{ResponseModel, RoundCtx};
 pub use scenarios::{FleetScenario, FLEET_SCENARIOS};
-pub use sched::{EventQueue, SchedEvent, SchedulerKind};
+pub use sched::{EventQueue, SchedEvent, SchedulerKind, WheelGranularity};
 pub use shard::{
     run_sharded_open_loop, ShardPlan, ShardedDes, ShardedOutcome, StreamSummary,
 };

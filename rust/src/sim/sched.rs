@@ -76,6 +76,48 @@ impl SchedulerKind {
     }
 }
 
+/// How the timing wheel picks its bucket width at each rebase
+/// (`[perf] wheel_granularity` / `--wheel-granularity`). Strictly
+/// observational like [`SchedulerKind`]: the wheel's index function is
+/// monotone in time for *any* positive width, so every mode pops the
+/// identical sequence (property-pinned against the heap) — only the
+/// bucket-occupancy profile, and therefore the op cost, changes.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum WheelGranularity {
+    /// Fit the bucket width to each rebase batch's time span — the
+    /// original behavior and the default.
+    #[default]
+    Span,
+    /// Self-tune: width tracks an EMA of the observed inter-event gap at
+    /// rebase points (a few events per bucket in steady state).
+    Auto,
+    /// Fixed bucket width in ms (validated positive at config load).
+    Fixed(f64),
+}
+
+impl WheelGranularity {
+    /// Parse the `[perf] wheel_granularity` / `--wheel-granularity`
+    /// value: `"span"` | `"auto"` | a positive width in ms.
+    pub fn by_name(name: &str) -> Option<WheelGranularity> {
+        match name.to_ascii_lowercase().as_str() {
+            "span" => Some(WheelGranularity::Span),
+            "auto" => Some(WheelGranularity::Auto),
+            s => match s.parse::<f64>() {
+                Ok(ms) if ms.is_finite() && ms > 0.0 => Some(WheelGranularity::Fixed(ms)),
+                _ => None,
+            },
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            WheelGranularity::Span => "span".into(),
+            WheelGranularity::Auto => "auto".into(),
+            WheelGranularity::Fixed(ms) => format!("{ms}"),
+        }
+    }
+}
+
 /// Calendar buckets per rebase span (power of two for the bitmap words).
 const NB: usize = 1024;
 const WORDS: usize = NB / 64;
@@ -99,6 +141,11 @@ struct Wheel<T> {
     /// bottom run); `NB` means the calendar is exhausted.
     next: usize,
     len: usize,
+    /// Bucket-width policy applied at each rebase.
+    gran: WheelGranularity,
+    /// EMA of the mean inter-event gap observed over rebase batches
+    /// (ms); 0 until the first multi-event batch. Feeds `Auto` widths.
+    gap_ema: f64,
 }
 
 impl<T: SchedEvent> Wheel<T> {
@@ -115,6 +162,8 @@ impl<T: SchedEvent> Wheel<T> {
             width_ms: 1.0,
             next: NB,
             len: 0,
+            gran: WheelGranularity::Span,
+            gap_ema: 0.0,
         }
     }
 
@@ -214,8 +263,15 @@ impl<T: SchedEvent> Wheel<T> {
     /// Re-fit the calendar to the overflow's time span and redistribute.
     /// Called only with an empty bottom and an exhausted calendar, and
     /// overflow events are never earlier than anything already popped or
-    /// pending (invariant 2), so ordering is preserved.
+    /// pending (invariant 2), so ordering is preserved. `Span` width fits
+    /// the whole batch (the original behavior, bit-for-bit); `Auto` and
+    /// `Fixed` widths may leave the batch's tail past the calendar — it
+    /// stays in the overflow for a later rebase, which also preserves
+    /// invariant 2 (kept events are at least `base + NB*width`). The
+    /// batch's minimum always maps to bucket 0, so every rebase makes
+    /// progress.
     fn rebase(&mut self, perf: &mut PerfCounters) {
+        perf.rebases += 1;
         let mut lo = f64::INFINITY;
         let mut hi = f64::NEG_INFINITY;
         for ev in &self.overflow {
@@ -228,17 +284,48 @@ impl<T: SchedEvent> Wheel<T> {
             }
         }
         let span = hi - lo;
+        let n = self.overflow.len();
+        if n > 1 && span > 0.0 {
+            let gap = span / (n - 1) as f64;
+            self.gap_ema =
+                if self.gap_ema > 0.0 { 0.875 * self.gap_ema + 0.125 * gap } else { gap };
+        }
         self.base_ms = lo;
         // NB-1 divisions so the maximum maps to index NB-1; a
         // single-instant batch takes any positive width.
-        self.width_ms = if span > 0.0 { span / (NB - 1) as f64 } else { 1.0 };
+        let fit = if span > 0.0 { span / (NB - 1) as f64 } else { 1.0 };
+        self.width_ms = match self.gran {
+            WheelGranularity::Span => fit,
+            // A few events per bucket in steady state; floor keeps a
+            // degenerate EMA from collapsing the calendar to one bucket.
+            WheelGranularity::Auto => {
+                if self.gap_ema > 0.0 {
+                    (4.0 * self.gap_ema).max(1e-6)
+                } else {
+                    fit
+                }
+            }
+            WheelGranularity::Fixed(ms) => ms,
+        };
         self.next = 0;
-        perf.queue_ops += 2 * self.overflow.len() as u64;
+        perf.queue_ops += 2 * n as u64;
+        let mut kept: Vec<T> = Vec::new();
         for ev in std::mem::take(&mut self.overflow) {
-            let idx = self.index_of(ev.time_ms()).min(NB - 1);
+            let mut idx = self.index_of(ev.time_ms());
+            if idx >= NB {
+                if matches!(self.gran, WheelGranularity::Span) {
+                    // span width fits the batch by construction; only
+                    // float edge cases land here — clamp as before
+                    idx = NB - 1;
+                } else {
+                    kept.push(ev);
+                    continue;
+                }
+            }
             self.buckets[idx].push(ev);
             self.occupied[idx / 64] |= 1u64 << (idx % 64);
         }
+        self.overflow = kept;
     }
 
     fn clear(&mut self) {
@@ -257,6 +344,8 @@ impl<T: SchedEvent> Wheel<T> {
         self.width_ms = 1.0;
         self.next = NB;
         self.len = 0;
+        // keep the configured granularity; forget the learned gap
+        self.gap_ema = 0.0;
     }
 }
 
@@ -288,6 +377,25 @@ impl<T: SchedEvent> EventQueue<T> {
         match &self.imp {
             Imp::Heap(_) => SchedulerKind::Heap,
             Imp::Wheel(_) => SchedulerKind::Wheel,
+        }
+    }
+
+    /// Set the wheel's bucket-width policy (`[perf] wheel_granularity`).
+    /// Applied from the next rebase on; a strict no-op on the heap (which
+    /// has no buckets to size) and on the pop order everywhere — see
+    /// [`WheelGranularity`].
+    pub fn set_granularity(&mut self, gran: WheelGranularity) {
+        if let Imp::Wheel(w) = &mut self.imp {
+            w.gran = gran;
+        }
+    }
+
+    /// The wheel's configured bucket-width policy ([`WheelGranularity`]
+    /// default for the heap, which ignores it).
+    pub fn granularity(&self) -> WheelGranularity {
+        match &self.imp {
+            Imp::Heap(_) => WheelGranularity::default(),
+            Imp::Wheel(w) => w.gran,
         }
     }
 
@@ -402,15 +510,27 @@ mod tests {
         }
     }
 
-    /// Drive both queues through an identical randomized push/pop script
-    /// (bursty pushes, exact ties, both tie classes, DES-style follow-up
-    /// pushes at popped times) and require the identical pop sequence.
+    /// Drive the heap and one wheel per granularity mode through an
+    /// identical randomized push/pop script (bursty pushes, exact ties,
+    /// both tie classes, DES-style follow-up pushes at popped times) and
+    /// require the identical pop sequence from every queue.
     #[test]
     fn wheel_pops_exactly_like_the_heap() {
         for seed in 0..20u64 {
             let mut rng = Rng::new(0xC0FFEE ^ seed);
             let mut heap = EventQueue::<Ev>::new(SchedulerKind::Heap);
-            let mut wheel = EventQueue::<Ev>::new(SchedulerKind::Wheel);
+            let mut wheels: Vec<EventQueue<Ev>> = [
+                WheelGranularity::Span,
+                WheelGranularity::Auto,
+                WheelGranularity::Fixed(7.5),
+            ]
+            .iter()
+            .map(|&g| {
+                let mut q = EventQueue::<Ev>::new(SchedulerKind::Wheel);
+                q.set_granularity(g);
+                q
+            })
+            .collect();
             let mut seq = 0u64;
             let mut clock = 0.0f64;
             let mut popped = 0usize;
@@ -423,18 +543,25 @@ mod tests {
                     seq: *seq,
                 }
             };
+            let push_all =
+                |heap: &mut EventQueue<Ev>, wheels: &mut Vec<EventQueue<Ev>>, ev: Ev| {
+                    heap.push(ev);
+                    for w in wheels.iter_mut() {
+                        w.push(ev);
+                    }
+                };
             // initial burst (the "admit the whole trace" shape)
             for _ in 0..300 {
                 let ev = mk(&mut rng, &mut seq, 0.0);
-                heap.push(ev);
-                wheel.push(ev);
+                push_all(&mut heap, &mut wheels, ev);
             }
             for _ in 0..4_000 {
                 if rng.bool(0.55) && !heap.is_empty() {
-                    assert_eq!(heap.peek_time(), wheel.peek_time());
                     let a = heap.pop().unwrap();
-                    let b = wheel.pop().unwrap();
-                    assert_eq!(a, b, "seed {seed}: pop #{popped} diverged");
+                    for w in wheels.iter_mut() {
+                        let b = w.pop().unwrap();
+                        assert_eq!(a, b, "seed {seed}: pop #{popped} diverged");
+                    }
                     assert!(a.time >= clock, "time went backwards");
                     clock = a.time;
                     popped += 1;
@@ -442,25 +569,31 @@ mod tests {
                     // after the popped time (including exactly at it).
                     if rng.bool(0.7) {
                         let ev = mk(&mut rng, &mut seq, clock);
-                        heap.push(ev);
-                        wheel.push(ev);
+                        push_all(&mut heap, &mut wheels, ev);
                     }
                 } else {
                     // bursts far ahead exercise overflow + rebase
                     let base = clock + if rng.bool(0.2) { 5_000.0 } else { 0.0 };
                     let ev = mk(&mut rng, &mut seq, base);
-                    heap.push(ev);
-                    wheel.push(ev);
+                    push_all(&mut heap, &mut wheels, ev);
                 }
-                assert_eq!(heap.len(), wheel.len());
+                for w in &wheels {
+                    assert_eq!(heap.len(), w.len());
+                }
             }
             // full drain must agree to the last event
             while let Some(a) = heap.pop() {
-                let b = wheel.pop().unwrap();
-                assert_eq!(a, b, "seed {seed}: drain diverged");
+                for w in wheels.iter_mut() {
+                    let b = w.pop().unwrap();
+                    assert_eq!(a, b, "seed {seed}: drain diverged");
+                }
             }
-            assert!(wheel.pop().is_none());
-            assert!(wheel.is_empty());
+            for w in wheels.iter_mut() {
+                assert!(w.pop().is_none());
+                assert!(w.is_empty());
+                assert!(w.perf().rebases > 0, "script must exercise rebase");
+            }
+            assert_eq!(heap.perf().rebases, 0, "heap never rebases");
         }
     }
 
@@ -528,5 +661,42 @@ mod tests {
         assert_eq!(SchedulerKind::Heap.label(), "heap");
         assert_eq!(SchedulerKind::Wheel.label(), "wheel");
         assert_eq!(SchedulerKind::default(), SchedulerKind::Heap);
+    }
+
+    #[test]
+    fn granularity_parses_and_labels() {
+        assert_eq!(WheelGranularity::by_name("auto"), Some(WheelGranularity::Auto));
+        assert_eq!(WheelGranularity::by_name("AUTO"), Some(WheelGranularity::Auto));
+        assert_eq!(WheelGranularity::by_name("span"), Some(WheelGranularity::Span));
+        assert_eq!(WheelGranularity::by_name("2.5"), Some(WheelGranularity::Fixed(2.5)));
+        assert_eq!(WheelGranularity::by_name("0"), None);
+        assert_eq!(WheelGranularity::by_name("-1"), None);
+        assert_eq!(WheelGranularity::by_name("inf"), None);
+        assert_eq!(WheelGranularity::by_name("nan"), None);
+        assert_eq!(WheelGranularity::by_name("coarse"), None);
+        assert_eq!(WheelGranularity::Auto.label(), "auto");
+        assert_eq!(WheelGranularity::Span.label(), "span");
+        assert_eq!(WheelGranularity::Fixed(2.5).label(), "2.5");
+        assert_eq!(WheelGranularity::default(), WheelGranularity::Span);
+    }
+
+    #[test]
+    fn granularity_setter_is_heap_noop_and_survives_clear() {
+        let mut h = EventQueue::<Ev>::new(SchedulerKind::Heap);
+        h.set_granularity(WheelGranularity::Auto);
+        assert_eq!(h.granularity(), WheelGranularity::Span, "heap ignores it");
+
+        let mut w = EventQueue::<Ev>::new(SchedulerKind::Wheel);
+        w.set_granularity(WheelGranularity::Auto);
+        assert_eq!(w.granularity(), WheelGranularity::Auto);
+        for i in 0..50 {
+            w.push(Ev { time: i as f64 * 3.0, prio: 0, seq: i });
+        }
+        while w.pop().is_some() {}
+        assert!(w.perf().rebases > 0);
+        w.clear();
+        // counters reset with the queue, but the policy is configuration
+        assert_eq!(w.perf().rebases, 0);
+        assert_eq!(w.granularity(), WheelGranularity::Auto);
     }
 }

@@ -61,7 +61,7 @@ use crate::sim::arrivals::{ArrivalProcess, ArrivalStream, IdMode};
 use crate::sim::des::BacklogStats;
 use crate::sim::drift::DriftSchedule;
 use crate::sim::latency::ResponseModel;
-use crate::sim::sched::{EventQueue, SchedEvent, SchedulerKind};
+use crate::sim::sched::{EventQueue, SchedEvent, SchedulerKind, WheelGranularity};
 use crate::sim::workload::Request;
 use crate::types::{Decision, Placement};
 use crate::util::perf::PerfCounters;
@@ -199,11 +199,20 @@ pub struct ShardPlan {
     /// arrival streams. Outcomes are bitwise identical for either kind
     /// (the property suite pins it).
     pub sched: SchedulerKind,
+    /// Timing-wheel bucket-width policy for every queue the plan builds
+    /// (`[perf] wheel_granularity`). Ignored by the heap; every mode is
+    /// property-pinned bitwise identical, so this only changes cost.
+    pub gran: WheelGranularity,
 }
 
 impl Default for ShardPlan {
     fn default() -> ShardPlan {
-        ShardPlan { shards: 1, window_ms: 0.0, sched: SchedulerKind::Heap }
+        ShardPlan {
+            shards: 1,
+            window_ms: 0.0,
+            sched: SchedulerKind::Heap,
+            gran: WheelGranularity::Span,
+        }
     }
 }
 
@@ -579,10 +588,12 @@ struct CloudSim {
 }
 
 impl CloudSim {
-    fn new(vcpus: usize, sched: SchedulerKind) -> CloudSim {
+    fn new(vcpus: usize, sched: SchedulerKind, gran: WheelGranularity) -> CloudSim {
+        let mut heap = EventQueue::new(sched);
+        heap.set_granularity(gran);
         CloudSim {
             queue: ServerQueue::new(vcpus),
-            heap: EventQueue::new(sched),
+            heap,
             seq: 0,
             slab: FlightSlab::default(),
             summary: StreamSummary::default(),
@@ -601,8 +612,8 @@ impl CloudSim {
     /// in canonical `(join_ms, id)` order — the conservative-window
     /// invariant guarantees every join is strictly after `done_ms`, so no
     /// shard can rewrite the cloud's past.
-    fn push_arrivals(&mut self, batch: Vec<CloudArrival>) {
-        for a in batch {
+    fn push_arrivals(&mut self, batch: &mut Vec<CloudArrival>) {
+        for a in batch.drain(..) {
             debug_assert!(
                 a.join_ms > self.done_ms,
                 "cloud join at {} behind settled time {}",
@@ -873,7 +884,15 @@ impl ShardedDes {
                 sigma: cal.noise_sigma,
                 noise_seed,
                 stream,
-                heap: EventQueue::new(plan.sched),
+                heap: {
+                    // One wheel arena per shard, built once here and kept
+                    // across every window of the run (run_window never
+                    // drops the queue) — rebases recycle the same bucket
+                    // vectors instead of reallocating per window.
+                    let mut h = EventQueue::new(plan.sched);
+                    h.set_granularity(plan.gran);
+                    h
+                },
                 seq: 0,
                 slab: FlightSlab::default(),
                 outbox: Vec::new(),
@@ -901,7 +920,7 @@ impl ShardedDes {
 
         ShardedDes {
             sims,
-            cloud: CloudSim::new(topo.cloud.vcpus, plan.sched),
+            cloud: CloudSim::new(topo.cloud.vcpus, plan.sched, plan.gran),
             horizon_ms,
             window_ms,
             shards,
@@ -947,7 +966,9 @@ impl ShardedDes {
             // device-tagged, so this order is a property of the trace —
             // identical however the domains were grouped into shards.
             batch.sort_by(|a, b| a.join_ms.total_cmp(&b.join_ms).then_with(|| a.id.cmp(&b.id)));
-            self.cloud.push_arrivals(std::mem::take(&mut batch));
+            // Drain in place: the merge buffer's capacity survives across
+            // windows instead of reallocating a fresh Vec per sync.
+            self.cloud.push_arrivals(&mut batch);
             self.cloud.run_until(end);
             windows += 1;
             let offered: u64 = sims.iter().map(|s| s.offered).sum();
@@ -1406,7 +1427,7 @@ mod tests {
             &state,
             &decision,
             &drift,
-            ShardPlan { shards: 2, window_ms: 0.0, sched: SchedulerKind::Wheel },
+            ShardPlan { shards: 2, window_ms: 0.0, sched: SchedulerKind::Wheel, ..Default::default() },
             None,
         );
         assert_eq!(wheel.summary.digest, heap.summary.digest);

@@ -32,6 +32,20 @@ pub struct PerfCounters {
     /// in-flight vectors) — threaded in by the owning engine, not the
     /// queue itself.
     pub arena_reuse: u64,
+    /// Decision-cache hits (control plane): agent/oracle decisions served
+    /// from the memo instead of recomputed — threaded in by the
+    /// orchestrator, not the queue itself.
+    pub cache_hits: u64,
+    /// Decision-cache misses (control plane): decisions computed fresh
+    /// and inserted into the memo.
+    pub cache_misses: u64,
+    /// (user, placement) service/path table rows recomputed at drift or
+    /// fault boundaries — `DesCore::retable_delta` counts only dirty
+    /// rows; a full `fill_tables` charges the whole table.
+    pub retable_rows: u64,
+    /// Timing-wheel rebase passes (overflow redistributed into a fresh
+    /// bucket window). Always 0 on the heap path.
+    pub rebases: u64,
 }
 
 impl PerfCounters {
@@ -45,6 +59,10 @@ impl PerfCounters {
             self.peak_depth = other.peak_depth;
         }
         self.arena_reuse += other.arena_reuse;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.retable_rows += other.retable_rows;
+        self.rebases += other.rebases;
     }
 }
 
@@ -66,6 +84,10 @@ mod tests {
             queue_ops: 40,
             peak_depth: 5,
             arena_reuse: 2,
+            cache_hits: 7,
+            cache_misses: 4,
+            retable_rows: 20,
+            rebases: 2,
         };
         let b = PerfCounters {
             scheduled: 3,
@@ -73,6 +95,10 @@ mod tests {
             queue_ops: 10,
             peak_depth: 9,
             arena_reuse: 1,
+            cache_hits: 1,
+            cache_misses: 2,
+            retable_rows: 5,
+            rebases: 1,
         };
         a.merge(&b);
         assert_eq!(a.scheduled, 13);
@@ -80,6 +106,10 @@ mod tests {
         assert_eq!(a.queue_ops, 50);
         assert_eq!(a.peak_depth, 9);
         assert_eq!(a.arena_reuse, 3);
+        assert_eq!(a.cache_hits, 8);
+        assert_eq!(a.cache_misses, 6);
+        assert_eq!(a.retable_rows, 25);
+        assert_eq!(a.rebases, 3);
     }
 
     #[test]

@@ -1,0 +1,476 @@
+//! Property tests of the control-plane fast path (PR 10): the decision
+//! memo, the delta retable and the adaptive wheel granularity are pure
+//! cost optimisations — every one must be BITWISE indistinguishable from
+//! its slow-path reference. Cache-on == cache-off (completion streams,
+//! epoch rewards, RNG draw order) across random drift schedules, all four
+//! admission policies and fault plans; `retable_delta` == full `retable`
+//! cell for cell; wheel `auto`/fixed granularities == heap digests on the
+//! property_sched open-loop matrix. Any divergence is a fast-path bug,
+//! never a tolerance issue.
+
+use eeco::agent::baseline::FixedAgent;
+use eeco::agent::qlearning::QTableAgent;
+use eeco::agent::ActionSet;
+use eeco::config::{AdmissionConfig, ADMISSION_POLICIES};
+use eeco::monitor::{NodeState, TopoState};
+use eeco::network::Network;
+use eeco::metrics::OnlineReport;
+use eeco::orchestrator::{ControlCfg, Orchestrator};
+use eeco::prelude::*;
+use eeco::sim::arrivals::schedule;
+use eeco::sim::faults::FaultEvent;
+use eeco::sim::{
+    des, DriftSchedule, Env, FaultPlan, FaultSchedule, FaultState, FaultTarget, ResponseModel,
+    RetryPolicy, SchedulerKind, WheelGranularity,
+};
+use eeco::util::prop::forall;
+use eeco::util::rng::Rng;
+
+fn multi_edge_model(users: usize, edges: usize) -> ResponseModel {
+    ResponseModel::new(Network::with_edges(Scenario::exp_b(users), Calibration::default(), edges))
+}
+
+fn rand_decision_for(rng: &mut Rng, topo: &Topology) -> Decision {
+    Decision(
+        (0..topo.users())
+            .map(|_| topo.action_from_index(rng.below(topo.actions_per_device())))
+            .collect(),
+    )
+}
+
+fn rand_process(rng: &mut Rng) -> ArrivalProcess {
+    match rng.below(3) {
+        0 => ArrivalProcess::SyncRounds { period_ms: rng.range_f64(200.0, 2000.0) },
+        1 => ArrivalProcess::Poisson { rate_per_s: rng.range_f64(0.5, 4.0) },
+        _ => ArrivalProcess::Mmpp {
+            calm_rate_per_s: rng.range_f64(0.2, 1.0),
+            burst_rate_per_s: rng.range_f64(2.0, 6.0),
+            mean_phase_ms: rng.range_f64(500.0, 3000.0),
+        },
+    }
+}
+
+fn rand_fault_schedule(rng: &mut Rng, edges: usize, horizon: f64) -> FaultSchedule {
+    let n = rng.range(1, 4);
+    let mut t = rng.range_f64(100.0, horizon / 4.0);
+    let mut events = Vec::with_capacity(n);
+    for _ in 0..n {
+        let target = match rng.below(3) {
+            0 => FaultTarget::Edge(rng.below(edges)),
+            1 => FaultTarget::Cloud,
+            _ => FaultTarget::Net,
+        };
+        let state = match rng.below(3) {
+            0 => FaultState::Down,
+            1 => FaultState::Up,
+            _ => FaultState::Flap {
+                period_ms: rng.range_f64(200.0, 1_000.0),
+                duty: rng.range_f64(0.1, 0.9),
+            },
+        };
+        events.push(FaultEvent { start_ms: t, target, state });
+        t += rng.range_f64(200.0, horizon / 3.0);
+    }
+    FaultSchedule::new(events).expect("strictly increasing times")
+}
+
+fn rand_retry(rng: &mut Rng) -> RetryPolicy {
+    match rng.below(3) {
+        0 => RetryPolicy::None,
+        1 => RetryPolicy::Backoff {
+            budget: rng.range(1, 4) as u32,
+            base_ms: rng.range_f64(20.0, 200.0),
+        },
+        _ => RetryPolicy::Failover {
+            budget: rng.range(1, 4) as u32,
+            base_ms: rng.range_f64(20.0, 200.0),
+        },
+    }
+}
+
+/// Bitwise comparison of two outcomes: completion stream (order, ids and
+/// every timing component), lifecycle counters and makespan. Identical to
+/// the property_sched pin — equality here implies the two runs drew the
+/// same RNG sequence in the same order.
+fn check_outcomes(a: &des::DesOutcome, b: &des::DesOutcome) -> Result<(), String> {
+    if a.completed.len() != b.completed.len() {
+        return Err(format!(
+            "completion counts diverged: {} vs {}",
+            a.completed.len(),
+            b.completed.len()
+        ));
+    }
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        if x.id != y.id {
+            return Err(format!("departure order diverged: {} vs {}", x.id, y.id));
+        }
+        let pairs = [
+            ("response", x.response_ms, y.response_ms),
+            ("depart", x.depart_ms, y.depart_ms),
+            ("link_wait", x.link_wait_ms, y.link_wait_ms),
+            ("queue", x.queue_ms, y.queue_ms),
+            ("service", x.service_ms, y.service_ms),
+        ];
+        for (what, p, q) in pairs {
+            if p.to_bits() != q.to_bits() {
+                return Err(format!("req {}: {what} {p} != {q}", x.id));
+            }
+        }
+    }
+    if a.makespan_ms.to_bits() != b.makespan_ms.to_bits() {
+        return Err(format!("makespan {} vs {}", a.makespan_ms, b.makespan_ms));
+    }
+    if (a.shed, a.deferrals, a.degraded) != (b.shed, b.deferrals, b.degraded) {
+        return Err("admission counters diverged".into());
+    }
+    if (a.failed, a.timed_out, a.retries, a.failovers)
+        != (b.failed, b.timed_out, b.retries, b.failovers)
+    {
+        return Err("failure-lifecycle counters diverged".into());
+    }
+    for (i, (x, y)) in a.node_backlog.iter().zip(&b.node_backlog).enumerate() {
+        if x.max != y.max || x.mean.to_bits() != y.mean.to_bits() {
+            return Err(format!("node {i} backlog diverged: {x:?} vs {y:?}"));
+        }
+    }
+    Ok(())
+}
+
+/// Epoch-for-epoch comparison of two online reports: same decisions, same
+/// bit-level rewards, same completion accounting.
+fn check_epochs(a: &OnlineReport, b: &OnlineReport) -> Result<(), String> {
+    if a.epochs.len() != b.epochs.len() {
+        return Err(format!("epoch counts diverged: {} vs {}", a.epochs.len(), b.epochs.len()));
+    }
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        if x.decision != y.decision {
+            return Err(format!("epoch {} decision diverged", x.epoch));
+        }
+        if x.reward.to_bits() != y.reward.to_bits() {
+            return Err(format!("epoch {} reward {} != {}", x.epoch, x.reward, y.reward));
+        }
+        if x.requests != y.requests || x.shed != y.shed || x.deferrals != y.deferrals {
+            return Err(format!("epoch {} accounting diverged", x.epoch));
+        }
+    }
+    Ok(())
+}
+
+/// An orchestrator whose frozen decide is state-dependent: a Q-table
+/// warmed by a short online-learning pass, then frozen. Deterministic in
+/// (users, edges, seed), so two calls build bit-identical controllers.
+fn warmed_orchestrator(users: usize, edges: usize, seed: u64) -> Orchestrator {
+    let net = Network::with_edges(Scenario::exp_b(users), Calibration::default(), edges);
+    let env = Env::with_network(net, AccuracyConstraint::Min, seed);
+    let agent = Box::new(QTableAgent::new(
+        users,
+        Hyper::paper_defaults(Algo::QLearning, users),
+        ActionSet::full(),
+        seed ^ 0xA6E27,
+    ));
+    let mut orch = Orchestrator::new(env, agent);
+    let _ = orch.train_online(
+        ArrivalProcess::Poisson { rate_per_s: 3.0 },
+        3_000.0,
+        seed ^ 0x17,
+        600.0,
+        &DriftSchedule::none(),
+    );
+    orch.env.freeze();
+    orch.env.reset_load();
+    orch
+}
+
+/// The tentpole pin: a memoized decision cache of ANY capacity (including
+/// eviction-heavy tiny ones) is bitwise transparent across random drift
+/// schedules, all four admission policies and random fault plans — same
+/// completion stream, same epoch decisions and rewards, zero extra RNG
+/// draws. The cache-off run must not even touch the memo counters.
+#[test]
+fn prop_decision_cache_is_bitwise_transparent() {
+    let mut total_hits = 0u64;
+    forall(
+        12,
+        0xCAC4E,
+        |rng| {
+            let drift = match rng.below(4) {
+                0 => String::new(),
+                1 => format!("{}:rate={}", rng.range(500, 2000), rng.range(2, 4)),
+                2 => format!("{}:net=weak;{}:net=regular", rng.range(400, 1500), rng.range(2500, 4500)),
+                _ => format!(
+                    "{}:rate={},dev=weak;{}:rate=1,edge=weak",
+                    rng.range(400, 1000),
+                    rng.range(2, 4),
+                    rng.range(2000, 3500)
+                ),
+            };
+            (
+                rng.range(2, 5),                // users
+                rng.range(1, 4),                // edges
+                rng.next_u64(),                 // seed
+                rng.below(4),                   // admission policy
+                rng.bool(0.5),                  // faults on?
+                rng.range(1, 600),              // cache capacity (tiny forces eviction)
+                rng.range_f64(500.0, 1500.0),   // control period
+                drift,
+            )
+        },
+        |(users, edges, seed, policy, faults, capacity, period, drift)| {
+            let (users, edges, seed) = (*users, *edges, *seed);
+            let mut drng = Rng::new(seed);
+            let horizon = 6_000.0;
+            let process = rand_process(&mut drng);
+            let drift = DriftSchedule::parse(drift).expect("generated spec parses");
+            let admission = AdmissionConfig {
+                policy: ADMISSION_POLICIES[*policy].into(),
+                slo_multiplier: drng.range_f64(1.3, 3.0),
+                defer_budget: drng.range(1, 4),
+                explicit: true,
+                ..Default::default()
+            };
+            let plan = if *faults {
+                FaultPlan {
+                    schedule: rand_fault_schedule(&mut drng, edges, horizon),
+                    retry: rand_retry(&mut drng),
+                    timeout_ms: if drng.bool(0.5) { drng.range_f64(300.0, 1_500.0) } else { 0.0 },
+                }
+            } else {
+                FaultPlan::none()
+            };
+            let ctl = ControlCfg { period_ms: *period, online_learning: false };
+
+            let run = |cache: usize| {
+                let mut orch = warmed_orchestrator(users, edges, seed);
+                orch.decision_cache = cache;
+                orch.evaluate_chaos(process, horizon, seed, &ctl, &drift, &admission, &plan)
+            };
+            let on = run(*capacity);
+            let off = run(0);
+            check_outcomes(&on.outcome, &off.outcome)?;
+            check_epochs(&on, &off)?;
+            let (hits, misses) =
+                (on.outcome.perf.cache_hits, on.outcome.perf.cache_misses);
+            if hits + misses != on.epochs.len() as u64 {
+                return Err(format!(
+                    "memo consulted {} times over {} epochs",
+                    hits + misses,
+                    on.epochs.len()
+                ));
+            }
+            if off.outcome.perf.cache_hits != 0 || off.outcome.perf.cache_misses != 0 {
+                return Err("cache-off run touched the memo counters".into());
+            }
+            total_hits += hits;
+            Ok(())
+        },
+    );
+    assert!(total_hits > 0, "the matrix never exercised a cache hit");
+}
+
+fn flip(c: NetCond) -> NetCond {
+    match c {
+        NetCond::Regular => NetCond::Weak,
+        NetCond::Weak => NetCond::Regular,
+    }
+}
+
+fn perturb_node(rng: &mut Rng, n: &mut NodeState) {
+    if rng.bool(0.4) {
+        n.cond = flip(n.cond);
+    }
+    if rng.bool(0.5) {
+        n.cpu = rng.range_f64(0.0, 1.0);
+    }
+    if rng.bool(0.3) {
+        n.mem = rng.range_f64(0.0, 1.0);
+    }
+}
+
+fn perturb(rng: &mut Rng, s: &mut TopoState) {
+    for d in &mut s.devices {
+        perturb_node(rng, d);
+    }
+    for e in &mut s.edges {
+        perturb_node(rng, e);
+    }
+    perturb_node(rng, &mut s.cloud);
+}
+
+/// `retable_delta` == full `retable`, cell for cell, bit for bit — across
+/// chained random state perturbations (cond flips, cpu/mem walks on every
+/// node class), so the dependency tracking is neither stale nor lossy.
+#[test]
+fn prop_retable_delta_matches_full_retable() {
+    forall(
+        30,
+        0x4E7AB,
+        |rng| (rng.range(1, 8), rng.range(1, 5), rng.next_u64()),
+        |&(users, edges, seed)| {
+            let model = multi_edge_model(users, edges);
+            let mut rng = Rng::new(seed ^ 0xDE17A);
+            let state = TopoState::idle(&model.net.topo);
+
+            let mut full = des::DesCore::new();
+            let mut delta = des::DesCore::new();
+            full.install(&model, &state);
+            delta.install(&model, &state);
+
+            let placements: Vec<Placement> = std::iter::once(Placement::Local)
+                .chain((0..edges).map(Placement::Edge))
+                .chain(std::iter::once(Placement::Cloud))
+                .collect();
+            let mut cur = state;
+            // Chain several boundaries: each delta builds on the last
+            // snapshot, exactly how drift boundaries hit the online core.
+            for round in 0..4 {
+                perturb(&mut rng, &mut cur);
+                full.retable(&model, &cur);
+                delta.retable_delta(&model, &cur);
+                for d in 0..users {
+                    for &p in &placements {
+                        if full.path_ms(d, p).to_bits() != delta.path_ms(d, p).to_bits() {
+                            return Err(format!(
+                                "round {round}: path({d}, {p:?}) {} != {}",
+                                full.path_ms(d, p),
+                                delta.path_ms(d, p)
+                            ));
+                        }
+                        for m in 0..NUM_MODELS {
+                            let id = ModelId(m as u8);
+                            let (a, b) = (full.service_ms(d, id, p), delta.service_ms(d, id, p));
+                            if a.to_bits() != b.to_bits() {
+                                return Err(format!(
+                                    "round {round}: svc({d}, {m}, {p:?}) {a} != {b}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Adaptive (`auto`) and fixed wheel granularities replay the heap bit
+/// for bit on the property_sched open-loop matrix — random workloads and
+/// (half the time) fault plans with timeouts and retries. Granularity
+/// only moves calendar cost, never event order.
+#[test]
+fn prop_wheel_granularities_match_heap() {
+    forall(
+        25,
+        0x64A9,
+        |rng| {
+            (
+                rng.range(1, 8),
+                rng.range(1, 4),
+                rng.next_u64(),
+                rng.bool(0.5),                 // faults on?
+                rng.range_f64(0.25, 40.0),     // fixed bucket width, ms
+            )
+        },
+        |&(users, edges, seed, faults, width)| {
+            let model = multi_edge_model(users, edges);
+            let mut drng = Rng::new(seed);
+            let decision = rand_decision_for(&mut drng, &model.net.topo);
+            let state = TopoState::idle(&model.net.topo);
+            let horizon = 5_000.0;
+            let process = rand_process(&mut drng);
+            let trace = schedule(process, users, horizon, seed);
+            let plan = if faults {
+                FaultPlan {
+                    schedule: rand_fault_schedule(&mut drng, edges, horizon),
+                    retry: rand_retry(&mut drng),
+                    timeout_ms: if drng.bool(0.5) { drng.range_f64(200.0, 1_500.0) } else { 0.0 },
+                }
+            } else {
+                FaultPlan::none()
+            };
+
+            let run = |sched: SchedulerKind, gran: WheelGranularity| {
+                let mut core = des::DesCore::with_scheduler(sched);
+                core.set_wheel_granularity(gran);
+                core.install(&model, &state);
+                core.set_fault_plan(&plan);
+                let mut out = des::DesOutcome::default();
+                core.run_open_loop_into(&decision, &trace, horizon, seed, &mut out);
+                out
+            };
+            let heap = run(SchedulerKind::Heap, WheelGranularity::Span);
+            for gran in [WheelGranularity::Auto, WheelGranularity::Fixed(width)] {
+                let wheel = run(SchedulerKind::Wheel, gran);
+                check_outcomes(&heap, &wheel)
+                    .map_err(|e| format!("{gran:?} vs heap: {e}"))?;
+                if heap.perf.scheduled != wheel.perf.scheduled
+                    || heap.perf.fired != wheel.perf.fired
+                    || heap.perf.peak_depth != wheel.perf.peak_depth
+                {
+                    return Err(format!(
+                        "{gran:?}: perf counters diverged: heap {:?} vs wheel {:?}",
+                        heap.perf, wheel.perf
+                    ));
+                }
+                if wheel.perf.queue_ops == 0 {
+                    return Err(format!("{gran:?}: queue-op counter must be nonzero"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Regression for the defer-budget reset: back-to-back frozen evaluations
+/// on ONE orchestrator under the `defer` ingress are bitwise identical —
+/// the policy's per-request budget state must not leak from the first
+/// evaluation into the second.
+#[test]
+fn defer_budget_does_not_leak_across_evaluations() {
+    let mut total_deferrals = 0usize;
+    forall(
+        8,
+        0xDEFE4,
+        |rng| {
+            (
+                rng.range(2, 6),               // users
+                rng.next_u64(),                // seed
+                rng.range_f64(600.0, 1500.0),  // control period
+                rng.range_f64(3.0, 6.0),       // arrival rate per user
+            )
+        },
+        |&(users, seed, period, rate)| {
+            let env = Env::new(Scenario::exp_a(users), Calibration::default(), AccuracyConstraint::Min, seed);
+            let mut orch =
+                Orchestrator::new(env, Box::new(FixedAgent::new(Tier::Edge(0), users)));
+            orch.env.freeze();
+            orch.env.reset_load();
+            let admission = AdmissionConfig {
+                policy: "defer".into(),
+                slo_multiplier: 1.2,
+                defer_budget: 2,
+                explicit: true,
+                ..Default::default()
+            };
+            let ctl = ControlCfg { period_ms: period, online_learning: false };
+            let process = ArrivalProcess::Poisson { rate_per_s: rate };
+            let mut run = || {
+                orch.evaluate_admission(
+                    process,
+                    6_000.0,
+                    seed,
+                    &ctl,
+                    &DriftSchedule::none(),
+                    &admission,
+                )
+            };
+            let first = run();
+            let second = run();
+            check_outcomes(&first.outcome, &second.outcome)
+                .map_err(|e| format!("second evaluation diverged: {e}"))?;
+            check_epochs(&first, &second)?;
+            total_deferrals += first.outcome.deferrals;
+            Ok(())
+        },
+    );
+    assert!(total_deferrals > 0, "the matrix never exercised a deferral");
+}

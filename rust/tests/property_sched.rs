@@ -319,7 +319,7 @@ fn prop_sharded_wheel_digest_matches_serial_heap() {
                     seed,
                     seed ^ 0x5EED_DE5,
                     &drift,
-                    ShardPlan { shards, window_ms: 0.0, sched },
+                    ShardPlan { shards, window_ms: 0.0, sched, ..Default::default() },
                     None,
                 )
             };
